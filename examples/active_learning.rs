@@ -1,0 +1,63 @@
+//! Active Learning example (paper section 3.3.2, Fig. 7): a *cyclic*
+//! directed-graph workflow alternating processing and decision Works,
+//! where the decision runs the AOT `al_decision` artifact. The loop
+//! refines a scan region until the decision Work says stop.
+//!
+//!     cargo run --release --example active_learning
+
+use std::sync::Arc;
+
+use idds::activelearning::{build_workflow, ScanExecutor};
+use idds::broker::Broker;
+use idds::daemons::executors::{ExecutorSet, RuntimeExecutor};
+use idds::daemons::{pump, Pipeline};
+use idds::metrics::Registry;
+use idds::runtime::{default_artifacts_dir, EngineHandle};
+use idds::store::{RequestKind, Store};
+use idds::util::clock::WallClock;
+use idds::workflow::WorkKind;
+
+fn main() -> anyhow::Result<()> {
+    let engine = EngineHandle::start(&default_artifacts_dir())?;
+    let clock = Arc::new(WallClock::new());
+    let execs = ExecutorSet::default()
+        .with(WorkKind::Noop, Arc::new(ScanExecutor::default()))
+        .with(WorkKind::Decision, Arc::new(RuntimeExecutor::new(engine, 2)));
+    let p = Pipeline::new(
+        Store::new(clock.clone()),
+        Broker::new(clock),
+        Registry::default(),
+        execs,
+    );
+
+    let wf = build_workflow(12, 0.5);
+    println!("workflow has cycle: {}", wf.has_cycle());
+    let req = p
+        .store
+        .add_request("al-demo", "physicist", RequestKind::ActiveLearning, wf.to_json());
+
+    let (clerk, marsh, tfr, carrier, conductor) = p.daemons();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+    while !p.store.get_request(req)?.status.is_terminal() {
+        pump(&[&clerk, &marsh, &tfr, &carrier, &conductor], 10_000);
+        if std::time::Instant::now() > deadline {
+            anyhow::bail!("did not converge");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+
+    println!("request -> {}", p.store.get_request(req)?.status);
+    for tf_id in p.store.transforms_of_request(req) {
+        let tf = p.store.get_transform(tf_id)?;
+        let width = tf.work.get_path(&["result", "width"]).and_then(|v| v.as_f64());
+        let go = tf.work.get_path(&["result", "go"]).and_then(|v| v.as_bool());
+        println!(
+            "  {:<12} {:<10} width={:?} go={:?}",
+            tf.name,
+            tf.status.to_string(),
+            width,
+            go
+        );
+    }
+    Ok(())
+}

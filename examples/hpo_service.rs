@@ -1,0 +1,38 @@
+//! HPO service example (paper section 3.2, Fig. 6): Bayesian optimization
+//! through the AOT GP+EI artifacts vs random search on the AOT training
+//! payload, plus the async-fleet utilization model.
+//!
+//!     cargo run --release --example hpo_service [points]
+
+use idds::hpo::sched::{sample_durations, simulate, Policy};
+use idds::hpo::{payload_space, BayesOpt, Strategy};
+use idds::runtime::{default_artifacts_dir, EngineHandle};
+
+fn main() -> anyhow::Result<()> {
+    let points: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let engine = EngineHandle::start(&default_artifacts_dir())?;
+    let opt = BayesOpt::new(engine, payload_space())?;
+
+    println!("--- convergence: {points} sequential evaluations each ---");
+    for strat in [Strategy::Random, Strategy::Bayesian] {
+        let r = opt.run(strat, points, 23)?;
+        print!("{strat:?}: best curve ");
+        for v in &r.best_curve {
+            print!("{v:.3} ");
+        }
+        println!(" -> best {:.4}", r.best());
+    }
+
+    println!("\n--- fleet utilization: async pull (iDDS) vs synchronous rounds ---");
+    let durations = sample_durations(512, 900.0, 3);
+    for policy in [Policy::SequentialRounds, Policy::AsyncPull] {
+        let r = simulate(policy, &durations, 32);
+        println!(
+            "{policy:?}: makespan {:.0} s  utilization {:.1}%  points/hour {:.1}",
+            r.makespan_s,
+            r.utilization * 100.0,
+            r.points_per_hour
+        );
+    }
+    Ok(())
+}

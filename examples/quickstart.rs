@@ -1,0 +1,74 @@
+//! Quickstart: boot the full iDDS stack in-process, submit a small DG
+//! workflow through the REST client, and watch it run to completion.
+//!
+//!     cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use idds::broker::Broker;
+use idds::config::Config;
+use idds::daemons::executors::{ExecutorSet, NoopExecutor};
+use idds::daemons::{AgentHost, Daemon, Pipeline};
+use idds::metrics::Registry;
+use idds::rest::{serve, Client, ServerState};
+use idds::store::{RequestKind, Store};
+use idds::util::clock::WallClock;
+use idds::workflow::{Condition, Predicate, WorkKind, WorkTemplate, Workflow};
+
+fn main() -> anyhow::Result<()> {
+    // 1. shared substrate
+    let clock = Arc::new(WallClock::new());
+    let store = Store::new(clock.clone());
+    let broker = Broker::new(clock);
+    let metrics = Registry::default();
+    let cfg = Config::defaults();
+
+    // 2. daemons (Noop executor: this workflow is pure orchestration)
+    let executors = ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default()));
+    let pipeline = Pipeline::new(store.clone(), broker.clone(), metrics.clone(), executors);
+    let (clerk, marsh, tfr, carrier, conductor) = pipeline.daemons();
+    let daemons: Vec<Arc<dyn Daemon>> = vec![
+        Arc::new(clerk),
+        Arc::new(marsh),
+        Arc::new(tfr),
+        Arc::new(carrier),
+        Arc::new(conductor),
+    ];
+    let host = AgentHost::start(daemons, std::time::Duration::from_millis(5));
+
+    // 3. REST head service
+    let server = serve(ServerState::new(store, broker, metrics, &cfg), &cfg)?;
+    println!("head service on {}", server.addr);
+
+    // 4. client: define a workflow with a conditional branch (paper Fig. 3)
+    let wf = Workflow::new("quickstart")
+        .add_template(WorkTemplate::new("preprocess").default(
+            "result",
+            idds::util::json::Json::obj().set("quality", 0.92),
+        ))
+        .add_template(WorkTemplate::new("main-processing"))
+        .add_template(WorkTemplate::new("re-calibrate"))
+        .add_condition(Condition::when(
+            "preprocess",
+            "main-processing",
+            Predicate::gt("quality", 0.9),
+        ))
+        .add_condition(Condition::when(
+            "preprocess",
+            "re-calibrate",
+            Predicate::lt("quality", 0.9),
+        ))
+        .entry("preprocess");
+
+    let client = Client::new(server.addr, "dev-token");
+    let req = client.submit("quickstart", "alice", RequestKind::Workflow, &wf)?;
+    println!("submitted request {req}");
+
+    let status = client.wait_terminal(req, std::time::Duration::from_secs(30))?;
+    println!("request {req} -> {status}");
+    println!("{}", client.summary(req)?);
+
+    host.stop();
+    server.stop();
+    Ok(())
+}

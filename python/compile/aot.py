@@ -1,0 +1,170 @@
+"""AOT compile path: lower the Layer-2 JAX models to HLO text artifacts.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 crate binds) rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Run once via ``make artifacts``; the Rust binary is self-contained after.
+
+Outputs (under --out, default ../artifacts):
+  gp_propose.hlo.txt   — HPO proposal step (GP posterior + EI)
+  mlp_train.hlo.txt    — remote-training payload (returns val/train loss)
+  al_decision.hlo.txt  — active-learning decision scorer
+  manifest.json        — entry shapes/dtypes, consumed by rust/src/runtime
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True; the Rust
+    side unwraps with to_tuple*)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def build_entries():
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+
+    entries = {}
+
+    entries["gp_propose"] = {
+        "fn": model.gp_propose,
+        "args": [
+            s((model.N_OBS, model.DIM), f32),   # x_obs
+            s((model.N_OBS,), f32),             # y_obs
+            s((model.N_OBS,), f32),             # mask
+            s((model.N_CAND, model.DIM), f32),  # x_cand
+            s((4,), f32),                       # params
+        ],
+        "inputs": {
+            "x_obs": _spec((model.N_OBS, model.DIM)),
+            "y_obs": _spec((model.N_OBS,)),
+            "mask": _spec((model.N_OBS,)),
+            "x_cand": _spec((model.N_CAND, model.DIM)),
+            "params": _spec((4,)),
+        },
+        "outputs": {
+            "mu": _spec((model.N_CAND,)),
+            "var": _spec((model.N_CAND,)),
+            "ei": _spec((model.N_CAND,)),
+        },
+        "consts": {
+            "n_obs": model.N_OBS,
+            "dim": model.DIM,
+            "n_cand": model.N_CAND,
+        },
+    }
+
+    entries["mlp_train"] = {
+        "fn": model.mlp_train,
+        "args": [
+            s((4,), f32),                               # hparams
+            s((model.TRAIN_N, model.IN_DIM), f32),      # xtr
+            s((model.TRAIN_N,), f32),                   # ytr
+            s((model.VAL_N, model.IN_DIM), f32),        # xval
+            s((model.VAL_N,), f32),                     # yval
+            s((model.IN_DIM, model.HIDDEN), f32),       # w1
+            s((model.HIDDEN,), f32),                    # b1
+            s((model.HIDDEN, 1), f32),                  # w2
+            s((1,), f32),                               # b2
+        ],
+        "inputs": {
+            "hparams": _spec((4,)),
+            "xtr": _spec((model.TRAIN_N, model.IN_DIM)),
+            "ytr": _spec((model.TRAIN_N,)),
+            "xval": _spec((model.VAL_N, model.IN_DIM)),
+            "yval": _spec((model.VAL_N,)),
+            "w1": _spec((model.IN_DIM, model.HIDDEN)),
+            "b1": _spec((model.HIDDEN,)),
+            "w2": _spec((model.HIDDEN, 1)),
+            "b2": _spec((1,)),
+        },
+        "outputs": {"val_loss": _spec(()), "train_loss": _spec(())},
+        "consts": {
+            "train_n": model.TRAIN_N,
+            "val_n": model.VAL_N,
+            "in_dim": model.IN_DIM,
+            "hidden": model.HIDDEN,
+            "train_steps": model.TRAIN_STEPS,
+        },
+    }
+
+    entries["al_decision"] = {
+        "fn": model.al_decision,
+        "args": [
+            s((model.AL_STAT_DIM,), f32),  # stats
+            s((model.AL_STAT_DIM,), f32),  # weights
+            s((), f32),                    # bias
+            s((), f32),                    # threshold
+        ],
+        "inputs": {
+            "stats": _spec((model.AL_STAT_DIM,)),
+            "weights": _spec((model.AL_STAT_DIM,)),
+            "bias": _spec(()),
+            "threshold": _spec(()),
+        },
+        "outputs": {"score": _spec(()), "go": _spec(())},
+        "consts": {"stat_dim": model.AL_STAT_DIM},
+    }
+
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"format": "hlo-text", "entries": {}}
+
+    for name, ent in build_entries().items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(ent["fn"]).lower(*ent["args"])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": ent["inputs"],
+            # positional argument order (JSON objects are unordered for the
+            # Rust-side parser, which uses a sorted map)
+            "inputs_order": list(ent["inputs"].keys()),
+            "outputs": ent["outputs"],
+            "outputs_order": list(ent["outputs"].keys()),
+            "consts": ent["consts"],
+        }
+        print(f"[aot] {name}: wrote {len(text)} chars -> {fname}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] manifest: {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

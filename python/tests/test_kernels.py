@@ -1,0 +1,160 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes and kernel parameters; assert_allclose against
+ref.py at float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.acquisition import expected_improvement_pallas
+from compile.kernels.mlp_fused import dense_tanh
+from compile.kernels.rbf_kernel import rbf_kernel_dynamic, rbf_kernel_pallas
+
+
+def _rand(key, shape, lo=-3.0, hi=3.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# RBF kernel matrix
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 3, 8, 32, 64]),
+    n=st.sampled_from([1, 5, 128, 256]),
+    d=st.sampled_from([1, 2, 8]),
+    ls=st.floats(0.1, 5.0),
+    sf=st.floats(0.1, 3.0),
+    seed=st.integers(0, 2**16),
+)
+def test_rbf_matches_ref(m, n, d, ls, sf, seed):
+    x = _rand(seed, (m, d))
+    z = _rand(seed + 1, (n, d))
+    got = rbf_kernel_pallas(x, z, ls, sf)
+    want = ref.rbf_kernel_ref(x, z, ls, sf)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_rbf_diagonal_is_sigma_sq():
+    x = _rand(0, (32, 8))
+    k = rbf_kernel_pallas(x, x, 1.3, 2.0)
+    np.testing.assert_allclose(np.diag(k), np.full(32, 4.0), rtol=1e-5)
+
+
+def test_rbf_symmetry():
+    x = _rand(1, (64, 8))
+    k = np.asarray(rbf_kernel_pallas(x, x, 0.7, 1.1))
+    np.testing.assert_allclose(k, k.T, rtol=1e-5, atol=1e-7)
+
+
+def test_rbf_dynamic_scales_match_static():
+    x = _rand(2, (32, 4))
+    z = _rand(3, (128, 4))
+    ls, sf = jnp.float32(0.9), jnp.float32(1.7)
+    got = rbf_kernel_dynamic(x, z, ls, sf)
+    want = ref.rbf_kernel_ref(x, z, 0.9, 1.7)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-6)
+
+
+def test_rbf_tile_unaligned_fallback():
+    # 33 rows: not divisible by the 32-row block -> whole-array program.
+    x = _rand(4, (33, 8))
+    z = _rand(5, (67, 8))
+    got = rbf_kernel_pallas(x, z, 1.0, 1.0)
+    want = ref.rbf_kernel_ref(x, z, 1.0, 1.0)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_rbf_values_bounded():
+    x = _rand(6, (32, 8))
+    k = np.asarray(rbf_kernel_pallas(x, x, 1.0, 1.5))
+    assert (k >= 0).all() and (k <= 1.5**2 + 1e-5).all()
+
+
+# ---------------------------------------------------------------------------
+# Expected improvement
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 7, 128, 256, 512]),
+    best=st.floats(-2.0, 2.0),
+    seed=st.integers(0, 2**16),
+)
+def test_ei_matches_ref(n, best, seed):
+    mu = _rand(seed, (n,), -2.0, 2.0)
+    var = _rand(seed + 1, (n,), 1e-6, 4.0)
+    got = expected_improvement_pallas(mu, var, best)
+    want = ref.expected_improvement_ref(mu, var, jnp.float32(best))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_ei_nonnegative_and_zero_when_hopeless():
+    mu = jnp.full((128,), 10.0)     # far worse than incumbent
+    var = jnp.full((128,), 1e-4)
+    ei = np.asarray(expected_improvement_pallas(mu, var, 0.0))
+    assert (ei >= 0).all()
+    assert ei.max() < 1e-6
+
+
+def test_ei_prefers_low_mean():
+    var = jnp.full((2,), 0.5)
+    ei = np.asarray(expected_improvement_pallas(jnp.array([-1.0, 1.0]), var, 0.0))
+    assert ei[0] > ei[1]
+
+
+def test_ei_prefers_high_variance_at_equal_mean():
+    mu = jnp.full((2,), 0.5)
+    ei = np.asarray(expected_improvement_pallas(mu, jnp.array([2.0, 0.01]), 0.0))
+    assert ei[0] > ei[1]
+
+
+# ---------------------------------------------------------------------------
+# Fused dense+tanh
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([1, 5, 64, 256]),
+    k=st.sampled_from([1, 16]),
+    n=st.sampled_from([1, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_tanh_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n), -1.0, 1.0)
+    b = _rand(seed + 2, (n,), -1.0, 1.0)
+    got = dense_tanh(x, w, b)
+    want = ref.dense_tanh_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_dense_tanh_grad_matches_jnp():
+    x = _rand(7, (64, 16))
+    w = _rand(8, (16, 32), -1.0, 1.0)
+    b = _rand(9, (32,), -1.0, 1.0)
+
+    def f_pallas(w, b):
+        return jnp.sum(dense_tanh(x, w, b) ** 2)
+
+    def f_ref(w, b):
+        return jnp.sum(ref.dense_tanh_ref(x, w, b) ** 2)
+
+    gw_p, gb_p = jax.grad(f_pallas, argnums=(0, 1))(w, b)
+    gw_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(w, b)
+    np.testing.assert_allclose(gw_p, gw_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gb_p, gb_r, rtol=1e-4, atol=1e-5)
+
+
+def test_dense_tanh_output_range():
+    x = _rand(10, (64, 16), -50, 50)
+    w = _rand(11, (16, 32), -5, 5)
+    b = _rand(12, (32,))
+    y = np.asarray(dense_tanh(x, w, b))
+    assert (np.abs(y) <= 1.0).all()

@@ -1,0 +1,70 @@
+//! FIG4 / FIG5 / CLAIM-DISK / CLAIM-TTFP bench: regenerate the paper's
+//! carousel evaluation. Prints the attempt table (Fig. 4), the campaign
+//! series summary (Fig. 5), the disk-footprint and time-to-first-
+//! processing comparisons, plus a parameter sweep over staging-window
+//! sizes (ablation of the iDDS fine-grained window).
+//!
+//!     cargo bench --bench bench_carousel
+
+use idds::carousel::{compare_modes, run_campaign, CarouselConfig, Granularity};
+use idds::simulation::Scenario;
+use idds::util::bench::{section, Bencher};
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    for scen in [Scenario::Smoke, Scenario::Reprocessing, Scenario::SmallFiles, Scenario::BigFiles] {
+        section(&format!("FIG4/FIG5 scenario {scen:?}"));
+        let spec = scen.campaign();
+        let (coarse, fine) = compare_modes(&scen.config(Granularity::Fine), &spec);
+        println!(
+            "{:<28} {:>14} {:>14} {:>9}",
+            "metric", "without iDDS", "with iDDS", "ratio"
+        );
+        let rows: Vec<(&str, f64, f64)> = vec![
+            ("total job attempts", coarse.total_attempts as f64, fine.total_attempts as f64),
+            ("failed attempts", coarse.failed_attempts as f64, fine.failed_attempts as f64),
+            ("peak disk GB", coarse.peak_disk_bytes as f64 / 1e9, fine.peak_disk_bytes as f64 / 1e9),
+            ("mean disk GB", coarse.mean_disk_bytes / 1e9, fine.mean_disk_bytes / 1e9),
+            ("time-to-first-proc s", coarse.time_to_first_processing_s, fine.time_to_first_processing_s),
+            ("makespan s", coarse.makespan_s, fine.makespan_s),
+            ("tape mounts", coarse.tape_mounts as f64, fine.tape_mounts as f64),
+        ];
+        for (name, c, f) in rows {
+            println!(
+                "{name:<28} {c:>14.1} {f:>14.1} {:>8.2}x",
+                if f.abs() > 1e-12 { c / f } else { f64::NAN }
+            );
+        }
+        println!("\nFig.4 attempt histogram (attempts -> jobs):");
+        println!("  without iDDS: {:?}", coarse.attempt_histogram);
+        println!("  with    iDDS: {:?}", fine.attempt_histogram);
+        println!("Fig.5 series lengths: staged {}, processed {}, disk {}",
+            fine.timeline.series("staged_files").len(),
+            fine.timeline.series("processed_jobs").len(),
+            fine.timeline.series("disk_bytes").len());
+    }
+
+    section("ablation: staging window (fine mode, Reprocessing)");
+    let spec = Scenario::Reprocessing.campaign();
+    println!("{:<10} {:>12} {:>14} {:>12}", "window", "peak GB", "makespan s", "ttfp s");
+    for window in [8, 32, 64, 128, 512] {
+        let cfg = CarouselConfig {
+            granularity: Granularity::Fine,
+            staging_window: window,
+            ..Default::default()
+        };
+        let r = run_campaign(&cfg, &spec);
+        println!(
+            "{window:<10} {:>12.1} {:>14.0} {:>12.0}",
+            r.peak_disk_bytes as f64 / 1e9,
+            r.makespan_s,
+            r.time_to_first_processing_s
+        );
+    }
+
+    section("simulator throughput");
+    let spec = Scenario::Smoke.campaign();
+    let cfg = Scenario::Smoke.config(Granularity::Fine);
+    b.bench("carousel smoke campaign (200 files e2e)", || run_campaign(&cfg, &spec));
+}

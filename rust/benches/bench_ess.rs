@@ -1,0 +1,59 @@
+//! ESS bench (paper section 1 motivation): delivery granularity — WAN
+//! traffic for whole-file staging vs event-range streaming across job
+//! selectivities, locating the crossover, plus cache-size sensitivity.
+//!
+//!     cargo bench --bench bench_ess
+
+use idds::ess::{generate_trace, selectivity_sweep, simulate, Delivery, EssConfig};
+use idds::util::bench::{section, Bencher};
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let cfg = EssConfig::default();
+
+    section("ESS: WAN bytes vs job selectivity (2000 jobs, 50 GB edge cache)");
+    println!(
+        "{:<14} {:>16} {:>16} {:>10}",
+        "selectivity", "whole-file GB", "event-range GB", "winner"
+    );
+    let rows = selectivity_sweep(
+        &cfg,
+        2000,
+        &[0.005, 0.01, 0.02, 0.05, 0.1, 0.25, 0.5, 0.75, 1.0],
+        7,
+    );
+    for (sel, wf, er) in rows {
+        println!(
+            "{sel:<14} {:>16.1} {:>16.1} {:>10}",
+            wf as f64 / 1e9,
+            er as f64 / 1e9,
+            if er < wf { "ranged" } else { "whole" }
+        );
+    }
+
+    section("ESS: cache-size sensitivity (selectivity 0.1)");
+    println!(
+        "{:<14} {:>14} {:>14} {:>12} {:>12}",
+        "cache GB", "wf WAN GB", "er WAN GB", "wf hit %", "er hit %"
+    );
+    for cache_gb in [10u64, 25, 50, 100, 200] {
+        let mut c = cfg.clone();
+        c.cache_bytes = cache_gb * 1_000_000_000;
+        let trace = generate_trace(&c, 2000, 0.1, 7);
+        let wf = simulate(&c, Delivery::WholeFile, &trace);
+        let er = simulate(&c, Delivery::EventRanges, &trace);
+        println!(
+            "{cache_gb:<14} {:>14.1} {:>14.1} {:>12.1} {:>12.1}",
+            wf.wan_bytes as f64 / 1e9,
+            er.wan_bytes as f64 / 1e9,
+            wf.hit_ratio * 100.0,
+            er.hit_ratio * 100.0
+        );
+    }
+
+    section("simulator throughput");
+    let trace = generate_trace(&cfg, 10_000, 0.1, 7);
+    b.bench("ESS 10k-job trace (ranged)", || {
+        simulate(&cfg, Delivery::EventRanges, &trace).wan_bytes
+    });
+}

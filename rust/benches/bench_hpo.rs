@@ -1,0 +1,82 @@
+//! FIG6/HPO bench: the HPO service evaluation.
+//! * convergence: Bayesian (AOT GP+EI artifacts) vs random search on the
+//!   AOT training payload — best-loss-after-k-evals table;
+//! * fleet utilization: async pull (iDDS) vs synchronous rounds over a
+//!   heterogeneous worker fleet (DES);
+//! * proposal/evaluation latency on the PJRT runtime.
+//!
+//!     cargo bench --bench bench_hpo
+
+use idds::hpo::sched::{sample_durations, simulate, Policy};
+use idds::hpo::{payload_space, BayesOpt, Evaluated, Strategy};
+use idds::runtime::{default_artifacts_dir, EngineHandle};
+use idds::util::bench::{section, Bencher};
+use idds::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::from_env();
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let engine = EngineHandle::start(&dir)?;
+    let opt = BayesOpt::new(engine, payload_space())?;
+
+    section("FIG6a convergence: best val-loss after k evaluations");
+    let n = 12;
+    let seeds = [11u64, 17, 23];
+    let mut curves: Vec<(Strategy, Vec<f64>)> = Vec::new();
+    for strat in [Strategy::Random, Strategy::Bayesian] {
+        let mut acc = vec![0.0; n];
+        for &s in &seeds {
+            let r = opt.run(strat, n, s)?;
+            for (i, v) in r.best_curve.iter().enumerate() {
+                acc[i] += v / seeds.len() as f64;
+            }
+        }
+        curves.push((strat, acc));
+    }
+    println!("{:<6} {:>12} {:>12}", "k", "Random", "Bayesian");
+    for i in 0..n {
+        println!("{:<6} {:>12.4} {:>12.4}", i + 1, curves[0].1[i], curves[1].1[i]);
+    }
+    println!(
+        "=> final: random {:.4} vs bayesian {:.4}",
+        curves[0].1[n - 1],
+        curves[1].1[n - 1]
+    );
+
+    section("FIG6b fleet utilization: async (iDDS) vs sequential rounds");
+    println!(
+        "{:<10} {:>8} {:>18} {:>18} {:>12}",
+        "workers", "points", "seq util %", "async util %", "speedup"
+    );
+    for workers in [8, 16, 32, 64] {
+        let d = sample_durations(512, 900.0, 3);
+        let s = simulate(Policy::SequentialRounds, &d, workers);
+        let a = simulate(Policy::AsyncPull, &d, workers);
+        println!(
+            "{workers:<10} {:>8} {:>18.1} {:>18.1} {:>11.2}x",
+            d.len(),
+            s.utilization * 100.0,
+            a.utilization * 100.0,
+            s.makespan_s / a.makespan_s
+        );
+    }
+
+    section("runtime latency (PJRT hot path)");
+    let mut rng = Rng::new(1);
+    let history: Vec<Evaluated> = (0..16)
+        .map(|i| Evaluated {
+            x: (0..4).map(|_| rng.f64()).collect(),
+            loss: 1.0 / (i + 1) as f64,
+        })
+        .collect();
+    b.bench("gp_propose (64 obs cap, 256 cand)", || {
+        opt.propose(&history, &mut rng).unwrap()
+    });
+    let x = vec![0.5; 4];
+    b.bench("mlp_train payload (50 steps)", || opt.evaluate(&x, 1).unwrap());
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! RUBIN bench: 100k-job DAG generation, Work mapping, and the bulk-vs-
+//! incremental release comparison at several scales (paper section 3.3.1).
+//!
+//!     cargo bench --bench bench_rubin
+
+use idds::rubin::{generate_dag, map_to_works, schedule, Release};
+use idds::util::bench::{section, Bencher};
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    section("RUBIN scale: mapping latency");
+    for &jobs in &[10_000usize, 100_000] {
+        b.bench(&format!("generate+map {jobs} jobs"), || {
+            let dag = generate_dag(jobs, 20, 4, 9);
+            map_to_works(&dag).len()
+        });
+    }
+
+    section("RUBIN release policy (makespan / release lag)");
+    println!(
+        "{:<10} {:>14} {:>14} {:>14} {:>14}",
+        "jobs", "bulk span s", "inc span s", "bulk lag s", "inc lag s"
+    );
+    for &jobs in &[10_000usize, 50_000, 100_000] {
+        let dag = generate_dag(jobs, 20, 4, 9);
+        let bulk = schedule(&dag, 512, Release::Bulk);
+        let inc = schedule(&dag, 512, Release::Incremental);
+        println!(
+            "{jobs:<10} {:>14.0} {:>14.0} {:>14.0} {:>14.0}",
+            bulk.makespan_s, inc.makespan_s, bulk.mean_release_lag_s, inc.mean_release_lag_s
+        );
+    }
+
+    section("scheduler throughput");
+    let dag = generate_dag(100_000, 20, 4, 9);
+    b.bench("schedule 100k jobs (incremental)", || {
+        schedule(&dag, 512, Release::Incremental).jobs
+    });
+}

@@ -1,0 +1,69 @@
+//! PERF-RT bench: AOT artifact execution latency/throughput on the PJRT
+//! hot path — the numbers behind EXPERIMENTS.md §Perf (L1/L2).
+//!
+//!     cargo bench --bench bench_runtime
+
+use idds::runtime::{default_artifacts_dir, Engine};
+use idds::util::bench::{section, Bencher};
+use idds::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let mut b = Bencher::from_env();
+
+    section("artifact compile (startup cost, once per process)");
+    b.warmup = 0;
+    let t0 = std::time::Instant::now();
+    let engine = Engine::load(&dir)?;
+    println!("Engine::load (3 artifacts): {:?}", t0.elapsed());
+    b.warmup = 3;
+
+    section("execution latency");
+    let spec = engine.spec("gp_propose").unwrap().clone();
+    let n_obs = spec.consts["n_obs"] as usize;
+    let dim = spec.consts["dim"] as usize;
+    let n_cand = spec.consts["n_cand"] as usize;
+    let mut rng = Rng::new(3);
+    let mut v = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.f64() as f32).collect() };
+    let x_obs = v(n_obs * dim);
+    let y_obs = v(n_obs);
+    let mask = vec![1.0f32; n_obs];
+    let x_cand = v(n_cand * dim);
+    let params = [0.0f32, 0.0, (1e-4f32).ln(), 0.01];
+    b.bench("gp_propose artifact", || {
+        engine.gp_propose(&x_obs, &y_obs, &mask, &x_cand, &params).unwrap()
+    });
+
+    let mspec = engine.spec("mlp_train").unwrap().clone();
+    let (tn, vn, id, hd) = (
+        mspec.consts["train_n"] as usize,
+        mspec.consts["val_n"] as usize,
+        mspec.consts["in_dim"] as usize,
+        mspec.consts["hidden"] as usize,
+    );
+    let xtr = v(tn * id);
+    let ytr = v(tn);
+    let xval = v(vn * id);
+    let yval = v(vn);
+    let w1 = v(id * hd);
+    let b1 = vec![0.0f32; hd];
+    let w2 = v(hd);
+    let b2 = vec![0.0f32; 1];
+    let hp = [(0.05f32).ln(), 0.9, (1e-6f32).ln(), (5.0f32).ln()];
+    b.bench("mlp_train artifact (50 SGD steps)", || {
+        engine
+            .mlp_train(&hp, &xtr, &ytr, &xval, &yval, &w1, &b1, &w2, &b2)
+            .unwrap()
+    });
+
+    let stats = vec![0.5f32; 8];
+    let weights = vec![1.0f32; 8];
+    b.bench("al_decision artifact", || {
+        engine.al_decision(&stats, &weights, 0.0, 0.5).unwrap()
+    });
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! FIG3/DG bench: the directed-graph engine. Condition-evaluation
+//! throughput, cyclic-workflow iteration cost, serialization round-trip,
+//! and the full daemon pipeline running pure-orchestration workflows.
+//!
+//!     cargo bench --bench bench_workflow
+
+use std::sync::Arc;
+
+use idds::broker::Broker;
+use idds::daemons::executors::{ExecutorSet, NoopExecutor};
+use idds::daemons::{pump, Pipeline};
+use idds::metrics::Registry;
+use idds::store::{RequestKind, Store};
+use idds::util::bench::{section, Bencher};
+use idds::util::clock::WallClock;
+use idds::util::json::Json;
+use idds::workflow::{Condition, Engine, Predicate, WorkTemplate, Workflow};
+
+fn chain_workflow(len: usize) -> Workflow {
+    let mut wf = Workflow::new("chain");
+    for i in 0..len {
+        wf = wf.add_template(WorkTemplate::new(&format!("s{i}")));
+        if i > 0 {
+            wf = wf.add_condition(Condition::always(&format!("s{}", i - 1), &format!("s{i}")));
+        }
+    }
+    wf.entry("s0")
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    section("engine microbenches");
+    let wf = chain_workflow(64);
+    b.bench("engine start+walk 64-step chain", || {
+        let mut e = Engine::new(wf.clone()).unwrap();
+        let mut frontier = e.start();
+        let mut n = 0;
+        while let Some(w) = frontier.pop() {
+            n += 1;
+            frontier.extend(e.on_complete(&w, &Json::obj()).unwrap());
+        }
+        assert_eq!(n, 64);
+    });
+
+    let cyc = Workflow::new("cyc")
+        .add_template(WorkTemplate::new("a").max_instances(1000))
+        .add_condition(Condition::when("a", "a", Predicate::lt("loss", 0.5)))
+        .entry("a");
+    b.bench("cyclic engine: 1000 gated iterations", || {
+        let mut e = Engine::new(cyc.clone()).unwrap();
+        let mut frontier = e.start();
+        let result = Json::obj().set("loss", 0.1);
+        let mut n = 0;
+        while let Some(w) = frontier.pop() {
+            n += 1;
+            frontier.extend(e.on_complete(&w, &result).unwrap());
+        }
+        assert_eq!(n, 1000);
+    });
+
+    let big = chain_workflow(128);
+    b.bench("workflow json serialize+parse (128 templates)", || {
+        let text = big.to_json().to_string();
+        let j = idds::util::json::parse(&text).unwrap();
+        Workflow::from_json(&j).unwrap()
+    });
+
+    section("daemon pipeline end-to-end (Noop works)");
+    b.bench("pipeline: 32-step chain request to Finished", || {
+        let clock = Arc::new(WallClock::new());
+        let p = Pipeline::new(
+            Store::new(clock.clone()),
+            Broker::new(clock),
+            Registry::default(),
+            ExecutorSet::default().with(idds::workflow::WorkKind::Noop, Arc::new(NoopExecutor::default())),
+        );
+        let req = p
+            .store
+            .add_request("r", "u", RequestKind::Workflow, chain_workflow(32).to_json());
+        let (c, m, t, ca, co) = p.daemons();
+        pump(&[&c, &m, &t, &ca, &co], 100_000);
+        assert!(p.store.get_request(req).unwrap().status.is_terminal());
+    });
+}

@@ -1,0 +1,223 @@
+//! Active Learning workflows (paper section 3.3.2, Fig. 7).
+//!
+//! Two Work template kinds alternate through Condition branches:
+//! a **processing** Work produces summary statistics, a **decision** Work
+//! (the AOT `al_decision` artifact) evaluates them and either triggers the
+//! next processing iteration (with newly bound parameters) or lets the
+//! workflow terminate — a *cyclic* directed graph, the paper's flagship
+//! DG-beyond-DAG case.
+//!
+//! [`build_workflow`] constructs that cyclic workflow; [`ScanExecutor`]
+//! is the synthetic processing payload: a parameter scan whose measured
+//! "signal significance" grows with the scanned region, so the loop
+//! provably converges after a few iterations.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+#[cfg(test)]
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::daemons::executors::Executor;
+use crate::util::json::Json;
+use crate::workflow::{Condition, Predicate, WorkKind, WorkTemplate, Workflow};
+
+/// Build the cyclic Active-Learning workflow.
+///
+/// * `proc` (Noop kind → [`ScanExecutor`] in practice) takes `lo`/`hi`
+///   scan bounds and produces `result.stats` (8 summary statistics) plus
+///   `result.next_lo`/`result.next_hi` (the refined region).
+/// * `decide` (Decision kind → AOT artifact) consumes the stats and emits
+///   `result.go` ∈ {0, 1}.
+/// * conditions: `proc → decide` always (stats bound from the result);
+///   `decide → proc` when `go` — the cycle. Bounded by `max_iters`.
+pub fn build_workflow(max_iters: u32, threshold: f64) -> Workflow {
+    Workflow::new("active-learning")
+        .add_template(
+            WorkTemplate::new("proc")
+                .kind(WorkKind::Noop) // executed by ScanExecutor
+                .default("lo", Json::Num(0.0))
+                .default("hi", Json::Num(1.0))
+                .max_instances(max_iters),
+        )
+        .add_template(
+            WorkTemplate::new("decide")
+                .kind(WorkKind::Decision)
+                .default(
+                    "weights",
+                    Json::Arr(vec![Json::Num(1.0); 8]),
+                )
+                .default("bias", Json::Num(-4.0))
+                .default("threshold", Json::Num(threshold))
+                .max_instances(max_iters),
+        )
+        .add_condition(
+            Condition::always("proc", "decide")
+                .bind("stats", "${result.stats}")
+                .bind("next_lo", "${result.next_lo}")
+                .bind("next_hi", "${result.next_hi}"),
+        )
+        .add_condition(
+            Condition::when("decide", "proc", Predicate::truthy("go"))
+                .bind("lo", "${param.next_lo}")
+                .bind("hi", "${param.next_hi}"),
+        )
+        .entry("proc")
+}
+
+/// Synthetic processing payload: "scan" the region [lo, hi] of a parameter
+/// space; the produced statistics strengthen as the region narrows onto
+/// the signal at 0.7, so `al_decision`'s logistic score eventually drops
+/// below threshold and the loop stops.
+pub struct ScanExecutor {
+    done: Mutex<HashMap<u64, Json>>,
+}
+
+impl Default for ScanExecutor {
+    fn default() -> Self {
+        ScanExecutor {
+            done: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+const SIGNAL: f64 = 0.7;
+
+impl Executor for ScanExecutor {
+    fn submit(&self, work: &Json) -> Result<u64> {
+        let lo = work
+            .get_path(&["params", "lo"])
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        let hi = work
+            .get_path(&["params", "hi"])
+            .and_then(|v| v.as_f64())
+            .unwrap_or(1.0);
+        let width = (hi - lo).max(1e-6);
+        // stats: wider region -> large residual uncertainty stats ->
+        // logistic(go) stays high; narrow region -> stats shrink -> stop.
+        let stats: Vec<Json> = (0..8)
+            .map(|i| Json::Num(width * (1.0 + 0.1 * i as f64)))
+            .collect();
+        // refine: halve the region around the signal
+        let mid = SIGNAL.clamp(lo, hi);
+        let next_lo = (mid - width / 4.0).max(lo);
+        let next_hi = (mid + width / 4.0).min(hi);
+        let result = Json::obj()
+            .set("stats", Json::Arr(stats))
+            .set("next_lo", next_lo)
+            .set("next_hi", next_hi)
+            .set("width", width);
+        let handle = crate::util::next_id();
+        self.done.lock().unwrap().insert(handle, result);
+        Ok(handle)
+    }
+
+    fn poll(&self, handle: u64) -> Result<Option<Json>> {
+        Ok(self.done.lock().unwrap().remove(&handle))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::Broker;
+    use crate::daemons::executors::ExecutorSet;
+    use crate::daemons::{pump, Pipeline};
+    use crate::metrics::Registry;
+    use crate::runtime::{default_artifacts_dir, EngineHandle};
+    use crate::store::{RequestKind, RequestStatus, Store};
+    use crate::util::clock::WallClock;
+
+    #[test]
+    fn workflow_is_cyclic_and_valid() {
+        let wf = build_workflow(10, 0.5);
+        assert!(wf.validate().is_ok());
+        assert!(wf.has_cycle());
+        // round-trips through the client serialization
+        let back = Workflow::from_json(&wf.to_json()).unwrap();
+        assert!(back.has_cycle());
+    }
+
+    #[test]
+    fn scan_executor_narrows_region() {
+        let e = ScanExecutor::default();
+        let w = Json::obj().set(
+            "params",
+            Json::obj().set("lo", 0.0).set("hi", 1.0),
+        );
+        let h = e.submit(&w).unwrap();
+        let r = e.poll(h).unwrap().unwrap();
+        let lo = r.get("next_lo").unwrap().as_f64().unwrap();
+        let hi = r.get("next_hi").unwrap().as_f64().unwrap();
+        assert!(hi - lo < 1.0);
+        assert!(lo <= SIGNAL && SIGNAL <= hi);
+    }
+
+    /// The full cyclic loop through the daemons + the real decision
+    /// artifact: iterate until the logistic score drops below threshold.
+    #[test]
+    fn active_learning_loop_converges() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("artifacts missing; run `make artifacts`");
+            return;
+        }
+        let engine = EngineHandle::start(&dir).unwrap();
+        let clock = Arc::new(WallClock::new());
+        let execs = ExecutorSet::default()
+            .with(WorkKind::Noop, Arc::new(ScanExecutor::default()))
+            .with(
+                WorkKind::Decision,
+                Arc::new(crate::daemons::executors::RuntimeExecutor::new(engine, 2)),
+            );
+        let p = Pipeline::new(
+            Store::new(clock.clone()),
+            Broker::new(clock),
+            Registry::default(),
+            execs,
+        );
+        let wf = build_workflow(12, 0.5);
+        let req = p
+            .store
+            .add_request("al", "physicist", RequestKind::ActiveLearning, wf.to_json());
+        let (clerk, marsh, tfr, carrier, conductor) = p.daemons();
+        // RuntimeExecutor completes asynchronously; pump with retries
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+        loop {
+            pump(&[&clerk, &marsh, &tfr, &carrier, &conductor], 10_000);
+            let st = p.store.get_request(req).unwrap().status;
+            if st.is_terminal() {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "AL loop did not converge in time"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        assert_eq!(
+            p.store.get_request(req).unwrap().status,
+            RequestStatus::Finished
+        );
+        let tfs = p.store.transforms_of_request(req);
+        // at least proc -> decide -> proc -> decide (converging loop),
+        // strictly fewer than the 2*12 cap (it stopped by decision)
+        assert!(tfs.len() >= 4, "{} transforms", tfs.len());
+        assert!(tfs.len() < 24, "{} transforms — never converged", tfs.len());
+        // last decision said "no"
+        let last_decide = tfs
+            .iter()
+            .filter_map(|t| p.store.get_transform(*t).ok())
+            .filter(|t| t.name.starts_with("decide"))
+            .next_back()
+            .unwrap();
+        let go = last_decide
+            .work
+            .get_path(&["result", "go"])
+            .and_then(|g| g.as_bool())
+            .unwrap();
+        assert!(!go, "final decision must stop the loop");
+    }
+}

@@ -1,0 +1,337 @@
+//! In-process message broker (ActiveMQ stand-in).
+//!
+//! The Conductor publishes availability notifications here; consumers
+//! (WFM jobs, downstream Works, the Rubin incremental-release path)
+//! subscribe. Semantics match what iDDS needs from its production broker:
+//!
+//! * topics with independent subscriber queues (fan-out),
+//! * at-least-once delivery: a message stays "in flight" per subscriber
+//!   until acked; unacked messages past the redelivery timeout are
+//!   redelivered (property-tested in `rust/tests`),
+//! * bounded queues with backpressure signalling (publish returns the
+//!   queue depth so producers can throttle).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::util::clock::Clock;
+use crate::util::json::Json;
+
+pub type MsgId = u64;
+pub type SubId = u64;
+
+#[derive(Debug, Clone)]
+pub struct Delivery {
+    pub id: MsgId,
+    pub topic: String,
+    pub payload: Json,
+    pub redelivered: bool,
+}
+
+struct InFlight {
+    msg: Arc<QueuedMsg>,
+    deadline: f64,
+}
+
+struct QueuedMsg {
+    id: MsgId,
+    topic: String,
+    payload: Json,
+}
+
+struct SubQueue {
+    pending: VecDeque<Arc<QueuedMsg>>,
+    in_flight: HashMap<MsgId, InFlight>,
+    delivered_once: std::collections::HashSet<MsgId>,
+}
+
+struct TopicState {
+    subs: Vec<SubId>,
+}
+
+struct Inner {
+    topics: HashMap<String, TopicState>,
+    queues: HashMap<SubId, SubQueue>,
+    published: u64,
+    delivered: u64,
+    redelivered: u64,
+    acked: u64,
+}
+
+/// The broker. Clone-shareable.
+#[derive(Clone)]
+pub struct Broker {
+    inner: Arc<Mutex<Inner>>,
+    clock: Arc<dyn Clock>,
+    redelivery_timeout: f64,
+    max_queue: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BrokerStats {
+    pub published: u64,
+    pub delivered: u64,
+    pub redelivered: u64,
+    pub acked: u64,
+}
+
+impl Broker {
+    pub fn new(clock: Arc<dyn Clock>) -> Self {
+        Broker {
+            inner: Arc::new(Mutex::new(Inner {
+                topics: HashMap::new(),
+                queues: HashMap::new(),
+                published: 0,
+                delivered: 0,
+                redelivered: 0,
+                acked: 0,
+            })),
+            clock,
+            redelivery_timeout: 30.0,
+            max_queue: 1_000_000,
+        }
+    }
+
+    pub fn with_redelivery_timeout(mut self, secs: f64) -> Self {
+        self.redelivery_timeout = secs;
+        self
+    }
+
+    /// Subscribe to a topic; returns the subscriber handle.
+    pub fn subscribe(&self, topic: &str) -> SubId {
+        let id = crate::util::next_id();
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .topics
+            .entry(topic.to_string())
+            .or_insert_with(|| TopicState { subs: Vec::new() })
+            .subs
+            .push(id);
+        inner.queues.insert(
+            id,
+            SubQueue {
+                pending: VecDeque::new(),
+                in_flight: HashMap::new(),
+                delivered_once: std::collections::HashSet::new(),
+            },
+        );
+        id
+    }
+
+    /// Publish to a topic, fanning out to all subscribers. Returns the max
+    /// subscriber queue depth (backpressure signal) — 0 if no subscribers.
+    pub fn publish(&self, topic: &str, payload: Json) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        inner.published += 1;
+        let id = crate::util::next_id();
+        let msg = Arc::new(QueuedMsg {
+            id,
+            topic: topic.to_string(),
+            payload,
+        });
+        let subs = inner
+            .topics
+            .get(topic)
+            .map(|t| t.subs.clone())
+            .unwrap_or_default();
+        let mut depth = 0;
+        for sub in subs {
+            if let Some(q) = inner.queues.get_mut(&sub) {
+                if q.pending.len() < self.max_queue {
+                    q.pending.push_back(Arc::clone(&msg));
+                }
+                depth = depth.max(q.pending.len());
+            }
+        }
+        depth
+    }
+
+    /// Poll up to `max` messages for a subscriber. Redelivers expired
+    /// in-flight messages first.
+    pub fn poll(&self, sub: SubId, max: usize) -> Vec<Delivery> {
+        let now = self.clock.now();
+        let mut inner = self.inner.lock().unwrap();
+        let timeout = self.redelivery_timeout;
+        let mut out = Vec::new();
+        let mut redelivered_n = 0;
+        let mut delivered_n = 0;
+        if let Some(q) = inner.queues.get_mut(&sub) {
+            // expire in-flight
+            let expired: Vec<MsgId> = q
+                .in_flight
+                .iter()
+                .filter(|(_, f)| f.deadline <= now)
+                .map(|(id, _)| *id)
+                .collect();
+            for id in expired {
+                if out.len() >= max {
+                    break;
+                }
+                let mut f = q.in_flight.remove(&id).unwrap();
+                f.deadline = now + timeout;
+                out.push(Delivery {
+                    id,
+                    topic: f.msg.topic.clone(),
+                    payload: f.msg.payload.clone(),
+                    redelivered: true,
+                });
+                redelivered_n += 1;
+                q.in_flight.insert(id, f);
+            }
+            // fresh messages
+            while out.len() < max {
+                let Some(msg) = q.pending.pop_front() else { break };
+                let redelivered = !q.delivered_once.insert(msg.id);
+                out.push(Delivery {
+                    id: msg.id,
+                    topic: msg.topic.clone(),
+                    payload: msg.payload.clone(),
+                    redelivered,
+                });
+                delivered_n += 1;
+                q.in_flight.insert(
+                    msg.id,
+                    InFlight {
+                        msg,
+                        deadline: now + timeout,
+                    },
+                );
+            }
+        }
+        inner.delivered += delivered_n;
+        inner.redelivered += redelivered_n;
+        out
+    }
+
+    /// Acknowledge a delivery; the message will not be redelivered.
+    pub fn ack(&self, sub: SubId, msg: MsgId) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let mut ok = false;
+        if let Some(q) = inner.queues.get_mut(&sub) {
+            ok = q.in_flight.remove(&msg).is_some();
+        }
+        if ok {
+            inner.acked += 1;
+        }
+        ok
+    }
+
+    /// Outstanding (pending + in-flight) for a subscriber.
+    pub fn backlog(&self, sub: SubId) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .queues
+            .get(&sub)
+            .map(|q| q.pending.len() + q.in_flight.len())
+            .unwrap_or(0)
+    }
+
+    pub fn stats(&self) -> BrokerStats {
+        let inner = self.inner.lock().unwrap();
+        BrokerStats {
+            published: inner.published,
+            delivered: inner.delivered,
+            redelivered: inner.redelivered,
+            acked: inner.acked,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::{SimClock, WallClock};
+
+    #[test]
+    fn fanout_to_all_subscribers() {
+        let b = Broker::new(Arc::new(WallClock::new()));
+        let s1 = b.subscribe("t");
+        let s2 = b.subscribe("t");
+        b.publish("t", Json::Num(1.0));
+        assert_eq!(b.poll(s1, 10).len(), 1);
+        assert_eq!(b.poll(s2, 10).len(), 1);
+    }
+
+    #[test]
+    fn topics_are_isolated() {
+        let b = Broker::new(Arc::new(WallClock::new()));
+        let s1 = b.subscribe("a");
+        b.publish("b", Json::Num(1.0));
+        assert!(b.poll(s1, 10).is_empty());
+    }
+
+    #[test]
+    fn ack_stops_redelivery() {
+        let clock = SimClock::new();
+        let b = Broker::new(clock.clone()).with_redelivery_timeout(10.0);
+        let s = b.subscribe("t");
+        b.publish("t", Json::Num(1.0));
+        let d = b.poll(s, 10);
+        assert_eq!(d.len(), 1);
+        assert!(b.ack(s, d[0].id));
+        clock.advance_by(100.0);
+        assert!(b.poll(s, 10).is_empty());
+        assert_eq!(b.backlog(s), 0);
+    }
+
+    #[test]
+    fn unacked_messages_redeliver_after_timeout() {
+        let clock = SimClock::new();
+        let b = Broker::new(clock.clone()).with_redelivery_timeout(10.0);
+        let s = b.subscribe("t");
+        b.publish("t", Json::Str("x".into()));
+        let d1 = b.poll(s, 10);
+        assert_eq!(d1.len(), 1);
+        assert!(!d1[0].redelivered);
+        // before timeout: nothing
+        clock.advance_by(5.0);
+        assert!(b.poll(s, 10).is_empty());
+        // after timeout: redelivered flag set
+        clock.advance_by(6.0);
+        let d2 = b.poll(s, 10);
+        assert_eq!(d2.len(), 1);
+        assert!(d2[0].redelivered);
+        assert_eq!(d2[0].id, d1[0].id);
+    }
+
+    #[test]
+    fn poll_respects_max() {
+        let b = Broker::new(Arc::new(WallClock::new()));
+        let s = b.subscribe("t");
+        for i in 0..25 {
+            b.publish("t", Json::Num(i as f64));
+        }
+        assert_eq!(b.poll(s, 10).len(), 10);
+        assert_eq!(b.poll(s, 10).len(), 10);
+        assert_eq!(b.poll(s, 10).len(), 5);
+    }
+
+    #[test]
+    fn double_ack_is_noop() {
+        let b = Broker::new(Arc::new(WallClock::new()));
+        let s = b.subscribe("t");
+        b.publish("t", Json::Null);
+        let d = b.poll(s, 1);
+        assert!(b.ack(s, d[0].id));
+        assert!(!b.ack(s, d[0].id));
+        assert_eq!(b.stats().acked, 1);
+    }
+
+    #[test]
+    fn stats_track_flow() {
+        let b = Broker::new(Arc::new(WallClock::new()));
+        let s = b.subscribe("t");
+        for _ in 0..5 {
+            b.publish("t", Json::Null);
+        }
+        let ds = b.poll(s, 100);
+        for d in &ds {
+            b.ack(s, d.id);
+        }
+        let st = b.stats();
+        assert_eq!(st.published, 5);
+        assert_eq!(st.delivered, 5);
+        assert_eq!(st.acked, 5);
+        assert_eq!(st.redelivered, 0);
+    }
+}

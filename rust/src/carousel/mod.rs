@@ -1,0 +1,471 @@
+//! ATLAS Data Carousel (paper section 3.1): the discrete-event driver that
+//! reproduces Figures 4 and 5.
+//!
+//! Two orchestration modes over identical workloads:
+//!
+//! * [`Granularity::Coarse`] — the pre-iDDS carousel: a dataset-level
+//!   staging rule recalls everything up front and the WFM task's jobs are
+//!   queued immediately. Jobs dispatched before their input lands on disk
+//!   burn failed *attempts* (retry backoff), and staged data sits in the
+//!   disk buffer until the whole campaign drains → many attempts (Fig. 4,
+//!   "without iDDS") and a large, long-lived disk footprint.
+//!
+//! * [`Granularity::Fine`] — the iDDS carousel: file-level staging through
+//!   a bounded in-flight window; jobs are held in the WFM (Triggered mode)
+//!   and *released by availability messages* as soon as all their inputs
+//!   are on disk; processed inputs are released from the buffer promptly.
+//!   → one attempt per job, small rolling footprint, processing starts as
+//!   soon as the first file lands.
+//!
+//! The driver advances simulated time to the next tape/WFM event, so runs
+//! over hundred-thousand-file campaigns complete in milliseconds of wall
+//! time.
+
+use std::collections::HashMap;
+
+use crate::ddm::DdmSystem;
+use crate::metrics::Timeline;
+use crate::tape::{FileId, TapeSystem};
+use crate::util::rng::Rng;
+use crate::wfm::{JobId, JobSpec, ReleaseMode, WfmEvent, WfmSim};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    Coarse,
+    Fine,
+}
+
+/// Campaign + infrastructure parameters (defaults model a mid-size
+/// reprocessing slice; see DESIGN.md substitutions table).
+#[derive(Debug, Clone)]
+pub struct CarouselConfig {
+    pub granularity: Granularity,
+    /// max concurrent file recalls in Fine mode (the staging window)
+    pub staging_window: usize,
+    pub tape_drives: usize,
+    pub mount_latency_s: f64,
+    pub seek_latency_s: f64,
+    pub tape_bandwidth_mbps: f64,
+    pub sites: u32,
+    pub slots_per_site: usize,
+    pub job_wall_s: f64,
+    pub retry_delay_s: f64,
+    pub max_attempts: u32,
+    /// files consumed per job
+    pub files_per_job: usize,
+}
+
+impl Default for CarouselConfig {
+    fn default() -> Self {
+        CarouselConfig {
+            granularity: Granularity::Fine,
+            staging_window: 64,
+            tape_drives: 8,
+            mount_latency_s: 90.0,
+            seek_latency_s: 20.0,
+            tape_bandwidth_mbps: 400.0,
+            sites: 8,
+            slots_per_site: 32,
+            job_wall_s: 1800.0,
+            retry_delay_s: 900.0,
+            max_attempts: 12,
+            files_per_job: 1,
+        }
+    }
+}
+
+/// Synthetic campaign: datasets of tape-resident files with heavy-tailed
+/// sizes, clustered onto cartridges the way archival writes are.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    pub datasets: usize,
+    pub files_per_dataset: usize,
+    pub mean_file_mb: f64,
+    pub cartridges_per_dataset: u32,
+    pub seed: u64,
+}
+
+impl Default for CampaignSpec {
+    fn default() -> Self {
+        CampaignSpec {
+            datasets: 4,
+            files_per_dataset: 500,
+            mean_file_mb: 2000.0,
+            cartridges_per_dataset: 4,
+            seed: 7,
+        }
+    }
+}
+
+/// Everything Fig. 4 / Fig. 5 need.
+#[derive(Debug, Clone)]
+pub struct CampaignResult {
+    pub granularity: Granularity,
+    pub jobs: usize,
+    pub files: usize,
+    pub total_attempts: u64,
+    pub failed_attempts: u64,
+    pub exhausted_jobs: usize,
+    /// attempts → job count (Fig. 4 histogram)
+    pub attempt_histogram: Vec<(u32, usize)>,
+    pub peak_disk_bytes: u64,
+    pub mean_disk_bytes: f64,
+    /// first JobFinished... start of real processing
+    pub time_to_first_processing_s: f64,
+    pub makespan_s: f64,
+    pub tape_mounts: u64,
+    /// series: "staged_files", "processed_files", "disk_bytes" (Fig. 5)
+    pub timeline: Timeline,
+}
+
+/// Build the synthetic campaign in a DDM instance; returns (ddm, file ids
+/// per dataset).
+pub fn build_campaign(cfg: &CarouselConfig, spec: &CampaignSpec) -> (DdmSystem, Vec<Vec<FileId>>) {
+    let tape = TapeSystem::new(
+        cfg.tape_drives,
+        cfg.mount_latency_s,
+        cfg.seek_latency_s,
+        cfg.tape_bandwidth_mbps,
+    );
+    let mut ddm = DdmSystem::new(tape);
+    let mut rng = Rng::new(spec.seed);
+    let mut all = Vec::new();
+    for d in 0..spec.datasets {
+        let base_cart = (d as u32) * spec.cartridges_per_dataset;
+        let files: Vec<(String, u64, u32)> = (0..spec.files_per_dataset)
+            .map(|i| {
+                // heavy-tailed sizes around the mean (zipf rank rescaled)
+                let rank = rng.zipf(1000, 1.1) as f64;
+                let size_mb = (spec.mean_file_mb * 3.0 / rank.sqrt()).max(10.0);
+                // archival clustering: consecutive files mostly share a cartridge
+                let cart = base_cart + ((i / 64) as u32) % spec.cartridges_per_dataset;
+                (format!("ds{d}/f{i}"), (size_mb * 1e6) as u64, cart)
+            })
+            .collect();
+        all.push(ddm.register_dataset(&format!("ds{d}"), files));
+    }
+    (ddm, all)
+}
+
+/// Run one campaign end to end.
+pub fn run_campaign(cfg: &CarouselConfig, spec: &CampaignSpec) -> CampaignResult {
+    let (mut ddm, datasets) = build_campaign(cfg, spec);
+    let mut wfm = WfmSim::new(
+        cfg.sites,
+        cfg.slots_per_site,
+        cfg.retry_delay_s,
+        cfg.max_attempts,
+    );
+    let timeline = Timeline::default();
+
+    // jobs: files_per_job consecutive files each, per dataset
+    let mode = match cfg.granularity {
+        Granularity::Coarse => ReleaseMode::Immediate,
+        Granularity::Fine => ReleaseMode::Triggered,
+    };
+    // Fine-mode release index: file -> jobs needing it, plus a
+    // missing-input countdown per job. Turns the "which jobs became
+    // ready?" question from an O(staging-events x waiting-jobs) scan into
+    // O(1) per staged file (see EXPERIMENTS.md SS Perf, L3 iteration 1).
+    let mut jobs_by_file: HashMap<FileId, Vec<JobId>> = HashMap::new();
+    let mut missing_inputs: HashMap<JobId, usize> = HashMap::new();
+    let mut waiting = 0usize;
+    let mut total_jobs = 0usize;
+    for files in &datasets {
+        let specs: Vec<JobSpec> = files
+            .chunks(cfg.files_per_job)
+            .map(|chunk| JobSpec {
+                inputs: chunk.to_vec(),
+                wall_s: cfg.job_wall_s,
+            })
+            .collect();
+        total_jobs += specs.len();
+        let (_task, jobs) = wfm.submit_task(specs.clone(), mode);
+        if mode == ReleaseMode::Triggered {
+            for (j, s) in jobs.iter().zip(specs.iter()) {
+                missing_inputs.insert(*j, s.inputs.len());
+                for f in &s.inputs {
+                    jobs_by_file.entry(*f).or_default().push(*j);
+                }
+                waiting += 1;
+            }
+        }
+    }
+
+    // staging plan
+    let all_files: Vec<FileId> = datasets.iter().flatten().copied().collect();
+    let mut stage_cursor = match cfg.granularity {
+        Granularity::Coarse => {
+            for d in 0..spec.datasets {
+                ddm.stage_dataset(&format!("ds{d}"), 0.0);
+            }
+            all_files.len()
+        }
+        Granularity::Fine => {
+            let w = cfg.staging_window.min(all_files.len());
+            ddm.stage_files(&all_files[..w], 0.0);
+            w
+        }
+    };
+
+    let mut now = 0.0f64;
+    let mut staged_count = 0u64;
+    let mut processed_jobs = 0u64;
+    let mut ttfp = f64::NAN;
+    let mut makespan = 0.0f64;
+
+    loop {
+        // 1. staging progress
+        let staged = ddm.tick(now);
+        staged_count += staged.len() as u64;
+        if !staged.is_empty() {
+            timeline.record("staged_files", now, staged_count as f64);
+            timeline.record("disk_bytes", now, ddm.disk_stats().used_bytes as f64);
+        }
+
+        // 2. fine mode: release jobs whose inputs are all on disk
+        // (O(1) countdown per staged file instead of a full rescan)
+        if cfg.granularity == Granularity::Fine && !staged.is_empty() {
+            let mut ready: Vec<JobId> = Vec::new();
+            for sf in &staged {
+                if let Some(jobs) = jobs_by_file.get(&sf.file) {
+                    for j in jobs {
+                        if let Some(left) = missing_inputs.get_mut(j) {
+                            *left -= 1;
+                            if *left == 0 {
+                                ready.push(*j);
+                            }
+                        }
+                    }
+                }
+            }
+            if !ready.is_empty() {
+                for j in &ready {
+                    missing_inputs.remove(j);
+                }
+                waiting -= ready.len();
+                wfm.release_jobs(&ready);
+            }
+        }
+
+        // 3. WFM progress
+        let events = {
+            let avail = |f: FileId| ddm.is_on_disk(f);
+            wfm.tick(now, &avail)
+        };
+        let mut finished_inputs: Vec<FileId> = Vec::new();
+        for ev in &events {
+            match ev {
+                WfmEvent::JobFinished { at, inputs, .. } => {
+                    processed_jobs += 1;
+                    if ttfp.is_nan() {
+                        ttfp = *at;
+                    }
+                    makespan = makespan.max(*at);
+                    if cfg.granularity == Granularity::Fine {
+                        finished_inputs.extend(inputs.iter().copied());
+                    }
+                    timeline.record("processed_jobs", *at, processed_jobs as f64);
+                }
+                WfmEvent::JobExhausted { at, .. } => {
+                    makespan = makespan.max(*at);
+                }
+                _ => {}
+            }
+        }
+
+        // 4. fine mode: prompt cache release + slide the staging window
+        if cfg.granularity == Granularity::Fine {
+            for f in finished_inputs {
+                ddm.release_file(f, now);
+            }
+            while stage_cursor < all_files.len() && ddm.pending_staging() < cfg.staging_window {
+                ddm.stage_files(&all_files[stage_cursor..stage_cursor + 1], now);
+                stage_cursor += 1;
+            }
+            timeline.record("disk_bytes", now, ddm.disk_stats().used_bytes as f64);
+        }
+
+        // 5. done? (drained, possibly with exhausted jobs)
+        if wfm.idle() && ddm.next_event_time().is_none() && waiting == 0 {
+            break;
+        }
+
+        // 6. jump to next event
+        let next = [ddm.next_event_time(), wfm.next_event_time()]
+            .into_iter()
+            .flatten()
+            .fold(f64::INFINITY, f64::min);
+        if !next.is_finite() {
+            break;
+        }
+        now = next.max(now + 1e-9);
+    }
+
+    // coarse mode: everything is released only at campaign end
+    if cfg.granularity == Granularity::Coarse {
+        for f in &all_files {
+            ddm.release_file(*f, makespan.max(now));
+        }
+    }
+    ddm.finalize_accounting(makespan.max(now));
+
+    let exhausted_jobs = total_jobs - processed_jobs as usize;
+    let disk = ddm.disk_stats();
+    let horizon = makespan.max(now).max(1e-9);
+    CampaignResult {
+        granularity: cfg.granularity,
+        jobs: total_jobs,
+        files: all_files.len(),
+        total_attempts: wfm.total_attempts,
+        failed_attempts: wfm.failed_attempts,
+        exhausted_jobs,
+        attempt_histogram: wfm.attempt_histogram(),
+        peak_disk_bytes: disk.peak_bytes,
+        mean_disk_bytes: disk.byte_seconds / horizon,
+        time_to_first_processing_s: ttfp,
+        makespan_s: makespan,
+        tape_mounts: ddm.tape_stats().mounts,
+        timeline,
+    }
+}
+
+/// Convenience: run both modes on the identical workload (same seed).
+pub fn compare_modes(
+    base: &CarouselConfig,
+    spec: &CampaignSpec,
+) -> (CampaignResult, CampaignResult) {
+    let mut coarse_cfg = base.clone();
+    coarse_cfg.granularity = Granularity::Coarse;
+    let mut fine_cfg = base.clone();
+    fine_cfg.granularity = Granularity::Fine;
+    (run_campaign(&coarse_cfg, spec), run_campaign(&fine_cfg, spec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> CampaignSpec {
+        CampaignSpec {
+            datasets: 2,
+            files_per_dataset: 60,
+            mean_file_mb: 1000.0,
+            cartridges_per_dataset: 2,
+            seed: 11,
+        }
+    }
+
+    fn small_cfg() -> CarouselConfig {
+        CarouselConfig {
+            staging_window: 16,
+            tape_drives: 2,
+            sites: 2,
+            slots_per_site: 8,
+            job_wall_s: 600.0,
+            retry_delay_s: 300.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fine_mode_processes_everything_with_single_attempts() {
+        let mut cfg = small_cfg();
+        cfg.granularity = Granularity::Fine;
+        let r = run_campaign(&cfg, &small_spec());
+        assert_eq!(r.exhausted_jobs, 0);
+        assert_eq!(r.failed_attempts, 0, "triggered jobs never dispatch early");
+        assert_eq!(r.total_attempts as usize, r.jobs);
+        assert!(r.makespan_s > 0.0);
+    }
+
+    #[test]
+    fn coarse_mode_burns_attempts() {
+        let mut cfg = small_cfg();
+        cfg.granularity = Granularity::Coarse;
+        let r = run_campaign(&cfg, &small_spec());
+        assert!(
+            r.failed_attempts > 0,
+            "jobs dispatched before staging must fail attempts"
+        );
+        assert!(r.total_attempts as usize > r.jobs);
+    }
+
+    #[test]
+    fn fig4_shape_fine_beats_coarse_on_attempts() {
+        let (coarse, fine) = compare_modes(&small_cfg(), &small_spec());
+        assert!(
+            coarse.total_attempts > 2 * fine.total_attempts,
+            "coarse {} vs fine {}",
+            coarse.total_attempts,
+            fine.total_attempts
+        );
+    }
+
+    #[test]
+    fn claim_disk_fine_smaller_peak_footprint() {
+        let (coarse, fine) = compare_modes(&small_cfg(), &small_spec());
+        assert!(
+            (fine.peak_disk_bytes as f64) < 0.7 * coarse.peak_disk_bytes as f64,
+            "fine peak {} vs coarse peak {}",
+            fine.peak_disk_bytes,
+            coarse.peak_disk_bytes
+        );
+        assert!(fine.mean_disk_bytes < coarse.mean_disk_bytes);
+    }
+
+    #[test]
+    fn claim_ttfp_fine_starts_processing_early() {
+        let (coarse, fine) = compare_modes(&small_cfg(), &small_spec());
+        // fine starts as soon as the first file lands; coarse waits out
+        // retry backoffs
+        assert!(
+            fine.time_to_first_processing_s <= coarse.time_to_first_processing_s,
+            "fine {} vs coarse {}",
+            fine.time_to_first_processing_s,
+            coarse.time_to_first_processing_s
+        );
+    }
+
+    #[test]
+    fn conservation_all_files_staged_exactly_once_per_mode() {
+        let mut cfg = small_cfg();
+        cfg.granularity = Granularity::Fine;
+        let spec = small_spec();
+        let r = run_campaign(&cfg, &spec);
+        assert_eq!(r.files, spec.datasets * spec.files_per_dataset);
+        // every job processed exactly once
+        assert_eq!(r.jobs, r.files.div_ceil(cfg.files_per_job));
+        let ones: usize = r
+            .attempt_histogram
+            .iter()
+            .filter(|(a, _)| *a == 1)
+            .map(|(_, n)| *n)
+            .sum();
+        assert_eq!(ones, r.jobs);
+    }
+
+    #[test]
+    fn timeline_series_present() {
+        let mut cfg = small_cfg();
+        cfg.granularity = Granularity::Fine;
+        let r = run_campaign(&cfg, &small_spec());
+        assert!(!r.timeline.series("staged_files").is_empty());
+        assert!(!r.timeline.series("processed_jobs").is_empty());
+        assert!(!r.timeline.series("disk_bytes").is_empty());
+        // staged monotone
+        let s = r.timeline.series("staged_files");
+        assert!(s.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = small_cfg();
+        let spec = small_spec();
+        let a = run_campaign(&cfg, &spec);
+        let b = run_campaign(&cfg, &spec);
+        assert_eq!(a.total_attempts, b.total_attempts);
+        assert_eq!(a.peak_disk_bytes, b.peak_disk_bytes);
+        assert!((a.makespan_s - b.makespan_s).abs() < 1e-6);
+    }
+}

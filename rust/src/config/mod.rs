@@ -1,0 +1,173 @@
+//! Layered configuration system: compiled defaults ← JSON config file ←
+//! `--set key=value` CLI overrides.
+//!
+//! Every tunable in the service (daemon poll intervals, REST bind address,
+//! simulator parameters, HPO settings) resolves through one [`Config`] so
+//! examples/benches/tests can express scenarios declaratively.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Flat dotted-key configuration. Values are stored as [`Json`] scalars.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, Json>,
+}
+
+impl Config {
+    /// Compiled-in defaults for the full service.
+    pub fn defaults() -> Self {
+        let mut c = Config::default();
+        // REST head service
+        c.put("rest.bind", Json::Str("127.0.0.1:0".into()));
+        c.put("rest.workers", Json::Num(8.0));
+        c.put("rest.auth_tokens", Json::Arr(vec![Json::Str("dev-token".into())]));
+        // daemons
+        c.put("daemons.poll_interval_s", Json::Num(0.01));
+        c.put("daemons.batch_size", Json::Num(256.0));
+        // artifacts / runtime
+        c.put("runtime.artifacts_dir", Json::Str("artifacts".into()));
+        // DDM / tape simulator
+        c.put("ddm.tape_bandwidth_mbps", Json::Num(400.0));
+        c.put("ddm.disk_bandwidth_mbps", Json::Num(2000.0));
+        c.put("tape.drives", Json::Num(8.0));
+        c.put("tape.mount_latency_s", Json::Num(90.0));
+        c.put("tape.seek_latency_s", Json::Num(20.0));
+        // WFM simulator
+        c.put("wfm.sites", Json::Num(16.0));
+        c.put("wfm.slots_per_site", Json::Num(64.0));
+        c.put("wfm.job_wall_s", Json::Num(3600.0));
+        c.put("wfm.max_attempts", Json::Num(6.0));
+        // HPO service
+        c.put("hpo.max_points", Json::Num(64.0));
+        c.put("hpo.candidates", Json::Num(256.0));
+        c.put("hpo.workers", Json::Num(4.0));
+        c
+    }
+
+    pub fn put(&mut self, key: &str, val: Json) {
+        self.values.insert(key.to_string(), val);
+    }
+
+    /// Merge a JSON object file (nested objects flatten to dotted keys).
+    pub fn load_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let json = parse(&text).with_context(|| format!("parsing config {}", path.display()))?;
+        let obj = json
+            .as_obj()
+            .context("config root must be a JSON object")?;
+        let mut stack: Vec<(String, &Json)> = obj
+            .iter()
+            .map(|(k, v)| (k.clone(), v))
+            .collect();
+        while let Some((key, val)) = stack.pop() {
+            match val {
+                Json::Obj(m) => {
+                    for (k, v) in m {
+                        stack.push((format!("{key}.{k}"), v));
+                    }
+                }
+                v => self.put(&key, v.clone()),
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply a `key=value` override; value parsed as JSON, falling back to
+    /// a plain string.
+    pub fn apply_override(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = match kv.split_once('=') {
+            Some(p) => p,
+            None => bail!("override '{kv}' is not key=value"),
+        };
+        let val = parse(v).unwrap_or_else(|_| Json::Str(v.to_string()));
+        self.put(k, val);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.values.get(key)
+    }
+
+    pub fn str(&self, key: &str) -> Result<String> {
+        self.get(key)
+            .and_then(|j| j.as_str())
+            .map(str::to_string)
+            .with_context(|| format!("config key '{key}' missing or not a string"))
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        self.get(key)
+            .and_then(|j| j.as_f64())
+            .with_context(|| format!("config key '{key}' missing or not a number"))
+    }
+
+    pub fn u64(&self, key: &str) -> Result<u64> {
+        self.get(key)
+            .and_then(|j| j.as_u64())
+            .with_context(|| format!("config key '{key}' missing or not a u64"))
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize> {
+        Ok(self.u64(key)? as usize)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_present() {
+        let c = Config::defaults();
+        assert_eq!(c.u64("tape.drives").unwrap(), 8);
+        assert!(c.str("rest.bind").unwrap().starts_with("127."));
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::defaults();
+        c.apply_override("tape.drives=2").unwrap();
+        assert_eq!(c.u64("tape.drives").unwrap(), 2);
+        c.apply_override("rest.bind=\"0.0.0.0:8443\"").unwrap();
+        assert_eq!(c.str("rest.bind").unwrap(), "0.0.0.0:8443");
+        // non-JSON value falls back to string
+        c.apply_override("foo.bar=hello").unwrap();
+        assert_eq!(c.str("foo.bar").unwrap(), "hello");
+    }
+
+    #[test]
+    fn bad_override_rejected() {
+        let mut c = Config::defaults();
+        assert!(c.apply_override("no-equals").is_err());
+    }
+
+    #[test]
+    fn file_flattening() {
+        let dir = std::env::temp_dir().join(format!("idds-cfg-{}", crate::util::next_id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.json");
+        std::fs::write(&p, r#"{"tape": {"drives": 3}, "top": 1}"#).unwrap();
+        let mut c = Config::defaults();
+        c.load_file(&p).unwrap();
+        assert_eq!(c.u64("tape.drives").unwrap(), 3);
+        assert_eq!(c.u64("top").unwrap(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let c = Config::defaults();
+        assert!(c.str("nope").is_err());
+        assert!(c.f64("rest.bind").is_err());
+    }
+}

@@ -1,0 +1,273 @@
+//! Work-payload executors behind the Carrier.
+//!
+//! The Carrier submits Processing objects "to the WFM system" (paper
+//! section 2). In this repo the WFM is one of several backends, selected
+//! by the Work's [`WorkKind`]:
+//!
+//! * [`NoopExecutor`]    — orchestration-only Works (Rubin DAG vertices,
+//!   tests): completes on the next poll, echoing configured outputs.
+//! * [`RuntimeExecutor`] — HPO-training and decision Works: executes the
+//!   AOT PJRT artifacts (`mlp_train`, `al_decision`) on a worker pool,
+//!   completion is observed by polling (matching the asynchronous
+//!   evaluation structure of paper Fig. 6).
+//!
+//! Data-processing Works run against the DDM/WFM discrete-event
+//! simulators and are driven by the carousel module, not by an executor
+//! here — simulated time cannot block a live daemon thread.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::EngineHandle;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workflow::WorkKind;
+
+/// Asynchronous payload executor.
+pub trait Executor: Send + Sync {
+    /// Begin executing; `work` is the serialized Work (template params under
+    /// `params`). Returns an opaque handle.
+    fn submit(&self, work: &Json) -> Result<u64>;
+
+    /// Poll a handle: `None` while running, `Some(result)` once done.
+    fn poll(&self, handle: u64) -> Result<Option<Json>>;
+}
+
+/// Executor registry keyed by WorkKind.
+#[derive(Clone, Default)]
+pub struct ExecutorSet {
+    map: HashMap<&'static str, Arc<dyn Executor>>,
+}
+
+impl ExecutorSet {
+    pub fn with(mut self, kind: WorkKind, exec: Arc<dyn Executor>) -> Self {
+        self.map.insert(kind.as_str(), exec);
+        self
+    }
+
+    pub fn get(&self, kind: &str) -> Option<Arc<dyn Executor>> {
+        self.map.get(kind).cloned()
+    }
+}
+
+/// Completes immediately; result echoes `params.result` (or {}).
+pub struct NoopExecutor {
+    done: Mutex<HashMap<u64, Json>>,
+}
+
+impl Default for NoopExecutor {
+    fn default() -> Self {
+        NoopExecutor {
+            done: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+impl Executor for NoopExecutor {
+    fn submit(&self, work: &Json) -> Result<u64> {
+        let handle = crate::util::next_id();
+        let result = work
+            .get_path(&["params", "result"])
+            .cloned()
+            .unwrap_or_else(Json::obj);
+        self.done.lock().unwrap().insert(handle, result);
+        Ok(handle)
+    }
+
+    fn poll(&self, handle: u64) -> Result<Option<Json>> {
+        Ok(self.done.lock().unwrap().remove(&handle))
+    }
+}
+
+enum SlotState {
+    Running,
+    Done(Json),
+    Failed(String),
+}
+
+/// Executes HPO-training and decision Works on the PJRT engine, one worker
+/// pool for all submissions (the "geographically distributed GPU
+/// resources" of paper section 3.2, collapsed to a local pool that
+/// preserves the asynchronous-evaluation code path).
+pub struct RuntimeExecutor {
+    engine: EngineHandle,
+    pool: crate::util::pool::ThreadPool,
+    slots: Arc<Mutex<HashMap<u64, SlotState>>>,
+}
+
+impl RuntimeExecutor {
+    pub fn new(engine: EngineHandle, workers: usize) -> Self {
+        RuntimeExecutor {
+            engine,
+            pool: crate::util::pool::ThreadPool::new(workers, "rt-exec"),
+            slots: Arc::new(Mutex::new(HashMap::new())),
+        }
+    }
+
+    /// Deterministic payload dataset for a training Work (seeded by the
+    /// Work's `seed` param so every hyperparameter point of one HPO task
+    /// trains on identical data).
+    fn payload_data(engine: &EngineHandle, seed: u64) -> Result<TrainData> {
+        let spec = engine.spec("mlp_train").context("mlp_train spec")?;
+        let train_n = spec.consts["train_n"] as usize;
+        let val_n = spec.consts["val_n"] as usize;
+        let in_dim = spec.consts["in_dim"] as usize;
+        let hidden = spec.consts["hidden"] as usize;
+        let mut rng = Rng::new(seed);
+        let mut mk = |n: usize, scale: f64| -> Vec<f32> {
+            (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+        };
+        let xtr = mk(train_n * in_dim, 1.0);
+        let xval = mk(val_n * in_dim, 1.0);
+        let w1 = mk(in_dim * hidden, 0.3);
+        let w2 = mk(hidden, 0.3);
+        let target = |x: &[f32], i: usize| (x[i * in_dim] * 2.0).sin() + 0.5 * x[i * in_dim + 1];
+        let ytr: Vec<f32> = (0..train_n).map(|i| target(&xtr, i)).collect();
+        let yval: Vec<f32> = (0..val_n).map(|i| target(&xval, i)).collect();
+        Ok(TrainData {
+            xtr,
+            ytr,
+            xval,
+            yval,
+            w1,
+            b1: vec![0.0; hidden],
+            w2,
+            b2: vec![0.0; 1],
+        })
+    }
+}
+
+struct TrainData {
+    xtr: Vec<f32>,
+    ytr: Vec<f32>,
+    xval: Vec<f32>,
+    yval: Vec<f32>,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+fn param_f32(work: &Json, name: &str) -> Result<f32> {
+    work.get_path(&["params", name])
+        .and_then(|v| v.as_f64())
+        .map(|v| v as f32)
+        .with_context(|| format!("work param '{name}' missing or not numeric"))
+}
+
+impl Executor for RuntimeExecutor {
+    fn submit(&self, work: &Json) -> Result<u64> {
+        let handle = crate::util::next_id();
+        let kind = work.get("kind").and_then(|k| k.as_str()).unwrap_or("");
+        let engine = self.engine.clone();
+        let slots = Arc::clone(&self.slots);
+        slots.lock().unwrap().insert(handle, SlotState::Running);
+
+        match kind {
+            "HpoTraining" => {
+                let hp = [
+                    param_f32(work, "log_lr")?,
+                    param_f32(work, "momentum")?,
+                    param_f32(work, "log_l2")?,
+                    param_f32(work, "log_clip")?,
+                ];
+                let seed = work
+                    .get_path(&["params", "seed"])
+                    .and_then(|v| v.as_u64())
+                    .unwrap_or(0);
+                self.pool.execute(move || {
+                    let outcome = (|| -> Result<Json> {
+                        let d = RuntimeExecutor::payload_data(&engine, seed)?;
+                        let out = engine.mlp_train(
+                            &hp, &d.xtr, &d.ytr, &d.xval, &d.yval, &d.w1, &d.b1, &d.w2, &d.b2,
+                        )?;
+                        Ok(Json::obj()
+                            .set("val_loss", out.val_loss as f64)
+                            .set("train_loss", out.train_loss as f64))
+                    })();
+                    let state = match outcome {
+                        Ok(j) => SlotState::Done(j),
+                        Err(e) => SlotState::Failed(e.to_string()),
+                    };
+                    slots.lock().unwrap().insert(handle, state);
+                });
+            }
+            "Decision" => {
+                let stats: Vec<f32> = work
+                    .get_path(&["params", "stats"])
+                    .and_then(|s| s.as_arr())
+                    .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect())
+                    .unwrap_or_default();
+                let weights: Vec<f32> = work
+                    .get_path(&["params", "weights"])
+                    .and_then(|s| s.as_arr())
+                    .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect())
+                    .unwrap_or_default();
+                let bias = param_f32(work, "bias").unwrap_or(0.0);
+                let threshold = param_f32(work, "threshold").unwrap_or(0.5);
+                self.pool.execute(move || {
+                    let outcome = (|| -> Result<Json> {
+                        let (score, go) = engine.al_decision(&stats, &weights, bias, threshold)?;
+                        Ok(Json::obj().set("score", score as f64).set("go", go))
+                    })();
+                    let state = match outcome {
+                        Ok(j) => SlotState::Done(j),
+                        Err(e) => SlotState::Failed(e.to_string()),
+                    };
+                    slots.lock().unwrap().insert(handle, state);
+                });
+            }
+            other => {
+                slots
+                    .lock()
+                    .unwrap()
+                    .insert(handle, SlotState::Failed(format!("RuntimeExecutor cannot run kind '{other}'")));
+            }
+        }
+        Ok(handle)
+    }
+
+    fn poll(&self, handle: u64) -> Result<Option<Json>> {
+        let mut slots = self.slots.lock().unwrap();
+        match slots.get(&handle) {
+            None => anyhow::bail!("unknown handle {handle}"),
+            Some(SlotState::Running) => Ok(None),
+            Some(SlotState::Done(_)) => {
+                let Some(SlotState::Done(j)) = slots.remove(&handle) else { unreachable!() };
+                Ok(Some(j))
+            }
+            Some(SlotState::Failed(_)) => {
+                let Some(SlotState::Failed(msg)) = slots.remove(&handle) else { unreachable!() };
+                Ok(Some(Json::obj().set("error", msg.as_str())))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_completes_with_echo() {
+        let e = NoopExecutor::default();
+        let work = Json::obj().set(
+            "params",
+            Json::obj().set("result", Json::obj().set("x", 1.0)),
+        );
+        let h = e.submit(&work).unwrap();
+        let r = e.poll(h).unwrap().unwrap();
+        assert_eq!(r.get("x").unwrap().as_f64(), Some(1.0));
+        // handle consumed
+        assert!(e.poll(h).unwrap().is_none());
+    }
+
+    #[test]
+    fn executor_set_dispatch() {
+        let set = ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default()));
+        assert!(set.get("Noop").is_some());
+        assert!(set.get("HpoTraining").is_none());
+    }
+}

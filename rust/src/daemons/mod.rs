@@ -1,0 +1,151 @@
+//! The iDDS daemons (paper section 2, Fig. 1): Clerk, Marshaller,
+//! Transformer, Carrier, Conductor.
+//!
+//! Each daemon implements [`Daemon::poll_once`] — one bounded unit of work
+//! against the shared store/broker — so the same code runs in two modes:
+//!
+//! * **service mode**: [`AgentHost`] polls every daemon on its own thread
+//!   at the configured interval (the live head-service deployment);
+//! * **stepped mode**: tests and the discrete-event drivers call
+//!   [`pump`] to run the daemons to quiescence deterministically.
+//!
+//! The actual execution of Work payloads is behind the
+//! [`executors::Executor`] trait: Noop for orchestration-only Works,
+//! the PJRT [`crate::runtime::Engine`] for HPO-training and decision
+//! Works, and the WFM/DDM simulators for data-processing Works.
+
+pub mod executors;
+pub mod pipeline;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub use pipeline::{Carrier, Clerk, Conductor, Marshaller, Pipeline, Transformer};
+
+/// One iDDS daemon: a named poll loop.
+pub trait Daemon: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Process up to one batch; returns how many items made progress.
+    fn poll_once(&self) -> usize;
+}
+
+/// Run daemons until a full sweep makes no progress (or `max_sweeps`).
+/// Returns total progress count. Deterministic given deterministic
+/// executors — the backbone of the integration tests.
+pub fn pump(daemons: &[&dyn Daemon], max_sweeps: usize) -> usize {
+    let mut total = 0;
+    for _ in 0..max_sweeps {
+        let mut progressed = 0;
+        for d in daemons {
+            progressed += d.poll_once();
+        }
+        total += progressed;
+        if progressed == 0 {
+            return total;
+        }
+    }
+    total
+}
+
+/// Threaded host for service mode.
+pub struct AgentHost {
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl AgentHost {
+    /// Spawn one thread per daemon, polling at `interval`.
+    pub fn start(daemons: Vec<Arc<dyn Daemon>>, interval: std::time::Duration) -> AgentHost {
+        let stop = Arc::new(AtomicBool::new(false));
+        let threads = daemons
+            .into_iter()
+            .map(|d| {
+                let stop = Arc::clone(&stop);
+                std::thread::Builder::new()
+                    .name(format!("idds-{}", d.name()))
+                    .spawn(move || {
+                        while !stop.load(Ordering::SeqCst) {
+                            let n = d.poll_once();
+                            if n == 0 {
+                                std::thread::sleep(interval);
+                            }
+                        }
+                    })
+                    .expect("spawn daemon")
+            })
+            .collect();
+        AgentHost { stop, threads }
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for AgentHost {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    struct CountDown {
+        left: AtomicUsize,
+    }
+
+    impl Daemon for CountDown {
+        fn name(&self) -> &'static str {
+            "countdown"
+        }
+        fn poll_once(&self) -> usize {
+            let cur = self.left.load(Ordering::SeqCst);
+            if cur == 0 {
+                0
+            } else {
+                self.left.store(cur - 1, Ordering::SeqCst);
+                1
+            }
+        }
+    }
+
+    #[test]
+    fn pump_runs_to_quiescence() {
+        let d = CountDown { left: AtomicUsize::new(5) };
+        let total = pump(&[&d], 100);
+        assert_eq!(total, 5);
+        assert_eq!(d.poll_once(), 0);
+    }
+
+    #[test]
+    fn pump_respects_max_sweeps() {
+        let d = CountDown { left: AtomicUsize::new(1000) };
+        let total = pump(&[&d], 3);
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn agent_host_drains_work() {
+        let d = Arc::new(CountDown { left: AtomicUsize::new(20) });
+        let host = AgentHost::start(
+            vec![Arc::clone(&d) as Arc<dyn Daemon>],
+            std::time::Duration::from_millis(1),
+        );
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+        while d.left.load(Ordering::SeqCst) > 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        host.stop();
+        assert_eq!(d.left.load(Ordering::SeqCst), 0);
+    }
+}

@@ -1,0 +1,646 @@
+//! The five iDDS daemons over the shared store (paper section 2):
+//!
+//! ```text
+//! client → [REST] → Request(New)
+//!   Clerk       : Request New → Workflow engine → initial Works
+//!                 (transforms) → Request Transforming; finalizes requests
+//!                 whose transforms are all terminal + marshalled.
+//!   Marshaller  : terminal transforms → evaluate Condition branches →
+//!                 generate follow-up Works (DG support, incl. cycles).
+//!   Transformer : Transform New → input/output Collections (+Contents) →
+//!                 Processing(New) → Transform Activated→Running.
+//!   Carrier     : Processing New → submit to executor → poll → Finished;
+//!                 writes the Work result and queues a message.
+//!   Conductor   : store messages New → broker publish → Delivered.
+//! ```
+//!
+//! All daemon state beyond the store lives in [`Pipeline`] (the per-request
+//! workflow engines and the marshalled set) so the daemons stay restartable
+//! and the store remains the single source of truth for status.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use crate::broker::Broker;
+use crate::metrics::Registry;
+use crate::store::{
+    CollectionKind, Id, MessageStatus, ProcessingStatus, RequestStatus, Store, TransformStatus,
+};
+use crate::util::json::Json;
+use crate::workflow::{Engine as WfEngine, Work, Workflow};
+
+use super::executors::ExecutorSet;
+use super::Daemon;
+
+/// Shared pipeline context for all five daemons.
+#[derive(Clone)]
+pub struct Pipeline {
+    pub store: Store,
+    pub broker: Broker,
+    pub metrics: Registry,
+    pub executors: ExecutorSet,
+    /// request id → live workflow engine
+    engines: Arc<Mutex<HashMap<Id, WfEngine>>>,
+    /// transforms whose conditions the Marshaller has evaluated
+    marshalled: Arc<Mutex<HashSet<Id>>>,
+    batch: usize,
+}
+
+impl Pipeline {
+    pub fn new(store: Store, broker: Broker, metrics: Registry, executors: ExecutorSet) -> Self {
+        Pipeline {
+            store,
+            broker,
+            metrics,
+            executors,
+            engines: Arc::new(Mutex::new(HashMap::new())),
+            marshalled: Arc::new(Mutex::new(HashSet::new())),
+            batch: 256,
+        }
+    }
+
+    pub fn daemons(&self) -> (Clerk, Marshaller, Transformer, Carrier, Conductor) {
+        (
+            Clerk { p: self.clone() },
+            Marshaller { p: self.clone() },
+            Transformer { p: self.clone() },
+            Carrier { p: self.clone() },
+            Conductor { p: self.clone() },
+        )
+    }
+
+    fn add_work_transform(&self, request_id: Id, work: &Work) {
+        let tf_name = format!("{}#{}", work.template, work.iteration);
+        let mut wj = work.to_json();
+        // record the kind so the Carrier can dispatch without the engine
+        if let Some(tpl) = self
+            .engines
+            .lock()
+            .unwrap()
+            .get(&request_id)
+            .and_then(|e| e.workflow.templates.get(&work.template))
+        {
+            wj = wj.set("kind", tpl.kind.as_str());
+        }
+        self.store.add_transform(request_id, &tf_name, wj);
+        self.metrics.counter("pipeline.works_generated").inc();
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Clerk: request intake + finalization.
+pub struct Clerk {
+    pub(crate) p: Pipeline,
+}
+
+impl Daemon for Clerk {
+    fn name(&self) -> &'static str {
+        "clerk"
+    }
+
+    fn poll_once(&self) -> usize {
+        let mut n = 0;
+        // intake
+        for req_id in self
+            .p
+            .store
+            .requests_with_status(RequestStatus::New)
+            .into_iter()
+            .take(self.p.batch)
+        {
+            n += 1;
+            let Ok(req) = self.p.store.get_request(req_id) else { continue };
+            match Workflow::from_json(&req.workflow).and_then(WfEngine::new) {
+                Ok(mut engine) => {
+                    let works = engine.start();
+                    self.p.engines.lock().unwrap().insert(req_id, engine);
+                    for w in &works {
+                        self.p.add_work_transform(req_id, w);
+                    }
+                    let _ = self
+                        .p
+                        .store
+                        .update_request_status(req_id, RequestStatus::Transforming);
+                }
+                Err(e) => {
+                    log::warn!("clerk: request {req_id} invalid workflow: {e}");
+                    let _ = self
+                        .p
+                        .store
+                        .update_request_status(req_id, RequestStatus::Failed);
+                }
+            }
+        }
+        // finalization
+        for req_id in self
+            .p
+            .store
+            .requests_with_status(RequestStatus::Transforming)
+            .into_iter()
+            .take(self.p.batch)
+        {
+            let tfs = self.p.store.transforms_of_request(req_id);
+            if tfs.is_empty() {
+                continue;
+            }
+            let marshalled = self.p.marshalled.lock().unwrap();
+            let mut all_done = true;
+            let mut any_failed = false;
+            let mut all_failed = true;
+            for tf_id in &tfs {
+                let Ok(tf) = self.p.store.get_transform(*tf_id) else { continue };
+                if !tf.status.is_terminal() || !marshalled.contains(tf_id) {
+                    all_done = false;
+                    break;
+                }
+                match tf.status {
+                    TransformStatus::Failed | TransformStatus::Cancelled => any_failed = true,
+                    _ => all_failed = false,
+                }
+            }
+            drop(marshalled);
+            if all_done {
+                let to = if !any_failed {
+                    RequestStatus::Finished
+                } else if all_failed {
+                    RequestStatus::Failed
+                } else {
+                    RequestStatus::SubFinished
+                };
+                if self.p.store.update_request_status(req_id, to).is_ok() {
+                    self.p.engines.lock().unwrap().remove(&req_id);
+                    self.p.metrics.counter("pipeline.requests_finalized").inc();
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Marshaller: DG evaluation on terminal transforms.
+pub struct Marshaller {
+    pub(crate) p: Pipeline,
+}
+
+impl Daemon for Marshaller {
+    fn name(&self) -> &'static str {
+        "marshaller"
+    }
+
+    fn poll_once(&self) -> usize {
+        let mut n = 0;
+        for status in [TransformStatus::Finished, TransformStatus::Failed] {
+            for tf_id in self.p.store.transforms_with_status(status) {
+                if self.p.marshalled.lock().unwrap().contains(&tf_id) {
+                    continue;
+                }
+                let Ok(tf) = self.p.store.get_transform(tf_id) else { continue };
+                let work = match Work::from_json(&tf.work) {
+                    Ok(w) => w,
+                    Err(e) => {
+                        log::warn!("marshaller: transform {tf_id} bad work json: {e}");
+                        self.p.marshalled.lock().unwrap().insert(tf_id);
+                        continue;
+                    }
+                };
+                let result = tf.work.get("result").cloned().unwrap_or_else(Json::obj);
+                // only successful works fire condition branches
+                let new_works = if status == TransformStatus::Finished {
+                    let mut engines = self.p.engines.lock().unwrap();
+                    match engines.get_mut(&tf.request_id) {
+                        Some(engine) => match engine.on_complete(&work, &result) {
+                            Ok(ws) => ws,
+                            Err(e) => {
+                                log::warn!("marshaller: condition eval failed: {e}");
+                                Vec::new()
+                            }
+                        },
+                        None => Vec::new(),
+                    }
+                } else {
+                    Vec::new()
+                };
+                for w in &new_works {
+                    self.p.add_work_transform(tf.request_id, w);
+                }
+                self.p.marshalled.lock().unwrap().insert(tf_id);
+                self.p.metrics.counter("pipeline.transforms_marshalled").inc();
+                n += 1;
+                if n >= self.p.batch {
+                    return n;
+                }
+            }
+        }
+        n
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Transformer: attach collections, create processings.
+pub struct Transformer {
+    pub(crate) p: Pipeline,
+}
+
+impl Daemon for Transformer {
+    fn name(&self) -> &'static str {
+        "transformer"
+    }
+
+    fn poll_once(&self) -> usize {
+        let mut n = 0;
+        for tf_id in self
+            .p
+            .store
+            .transforms_with_status(TransformStatus::New)
+            .into_iter()
+            .take(self.p.batch)
+        {
+            let Ok(tf) = self.p.store.get_transform(tf_id) else { continue };
+            // input collection from params.input_files (name:size pairs), if any
+            let in_coll = self.p.store.add_collection(
+                tf_id,
+                &format!("{}.input", tf.name),
+                CollectionKind::Input,
+            );
+            if let Some(files) = tf.work.get_path(&["params", "input_files"]).and_then(|f| f.as_arr())
+            {
+                let items: Vec<(String, u64)> = files
+                    .iter()
+                    .filter_map(|f| {
+                        Some((
+                            f.get("name")?.as_str()?.to_string(),
+                            f.get("size")?.as_u64().unwrap_or(0),
+                        ))
+                    })
+                    .collect();
+                self.p.store.add_contents(in_coll, items);
+            }
+            self.p.store.add_collection(
+                tf_id,
+                &format!("{}.output", tf.name),
+                CollectionKind::Output,
+            );
+            self.p.store.add_processing(tf_id);
+            let _ = self
+                .p
+                .store
+                .update_transform_status(tf_id, TransformStatus::Activated);
+            let _ = self
+                .p
+                .store
+                .update_transform_status(tf_id, TransformStatus::Running);
+            self.p.metrics.counter("pipeline.transforms_activated").inc();
+            n += 1;
+        }
+        n
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Carrier: submit processings to executors and poll them.
+pub struct Carrier {
+    pub(crate) p: Pipeline,
+}
+
+impl Daemon for Carrier {
+    fn name(&self) -> &'static str {
+        "carrier"
+    }
+
+    fn poll_once(&self) -> usize {
+        let mut n = 0;
+        // submit new processings
+        for pid in self
+            .p
+            .store
+            .processings_with_status(ProcessingStatus::New)
+            .into_iter()
+            .take(self.p.batch)
+        {
+            let Ok(proc) = self.p.store.get_processing(pid) else { continue };
+            let Ok(tf) = self.p.store.get_transform(proc.transform_id) else { continue };
+            let kind = tf.work.get("kind").and_then(|k| k.as_str()).unwrap_or("Noop");
+            let Some(exec) = self.p.executors.get(kind) else {
+                log::warn!("carrier: no executor for kind '{kind}'");
+                let _ = self
+                    .p
+                    .store
+                    .update_processing_status(pid, ProcessingStatus::Submitting);
+                let _ = self
+                    .p
+                    .store
+                    .update_processing_status(pid, ProcessingStatus::Failed);
+                let _ = self
+                    .p
+                    .store
+                    .update_transform_status(proc.transform_id, TransformStatus::Failed);
+                n += 1;
+                continue;
+            };
+            let _ = self
+                .p
+                .store
+                .update_processing_status(pid, ProcessingStatus::Submitting);
+            match exec.submit(&tf.work) {
+                Ok(handle) => {
+                    let _ = self.p.store.set_processing_wfm_task(pid, handle);
+                    let _ = self
+                        .p
+                        .store
+                        .update_processing_status(pid, ProcessingStatus::Submitted);
+                    self.p.metrics.counter("pipeline.processings_submitted").inc();
+                }
+                Err(e) => {
+                    log::warn!("carrier: submit failed: {e}");
+                    let _ = self
+                        .p
+                        .store
+                        .update_processing_status(pid, ProcessingStatus::Failed);
+                    let _ = self
+                        .p
+                        .store
+                        .update_transform_status(proc.transform_id, TransformStatus::Failed);
+                }
+            }
+            n += 1;
+        }
+        // poll running processings
+        for status in [ProcessingStatus::Submitted, ProcessingStatus::Running] {
+            for pid in self.p.store.processings_with_status(status) {
+                let Ok(proc) = self.p.store.get_processing(pid) else { continue };
+                let Ok(tf) = self.p.store.get_transform(proc.transform_id) else { continue };
+                let kind = tf.work.get("kind").and_then(|k| k.as_str()).unwrap_or("Noop");
+                let Some(exec) = self.p.executors.get(kind) else { continue };
+                let Some(handle) = proc.wfm_task else { continue };
+                match exec.poll(handle) {
+                    Ok(None) => {
+                        let _ = self
+                            .p
+                            .store
+                            .update_processing_status(pid, ProcessingStatus::Running);
+                    }
+                    Ok(Some(result)) => {
+                        let failed = !result.get("error").map(Json::is_null).unwrap_or(true);
+                        let work = tf.work.clone().set("result", result.clone());
+                        let _ = self.p.store.update_transform_work(proc.transform_id, work);
+                        let _ = self.p.store.update_processing_status(
+                            pid,
+                            if failed {
+                                ProcessingStatus::Failed
+                            } else {
+                                ProcessingStatus::Finished
+                            },
+                        );
+                        let _ = self.p.store.update_transform_status(
+                            proc.transform_id,
+                            if failed {
+                                TransformStatus::Failed
+                            } else {
+                                TransformStatus::Finished
+                            },
+                        );
+                        // queue a Conductor message (output availability)
+                        self.p.store.add_message(
+                            "idds.work.finished",
+                            Some(proc.transform_id),
+                            Json::obj()
+                                .set("request_id", tf.request_id)
+                                .set("transform_id", proc.transform_id)
+                                .set("template", tf.name.as_str())
+                                .set("failed", failed)
+                                .set("result", result),
+                        );
+                        self.p.metrics.counter("pipeline.processings_finished").inc();
+                        n += 1;
+                    }
+                    Err(e) => {
+                        log::warn!("carrier: poll failed: {e}");
+                    }
+                }
+            }
+        }
+        n
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Conductor: deliver availability notifications to consumers.
+pub struct Conductor {
+    pub(crate) p: Pipeline,
+}
+
+impl Daemon for Conductor {
+    fn name(&self) -> &'static str {
+        "conductor"
+    }
+
+    fn poll_once(&self) -> usize {
+        let mut n = 0;
+        for mid in self
+            .p
+            .store
+            .messages_with_status(MessageStatus::New)
+            .into_iter()
+            .take(self.p.batch)
+        {
+            let Ok(msg) = self.p.store.get_message(mid) else { continue };
+            self.p.broker.publish(&msg.topic, msg.payload.clone());
+            let _ = self.p.store.mark_message(mid, MessageStatus::Delivered);
+            self.p.metrics.counter("pipeline.messages_delivered").inc();
+            n += 1;
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::daemons::executors::NoopExecutor;
+    use crate::daemons::pump;
+    use crate::store::RequestKind;
+    use crate::util::clock::WallClock;
+    use crate::workflow::{Condition, Predicate, WorkKind, WorkTemplate};
+
+    fn pipeline() -> Pipeline {
+        let clock = Arc::new(WallClock::new());
+        Pipeline::new(
+            Store::new(clock.clone()),
+            Broker::new(clock),
+            Registry::default(),
+            ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default())),
+        )
+    }
+
+    fn run_all(p: &Pipeline) -> usize {
+        let (clerk, marsh, tfr, carrier, conductor) = p.daemons();
+        pump(&[&clerk, &marsh, &tfr, &carrier, &conductor], 1000)
+    }
+
+    #[test]
+    fn linear_workflow_runs_to_finished() {
+        let p = pipeline();
+        let wf = Workflow::new("lin")
+            .add_template(WorkTemplate::new("a"))
+            .add_template(WorkTemplate::new("b"))
+            .add_condition(Condition::always("a", "b"))
+            .entry("a");
+        let req = p
+            .store
+            .add_request("r", "u", RequestKind::Workflow, wf.to_json());
+        run_all(&p);
+        assert_eq!(
+            p.store.get_request(req).unwrap().status,
+            RequestStatus::Finished
+        );
+        let tfs = p.store.transforms_of_request(req);
+        assert_eq!(tfs.len(), 2, "a then b");
+        for tf in tfs {
+            assert_eq!(
+                p.store.get_transform(tf).unwrap().status,
+                TransformStatus::Finished
+            );
+        }
+    }
+
+    #[test]
+    fn conditional_branch_skipped_when_false() {
+        let p = pipeline();
+        let wf = Workflow::new("gate")
+            .add_template(
+                WorkTemplate::new("a").default(
+                    "result",
+                    Json::obj().set("loss", 0.9),
+                ),
+            )
+            .add_template(WorkTemplate::new("good"))
+            .add_template(WorkTemplate::new("bad"))
+            .add_condition(Condition::when("a", "good", Predicate::lt("loss", 0.5)))
+            .add_condition(Condition::when("a", "bad", Predicate::gt("loss", 0.5)))
+            .entry("a");
+        let req = p
+            .store
+            .add_request("r", "u", RequestKind::Workflow, wf.to_json());
+        run_all(&p);
+        let names: Vec<String> = p
+            .store
+            .transforms_of_request(req)
+            .into_iter()
+            .map(|t| p.store.get_transform(t).unwrap().name)
+            .collect();
+        assert!(names.iter().any(|n| n.starts_with("bad")), "{names:?}");
+        assert!(!names.iter().any(|n| n.starts_with("good")), "{names:?}");
+        assert_eq!(
+            p.store.get_request(req).unwrap().status,
+            RequestStatus::Finished
+        );
+    }
+
+    #[test]
+    fn cyclic_workflow_terminates_at_cap() {
+        let p = pipeline();
+        let wf = Workflow::new("cyc")
+            .add_template(WorkTemplate::new("a").max_instances(4))
+            .add_condition(Condition::always("a", "a"))
+            .entry("a");
+        let req = p
+            .store
+            .add_request("r", "u", RequestKind::Workflow, wf.to_json());
+        run_all(&p);
+        assert_eq!(p.store.transforms_of_request(req).len(), 4);
+        assert_eq!(
+            p.store.get_request(req).unwrap().status,
+            RequestStatus::Finished
+        );
+    }
+
+    #[test]
+    fn conductor_publishes_to_broker() {
+        let p = pipeline();
+        let sub = p.broker.subscribe("idds.work.finished");
+        let wf = Workflow::new("one")
+            .add_template(WorkTemplate::new("a"))
+            .entry("a");
+        p.store
+            .add_request("r", "u", RequestKind::Workflow, wf.to_json());
+        run_all(&p);
+        let msgs = p.broker.poll(sub, 10);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(
+            msgs[0].payload.get("failed").unwrap().as_bool(),
+            Some(false)
+        );
+    }
+
+    #[test]
+    fn missing_executor_fails_request() {
+        let clock = Arc::new(WallClock::new());
+        let p = Pipeline::new(
+            Store::new(clock.clone()),
+            Broker::new(clock),
+            Registry::default(),
+            ExecutorSet::default(), // no executors at all
+        );
+        let wf = Workflow::new("one")
+            .add_template(WorkTemplate::new("a"))
+            .entry("a");
+        let req = p
+            .store
+            .add_request("r", "u", RequestKind::Workflow, wf.to_json());
+        let (clerk, marsh, tfr, carrier, conductor) = p.daemons();
+        pump(&[&clerk, &marsh, &tfr, &carrier, &conductor], 1000);
+        assert_eq!(
+            p.store.get_request(req).unwrap().status,
+            RequestStatus::Failed
+        );
+    }
+
+    #[test]
+    fn invalid_workflow_fails_at_clerk() {
+        let p = pipeline();
+        let req = p.store.add_request(
+            "r",
+            "u",
+            RequestKind::Workflow,
+            Json::obj().set("name", "x"), // no entries
+        );
+        run_all(&p);
+        assert_eq!(
+            p.store.get_request(req).unwrap().status,
+            RequestStatus::Failed
+        );
+    }
+
+    #[test]
+    fn transformer_registers_input_contents() {
+        let p = pipeline();
+        let wf = Workflow::new("data")
+            .add_template(WorkTemplate::new("proc").default(
+                "input_files",
+                Json::Arr(vec![
+                    Json::obj().set("name", "f1").set("size", 100u64),
+                    Json::obj().set("name", "f2").set("size", 200u64),
+                ]),
+            ))
+            .entry("proc");
+        let req = p
+            .store
+            .add_request("r", "u", RequestKind::Workflow, wf.to_json());
+        run_all(&p);
+        let tfs = p.store.transforms_of_request(req);
+        let colls = p.store.collections_of_transform(tfs[0]);
+        assert_eq!(colls.len(), 2);
+        let input = colls
+            .iter()
+            .find(|c| c.kind == CollectionKind::Input)
+            .unwrap();
+        assert_eq!(p.store.contents_of_collection(input.id).len(), 2);
+    }
+}

@@ -1,0 +1,306 @@
+//! Event Streaming Service model (paper section 1).
+//!
+//! The paper motivates iDDS with workflows like the ATLAS Event Streaming
+//! Service, which "delivers fine-grained input data to remote computing
+//! resources over the network" — i.e. ship only the *event ranges* a job
+//! actually reads instead of whole files. This module models that
+//! delivery-granularity decision, the iDDS function "data delivery with
+//! optimal granularity ... while preserving effective data caching":
+//!
+//! * input files hold `events × bytes_per_event`;
+//! * an access trace (Zipf file popularity, per-job selectivity) says
+//!   which event ranges each job reads;
+//! * an LRU edge cache of configurable capacity sits in front of the WAN;
+//! * [`simulate`] measures WAN bytes, cache hit rate and delivered bytes
+//!   for [`Delivery::WholeFile`] vs [`Delivery::EventRanges`].
+//!
+//! The interesting output is the **crossover**: ranged delivery wins at
+//! low selectivity (sparse reads), whole-file wins when jobs read most of
+//! each file *and* reuse is high enough that cached whole files amortize
+//! (the paper's "preserving effective data caching" caveat). The
+//! `bench_ess` target sweeps selectivity to locate the crossover.
+
+use std::collections::HashMap;
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Delivery {
+    /// stage the whole file to the edge cache, serve locally
+    WholeFile,
+    /// ship only the requested event ranges (granularity = `chunk_events`)
+    EventRanges,
+}
+
+#[derive(Debug, Clone)]
+pub struct EssConfig {
+    pub files: usize,
+    pub events_per_file: u64,
+    pub bytes_per_event: u64,
+    /// edge cache capacity in bytes
+    pub cache_bytes: u64,
+    /// ranged mode ships ceil(range/chunk) chunks of this many events
+    pub chunk_events: u64,
+    /// Zipf exponent for file popularity
+    pub zipf_s: f64,
+}
+
+impl Default for EssConfig {
+    fn default() -> Self {
+        EssConfig {
+            files: 200,
+            events_per_file: 10_000,
+            bytes_per_event: 100_000, // 1 GB files
+            cache_bytes: 50_000_000_000, // 50 GB edge cache
+            chunk_events: 100,
+            zipf_s: 1.1,
+        }
+    }
+}
+
+/// One job's read: `count` events starting at `start` in `file`.
+#[derive(Debug, Clone, Copy)]
+pub struct Access {
+    pub file: usize,
+    pub start: u64,
+    pub count: u64,
+}
+
+/// Generate an access trace: `jobs` reads over Zipf-popular files, each
+/// reading a contiguous range covering `selectivity` of the file.
+pub fn generate_trace(cfg: &EssConfig, jobs: usize, selectivity: f64, seed: u64) -> Vec<Access> {
+    let mut rng = Rng::new(seed);
+    let sel = selectivity.clamp(0.0, 1.0);
+    (0..jobs)
+        .map(|_| {
+            let file = (rng.zipf(cfg.files as u64, cfg.zipf_s) - 1) as usize;
+            let count = ((cfg.events_per_file as f64 * sel).round() as u64)
+                .clamp(1, cfg.events_per_file);
+            let max_start = cfg.events_per_file - count;
+            let start = if max_start == 0 { 0 } else { rng.below(max_start + 1) };
+            Access { file, start, count }
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EssResult {
+    /// bytes pulled over the WAN (the paper's "minimize network traffic")
+    pub wan_bytes: u64,
+    /// bytes served out of the edge cache
+    pub cached_bytes: u64,
+    /// bytes actually delivered to jobs (= what they read)
+    pub delivered_bytes: u64,
+    /// cache hit ratio by bytes
+    pub hit_ratio: f64,
+}
+
+/// Byte-capacity LRU over abstract unit keys.
+///
+/// Recency order lives in a tick-keyed `BTreeMap` (ticks are unique), so
+/// touch/insert/evict are all O(log n) — the original scan-the-map-per-
+/// eviction version made 10k-job traces quadratic (EXPERIMENTS.md §Perf,
+/// L3 iteration 4).
+struct Lru {
+    capacity: u64,
+    used: u64,
+    /// key -> (size, last-use tick)
+    entries: HashMap<(usize, u64), (u64, u64)>,
+    /// last-use tick -> key (ticks unique: strict recency order)
+    order: std::collections::BTreeMap<u64, (usize, u64)>,
+    tick: u64,
+}
+
+impl Lru {
+    fn new(capacity: u64) -> Self {
+        Lru {
+            capacity,
+            used: 0,
+            entries: HashMap::new(),
+            order: std::collections::BTreeMap::new(),
+            tick: 0,
+        }
+    }
+
+    fn touch(&mut self, key: (usize, u64)) -> bool {
+        self.tick += 1;
+        if let Some(e) = self.entries.get_mut(&key) {
+            self.order.remove(&e.1);
+            e.1 = self.tick;
+            self.order.insert(self.tick, key);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn insert(&mut self, key: (usize, u64), size: u64) {
+        self.tick += 1;
+        if size > self.capacity {
+            return; // uncacheable
+        }
+        while self.used + size > self.capacity {
+            // evict LRU = smallest tick
+            let Some((&t, &victim)) = self.order.iter().next() else { break };
+            self.order.remove(&t);
+            let (vsize, _) = self.entries.remove(&victim).unwrap();
+            self.used -= vsize;
+        }
+        self.entries.insert(key, (size, self.tick));
+        self.order.insert(self.tick, key);
+        self.used += size;
+    }
+}
+
+/// Run the trace under a delivery mode.
+pub fn simulate(cfg: &EssConfig, mode: Delivery, trace: &[Access]) -> EssResult {
+    let mut cache = Lru::new(cfg.cache_bytes);
+    let file_bytes = cfg.events_per_file * cfg.bytes_per_event;
+    let chunk_bytes = cfg.chunk_events * cfg.bytes_per_event;
+    let mut r = EssResult::default();
+
+    for a in trace {
+        let read_bytes = a.count * cfg.bytes_per_event;
+        r.delivered_bytes += read_bytes;
+        match mode {
+            Delivery::WholeFile => {
+                // cache unit = the file (chunk index 0)
+                let key = (a.file, u64::MAX);
+                if cache.touch(key) {
+                    r.cached_bytes += read_bytes;
+                } else {
+                    r.wan_bytes += file_bytes; // stage the whole file
+                    cache.insert(key, file_bytes);
+                }
+            }
+            Delivery::EventRanges => {
+                // cache unit = fixed event chunks covering the range
+                let first = a.start / cfg.chunk_events;
+                let last = (a.start + a.count - 1) / cfg.chunk_events;
+                for chunk in first..=last {
+                    let key = (a.file, chunk);
+                    if cache.touch(key) {
+                        r.cached_bytes += chunk_bytes;
+                    } else {
+                        r.wan_bytes += chunk_bytes;
+                        cache.insert(key, chunk_bytes);
+                    }
+                }
+            }
+        }
+    }
+    let total = r.wan_bytes + r.cached_bytes;
+    r.hit_ratio = if total == 0 {
+        0.0
+    } else {
+        r.cached_bytes as f64 / total as f64
+    };
+    r
+}
+
+/// Sweep selectivity and return (selectivity, whole-file WAN, ranged WAN)
+/// rows — the crossover table.
+pub fn selectivity_sweep(
+    cfg: &EssConfig,
+    jobs: usize,
+    selectivities: &[f64],
+    seed: u64,
+) -> Vec<(f64, u64, u64)> {
+    selectivities
+        .iter()
+        .map(|&sel| {
+            let trace = generate_trace(cfg, jobs, sel, seed);
+            let wf = simulate(cfg, Delivery::WholeFile, &trace);
+            let er = simulate(cfg, Delivery::EventRanges, &trace);
+            (sel, wf.wan_bytes, er.wan_bytes)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> EssConfig {
+        EssConfig {
+            files: 50,
+            events_per_file: 1000,
+            bytes_per_event: 1000,
+            cache_bytes: 10_000_000, // 10 files worth
+            chunk_events: 10,
+            zipf_s: 1.1,
+        }
+    }
+
+    #[test]
+    fn trace_ranges_are_in_bounds() {
+        let c = cfg();
+        for a in generate_trace(&c, 500, 0.3, 1) {
+            assert!(a.file < c.files);
+            assert!(a.count >= 1);
+            assert!(a.start + a.count <= c.events_per_file);
+        }
+    }
+
+    #[test]
+    fn sparse_reads_favor_event_ranges() {
+        let c = cfg();
+        let trace = generate_trace(&c, 1000, 0.02, 2); // 2% of each file
+        let wf = simulate(&c, Delivery::WholeFile, &trace);
+        let er = simulate(&c, Delivery::EventRanges, &trace);
+        assert!(
+            er.wan_bytes * 3 < wf.wan_bytes,
+            "ranged {} vs whole {}",
+            er.wan_bytes,
+            wf.wan_bytes
+        );
+    }
+
+    #[test]
+    fn dense_reads_with_reuse_favor_whole_file_caching() {
+        let mut c = cfg();
+        c.files = 5; // heavy reuse: everything fits the cache
+        c.cache_bytes = 5 * 1000 * 1000;
+        let trace = generate_trace(&c, 2000, 0.95, 3);
+        let wf = simulate(&c, Delivery::WholeFile, &trace);
+        let er = simulate(&c, Delivery::EventRanges, &trace);
+        // whole-file stages each file once and then serves from cache;
+        // ranged pays chunk misses per distinct range start
+        assert!(wf.wan_bytes <= er.wan_bytes, "whole {} vs ranged {}", wf.wan_bytes, er.wan_bytes);
+        assert!(wf.hit_ratio > 0.9);
+    }
+
+    #[test]
+    fn delivered_bytes_independent_of_mode() {
+        let c = cfg();
+        let trace = generate_trace(&c, 300, 0.2, 4);
+        let wf = simulate(&c, Delivery::WholeFile, &trace);
+        let er = simulate(&c, Delivery::EventRanges, &trace);
+        assert_eq!(wf.delivered_bytes, er.delivered_bytes);
+    }
+
+    #[test]
+    fn lru_evicts_and_respects_capacity() {
+        let mut l = Lru::new(100);
+        l.insert((0, 0), 60);
+        l.insert((1, 0), 60); // evicts (0,0)
+        assert!(l.used <= 100);
+        assert!(!l.touch((0, 0)));
+        assert!(l.touch((1, 0)));
+        // oversized item is not cached
+        l.insert((2, 0), 1000);
+        assert!(!l.touch((2, 0)));
+    }
+
+    #[test]
+    fn sweep_shows_crossover_direction() {
+        let c = cfg();
+        let rows = selectivity_sweep(&c, 800, &[0.01, 0.5, 1.0], 5);
+        // at 1% ranged must win; at 100% ranged cannot beat whole-file by
+        // more than chunk rounding
+        let (_, wf_lo, er_lo) = rows[0];
+        assert!(er_lo < wf_lo);
+        let (_, wf_hi, er_hi) = rows[2];
+        assert!(er_hi as f64 >= wf_hi as f64 * 0.9);
+    }
+}

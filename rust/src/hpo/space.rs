@@ -1,0 +1,123 @@
+//! Hyperparameter search spaces: named continuous dimensions with
+//! normalize/denormalize between physical ranges and the unit box the GP
+//! surrogate operates in.
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamDim {
+    pub name: String,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl ParamDim {
+    pub fn new(name: &str, lo: f64, hi: f64) -> ParamDim {
+        assert!(hi > lo, "dim '{name}': hi must exceed lo");
+        ParamDim {
+            name: name.to_string(),
+            lo,
+            hi,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SearchSpace {
+    pub dims: Vec<ParamDim>,
+}
+
+impl SearchSpace {
+    pub fn new(dims: Vec<ParamDim>) -> SearchSpace {
+        SearchSpace { dims }
+    }
+
+    /// unit-box → physical coordinates (clamped).
+    pub fn denormalize(&self, x: &[f64]) -> Vec<f64> {
+        self.dims
+            .iter()
+            .zip(x.iter())
+            .map(|(d, v)| d.lo + v.clamp(0.0, 1.0) * (d.hi - d.lo))
+            .collect()
+    }
+
+    /// physical → unit-box coordinates (clamped).
+    pub fn normalize(&self, phys: &[f64]) -> Vec<f64> {
+        self.dims
+            .iter()
+            .zip(phys.iter())
+            .map(|(d, v)| ((v - d.lo) / (d.hi - d.lo)).clamp(0.0, 1.0))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.dims
+                .iter()
+                .map(|d| {
+                    Json::obj()
+                        .set("name", d.name.as_str())
+                        .set("lo", d.lo)
+                        .set("hi", d.hi)
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<SearchSpace> {
+        use anyhow::Context;
+        let arr = j.as_arr().context("search space must be an array")?;
+        let dims = arr
+            .iter()
+            .map(|d| {
+                Ok(ParamDim::new(
+                    d.get("name").and_then(|v| v.as_str()).context("dim.name")?,
+                    d.get("lo").and_then(|v| v.as_f64()).context("dim.lo")?,
+                    d.get("hi").and_then(|v| v.as_f64()).context("dim.hi")?,
+                ))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(SearchSpace::new(dims))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> SearchSpace {
+        SearchSpace::new(vec![
+            ParamDim::new("a", -10.0, 10.0),
+            ParamDim::new("b", 0.0, 1.0),
+        ])
+    }
+
+    #[test]
+    fn roundtrip_normalize() {
+        let s = space();
+        let phys = vec![5.0, 0.25];
+        let n = s.normalize(&phys);
+        assert_eq!(n, vec![0.75, 0.25]);
+        assert_eq!(s.denormalize(&n), phys);
+    }
+
+    #[test]
+    fn clamping() {
+        let s = space();
+        assert_eq!(s.denormalize(&[-0.5, 2.0]), vec![-10.0, 1.0]);
+        assert_eq!(s.normalize(&[-100.0, 100.0]), vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = space();
+        let back = SearchSpace::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    #[should_panic(expected = "hi must exceed lo")]
+    fn rejects_empty_range() {
+        ParamDim::new("x", 1.0, 1.0);
+    }
+}

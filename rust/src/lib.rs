@@ -1,0 +1,38 @@
+//! # iDDS — intelligent Data Delivery Service (reproduction)
+//!
+//! A Rust + JAX + Pallas reproduction of *"An intelligent Data Delivery
+//! Service for and beyond the ATLAS experiment"* (EPJ Web Conf. 251, 02007,
+//! 2021): a workflow-oriented orchestration service that sits between a
+//! WorkFlow Management system (WFM) and a Distributed Data Management
+//! system (DDM) and delivers data to compute at fine granularity.
+//!
+//! Layer map (see `DESIGN.md`):
+//! * **L3 (this crate)** — the iDDS head service, the five daemons
+//!   (Clerk, Marshaller, Transformer, Carrier, Conductor), the directed-
+//!   graph workflow engine, and every substrate the paper's deployment
+//!   relied on (DDM, tape system, WFM, message broker), built as
+//!   discrete-event simulators where the real thing is a physical facility.
+//! * **L2/L1 (python/, build-time only)** — the numeric payloads (GP
+//!   surrogate + EI acquisition for the HPO service, the MLP training
+//!   payload, the active-learning decision scorer), lowered once to HLO
+//!   text and executed from `runtime` via PJRT. Python is never on the
+//!   request path.
+
+pub mod util;
+pub mod config;
+pub mod store;
+pub mod broker;
+pub mod tape;
+pub mod ddm;
+pub mod ess;
+pub mod wfm;
+pub mod workflow;
+pub mod daemons;
+pub mod rest;
+pub mod runtime;
+pub mod hpo;
+pub mod carousel;
+pub mod activelearning;
+pub mod rubin;
+pub mod metrics;
+pub mod simulation;

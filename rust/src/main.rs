@@ -1,0 +1,229 @@
+//! iDDS launcher: the leader entrypoint.
+//!
+//! ```text
+//! idds serve     [--set k=v ...]          run the head service + daemons
+//! idds carousel  [--scenario NAME]        Fig. 4 / Fig. 5 comparison run
+//! idds hpo       [--points N]             Bayesian-vs-random HPO run
+//! idds rubin     [--jobs N --layers L]    DAG release-policy comparison
+//! idds info                                artifact + config summary
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use idds::broker::Broker;
+use idds::carousel::{compare_modes, Granularity};
+use idds::config::Config;
+use idds::daemons::executors::{ExecutorSet, NoopExecutor, RuntimeExecutor};
+use idds::daemons::{AgentHost, Daemon, Pipeline};
+use idds::hpo::{payload_space, BayesOpt, Strategy};
+use idds::metrics::Registry;
+use idds::rest::{serve, ServerState};
+use idds::rubin::{generate_dag, schedule, Release};
+use idds::runtime::{default_artifacts_dir, EngineHandle};
+use idds::simulation::Scenario;
+use idds::store::Store;
+use idds::util::clock::WallClock;
+use idds::workflow::WorkKind;
+
+struct Args {
+    cmd: String,
+    flags: Vec<(String, String)>,
+}
+
+fn parse_args() -> Args {
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next().unwrap_or_else(|| "help".to_string());
+    let mut flags = Vec::new();
+    let rest: Vec<String> = args.collect();
+    let mut i = 0;
+    while i < rest.len() {
+        let a = &rest[i];
+        if let Some(name) = a.strip_prefix("--") {
+            let val = rest.get(i + 1).cloned().unwrap_or_default();
+            flags.push((name.to_string(), val));
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    Args { cmd, flags }
+}
+
+impl Args {
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn config(&self) -> Result<Config> {
+        let mut cfg = Config::defaults();
+        if let Some(f) = self.flag("config") {
+            cfg.load_file(std::path::Path::new(f))?;
+        }
+        for (k, v) in &self.flags {
+            if k == "set" {
+                cfg.apply_override(v)?;
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    match args.cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "carousel" => cmd_carousel(&args),
+        "hpo" => cmd_hpo(&args),
+        "rubin" => cmd_rubin(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            println!(
+                "iDDS — intelligent Data Delivery Service (reproduction)\n\
+                 usage: idds <serve|carousel|hpo|rubin|info> [flags]\n\
+                 see README.md"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let clock = Arc::new(WallClock::new());
+    let store = Store::new(clock.clone());
+    let broker = Broker::new(clock);
+    let metrics = Registry::default();
+
+    let engine = EngineHandle::start(&default_artifacts_dir())
+        .context("loading AOT artifacts (run `make artifacts`)")?;
+    let rt_exec = Arc::new(RuntimeExecutor::new(engine, cfg.usize("hpo.workers")?));
+    let executors = ExecutorSet::default()
+        .with(WorkKind::Noop, Arc::new(NoopExecutor::default()))
+        .with(WorkKind::HpoTraining, rt_exec.clone())
+        .with(WorkKind::Decision, rt_exec);
+
+    let pipeline = Pipeline::new(store.clone(), broker.clone(), metrics.clone(), executors);
+    let (clerk, marsh, tfr, carrier, conductor) = pipeline.daemons();
+    let daemons: Vec<Arc<dyn Daemon>> = vec![
+        Arc::new(clerk),
+        Arc::new(marsh),
+        Arc::new(tfr),
+        Arc::new(carrier),
+        Arc::new(conductor),
+    ];
+    let interval = std::time::Duration::from_secs_f64(cfg.f64("daemons.poll_interval_s")?);
+    let host = AgentHost::start(daemons, interval);
+
+    let state = ServerState::new(store, broker, metrics, &cfg);
+    let server = serve(state, &cfg)?;
+    println!("iDDS head service listening on {}", server.addr);
+    println!("daemons: clerk, marshaller, transformer, carrier, conductor");
+    println!("Ctrl-C to stop.");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+        let _ = &host;
+    }
+}
+
+fn cmd_carousel(args: &Args) -> Result<()> {
+    let scen = args
+        .flag("scenario")
+        .map(|s| Scenario::parse(s).context("unknown scenario"))
+        .transpose()?
+        .unwrap_or(Scenario::Reprocessing);
+    println!("running carousel comparison, scenario {scen:?} ...");
+    let spec = scen.campaign();
+    let (coarse, fine) = compare_modes(&scen.config(Granularity::Fine), &spec);
+    for r in [&coarse, &fine] {
+        println!(
+            "\n== {:?} ==\n jobs {}  files {}\n attempts: total {}  failed {}  exhausted jobs {}\n disk: peak {:.1} GB  mean {:.1} GB\n ttfp {:.0} s  makespan {:.0} s  tape mounts {}",
+            r.granularity,
+            r.jobs,
+            r.files,
+            r.total_attempts,
+            r.failed_attempts,
+            r.exhausted_jobs,
+            r.peak_disk_bytes as f64 / 1e9,
+            r.mean_disk_bytes / 1e9,
+            r.time_to_first_processing_s,
+            r.makespan_s,
+            r.tape_mounts
+        );
+    }
+    println!(
+        "\nFig.4 shape: attempts reduced {:.1}x; disk: peak footprint reduced {:.1}x",
+        coarse.total_attempts as f64 / fine.total_attempts.max(1) as f64,
+        coarse.peak_disk_bytes as f64 / fine.peak_disk_bytes.max(1) as f64
+    );
+    println!("\n{}", fine.timeline.ascii_plot("disk_bytes", 72, 10));
+    Ok(())
+}
+
+fn cmd_hpo(args: &Args) -> Result<()> {
+    let points: usize = args.flag("points").unwrap_or("12").parse()?;
+    let engine = EngineHandle::start(&default_artifacts_dir())
+        .context("loading AOT artifacts (run `make artifacts`)")?;
+    let opt = BayesOpt::new(engine, payload_space())?;
+    println!("HPO: {points} evaluations per strategy (AOT GP+EI vs random)");
+    for strat in [Strategy::Random, Strategy::Bayesian] {
+        let r = opt.run(strat, points, 11)?;
+        println!(
+            "{:?}: best loss {:.4}  curve {:?}",
+            strat,
+            r.best(),
+            r.best_curve
+                .iter()
+                .map(|v| (v * 1000.0).round() / 1000.0)
+                .collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_rubin(args: &Args) -> Result<()> {
+    let jobs: usize = args.flag("jobs").unwrap_or("100000").parse()?;
+    let layers: usize = args.flag("layers").unwrap_or("20").parse()?;
+    let slots: usize = args.flag("slots").unwrap_or("512").parse()?;
+    println!("Rubin DAG: {jobs} jobs, {layers} layers, {slots} slots");
+    let t0 = std::time::Instant::now();
+    let dag = generate_dag(jobs, layers, 4, 9);
+    println!("generated in {:?}", t0.elapsed());
+    for rel in [Release::Bulk, Release::Incremental] {
+        let t0 = std::time::Instant::now();
+        let r = schedule(&dag, slots, rel);
+        println!(
+            "{:?}: makespan {:.0} s  mean release lag {:.0} s  messages {}  (sim ran in {:?})",
+            rel,
+            r.makespan_s,
+            r.mean_release_lag_s,
+            r.messages,
+            t0.elapsed()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    println!("iDDS reproduction — config keys:");
+    for k in cfg.keys() {
+        println!("  {k} = {}", cfg.get(k).unwrap());
+    }
+    let dir = default_artifacts_dir();
+    match EngineHandle::start(&dir) {
+        Ok(engine) => {
+            println!("artifacts dir: {}", dir.display());
+            for e in engine.entry_names() {
+                println!("  artifact: {e}");
+            }
+        }
+        Err(e) => bail!("artifacts not loadable from {}: {e}", dir.display()),
+    }
+    Ok(())
+}

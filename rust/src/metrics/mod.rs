@@ -1,0 +1,310 @@
+//! Metrics: counters, gauges, histograms, and the campaign timeline
+//! recorder that backs the Figure 4 / Figure 5 outputs.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::util::json::Json;
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Signed gauge.
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket histogram (log2 buckets over nanoseconds/values).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, v: u64) {
+        let idx = (64 - v.leading_zeros()).min(63) as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-th sample).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return if i >= 63 { u64::MAX } else { 1u64 << i };
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Named metrics registry shared across daemons.
+#[derive(Default, Clone)]
+pub struct Registry {
+    inner: Arc<RegistryInner>,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: RwLock<BTreeMap<String, Arc<Counter>>>,
+    gauges: RwLock<BTreeMap<String, Arc<Gauge>>>,
+    histograms: RwLock<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        if let Some(c) = self.inner.counters.read().unwrap().get(name) {
+            return Arc::clone(c);
+        }
+        let mut w = self.inner.counters.write().unwrap();
+        Arc::clone(w.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::default())))
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        if let Some(g) = self.inner.gauges.read().unwrap().get(name) {
+            return Arc::clone(g);
+        }
+        let mut w = self.inner.gauges.write().unwrap();
+        Arc::clone(w.entry(name.to_string()).or_insert_with(|| Arc::new(Gauge::default())))
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        if let Some(h) = self.inner.histograms.read().unwrap().get(name) {
+            return Arc::clone(h);
+        }
+        let mut w = self.inner.histograms.write().unwrap();
+        Arc::clone(
+            w.entry(name.to_string())
+                .or_insert_with(|| Arc::new(Histogram::default())),
+        )
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let mut obj = Json::obj();
+        for (k, v) in self.inner.counters.read().unwrap().iter() {
+            obj = obj.set(&format!("counter.{k}"), v.get());
+        }
+        for (k, v) in self.inner.gauges.read().unwrap().iter() {
+            obj = obj.set(&format!("gauge.{k}"), v.get() as f64);
+        }
+        for (k, v) in self.inner.histograms.read().unwrap().iter() {
+            obj = obj.set(
+                &format!("hist.{k}"),
+                Json::obj()
+                    .set("count", v.count())
+                    .set("mean", v.mean())
+                    .set("p50", v.quantile(0.5))
+                    .set("p99", v.quantile(0.99)),
+            );
+        }
+        obj
+    }
+}
+
+/// Time-series recorder for campaign plots (Fig. 5): named series of
+/// (t, value) samples.
+#[derive(Default, Clone)]
+pub struct Timeline {
+    series: Arc<Mutex<BTreeMap<String, Vec<(f64, f64)>>>>,
+}
+
+impl std::fmt::Debug for Timeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let names = self.names();
+        write!(f, "Timeline({} series)", names.len())
+    }
+}
+
+impl Timeline {
+    pub fn record(&self, series: &str, t: f64, v: f64) {
+        self.series
+            .lock()
+            .unwrap()
+            .entry(series.to_string())
+            .or_default()
+            .push((t, v));
+    }
+
+    pub fn series(&self, name: &str) -> Vec<(f64, f64)> {
+        self.series
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.series.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Downsample a series to at most `n` points (for terminal plots).
+    pub fn downsample(&self, name: &str, n: usize) -> Vec<(f64, f64)> {
+        let s = self.series(name);
+        if s.len() <= n || n == 0 {
+            return s;
+        }
+        let stride = s.len() as f64 / n as f64;
+        (0..n)
+            .map(|i| s[((i as f64 * stride) as usize).min(s.len() - 1)])
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let guard = self.series.lock().unwrap();
+        let mut obj = Json::obj();
+        for (k, pts) in guard.iter() {
+            obj = obj.set(
+                k,
+                Json::Arr(
+                    pts.iter()
+                        .map(|(t, v)| Json::Arr(vec![Json::Num(*t), Json::Num(*v)]))
+                        .collect(),
+                ),
+            );
+        }
+        obj
+    }
+
+    /// Render an ASCII sparkline-style plot of a series (used by example
+    /// binaries to "draw" Fig. 5 in the terminal).
+    pub fn ascii_plot(&self, name: &str, width: usize, height: usize) -> String {
+        let pts = self.downsample(name, width);
+        if pts.is_empty() {
+            return format!("{name}: (no data)\n");
+        }
+        let (min_v, max_v) = pts
+            .iter()
+            .fold((f64::MAX, f64::MIN), |(lo, hi), (_, v)| (lo.min(*v), hi.max(*v)));
+        let span = (max_v - min_v).max(1e-12);
+        let mut grid = vec![vec![b' '; pts.len()]; height];
+        for (x, (_, v)) in pts.iter().enumerate() {
+            let y = (((v - min_v) / span) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - y][x] = b'*';
+        }
+        let mut out = format!("{name}  [{min_v:.3e} .. {max_v:.3e}]\n");
+        for row in grid {
+            out.push('|');
+            out.push_str(std::str::from_utf8(&row).unwrap());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_histogram() {
+        let r = Registry::default();
+        r.counter("a").inc();
+        r.counter("a").add(4);
+        assert_eq!(r.counter("a").get(), 5);
+        r.gauge("g").set(-3);
+        r.gauge("g").add(1);
+        assert_eq!(r.gauge("g").get(), -2);
+        let h = r.histogram("h");
+        for v in [1u64, 2, 4, 100, 1000] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() > 0.0);
+        assert!(h.quantile(0.5) >= 2);
+        assert!(h.quantile(1.0) >= 1000);
+    }
+
+    #[test]
+    fn registry_is_shared() {
+        let r = Registry::default();
+        let c1 = r.counter("x");
+        let c2 = r.counter("x");
+        c1.inc();
+        assert_eq!(c2.get(), 1);
+        let snap = r.snapshot();
+        assert_eq!(snap.get("counter.x").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn timeline_series_and_downsample() {
+        let t = Timeline::default();
+        for i in 0..1000 {
+            t.record("disk", i as f64, (i * 2) as f64);
+        }
+        assert_eq!(t.series("disk").len(), 1000);
+        let d = t.downsample("disk", 50);
+        assert_eq!(d.len(), 50);
+        assert_eq!(d[0], (0.0, 0.0));
+        let plot = t.ascii_plot("disk", 40, 8);
+        assert!(plot.contains('*'));
+        assert_eq!(t.names(), vec!["disk".to_string()]);
+    }
+
+    #[test]
+    fn timeline_json_shape() {
+        let t = Timeline::default();
+        t.record("s", 1.0, 2.0);
+        let j = t.to_json();
+        let arr = j.get("s").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_arr().unwrap()[1].as_f64(), Some(2.0));
+    }
+}

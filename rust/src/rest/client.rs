@@ -1,0 +1,155 @@
+//! Typed client for the iDDS head service (the paper's "Client" box in
+//! Fig. 2: define a Workflow, serialize it to a json-based request, submit
+//! over REST).
+
+use anyhow::{bail, Context, Result};
+
+use crate::store::{RequestKind, RequestStatus};
+use crate::util::json::{parse, Json};
+use crate::workflow::Workflow;
+
+use super::http::http_request;
+
+pub struct Client {
+    addr: std::net::SocketAddr,
+    token: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct MessageDelivery {
+    pub id: u64,
+    pub topic: String,
+    pub payload: Json,
+    pub redelivered: bool,
+}
+
+impl Client {
+    pub fn new(addr: std::net::SocketAddr, token: &str) -> Self {
+        Client {
+            addr,
+            token: token.to_string(),
+        }
+    }
+
+    fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+        let auth = format!("Bearer {}", self.token);
+        let headers = [("Authorization", auth.as_str()), ("Content-Type", "application/json")];
+        let body_bytes = body.map(|b| b.to_string().into_bytes()).unwrap_or_default();
+        let (status, resp) = http_request(self.addr, method, path, &headers, &body_bytes)?;
+        let j = if resp.is_empty() {
+            Json::Null
+        } else {
+            parse(std::str::from_utf8(&resp).context("response utf-8")?)
+                .context("response json")?
+        };
+        Ok((status, j))
+    }
+
+    fn expect_ok(&self, method: &str, path: &str, body: Option<&Json>) -> Result<Json> {
+        let (status, j) = self.call(method, path, body)?;
+        if !(200..300).contains(&status) {
+            bail!(
+                "{method} {path} -> {status}: {}",
+                j.get("error").and_then(|e| e.as_str()).unwrap_or("?")
+            );
+        }
+        Ok(j)
+    }
+
+    pub fn health(&self) -> Result<Json> {
+        self.expect_ok("GET", "/api/health", None)
+    }
+
+    /// Submit a workflow; returns the request id.
+    pub fn submit(
+        &self,
+        name: &str,
+        requester: &str,
+        kind: RequestKind,
+        workflow: &Workflow,
+    ) -> Result<u64> {
+        let body = Json::obj()
+            .set("name", name)
+            .set("requester", requester)
+            .set("kind", kind.as_str())
+            .set("workflow", workflow.to_json());
+        let j = self.expect_ok("POST", "/api/requests", Some(&body))?;
+        j.get("request_id")
+            .and_then(|v| v.as_u64())
+            .context("missing request_id")
+    }
+
+    pub fn request_status(&self, id: u64) -> Result<RequestStatus> {
+        let j = self.expect_ok("GET", &format!("/api/requests/{id}"), None)?;
+        j.get("status")
+            .and_then(|s| s.as_str())
+            .and_then(RequestStatus::parse)
+            .context("bad status in response")
+    }
+
+    /// Cancel a non-terminal request; returns whether anything changed.
+    pub fn cancel(&self, id: u64) -> Result<bool> {
+        let j = self.expect_ok("POST", &format!("/api/requests/{id}/cancel"), None)?;
+        j.get("cancelled").and_then(|v| v.as_bool()).context("cancelled")
+    }
+
+    pub fn summary(&self, id: u64) -> Result<Json> {
+        self.expect_ok("GET", &format!("/api/requests/{id}/summary"), None)
+    }
+
+    pub fn subscribe(&self, topic: &str) -> Result<u64> {
+        let j = self.expect_ok(
+            "POST",
+            "/api/subscriptions",
+            Some(&Json::obj().set("topic", topic)),
+        )?;
+        j.get("sub").and_then(|v| v.as_u64()).context("missing sub")
+    }
+
+    pub fn poll_messages(&self, sub: u64, max: usize) -> Result<Vec<MessageDelivery>> {
+        let j = self.expect_ok("GET", &format!("/api/messages?sub={sub}&max={max}"), None)?;
+        let msgs = j.get("messages").and_then(|m| m.as_arr()).context("messages")?;
+        msgs.iter()
+            .map(|m| {
+                Ok(MessageDelivery {
+                    id: m.get("id").and_then(|v| v.as_u64()).context("id")?,
+                    topic: m
+                        .get("topic")
+                        .and_then(|v| v.as_str())
+                        .context("topic")?
+                        .to_string(),
+                    payload: m.get("payload").cloned().unwrap_or(Json::Null),
+                    redelivered: m
+                        .get("redelivered")
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(false),
+                })
+            })
+            .collect()
+    }
+
+    pub fn ack(&self, sub: u64, msg: u64) -> Result<bool> {
+        let j = self.expect_ok(
+            "POST",
+            "/api/messages/ack",
+            Some(&Json::obj().set("sub", sub).set("msg", msg)),
+        )?;
+        j.get("acked").and_then(|v| v.as_bool()).context("acked")
+    }
+
+    /// Poll until the request reaches a terminal status or the deadline
+    /// passes. Returns the final status.
+    pub fn wait_terminal(&self, id: u64, timeout: std::time::Duration) -> Result<RequestStatus> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let s = self.request_status(id)?;
+            if s.is_terminal() {
+                return Ok(s);
+            }
+            if std::time::Instant::now() > deadline {
+                bail!("request {id} still {s} after {timeout:?}");
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+    }
+}

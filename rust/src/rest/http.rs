@@ -1,0 +1,402 @@
+//! Minimal HTTP/1.1 server + client plumbing over `std::net` (neither
+//! tokio nor hyper are available offline). Connection-per-request with
+//! keep-alive, bounded request size, a worker thread pool, and graceful
+//! shutdown.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::pool::ThreadPool;
+
+pub const MAX_BODY: usize = 64 * 1024 * 1024;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: Vec<(String, String)>,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("body not utf-8")
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: impl ToString) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.to_string().into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response {
+            status,
+            content_type: "text/plain",
+            body: body.as_bytes().to_vec(),
+        }
+    }
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        201 => "Created",
+        204 => "No Content",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+fn percent_decode(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'%' && i + 2 < b.len() + 1 && i + 2 < b.len() {
+            if let Ok(v) = u8::from_str_radix(std::str::from_utf8(&b[i + 1..i + 3]).unwrap_or(""), 16)
+            {
+                out.push(v);
+                i += 3;
+                continue;
+            }
+        }
+        if b[i] == b'+' {
+            out.push(b' ');
+        } else {
+            out.push(b[i]);
+        }
+        i += 1;
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn parse_query(q: &str) -> Vec<(String, String)> {
+    q.split('&')
+        .filter(|p| !p.is_empty())
+        .map(|p| match p.split_once('=') {
+            Some((k, v)) => (percent_decode(k), percent_decode(v)),
+            None => (percent_decode(p), String::new()),
+        })
+        .collect()
+}
+
+/// Read one request off the stream; Ok(None) on clean EOF.
+pub fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.trim_end().split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let target = parts.next().context("missing path")?.to_string();
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), parse_query(q)),
+        None => (target, Vec::new()),
+    };
+
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            bail!("eof in headers");
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let k = k.trim().to_string();
+            let v = v.trim().to_string();
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.parse().context("bad content-length")?;
+            }
+            headers.push((k, v));
+        }
+    }
+    if content_length > MAX_BODY {
+        bail!("body too large");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Some(Request {
+        method,
+        path,
+        query,
+        headers,
+        body,
+    }))
+}
+
+pub fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// The server: accept loop on its own thread, handlers on a pool.
+pub struct HttpServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind and serve. `handler` must be cheap to clone (Arc inside).
+    pub fn serve<H>(bind: &str, workers: usize, handler: H) -> Result<HttpServer>
+    where
+        H: Fn(Request) -> Response + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handler = Arc::new(handler);
+        let accept_thread = std::thread::Builder::new()
+            .name("http-accept".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(workers, "http");
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let handler = Arc::clone(&handler);
+                            pool.execute(move || {
+                                let _ = handle_conn(stream, handler);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                pool.shutdown();
+            })?;
+        Ok(HttpServer {
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    handler: Arc<dyn Fn(Request) -> Response + Send + Sync>,
+) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => break,
+            Err(_) => {
+                let _ = write_response(
+                    &mut stream,
+                    &Response::text(400, "bad request"),
+                    false,
+                );
+                break;
+            }
+        };
+        let keep = req
+            .header("connection")
+            .map(|c| !c.eq_ignore_ascii_case("close"))
+            .unwrap_or(true);
+        let resp = handler(req);
+        write_response(&mut stream, &resp, keep)?;
+        if !keep {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Minimal blocking HTTP client (one request per call, Connection: close).
+pub fn http_request(
+    addr: impl ToSocketAddrs,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<(u16, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr).context("connect")?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\nContent-Length: {}\r\n", body.len());
+    for (k, v) in headers {
+        req.push_str(&format!("{k}: {v}\r\n"));
+    }
+    req.push_str("\r\n");
+    stream.write_all(req.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .context("bad status line")?
+        .parse()
+        .context("bad status code")?;
+    let mut content_length = None;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            break;
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = Some(v.trim().parse::<usize>().context("content-length")?);
+            }
+        }
+    }
+    let mut body = Vec::new();
+    match content_length {
+        Some(n) => {
+            body.resize(n, 0);
+            reader.read_exact(&mut body)?;
+        }
+        None => {
+            reader.read_to_end(&mut body)?;
+        }
+    }
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> HttpServer {
+        HttpServer::serve("127.0.0.1:0", 2, |req| {
+            Response::json(
+                200,
+                crate::util::json::Json::obj()
+                    .set("method", req.method.as_str())
+                    .set("path", req.path.as_str())
+                    .set("q", req.query_param("x").unwrap_or(""))
+                    .set("body_len", req.body.len()),
+            )
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_get() {
+        let s = echo_server();
+        let (status, body) = http_request(s.addr, "GET", "/a/b?x=1%202", &[], b"").unwrap();
+        assert_eq!(status, 200);
+        let j = crate::util::json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("path").unwrap().as_str(), Some("/a/b"));
+        assert_eq!(j.get("q").unwrap().as_str(), Some("1 2"));
+        s.stop();
+    }
+
+    #[test]
+    fn roundtrip_post_body() {
+        let s = echo_server();
+        let payload = vec![b'z'; 100_000];
+        let (status, body) =
+            http_request(s.addr, "POST", "/submit", &[("X-Test", "1")], &payload).unwrap();
+        assert_eq!(status, 200);
+        let j = crate::util::json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("body_len").unwrap().as_u64(), Some(100_000));
+        s.stop();
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let s = echo_server();
+        let addr = s.addr;
+        let handles: Vec<_> = (0..16)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let (status, _) =
+                        http_request(addr, "GET", &format!("/r{i}"), &[], b"").unwrap();
+                    assert_eq!(status, 200);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        s.stop();
+    }
+
+    #[test]
+    fn percent_decode_cases() {
+        assert_eq!(percent_decode("a%20b+c"), "a b c");
+        assert_eq!(percent_decode("%zz"), "%zz"); // invalid escape passes through
+        assert_eq!(percent_decode("plain"), "plain");
+    }
+}

@@ -1,0 +1,425 @@
+//! The iDDS RESTful head service (paper section 2): authenticates users,
+//! registers and queries requests, provides catalog lookups over the
+//! collections/contents associated with a request, and exposes the
+//! Conductor's message stream to consumers.
+//!
+//! Routes (all JSON):
+//! * `GET  /api/health`                     — liveness + store counts
+//! * `GET  /api/metrics`                    — metrics snapshot
+//! * `POST /api/requests`                   — submit a serialized Workflow
+//! * `GET  /api/requests/<id>`              — request record
+//! * `POST /api/requests/<id>/cancel`       — abort a non-terminal request
+//! * `GET  /api/requests/<id>/summary`      — catalog summary (transforms,
+//!   collections, per-status content counts)
+//! * `GET  /api/requests?status=New`        — ids by status
+//! * `POST /api/subscriptions`              — subscribe to a message topic
+//! * `GET  /api/messages?sub=<id>&max=<n>`  — poll deliveries
+//! * `POST /api/messages/ack`               — ack a delivery
+//!
+//! Authentication: `Authorization: Bearer <token>` checked against the
+//! configured token set (production iDDS uses OIDC; a static token list
+//! preserves the control-flow: every request is authenticated before any
+//! store access).
+
+pub mod client;
+pub mod http;
+
+use std::sync::Arc;
+
+use crate::broker::Broker;
+use crate::config::Config;
+use crate::metrics::Registry;
+use crate::store::{RequestKind, RequestStatus, Store};
+use crate::util::json::{parse, Json};
+
+pub use client::Client;
+pub use http::{HttpServer, Request, Response};
+
+/// Shared state behind the REST handlers.
+#[derive(Clone)]
+pub struct ServerState {
+    pub store: Store,
+    pub broker: Broker,
+    pub metrics: Registry,
+    tokens: Arc<Vec<String>>,
+}
+
+impl ServerState {
+    pub fn new(store: Store, broker: Broker, metrics: Registry, config: &Config) -> Self {
+        let tokens: Vec<String> = config
+            .get("rest.auth_tokens")
+            .and_then(|j| j.as_arr())
+            .map(|a| a.iter().filter_map(|t| t.as_str().map(str::to_string)).collect())
+            .unwrap_or_default();
+        ServerState {
+            store,
+            broker,
+            metrics,
+            tokens: Arc::new(tokens),
+        }
+    }
+
+    fn authed(&self, req: &Request) -> bool {
+        let Some(h) = req.header("authorization") else {
+            return false;
+        };
+        let Some(token) = h.strip_prefix("Bearer ") else {
+            return false;
+        };
+        self.tokens.iter().any(|t| t == token)
+    }
+}
+
+fn err_json(status: u16, msg: &str) -> Response {
+    Response::json(status, Json::obj().set("error", msg))
+}
+
+fn ok_json(body: Json) -> Response {
+    Response::json(200, body)
+}
+
+/// Start the head service on the configured bind address.
+pub fn serve(state: ServerState, config: &Config) -> anyhow::Result<HttpServer> {
+    let bind = config.str("rest.bind")?;
+    let workers = config.usize("rest.workers")?;
+    HttpServer::serve(&bind, workers, move |req| route(&state, req))
+}
+
+/// Top-level router (public for in-process tests without sockets).
+pub fn route(state: &ServerState, req: Request) -> Response {
+    state.metrics.counter("rest.requests").inc();
+    if req.path == "/api/health" {
+        // health is unauthenticated (load balancer probes)
+        return ok_json(
+            Json::obj()
+                .set("status", "ok")
+                .set("counts", state.store.counts()),
+        );
+    }
+    if !state.authed(&req) {
+        state.metrics.counter("rest.unauthorized").inc();
+        return err_json(401, "missing or invalid bearer token");
+    }
+
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["api", "metrics"]) => ok_json(state.metrics.snapshot()),
+
+        ("POST", ["api", "requests"]) => handle_submit(state, &req),
+
+        ("GET", ["api", "requests"]) => {
+            let Some(status) = req
+                .query_param("status")
+                .and_then(RequestStatus::parse)
+            else {
+                return err_json(400, "missing or invalid ?status=");
+            };
+            let ids = state.store.requests_with_status(status);
+            ok_json(Json::obj().set(
+                "ids",
+                Json::Arr(ids.into_iter().map(Json::from).collect()),
+            ))
+        }
+
+        ("GET", ["api", "requests", id]) => match id.parse::<u64>() {
+            Ok(id) => match state.store.get_request(id) {
+                Ok(r) => ok_json(
+                    Json::obj()
+                        .set("id", r.id)
+                        .set("name", r.name.as_str())
+                        .set("requester", r.requester.as_str())
+                        .set("kind", r.kind.as_str())
+                        .set("status", r.status.as_str())
+                        .set("created_at", r.created_at)
+                        .set("updated_at", r.updated_at),
+                ),
+                Err(e) => err_json(404, &e.to_string()),
+            },
+            Err(_) => err_json(400, "bad id"),
+        },
+
+        ("POST", ["api", "requests", id, "cancel"]) => match id.parse::<u64>() {
+            Ok(id) => match state.store.cancel_request(id) {
+                Ok(cancelled) => {
+                    if cancelled {
+                        state.metrics.counter("rest.requests_cancelled").inc();
+                    }
+                    ok_json(Json::obj().set("cancelled", cancelled))
+                }
+                Err(e) => err_json(404, &e.to_string()),
+            },
+            Err(_) => err_json(400, "bad id"),
+        },
+
+        ("GET", ["api", "requests", id, "summary"]) => match id.parse::<u64>() {
+            Ok(id) => match state.store.request_summary(id) {
+                Ok(s) => ok_json(s),
+                Err(e) => err_json(404, &e.to_string()),
+            },
+            Err(_) => err_json(400, "bad id"),
+        },
+
+        ("POST", ["api", "subscriptions"]) => {
+            let body = match req.body_str().map(parse) {
+                Ok(Ok(j)) => j,
+                _ => return err_json(400, "body must be json"),
+            };
+            let Some(topic) = body.get("topic").and_then(|t| t.as_str()) else {
+                return err_json(400, "missing topic");
+            };
+            let sub = state.broker.subscribe(topic);
+            ok_json(Json::obj().set("sub", sub))
+        }
+
+        ("GET", ["api", "messages"]) => {
+            let Some(sub) = req.query_param("sub").and_then(|s| s.parse().ok()) else {
+                return err_json(400, "missing ?sub=");
+            };
+            let max = req
+                .query_param("max")
+                .and_then(|m| m.parse().ok())
+                .unwrap_or(100usize);
+            let msgs = state.broker.poll(sub, max);
+            ok_json(Json::obj().set(
+                "messages",
+                Json::Arr(
+                    msgs.into_iter()
+                        .map(|d| {
+                            Json::obj()
+                                .set("id", d.id)
+                                .set("topic", d.topic.as_str())
+                                .set("payload", d.payload)
+                                .set("redelivered", d.redelivered)
+                        })
+                        .collect(),
+                ),
+            ))
+        }
+
+        ("POST", ["api", "messages", "ack"]) => {
+            let body = match req.body_str().map(parse) {
+                Ok(Ok(j)) => j,
+                _ => return err_json(400, "body must be json"),
+            };
+            let (Some(sub), Some(msg)) = (
+                body.get("sub").and_then(|v| v.as_u64()),
+                body.get("msg").and_then(|v| v.as_u64()),
+            ) else {
+                return err_json(400, "need sub and msg");
+            };
+            ok_json(Json::obj().set("acked", state.broker.ack(sub, msg)))
+        }
+
+        _ => err_json(404, "no such route"),
+    }
+}
+
+fn handle_submit(state: &ServerState, req: &Request) -> Response {
+    let body = match req.body_str().map(parse) {
+        Ok(Ok(j)) => j,
+        _ => return err_json(400, "body must be json"),
+    };
+    let Some(name) = body.get("name").and_then(|v| v.as_str()) else {
+        return err_json(400, "missing name");
+    };
+    let Some(requester) = body.get("requester").and_then(|v| v.as_str()) else {
+        return err_json(400, "missing requester");
+    };
+    let kind = body
+        .get("kind")
+        .and_then(|v| v.as_str())
+        .and_then(RequestKind::parse)
+        .unwrap_or(RequestKind::Workflow);
+    let Some(workflow) = body.get("workflow") else {
+        return err_json(400, "missing workflow");
+    };
+    // Validate the workflow deserializes before accepting (paper Fig. 2:
+    // requests are deserialized server-side and passed to the daemons).
+    if let Err(e) = crate::workflow::Workflow::from_json(workflow) {
+        return err_json(400, &format!("invalid workflow: {e}"));
+    }
+    let id = state
+        .store
+        .add_request(name, requester, kind, workflow.clone());
+    state.metrics.counter("rest.requests_submitted").inc();
+    Response::json(201, Json::obj().set("request_id", id))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::WallClock;
+    use crate::workflow::{Condition, WorkTemplate, Workflow};
+
+    fn state() -> ServerState {
+        let clock = Arc::new(WallClock::new());
+        ServerState::new(
+            Store::new(clock.clone()),
+            Broker::new(clock),
+            Registry::default(),
+            &Config::defaults(),
+        )
+    }
+
+    fn authed_req(method: &str, path: &str, body: &str) -> Request {
+        Request {
+            method: method.into(),
+            path: path.into(),
+            query: Vec::new(),
+            headers: vec![("Authorization".into(), "Bearer dev-token".into())],
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn wf_json() -> String {
+        Workflow::new("wf")
+            .add_template(WorkTemplate::new("a"))
+            .add_template(WorkTemplate::new("b"))
+            .add_condition(Condition::always("a", "b"))
+            .entry("a")
+            .to_json()
+            .to_string()
+    }
+
+    #[test]
+    fn health_unauthenticated() {
+        let s = state();
+        let mut r = authed_req("GET", "/api/health", "");
+        r.headers.clear();
+        let resp = route(&s, r);
+        assert_eq!(resp.status, 200);
+    }
+
+    #[test]
+    fn auth_required_elsewhere() {
+        let s = state();
+        let mut r = authed_req("GET", "/api/metrics", "");
+        r.headers.clear();
+        assert_eq!(route(&s, r).status, 401);
+        let mut r = authed_req("GET", "/api/metrics", "");
+        r.headers = vec![("Authorization".into(), "Bearer wrong".into())];
+        assert_eq!(route(&s, r).status, 401);
+        assert_eq!(route(&s, authed_req("GET", "/api/metrics", "")).status, 200);
+    }
+
+    #[test]
+    fn submit_and_fetch_request() {
+        let s = state();
+        let body = format!(
+            r#"{{"name": "r1", "requester": "u", "kind": "DataCarousel", "workflow": {}}}"#,
+            wf_json()
+        );
+        let resp = route(&s, authed_req("POST", "/api/requests", &body));
+        assert_eq!(resp.status, 201);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let id = j.get("request_id").unwrap().as_u64().unwrap();
+
+        let resp = route(&s, authed_req("GET", &format!("/api/requests/{id}"), ""));
+        assert_eq!(resp.status, 200);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("New"));
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("DataCarousel"));
+
+        let resp = route(&s, authed_req("GET", &format!("/api/requests/{id}/summary"), ""));
+        assert_eq!(resp.status, 200);
+    }
+
+    #[test]
+    fn submit_rejects_invalid_workflow() {
+        let s = state();
+        let body = r#"{"name": "r", "requester": "u", "workflow": {"name": "x", "entries": ["ghost"]}}"#;
+        let resp = route(&s, authed_req("POST", "/api/requests", body));
+        assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn list_by_status() {
+        let s = state();
+        let body = format!(
+            r#"{{"name": "r1", "requester": "u", "workflow": {}}}"#,
+            wf_json()
+        );
+        route(&s, authed_req("POST", "/api/requests", &body));
+        let mut r = authed_req("GET", "/api/requests", "");
+        r.query = vec![("status".into(), "New".into())];
+        let resp = route(&s, r);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("ids").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn message_flow_over_rest() {
+        let s = state();
+        let resp = route(
+            &s,
+            authed_req("POST", "/api/subscriptions", r#"{"topic": "idds.out"}"#),
+        );
+        let sub = parse(std::str::from_utf8(&resp.body).unwrap())
+            .unwrap()
+            .get("sub")
+            .unwrap()
+            .as_u64()
+            .unwrap();
+        s.broker.publish("idds.out", Json::obj().set("file", "f1"));
+
+        let mut r = authed_req("GET", "/api/messages", "");
+        r.query = vec![("sub".into(), sub.to_string()), ("max".into(), "10".into())];
+        let resp = route(&s, r);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let msgs = j.get("messages").unwrap().as_arr().unwrap();
+        assert_eq!(msgs.len(), 1);
+        let mid = msgs[0].get("id").unwrap().as_u64().unwrap();
+
+        let resp = route(
+            &s,
+            authed_req(
+                "POST",
+                "/api/messages/ack",
+                &format!(r#"{{"sub": {sub}, "msg": {mid}}}"#),
+            ),
+        );
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("acked").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn cancel_request_over_rest() {
+        let s = state();
+        let body = format!(
+            r#"{{"name": "r1", "requester": "u", "workflow": {}}}"#,
+            wf_json()
+        );
+        let resp = route(&s, authed_req("POST", "/api/requests", &body));
+        let id = parse(std::str::from_utf8(&resp.body).unwrap())
+            .unwrap()
+            .get("request_id")
+            .unwrap()
+            .as_u64()
+            .unwrap();
+        let resp = route(&s, authed_req("POST", &format!("/api/requests/{id}/cancel"), ""));
+        assert_eq!(resp.status, 200);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("cancelled").unwrap().as_bool(), Some(true));
+        // idempotent: already terminal -> cancelled=false
+        let resp = route(&s, authed_req("POST", &format!("/api/requests/{id}/cancel"), ""));
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("cancelled").unwrap().as_bool(), Some(false));
+        // unknown id -> 404
+        let resp = route(&s, authed_req("POST", "/api/requests/999999/cancel", ""));
+        assert_eq!(resp.status, 404);
+    }
+
+    #[test]
+    fn unknown_route_404() {
+        let s = state();
+        assert_eq!(route(&s, authed_req("GET", "/api/nope", "")).status, 404);
+        assert_eq!(
+            route(&s, authed_req("GET", "/api/requests/notanum", "")).status,
+            400
+        );
+        assert_eq!(
+            route(&s, authed_req("GET", "/api/requests/999999", "")).status,
+            404
+        );
+    }
+}

@@ -1,0 +1,224 @@
+//! Thread-safe handle over the PJRT [`Engine`].
+//!
+//! The `xla` crate's client/executable types hold `Rc`s and raw pointers —
+//! they are neither `Send` nor `Sync` — but the iDDS daemons execute
+//! payloads from a worker pool. [`EngineHandle`] runs the Engine on a
+//! dedicated actor thread and forwards calls over a channel; the handle
+//! itself is cheap to clone and fully `Send + Sync`. Execution requests
+//! are serialized at the actor (PJRT's CPU backend parallelizes *inside*
+//! each execution), which measurements in EXPERIMENTS.md §Perf show is not
+//! the bottleneck for the HPO service.
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::manifest::{EntrySpec, Manifest};
+use super::{Engine, Proposal, TrainOutcome};
+
+enum Call {
+    Execute {
+        entry: String,
+        inputs: Vec<Vec<f32>>,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe engine facade.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Arc<Mutex<mpsc::Sender<Call>>>,
+    manifest: Arc<Manifest>,
+    _joiner: Arc<Joiner>,
+}
+
+struct Joiner {
+    tx: mpsc::Sender<Call>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for Joiner {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Call::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl EngineHandle {
+    /// Load the artifacts on a dedicated actor thread.
+    pub fn start(dir: &std::path::Path) -> Result<EngineHandle> {
+        let manifest = Arc::new(Manifest::load(&dir.join("manifest.json"))?);
+        let dir: PathBuf = dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Call>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-actor".into())
+            .spawn(move || {
+                let engine = match Engine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(call) = rx.recv() {
+                    match call {
+                        Call::Execute { entry, inputs, reply } => {
+                            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+                            let _ = reply.send(engine.execute_f32(&entry, &refs));
+                        }
+                        Call::Shutdown => break,
+                    }
+                }
+            })
+            .context("spawn pjrt actor")?;
+        ready_rx
+            .recv()
+            .context("pjrt actor died during load")??;
+        Ok(EngineHandle {
+            tx: Arc::new(Mutex::new(tx.clone())),
+            manifest,
+            _joiner: Arc::new(Joiner {
+                tx,
+                handle: Mutex::new(Some(handle)),
+            }),
+        })
+    }
+
+    pub fn spec(&self, entry: &str) -> Option<&EntrySpec> {
+        self.manifest.entries.get(entry)
+    }
+
+    pub fn entry_names(&self) -> Vec<String> {
+        self.manifest.entries.keys().cloned().collect()
+    }
+
+    pub fn execute_f32(&self, entry: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Call::Execute {
+                entry: entry.to_string(),
+                inputs,
+                reply,
+            })
+            .context("pjrt actor gone")?;
+        rx.recv().context("pjrt actor dropped reply")?
+    }
+
+    /// See [`Engine::gp_propose`].
+    pub fn gp_propose(
+        &self,
+        x_obs: &[f32],
+        y_obs: &[f32],
+        mask: &[f32],
+        x_cand: &[f32],
+        params: &[f32; 4],
+    ) -> Result<Proposal> {
+        let outs = self.execute_f32(
+            "gp_propose",
+            vec![
+                x_obs.to_vec(),
+                y_obs.to_vec(),
+                mask.to_vec(),
+                x_cand.to_vec(),
+                params.to_vec(),
+            ],
+        )?;
+        let mut it = outs.into_iter();
+        Ok(Proposal {
+            mu: it.next().unwrap(),
+            var: it.next().unwrap(),
+            ei: it.next().unwrap(),
+        })
+    }
+
+    /// See [`Engine::mlp_train`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn mlp_train(
+        &self,
+        hparams: &[f32; 4],
+        xtr: &[f32],
+        ytr: &[f32],
+        xval: &[f32],
+        yval: &[f32],
+        w1: &[f32],
+        b1: &[f32],
+        w2: &[f32],
+        b2: &[f32],
+    ) -> Result<TrainOutcome> {
+        let outs = self.execute_f32(
+            "mlp_train",
+            vec![
+                hparams.to_vec(),
+                xtr.to_vec(),
+                ytr.to_vec(),
+                xval.to_vec(),
+                yval.to_vec(),
+                w1.to_vec(),
+                b1.to_vec(),
+                w2.to_vec(),
+                b2.to_vec(),
+            ],
+        )?;
+        Ok(TrainOutcome {
+            val_loss: outs[0][0],
+            train_loss: outs[1][0],
+        })
+    }
+
+    /// See [`Engine::al_decision`].
+    pub fn al_decision(
+        &self,
+        stats: &[f32],
+        weights: &[f32],
+        bias: f32,
+        threshold: f32,
+    ) -> Result<(f32, bool)> {
+        let outs = self.execute_f32(
+            "al_decision",
+            vec![stats.to_vec(), weights.to_vec(), vec![bias], vec![threshold]],
+        )?;
+        Ok((outs[0][0], outs[1][0] > 0.5))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifacts_dir;
+
+    #[test]
+    fn handle_is_send_sync_and_works_across_threads() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("artifacts missing; run `make artifacts`");
+            return;
+        }
+        let h = EngineHandle::start(&dir).unwrap();
+        fn assert_send_sync<T: Send + Sync>(_: &T) {}
+        assert_send_sync(&h);
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    let stats = vec![i as f32; 8];
+                    let weights = vec![1.0f32; 8];
+                    h.al_decision(&stats, &weights, 0.0, 0.5).unwrap()
+                })
+            })
+            .collect();
+        for t in handles {
+            let (score, _) = t.join().unwrap();
+            assert!((0.0..=1.0).contains(&score));
+        }
+    }
+}

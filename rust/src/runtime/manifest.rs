@@ -1,0 +1,172 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EntrySpec {
+    pub file: String,
+    /// Ordered as the artifact's positional arguments.
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub consts: BTreeMap<String, u64>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    // Objects in our JSON model are BTreeMaps (sorted by key); aot.py dicts
+    // are insertion-ordered. To preserve positional order we rely on the
+    // python side emitting an explicit "order" array alongside, falling
+    // back to sorted order if absent.
+    let obj = j.as_obj().context("tensor spec map")?;
+    let mut out = Vec::new();
+    for (name, spec) in obj {
+        let shape = spec
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .context("spec.shape")?
+            .iter()
+            .map(|d| d.as_u64().map(|v| v as usize).context("dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = spec
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .unwrap_or("f32")
+            .to_string();
+        out.push(TensorSpec {
+            name: name.clone(),
+            shape,
+            dtype,
+        });
+    }
+    Ok(out)
+}
+
+fn ordered_tensor_specs(parent: &Json, key: &str) -> Result<Vec<TensorSpec>> {
+    let specs = tensor_specs(parent.get(key).context("specs")?)?;
+    // optional explicit ordering: "<key>_order": ["a", "b", ...]
+    if let Some(order) = parent
+        .get(&format!("{key}_order"))
+        .and_then(|o| o.as_arr())
+    {
+        let mut by_name: BTreeMap<String, TensorSpec> =
+            specs.into_iter().map(|s| (s.name.clone(), s)).collect();
+        let mut out = Vec::new();
+        for n in order {
+            let n = n.as_str().context("order entry")?;
+            out.push(
+                by_name
+                    .remove(n)
+                    .with_context(|| format!("order references unknown tensor '{n}'"))?,
+            );
+        }
+        if !by_name.is_empty() {
+            bail!("order is missing tensors: {:?}", by_name.keys());
+        }
+        return Ok(out);
+    }
+    Ok(specs)
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse_str(&text)
+    }
+
+    pub fn parse_str(text: &str) -> Result<Manifest> {
+        let j = parse(text).context("manifest json")?;
+        let format = j.get("format").and_then(|f| f.as_str()).unwrap_or("");
+        if format != "hlo-text" {
+            bail!("unsupported manifest format '{format}' (want hlo-text)");
+        }
+        let mut entries = BTreeMap::new();
+        let ents = j.get("entries").and_then(|e| e.as_obj()).context("entries")?;
+        for (name, ej) in ents {
+            let file = ej.get("file").and_then(|f| f.as_str()).context("entry.file")?;
+            let inputs = ordered_tensor_specs(ej, "inputs")?;
+            let outputs = ordered_tensor_specs(ej, "outputs")?;
+            let mut consts = BTreeMap::new();
+            if let Some(c) = ej.get("consts").and_then(|c| c.as_obj()) {
+                for (k, v) in c {
+                    consts.insert(k.clone(), v.as_u64().context("const value")?);
+                }
+            }
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    file: file.to_string(),
+                    inputs,
+                    outputs,
+                    consts,
+                },
+            );
+        }
+        Ok(Manifest { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": "hlo-text",
+        "entries": {
+            "f": {
+                "file": "f.hlo.txt",
+                "inputs": {"b": {"shape": [2, 3], "dtype": "f32"},
+                           "a": {"shape": [], "dtype": "f32"}},
+                "inputs_order": ["a", "b"],
+                "outputs": {"y": {"shape": [6], "dtype": "f32"}},
+                "consts": {"n": 6}
+            }
+        }
+    }"#;
+
+    #[test]
+    fn parses_with_explicit_order() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        let e = &m.entries["f"];
+        assert_eq!(e.inputs[0].name, "a");
+        assert_eq!(e.inputs[1].name, "b");
+        assert_eq!(e.inputs[1].numel(), 6);
+        assert_eq!(e.inputs[0].numel(), 1, "scalar numel is 1");
+        assert_eq!(e.outputs[0].shape, vec![6]);
+        assert_eq!(e.consts["n"], 6);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse_str(r#"{"format": "protobuf", "entries": {}}"#).is_err());
+        assert!(Manifest::parse_str("not json").is_err());
+    }
+
+    #[test]
+    fn order_must_be_complete() {
+        let bad = SAMPLE.replace(r#""inputs_order": ["a", "b"],"#, r#""inputs_order": ["a"],"#);
+        assert!(Manifest::parse_str(&bad).is_err());
+    }
+}

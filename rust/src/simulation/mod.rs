@@ -1,0 +1,107 @@
+//! Workload generators + scenario presets shared by examples and benches.
+//!
+//! Everything the paper's production environment supplied (reprocessing
+//! campaigns on tape, Rubin payload DAGs, HPO task mixes) is synthesized
+//! here with explicit seeds so every figure is regenerable bit-for-bit.
+
+use crate::carousel::{CampaignSpec, CarouselConfig, Granularity};
+
+/// Named campaign scenarios (bench arguments map onto these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// quick CI-sized run
+    Smoke,
+    /// the Fig. 4 / Fig. 5 default: a mid-size reprocessing slice
+    Reprocessing,
+    /// stress: many small files (granularity matters most here)
+    SmallFiles,
+    /// few huge files (tape bandwidth dominated)
+    BigFiles,
+}
+
+impl Scenario {
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s {
+            "smoke" => Some(Scenario::Smoke),
+            "reprocessing" => Some(Scenario::Reprocessing),
+            "smallfiles" => Some(Scenario::SmallFiles),
+            "bigfiles" => Some(Scenario::BigFiles),
+            _ => None,
+        }
+    }
+
+    pub fn campaign(&self) -> CampaignSpec {
+        match self {
+            Scenario::Smoke => CampaignSpec {
+                datasets: 2,
+                files_per_dataset: 100,
+                mean_file_mb: 1000.0,
+                cartridges_per_dataset: 2,
+                seed: 7,
+            },
+            Scenario::Reprocessing => CampaignSpec {
+                datasets: 6,
+                files_per_dataset: 800,
+                mean_file_mb: 2000.0,
+                cartridges_per_dataset: 4,
+                seed: 7,
+            },
+            Scenario::SmallFiles => CampaignSpec {
+                datasets: 4,
+                files_per_dataset: 3000,
+                mean_file_mb: 200.0,
+                cartridges_per_dataset: 6,
+                seed: 7,
+            },
+            Scenario::BigFiles => CampaignSpec {
+                datasets: 2,
+                files_per_dataset: 150,
+                mean_file_mb: 20000.0,
+                cartridges_per_dataset: 3,
+                seed: 7,
+            },
+        }
+    }
+
+    pub fn config(&self, granularity: Granularity) -> CarouselConfig {
+        let mut cfg = CarouselConfig {
+            granularity,
+            ..Default::default()
+        };
+        if *self == Scenario::Smoke {
+            cfg.tape_drives = 2;
+            cfg.sites = 2;
+            cfg.slots_per_site = 16;
+        }
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carousel::run_campaign;
+
+    #[test]
+    fn scenario_parse_roundtrip() {
+        for (name, s) in [
+            ("smoke", Scenario::Smoke),
+            ("reprocessing", Scenario::Reprocessing),
+            ("smallfiles", Scenario::SmallFiles),
+            ("bigfiles", Scenario::BigFiles),
+        ] {
+            assert_eq!(Scenario::parse(name), Some(s));
+        }
+        assert_eq!(Scenario::parse("nope"), None);
+    }
+
+    #[test]
+    fn smoke_scenario_runs_both_modes() {
+        let spec = Scenario::Smoke.campaign();
+        for g in [Granularity::Coarse, Granularity::Fine] {
+            let r = run_campaign(&Scenario::Smoke.config(g), &spec);
+            assert_eq!(r.files, 200);
+            assert!(r.makespan_s > 0.0);
+        }
+    }
+}

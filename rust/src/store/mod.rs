@@ -1,0 +1,967 @@
+//! The iDDS state store: requests, transforms, processings, collections,
+//! contents, messages.
+//!
+//! In production iDDS this is an Oracle/PostgreSQL schema; here it is an
+//! in-memory concurrent store with per-table `RwLock`s and secondary
+//! status indexes, because the five daemons poll by status
+//! (`fetch Requests in New`, `fetch Processings in Submitted`, ...) at
+//! high rates during simulation. All status updates go through
+//! transition-validated methods — illegal transitions return
+//! [`StoreError::IllegalTransition`] and leave state untouched.
+
+pub mod snapshot;
+pub mod types;
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::{Arc, RwLock};
+
+use crate::util::clock::Clock;
+use crate::util::json::Json;
+
+pub use types::*;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum StoreError {
+    #[error("no such {kind} {id}")]
+    NotFound { kind: &'static str, id: Id },
+    #[error("illegal {kind} transition {from} -> {to} (id {id})")]
+    IllegalTransition {
+        kind: &'static str,
+        id: Id,
+        from: String,
+        to: String,
+    },
+}
+
+pub type Result<T> = std::result::Result<T, StoreError>;
+
+/// One table: records + a status index.
+struct Table<R, S: Copy + Eq + std::hash::Hash> {
+    rows: HashMap<Id, R>,
+    by_status: HashMap<S, HashSet<Id>>,
+}
+
+impl<R, S: Copy + Eq + std::hash::Hash> Default for Table<R, S> {
+    fn default() -> Self {
+        Table {
+            rows: HashMap::new(),
+            by_status: HashMap::new(),
+        }
+    }
+}
+
+impl<R, S: Copy + Eq + std::hash::Hash> Table<R, S> {
+    fn insert(&mut self, id: Id, status: S, rec: R) {
+        self.rows.insert(id, rec);
+        self.by_status.entry(status).or_default().insert(id);
+    }
+
+    fn reindex(&mut self, id: Id, from: S, to: S) {
+        if let Some(set) = self.by_status.get_mut(&from) {
+            set.remove(&id);
+        }
+        self.by_status.entry(to).or_default().insert(id);
+    }
+
+    fn ids_with_status(&self, s: S) -> Vec<Id> {
+        self.by_status
+            .get(&s)
+            .map(|set| {
+                let mut v: Vec<Id> = set.iter().copied().collect();
+                v.sort_unstable();
+                v
+            })
+            .unwrap_or_default()
+    }
+}
+
+/// The store. Cheap to clone (Arc inside); shared by daemons, REST
+/// handlers and use-case drivers.
+#[derive(Clone)]
+pub struct Store {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    clock: Arc<dyn Clock>,
+    requests: RwLock<Table<RequestRec, RequestStatus>>,
+    transforms: RwLock<Table<TransformRec, TransformStatus>>,
+    processings: RwLock<Table<ProcessingRec, ProcessingStatus>>,
+    collections: RwLock<HashMap<Id, CollectionRec>>,
+    /// contents keyed by id, with a per-collection index and per-collection
+    /// status counters (the carousel polls "how many Available in coll X"
+    /// constantly — keep it O(1)).
+    contents: RwLock<ContentsTable>,
+    messages: RwLock<Table<MessageRec, MessageStatus>>,
+    /// transform -> collections index
+    coll_by_transform: RwLock<HashMap<Id, Vec<Id>>>,
+    /// request -> transforms index
+    tf_by_request: RwLock<HashMap<Id, Vec<Id>>>,
+}
+
+#[derive(Default)]
+struct ContentsTable {
+    rows: HashMap<Id, ContentRec>,
+    by_collection: HashMap<Id, Vec<Id>>,
+    by_coll_status: HashMap<(Id, ContentStatus), HashSet<Id>>,
+}
+
+impl Store {
+    pub fn new(clock: Arc<dyn Clock>) -> Self {
+        Store {
+            inner: Arc::new(Inner {
+                clock,
+                requests: RwLock::new(Table::default()),
+                transforms: RwLock::new(Table::default()),
+                processings: RwLock::new(Table::default()),
+                collections: RwLock::new(HashMap::new()),
+                contents: RwLock::new(ContentsTable::default()),
+                messages: RwLock::new(Table::default()),
+                coll_by_transform: RwLock::new(HashMap::new()),
+                tf_by_request: RwLock::new(HashMap::new()),
+            }),
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.inner.clock.now()
+    }
+
+    // -- raw inserts (snapshot restore only: preserve ids + statuses) -------
+
+    pub(crate) fn insert_request_raw(
+        &self,
+        id: Id,
+        name: &str,
+        requester: &str,
+        kind: RequestKind,
+        status: RequestStatus,
+        workflow: Json,
+    ) {
+        let now = self.now();
+        let rec = RequestRec {
+            id,
+            name: name.to_string(),
+            requester: requester.to_string(),
+            kind,
+            status,
+            workflow,
+            created_at: now,
+            updated_at: now,
+        };
+        self.inner.requests.write().unwrap().insert(id, status, rec);
+    }
+
+    pub(crate) fn insert_transform_raw(
+        &self,
+        id: Id,
+        request_id: Id,
+        name: &str,
+        status: TransformStatus,
+        work: Json,
+        retries: u32,
+    ) {
+        let now = self.now();
+        let rec = TransformRec {
+            id,
+            request_id,
+            name: name.to_string(),
+            status,
+            work,
+            retries,
+            created_at: now,
+            updated_at: now,
+        };
+        self.inner.transforms.write().unwrap().insert(id, status, rec);
+        self.inner
+            .tf_by_request
+            .write()
+            .unwrap()
+            .entry(request_id)
+            .or_default()
+            .push(id);
+    }
+
+    pub(crate) fn insert_collection_raw(
+        &self,
+        id: Id,
+        transform_id: Id,
+        name: &str,
+        kind: CollectionKind,
+        status: CollectionStatus,
+    ) {
+        let rec = CollectionRec {
+            id,
+            transform_id,
+            name: name.to_string(),
+            kind,
+            status,
+            created_at: self.now(),
+        };
+        self.inner.collections.write().unwrap().insert(id, rec);
+        self.inner
+            .coll_by_transform
+            .write()
+            .unwrap()
+            .entry(transform_id)
+            .or_default()
+            .push(id);
+    }
+
+    pub(crate) fn insert_content_raw(
+        &self,
+        id: Id,
+        collection_id: Id,
+        name: &str,
+        size_bytes: u64,
+        status: ContentStatus,
+    ) {
+        let mut t = self.inner.contents.write().unwrap();
+        t.rows.insert(
+            id,
+            ContentRec {
+                id,
+                collection_id,
+                name: name.to_string(),
+                size_bytes,
+                status,
+                ddm_file: None,
+                updated_at: self.now(),
+            },
+        );
+        t.by_collection.entry(collection_id).or_default().push(id);
+        t.by_coll_status
+            .entry((collection_id, status))
+            .or_default()
+            .insert(id);
+    }
+
+    // -- requests -----------------------------------------------------------
+
+    pub fn add_request(
+        &self,
+        name: &str,
+        requester: &str,
+        kind: RequestKind,
+        workflow: Json,
+    ) -> Id {
+        let id = crate::util::next_id();
+        let now = self.now();
+        let rec = RequestRec {
+            id,
+            name: name.to_string(),
+            requester: requester.to_string(),
+            kind,
+            status: RequestStatus::New,
+            workflow,
+            created_at: now,
+            updated_at: now,
+        };
+        self.inner
+            .requests
+            .write()
+            .unwrap()
+            .insert(id, RequestStatus::New, rec);
+        id
+    }
+
+    pub fn get_request(&self, id: Id) -> Result<RequestRec> {
+        self.inner
+            .requests
+            .read()
+            .unwrap()
+            .rows
+            .get(&id)
+            .cloned()
+            .ok_or(StoreError::NotFound { kind: "request", id })
+    }
+
+    pub fn requests_with_status(&self, s: RequestStatus) -> Vec<Id> {
+        self.inner.requests.read().unwrap().ids_with_status(s)
+    }
+
+    pub fn update_request_status(&self, id: Id, to: RequestStatus) -> Result<()> {
+        let now = self.now();
+        let mut t = self.inner.requests.write().unwrap();
+        let rec = t
+            .rows
+            .get_mut(&id)
+            .ok_or(StoreError::NotFound { kind: "request", id })?;
+        let from = rec.status;
+        if !RequestStatus::can_transition(from, to) {
+            return Err(StoreError::IllegalTransition {
+                kind: "request",
+                id,
+                from: from.to_string(),
+                to: to.to_string(),
+            });
+        }
+        rec.status = to;
+        rec.updated_at = now;
+        t.reindex(id, from, to);
+        Ok(())
+    }
+
+    /// Cancel a request and its non-terminal transforms/processings (the
+    /// head service's abort path). Terminal requests are left untouched
+    /// and reported as `false`.
+    pub fn cancel_request(&self, id: Id) -> Result<bool> {
+        let req = self.get_request(id)?;
+        if req.status.is_terminal() {
+            return Ok(false);
+        }
+        for tf in self.transforms_of_request(id) {
+            for pid in self.processings_of_transform(tf) {
+                let _ = self.update_processing_status(pid, ProcessingStatus::Cancelled);
+            }
+            let _ = self.update_transform_status(tf, TransformStatus::Cancelled);
+        }
+        self.update_request_status(id, RequestStatus::Cancelled)?;
+        Ok(true)
+    }
+
+    // -- transforms ---------------------------------------------------------
+
+    pub fn add_transform(&self, request_id: Id, name: &str, work: Json) -> Id {
+        let id = crate::util::next_id();
+        let now = self.now();
+        let rec = TransformRec {
+            id,
+            request_id,
+            name: name.to_string(),
+            status: TransformStatus::New,
+            work,
+            retries: 0,
+            created_at: now,
+            updated_at: now,
+        };
+        self.inner
+            .transforms
+            .write()
+            .unwrap()
+            .insert(id, TransformStatus::New, rec);
+        self.inner
+            .tf_by_request
+            .write()
+            .unwrap()
+            .entry(request_id)
+            .or_default()
+            .push(id);
+        id
+    }
+
+    pub fn get_transform(&self, id: Id) -> Result<TransformRec> {
+        self.inner
+            .transforms
+            .read()
+            .unwrap()
+            .rows
+            .get(&id)
+            .cloned()
+            .ok_or(StoreError::NotFound { kind: "transform", id })
+    }
+
+    pub fn transforms_with_status(&self, s: TransformStatus) -> Vec<Id> {
+        self.inner.transforms.read().unwrap().ids_with_status(s)
+    }
+
+    pub fn transforms_of_request(&self, request_id: Id) -> Vec<Id> {
+        self.inner
+            .tf_by_request
+            .read()
+            .unwrap()
+            .get(&request_id)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    pub fn update_transform_status(&self, id: Id, to: TransformStatus) -> Result<()> {
+        let now = self.now();
+        let mut t = self.inner.transforms.write().unwrap();
+        let rec = t
+            .rows
+            .get_mut(&id)
+            .ok_or(StoreError::NotFound { kind: "transform", id })?;
+        let from = rec.status;
+        if !TransformStatus::can_transition(from, to) {
+            return Err(StoreError::IllegalTransition {
+                kind: "transform",
+                id,
+                from: from.to_string(),
+                to: to.to_string(),
+            });
+        }
+        rec.status = to;
+        rec.updated_at = now;
+        t.reindex(id, from, to);
+        Ok(())
+    }
+
+    /// Update the serialized Work payload (Marshaller rewrites parameters).
+    pub fn update_transform_work(&self, id: Id, work: Json) -> Result<()> {
+        let mut t = self.inner.transforms.write().unwrap();
+        let rec = t
+            .rows
+            .get_mut(&id)
+            .ok_or(StoreError::NotFound { kind: "transform", id })?;
+        rec.work = work;
+        rec.updated_at = self.inner.clock.now();
+        Ok(())
+    }
+
+    pub fn bump_transform_retries(&self, id: Id) -> Result<u32> {
+        let mut t = self.inner.transforms.write().unwrap();
+        let rec = t
+            .rows
+            .get_mut(&id)
+            .ok_or(StoreError::NotFound { kind: "transform", id })?;
+        rec.retries += 1;
+        Ok(rec.retries)
+    }
+
+    // -- processings --------------------------------------------------------
+
+    pub fn add_processing(&self, transform_id: Id) -> Id {
+        let id = crate::util::next_id();
+        let now = self.now();
+        let rec = ProcessingRec {
+            id,
+            transform_id,
+            status: ProcessingStatus::New,
+            wfm_task: None,
+            submitted_at: None,
+            finished_at: None,
+            created_at: now,
+            updated_at: now,
+        };
+        self.inner
+            .processings
+            .write()
+            .unwrap()
+            .insert(id, ProcessingStatus::New, rec);
+        id
+    }
+
+    pub fn get_processing(&self, id: Id) -> Result<ProcessingRec> {
+        self.inner
+            .processings
+            .read()
+            .unwrap()
+            .rows
+            .get(&id)
+            .cloned()
+            .ok_or(StoreError::NotFound { kind: "processing", id })
+    }
+
+    pub fn processings_with_status(&self, s: ProcessingStatus) -> Vec<Id> {
+        self.inner.processings.read().unwrap().ids_with_status(s)
+    }
+
+    pub fn processings_of_transform(&self, transform_id: Id) -> Vec<Id> {
+        let t = self.inner.processings.read().unwrap();
+        let mut v: Vec<Id> = t
+            .rows
+            .values()
+            .filter(|p| p.transform_id == transform_id)
+            .map(|p| p.id)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn update_processing_status(&self, id: Id, to: ProcessingStatus) -> Result<()> {
+        let now = self.now();
+        let mut t = self.inner.processings.write().unwrap();
+        let rec = t
+            .rows
+            .get_mut(&id)
+            .ok_or(StoreError::NotFound { kind: "processing", id })?;
+        let from = rec.status;
+        if !ProcessingStatus::can_transition(from, to) {
+            return Err(StoreError::IllegalTransition {
+                kind: "processing",
+                id,
+                from: from.to_string(),
+                to: to.to_string(),
+            });
+        }
+        rec.status = to;
+        rec.updated_at = now;
+        if to == ProcessingStatus::Submitted && rec.submitted_at.is_none() {
+            rec.submitted_at = Some(now);
+        }
+        if to.is_terminal() {
+            rec.finished_at = Some(now);
+        }
+        t.reindex(id, from, to);
+        Ok(())
+    }
+
+    pub fn set_processing_wfm_task(&self, id: Id, task: Id) -> Result<()> {
+        let mut t = self.inner.processings.write().unwrap();
+        let rec = t
+            .rows
+            .get_mut(&id)
+            .ok_or(StoreError::NotFound { kind: "processing", id })?;
+        rec.wfm_task = Some(task);
+        Ok(())
+    }
+
+    // -- collections & contents ----------------------------------------------
+
+    pub fn add_collection(&self, transform_id: Id, name: &str, kind: CollectionKind) -> Id {
+        let id = crate::util::next_id();
+        let rec = CollectionRec {
+            id,
+            transform_id,
+            name: name.to_string(),
+            kind,
+            status: CollectionStatus::Open,
+            created_at: self.now(),
+        };
+        self.inner.collections.write().unwrap().insert(id, rec);
+        self.inner
+            .coll_by_transform
+            .write()
+            .unwrap()
+            .entry(transform_id)
+            .or_default()
+            .push(id);
+        id
+    }
+
+    pub fn get_collection(&self, id: Id) -> Result<CollectionRec> {
+        self.inner
+            .collections
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or(StoreError::NotFound { kind: "collection", id })
+    }
+
+    pub fn collections_of_transform(&self, transform_id: Id) -> Vec<CollectionRec> {
+        let by_tf = self.inner.coll_by_transform.read().unwrap();
+        let colls = self.inner.collections.read().unwrap();
+        by_tf
+            .get(&transform_id)
+            .map(|ids| ids.iter().filter_map(|i| colls.get(i).cloned()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn close_collection(&self, id: Id) -> Result<()> {
+        let mut colls = self.inner.collections.write().unwrap();
+        let rec = colls
+            .get_mut(&id)
+            .ok_or(StoreError::NotFound { kind: "collection", id })?;
+        rec.status = CollectionStatus::Closed;
+        Ok(())
+    }
+
+    /// Bulk-register contents (file-level granularity is the whole point of
+    /// the paper's carousel optimization — this is called with O(100k) rows).
+    pub fn add_contents(
+        &self,
+        collection_id: Id,
+        files: impl IntoIterator<Item = (String, u64)>,
+    ) -> Vec<Id> {
+        let now = self.now();
+        let mut t = self.inner.contents.write().unwrap();
+        let mut ids = Vec::new();
+        for (name, size_bytes) in files {
+            let id = crate::util::next_id();
+            t.rows.insert(
+                id,
+                ContentRec {
+                    id,
+                    collection_id,
+                    name,
+                    size_bytes,
+                    status: ContentStatus::New,
+                    ddm_file: None,
+                    updated_at: now,
+                },
+            );
+            t.by_collection.entry(collection_id).or_default().push(id);
+            t.by_coll_status
+                .entry((collection_id, ContentStatus::New))
+                .or_default()
+                .insert(id);
+            ids.push(id);
+        }
+        ids
+    }
+
+    pub fn get_content(&self, id: Id) -> Result<ContentRec> {
+        self.inner
+            .contents
+            .read()
+            .unwrap()
+            .rows
+            .get(&id)
+            .cloned()
+            .ok_or(StoreError::NotFound { kind: "content", id })
+    }
+
+    pub fn contents_of_collection(&self, collection_id: Id) -> Vec<Id> {
+        self.inner
+            .contents
+            .read()
+            .unwrap()
+            .by_collection
+            .get(&collection_id)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    pub fn contents_with_status(&self, collection_id: Id, s: ContentStatus) -> Vec<Id> {
+        self.inner
+            .contents
+            .read()
+            .unwrap()
+            .by_coll_status
+            .get(&(collection_id, s))
+            .map(|set| {
+                let mut v: Vec<Id> = set.iter().copied().collect();
+                v.sort_unstable();
+                v
+            })
+            .unwrap_or_default()
+    }
+
+    pub fn count_contents(&self, collection_id: Id, s: ContentStatus) -> usize {
+        self.inner
+            .contents
+            .read()
+            .unwrap()
+            .by_coll_status
+            .get(&(collection_id, s))
+            .map(|set| set.len())
+            .unwrap_or(0)
+    }
+
+    pub fn set_content_ddm_file(&self, id: Id, ddm_file: Id) -> Result<()> {
+        let mut t = self.inner.contents.write().unwrap();
+        let rec = t
+            .rows
+            .get_mut(&id)
+            .ok_or(StoreError::NotFound { kind: "content", id })?;
+        rec.ddm_file = Some(ddm_file);
+        Ok(())
+    }
+
+    pub fn update_content_status(&self, id: Id, to: ContentStatus) -> Result<()> {
+        let now = self.now();
+        let mut t = self.inner.contents.write().unwrap();
+        let rec = t
+            .rows
+            .get_mut(&id)
+            .ok_or(StoreError::NotFound { kind: "content", id })?;
+        let from = rec.status;
+        if !ContentStatus::can_transition(from, to) {
+            return Err(StoreError::IllegalTransition {
+                kind: "content",
+                id,
+                from: from.to_string(),
+                to: to.to_string(),
+            });
+        }
+        rec.status = to;
+        rec.updated_at = now;
+        let coll = rec.collection_id;
+        if let Some(set) = t.by_coll_status.get_mut(&(coll, from)) {
+            set.remove(&id);
+        }
+        t.by_coll_status.entry((coll, to)).or_default().insert(id);
+        Ok(())
+    }
+
+    /// Bulk status update; returns how many actually moved (illegal
+    /// transitions are skipped, not errors — a poller may race a consumer).
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf, L3 iteration 3): index maintenance
+    /// is batched per (collection, from-status) run instead of two hash
+    /// lookups per item — bulk carousel updates are typically uniform, so
+    /// the per-item cost collapses to one HashSet op each.
+    pub fn update_contents_status(&self, ids: &[Id], to: ContentStatus) -> usize {
+        let now = self.now();
+        let mut t = self.inner.contents.write().unwrap();
+        // pass 1: mutate rows, collect moved ids grouped by (coll, from)
+        let mut moves: Vec<(Id, u8, Id)> = Vec::with_capacity(ids.len());
+        for &id in ids {
+            if let Some(rec) = t.rows.get_mut(&id) {
+                let from = rec.status;
+                if from != to && ContentStatus::can_transition(from, to) {
+                    rec.status = to;
+                    rec.updated_at = now;
+                    moves.push((rec.collection_id, from as u8, id));
+                }
+            }
+        }
+        let moved = moves.len();
+        moves.sort_unstable_by_key(|(c, f, _)| (*c, *f));
+        // pass 2: one index lookup per (coll, from) run
+        let mut i = 0;
+        while i < moves.len() {
+            let (coll, from_u8, _) = moves[i];
+            let mut j = i;
+            while j < moves.len() && moves[j].0 == coll && moves[j].1 == from_u8 {
+                j += 1;
+            }
+            let from = ContentStatus::ALL
+                .iter()
+                .copied()
+                .find(|s| *s as u8 == from_u8)
+                .unwrap();
+            if let Some(set) = t.by_coll_status.get_mut(&(coll, from)) {
+                for (_, _, id) in &moves[i..j] {
+                    set.remove(id);
+                }
+            }
+            let dest = t.by_coll_status.entry((coll, to)).or_default();
+            dest.reserve(j - i);
+            for (_, _, id) in &moves[i..j] {
+                dest.insert(*id);
+            }
+            i = j;
+        }
+        moved
+    }
+
+    // -- messages -------------------------------------------------------------
+
+    pub fn add_message(&self, topic: &str, source_transform: Option<Id>, payload: Json) -> Id {
+        let id = crate::util::next_id();
+        let rec = MessageRec {
+            id,
+            topic: topic.to_string(),
+            source_transform,
+            payload,
+            status: MessageStatus::New,
+            created_at: self.now(),
+        };
+        self.inner
+            .messages
+            .write()
+            .unwrap()
+            .insert(id, MessageStatus::New, rec);
+        id
+    }
+
+    pub fn messages_with_status(&self, s: MessageStatus) -> Vec<Id> {
+        self.inner.messages.read().unwrap().ids_with_status(s)
+    }
+
+    pub fn get_message(&self, id: Id) -> Result<MessageRec> {
+        self.inner
+            .messages
+            .read()
+            .unwrap()
+            .rows
+            .get(&id)
+            .cloned()
+            .ok_or(StoreError::NotFound { kind: "message", id })
+    }
+
+    pub fn mark_message(&self, id: Id, to: MessageStatus) -> Result<()> {
+        let mut t = self.inner.messages.write().unwrap();
+        let rec = t
+            .rows
+            .get_mut(&id)
+            .ok_or(StoreError::NotFound { kind: "message", id })?;
+        let from = rec.status;
+        rec.status = to;
+        t.reindex(id, from, to);
+        Ok(())
+    }
+
+    // -- stats ---------------------------------------------------------------
+
+    pub fn counts(&self) -> Json {
+        Json::obj()
+            .set("requests", self.inner.requests.read().unwrap().rows.len())
+            .set("transforms", self.inner.transforms.read().unwrap().rows.len())
+            .set(
+                "processings",
+                self.inner.processings.read().unwrap().rows.len(),
+            )
+            .set("collections", self.inner.collections.read().unwrap().len())
+            .set("contents", self.inner.contents.read().unwrap().rows.len())
+            .set("messages", self.inner.messages.read().unwrap().rows.len())
+    }
+
+    /// Request-level progress summary used by the REST catalog endpoints.
+    pub fn request_summary(&self, request_id: Id) -> Result<Json> {
+        let req = self.get_request(request_id)?;
+        let tfs = self.transforms_of_request(request_id);
+        let mut tf_arr = Vec::new();
+        for tf_id in &tfs {
+            let tf = self.get_transform(*tf_id)?;
+            let mut coll_arr = Vec::new();
+            for coll in self.collections_of_transform(*tf_id) {
+                let mut by_status = BTreeMap::new();
+                for s in ContentStatus::ALL {
+                    let n = self.count_contents(coll.id, *s);
+                    if n > 0 {
+                        by_status.insert(s.as_str().to_string(), Json::Num(n as f64));
+                    }
+                }
+                coll_arr.push(
+                    Json::obj()
+                        .set("id", coll.id)
+                        .set("name", coll.name.as_str())
+                        .set("kind", coll.kind.as_str())
+                        .set("contents", Json::Obj(by_status)),
+                );
+            }
+            tf_arr.push(
+                Json::obj()
+                    .set("id", *tf_id)
+                    .set("name", tf.name.as_str())
+                    .set("status", tf.status.as_str())
+                    .set("collections", Json::Arr(coll_arr)),
+            );
+        }
+        Ok(Json::obj()
+            .set("id", request_id)
+            .set("name", req.name.as_str())
+            .set("kind", req.kind.as_str())
+            .set("status", req.status.as_str())
+            .set("transforms", Json::Arr(tf_arr)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::WallClock;
+
+    fn store() -> Store {
+        Store::new(Arc::new(WallClock::new()))
+    }
+
+    #[test]
+    fn request_lifecycle() {
+        let s = store();
+        let id = s.add_request("reprocess-2020", "wguan", RequestKind::DataCarousel, Json::Null);
+        assert_eq!(s.get_request(id).unwrap().status, RequestStatus::New);
+        assert_eq!(s.requests_with_status(RequestStatus::New), vec![id]);
+        s.update_request_status(id, RequestStatus::Transforming).unwrap();
+        assert!(s.requests_with_status(RequestStatus::New).is_empty());
+        s.update_request_status(id, RequestStatus::Finished).unwrap();
+        // terminal: no way out
+        let err = s
+            .update_request_status(id, RequestStatus::Transforming)
+            .unwrap_err();
+        assert!(matches!(err, StoreError::IllegalTransition { .. }));
+    }
+
+    #[test]
+    fn illegal_transition_rejected_and_state_unchanged() {
+        let s = store();
+        let id = s.add_request("r", "u", RequestKind::Workflow, Json::Null);
+        assert!(s.update_request_status(id, RequestStatus::Finished).is_err());
+        assert_eq!(s.get_request(id).unwrap().status, RequestStatus::New);
+    }
+
+    #[test]
+    fn transform_indexes() {
+        let s = store();
+        let rid = s.add_request("r", "u", RequestKind::Workflow, Json::Null);
+        let t1 = s.add_transform(rid, "work-1", Json::Null);
+        let t2 = s.add_transform(rid, "work-2", Json::Null);
+        assert_eq!(s.transforms_of_request(rid), vec![t1, t2]);
+        s.update_transform_status(t1, TransformStatus::Activated).unwrap();
+        assert_eq!(s.transforms_with_status(TransformStatus::New), vec![t2]);
+        assert_eq!(s.transforms_with_status(TransformStatus::Activated), vec![t1]);
+    }
+
+    #[test]
+    fn contents_bulk_and_counters() {
+        let s = store();
+        let rid = s.add_request("r", "u", RequestKind::DataCarousel, Json::Null);
+        let tid = s.add_transform(rid, "w", Json::Null);
+        let cid = s.add_collection(tid, "in-ds", CollectionKind::Input);
+        let ids = s.add_contents(cid, (0..1000).map(|i| (format!("f{i}"), 1_000_000)));
+        assert_eq!(ids.len(), 1000);
+        assert_eq!(s.count_contents(cid, ContentStatus::New), 1000);
+        let moved = s.update_contents_status(&ids[..300], ContentStatus::Staging);
+        assert_eq!(moved, 300);
+        assert_eq!(s.count_contents(cid, ContentStatus::New), 700);
+        assert_eq!(s.count_contents(cid, ContentStatus::Staging), 300);
+        // bulk update skips illegal transitions instead of failing
+        let moved = s.update_contents_status(&ids, ContentStatus::Available);
+        assert_eq!(moved, 1000); // New->Available and Staging->Available both legal
+        assert_eq!(s.count_contents(cid, ContentStatus::Available), 1000);
+    }
+
+    #[test]
+    fn processing_timestamps() {
+        let s = store();
+        let rid = s.add_request("r", "u", RequestKind::Workflow, Json::Null);
+        let tid = s.add_transform(rid, "w", Json::Null);
+        let pid = s.add_processing(tid);
+        s.update_processing_status(pid, ProcessingStatus::Submitting).unwrap();
+        s.update_processing_status(pid, ProcessingStatus::Submitted).unwrap();
+        let p = s.get_processing(pid).unwrap();
+        assert!(p.submitted_at.is_some() && p.finished_at.is_none());
+        s.update_processing_status(pid, ProcessingStatus::Running).unwrap();
+        s.update_processing_status(pid, ProcessingStatus::Finished).unwrap();
+        assert!(s.get_processing(pid).unwrap().finished_at.is_some());
+    }
+
+    #[test]
+    fn messages_flow() {
+        let s = store();
+        let id = s.add_message("idds.output", None, Json::obj().set("file", "f1"));
+        assert_eq!(s.messages_with_status(MessageStatus::New), vec![id]);
+        s.mark_message(id, MessageStatus::Delivered).unwrap();
+        s.mark_message(id, MessageStatus::Acked).unwrap();
+        assert!(s.messages_with_status(MessageStatus::New).is_empty());
+        assert_eq!(s.get_message(id).unwrap().status, MessageStatus::Acked);
+    }
+
+    #[test]
+    fn request_summary_shape() {
+        let s = store();
+        let rid = s.add_request("r", "u", RequestKind::DataCarousel, Json::Null);
+        let tid = s.add_transform(rid, "w", Json::Null);
+        let cid = s.add_collection(tid, "in", CollectionKind::Input);
+        s.add_contents(cid, vec![("a".into(), 1), ("b".into(), 2)]);
+        let sum = s.request_summary(rid).unwrap();
+        assert_eq!(sum.get("status").unwrap().as_str(), Some("New"));
+        let tfs = sum.get("transforms").unwrap().as_arr().unwrap();
+        assert_eq!(tfs.len(), 1);
+        let colls = tfs[0].get("collections").unwrap().as_arr().unwrap();
+        assert_eq!(
+            colls[0].get_path(&["contents", "New"]).unwrap().as_u64(),
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn concurrent_status_updates_consistent() {
+        let s = store();
+        let rid = s.add_request("r", "u", RequestKind::DataCarousel, Json::Null);
+        let tid = s.add_transform(rid, "w", Json::Null);
+        let cid = s.add_collection(tid, "in", CollectionKind::Input);
+        let ids = s.add_contents(cid, (0..4000).map(|i| (format!("f{i}"), 1)));
+        let chunks: Vec<Vec<Id>> = ids.chunks(1000).map(|c| c.to_vec()).collect();
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|chunk| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    s.update_contents_status(&chunk, ContentStatus::Staging);
+                    s.update_contents_status(&chunk, ContentStatus::Available);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.count_contents(cid, ContentStatus::Available), 4000);
+        assert_eq!(s.count_contents(cid, ContentStatus::New), 0);
+        assert_eq!(s.count_contents(cid, ContentStatus::Staging), 0);
+    }
+}

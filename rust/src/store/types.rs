@@ -1,0 +1,372 @@
+//! Record types of the iDDS state store.
+//!
+//! Mirrors the production iDDS relational schema at the granularity the
+//! paper describes (section 2): a client **Request** carries a serialized
+//! Workflow; the Marshaller splits it into **Transforms** (one per Work);
+//! the Transformer attaches input/output **Collections** and their
+//! file-level **Contents** and creates **Processings**; the Carrier tracks
+//! each Processing in the WFM; the Conductor emits **Messages** when
+//! output contents become available.
+//!
+//! Every status enum has an explicit legal-transition relation; the store
+//! rejects illegal transitions — a property test in `rust/tests`
+//! hammers this.
+
+use crate::util::json::Json;
+
+pub type Id = u64;
+
+// ---------------------------------------------------------------------------
+// Status enums + transition relations
+// ---------------------------------------------------------------------------
+
+macro_rules! status_enum {
+    ($name:ident { $($var:ident),+ $(,)? }) => {
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+        pub enum $name {
+            $($var),+
+        }
+
+        impl $name {
+            pub fn as_str(&self) -> &'static str {
+                match self {
+                    $(Self::$var => stringify!($var)),+
+                }
+            }
+
+            pub fn parse(s: &str) -> Option<Self> {
+                match s {
+                    $(stringify!($var) => Some(Self::$var),)+
+                    _ => None,
+                }
+            }
+
+            pub const ALL: &'static [$name] = &[$(Self::$var),+];
+        }
+
+        impl std::fmt::Display for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                f.write_str(self.as_str())
+            }
+        }
+    };
+}
+
+status_enum!(RequestStatus {
+    New,
+    Transforming,
+    Finished,
+    SubFinished,
+    Failed,
+    Cancelled,
+});
+
+impl RequestStatus {
+    /// Terminal statuses never leave.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Self::Finished | Self::SubFinished | Self::Failed | Self::Cancelled)
+    }
+
+    pub fn can_transition(from: Self, to: Self) -> bool {
+        use RequestStatus::*;
+        if from == to {
+            return true;
+        }
+        match (from, to) {
+            (New, Transforming) | (New, Cancelled) | (New, Failed) => true,
+            (Transforming, Finished)
+            | (Transforming, SubFinished)
+            | (Transforming, Failed)
+            | (Transforming, Cancelled) => true,
+            _ => false,
+        }
+    }
+}
+
+status_enum!(TransformStatus {
+    New,
+    Activated,
+    Running,
+    Finished,
+    SubFinished,
+    Failed,
+    Cancelled,
+});
+
+impl TransformStatus {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Self::Finished | Self::SubFinished | Self::Failed | Self::Cancelled)
+    }
+
+    pub fn can_transition(from: Self, to: Self) -> bool {
+        use TransformStatus::*;
+        if from == to {
+            return true;
+        }
+        match (from, to) {
+            (New, Activated) | (New, Cancelled) | (New, Failed) => true,
+            (Activated, Running) | (Activated, Cancelled) | (Activated, Failed) => true,
+            (Running, Finished) | (Running, SubFinished) | (Running, Failed) | (Running, Cancelled) => true,
+            _ => false,
+        }
+    }
+}
+
+status_enum!(ProcessingStatus {
+    New,
+    Submitting,
+    Submitted,
+    Running,
+    Finished,
+    Failed,
+    Cancelled,
+});
+
+impl ProcessingStatus {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Self::Finished | Self::Failed | Self::Cancelled)
+    }
+
+    pub fn can_transition(from: Self, to: Self) -> bool {
+        use ProcessingStatus::*;
+        if from == to {
+            return true;
+        }
+        match (from, to) {
+            (New, Submitting) | (New, Cancelled) => true,
+            (Submitting, Submitted) | (Submitting, Failed) | (Submitting, Cancelled) => true,
+            (Submitted, Running) | (Submitted, Finished) | (Submitted, Failed) | (Submitted, Cancelled) => true,
+            (Running, Finished) | (Running, Failed) | (Running, Cancelled) => true,
+            _ => false,
+        }
+    }
+}
+
+status_enum!(ContentStatus {
+    New,        // known, not yet on disk (e.g. tape-resident)
+    Staging,    // recall from tape in flight
+    Available,  // on disk, deliverable
+    Delivered,  // handed to a consumer job
+    Processed,  // consumer finished with it
+    Released,   // cache slot freed (fine-grained carousel release)
+    Failed,
+});
+
+impl ContentStatus {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Self::Released | Self::Failed)
+    }
+
+    pub fn can_transition(from: Self, to: Self) -> bool {
+        use ContentStatus::*;
+        if from == to {
+            return true;
+        }
+        match (from, to) {
+            (New, Staging) | (New, Available) | (New, Failed) => true,
+            (Staging, Available) | (Staging, Failed) => true,
+            (Available, Delivered) | (Available, Released) | (Available, Failed) => true,
+            (Delivered, Processed) | (Delivered, Failed) => true,
+            // failed recalls retry
+            (Failed, Staging) | (Failed, New) => true,
+            (Processed, Released) => true,
+            _ => false,
+        }
+    }
+}
+
+status_enum!(CollectionStatus { Open, Closed });
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectionKind {
+    Input,
+    Output,
+    Log,
+}
+
+impl CollectionKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Input => "Input",
+            Self::Output => "Output",
+            Self::Log => "Log",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MessageStatus {
+    New,
+    Delivered,
+    Acked,
+}
+
+// ---------------------------------------------------------------------------
+// Records
+// ---------------------------------------------------------------------------
+
+/// Request type — which use case (paper section 3) the request drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RequestKind {
+    Workflow,       // generic DG workflow
+    DataCarousel,   // section 3.1
+    Hpo,            // section 3.2
+    RubinDag,       // section 3.3.1
+    ActiveLearning, // section 3.3.2
+}
+
+impl RequestKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Workflow => "Workflow",
+            Self::DataCarousel => "DataCarousel",
+            Self::Hpo => "Hpo",
+            Self::RubinDag => "RubinDag",
+            Self::ActiveLearning => "ActiveLearning",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "Workflow" => Some(Self::Workflow),
+            "DataCarousel" => Some(Self::DataCarousel),
+            "Hpo" => Some(Self::Hpo),
+            "RubinDag" => Some(Self::RubinDag),
+            "ActiveLearning" => Some(Self::ActiveLearning),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RequestRec {
+    pub id: Id,
+    pub name: String,
+    pub requester: String,
+    pub kind: RequestKind,
+    pub status: RequestStatus,
+    /// Serialized Workflow (paper Fig. 2: json-based requests).
+    pub workflow: Json,
+    pub created_at: f64,
+    pub updated_at: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TransformRec {
+    pub id: Id,
+    pub request_id: Id,
+    pub name: String,
+    pub status: TransformStatus,
+    /// Serialized Work object this transform executes.
+    pub work: Json,
+    pub retries: u32,
+    pub created_at: f64,
+    pub updated_at: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ProcessingRec {
+    pub id: Id,
+    pub transform_id: Id,
+    pub status: ProcessingStatus,
+    /// WFM-side task id once submitted.
+    pub wfm_task: Option<Id>,
+    pub submitted_at: Option<f64>,
+    pub finished_at: Option<f64>,
+    pub created_at: f64,
+    pub updated_at: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct CollectionRec {
+    pub id: Id,
+    pub transform_id: Id,
+    pub name: String,
+    pub kind: CollectionKind,
+    pub status: CollectionStatus,
+    pub created_at: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ContentRec {
+    pub id: Id,
+    pub collection_id: Id,
+    pub name: String,
+    pub size_bytes: u64,
+    pub status: ContentStatus,
+    /// DDM-side file id (replica tracking).
+    pub ddm_file: Option<Id>,
+    pub updated_at: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct MessageRec {
+    pub id: Id,
+    pub topic: String,
+    pub source_transform: Option<Id>,
+    pub payload: Json,
+    pub status: MessageStatus,
+    pub created_at: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_roundtrip_strings() {
+        for s in RequestStatus::ALL {
+            assert_eq!(RequestStatus::parse(s.as_str()), Some(*s));
+        }
+        for s in ContentStatus::ALL {
+            assert_eq!(ContentStatus::parse(s.as_str()), Some(*s));
+        }
+    }
+
+    #[test]
+    fn terminal_statuses_have_no_exits() {
+        for from in RequestStatus::ALL.iter().filter(|s| s.is_terminal()) {
+            for to in RequestStatus::ALL {
+                if to != from {
+                    assert!(!RequestStatus::can_transition(*from, *to), "{from}->{to}");
+                }
+            }
+        }
+        for from in ProcessingStatus::ALL.iter().filter(|s| s.is_terminal()) {
+            for to in ProcessingStatus::ALL {
+                if to != from {
+                    assert!(!ProcessingStatus::can_transition(*from, *to), "{from}->{to}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn content_lifecycle_happy_path() {
+        use ContentStatus::*;
+        let path = [New, Staging, Available, Delivered, Processed, Released];
+        for w in path.windows(2) {
+            assert!(ContentStatus::can_transition(w[0], w[1]), "{:?}", w);
+        }
+    }
+
+    #[test]
+    fn content_cannot_skip_delivery() {
+        use ContentStatus::*;
+        assert!(!ContentStatus::can_transition(New, Processed));
+        assert!(!ContentStatus::can_transition(Staging, Delivered));
+        assert!(!ContentStatus::can_transition(Released, Available));
+    }
+
+    #[test]
+    fn self_transitions_allowed() {
+        assert!(RequestStatus::can_transition(
+            RequestStatus::Transforming,
+            RequestStatus::Transforming
+        ));
+        assert!(ContentStatus::can_transition(
+            ContentStatus::Staging,
+            ContentStatus::Staging
+        ));
+    }
+}

@@ -1,0 +1,137 @@
+//! Micro-bench harness used by the `cargo bench` targets (criterion is not
+//! available offline).
+//!
+//! [`Bencher::bench`] runs warmup iterations, then timed iterations, and
+//! records wall-clock per-iteration stats (mean / p50 / p99 / min). The
+//! bench binaries print a fixed-width table plus machine-readable JSON
+//! lines (`BENCHJSON {...}`) so results can be scraped into
+//! EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use super::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("mean_ns", self.mean_ns)
+            .set("p50_ns", self.p50_ns)
+            .set("p99_ns", self.p99_ns)
+            .set("min_ns", self.min_ns)
+    }
+}
+
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher {
+            warmup,
+            iters,
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick-mode factor from env (CI smoke runs): BENCH_QUICK=1 shrinks
+    /// iteration counts 10x.
+    pub fn from_env() -> Self {
+        let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+        if quick {
+            Bencher::new(1, 5)
+        } else {
+            Bencher::new(3, 30)
+        }
+    }
+
+    /// Time `f` per call; `f` should do one logical operation.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+            p50_ns: samples[samples.len() / 2],
+            p99_ns: samples[((samples.len() as f64 * 0.99) as usize).min(samples.len() - 1)],
+            min_ns: samples[0],
+        };
+        println!(
+            "{:<48} mean {:>12}  p50 {:>12}  p99 {:>12}",
+            res.name,
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.p50_ns),
+            fmt_ns(res.p99_ns)
+        );
+        println!("BENCHJSON {}", res.to_json());
+        self.results.push(res.clone());
+        res
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Section header helper for bench binaries.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bencher::new(1, 5);
+        let r = b.bench("noop", || 1 + 1);
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p99_ns >= r.p50_ns || r.p99_ns >= r.min_ns);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

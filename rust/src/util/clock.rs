@@ -1,0 +1,104 @@
+//! Wall-clock and simulated clocks behind one trait.
+//!
+//! The live service (REST head + daemons) runs on [`WallClock`]; the
+//! discrete-event experiments (carousel campaigns, Rubin DAG runs) run on
+//! [`SimClock`], which only advances when the simulation driver tells it
+//! to. Times are f64 seconds since an arbitrary epoch — enough resolution
+//! for both domains and trivially serializable.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+pub trait Clock: Send + Sync {
+    /// Seconds since this clock's epoch.
+    fn now(&self) -> f64;
+}
+
+/// Real time, epoch = construction.
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock {
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Simulated time: advanced explicitly by the event loop. Stored as
+/// nanoseconds in an atomic so daemons on other threads can read it.
+#[derive(Default)]
+pub struct SimClock {
+    nanos: AtomicU64,
+}
+
+impl SimClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(SimClock {
+            nanos: AtomicU64::new(0),
+        })
+    }
+
+    pub fn advance_to(&self, t: f64) {
+        let target = (t * 1e9) as u64;
+        // monotone: never move backwards
+        self.nanos.fetch_max(target, Ordering::SeqCst);
+    }
+
+    pub fn advance_by(&self, dt: f64) {
+        self.nanos
+            .fetch_add((dt * 1e9) as u64, Ordering::SeqCst);
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> f64 {
+        self.nanos.load(Ordering::SeqCst) as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_advances() {
+        let c = WallClock::new();
+        let a = c.now();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(c.now() > a);
+    }
+
+    #[test]
+    fn sim_clock_explicit() {
+        let c = SimClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance_to(10.0);
+        assert!((c.now() - 10.0).abs() < 1e-6);
+        c.advance_by(2.5);
+        assert!((c.now() - 12.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sim_clock_monotone() {
+        let c = SimClock::new();
+        c.advance_to(100.0);
+        c.advance_to(50.0); // ignored
+        assert!((c.now() - 100.0).abs() < 1e-6);
+    }
+}

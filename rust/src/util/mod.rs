@@ -1,0 +1,52 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! vendored dependency set available, so the conveniences a service like
+//! this would normally pull from crates.io (serde_json, rand, tokio,
+//! proptest, criterion) are implemented here from scratch:
+//!
+//! * [`json`]      — JSON value model, parser and serializer (client ⇄
+//!   head-service interchange, artifact manifest).
+//! * [`rng`]       — SplitMix64 / xoshiro256** PRNGs (workload generators,
+//!   samplers).
+//! * [`clock`]     — wall + simulated clocks behind one trait; the
+//!   discrete-event simulation drives the latter.
+//! * [`pool`]      — a fixed thread pool with panic isolation (daemon and
+//!   REST worker execution).
+//! * [`propcheck`] — a miniature property-testing harness (randomized
+//!   inputs, shrink-free but seed-reporting) for invariant tests.
+//! * [`bench`]     — a micro-bench harness used by the `cargo bench`
+//!   targets (criterion stand-in): warmup, timed iterations, mean/p50/p99.
+
+pub mod json;
+pub mod rng;
+pub mod clock;
+pub mod pool;
+pub mod propcheck;
+pub mod bench;
+
+/// Monotonically increasing id generator (process-wide, lock-free).
+pub fn next_id() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn next_id_unique_across_threads() {
+        let handles: Vec<_> = (0..8)
+            .map(|_| std::thread::spawn(|| (0..1000).map(|_| next_id()).collect::<Vec<_>>()))
+            .collect();
+        let mut seen = HashSet::new();
+        for h in handles {
+            for id in h.join().unwrap() {
+                assert!(seen.insert(id), "duplicate id {id}");
+            }
+        }
+    }
+}

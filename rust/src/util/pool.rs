@@ -1,0 +1,167 @@
+//! Fixed-size thread pool with panic isolation (tokio stand-in).
+//!
+//! The REST head service and the daemon host run their work on this pool.
+//! Jobs are `FnOnce` closures; a panicking job is caught and counted, it
+//! never takes a worker down.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    panics: Arc<AtomicU64>,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize, name: &str) -> Self {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let panics = Arc::new(AtomicU64::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let panics = Arc::clone(&panics);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                if std::panic::catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    panics.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            panics,
+        }
+    }
+
+    /// Submit a job. Panics if the pool is shut down.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("pool workers gone");
+    }
+
+    /// Number of jobs that panicked since construction.
+    pub fn panic_count(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
+    }
+
+    /// Drop the sender and join all workers (runs queued jobs first).
+    pub fn shutdown(mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run jobs across the pool and wait for all of them (scoped fan-out).
+pub fn fan_out<T: Send + 'static>(
+    pool: &ThreadPool,
+    jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
+) -> Vec<T> {
+    let (tx, rx) = mpsc::channel();
+    let n = jobs.len();
+    for (i, job) in jobs.into_iter().enumerate() {
+        let tx = tx.clone();
+        pool.execute(move || {
+            let _ = tx.send((i, job()));
+        });
+    }
+    drop(tx);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for _ in 0..n {
+        let (i, v) = rx.recv().expect("fan_out worker died");
+        out[i] = Some(v);
+    }
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4, "t");
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn survives_panics() {
+        let pool = ThreadPool::new(2, "p");
+        let counter = Arc::new(AtomicUsize::new(0));
+        for i in 0..20 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                if i % 2 == 0 {
+                    panic!("boom");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // give workers time, then check the pool still works
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        let panics = {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            pool.panic_count()
+        };
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 11);
+        assert_eq!(panics, 10);
+    }
+
+    #[test]
+    fn fan_out_preserves_order() {
+        let pool = ThreadPool::new(4, "f");
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..32usize)
+            .map(|i| Box::new(move || i * 2) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let out = fan_out(&pool, jobs);
+        assert_eq!(out, (0..32).map(|i| i * 2).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,89 @@
+//! Miniature property-testing harness (proptest stand-in).
+//!
+//! `check(name, cases, |rng| ...)` runs a property closure against `cases`
+//! independently seeded [`Rng`]s. On failure it panics with the case seed
+//! so the exact input can be replayed with `replay(seed, |rng| ...)`.
+//! There is no shrinking — generators in this repo are kept small and
+//! structured enough that the seed alone localizes failures.
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` randomized cases. `prop` returns `Err(msg)` (or
+/// panics) to signal a failure.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Fixed base seed for CI determinism; override with PROPCHECK_SEED.
+    let base = std::env::var("PROPCHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay one case by seed.
+pub fn replay<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replay(seed {seed:#x}) failed: {msg}");
+    }
+}
+
+/// Assert helper usable inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("u64 addition commutes", 50, |rng| {
+            let a = rng.below(1000);
+            let b = rng.below(1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn replay_deterministic() {
+        let mut first = None;
+        replay(1234, |rng| {
+            first = Some(rng.next_u64());
+            Ok(())
+        });
+        let mut second = None;
+        replay(1234, |rng| {
+            second = Some(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,459 @@
+//! WorkFlow Management simulator (PanDA stand-in).
+//!
+//! Models the WFM behaviour that produces the paper's Figure 4: tasks made
+//! of jobs with file-level input dependencies, heterogeneous sites with
+//! bounded slots, and the crucial *attempt* mechanism — a dispatched job
+//! whose input is not yet on disk burns a failed attempt and is requeued
+//! with a retry backoff (this is what the coarse, pre-iDDS carousel did at
+//! scale). iDDS avoids those attempts by holding jobs until their inputs
+//! are Available and releasing them through Conductor messages.
+//!
+//! Release modes per task:
+//! * [`ReleaseMode::Immediate`] — all jobs enter the dispatch queue as
+//!   soon as the task starts (pre-iDDS behaviour).
+//! * [`ReleaseMode::Triggered`] — jobs enter the queue only when
+//!   explicitly released (iDDS fine-grained delivery).
+//!
+//! Time is explicit (`tick(now, availability)`), driven by the DES loop.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::tape::FileId;
+
+pub type TaskId = u64;
+pub type JobId = u64;
+pub type SiteId = u32;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReleaseMode {
+    Immediate,
+    Triggered,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Waiting,   // Triggered mode: not yet released by iDDS
+    Queued,    // in the dispatch queue
+    Retrying,  // failed attempt, waiting out the backoff
+    Running,
+    Finished,
+    Exhausted, // max attempts burned
+}
+
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub inputs: Vec<FileId>,
+    pub wall_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub task: TaskId,
+    pub inputs: Vec<FileId>,
+    pub wall_s: f64,
+    pub state: JobState,
+    pub attempts: u32,
+    pub started_at: Option<f64>,
+    pub finished_at: Option<f64>,
+}
+
+#[derive(Debug, Clone)]
+struct Task {
+    #[allow(dead_code)]
+    id: TaskId,
+    jobs: Vec<JobId>,
+    mode: ReleaseMode,
+    finished_jobs: usize,
+    exhausted_jobs: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum WfmEvent {
+    JobStarted { job: JobId, at: f64 },
+    JobFinished { job: JobId, task: TaskId, at: f64, inputs: Vec<FileId> },
+    JobAttemptFailed { job: JobId, at: f64, attempt: u32 },
+    JobExhausted { job: JobId, at: f64 },
+    TaskDone { task: TaskId, at: f64 },
+}
+
+#[derive(PartialEq, PartialOrd)]
+struct OrdF64(f64);
+impl Eq for OrdF64 {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+pub struct WfmSim {
+    jobs: HashMap<JobId, Job>,
+    tasks: HashMap<TaskId, Task>,
+    queue: VecDeque<JobId>,
+    /// (ready_at, job) — backoff queue for failed attempts
+    retrying: BinaryHeap<Reverse<(OrdF64, JobId)>>,
+    /// (finish_at, job, site)
+    running: BinaryHeap<Reverse<(OrdF64, JobId, SiteId)>>,
+    free_slots: HashMap<SiteId, usize>,
+    total_slots: usize,
+    busy_slots: usize,
+    retry_delay_s: f64,
+    max_attempts: u32,
+    pub total_attempts: u64,
+    pub failed_attempts: u64,
+}
+
+impl WfmSim {
+    pub fn new(sites: u32, slots_per_site: usize, retry_delay_s: f64, max_attempts: u32) -> Self {
+        let free_slots: HashMap<SiteId, usize> =
+            (0..sites).map(|s| (s, slots_per_site)).collect();
+        WfmSim {
+            jobs: HashMap::new(),
+            tasks: HashMap::new(),
+            queue: VecDeque::new(),
+            retrying: BinaryHeap::new(),
+            running: BinaryHeap::new(),
+            free_slots,
+            total_slots: sites as usize * slots_per_site,
+            busy_slots: 0,
+            retry_delay_s,
+            max_attempts,
+            total_attempts: 0,
+            failed_attempts: 0,
+        }
+    }
+
+    /// Submit a task. In `Immediate` mode all jobs are queued at once; in
+    /// `Triggered` mode they wait for [`WfmSim::release_jobs`].
+    pub fn submit_task(&mut self, jobs: Vec<JobSpec>, mode: ReleaseMode) -> (TaskId, Vec<JobId>) {
+        let task_id = crate::util::next_id();
+        let mut ids = Vec::with_capacity(jobs.len());
+        for spec in jobs {
+            let id = crate::util::next_id();
+            let state = match mode {
+                ReleaseMode::Immediate => JobState::Queued,
+                ReleaseMode::Triggered => JobState::Waiting,
+            };
+            self.jobs.insert(
+                id,
+                Job {
+                    id,
+                    task: task_id,
+                    inputs: spec.inputs,
+                    wall_s: spec.wall_s,
+                    state,
+                    attempts: 0,
+                    started_at: None,
+                    finished_at: None,
+                },
+            );
+            if mode == ReleaseMode::Immediate {
+                self.queue.push_back(id);
+            }
+            ids.push(id);
+        }
+        self.tasks.insert(
+            task_id,
+            Task {
+                id: task_id,
+                jobs: ids.clone(),
+                mode,
+                finished_jobs: 0,
+                exhausted_jobs: 0,
+            },
+        );
+        (task_id, ids)
+    }
+
+    /// Release waiting jobs into the dispatch queue (iDDS Conductor path).
+    /// Unknown or already-released jobs are skipped; returns released count.
+    pub fn release_jobs(&mut self, ids: &[JobId]) -> usize {
+        let mut n = 0;
+        for &id in ids {
+            if let Some(j) = self.jobs.get_mut(&id) {
+                if j.state == JobState::Waiting {
+                    j.state = JobState::Queued;
+                    self.queue.push_back(id);
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    pub fn job(&self, id: JobId) -> Option<&Job> {
+        self.jobs.get(&id)
+    }
+
+    pub fn task_jobs(&self, task: TaskId) -> Vec<JobId> {
+        self.tasks.get(&task).map(|t| t.jobs.clone()).unwrap_or_default()
+    }
+
+    pub fn task_mode(&self, task: TaskId) -> Option<ReleaseMode> {
+        self.tasks.get(&task).map(|t| t.mode)
+    }
+
+    pub fn queued_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn busy_slots(&self) -> usize {
+        self.busy_slots
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.total_slots
+    }
+
+    /// Attempt histogram over all jobs (Fig. 4's x-axis).
+    pub fn attempt_histogram(&self) -> Vec<(u32, usize)> {
+        let mut h: HashMap<u32, usize> = HashMap::new();
+        for j in self.jobs.values() {
+            *h.entry(j.attempts).or_default() += 1;
+        }
+        let mut v: Vec<_> = h.into_iter().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Advance to `now`. `available` answers "is this input file on disk?"
+    /// at dispatch time (the DDM replica catalog).
+    pub fn tick(&mut self, now: f64, available: &dyn Fn(FileId) -> bool) -> Vec<WfmEvent> {
+        let mut events = Vec::new();
+
+        // 1. finish running jobs due by now
+        while let Some(Reverse((OrdF64(t), _, _))) = self.running.peek() {
+            if *t > now {
+                break;
+            }
+            let Reverse((OrdF64(t), job_id, site)) = self.running.pop().unwrap();
+            *self.free_slots.get_mut(&site).unwrap() += 1;
+            self.busy_slots -= 1;
+            let job = self.jobs.get_mut(&job_id).unwrap();
+            job.state = JobState::Finished;
+            job.finished_at = Some(t);
+            let task_id = job.task;
+            let inputs = job.inputs.clone();
+            events.push(WfmEvent::JobFinished { job: job_id, task: task_id, at: t, inputs });
+            let task = self.tasks.get_mut(&task_id).unwrap();
+            task.finished_jobs += 1;
+            if task.finished_jobs + task.exhausted_jobs == task.jobs.len() {
+                events.push(WfmEvent::TaskDone { task: task_id, at: t });
+            }
+        }
+
+        // 2. move retry-backoff jobs whose delay expired back into the queue
+        while let Some(Reverse((OrdF64(t), _))) = self.retrying.peek() {
+            if *t > now {
+                break;
+            }
+            let Reverse((_, job_id)) = self.retrying.pop().unwrap();
+            let job = self.jobs.get_mut(&job_id).unwrap();
+            job.state = JobState::Queued;
+            self.queue.push_back(job_id);
+        }
+
+        // 3. dispatch queued jobs onto free slots
+        let mut requeue = Vec::new();
+        while !self.queue.is_empty() {
+            let Some(site) = self
+                .free_slots
+                .iter()
+                .filter(|(_, n)| **n > 0)
+                .map(|(s, _)| *s)
+                .min()
+            else {
+                break;
+            };
+            let job_id = self.queue.pop_front().unwrap();
+            let job = self.jobs.get_mut(&job_id).unwrap();
+            job.attempts += 1;
+            self.total_attempts += 1;
+            if job.inputs.iter().all(|f| available(*f)) {
+                // real start
+                *self.free_slots.get_mut(&site).unwrap() -= 1;
+                self.busy_slots += 1;
+                job.state = JobState::Running;
+                job.started_at.get_or_insert(now);
+                let finish = now + job.wall_s;
+                self.running.push(Reverse((OrdF64(finish), job_id, site)));
+                events.push(WfmEvent::JobStarted { job: job_id, at: now });
+            } else {
+                // failed attempt: input not on disk (the Fig. 4 mechanism)
+                self.failed_attempts += 1;
+                let attempt = job.attempts;
+                if attempt >= self.max_attempts {
+                    job.state = JobState::Exhausted;
+                    let task_id = job.task;
+                    events.push(WfmEvent::JobExhausted { job: job_id, at: now });
+                    let task = self.tasks.get_mut(&task_id).unwrap();
+                    task.exhausted_jobs += 1;
+                    if task.finished_jobs + task.exhausted_jobs == task.jobs.len() {
+                        events.push(WfmEvent::TaskDone { task: task_id, at: now });
+                    }
+                } else {
+                    job.state = JobState::Retrying;
+                    requeue.push((now + self.retry_delay_s, job_id));
+                    events.push(WfmEvent::JobAttemptFailed { job: job_id, at: now, attempt });
+                }
+            }
+        }
+        for (t, id) in requeue {
+            self.retrying.push(Reverse((OrdF64(t), id)));
+        }
+
+        events
+    }
+
+    /// Earliest future event the sim itself will generate (job finish or
+    /// retry-backoff expiry). Queued dispatches happen "now", so callers
+    /// should tick whenever external state (staging) changes too.
+    pub fn next_event_time(&self) -> Option<f64> {
+        let a = self.running.peek().map(|Reverse((OrdF64(t), _, _))| *t);
+        let b = self.retrying.peek().map(|Reverse((OrdF64(t), _))| *t);
+        match (a, b) {
+            (Some(x), Some(y)) => Some(x.min(y)),
+            (x, y) => x.or(y),
+        }
+    }
+
+    pub fn idle(&self) -> bool {
+        self.running.is_empty() && self.retrying.is_empty() && self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_available(_: FileId) -> bool {
+        true
+    }
+    fn none_available(_: FileId) -> bool {
+        false
+    }
+
+    #[test]
+    fn immediate_job_runs_and_finishes() {
+        let mut w = WfmSim::new(1, 4, 900.0, 3);
+        let (task, jobs) = w.submit_task(
+            vec![JobSpec { inputs: vec![], wall_s: 100.0 }],
+            ReleaseMode::Immediate,
+        );
+        let ev = w.tick(0.0, &all_available);
+        assert!(matches!(ev[0], WfmEvent::JobStarted { .. }));
+        assert_eq!(w.busy_slots(), 1);
+        let ev = w.tick(100.0, &all_available);
+        assert!(ev.iter().any(|e| matches!(e, WfmEvent::JobFinished { .. })));
+        assert!(ev.iter().any(|e| matches!(e, WfmEvent::TaskDone { task: t, .. } if *t == task)));
+        assert_eq!(w.job(jobs[0]).unwrap().attempts, 1);
+    }
+
+    #[test]
+    fn missing_input_burns_attempts_until_exhausted() {
+        let mut w = WfmSim::new(1, 4, 10.0, 3);
+        let (_, jobs) = w.submit_task(
+            vec![JobSpec { inputs: vec![99], wall_s: 100.0 }],
+            ReleaseMode::Immediate,
+        );
+        let ev = w.tick(0.0, &none_available);
+        assert!(matches!(ev[0], WfmEvent::JobAttemptFailed { attempt: 1, .. }));
+        let ev = w.tick(10.0, &none_available);
+        assert!(matches!(ev[0], WfmEvent::JobAttemptFailed { attempt: 2, .. }));
+        let ev = w.tick(20.0, &none_available);
+        assert!(ev.iter().any(|e| matches!(e, WfmEvent::JobExhausted { .. })));
+        assert!(ev.iter().any(|e| matches!(e, WfmEvent::TaskDone { .. })));
+        assert_eq!(w.job(jobs[0]).unwrap().state, JobState::Exhausted);
+        assert_eq!(w.failed_attempts, 3);
+    }
+
+    #[test]
+    fn input_arriving_between_attempts_lets_job_run() {
+        let mut w = WfmSim::new(1, 4, 10.0, 6);
+        let (_, jobs) = w.submit_task(
+            vec![JobSpec { inputs: vec![7], wall_s: 50.0 }],
+            ReleaseMode::Immediate,
+        );
+        w.tick(0.0, &none_available); // attempt 1 fails
+        let ev = w.tick(10.0, &all_available); // retry succeeds
+        assert!(matches!(ev[0], WfmEvent::JobStarted { .. }));
+        let ev = w.tick(60.0, &all_available);
+        assert!(ev.iter().any(|e| matches!(e, WfmEvent::JobFinished { .. })));
+        assert_eq!(w.job(jobs[0]).unwrap().attempts, 2);
+    }
+
+    #[test]
+    fn triggered_jobs_wait_for_release() {
+        let mut w = WfmSim::new(1, 4, 10.0, 3);
+        let (_, jobs) = w.submit_task(
+            vec![JobSpec { inputs: vec![], wall_s: 10.0 }],
+            ReleaseMode::Triggered,
+        );
+        assert!(w.tick(0.0, &all_available).is_empty());
+        assert_eq!(w.job(jobs[0]).unwrap().state, JobState::Waiting);
+        assert_eq!(w.release_jobs(&jobs), 1);
+        assert_eq!(w.release_jobs(&jobs), 0, "double release is a no-op");
+        let ev = w.tick(1.0, &all_available);
+        assert!(matches!(ev[0], WfmEvent::JobStarted { .. }));
+    }
+
+    #[test]
+    fn slots_bound_parallelism() {
+        let mut w = WfmSim::new(2, 2, 10.0, 3); // 4 slots total
+        let specs = (0..10)
+            .map(|_| JobSpec { inputs: vec![], wall_s: 100.0 })
+            .collect();
+        w.submit_task(specs, ReleaseMode::Immediate);
+        let ev = w.tick(0.0, &all_available);
+        let started = ev
+            .iter()
+            .filter(|e| matches!(e, WfmEvent::JobStarted { .. }))
+            .count();
+        assert_eq!(started, 4);
+        assert_eq!(w.busy_slots(), 4);
+        assert_eq!(w.queued_len(), 6);
+        // when the first wave finishes, the next 4 start
+        let ev = w.tick(100.0, &all_available);
+        let started = ev
+            .iter()
+            .filter(|e| matches!(e, WfmEvent::JobStarted { .. }))
+            .count();
+        assert_eq!(started, 4);
+    }
+
+    #[test]
+    fn attempt_histogram_shape() {
+        let mut w = WfmSim::new(1, 8, 5.0, 6);
+        // 3 jobs with inputs available, 2 without (they'll retry twice then
+        // we make data available)
+        w.submit_task(
+            (0..3).map(|_| JobSpec { inputs: vec![], wall_s: 1.0 }).collect(),
+            ReleaseMode::Immediate,
+        );
+        w.submit_task(
+            (0..2).map(|_| JobSpec { inputs: vec![1], wall_s: 1.0 }).collect(),
+            ReleaseMode::Immediate,
+        );
+        let avail_after = |cut: f64, now: f64| move |_f: FileId| now >= cut;
+        w.tick(0.0, &avail_after(10.0, 0.0));
+        w.tick(5.0, &avail_after(10.0, 5.0));
+        w.tick(10.0, &avail_after(10.0, 10.0));
+        w.tick(20.0, &all_available);
+        let h = w.attempt_histogram();
+        // 3 jobs: 1 attempt; 2 jobs: 3 attempts
+        assert!(h.contains(&(1, 3)), "{h:?}");
+        assert!(h.contains(&(3, 2)), "{h:?}");
+    }
+
+    #[test]
+    fn next_event_time_tracks_running_and_retrying() {
+        let mut w = WfmSim::new(1, 2, 7.0, 3);
+        w.submit_task(vec![JobSpec { inputs: vec![], wall_s: 100.0 }], ReleaseMode::Immediate);
+        w.submit_task(vec![JobSpec { inputs: vec![1], wall_s: 1.0 }], ReleaseMode::Immediate);
+        w.tick(0.0, &|f| f != 1);
+        // running finishes at 100, retry ready at 7 -> next event 7
+        assert_eq!(w.next_event_time(), Some(7.0));
+    }
+}

@@ -1,0 +1,324 @@
+//! Condition branches between Work templates (paper Fig. 3).
+//!
+//! A [`Predicate`] is a small JSON-expression tree evaluated against the
+//! finished Work's result object: comparisons read a dotted path from the
+//! result, and `all`/`any`/`not` compose. `Always` is the unconditional
+//! edge (plain DAG dependency).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Predicate {
+    Always,
+    /// Numeric comparison of `result.<path>` against a constant.
+    Cmp { path: String, op: CmpOp, value: f64 },
+    /// String equality of `result.<path>`.
+    StrEq { path: String, value: String },
+    /// Boolean truthiness of `result.<path>` (bool true or number != 0).
+    Truthy { path: String },
+    Not(Box<Predicate>),
+    All(Vec<Predicate>),
+    Any(Vec<Predicate>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+impl CmpOp {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Lt => "lt",
+            Self::Le => "le",
+            Self::Gt => "gt",
+            Self::Ge => "ge",
+            Self::Eq => "eq",
+            Self::Ne => "ne",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "lt" => Some(Self::Lt),
+            "le" => Some(Self::Le),
+            "gt" => Some(Self::Gt),
+            "ge" => Some(Self::Ge),
+            "eq" => Some(Self::Eq),
+            "ne" => Some(Self::Ne),
+            _ => None,
+        }
+    }
+
+    pub fn apply(&self, a: f64, b: f64) -> bool {
+        match self {
+            Self::Lt => a < b,
+            Self::Le => a <= b,
+            Self::Gt => a > b,
+            Self::Ge => a >= b,
+            Self::Eq => a == b,
+            Self::Ne => a != b,
+        }
+    }
+}
+
+fn lookup<'a>(result: &'a Json, path: &str) -> Option<&'a Json> {
+    let parts: Vec<&str> = path.split('.').collect();
+    result.get_path(&parts)
+}
+
+impl Predicate {
+    pub fn gt(path: &str, v: f64) -> Predicate {
+        Predicate::Cmp { path: path.into(), op: CmpOp::Gt, value: v }
+    }
+
+    pub fn lt(path: &str, v: f64) -> Predicate {
+        Predicate::Cmp { path: path.into(), op: CmpOp::Lt, value: v }
+    }
+
+    pub fn truthy(path: &str) -> Predicate {
+        Predicate::Truthy { path: path.into() }
+    }
+
+    /// Evaluate against a result object. Missing paths are an error for
+    /// comparisons (a silently-false branch would mask producer bugs) but
+    /// false for `Truthy`.
+    pub fn eval(&self, result: &Json) -> Result<bool> {
+        Ok(match self {
+            Predicate::Always => true,
+            Predicate::Cmp { path, op, value } => {
+                let v = lookup(result, path)
+                    .and_then(|j| j.as_f64())
+                    .with_context(|| format!("predicate path '{path}' missing or non-numeric"))?;
+                op.apply(v, *value)
+            }
+            Predicate::StrEq { path, value } => {
+                let v = lookup(result, path)
+                    .and_then(|j| j.as_str())
+                    .with_context(|| format!("predicate path '{path}' missing or non-string"))?;
+                v == value
+            }
+            Predicate::Truthy { path } => match lookup(result, path) {
+                Some(Json::Bool(b)) => *b,
+                Some(Json::Num(n)) => *n != 0.0,
+                _ => false,
+            },
+            Predicate::Not(p) => !p.eval(result)?,
+            Predicate::All(ps) => {
+                for p in ps {
+                    if !p.eval(result)? {
+                        return Ok(false);
+                    }
+                }
+                true
+            }
+            Predicate::Any(ps) => {
+                for p in ps {
+                    if p.eval(result)? {
+                        return Ok(true);
+                    }
+                }
+                false
+            }
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Predicate::Always => Json::obj().set("op", "always"),
+            Predicate::Cmp { path, op, value } => Json::obj()
+                .set("op", op.as_str())
+                .set("path", path.as_str())
+                .set("value", *value),
+            Predicate::StrEq { path, value } => Json::obj()
+                .set("op", "streq")
+                .set("path", path.as_str())
+                .set("value", value.as_str()),
+            Predicate::Truthy { path } => {
+                Json::obj().set("op", "truthy").set("path", path.as_str())
+            }
+            Predicate::Not(p) => Json::obj().set("op", "not").set("arg", p.to_json()),
+            Predicate::All(ps) => Json::obj()
+                .set("op", "all")
+                .set("args", Json::Arr(ps.iter().map(|p| p.to_json()).collect())),
+            Predicate::Any(ps) => Json::obj()
+                .set("op", "any")
+                .set("args", Json::Arr(ps.iter().map(|p| p.to_json()).collect())),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Predicate> {
+        let op = j.get("op").and_then(|v| v.as_str()).context("predicate.op")?;
+        Ok(match op {
+            "always" => Predicate::Always,
+            "streq" => Predicate::StrEq {
+                path: j.get("path").and_then(|v| v.as_str()).context("path")?.into(),
+                value: j.get("value").and_then(|v| v.as_str()).context("value")?.into(),
+            },
+            "truthy" => Predicate::Truthy {
+                path: j.get("path").and_then(|v| v.as_str()).context("path")?.into(),
+            },
+            "not" => Predicate::Not(Box::new(Predicate::from_json(
+                j.get("arg").context("not.arg")?,
+            )?)),
+            "all" | "any" => {
+                let args = j
+                    .get("args")
+                    .and_then(|a| a.as_arr())
+                    .context("args")?
+                    .iter()
+                    .map(Predicate::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                if op == "all" {
+                    Predicate::All(args)
+                } else {
+                    Predicate::Any(args)
+                }
+            }
+            cmp => Predicate::Cmp {
+                path: j.get("path").and_then(|v| v.as_str()).context("path")?.into(),
+                op: CmpOp::parse(cmp).with_context(|| format!("unknown op '{cmp}'"))?,
+                value: j.get("value").and_then(|v| v.as_f64()).context("value")?,
+            },
+        })
+    }
+}
+
+/// A condition branch: when a Work of `source` terminates and `predicate`
+/// holds on its result, instantiate `target` with `bindings`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Condition {
+    pub source: String,
+    pub target: String,
+    pub predicate: Predicate,
+    /// target-param name → binding expression (see template::resolve_binding)
+    pub bindings: BTreeMap<String, Json>,
+}
+
+impl Condition {
+    pub fn always(source: &str, target: &str) -> Condition {
+        Condition {
+            source: source.into(),
+            target: target.into(),
+            predicate: Predicate::Always,
+            bindings: BTreeMap::new(),
+        }
+    }
+
+    pub fn when(source: &str, target: &str, predicate: Predicate) -> Condition {
+        Condition {
+            source: source.into(),
+            target: target.into(),
+            predicate,
+            bindings: BTreeMap::new(),
+        }
+    }
+
+    pub fn bind(mut self, param: &str, expr: &str) -> Condition {
+        self.bindings.insert(param.into(), Json::Str(expr.into()));
+        self
+    }
+
+    pub fn bind_json(mut self, param: &str, expr: Json) -> Condition {
+        self.bindings.insert(param.into(), expr);
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut bindings = Json::obj();
+        for (k, v) in &self.bindings {
+            bindings = bindings.set(k, v.clone());
+        }
+        Json::obj()
+            .set("source", self.source.as_str())
+            .set("target", self.target.as_str())
+            .set("predicate", self.predicate.to_json())
+            .set("bindings", bindings)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Condition> {
+        let mut c = Condition::always(
+            j.get("source").and_then(|v| v.as_str()).context("condition.source")?,
+            j.get("target").and_then(|v| v.as_str()).context("condition.target")?,
+        );
+        if let Some(p) = j.get("predicate") {
+            c.predicate = Predicate::from_json(p)?;
+        }
+        if let Some(b) = j.get("bindings").and_then(|b| b.as_obj()) {
+            for (k, v) in b {
+                c.bindings.insert(k.clone(), v.clone());
+            }
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cmp_ops() {
+        let r = Json::obj().set("x", 2.0);
+        assert!(Predicate::gt("x", 1.0).eval(&r).unwrap());
+        assert!(!Predicate::lt("x", 1.0).eval(&r).unwrap());
+        assert!(Predicate::Cmp { path: "x".into(), op: CmpOp::Eq, value: 2.0 }
+            .eval(&r)
+            .unwrap());
+        assert!(Predicate::Cmp { path: "x".into(), op: CmpOp::Ne, value: 3.0 }
+            .eval(&r)
+            .unwrap());
+    }
+
+    #[test]
+    fn nested_paths_and_composition() {
+        let r = Json::obj()
+            .set("m", Json::obj().set("loss", 0.2).set("converged", true))
+            .set("tag", "good");
+        let p = Predicate::All(vec![
+            Predicate::lt("m.loss", 0.5),
+            Predicate::truthy("m.converged"),
+            Predicate::StrEq { path: "tag".into(), value: "good".into() },
+        ]);
+        assert!(p.eval(&r).unwrap());
+        assert!(!Predicate::Not(Box::new(p)).eval(&r).unwrap());
+        let q = Predicate::Any(vec![Predicate::gt("m.loss", 0.5), Predicate::truthy("m.converged")]);
+        assert!(q.eval(&r).unwrap());
+    }
+
+    #[test]
+    fn missing_cmp_path_is_error_but_truthy_false() {
+        let r = Json::obj();
+        assert!(Predicate::gt("nope", 0.0).eval(&r).is_err());
+        assert!(!Predicate::truthy("nope").eval(&r).unwrap());
+    }
+
+    #[test]
+    fn predicate_json_roundtrip() {
+        let p = Predicate::All(vec![
+            Predicate::Any(vec![Predicate::Always, Predicate::lt("a.b", 1.5)]),
+            Predicate::Not(Box::new(Predicate::truthy("c"))),
+            Predicate::StrEq { path: "s".into(), value: "v".into() },
+        ]);
+        let back = Predicate::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn condition_json_roundtrip() {
+        let c = Condition::when("a", "b", Predicate::gt("loss", 0.1))
+            .bind("x", "${result.loss}")
+            .bind_json("y", Json::Num(5.0));
+        let back = Condition::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+    }
+}

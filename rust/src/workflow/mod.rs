@@ -1,0 +1,431 @@
+//! Directed-Graph workflow engine (paper section 2, Fig. 3).
+//!
+//! A [`Workflow`] is a set of [`WorkTemplate`]s plus [`Condition`] branches
+//! between them. A template is a placeholder that generates [`Work`]
+//! instances by assigning values to pre-defined parameters. When a Work
+//! terminates, every condition rooted at its template is evaluated against
+//! the Work's result; satisfied conditions instantiate their target
+//! template with newly bound parameters. Because conditions may point
+//! *backwards* (A → B → A), the engine supports cyclic graphs — iteration
+//! is bounded by a per-template instance cap so cyclic workflows (Active
+//! Learning, HPO refinement loops) terminate deterministically.
+//!
+//! Everything is JSON-serializable end to end: clients define workflows,
+//! serialize them into requests (paper Fig. 2), and the Clerk/Marshaller
+//! deserialize them on the server side.
+
+pub mod condition;
+pub mod template;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub use condition::{CmpOp, Condition, Predicate};
+pub use template::{bind_params, WorkKind, WorkTemplate};
+
+/// A generated Work instance (one data transformation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Work {
+    /// Engine-local instance id (the store's transform id is separate).
+    pub instance: u64,
+    pub template: String,
+    pub params: BTreeMap<String, Json>,
+    /// How many Works of this template existed before this one (0-based).
+    pub iteration: u32,
+}
+
+impl Work {
+    pub fn to_json(&self) -> Json {
+        let mut params = Json::obj();
+        for (k, v) in &self.params {
+            params = params.set(k, v.clone());
+        }
+        Json::obj()
+            .set("instance", self.instance)
+            .set("template", self.template.as_str())
+            .set("params", params)
+            .set("iteration", self.iteration as u64)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Work> {
+        let template = j
+            .get("template")
+            .and_then(|v| v.as_str())
+            .context("work.template")?
+            .to_string();
+        let mut params = BTreeMap::new();
+        if let Some(obj) = j.get("params").and_then(|p| p.as_obj()) {
+            for (k, v) in obj {
+                params.insert(k.clone(), v.clone());
+            }
+        }
+        Ok(Work {
+            instance: j.get("instance").and_then(|v| v.as_u64()).unwrap_or(0),
+            template,
+            params,
+            iteration: j.get("iteration").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+        })
+    }
+}
+
+/// The workflow definition: templates + conditions + entry points.
+#[derive(Debug, Clone, Default)]
+pub struct Workflow {
+    pub name: String,
+    pub templates: BTreeMap<String, WorkTemplate>,
+    pub conditions: Vec<Condition>,
+    pub entries: Vec<String>,
+}
+
+impl Workflow {
+    pub fn new(name: &str) -> Self {
+        Workflow {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn add_template(mut self, t: WorkTemplate) -> Self {
+        self.templates.insert(t.name.clone(), t);
+        self
+    }
+
+    pub fn add_condition(mut self, c: Condition) -> Self {
+        self.conditions.push(c);
+        self
+    }
+
+    pub fn entry(mut self, name: &str) -> Self {
+        self.entries.push(name.to_string());
+        self
+    }
+
+    /// Structural validation: entries and condition endpoints must exist.
+    pub fn validate(&self) -> Result<()> {
+        if self.entries.is_empty() {
+            bail!("workflow '{}' has no entry templates", self.name);
+        }
+        for e in &self.entries {
+            if !self.templates.contains_key(e) {
+                bail!("entry template '{e}' not defined");
+            }
+        }
+        for c in &self.conditions {
+            if !self.templates.contains_key(&c.source) {
+                bail!("condition source '{}' not defined", c.source);
+            }
+            if !self.templates.contains_key(&c.target) {
+                bail!("condition target '{}' not defined", c.target);
+            }
+        }
+        Ok(())
+    }
+
+    /// True if any condition path forms a cycle (DFS over the template
+    /// graph). Cyclic workflows are legal — this is informational (the
+    /// paper stresses DG, not just DAG, support).
+    pub fn has_cycle(&self) -> bool {
+        let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+        for c in &self.conditions {
+            adj.entry(c.source.as_str()).or_default().push(c.target.as_str());
+        }
+        // colors: 0 = unvisited, 1 = in stack, 2 = done
+        let mut color: BTreeMap<&str, u8> = BTreeMap::new();
+        fn dfs<'a>(
+            n: &'a str,
+            adj: &BTreeMap<&'a str, Vec<&'a str>>,
+            color: &mut BTreeMap<&'a str, u8>,
+        ) -> bool {
+            color.insert(n, 1);
+            for &m in adj.get(n).into_iter().flatten() {
+                match color.get(m).copied().unwrap_or(0) {
+                    1 => return true,
+                    0 => {
+                        if dfs(m, adj, color) {
+                            return true;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            color.insert(n, 2);
+            false
+        }
+        for t in self.templates.keys() {
+            if color.get(t.as_str()).copied().unwrap_or(0) == 0
+                && dfs(t.as_str(), &adj, &mut color)
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut templates = Json::obj();
+        for (k, t) in &self.templates {
+            templates = templates.set(k, t.to_json());
+        }
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("templates", templates)
+            .set(
+                "conditions",
+                Json::Arr(self.conditions.iter().map(|c| c.to_json()).collect()),
+            )
+            .set(
+                "entries",
+                Json::Arr(self.entries.iter().map(|e| Json::Str(e.clone())).collect()),
+            )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Workflow> {
+        let name = j.get("name").and_then(|v| v.as_str()).context("workflow.name")?;
+        let mut wf = Workflow::new(name);
+        if let Some(tpls) = j.get("templates").and_then(|t| t.as_obj()) {
+            for (_, tj) in tpls {
+                let t = WorkTemplate::from_json(tj)?;
+                wf.templates.insert(t.name.clone(), t);
+            }
+        }
+        if let Some(conds) = j.get("conditions").and_then(|c| c.as_arr()) {
+            for cj in conds {
+                wf.conditions.push(Condition::from_json(cj)?);
+            }
+        }
+        if let Some(entries) = j.get("entries").and_then(|e| e.as_arr()) {
+            for e in entries {
+                wf.entries.push(e.as_str().context("entry name")?.to_string());
+            }
+        }
+        wf.validate()?;
+        Ok(wf)
+    }
+}
+
+/// Runtime evaluation state of one workflow instance: counts generated
+/// Works per template and applies the cycle bound.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    pub workflow: Workflow,
+    instances: BTreeMap<String, u32>,
+    next_instance: u64,
+}
+
+impl Engine {
+    pub fn new(workflow: Workflow) -> Result<Engine> {
+        workflow.validate()?;
+        Ok(Engine {
+            workflow,
+            instances: BTreeMap::new(),
+            next_instance: 1,
+        })
+    }
+
+    /// Generate the initial Works from the entry templates.
+    pub fn start(&mut self) -> Vec<Work> {
+        let entries = self.workflow.entries.clone();
+        entries
+            .iter()
+            .filter_map(|e| self.instantiate(e, BTreeMap::new()))
+            .collect()
+    }
+
+    /// Total Works generated so far per template.
+    pub fn instance_count(&self, template: &str) -> u32 {
+        self.instances.get(template).copied().unwrap_or(0)
+    }
+
+    /// Called when a Work terminates with `result`. Evaluates condition
+    /// branches from its template and returns the newly generated Works
+    /// (paper Fig. 3: "new Work objects can be generated from their
+    /// following Work templates, with newly assigned values").
+    pub fn on_complete(&mut self, work: &Work, result: &Json) -> Result<Vec<Work>> {
+        let conds: Vec<Condition> = self
+            .workflow
+            .conditions
+            .iter()
+            .filter(|c| c.source == work.template)
+            .cloned()
+            .collect();
+        let mut out = Vec::new();
+        for c in conds {
+            if c.predicate.eval(result)? {
+                let params = bind_params(&c.bindings, &work.params, result)?;
+                if let Some(w) = self.instantiate(&c.target, params) {
+                    out.push(w);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn instantiate(&mut self, template: &str, overrides: BTreeMap<String, Json>) -> Option<Work> {
+        let tpl = self.workflow.templates.get(template)?;
+        let count = self.instances.entry(template.to_string()).or_insert(0);
+        if *count >= tpl.max_instances {
+            return None; // cycle bound reached
+        }
+        let iteration = *count;
+        *count += 1;
+        let mut params = tpl.defaults.clone();
+        for (k, v) in overrides {
+            params.insert(k, v);
+        }
+        params.insert("_iteration".into(), Json::Num(iteration as f64));
+        let w = Work {
+            instance: self.next_instance,
+            template: template.to_string(),
+            params,
+            iteration,
+        };
+        self.next_instance += 1;
+        Some(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn two_step() -> Workflow {
+        Workflow::new("two-step")
+            .add_template(WorkTemplate::new("prep").default("alpha", Json::Num(1.0)))
+            .add_template(WorkTemplate::new("main"))
+            .add_condition(Condition::always("prep", "main"))
+            .entry("prep")
+    }
+
+    #[test]
+    fn start_generates_entries() {
+        let mut e = Engine::new(two_step()).unwrap();
+        let works = e.start();
+        assert_eq!(works.len(), 1);
+        assert_eq!(works[0].template, "prep");
+        assert_eq!(works[0].params.get("alpha"), Some(&Json::Num(1.0)));
+    }
+
+    #[test]
+    fn completion_triggers_condition() {
+        let mut e = Engine::new(two_step()).unwrap();
+        let w = e.start().pop().unwrap();
+        let next = e.on_complete(&w, &Json::obj()).unwrap();
+        assert_eq!(next.len(), 1);
+        assert_eq!(next[0].template, "main");
+    }
+
+    #[test]
+    fn predicate_gates_branch() {
+        let wf = Workflow::new("gated")
+            .add_template(WorkTemplate::new("a"))
+            .add_template(WorkTemplate::new("b"))
+            .add_condition(Condition::when(
+                "a",
+                "b",
+                Predicate::gt("loss", 0.5),
+            ))
+            .entry("a");
+        let mut e = Engine::new(wf).unwrap();
+        let w = e.start().pop().unwrap();
+        let none = e
+            .on_complete(&w, &Json::obj().set("loss", 0.1))
+            .unwrap();
+        assert!(none.is_empty());
+        let some = e
+            .on_complete(&w, &Json::obj().set("loss", 0.9))
+            .unwrap();
+        assert_eq!(some.len(), 1);
+    }
+
+    #[test]
+    fn cycle_is_bounded() {
+        // a -> a forever, capped at 5 instances
+        let wf = Workflow::new("loop")
+            .add_template(WorkTemplate::new("a").max_instances(5))
+            .add_condition(Condition::always("a", "a"))
+            .entry("a");
+        assert!(wf.has_cycle());
+        let mut e = Engine::new(wf).unwrap();
+        let mut frontier = e.start();
+        let mut total = 0;
+        while let Some(w) = frontier.pop() {
+            total += 1;
+            frontier.extend(e.on_complete(&w, &Json::obj()).unwrap());
+        }
+        assert_eq!(total, 5);
+        assert_eq!(e.instance_count("a"), 5);
+    }
+
+    #[test]
+    fn dag_is_not_cyclic() {
+        assert!(!two_step().has_cycle());
+    }
+
+    #[test]
+    fn param_binding_from_result() {
+        let wf = Workflow::new("bind")
+            .add_template(WorkTemplate::new("train"))
+            .add_template(WorkTemplate::new("decide").default("threshold", Json::Num(0.5)))
+            .add_condition(
+                Condition::always("train", "decide")
+                    .bind("observed_loss", "${result.loss}")
+                    .bind("tag", "${param.tag}"),
+            )
+            .entry("train");
+        let mut e = Engine::new(wf).unwrap();
+        let mut w = e.start().pop().unwrap();
+        w.params.insert("tag".into(), Json::Str("run7".into()));
+        let next = e
+            .on_complete(&w, &Json::obj().set("loss", 0.25))
+            .unwrap()
+            .pop()
+            .unwrap();
+        assert_eq!(next.params.get("observed_loss"), Some(&Json::Num(0.25)));
+        assert_eq!(next.params.get("tag"), Some(&Json::Str("run7".into())));
+        assert_eq!(next.params.get("threshold"), Some(&Json::Num(0.5)));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let wf = two_step();
+        let j = wf.to_json();
+        let back = Workflow::from_json(&j).unwrap();
+        assert_eq!(back.name, wf.name);
+        assert_eq!(back.templates.len(), 2);
+        assert_eq!(back.conditions.len(), 1);
+        assert_eq!(back.entries, wf.entries);
+        // serialized form is parseable text too
+        let text = j.to_string();
+        let re = Workflow::from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(re.templates.len(), 2);
+    }
+
+    #[test]
+    fn validation_catches_dangling_refs() {
+        let wf = Workflow::new("bad")
+            .add_template(WorkTemplate::new("a"))
+            .add_condition(Condition::always("a", "ghost"))
+            .entry("a");
+        assert!(wf.validate().is_err());
+        let wf2 = Workflow::new("bad2").add_template(WorkTemplate::new("a"));
+        assert!(wf2.validate().is_err(), "no entries");
+    }
+
+    #[test]
+    fn iteration_param_injected() {
+        let wf = Workflow::new("iter")
+            .add_template(WorkTemplate::new("a").max_instances(3))
+            .add_condition(Condition::always("a", "a"))
+            .entry("a");
+        let mut e = Engine::new(wf).unwrap();
+        let w0 = e.start().pop().unwrap();
+        assert_eq!(w0.params.get("_iteration"), Some(&Json::Num(0.0)));
+        let w1 = e.on_complete(&w0, &Json::obj()).unwrap().pop().unwrap();
+        assert_eq!(w1.params.get("_iteration"), Some(&Json::Num(1.0)));
+        assert_eq!(w1.iteration, 1);
+    }
+}

@@ -1,0 +1,232 @@
+//! Work templates and parameter binding.
+//!
+//! A template is a placeholder that generates Work objects by assigning
+//! values for pre-defined parameters (paper Fig. 3). Bindings support
+//! `${result.path.to.field}` (read from the finished Work's result JSON)
+//! and `${param.name}` (copy from the finished Work's own parameters);
+//! anything else is a literal.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// What a Work of this template actually executes — dispatched by the
+/// Transformer when it creates Processings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkKind {
+    /// Stage + process files through DDM/WFM (carousel-style transform).
+    DataProcessing,
+    /// Evaluate hyperparameter points (HPO payload via the PJRT runtime).
+    HpoTraining,
+    /// Run the AOT decision artifact (Active Learning decision Work).
+    Decision,
+    /// Pure orchestration placeholder (Rubin DAG vertices, tests).
+    Noop,
+}
+
+impl WorkKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::DataProcessing => "DataProcessing",
+            Self::HpoTraining => "HpoTraining",
+            Self::Decision => "Decision",
+            Self::Noop => "Noop",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "DataProcessing" => Some(Self::DataProcessing),
+            "HpoTraining" => Some(Self::HpoTraining),
+            "Decision" => Some(Self::Decision),
+            "Noop" => Some(Self::Noop),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkTemplate {
+    pub name: String,
+    pub kind: WorkKind,
+    /// Default parameter values; condition bindings override them.
+    pub defaults: BTreeMap<String, Json>,
+    /// Cycle bound: max Works generated from this template per workflow.
+    pub max_instances: u32,
+}
+
+impl WorkTemplate {
+    pub fn new(name: &str) -> Self {
+        WorkTemplate {
+            name: name.to_string(),
+            kind: WorkKind::Noop,
+            defaults: BTreeMap::new(),
+            max_instances: 1000,
+        }
+    }
+
+    pub fn kind(mut self, k: WorkKind) -> Self {
+        self.kind = k;
+        self
+    }
+
+    pub fn default(mut self, key: &str, val: Json) -> Self {
+        self.defaults.insert(key.to_string(), val);
+        self
+    }
+
+    pub fn max_instances(mut self, n: u32) -> Self {
+        self.max_instances = n;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut defaults = Json::obj();
+        for (k, v) in &self.defaults {
+            defaults = defaults.set(k, v.clone());
+        }
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("kind", self.kind.as_str())
+            .set("defaults", defaults)
+            .set("max_instances", self.max_instances as u64)
+    }
+
+    pub fn from_json(j: &Json) -> Result<WorkTemplate> {
+        let name = j.get("name").and_then(|v| v.as_str()).context("template.name")?;
+        let kind = j
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .and_then(WorkKind::parse)
+            .unwrap_or(WorkKind::Noop);
+        let mut t = WorkTemplate::new(name).kind(kind);
+        if let Some(d) = j.get("defaults").and_then(|d| d.as_obj()) {
+            for (k, v) in d {
+                t.defaults.insert(k.clone(), v.clone());
+            }
+        }
+        if let Some(m) = j.get("max_instances").and_then(|v| v.as_u64()) {
+            t.max_instances = m as u32;
+        }
+        Ok(t)
+    }
+}
+
+/// Resolve one binding expression against the finished Work's params and
+/// result. `${result.a.b}` → result["a"]["b"]; `${param.x}` → params["x"];
+/// otherwise the expression itself is the (string) literal value.
+pub fn resolve_binding(
+    expr: &Json,
+    params: &BTreeMap<String, Json>,
+    result: &Json,
+) -> Result<Json> {
+    let Some(s) = expr.as_str() else {
+        return Ok(expr.clone()); // non-string literals pass through
+    };
+    if let Some(inner) = s.strip_prefix("${").and_then(|t| t.strip_suffix('}')) {
+        if let Some(path) = inner.strip_prefix("result.") {
+            let parts: Vec<&str> = path.split('.').collect();
+            return result
+                .get_path(&parts)
+                .cloned()
+                .with_context(|| format!("binding '{s}': result path not found"));
+        }
+        if let Some(name) = inner.strip_prefix("param.") {
+            return params
+                .get(name)
+                .cloned()
+                .with_context(|| format!("binding '{s}': param not found"));
+        }
+        anyhow::bail!("binding '{s}': unknown root (use result. or param.)");
+    }
+    Ok(Json::Str(s.to_string()))
+}
+
+/// Apply a full binding map.
+pub fn bind_params(
+    bindings: &BTreeMap<String, Json>,
+    params: &BTreeMap<String, Json>,
+    result: &Json,
+) -> Result<BTreeMap<String, Json>> {
+    let mut out = BTreeMap::new();
+    for (k, expr) in bindings {
+        out.insert(k.clone(), resolve_binding(expr, params, result)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_and_json_roundtrip() {
+        let t = WorkTemplate::new("train")
+            .kind(WorkKind::HpoTraining)
+            .default("lr", Json::Num(0.1))
+            .max_instances(7);
+        let back = WorkTemplate::from_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn kind_parse_all() {
+        for k in [
+            WorkKind::DataProcessing,
+            WorkKind::HpoTraining,
+            WorkKind::Decision,
+            WorkKind::Noop,
+        ] {
+            assert_eq!(WorkKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(WorkKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn resolve_result_path() {
+        let result = Json::obj().set("metrics", Json::obj().set("loss", 0.5));
+        let v = resolve_binding(
+            &Json::Str("${result.metrics.loss}".into()),
+            &BTreeMap::new(),
+            &result,
+        )
+        .unwrap();
+        assert_eq!(v, Json::Num(0.5));
+    }
+
+    #[test]
+    fn resolve_param_and_literals() {
+        let mut params = BTreeMap::new();
+        params.insert("seed".to_string(), Json::Num(9.0));
+        let v = resolve_binding(&Json::Str("${param.seed}".into()), &params, &Json::Null).unwrap();
+        assert_eq!(v, Json::Num(9.0));
+        let lit = resolve_binding(&Json::Str("plain".into()), &params, &Json::Null).unwrap();
+        assert_eq!(lit, Json::Str("plain".into()));
+        let num = resolve_binding(&Json::Num(3.0), &params, &Json::Null).unwrap();
+        assert_eq!(num, Json::Num(3.0));
+    }
+
+    #[test]
+    fn missing_path_errors() {
+        assert!(resolve_binding(
+            &Json::Str("${result.nope}".into()),
+            &BTreeMap::new(),
+            &Json::obj()
+        )
+        .is_err());
+        assert!(resolve_binding(
+            &Json::Str("${param.nope}".into()),
+            &BTreeMap::new(),
+            &Json::obj()
+        )
+        .is_err());
+        assert!(resolve_binding(
+            &Json::Str("${weird.x}".into()),
+            &BTreeMap::new(),
+            &Json::obj()
+        )
+        .is_err());
+    }
+}

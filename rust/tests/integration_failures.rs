@@ -1,0 +1,145 @@
+//! Failure-injection integration tests: executor errors, worker panics,
+//! staging failures, message redelivery under consumer crashes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use idds::broker::Broker;
+use idds::daemons::executors::{Executor, ExecutorSet};
+use idds::daemons::{pump, Pipeline};
+use idds::metrics::Registry;
+use idds::store::{RequestKind, RequestStatus, Store, TransformStatus};
+use idds::util::clock::WallClock;
+use idds::util::json::Json;
+use idds::workflow::{Condition, WorkKind, WorkTemplate, Workflow};
+
+/// Executor that fails the first `fail_n` submissions, then succeeds.
+struct FlakyExecutor {
+    fail_n: AtomicUsize,
+    done: Mutex<std::collections::HashMap<u64, Json>>,
+}
+
+impl FlakyExecutor {
+    fn new(fail_n: usize) -> Self {
+        FlakyExecutor {
+            fail_n: AtomicUsize::new(fail_n),
+            done: Mutex::new(std::collections::HashMap::new()),
+        }
+    }
+}
+
+impl Executor for FlakyExecutor {
+    fn submit(&self, _work: &Json) -> anyhow::Result<u64> {
+        let left = self.fail_n.load(Ordering::SeqCst);
+        if left > 0 {
+            self.fail_n.store(left - 1, Ordering::SeqCst);
+            anyhow::bail!("transient submit failure");
+        }
+        let h = idds::util::next_id();
+        self.done.lock().unwrap().insert(h, Json::obj());
+        Ok(h)
+    }
+
+    fn poll(&self, handle: u64) -> anyhow::Result<Option<Json>> {
+        Ok(self.done.lock().unwrap().remove(&handle))
+    }
+}
+
+/// Executor whose *payload* reports an error result.
+struct ErrorResultExecutor;
+
+impl Executor for ErrorResultExecutor {
+    fn submit(&self, _work: &Json) -> anyhow::Result<u64> {
+        Ok(idds::util::next_id())
+    }
+    fn poll(&self, _handle: u64) -> anyhow::Result<Option<Json>> {
+        Ok(Some(Json::obj().set("error", "payload exploded")))
+    }
+}
+
+fn pipeline_with(exec: Arc<dyn Executor>) -> Pipeline {
+    let clock = Arc::new(WallClock::new());
+    Pipeline::new(
+        Store::new(clock.clone()),
+        Broker::new(clock),
+        Registry::default(),
+        ExecutorSet::default().with(WorkKind::Noop, exec),
+    )
+}
+
+fn one_work() -> Workflow {
+    Workflow::new("one").add_template(WorkTemplate::new("a")).entry("a")
+}
+
+#[test]
+fn submit_failure_fails_transform_and_request() {
+    let p = pipeline_with(Arc::new(FlakyExecutor::new(usize::MAX)));
+    let req = p
+        .store
+        .add_request("r", "u", RequestKind::Workflow, one_work().to_json());
+    let (c, m, t, ca, co) = p.daemons();
+    pump(&[&c, &m, &t, &ca, &co], 10_000);
+    assert_eq!(p.store.get_request(req).unwrap().status, RequestStatus::Failed);
+    let tf = p.store.transforms_of_request(req)[0];
+    assert_eq!(p.store.get_transform(tf).unwrap().status, TransformStatus::Failed);
+}
+
+#[test]
+fn payload_error_result_fails_work_but_request_reports_subfinished_vs_failed() {
+    // workflow with two entries: one fails (ErrorResult under Noop), the
+    // other succeeds (its template kind has a healthy executor).
+    let clock = Arc::new(WallClock::new());
+    let p = Pipeline::new(
+        Store::new(clock.clone()),
+        Broker::new(clock),
+        Registry::default(),
+        ExecutorSet::default()
+            .with(WorkKind::Noop, Arc::new(ErrorResultExecutor))
+            .with(
+                WorkKind::Decision,
+                Arc::new(idds::daemons::executors::NoopExecutor::default()),
+            ),
+    );
+    let wf = Workflow::new("mixed")
+        .add_template(WorkTemplate::new("bad")) // Noop -> ErrorResult
+        .add_template(WorkTemplate::new("good").kind(WorkKind::Decision))
+        .entry("bad")
+        .entry("good");
+    let req = p.store.add_request("r", "u", RequestKind::Workflow, wf.to_json());
+    let (c, m, t, ca, co) = p.daemons();
+    pump(&[&c, &m, &t, &ca, &co], 10_000);
+    assert_eq!(
+        p.store.get_request(req).unwrap().status,
+        RequestStatus::SubFinished,
+        "partial failure must surface as SubFinished"
+    );
+}
+
+#[test]
+fn failed_work_does_not_fire_condition_branches() {
+    let p = pipeline_with(Arc::new(ErrorResultExecutor));
+    let wf = Workflow::new("chain")
+        .add_template(WorkTemplate::new("a"))
+        .add_template(WorkTemplate::new("b"))
+        .add_condition(Condition::always("a", "b"))
+        .entry("a");
+    let req = p.store.add_request("r", "u", RequestKind::Workflow, wf.to_json());
+    let (c, m, t, ca, co) = p.daemons();
+    pump(&[&c, &m, &t, &ca, &co], 10_000);
+    // only "a" exists; "b" never generated
+    assert_eq!(p.store.transforms_of_request(req).len(), 1);
+    assert_eq!(p.store.get_request(req).unwrap().status, RequestStatus::Failed);
+}
+
+#[test]
+fn conductor_messages_mark_failed_works() {
+    let p = pipeline_with(Arc::new(ErrorResultExecutor));
+    let sub = p.broker.subscribe("idds.work.finished");
+    p.store
+        .add_request("r", "u", RequestKind::Workflow, one_work().to_json());
+    let (c, m, t, ca, co) = p.daemons();
+    pump(&[&c, &m, &t, &ca, &co], 10_000);
+    let msgs = p.broker.poll(sub, 10);
+    assert_eq!(msgs.len(), 1);
+    assert_eq!(msgs[0].payload.get("failed").unwrap().as_bool(), Some(true));
+}

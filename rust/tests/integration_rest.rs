@@ -1,0 +1,142 @@
+//! Integration: REST head service over real sockets + daemons in threads —
+//! the full client→REST→Clerk→…→Conductor→broker path of paper Fig. 1/2.
+
+use std::sync::Arc;
+
+use idds::broker::Broker;
+use idds::config::Config;
+use idds::daemons::executors::{ExecutorSet, NoopExecutor};
+use idds::daemons::{AgentHost, Daemon, Pipeline};
+use idds::metrics::Registry;
+use idds::rest::{serve, Client, ServerState};
+use idds::store::{RequestKind, RequestStatus, Store};
+use idds::util::clock::WallClock;
+use idds::util::json::Json;
+use idds::workflow::{Condition, WorkKind, WorkTemplate, Workflow};
+
+struct Stack {
+    client: Client,
+    store: Store,
+    broker: Broker,
+    _host: AgentHost,
+    _server: idds::rest::HttpServer,
+}
+
+fn stack() -> Stack {
+    let clock = Arc::new(WallClock::new());
+    let store = Store::new(clock.clone());
+    let broker = Broker::new(clock);
+    let metrics = Registry::default();
+    let cfg = Config::defaults();
+    let executors =
+        ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default()));
+    let pipeline = Pipeline::new(store.clone(), broker.clone(), metrics.clone(), executors);
+    let (c, m, t, ca, co) = pipeline.daemons();
+    let daemons: Vec<Arc<dyn Daemon>> = vec![
+        Arc::new(c),
+        Arc::new(m),
+        Arc::new(t),
+        Arc::new(ca),
+        Arc::new(co),
+    ];
+    let host = AgentHost::start(daemons, std::time::Duration::from_millis(2));
+    let server = serve(
+        ServerState::new(store.clone(), broker.clone(), metrics, &cfg),
+        &cfg,
+    )
+    .unwrap();
+    let client = Client::new(server.addr, "dev-token");
+    Stack {
+        client,
+        store,
+        broker,
+        _host: host,
+        _server: server,
+    }
+}
+
+fn two_step() -> Workflow {
+    Workflow::new("two-step")
+        .add_template(WorkTemplate::new("prep").default(
+            "result",
+            Json::obj().set("quality", 0.8),
+        ))
+        .add_template(WorkTemplate::new("main"))
+        .add_condition(Condition::always("prep", "main"))
+        .entry("prep")
+}
+
+#[test]
+fn submit_run_finish_over_rest() {
+    let s = stack();
+    let req = s
+        .client
+        .submit("campaign", "alice", RequestKind::Workflow, &two_step())
+        .unwrap();
+    let status = s
+        .client
+        .wait_terminal(req, std::time::Duration::from_secs(30))
+        .unwrap();
+    assert_eq!(status, RequestStatus::Finished);
+    let summary = s.client.summary(req).unwrap();
+    let tfs = summary.get("transforms").unwrap().as_arr().unwrap();
+    assert_eq!(tfs.len(), 2);
+}
+
+#[test]
+fn consumer_receives_conductor_messages_over_rest() {
+    let s = stack();
+    let sub = s.client.subscribe("idds.work.finished").unwrap();
+    let req = s
+        .client
+        .submit("msg-test", "bob", RequestKind::Workflow, &two_step())
+        .unwrap();
+    s.client
+        .wait_terminal(req, std::time::Duration::from_secs(30))
+        .unwrap();
+    // the two finished works must each produce one availability message
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let mut got = Vec::new();
+    while got.len() < 2 && std::time::Instant::now() < deadline {
+        for d in s.client.poll_messages(sub, 10).unwrap() {
+            s.client.ack(sub, d.id).unwrap();
+            got.push(d);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(got.len(), 2);
+    assert!(got.iter().all(|d| d.topic == "idds.work.finished"));
+    assert!(got
+        .iter()
+        .all(|d| d.payload.get("failed").unwrap().as_bool() == Some(false)));
+}
+
+#[test]
+fn bad_token_rejected() {
+    let s = stack();
+    let bad = Client::new(s._server.addr, "wrong-token");
+    assert!(bad.submit("x", "u", RequestKind::Workflow, &two_step()).is_err());
+    // store untouched
+    assert!(s.store.requests_with_status(RequestStatus::New).is_empty());
+}
+
+#[test]
+fn concurrent_clients() {
+    let s = stack();
+    let addr = s._server.addr;
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let c = Client::new(addr, "dev-token");
+                let req = c
+                    .submit(&format!("r{i}"), "u", RequestKind::Workflow, &two_step())
+                    .unwrap();
+                c.wait_terminal(req, std::time::Duration::from_secs(30)).unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), RequestStatus::Finished);
+    }
+    let _ = s.broker.stats();
+}

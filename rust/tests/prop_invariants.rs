@@ -1,0 +1,236 @@
+//! Property tests over the coordinator invariants (propcheck harness):
+//! store transition legality, workflow-engine conservation, carousel
+//! conservation, broker at-least-once, JSON round-trip.
+
+use std::sync::Arc;
+
+use idds::broker::Broker;
+use idds::carousel::{run_campaign, CampaignSpec, CarouselConfig, Granularity};
+use idds::store::{
+    ContentStatus, ProcessingStatus, RequestKind, RequestStatus, Store, TransformStatus,
+};
+use idds::util::clock::{SimClock, WallClock};
+use idds::util::json::Json;
+use idds::util::propcheck::check;
+use idds::util::rng::Rng;
+use idds::workflow::{Condition, Engine, Predicate, WorkTemplate, Workflow};
+
+fn rand_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bool(0.5)),
+        2 => Json::Num((rng.range_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+        3 => {
+            let n = rng.below(12) as usize;
+            Json::Str(
+                (0..n)
+                    .map(|_| char::from_u32(rng.range(32, 0x2FA0) as u32).unwrap_or('x'))
+                    .collect(),
+            )
+        }
+        4 => Json::Arr((0..rng.below(5)).map(|_| rand_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut o = Json::obj();
+            for i in 0..rng.below(5) {
+                o = o.set(&format!("k{i}"), rand_json(rng, depth - 1));
+            }
+            o
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check("json parse(serialize(x)) == x", 300, |rng| {
+        let j = rand_json(rng, 3);
+        let text = j.to_string();
+        let back = idds::util::json::parse(&text)
+            .map_err(|e| format!("parse failed: {e} on {text}"))?;
+        if back != j {
+            return Err(format!("mismatch: {j} vs {back}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_store_status_transitions_always_legal() {
+    check("random status walks never corrupt indexes", 50, |rng| {
+        let store = Store::new(Arc::new(WallClock::new()));
+        let rid = store.add_request("r", "u", RequestKind::Workflow, Json::Null);
+        let tid = store.add_transform(rid, "t", Json::Null);
+        let pid = store.add_processing(tid);
+        for _ in 0..60 {
+            match rng.below(3) {
+                0 => {
+                    let to = *rng.choose(RequestStatus::ALL);
+                    let _ = store.update_request_status(rid, to);
+                }
+                1 => {
+                    let to = *rng.choose(TransformStatus::ALL);
+                    let _ = store.update_transform_status(tid, to);
+                }
+                _ => {
+                    let to = *rng.choose(ProcessingStatus::ALL);
+                    let _ = store.update_processing_status(pid, to);
+                }
+            }
+        }
+        // index consistency: the record's status set contains exactly it
+        let req = store.get_request(rid).unwrap();
+        let ids = store.requests_with_status(req.status);
+        if !ids.contains(&rid) {
+            return Err(format!("request index lost id (status {})", req.status));
+        }
+        for s in RequestStatus::ALL {
+            if *s != req.status && store.requests_with_status(*s).contains(&rid) {
+                return Err(format!("request in two indexes: {s} and {}", req.status));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_content_counters_match_reality() {
+    check("per-collection status counters are exact", 30, |rng| {
+        let store = Store::new(Arc::new(WallClock::new()));
+        let rid = store.add_request("r", "u", RequestKind::DataCarousel, Json::Null);
+        let tid = store.add_transform(rid, "t", Json::Null);
+        let cid = store.add_collection(tid, "in", idds::store::CollectionKind::Input);
+        let n = 50 + rng.below(200) as usize;
+        let ids = store.add_contents(cid, (0..n).map(|i| (format!("f{i}"), 1u64)));
+        for _ in 0..100 {
+            let k = 1 + rng.below(ids.len() as u64 / 2) as usize;
+            let start = rng.below((ids.len() - k) as u64 + 1) as usize;
+            let to = *rng.choose(ContentStatus::ALL);
+            store.update_contents_status(&ids[start..start + k], to);
+        }
+        // counters must equal a full scan
+        let mut scan = std::collections::HashMap::new();
+        for id in &ids {
+            *scan.entry(store.get_content(*id).unwrap().status).or_insert(0usize) += 1;
+        }
+        for s in ContentStatus::ALL {
+            let counted = store.count_contents(cid, *s);
+            let scanned = scan.get(s).copied().unwrap_or(0);
+            if counted != scanned {
+                return Err(format!("status {s}: counter {counted} != scan {scanned}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_conserves_works() {
+    check("every generated Work is unique and capped", 50, |rng| {
+        let cap = 1 + rng.below(20) as u32;
+        let wf = Workflow::new("p")
+            .add_template(WorkTemplate::new("a").max_instances(cap))
+            .add_template(WorkTemplate::new("b").max_instances(cap))
+            .add_condition(Condition::always("a", "b"))
+            .add_condition(Condition::when("b", "a", Predicate::truthy("again")))
+            .entry("a");
+        let mut e = Engine::new(wf).unwrap();
+        let mut frontier = e.start();
+        let mut seen = std::collections::HashSet::new();
+        let mut steps = 0;
+        while let Some(w) = frontier.pop() {
+            if !seen.insert(w.instance) {
+                return Err(format!("duplicate work instance {}", w.instance));
+            }
+            steps += 1;
+            if steps > 10_000 {
+                return Err("engine did not terminate".into());
+            }
+            let result = Json::obj().set("again", rng.bool(0.7));
+            frontier.extend(e.on_complete(&w, &result).map_err(|e| e.to_string())?);
+        }
+        if e.instance_count("a") > cap || e.instance_count("b") > cap {
+            return Err("cycle bound exceeded".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_carousel_conservation() {
+    check("fine carousel: every file staged+processed exactly once", 8, |rng| {
+        let spec = CampaignSpec {
+            datasets: 1 + rng.below(3) as usize,
+            files_per_dataset: 20 + rng.below(80) as usize,
+            mean_file_mb: rng.range_f64(100.0, 4000.0),
+            cartridges_per_dataset: 1 + rng.below(4) as u32,
+            seed: rng.next_u64(),
+        };
+        let cfg = CarouselConfig {
+            granularity: Granularity::Fine,
+            staging_window: 4 + rng.below(60) as usize,
+            tape_drives: 1 + rng.below(6) as usize,
+            sites: 1 + rng.below(4) as u32,
+            slots_per_site: 4 + rng.below(30) as usize,
+            files_per_job: 1 + rng.below(3) as usize,
+            ..Default::default()
+        };
+        let r = run_campaign(&cfg, &spec);
+        let files = spec.datasets * spec.files_per_dataset;
+        if r.files != files {
+            return Err(format!("files {} != {}", r.files, files));
+        }
+        if r.exhausted_jobs != 0 {
+            return Err(format!("{} exhausted jobs in fine mode", r.exhausted_jobs));
+        }
+        if r.failed_attempts != 0 {
+            return Err(format!("{} failed attempts in fine mode", r.failed_attempts));
+        }
+        if r.total_attempts as usize != r.jobs {
+            return Err(format!(
+                "attempts {} != jobs {} (must be exactly one per job)",
+                r.total_attempts, r.jobs
+            ));
+        }
+        // staged everything exactly once: last staged_files sample == files
+        let staged = r.timeline.series("staged_files");
+        let last = staged.last().map(|(_, v)| *v as usize).unwrap_or(0);
+        if last != files {
+            return Err(format!("staged {last} != {files}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_broker_at_least_once() {
+    check("every published message is delivered (ack or redeliver)", 30, |rng| {
+        let clock = SimClock::new();
+        let b = Broker::new(clock.clone()).with_redelivery_timeout(5.0);
+        let sub = b.subscribe("t");
+        let n = 1 + rng.below(100) as usize;
+        for i in 0..n {
+            b.publish("t", Json::Num(i as f64));
+        }
+        let mut acked = std::collections::HashSet::new();
+        let mut rounds = 0;
+        while acked.len() < n {
+            rounds += 1;
+            if rounds > 1000 {
+                return Err(format!("only {}/{} acked", acked.len(), n));
+            }
+            for d in b.poll(sub, 10) {
+                // randomly drop (simulating consumer crash before ack)
+                if rng.bool(0.7) {
+                    b.ack(sub, d.id);
+                    acked.insert(
+                        d.payload.as_f64().map(|f| f as u64).unwrap_or(u64::MAX),
+                    );
+                }
+            }
+            clock.advance_by(6.0); // expire unacked
+        }
+        if acked.len() != n {
+            return Err("lost messages".into());
+        }
+        Ok(())
+    });
+}
