@@ -2,14 +2,27 @@
 //! load — the L3 coordinator must not be the bottleneck.
 //!
 //!     cargo bench --bench bench_store
+//!
+//! Emits a machine-readable summary to `BENCH_store.json` (override the
+//! path with `BENCH_STORE_JSON=...`; `scripts/bench.sh` points it at the
+//! repo root) so the perf trajectory is comparable PR-over-PR.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use idds::broker::Broker;
-use idds::store::{ContentStatus, RequestKind, Store};
+use idds::store::{CollectionKind, ContentStatus, Id, RequestKind, RequestStatus, Store};
 use idds::util::bench::{section, Bencher};
 use idds::util::clock::WallClock;
 use idds::util::json::Json;
+
+fn store_with_collection(clock: &Arc<WallClock>) -> (Store, Id) {
+    let s = Store::new(clock.clone());
+    let rid = s.add_request("r", "u", RequestKind::DataCarousel, Json::Null);
+    let tid = s.add_transform(rid, "w", Json::Null);
+    let cid = s.add_collection(tid, "in", CollectionKind::Input);
+    (s, cid)
+}
 
 fn main() {
     let mut b = Bencher::from_env();
@@ -17,45 +30,173 @@ fn main() {
 
     section("store contents (file-level granularity hot path)");
     {
-        let s = Store::new(clock.clone());
-        let rid = s.add_request("r", "u", RequestKind::DataCarousel, Json::Null);
-        let tid = s.add_transform(rid, "w", Json::Null);
-        let cid = s.add_collection(tid, "in", idds::store::CollectionKind::Input);
+        let (s, cid) = store_with_collection(&clock);
         b.bench("add_contents 10k files", || {
             s.add_contents(cid, (0..10_000).map(|i| (format!("f{i}"), 1u64)))
                 .len()
         });
     }
     {
-        let s = Store::new(clock.clone());
-        let rid = s.add_request("r", "u", RequestKind::DataCarousel, Json::Null);
-        let tid = s.add_transform(rid, "w", Json::Null);
-        let cid = s.add_collection(tid, "in", idds::store::CollectionKind::Input);
+        // fresh contents per iteration, created OUTSIDE the timed region:
+        // after one full pass the rows are terminal (Released), so timing
+        // repeat passes would measure illegal-transition rejections, not
+        // updates.
+        let clock2 = clock.clone();
+        b.bench_with_setup(
+            "bulk status update 100k contents (5 passes)",
+            move || {
+                let (s, cid) = store_with_collection(&clock2);
+                let ids = s.add_contents(cid, (0..100_000).map(|i| (format!("f{i}"), 1u64)));
+                (s, ids)
+            },
+            |(s, ids)| {
+                let mut moved = 0;
+                moved += s.update_contents_status(ids.as_slice(), ContentStatus::Staging);
+                moved += s.update_contents_status(ids.as_slice(), ContentStatus::Available);
+                moved += s.update_contents_status(ids.as_slice(), ContentStatus::Delivered);
+                moved += s.update_contents_status(ids.as_slice(), ContentStatus::Processed);
+                moved += s.update_contents_status(ids.as_slice(), ContentStatus::Released);
+                assert_eq!(moved, 500_000, "every pass must move every row");
+                moved
+            },
+        );
+        let (s, cid) = store_with_collection(&clock);
         let ids = s.add_contents(cid, (0..100_000).map(|i| (format!("f{i}"), 1u64)));
-        b.bench("bulk status update 100k contents", || {
-            s.update_contents_status(&ids, ContentStatus::Staging);
-            s.update_contents_status(&ids, ContentStatus::Available);
-            s.update_contents_status(&ids, ContentStatus::Delivered);
-            s.update_contents_status(&ids, ContentStatus::Processed);
-            s.update_contents_status(&ids, ContentStatus::Released);
-            // reset path for next iteration is impossible (terminal), so
-            // re-add fresh contents outside timing? cost is dominated by
-            // the 5 passes above regardless.
-        });
+        s.update_contents_status(&ids, ContentStatus::Staging);
         b.bench("count_contents O(1) lookup", || {
-            s.count_contents(cid, ContentStatus::Released)
+            s.count_contents(cid, ContentStatus::Staging)
         });
     }
 
-    section("status index scans");
+    section("status index scans (sorted BTreeSet indexes)");
     {
         let s = Store::new(clock.clone());
         for i in 0..10_000 {
             s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null);
         }
         b.bench("requests_with_status over 10k", || {
-            s.requests_with_status(idds::store::RequestStatus::New).len()
+            s.requests_with_status(RequestStatus::New).len()
         });
+        b.bench("requests_with_status_limit 256 of 10k", || {
+            s.requests_with_status_limit(RequestStatus::New, 256).len()
+        });
+    }
+
+    section("batched transitions vs per-row loop");
+    {
+        let clock2 = clock.clone();
+        b.bench_with_setup(
+            "per-row update_request_status x4096",
+            move || {
+                let s = Store::new(clock2.clone());
+                let ids: Vec<Id> = (0..4096)
+                    .map(|i| s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null))
+                    .collect();
+                (s, ids)
+            },
+            |(s, ids)| {
+                for id in ids.iter() {
+                    s.update_request_status(*id, RequestStatus::Transforming).unwrap();
+                }
+            },
+        );
+        let clock2 = clock.clone();
+        b.bench_with_setup(
+            "batched update_requests_status x4096",
+            move || {
+                let s = Store::new(clock2.clone());
+                let ids: Vec<Id> = (0..4096)
+                    .map(|i| s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null))
+                    .collect();
+                (s, ids)
+            },
+            |(s, ids)| {
+                assert_eq!(
+                    s.update_requests_status(ids.as_slice(), RequestStatus::Transforming),
+                    4096
+                );
+            },
+        );
+    }
+
+    section("multi-thread contention (4 writers x distinct collections + 4 pollers)");
+    {
+        const COLLS: usize = 4;
+        const FILES: usize = 20_000;
+        const CHUNK: usize = 2_048;
+        let clock2 = clock.clone();
+        b.bench_with_setup(
+            "4 writers + 4 status pollers, 80k contents",
+            move || {
+                let s = Store::new(clock2.clone());
+                let rid = s.add_request("r", "u", RequestKind::DataCarousel, Json::Null);
+                let tid = s.add_transform(rid, "w", Json::Null);
+                let colls: Vec<(Id, Vec<Id>)> = (0..COLLS)
+                    .map(|c| {
+                        let cid = s.add_collection(tid, &format!("in{c}"), CollectionKind::Input);
+                        let ids =
+                            s.add_contents(cid, (0..FILES).map(|i| (format!("f{c}/{i}"), 1u64)));
+                        (cid, ids)
+                    })
+                    .collect();
+                (s, colls)
+            },
+            |(s, colls)| {
+                let done = AtomicBool::new(false);
+                let mut polls = 0usize;
+                std::thread::scope(|scope| {
+                    for (_, ids) in colls.iter() {
+                        let s = s.clone();
+                        scope.spawn(move || {
+                            for to in [
+                                ContentStatus::Staging,
+                                ContentStatus::Available,
+                                ContentStatus::Delivered,
+                                ContentStatus::Processed,
+                            ] {
+                                for chunk in ids.chunks(CHUNK) {
+                                    s.update_contents_status(chunk, to);
+                                }
+                            }
+                        });
+                    }
+                    let mut poll_handles = Vec::new();
+                    for (cid, _) in colls.iter() {
+                        let s = s.clone();
+                        let done = &done;
+                        let cid = *cid;
+                        poll_handles.push(scope.spawn(move || {
+                            let mut n = 0usize;
+                            while !done.load(Ordering::Relaxed) {
+                                std::hint::black_box(
+                                    s.count_contents(cid, ContentStatus::Available),
+                                );
+                                std::hint::black_box(
+                                    s.contents_with_status(cid, ContentStatus::Delivered).len(),
+                                );
+                                n += 1;
+                            }
+                            n
+                        }));
+                    }
+                    // scope joins writers when the closure returns; signal
+                    // pollers once writers are done by watching progress
+                    for (cid, _) in colls.iter() {
+                        while s.count_contents(*cid, ContentStatus::Processed) < FILES {
+                            std::thread::yield_now();
+                        }
+                    }
+                    done.store(true, Ordering::Relaxed);
+                    for h in poll_handles {
+                        polls += h.join().unwrap();
+                    }
+                });
+                for (cid, _) in colls.iter() {
+                    assert_eq!(s.count_contents(*cid, ContentStatus::Processed), FILES);
+                }
+                polls
+            },
+        );
     }
 
     section("broker");
@@ -89,5 +230,29 @@ fn main() {
             idds::util::json::parse(&text).unwrap()
         });
         b.bench("json serialize 100x20 object", || obj.to_string());
+        let mut buf = String::new();
+        b.bench("json serialize into reused buffer", || {
+            buf.clear();
+            obj.write_to(&mut buf);
+            buf.len()
+        });
+    }
+
+    // machine-readable summary for PR-over-PR comparison
+    let summary = Json::obj()
+        .set("bench", "bench_store")
+        .set(
+            "quick",
+            std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false),
+        )
+        .set(
+            "results",
+            Json::Arr(b.results().iter().map(|r| r.to_json()).collect()),
+        );
+    let path =
+        std::env::var("BENCH_STORE_JSON").unwrap_or_else(|_| "BENCH_store.json".to_string());
+    match std::fs::write(&path, summary.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
 }

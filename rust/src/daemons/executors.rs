@@ -33,6 +33,13 @@ pub trait Executor: Send + Sync {
 
     /// Poll a handle: `None` while running, `Some(result)` once done.
     fn poll(&self, handle: u64) -> Result<Option<Json>>;
+
+    /// Poll many handles at once. The default loops over [`Executor::poll`];
+    /// backends with internal locking override this to take their lock a
+    /// single time per Carrier tick instead of once per in-flight handle.
+    fn poll_many(&self, handles: &[u64]) -> Vec<(u64, Result<Option<Json>>)> {
+        handles.iter().map(|&h| (h, self.poll(h))).collect()
+    }
 }
 
 /// Executor registry keyed by WorkKind.
@@ -78,6 +85,11 @@ impl Executor for NoopExecutor {
 
     fn poll(&self, handle: u64) -> Result<Option<Json>> {
         Ok(self.done.lock().unwrap().remove(&handle))
+    }
+
+    fn poll_many(&self, handles: &[u64]) -> Vec<(u64, Result<Option<Json>>)> {
+        let mut done = self.done.lock().unwrap();
+        handles.iter().map(|&h| (h, Ok(done.remove(&h)))).collect()
     }
 }
 
@@ -231,17 +243,29 @@ impl Executor for RuntimeExecutor {
 
     fn poll(&self, handle: u64) -> Result<Option<Json>> {
         let mut slots = self.slots.lock().unwrap();
-        match slots.get(&handle) {
-            None => anyhow::bail!("unknown handle {handle}"),
-            Some(SlotState::Running) => Ok(None),
-            Some(SlotState::Done(_)) => {
-                let Some(SlotState::Done(j)) = slots.remove(&handle) else { unreachable!() };
-                Ok(Some(j))
-            }
-            Some(SlotState::Failed(_)) => {
-                let Some(SlotState::Failed(msg)) = slots.remove(&handle) else { unreachable!() };
-                Ok(Some(Json::obj().set("error", msg.as_str())))
-            }
+        poll_slot(&mut slots, handle)
+    }
+
+    fn poll_many(&self, handles: &[u64]) -> Vec<(u64, Result<Option<Json>>)> {
+        let mut slots = self.slots.lock().unwrap();
+        handles
+            .iter()
+            .map(|&h| (h, poll_slot(&mut slots, h)))
+            .collect()
+    }
+}
+
+fn poll_slot(slots: &mut HashMap<u64, SlotState>, handle: u64) -> Result<Option<Json>> {
+    match slots.get(&handle) {
+        None => anyhow::bail!("unknown handle {handle}"),
+        Some(SlotState::Running) => Ok(None),
+        Some(SlotState::Done(_)) => {
+            let Some(SlotState::Done(j)) = slots.remove(&handle) else { unreachable!() };
+            Ok(Some(j))
+        }
+        Some(SlotState::Failed(_)) => {
+            let Some(SlotState::Failed(msg)) = slots.remove(&handle) else { unreachable!() };
+            Ok(Some(Json::obj().set("error", msg.as_str())))
         }
     }
 }
@@ -262,6 +286,30 @@ mod tests {
         assert_eq!(r.get("x").unwrap().as_f64(), Some(1.0));
         // handle consumed
         assert!(e.poll(h).unwrap().is_none());
+    }
+
+    #[test]
+    fn poll_many_matches_per_handle_poll() {
+        let e = NoopExecutor::default();
+        let mk = |x: f64| {
+            Json::obj().set(
+                "params",
+                Json::obj().set("result", Json::obj().set("x", x)),
+            )
+        };
+        let h1 = e.submit(&mk(1.0)).unwrap();
+        let h2 = e.submit(&mk(2.0)).unwrap();
+        let out = e.poll_many(&[h1, h2, 999]);
+        assert_eq!(out.len(), 3);
+        assert_eq!(
+            out[0].1.as_ref().unwrap().as_ref().unwrap().get("x").unwrap().as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(
+            out[1].1.as_ref().unwrap().as_ref().unwrap().get("x").unwrap().as_f64(),
+            Some(2.0)
+        );
+        assert!(out[2].1.as_ref().unwrap().is_none(), "unknown handle is None for Noop");
     }
 
     #[test]

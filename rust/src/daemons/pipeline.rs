@@ -11,26 +11,74 @@
 //!                 Processing(New) → Transform Activated→Running.
 //!   Carrier     : Processing New → submit to executor → poll → Finished;
 //!                 writes the Work result and queues a message.
-//!   Conductor   : store messages New → broker publish → Delivered.
+//!   Conductor   : store messages New → claimed Delivered → broker publish
+//!                 (claim commits first; see `Store::claim_messages` docs).
 //! ```
 //!
 //! All daemon state beyond the store lives in [`Pipeline`] (the per-request
 //! workflow engines and the marshalled set) so the daemons stay restartable
 //! and the store remains the single source of truth for status.
+//!
+//! **Change-driven polling**: every store table carries a generation
+//! counter; each daemon remembers the generations it observed at the start
+//! of its last tick and skips the tick entirely when nothing it depends on
+//! has changed — no row or index lock is touched, only atomics. Skips are
+//! counted in `pipeline.<daemon>.poll_skips`. Two wrinkles:
+//!
+//! * the Clerk's finalization gate also depends on the Marshaller's
+//!   `marshalled` set, which is pipeline state, not store state — the
+//!   Marshaller bumps a shared `marshal_epoch` the Clerk observes;
+//! * the Carrier's polling stage watches *executors* complete, which is
+//!   not a store event, so only its submit stage is generation-gated.
+//!
+//! All status writes on the tick path go through the store's batched
+//! transition APIs (`update_*s_status`, `claim_messages`) — one lock
+//! acquisition per stripe touched instead of a write lock per row.
 
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::broker::Broker;
-use crate::metrics::Registry;
+use crate::metrics::{Counter, Registry};
 use crate::store::{
-    CollectionKind, Id, MessageStatus, ProcessingStatus, RequestStatus, Store, TransformStatus,
+    CollectionKind, Id, ProcessingStatus, RequestStatus, Store, TransformStatus,
 };
 use crate::util::json::Json;
 use crate::workflow::{Engine as WfEngine, Work, Workflow};
 
 use super::executors::ExecutorSet;
 use super::Daemon;
+
+/// Generation snapshot a daemon compares against; `u64::MAX` means "never
+/// polled" so the first tick always runs.
+struct Seen(AtomicU64);
+
+impl Seen {
+    fn new() -> Self {
+        Seen(AtomicU64::new(u64::MAX))
+    }
+
+    /// True when `gen` matches the last observed value; otherwise records
+    /// `gen` and returns false. Recording happens *before* the tick runs,
+    /// so a daemon's own writes re-arm the next tick rather than being
+    /// masked.
+    fn unchanged(&self, gen: u64) -> bool {
+        if self.0.load(Ordering::Acquire) == gen {
+            true
+        } else {
+            self.0.store(gen, Ordering::Release);
+            false
+        }
+    }
+
+    /// Force the next tick to run — for daemons that stop at their batch
+    /// limit with work left over but without having written to the store
+    /// (the generations alone would mask the leftovers).
+    fn rearm(&self) {
+        self.0.store(u64::MAX, Ordering::Release);
+    }
+}
 
 /// Shared pipeline context for all five daemons.
 #[derive(Clone)]
@@ -43,6 +91,9 @@ pub struct Pipeline {
     engines: Arc<Mutex<HashMap<Id, WfEngine>>>,
     /// transforms whose conditions the Marshaller has evaluated
     marshalled: Arc<Mutex<HashSet<Id>>>,
+    /// bumped whenever `marshalled` grows — the non-store signal the
+    /// Clerk's change-driven gate must observe
+    marshal_epoch: Arc<AtomicU64>,
     batch: usize,
 }
 
@@ -55,18 +106,46 @@ impl Pipeline {
             executors,
             engines: Arc::new(Mutex::new(HashMap::new())),
             marshalled: Arc::new(Mutex::new(HashSet::new())),
+            marshal_epoch: Arc::new(AtomicU64::new(0)),
             batch: 256,
         }
     }
 
     pub fn daemons(&self) -> (Clerk, Marshaller, Transformer, Carrier, Conductor) {
         (
-            Clerk { p: self.clone() },
-            Marshaller { p: self.clone() },
-            Transformer { p: self.clone() },
-            Carrier { p: self.clone() },
-            Conductor { p: self.clone() },
+            Clerk {
+                p: self.clone(),
+                skips: self.metrics.poll_skip_counter("clerk"),
+                seen_requests: Seen::new(),
+                seen_transforms: Seen::new(),
+                seen_epoch: Seen::new(),
+            },
+            Marshaller {
+                p: self.clone(),
+                skips: self.metrics.poll_skip_counter("marshaller"),
+                seen_transforms: Seen::new(),
+            },
+            Transformer {
+                p: self.clone(),
+                skips: self.metrics.poll_skip_counter("transformer"),
+                seen_transforms: Seen::new(),
+            },
+            Carrier {
+                p: self.clone(),
+                skips: self.metrics.poll_skip_counter("carrier"),
+                seen_processings: Seen::new(),
+            },
+            Conductor {
+                p: self.clone(),
+                skips: self.metrics.poll_skip_counter("conductor"),
+                seen_messages: Seen::new(),
+            },
         )
+    }
+
+    fn mark_marshalled(&self, tf_id: Id) {
+        self.marshalled.lock().unwrap().insert(tf_id);
+        self.marshal_epoch.fetch_add(1, Ordering::Release);
     }
 
     fn add_work_transform(&self, request_id: Id, work: &Work) {
@@ -92,6 +171,10 @@ impl Pipeline {
 /// Clerk: request intake + finalization.
 pub struct Clerk {
     pub(crate) p: Pipeline,
+    skips: Arc<Counter>,
+    seen_requests: Seen,
+    seen_transforms: Seen,
+    seen_epoch: Seen,
 }
 
 impl Daemon for Clerk {
@@ -100,14 +183,26 @@ impl Daemon for Clerk {
     }
 
     fn poll_once(&self) -> usize {
+        let rg = self.p.store.requests_generation();
+        let tg = self.p.store.transforms_generation();
+        let me = self.p.marshal_epoch.load(Ordering::Acquire);
+        // bitwise &, not &&: all three snapshots must be recorded even
+        // when an earlier one already differs
+        if self.seen_requests.unchanged(rg)
+            & self.seen_transforms.unchanged(tg)
+            & self.seen_epoch.unchanged(me)
+        {
+            self.skips.inc();
+            return 0;
+        }
         let mut n = 0;
         // intake
+        let mut to_transforming: Vec<Id> = Vec::new();
+        let mut to_failed: Vec<Id> = Vec::new();
         for req_id in self
             .p
             .store
-            .requests_with_status(RequestStatus::New)
-            .into_iter()
-            .take(self.p.batch)
+            .requests_with_status_limit(RequestStatus::New, self.p.batch)
         {
             n += 1;
             let Ok(req) = self.p.store.get_request(req_id) else { continue };
@@ -118,27 +213,28 @@ impl Daemon for Clerk {
                     for w in &works {
                         self.p.add_work_transform(req_id, w);
                     }
-                    let _ = self
-                        .p
-                        .store
-                        .update_request_status(req_id, RequestStatus::Transforming);
+                    to_transforming.push(req_id);
                 }
                 Err(e) => {
                     log::warn!("clerk: request {req_id} invalid workflow: {e}");
-                    let _ = self
-                        .p
-                        .store
-                        .update_request_status(req_id, RequestStatus::Failed);
+                    to_failed.push(req_id);
                 }
             }
         }
+        self.p
+            .store
+            .update_requests_status(&to_transforming, RequestStatus::Transforming);
+        self.p
+            .store
+            .update_requests_status(&to_failed, RequestStatus::Failed);
         // finalization
+        let mut finish: Vec<Id> = Vec::new();
+        let mut subfinish: Vec<Id> = Vec::new();
+        let mut fail: Vec<Id> = Vec::new();
         for req_id in self
             .p
             .store
-            .requests_with_status(RequestStatus::Transforming)
-            .into_iter()
-            .take(self.p.batch)
+            .requests_with_status_limit(RequestStatus::Transforming, self.p.batch)
         {
             let tfs = self.p.store.transforms_of_request(req_id);
             if tfs.is_empty() {
@@ -161,18 +257,34 @@ impl Daemon for Clerk {
             }
             drop(marshalled);
             if all_done {
-                let to = if !any_failed {
-                    RequestStatus::Finished
+                if !any_failed {
+                    finish.push(req_id);
                 } else if all_failed {
-                    RequestStatus::Failed
+                    fail.push(req_id);
                 } else {
-                    RequestStatus::SubFinished
-                };
-                if self.p.store.update_request_status(req_id, to).is_ok() {
-                    self.p.engines.lock().unwrap().remove(&req_id);
-                    self.p.metrics.counter("pipeline.requests_finalized").inc();
-                    n += 1;
+                    subfinish.push(req_id);
                 }
+            }
+        }
+        for (ids, to) in [
+            (&finish, RequestStatus::Finished),
+            (&subfinish, RequestStatus::SubFinished),
+            (&fail, RequestStatus::Failed),
+        ] {
+            if ids.is_empty() {
+                continue;
+            }
+            let moved = self.p.store.update_requests_status(ids, to);
+            if moved > 0 {
+                let mut engines = self.p.engines.lock().unwrap();
+                for id in ids.iter() {
+                    engines.remove(id);
+                }
+                self.p
+                    .metrics
+                    .counter("pipeline.requests_finalized")
+                    .add(moved as u64);
+                n += moved;
             }
         }
         n
@@ -184,6 +296,8 @@ impl Daemon for Clerk {
 /// Marshaller: DG evaluation on terminal transforms.
 pub struct Marshaller {
     pub(crate) p: Pipeline,
+    skips: Arc<Counter>,
+    seen_transforms: Seen,
 }
 
 impl Daemon for Marshaller {
@@ -192,8 +306,18 @@ impl Daemon for Marshaller {
     }
 
     fn poll_once(&self) -> usize {
+        if self
+            .seen_transforms
+            .unchanged(self.p.store.transforms_generation())
+        {
+            self.skips.inc();
+            return 0;
+        }
         let mut n = 0;
         for status in [TransformStatus::Finished, TransformStatus::Failed] {
+            // full fetch, not _limit: marshalled transforms stay terminal
+            // forever, so a fixed id window would starve later arrivals —
+            // the `marshalled` filter is the real cursor here
             for tf_id in self.p.store.transforms_with_status(status) {
                 if self.p.marshalled.lock().unwrap().contains(&tf_id) {
                     continue;
@@ -203,7 +327,7 @@ impl Daemon for Marshaller {
                     Ok(w) => w,
                     Err(e) => {
                         log::warn!("marshaller: transform {tf_id} bad work json: {e}");
-                        self.p.marshalled.lock().unwrap().insert(tf_id);
+                        self.p.mark_marshalled(tf_id);
                         continue;
                     }
                 };
@@ -227,10 +351,13 @@ impl Daemon for Marshaller {
                 for w in &new_works {
                     self.p.add_work_transform(tf.request_id, w);
                 }
-                self.p.marshalled.lock().unwrap().insert(tf_id);
+                self.p.mark_marshalled(tf_id);
                 self.p.metrics.counter("pipeline.transforms_marshalled").inc();
                 n += 1;
                 if n >= self.p.batch {
+                    // leftovers remain but marshalling itself may not have
+                    // written to the store — force the next tick to run
+                    self.seen_transforms.rearm();
                     return n;
                 }
             }
@@ -244,6 +371,8 @@ impl Daemon for Marshaller {
 /// Transformer: attach collections, create processings.
 pub struct Transformer {
     pub(crate) p: Pipeline,
+    skips: Arc<Counter>,
+    seen_transforms: Seen,
 }
 
 impl Daemon for Transformer {
@@ -252,13 +381,18 @@ impl Daemon for Transformer {
     }
 
     fn poll_once(&self) -> usize {
-        let mut n = 0;
+        if self
+            .seen_transforms
+            .unchanged(self.p.store.transforms_generation())
+        {
+            self.skips.inc();
+            return 0;
+        }
+        let mut activated: Vec<Id> = Vec::new();
         for tf_id in self
             .p
             .store
-            .transforms_with_status(TransformStatus::New)
-            .into_iter()
-            .take(self.p.batch)
+            .transforms_with_status_limit(TransformStatus::New, self.p.batch)
         {
             let Ok(tf) = self.p.store.get_transform(tf_id) else { continue };
             // input collection from params.input_files (name:size pairs), if any
@@ -286,18 +420,22 @@ impl Daemon for Transformer {
                 CollectionKind::Output,
             );
             self.p.store.add_processing(tf_id);
-            let _ = self
-                .p
-                .store
-                .update_transform_status(tf_id, TransformStatus::Activated);
-            let _ = self
-                .p
-                .store
-                .update_transform_status(tf_id, TransformStatus::Running);
-            self.p.metrics.counter("pipeline.transforms_activated").inc();
-            n += 1;
+            activated.push(tf_id);
         }
-        n
+        if activated.is_empty() {
+            return 0;
+        }
+        self.p
+            .store
+            .update_transforms_status(&activated, TransformStatus::Activated);
+        self.p
+            .store
+            .update_transforms_status(&activated, TransformStatus::Running);
+        self.p
+            .metrics
+            .counter("pipeline.transforms_activated")
+            .add(activated.len() as u64);
+        activated.len()
     }
 }
 
@@ -306,6 +444,8 @@ impl Daemon for Transformer {
 /// Carrier: submit processings to executors and poll them.
 pub struct Carrier {
     pub(crate) p: Pipeline,
+    skips: Arc<Counter>,
+    seen_processings: Seen,
 }
 
 impl Daemon for Carrier {
@@ -314,109 +454,154 @@ impl Daemon for Carrier {
     }
 
     fn poll_once(&self) -> usize {
+        // submit stage: driven purely by store state, so it is gated
         let mut n = 0;
-        // submit new processings
-        for pid in self
-            .p
-            .store
-            .processings_with_status(ProcessingStatus::New)
-            .into_iter()
-            .take(self.p.batch)
+        if self
+            .seen_processings
+            .unchanged(self.p.store.processings_generation())
         {
-            let Ok(proc) = self.p.store.get_processing(pid) else { continue };
-            let Ok(tf) = self.p.store.get_transform(proc.transform_id) else { continue };
-            let kind = tf.work.get("kind").and_then(|k| k.as_str()).unwrap_or("Noop");
+            self.skips.inc();
+        } else {
+            n += self.submit_new();
+        }
+        // polling stage: executor completion is not a store event, so this
+        // must run every tick (cheap when the Submitted/Running sets are
+        // empty)
+        n + self.poll_running()
+    }
+}
+
+impl Carrier {
+    fn submit_new(&self) -> usize {
+        let store = &self.p.store;
+        let mut items: Vec<(Id, Id, Json)> = Vec::new(); // (pid, transform_id, work)
+        for pid in store.processings_with_status_limit(ProcessingStatus::New, self.p.batch) {
+            let Ok(proc) = store.get_processing(pid) else { continue };
+            let Ok(tf) = store.get_transform(proc.transform_id) else { continue };
+            items.push((pid, proc.transform_id, tf.work));
+        }
+        if items.is_empty() {
+            return 0;
+        }
+        let pids: Vec<Id> = items.iter().map(|(pid, _, _)| *pid).collect();
+        store.update_processings_status(&pids, ProcessingStatus::Submitting);
+        let mut submitted: Vec<Id> = Vec::new();
+        let mut failed: Vec<Id> = Vec::new();
+        let mut failed_tfs: Vec<Id> = Vec::new();
+        for (pid, tf_id, work) in &items {
+            let kind = work.get("kind").and_then(|k| k.as_str()).unwrap_or("Noop");
             let Some(exec) = self.p.executors.get(kind) else {
                 log::warn!("carrier: no executor for kind '{kind}'");
-                let _ = self
-                    .p
-                    .store
-                    .update_processing_status(pid, ProcessingStatus::Submitting);
-                let _ = self
-                    .p
-                    .store
-                    .update_processing_status(pid, ProcessingStatus::Failed);
-                let _ = self
-                    .p
-                    .store
-                    .update_transform_status(proc.transform_id, TransformStatus::Failed);
-                n += 1;
+                failed.push(*pid);
+                failed_tfs.push(*tf_id);
                 continue;
             };
-            let _ = self
-                .p
-                .store
-                .update_processing_status(pid, ProcessingStatus::Submitting);
-            match exec.submit(&tf.work) {
+            match exec.submit(work) {
                 Ok(handle) => {
-                    let _ = self.p.store.set_processing_wfm_task(pid, handle);
-                    let _ = self
-                        .p
-                        .store
-                        .update_processing_status(pid, ProcessingStatus::Submitted);
-                    self.p.metrics.counter("pipeline.processings_submitted").inc();
+                    let _ = store.set_processing_wfm_task(*pid, handle);
+                    submitted.push(*pid);
                 }
                 Err(e) => {
                     log::warn!("carrier: submit failed: {e}");
-                    let _ = self
-                        .p
-                        .store
-                        .update_processing_status(pid, ProcessingStatus::Failed);
-                    let _ = self
-                        .p
-                        .store
-                        .update_transform_status(proc.transform_id, TransformStatus::Failed);
+                    failed.push(*pid);
+                    failed_tfs.push(*tf_id);
                 }
             }
-            n += 1;
         }
-        // poll running processings
+        let moved = store.update_processings_status(&submitted, ProcessingStatus::Submitted);
+        if moved > 0 {
+            self.p
+                .metrics
+                .counter("pipeline.processings_submitted")
+                .add(moved as u64);
+        }
+        store.update_processings_status(&failed, ProcessingStatus::Failed);
+        store.update_transforms_status(&failed_tfs, TransformStatus::Failed);
+        items.len()
+    }
+
+    fn poll_running(&self) -> usize {
+        let store = &self.p.store;
+        // gather in-flight processings grouped by executor kind so each
+        // backend is polled once per tick via poll_many
+        struct InFlight {
+            pid: Id,
+            tf_id: Id,
+            request_id: Id,
+            tf_name: String,
+            handle: u64,
+            work: Json,
+            was_submitted: bool,
+        }
+        let mut by_kind: HashMap<String, Vec<InFlight>> = HashMap::new();
         for status in [ProcessingStatus::Submitted, ProcessingStatus::Running] {
-            for pid in self.p.store.processings_with_status(status) {
-                let Ok(proc) = self.p.store.get_processing(pid) else { continue };
-                let Ok(tf) = self.p.store.get_transform(proc.transform_id) else { continue };
-                let kind = tf.work.get("kind").and_then(|k| k.as_str()).unwrap_or("Noop");
-                let Some(exec) = self.p.executors.get(kind) else { continue };
+            for pid in store.processings_with_status(status) {
+                let Ok(proc) = store.get_processing(pid) else { continue };
+                let Ok(tf) = store.get_transform(proc.transform_id) else { continue };
                 let Some(handle) = proc.wfm_task else { continue };
-                match exec.poll(handle) {
+                let kind = tf
+                    .work
+                    .get("kind")
+                    .and_then(|k| k.as_str())
+                    .unwrap_or("Noop")
+                    .to_string();
+                by_kind.entry(kind).or_default().push(InFlight {
+                    pid,
+                    tf_id: proc.transform_id,
+                    request_id: tf.request_id,
+                    tf_name: tf.name,
+                    handle,
+                    work: tf.work,
+                    was_submitted: status == ProcessingStatus::Submitted,
+                });
+            }
+        }
+        if by_kind.is_empty() {
+            return 0;
+        }
+        let mut n = 0;
+        let mut still_running: Vec<Id> = Vec::new();
+        let mut fin_pids: Vec<Id> = Vec::new();
+        let mut fail_pids: Vec<Id> = Vec::new();
+        let mut fin_tfs: Vec<Id> = Vec::new();
+        let mut fail_tfs: Vec<Id> = Vec::new();
+        for (kind, items) in by_kind {
+            let Some(exec) = self.p.executors.get(&kind) else { continue };
+            let handles: Vec<u64> = items.iter().map(|i| i.handle).collect();
+            // match results by handle key, not position — the trait does
+            // not promise input ordering
+            let mut results: HashMap<u64, anyhow::Result<Option<Json>>> =
+                exec.poll_many(&handles).into_iter().collect();
+            for item in items {
+                let Some(res) = results.remove(&item.handle) else { continue };
+                match res {
                     Ok(None) => {
-                        let _ = self
-                            .p
-                            .store
-                            .update_processing_status(pid, ProcessingStatus::Running);
+                        if item.was_submitted {
+                            still_running.push(item.pid);
+                        }
                     }
                     Ok(Some(result)) => {
                         let failed = !result.get("error").map(Json::is_null).unwrap_or(true);
-                        let work = tf.work.clone().set("result", result.clone());
-                        let _ = self.p.store.update_transform_work(proc.transform_id, work);
-                        let _ = self.p.store.update_processing_status(
-                            pid,
-                            if failed {
-                                ProcessingStatus::Failed
-                            } else {
-                                ProcessingStatus::Finished
-                            },
-                        );
-                        let _ = self.p.store.update_transform_status(
-                            proc.transform_id,
-                            if failed {
-                                TransformStatus::Failed
-                            } else {
-                                TransformStatus::Finished
-                            },
-                        );
+                        let work = item.work.set("result", result.clone());
+                        let _ = store.update_transform_work(item.tf_id, work);
+                        if failed {
+                            fail_pids.push(item.pid);
+                            fail_tfs.push(item.tf_id);
+                        } else {
+                            fin_pids.push(item.pid);
+                            fin_tfs.push(item.tf_id);
+                        }
                         // queue a Conductor message (output availability)
-                        self.p.store.add_message(
+                        store.add_message(
                             "idds.work.finished",
-                            Some(proc.transform_id),
+                            Some(item.tf_id),
                             Json::obj()
-                                .set("request_id", tf.request_id)
-                                .set("transform_id", proc.transform_id)
-                                .set("template", tf.name.as_str())
+                                .set("request_id", item.request_id)
+                                .set("transform_id", item.tf_id)
+                                .set("template", item.tf_name.as_str())
                                 .set("failed", failed)
                                 .set("result", result),
                         );
-                        self.p.metrics.counter("pipeline.processings_finished").inc();
                         n += 1;
                     }
                     Err(e) => {
@@ -424,6 +609,17 @@ impl Daemon for Carrier {
                     }
                 }
             }
+        }
+        store.update_processings_status(&still_running, ProcessingStatus::Running);
+        store.update_processings_status(&fin_pids, ProcessingStatus::Finished);
+        store.update_processings_status(&fail_pids, ProcessingStatus::Failed);
+        store.update_transforms_status(&fin_tfs, TransformStatus::Finished);
+        store.update_transforms_status(&fail_tfs, TransformStatus::Failed);
+        if n > 0 {
+            self.p
+                .metrics
+                .counter("pipeline.processings_finished")
+                .add(n as u64);
         }
         n
     }
@@ -434,6 +630,8 @@ impl Daemon for Carrier {
 /// Conductor: deliver availability notifications to consumers.
 pub struct Conductor {
     pub(crate) p: Pipeline,
+    skips: Arc<Counter>,
+    seen_messages: Seen,
 }
 
 impl Daemon for Conductor {
@@ -442,21 +640,25 @@ impl Daemon for Conductor {
     }
 
     fn poll_once(&self) -> usize {
-        let mut n = 0;
-        for mid in self
-            .p
-            .store
-            .messages_with_status(MessageStatus::New)
-            .into_iter()
-            .take(self.p.batch)
+        if self
+            .seen_messages
+            .unchanged(self.p.store.messages_generation())
         {
-            let Ok(msg) = self.p.store.get_message(mid) else { continue };
-            self.p.broker.publish(&msg.topic, msg.payload.clone());
-            let _ = self.p.store.mark_message(mid, MessageStatus::Delivered);
-            self.p.metrics.counter("pipeline.messages_delivered").inc();
-            n += 1;
+            self.skips.inc();
+            return 0;
         }
-        n
+        let msgs = self.p.store.claim_messages(self.p.batch);
+        if msgs.is_empty() {
+            return 0;
+        }
+        for msg in &msgs {
+            self.p.broker.publish(&msg.topic, msg.payload.clone());
+        }
+        self.p
+            .metrics
+            .counter("pipeline.messages_delivered")
+            .add(msgs.len() as u64);
+        msgs.len()
     }
 }
 
@@ -642,5 +844,45 @@ mod tests {
             .find(|c| c.kind == CollectionKind::Input)
             .unwrap();
         assert_eq!(p.store.contents_of_collection(input.id).len(), 2);
+    }
+
+    #[test]
+    fn change_driven_daemons_skip_quiescent_store() {
+        let p = pipeline();
+        let wf = Workflow::new("one")
+            .add_template(WorkTemplate::new("a"))
+            .entry("a");
+        p.store
+            .add_request("r", "u", RequestKind::Workflow, wf.to_json());
+        let (clerk, marsh, tfr, carrier, conductor) = p.daemons();
+        let daemons: [&dyn Daemon; 5] = [&clerk, &marsh, &tfr, &carrier, &conductor];
+        pump(&daemons, 1000);
+        let skips_after_pump: u64 = ["clerk", "marshaller", "transformer", "carrier", "conductor"]
+            .iter()
+            .map(|d| p.metrics.poll_skip_counter(d).get())
+            .sum();
+        // quiescent store: every further tick is a generation-gated skip
+        for _ in 0..5 {
+            for d in &daemons {
+                assert_eq!(d.poll_once(), 0);
+            }
+        }
+        let skips_now: u64 = ["clerk", "marshaller", "transformer", "carrier", "conductor"]
+            .iter()
+            .map(|d| p.metrics.poll_skip_counter(d).get())
+            .sum();
+        assert!(
+            skips_now >= skips_after_pump + 4 * 5,
+            "expected gated skips on a quiescent store: {skips_after_pump} -> {skips_now}"
+        );
+        // new work re-arms the gates
+        let req2 = p
+            .store
+            .add_request("r2", "u", RequestKind::Workflow, wf.to_json());
+        pump(&daemons, 1000);
+        assert_eq!(
+            p.store.get_request(req2).unwrap().status,
+            RequestStatus::Finished
+        );
     }
 }

@@ -118,6 +118,13 @@ impl Registry {
         Arc::clone(w.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::default())))
     }
 
+    /// Counter for a daemon's change-driven poll skips — ticks where the
+    /// store generations were unchanged and the daemon touched no table
+    /// lock. Standardized naming: `pipeline.<daemon>.poll_skips`.
+    pub fn poll_skip_counter(&self, daemon: &str) -> Arc<Counter> {
+        self.counter(&format!("pipeline.{daemon}.poll_skips"))
+    }
+
     pub fn gauge(&self, name: &str) -> Arc<Gauge> {
         if let Some(g) = self.inner.gauges.read().unwrap().get(name) {
             return Arc::clone(g);

@@ -34,7 +34,13 @@ impl Client {
     fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
         let auth = format!("Bearer {}", self.token);
         let headers = [("Authorization", auth.as_str()), ("Content-Type", "application/json")];
-        let body_bytes = body.map(|b| b.to_string().into_bytes()).unwrap_or_default();
+        let body_bytes = body
+            .map(|b| {
+                let mut buf = String::new();
+                b.write_to(&mut buf);
+                buf.into_bytes()
+            })
+            .unwrap_or_default();
         let (status, resp) = http_request(self.addr, method, path, &headers, &body_bytes)?;
         let j = if resp.is_empty() {
             Json::Null

@@ -51,11 +51,15 @@ pub struct Response {
 }
 
 impl Response {
-    pub fn json(status: u16, body: impl ToString) -> Response {
+    pub fn json(status: u16, body: crate::util::json::Json) -> Response {
+        // serialize through the pre-reserving buffer path — one allocation
+        // sized to the payload instead of doubling growth
+        let mut buf = String::new();
+        body.write_to(&mut buf);
         Response {
             status,
             content_type: "application/json",
-            body: body.to_string().into_bytes(),
+            body: buf.into_bytes(),
         }
     }
 
@@ -164,8 +168,19 @@ pub fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>
     }))
 }
 
-pub fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) -> Result<()> {
-    let head = format!(
+/// Write one response. `head` is a caller-owned scratch buffer so a
+/// keep-alive connection formats every response head into the same
+/// allocation.
+pub fn write_response(
+    stream: &mut TcpStream,
+    resp: &Response,
+    keep_alive: bool,
+    head: &mut String,
+) -> Result<()> {
+    use std::fmt::Write as _;
+    head.clear();
+    let _ = write!(
+        head,
         "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
         resp.status,
         status_text(resp.status),
@@ -250,6 +265,7 @@ fn handle_conn(
     stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
+    let mut head = String::with_capacity(128);
     loop {
         let req = match read_request(&mut reader) {
             Ok(Some(r)) => r,
@@ -259,6 +275,7 @@ fn handle_conn(
                     &mut stream,
                     &Response::text(400, "bad request"),
                     false,
+                    &mut head,
                 );
                 break;
             }
@@ -268,7 +285,7 @@ fn handle_conn(
             .map(|c| !c.eq_ignore_ascii_case("close"))
             .unwrap_or(true);
         let resp = handler(req);
-        write_response(&mut stream, &resp, keep)?;
+        write_response(&mut stream, &resp, keep, &mut head)?;
         if !keep {
             break;
         }

@@ -114,7 +114,12 @@ pub fn route(state: &ServerState, req: Request) -> Response {
             else {
                 return err_json(400, "missing or invalid ?status=");
             };
-            let ids = state.store.requests_with_status(status);
+            // ?limit=n serves one batch straight off the sorted status
+            // index without materializing every id
+            let ids = match req.query_param("limit").and_then(|l| l.parse::<usize>().ok()) {
+                Some(limit) => state.store.requests_with_status_limit(status, limit),
+                None => state.store.requests_with_status(status),
+            };
             ok_json(Json::obj().set(
                 "ids",
                 Json::Arr(ids.into_iter().map(Json::from).collect()),
@@ -345,6 +350,32 @@ mod tests {
         let resp = route(&s, r);
         let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
         assert_eq!(j.get("ids").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn list_by_status_with_limit() {
+        let s = state();
+        for i in 0..5 {
+            let body = format!(
+                r#"{{"name": "r{i}", "requester": "u", "workflow": {}}}"#,
+                wf_json()
+            );
+            route(&s, authed_req("POST", "/api/requests", &body));
+        }
+        let mut r = authed_req("GET", "/api/requests", "");
+        r.query = vec![("status".into(), "New".into()), ("limit".into(), "2".into())];
+        let resp = route(&s, r);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let ids = j.get("ids").unwrap().as_arr().unwrap();
+        assert_eq!(ids.len(), 2);
+        // sorted prefix of the full listing
+        let mut r = authed_req("GET", "/api/requests", "");
+        r.query = vec![("status".into(), "New".into())];
+        let resp = route(&s, r);
+        let all = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let all_ids = all.get("ids").unwrap().as_arr().unwrap();
+        assert_eq!(all_ids.len(), 5);
+        assert_eq!(&all_ids[..2], ids);
     }
 
     #[test]

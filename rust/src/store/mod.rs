@@ -2,17 +2,42 @@
 //! contents, messages.
 //!
 //! In production iDDS this is an Oracle/PostgreSQL schema; here it is an
-//! in-memory concurrent store with per-table `RwLock`s and secondary
-//! status indexes, because the five daemons poll by status
-//! (`fetch Requests in New`, `fetch Processings in Submitted`, ...) at
-//! high rates during simulation. All status updates go through
-//! transition-validated methods — illegal transitions return
-//! [`StoreError::IllegalTransition`] and leave state untouched.
+//! in-memory concurrent store built for the daemons' poll-by-status access
+//! pattern (`fetch Requests in New`, `fetch Processings in Submitted`, ...)
+//! at high rates during simulation. The hot-path design (see DESIGN.md,
+//! "Store concurrency model"):
+//!
+//! * **Lock striping** — each table's rows are sharded across
+//!   [`STRIPES`] `RwLock`ed hash maps keyed by id, so writers touching
+//!   different requests/transforms/processings/contents do not serialize
+//!   on one table-wide lock.
+//! * **Sorted status indexes** — per-status `BTreeSet<Id>` indexes behind
+//!   their own locks; `*_with_status` iterates in ascending id order with
+//!   zero per-poll sorting, and `*_with_status_limit(n)` returns just one
+//!   batch without materializing every id.
+//! * **Batched transitions** — `update_requests_status` /
+//!   `update_transforms_status` / `update_processings_status` /
+//!   `update_contents_status` move whole batches with one lock acquisition
+//!   per stripe touched, and `claim_messages` pops + marks a message batch
+//!   under a single lock.
+//! * **Generation counters** — every table carries a monotonically
+//!   increasing generation bumped on any write; a daemon tick that finds
+//!   the generation unchanged can skip the table without touching row or
+//!   index locks (change-driven polling).
+//!
+//! All status updates go through transition-validated paths — illegal
+//! transitions return [`StoreError::IllegalTransition`] (or are skipped in
+//! the batch APIs) and leave both rows and indexes untouched.
+//!
+//! Lock ordering (deadlock freedom): row-shard lock first, then status-set
+//! locks in ascending slot order (or the contents index lock). No path
+//! acquires a shard lock while holding an index lock.
 
 pub mod snapshot;
 pub mod types;
 
-use std::collections::{BTreeMap, HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::util::clock::Clock;
@@ -35,43 +60,310 @@ pub enum StoreError {
 
 pub type Result<T> = std::result::Result<T, StoreError>;
 
-/// One table: records + a status index.
-struct Table<R, S: Copy + Eq + std::hash::Hash> {
-    rows: HashMap<Id, R>,
-    by_status: HashMap<S, HashSet<Id>>,
+/// Number of row-lock stripes per table (power of two; ids are assigned
+/// sequentially, so consecutive inserts land on distinct stripes).
+const STRIPES: usize = 16;
+
+#[inline]
+fn stripe_of(id: Id) -> usize {
+    (id as usize) & (STRIPES - 1)
 }
 
-impl<R, S: Copy + Eq + std::hash::Hash> Default for Table<R, S> {
-    fn default() -> Self {
-        Table {
-            rows: HashMap::new(),
-            by_status: HashMap::new(),
+/// Row types that carry a validated status plus an update timestamp.
+trait StatusRec {
+    type S: StatusEnum;
+    fn status(&self) -> Self::S;
+    /// Apply the transition to the row (status, timestamps, ...).
+    fn apply_status(&mut self, to: Self::S, now: f64);
+}
+
+impl StatusRec for RequestRec {
+    type S = RequestStatus;
+    fn status(&self) -> RequestStatus {
+        self.status
+    }
+    fn apply_status(&mut self, to: RequestStatus, now: f64) {
+        self.status = to;
+        self.updated_at = now;
+    }
+}
+
+impl StatusRec for TransformRec {
+    type S = TransformStatus;
+    fn status(&self) -> TransformStatus {
+        self.status
+    }
+    fn apply_status(&mut self, to: TransformStatus, now: f64) {
+        self.status = to;
+        self.updated_at = now;
+    }
+}
+
+impl StatusRec for ProcessingRec {
+    type S = ProcessingStatus;
+    fn status(&self) -> ProcessingStatus {
+        self.status
+    }
+    fn apply_status(&mut self, to: ProcessingStatus, now: f64) {
+        self.status = to;
+        self.updated_at = now;
+        if to == ProcessingStatus::Submitted && self.submitted_at.is_none() {
+            self.submitted_at = Some(now);
+        }
+        if to.is_terminal() {
+            self.finished_at = Some(now);
         }
     }
 }
 
-impl<R, S: Copy + Eq + std::hash::Hash> Table<R, S> {
-    fn insert(&mut self, id: Id, status: S, rec: R) {
-        self.rows.insert(id, rec);
-        self.by_status.entry(status).or_default().insert(id);
+/// One striped table: rows sharded over [`STRIPES`] locks, plus one sorted
+/// id set per status. Index moves happen while the row's shard lock is
+/// held, so for any single id the index always applies transitions in row
+/// order; the per-status locks are acquired in ascending slot order.
+struct Sharded<R: StatusRec> {
+    kind: &'static str,
+    can: fn(R::S, R::S) -> bool,
+    shards: Vec<RwLock<HashMap<Id, R>>>,
+    status_sets: Vec<RwLock<BTreeSet<Id>>>,
+    len: AtomicUsize,
+    generation: AtomicU64,
+}
+
+impl<R: StatusRec + Clone> Sharded<R> {
+    fn new(kind: &'static str, can: fn(R::S, R::S) -> bool) -> Self {
+        Sharded {
+            kind,
+            can,
+            shards: (0..STRIPES).map(|_| RwLock::new(HashMap::new())).collect(),
+            status_sets: (0..<R::S as StatusEnum>::COUNT)
+                .map(|_| RwLock::new(BTreeSet::new()))
+                .collect(),
+            len: AtomicUsize::new(0),
+            generation: AtomicU64::new(0),
+        }
     }
 
-    fn reindex(&mut self, id: Id, from: S, to: S) {
+    fn bump(&self) {
+        self.generation.fetch_add(1, Ordering::Release);
+    }
+
+    fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    fn insert(&self, id: Id, rec: R) {
+        let status = rec.status();
+        {
+            let mut shard = self.shards[stripe_of(id)].write().unwrap();
+            shard.insert(id, rec);
+            self.status_sets[status.index()].write().unwrap().insert(id);
+        }
+        self.len.fetch_add(1, Ordering::Relaxed);
+        self.bump();
+    }
+
+    fn get(&self, id: Id) -> Option<R> {
+        self.shards[stripe_of(id)].read().unwrap().get(&id).cloned()
+    }
+
+    /// Field update without a status change; bumps the generation.
+    fn with_mut<T>(&self, id: Id, f: impl FnOnce(&mut R) -> T) -> Result<T> {
+        let out = {
+            let mut shard = self.shards[stripe_of(id)].write().unwrap();
+            shard
+                .get_mut(&id)
+                .map(f)
+                .ok_or(StoreError::NotFound { kind: self.kind, id })?
+        };
+        self.bump();
+        Ok(out)
+    }
+
+    fn ids_with_status(&self, s: R::S) -> Vec<Id> {
+        self.status_sets[s.index()].read().unwrap().iter().copied().collect()
+    }
+
+    fn ids_with_status_limit(&self, s: R::S, max: usize) -> Vec<Id> {
+        self.status_sets[s.index()]
+            .read()
+            .unwrap()
+            .iter()
+            .copied()
+            .take(max)
+            .collect()
+    }
+
+    /// Move `id` between status sets; the id's shard lock must be held.
+    fn reindex(&self, id: Id, from: R::S, to: R::S) {
+        let (a, b) = (from.index(), to.index());
+        if a < b {
+            let mut fs = self.status_sets[a].write().unwrap();
+            let mut ts = self.status_sets[b].write().unwrap();
+            fs.remove(&id);
+            ts.insert(id);
+        } else {
+            let mut ts = self.status_sets[b].write().unwrap();
+            let mut fs = self.status_sets[a].write().unwrap();
+            fs.remove(&id);
+            ts.insert(id);
+        }
+    }
+
+    fn update_status(&self, id: Id, to: R::S, now: f64) -> Result<()> {
+        {
+            let mut shard = self.shards[stripe_of(id)].write().unwrap();
+            let rec = shard
+                .get_mut(&id)
+                .ok_or(StoreError::NotFound { kind: self.kind, id })?;
+            let from = rec.status();
+            if !(self.can)(from, to) {
+                return Err(StoreError::IllegalTransition {
+                    kind: self.kind,
+                    id,
+                    from: from.to_string(),
+                    to: to.to_string(),
+                });
+            }
+            rec.apply_status(to, now);
+            if from != to {
+                self.reindex(id, from, to);
+            }
+        }
+        self.bump();
+        Ok(())
+    }
+
+    /// Bulk transition; unknown ids, no-op self-transitions and illegal
+    /// transitions are skipped, not errors — a poller may race a consumer.
+    /// Returns how many rows actually moved. One shard lock acquisition
+    /// per stripe touched; index maintenance batched per from-status run.
+    fn update_status_batch(&self, ids: &[Id], to: R::S, now: f64) -> usize {
+        if ids.is_empty() {
+            return 0;
+        }
+        let mut by_shard: Vec<Vec<Id>> = vec![Vec::new(); STRIPES];
+        for &id in ids {
+            by_shard[stripe_of(id)].push(id);
+        }
+        let mut moved = 0;
+        for (si, shard_ids) in by_shard.iter().enumerate() {
+            if shard_ids.is_empty() {
+                continue;
+            }
+            let mut shard = self.shards[si].write().unwrap();
+            let mut moves: Vec<(usize, Id)> = Vec::with_capacity(shard_ids.len());
+            for &id in shard_ids {
+                if let Some(rec) = shard.get_mut(&id) {
+                    let from = rec.status();
+                    if from != to && (self.can)(from, to) {
+                        rec.apply_status(to, now);
+                        moves.push((from.index(), id));
+                    }
+                }
+            }
+            if moves.is_empty() {
+                continue;
+            }
+            moved += moves.len();
+            moves.sort_unstable();
+            // one (from-set, to-set) lock pair per from-status run, still
+            // under the shard lock, locks ordered by slot
+            let b = to.index();
+            let mut i = 0;
+            while i < moves.len() {
+                let a = moves[i].0;
+                let mut j = i;
+                while j < moves.len() && moves[j].0 == a {
+                    j += 1;
+                }
+                if a < b {
+                    let mut fs = self.status_sets[a].write().unwrap();
+                    let mut ts = self.status_sets[b].write().unwrap();
+                    for (_, id) in &moves[i..j] {
+                        fs.remove(id);
+                        ts.insert(*id);
+                    }
+                } else {
+                    let mut ts = self.status_sets[b].write().unwrap();
+                    let mut fs = self.status_sets[a].write().unwrap();
+                    for (_, id) in &moves[i..j] {
+                        fs.remove(id);
+                        ts.insert(*id);
+                    }
+                }
+                i = j;
+            }
+        }
+        if moved > 0 {
+            self.bump();
+        }
+        moved
+    }
+
+    fn scan_ids(&self, pred: impl Fn(&R) -> bool) -> Vec<Id> {
+        let mut v = Vec::new();
+        for shard in &self.shards {
+            for (id, rec) in shard.read().unwrap().iter() {
+                if pred(rec) {
+                    v.push(*id);
+                }
+            }
+        }
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Contents: rows sharded like the other tables, but indexed per
+/// (collection, status) because the carousel polls "how many Available in
+/// coll X" constantly — counts stay O(1) and id listings stay sorted.
+#[derive(Default)]
+struct ContentsIndex {
+    by_collection: HashMap<Id, Vec<Id>>,
+    by_coll_status: HashMap<(Id, ContentStatus), BTreeSet<Id>>,
+}
+
+struct ContentsStore {
+    shards: Vec<RwLock<HashMap<Id, ContentRec>>>,
+    index: RwLock<ContentsIndex>,
+    len: AtomicUsize,
+    generation: AtomicU64,
+}
+
+impl ContentsStore {
+    fn new() -> Self {
+        ContentsStore {
+            shards: (0..STRIPES).map(|_| RwLock::new(HashMap::new())).collect(),
+            index: RwLock::new(ContentsIndex::default()),
+            len: AtomicUsize::new(0),
+            generation: AtomicU64::new(0),
+        }
+    }
+
+    fn bump(&self) {
+        self.generation.fetch_add(1, Ordering::Release);
+    }
+}
+
+/// Messages stay under one lock: the Conductor is the single consumer and
+/// [`Store::claim_messages`] must pop + mark a whole batch atomically —
+/// a queue gains nothing from striping but loses the single-lock claim.
+#[derive(Default)]
+struct MessagesTable {
+    rows: HashMap<Id, MessageRec>,
+    by_status: HashMap<MessageStatus, BTreeSet<Id>>,
+}
+
+impl MessagesTable {
+    fn reindex(&mut self, id: Id, from: MessageStatus, to: MessageStatus) {
         if let Some(set) = self.by_status.get_mut(&from) {
             set.remove(&id);
         }
         self.by_status.entry(to).or_default().insert(id);
-    }
-
-    fn ids_with_status(&self, s: S) -> Vec<Id> {
-        self.by_status
-            .get(&s)
-            .map(|set| {
-                let mut v: Vec<Id> = set.iter().copied().collect();
-                v.sort_unstable();
-                v
-            })
-            .unwrap_or_default()
     }
 }
 
@@ -84,26 +376,17 @@ pub struct Store {
 
 struct Inner {
     clock: Arc<dyn Clock>,
-    requests: RwLock<Table<RequestRec, RequestStatus>>,
-    transforms: RwLock<Table<TransformRec, TransformStatus>>,
-    processings: RwLock<Table<ProcessingRec, ProcessingStatus>>,
+    requests: Sharded<RequestRec>,
+    transforms: Sharded<TransformRec>,
+    processings: Sharded<ProcessingRec>,
     collections: RwLock<HashMap<Id, CollectionRec>>,
-    /// contents keyed by id, with a per-collection index and per-collection
-    /// status counters (the carousel polls "how many Available in coll X"
-    /// constantly — keep it O(1)).
-    contents: RwLock<ContentsTable>,
-    messages: RwLock<Table<MessageRec, MessageStatus>>,
+    contents: ContentsStore,
+    messages: RwLock<MessagesTable>,
+    messages_gen: AtomicU64,
     /// transform -> collections index
     coll_by_transform: RwLock<HashMap<Id, Vec<Id>>>,
     /// request -> transforms index
     tf_by_request: RwLock<HashMap<Id, Vec<Id>>>,
-}
-
-#[derive(Default)]
-struct ContentsTable {
-    rows: HashMap<Id, ContentRec>,
-    by_collection: HashMap<Id, Vec<Id>>,
-    by_coll_status: HashMap<(Id, ContentStatus), HashSet<Id>>,
 }
 
 impl Store {
@@ -111,12 +394,13 @@ impl Store {
         Store {
             inner: Arc::new(Inner {
                 clock,
-                requests: RwLock::new(Table::default()),
-                transforms: RwLock::new(Table::default()),
-                processings: RwLock::new(Table::default()),
+                requests: Sharded::new("request", RequestStatus::can_transition),
+                transforms: Sharded::new("transform", TransformStatus::can_transition),
+                processings: Sharded::new("processing", ProcessingStatus::can_transition),
                 collections: RwLock::new(HashMap::new()),
-                contents: RwLock::new(ContentsTable::default()),
-                messages: RwLock::new(Table::default()),
+                contents: ContentsStore::new(),
+                messages: RwLock::new(MessagesTable::default()),
+                messages_gen: AtomicU64::new(0),
                 coll_by_transform: RwLock::new(HashMap::new()),
                 tf_by_request: RwLock::new(HashMap::new()),
             }),
@@ -125,6 +409,28 @@ impl Store {
 
     fn now(&self) -> f64 {
         self.inner.clock.now()
+    }
+
+    // -- generation counters (change-driven polling) -------------------------
+
+    pub fn requests_generation(&self) -> u64 {
+        self.inner.requests.generation()
+    }
+
+    pub fn transforms_generation(&self) -> u64 {
+        self.inner.transforms.generation()
+    }
+
+    pub fn processings_generation(&self) -> u64 {
+        self.inner.processings.generation()
+    }
+
+    pub fn contents_generation(&self) -> u64 {
+        self.inner.contents.generation.load(Ordering::Acquire)
+    }
+
+    pub fn messages_generation(&self) -> u64 {
+        self.inner.messages_gen.load(Ordering::Acquire)
     }
 
     // -- raw inserts (snapshot restore only: preserve ids + statuses) -------
@@ -149,7 +455,7 @@ impl Store {
             created_at: now,
             updated_at: now,
         };
-        self.inner.requests.write().unwrap().insert(id, status, rec);
+        self.inner.requests.insert(id, rec);
     }
 
     pub(crate) fn insert_transform_raw(
@@ -172,7 +478,7 @@ impl Store {
             created_at: now,
             updated_at: now,
         };
-        self.inner.transforms.write().unwrap().insert(id, status, rec);
+        self.inner.transforms.insert(id, rec);
         self.inner
             .tf_by_request
             .write()
@@ -216,24 +522,32 @@ impl Store {
         size_bytes: u64,
         status: ContentStatus,
     ) {
-        let mut t = self.inner.contents.write().unwrap();
-        t.rows.insert(
-            id,
-            ContentRec {
+        let c = &self.inner.contents;
+        {
+            let mut shard = c.shards[stripe_of(id)].write().unwrap();
+            shard.insert(
                 id,
-                collection_id,
-                name: name.to_string(),
-                size_bytes,
-                status,
-                ddm_file: None,
-                updated_at: self.now(),
-            },
-        );
-        t.by_collection.entry(collection_id).or_default().push(id);
-        t.by_coll_status
-            .entry((collection_id, status))
-            .or_default()
-            .insert(id);
+                ContentRec {
+                    id,
+                    collection_id,
+                    name: name.to_string(),
+                    size_bytes,
+                    status,
+                    ddm_file: None,
+                    updated_at: self.now(),
+                },
+            );
+        }
+        {
+            let mut idx = c.index.write().unwrap();
+            idx.by_collection.entry(collection_id).or_default().push(id);
+            idx.by_coll_status
+                .entry((collection_id, status))
+                .or_default()
+                .insert(id);
+        }
+        c.len.fetch_add(1, Ordering::Relaxed);
+        c.bump();
     }
 
     // -- requests -----------------------------------------------------------
@@ -257,49 +571,34 @@ impl Store {
             created_at: now,
             updated_at: now,
         };
-        self.inner
-            .requests
-            .write()
-            .unwrap()
-            .insert(id, RequestStatus::New, rec);
+        self.inner.requests.insert(id, rec);
         id
     }
 
     pub fn get_request(&self, id: Id) -> Result<RequestRec> {
         self.inner
             .requests
-            .read()
-            .unwrap()
-            .rows
-            .get(&id)
-            .cloned()
+            .get(id)
             .ok_or(StoreError::NotFound { kind: "request", id })
     }
 
     pub fn requests_with_status(&self, s: RequestStatus) -> Vec<Id> {
-        self.inner.requests.read().unwrap().ids_with_status(s)
+        self.inner.requests.ids_with_status(s)
+    }
+
+    /// First `max` ids (ascending) in status `s` — one daemon batch,
+    /// without materializing the full id list.
+    pub fn requests_with_status_limit(&self, s: RequestStatus, max: usize) -> Vec<Id> {
+        self.inner.requests.ids_with_status_limit(s, max)
     }
 
     pub fn update_request_status(&self, id: Id, to: RequestStatus) -> Result<()> {
-        let now = self.now();
-        let mut t = self.inner.requests.write().unwrap();
-        let rec = t
-            .rows
-            .get_mut(&id)
-            .ok_or(StoreError::NotFound { kind: "request", id })?;
-        let from = rec.status;
-        if !RequestStatus::can_transition(from, to) {
-            return Err(StoreError::IllegalTransition {
-                kind: "request",
-                id,
-                from: from.to_string(),
-                to: to.to_string(),
-            });
-        }
-        rec.status = to;
-        rec.updated_at = now;
-        t.reindex(id, from, to);
-        Ok(())
+        self.inner.requests.update_status(id, to, self.now())
+    }
+
+    /// Bulk transition; skips illegal members, returns how many moved.
+    pub fn update_requests_status(&self, ids: &[Id], to: RequestStatus) -> usize {
+        self.inner.requests.update_status_batch(ids, to, self.now())
     }
 
     /// Cancel a request and its non-terminal transforms/processings (the
@@ -335,11 +634,7 @@ impl Store {
             created_at: now,
             updated_at: now,
         };
-        self.inner
-            .transforms
-            .write()
-            .unwrap()
-            .insert(id, TransformStatus::New, rec);
+        self.inner.transforms.insert(id, rec);
         self.inner
             .tf_by_request
             .write()
@@ -353,16 +648,16 @@ impl Store {
     pub fn get_transform(&self, id: Id) -> Result<TransformRec> {
         self.inner
             .transforms
-            .read()
-            .unwrap()
-            .rows
-            .get(&id)
-            .cloned()
+            .get(id)
             .ok_or(StoreError::NotFound { kind: "transform", id })
     }
 
     pub fn transforms_with_status(&self, s: TransformStatus) -> Vec<Id> {
-        self.inner.transforms.read().unwrap().ids_with_status(s)
+        self.inner.transforms.ids_with_status(s)
+    }
+
+    pub fn transforms_with_status_limit(&self, s: TransformStatus, max: usize) -> Vec<Id> {
+        self.inner.transforms.ids_with_status_limit(s, max)
     }
 
     pub fn transforms_of_request(&self, request_id: Id) -> Vec<Id> {
@@ -376,47 +671,28 @@ impl Store {
     }
 
     pub fn update_transform_status(&self, id: Id, to: TransformStatus) -> Result<()> {
-        let now = self.now();
-        let mut t = self.inner.transforms.write().unwrap();
-        let rec = t
-            .rows
-            .get_mut(&id)
-            .ok_or(StoreError::NotFound { kind: "transform", id })?;
-        let from = rec.status;
-        if !TransformStatus::can_transition(from, to) {
-            return Err(StoreError::IllegalTransition {
-                kind: "transform",
-                id,
-                from: from.to_string(),
-                to: to.to_string(),
-            });
-        }
-        rec.status = to;
-        rec.updated_at = now;
-        t.reindex(id, from, to);
-        Ok(())
+        self.inner.transforms.update_status(id, to, self.now())
+    }
+
+    /// Bulk transition; skips illegal members, returns how many moved.
+    pub fn update_transforms_status(&self, ids: &[Id], to: TransformStatus) -> usize {
+        self.inner.transforms.update_status_batch(ids, to, self.now())
     }
 
     /// Update the serialized Work payload (Marshaller rewrites parameters).
     pub fn update_transform_work(&self, id: Id, work: Json) -> Result<()> {
-        let mut t = self.inner.transforms.write().unwrap();
-        let rec = t
-            .rows
-            .get_mut(&id)
-            .ok_or(StoreError::NotFound { kind: "transform", id })?;
-        rec.work = work;
-        rec.updated_at = self.inner.clock.now();
-        Ok(())
+        let now = self.now();
+        self.inner.transforms.with_mut(id, |rec| {
+            rec.work = work;
+            rec.updated_at = now;
+        })
     }
 
     pub fn bump_transform_retries(&self, id: Id) -> Result<u32> {
-        let mut t = self.inner.transforms.write().unwrap();
-        let rec = t
-            .rows
-            .get_mut(&id)
-            .ok_or(StoreError::NotFound { kind: "transform", id })?;
-        rec.retries += 1;
-        Ok(rec.retries)
+        self.inner.transforms.with_mut(id, |rec| {
+            rec.retries += 1;
+            rec.retries
+        })
     }
 
     // -- processings --------------------------------------------------------
@@ -434,77 +710,44 @@ impl Store {
             created_at: now,
             updated_at: now,
         };
-        self.inner
-            .processings
-            .write()
-            .unwrap()
-            .insert(id, ProcessingStatus::New, rec);
+        self.inner.processings.insert(id, rec);
         id
     }
 
     pub fn get_processing(&self, id: Id) -> Result<ProcessingRec> {
         self.inner
             .processings
-            .read()
-            .unwrap()
-            .rows
-            .get(&id)
-            .cloned()
+            .get(id)
             .ok_or(StoreError::NotFound { kind: "processing", id })
     }
 
     pub fn processings_with_status(&self, s: ProcessingStatus) -> Vec<Id> {
-        self.inner.processings.read().unwrap().ids_with_status(s)
+        self.inner.processings.ids_with_status(s)
+    }
+
+    pub fn processings_with_status_limit(&self, s: ProcessingStatus, max: usize) -> Vec<Id> {
+        self.inner.processings.ids_with_status_limit(s, max)
     }
 
     pub fn processings_of_transform(&self, transform_id: Id) -> Vec<Id> {
-        let t = self.inner.processings.read().unwrap();
-        let mut v: Vec<Id> = t
-            .rows
-            .values()
-            .filter(|p| p.transform_id == transform_id)
-            .map(|p| p.id)
-            .collect();
-        v.sort_unstable();
-        v
+        self.inner
+            .processings
+            .scan_ids(|p| p.transform_id == transform_id)
     }
 
     pub fn update_processing_status(&self, id: Id, to: ProcessingStatus) -> Result<()> {
-        let now = self.now();
-        let mut t = self.inner.processings.write().unwrap();
-        let rec = t
-            .rows
-            .get_mut(&id)
-            .ok_or(StoreError::NotFound { kind: "processing", id })?;
-        let from = rec.status;
-        if !ProcessingStatus::can_transition(from, to) {
-            return Err(StoreError::IllegalTransition {
-                kind: "processing",
-                id,
-                from: from.to_string(),
-                to: to.to_string(),
-            });
-        }
-        rec.status = to;
-        rec.updated_at = now;
-        if to == ProcessingStatus::Submitted && rec.submitted_at.is_none() {
-            rec.submitted_at = Some(now);
-        }
-        if to.is_terminal() {
-            rec.finished_at = Some(now);
-        }
-        t.reindex(id, from, to);
-        Ok(())
+        self.inner.processings.update_status(id, to, self.now())
+    }
+
+    /// Bulk transition; skips illegal members, returns how many moved.
+    pub fn update_processings_status(&self, ids: &[Id], to: ProcessingStatus) -> usize {
+        self.inner.processings.update_status_batch(ids, to, self.now())
     }
 
     pub fn set_processing_wfm_task(&self, id: Id, task: Id) -> Result<()> {
-        let mut t = self.inner.processings.write().unwrap();
-        let rec = t
-            .rows
-            .get_mut(&id)
-            .ok_or(StoreError::NotFound { kind: "processing", id })?;
-        rec.wfm_task = Some(task);
-        Ok(())
+        self.inner.processings.with_mut(id, |rec| {
+            rec.wfm_task = Some(task);
+        })
     }
 
     // -- collections & contents ----------------------------------------------
@@ -559,18 +802,24 @@ impl Store {
     }
 
     /// Bulk-register contents (file-level granularity is the whole point of
-    /// the paper's carousel optimization — this is called with O(100k) rows).
+    /// the paper's carousel optimization — this is called with O(100k)
+    /// rows). Rows land grouped by stripe (one lock per stripe touched),
+    /// then the index is written once; the new ids are not observable by
+    /// other threads until this returns, so the rows-then-index order
+    /// cannot be caught mid-flight.
     pub fn add_contents(
         &self,
         collection_id: Id,
         files: impl IntoIterator<Item = (String, u64)>,
     ) -> Vec<Id> {
         let now = self.now();
-        let mut t = self.inner.contents.write().unwrap();
+        let c = &self.inner.contents;
         let mut ids = Vec::new();
+        let mut by_shard: Vec<Vec<(Id, ContentRec)>> = Vec::with_capacity(STRIPES);
+        by_shard.resize_with(STRIPES, Vec::new);
         for (name, size_bytes) in files {
             let id = crate::util::next_id();
-            t.rows.insert(
+            by_shard[stripe_of(id)].push((
                 id,
                 ContentRec {
                     id,
@@ -581,23 +830,42 @@ impl Store {
                     ddm_file: None,
                     updated_at: now,
                 },
-            );
-            t.by_collection.entry(collection_id).or_default().push(id);
-            t.by_coll_status
-                .entry((collection_id, ContentStatus::New))
-                .or_default()
-                .insert(id);
+            ));
             ids.push(id);
         }
+        if ids.is_empty() {
+            return ids;
+        }
+        for (si, rows) in by_shard.into_iter().enumerate() {
+            if rows.is_empty() {
+                continue;
+            }
+            let mut shard = c.shards[si].write().unwrap();
+            shard.reserve(rows.len());
+            for (id, rec) in rows {
+                shard.insert(id, rec);
+            }
+        }
+        {
+            let mut idx = c.index.write().unwrap();
+            idx.by_collection
+                .entry(collection_id)
+                .or_default()
+                .extend(ids.iter().copied());
+            idx.by_coll_status
+                .entry((collection_id, ContentStatus::New))
+                .or_default()
+                .extend(ids.iter().copied());
+        }
+        c.len.fetch_add(ids.len(), Ordering::Relaxed);
+        c.bump();
         ids
     }
 
     pub fn get_content(&self, id: Id) -> Result<ContentRec> {
-        self.inner
-            .contents
+        self.inner.contents.shards[stripe_of(id)]
             .read()
             .unwrap()
-            .rows
             .get(&id)
             .cloned()
             .ok_or(StoreError::NotFound { kind: "content", id })
@@ -606,6 +874,7 @@ impl Store {
     pub fn contents_of_collection(&self, collection_id: Id) -> Vec<Id> {
         self.inner
             .contents
+            .index
             .read()
             .unwrap()
             .by_collection
@@ -617,21 +886,19 @@ impl Store {
     pub fn contents_with_status(&self, collection_id: Id, s: ContentStatus) -> Vec<Id> {
         self.inner
             .contents
+            .index
             .read()
             .unwrap()
             .by_coll_status
             .get(&(collection_id, s))
-            .map(|set| {
-                let mut v: Vec<Id> = set.iter().copied().collect();
-                v.sort_unstable();
-                v
-            })
+            .map(|set| set.iter().copied().collect())
             .unwrap_or_default()
     }
 
     pub fn count_contents(&self, collection_id: Id, s: ContentStatus) -> usize {
         self.inner
             .contents
+            .index
             .read()
             .unwrap()
             .by_coll_status
@@ -641,89 +908,118 @@ impl Store {
     }
 
     pub fn set_content_ddm_file(&self, id: Id, ddm_file: Id) -> Result<()> {
-        let mut t = self.inner.contents.write().unwrap();
-        let rec = t
-            .rows
-            .get_mut(&id)
-            .ok_or(StoreError::NotFound { kind: "content", id })?;
-        rec.ddm_file = Some(ddm_file);
+        let c = &self.inner.contents;
+        {
+            let mut shard = c.shards[stripe_of(id)].write().unwrap();
+            let rec = shard
+                .get_mut(&id)
+                .ok_or(StoreError::NotFound { kind: "content", id })?;
+            rec.ddm_file = Some(ddm_file);
+        }
+        c.bump();
         Ok(())
     }
 
     pub fn update_content_status(&self, id: Id, to: ContentStatus) -> Result<()> {
         let now = self.now();
-        let mut t = self.inner.contents.write().unwrap();
-        let rec = t
-            .rows
-            .get_mut(&id)
-            .ok_or(StoreError::NotFound { kind: "content", id })?;
-        let from = rec.status;
-        if !ContentStatus::can_transition(from, to) {
-            return Err(StoreError::IllegalTransition {
-                kind: "content",
-                id,
-                from: from.to_string(),
-                to: to.to_string(),
-            });
+        let c = &self.inner.contents;
+        {
+            let mut shard = c.shards[stripe_of(id)].write().unwrap();
+            let rec = shard
+                .get_mut(&id)
+                .ok_or(StoreError::NotFound { kind: "content", id })?;
+            let from = rec.status;
+            if !ContentStatus::can_transition(from, to) {
+                return Err(StoreError::IllegalTransition {
+                    kind: "content",
+                    id,
+                    from: from.to_string(),
+                    to: to.to_string(),
+                });
+            }
+            rec.status = to;
+            rec.updated_at = now;
+            let coll = rec.collection_id;
+            if from != to {
+                // index move under the shard lock so transitions of this
+                // id apply to the index in row order
+                let mut idx = c.index.write().unwrap();
+                if let Some(set) = idx.by_coll_status.get_mut(&(coll, from)) {
+                    set.remove(&id);
+                }
+                idx.by_coll_status.entry((coll, to)).or_default().insert(id);
+            }
         }
-        rec.status = to;
-        rec.updated_at = now;
-        let coll = rec.collection_id;
-        if let Some(set) = t.by_coll_status.get_mut(&(coll, from)) {
-            set.remove(&id);
-        }
-        t.by_coll_status.entry((coll, to)).or_default().insert(id);
+        c.bump();
         Ok(())
     }
 
     /// Bulk status update; returns how many actually moved (illegal
     /// transitions are skipped, not errors — a poller may race a consumer).
     ///
-    /// Perf note (EXPERIMENTS.md §Perf, L3 iteration 3): index maintenance
-    /// is batched per (collection, from-status) run instead of two hash
-    /// lookups per item — bulk carousel updates are typically uniform, so
-    /// the per-item cost collapses to one HashSet op each.
+    /// Perf note (EXPERIMENTS.md §Perf, L3 iteration 3, reworked for the
+    /// striped layout): rows are mutated one stripe at a time and index
+    /// maintenance is batched per (collection, from-status) run under that
+    /// stripe's lock — bulk carousel updates are typically uniform, so the
+    /// per-item cost collapses to one BTreeSet op each, while writers on
+    /// other stripes proceed in parallel.
     pub fn update_contents_status(&self, ids: &[Id], to: ContentStatus) -> usize {
+        if ids.is_empty() {
+            return 0;
+        }
         let now = self.now();
-        let mut t = self.inner.contents.write().unwrap();
-        // pass 1: mutate rows, collect moved ids grouped by (coll, from)
-        let mut moves: Vec<(Id, u8, Id)> = Vec::with_capacity(ids.len());
+        let c = &self.inner.contents;
+        let mut by_shard: Vec<Vec<Id>> = vec![Vec::new(); STRIPES];
         for &id in ids {
-            if let Some(rec) = t.rows.get_mut(&id) {
-                let from = rec.status;
-                if from != to && ContentStatus::can_transition(from, to) {
-                    rec.status = to;
-                    rec.updated_at = now;
-                    moves.push((rec.collection_id, from as u8, id));
+            by_shard[stripe_of(id)].push(id);
+        }
+        let mut moved = 0;
+        for (si, shard_ids) in by_shard.iter().enumerate() {
+            if shard_ids.is_empty() {
+                continue;
+            }
+            let mut shard = c.shards[si].write().unwrap();
+            // pass 1: mutate rows, collect moved ids grouped by (coll, from)
+            let mut moves: Vec<(Id, ContentStatus, Id)> = Vec::with_capacity(shard_ids.len());
+            for &id in shard_ids {
+                if let Some(rec) = shard.get_mut(&id) {
+                    let from = rec.status;
+                    if from != to && ContentStatus::can_transition(from, to) {
+                        rec.status = to;
+                        rec.updated_at = now;
+                        moves.push((rec.collection_id, from, id));
+                    }
                 }
+            }
+            if moves.is_empty() {
+                continue;
+            }
+            moved += moves.len();
+            moves.sort_unstable();
+            // pass 2: one index lookup per (coll, from) run, under the
+            // shard lock
+            let mut idx = c.index.write().unwrap();
+            let mut i = 0;
+            while i < moves.len() {
+                let (coll, from, _) = moves[i];
+                let mut j = i;
+                while j < moves.len() && moves[j].0 == coll && moves[j].1 == from {
+                    j += 1;
+                }
+                if let Some(set) = idx.by_coll_status.get_mut(&(coll, from)) {
+                    for (_, _, id) in &moves[i..j] {
+                        set.remove(id);
+                    }
+                }
+                let dest = idx.by_coll_status.entry((coll, to)).or_default();
+                for (_, _, id) in &moves[i..j] {
+                    dest.insert(*id);
+                }
+                i = j;
             }
         }
-        let moved = moves.len();
-        moves.sort_unstable_by_key(|(c, f, _)| (*c, *f));
-        // pass 2: one index lookup per (coll, from) run
-        let mut i = 0;
-        while i < moves.len() {
-            let (coll, from_u8, _) = moves[i];
-            let mut j = i;
-            while j < moves.len() && moves[j].0 == coll && moves[j].1 == from_u8 {
-                j += 1;
-            }
-            let from = ContentStatus::ALL
-                .iter()
-                .copied()
-                .find(|s| *s as u8 == from_u8)
-                .unwrap();
-            if let Some(set) = t.by_coll_status.get_mut(&(coll, from)) {
-                for (_, _, id) in &moves[i..j] {
-                    set.remove(id);
-                }
-            }
-            let dest = t.by_coll_status.entry((coll, to)).or_default();
-            dest.reserve(j - i);
-            for (_, _, id) in &moves[i..j] {
-                dest.insert(*id);
-            }
-            i = j;
+        if moved > 0 {
+            c.bump();
         }
         moved
     }
@@ -740,16 +1036,24 @@ impl Store {
             status: MessageStatus::New,
             created_at: self.now(),
         };
-        self.inner
-            .messages
-            .write()
-            .unwrap()
-            .insert(id, MessageStatus::New, rec);
+        {
+            let mut t = self.inner.messages.write().unwrap();
+            t.rows.insert(id, rec);
+            t.by_status.entry(MessageStatus::New).or_default().insert(id);
+        }
+        self.inner.messages_gen.fetch_add(1, Ordering::Release);
         id
     }
 
     pub fn messages_with_status(&self, s: MessageStatus) -> Vec<Id> {
-        self.inner.messages.read().unwrap().ids_with_status(s)
+        self.inner
+            .messages
+            .read()
+            .unwrap()
+            .by_status
+            .get(&s)
+            .map(|set| set.iter().copied().collect())
+            .unwrap_or_default()
     }
 
     pub fn get_message(&self, id: Id) -> Result<MessageRec> {
@@ -764,29 +1068,72 @@ impl Store {
     }
 
     pub fn mark_message(&self, id: Id, to: MessageStatus) -> Result<()> {
-        let mut t = self.inner.messages.write().unwrap();
-        let rec = t
-            .rows
-            .get_mut(&id)
-            .ok_or(StoreError::NotFound { kind: "message", id })?;
-        let from = rec.status;
-        rec.status = to;
-        t.reindex(id, from, to);
+        {
+            let mut t = self.inner.messages.write().unwrap();
+            let rec = t
+                .rows
+                .get_mut(&id)
+                .ok_or(StoreError::NotFound { kind: "message", id })?;
+            let from = rec.status;
+            rec.status = to;
+            t.reindex(id, from, to);
+        }
+        self.inner.messages_gen.fetch_add(1, Ordering::Release);
         Ok(())
+    }
+
+    /// Pop up to `max` New messages and mark them Delivered under a single
+    /// lock acquisition, returning the claimed records in id order — the
+    /// Conductor's whole fetch-get-mark loop collapses into one call.
+    ///
+    /// Delivery semantics: the claim commits *before* the caller forwards
+    /// the records, so a crash between claim and forward drops rather than
+    /// duplicates (at-most-once). Acceptable here because the Conductor
+    /// hands off to the in-process broker in the same tick with no failure
+    /// path, and snapshots never serialize messages anyway; an external
+    /// broker integration should add a Claimed state and ack-after-publish.
+    pub fn claim_messages(&self, max: usize) -> Vec<MessageRec> {
+        let claimed = {
+            let mut t = self.inner.messages.write().unwrap();
+            let ids: Vec<Id> = t
+                .by_status
+                .get(&MessageStatus::New)
+                .map(|set| set.iter().copied().take(max).collect())
+                .unwrap_or_default();
+            if ids.is_empty() {
+                return Vec::new();
+            }
+            let mut out = Vec::with_capacity(ids.len());
+            for &id in &ids {
+                if let Some(rec) = t.rows.get_mut(&id) {
+                    rec.status = MessageStatus::Delivered;
+                    out.push(rec.clone());
+                }
+            }
+            if let Some(set) = t.by_status.get_mut(&MessageStatus::New) {
+                for id in &ids {
+                    set.remove(id);
+                }
+            }
+            t.by_status
+                .entry(MessageStatus::Delivered)
+                .or_default()
+                .extend(ids.iter().copied());
+            out
+        };
+        self.inner.messages_gen.fetch_add(1, Ordering::Release);
+        claimed
     }
 
     // -- stats ---------------------------------------------------------------
 
     pub fn counts(&self) -> Json {
         Json::obj()
-            .set("requests", self.inner.requests.read().unwrap().rows.len())
-            .set("transforms", self.inner.transforms.read().unwrap().rows.len())
-            .set(
-                "processings",
-                self.inner.processings.read().unwrap().rows.len(),
-            )
+            .set("requests", self.inner.requests.len())
+            .set("transforms", self.inner.transforms.len())
+            .set("processings", self.inner.processings.len())
             .set("collections", self.inner.collections.read().unwrap().len())
-            .set("contents", self.inner.contents.read().unwrap().rows.len())
+            .set("contents", self.inner.contents.len.load(Ordering::Relaxed))
             .set("messages", self.inner.messages.read().unwrap().rows.len())
     }
 
@@ -911,6 +1258,24 @@ mod tests {
     }
 
     #[test]
+    fn batched_processing_transitions_stamp_timestamps() {
+        let s = store();
+        let rid = s.add_request("r", "u", RequestKind::Workflow, Json::Null);
+        let tid = s.add_transform(rid, "w", Json::Null);
+        let pids: Vec<Id> = (0..10).map(|_| s.add_processing(tid)).collect();
+        assert_eq!(s.update_processings_status(&pids, ProcessingStatus::Submitting), 10);
+        assert_eq!(s.update_processings_status(&pids, ProcessingStatus::Submitted), 10);
+        assert_eq!(s.update_processings_status(&pids, ProcessingStatus::Finished), 10);
+        for pid in &pids {
+            let p = s.get_processing(*pid).unwrap();
+            assert!(p.submitted_at.is_some());
+            assert!(p.finished_at.is_some());
+        }
+        // terminal: batch re-update moves nothing
+        assert_eq!(s.update_processings_status(&pids, ProcessingStatus::Running), 0);
+    }
+
+    #[test]
     fn messages_flow() {
         let s = store();
         let id = s.add_message("idds.output", None, Json::obj().set("file", "f1"));
@@ -919,6 +1284,27 @@ mod tests {
         s.mark_message(id, MessageStatus::Acked).unwrap();
         assert!(s.messages_with_status(MessageStatus::New).is_empty());
         assert_eq!(s.get_message(id).unwrap().status, MessageStatus::Acked);
+    }
+
+    #[test]
+    fn claim_messages_single_pass() {
+        let s = store();
+        let ids: Vec<Id> = (0..5)
+            .map(|i| s.add_message("t", None, Json::Num(i as f64)))
+            .collect();
+        let first = s.claim_messages(3);
+        assert_eq!(first.len(), 3);
+        assert_eq!(
+            first.iter().map(|m| m.id).collect::<Vec<_>>(),
+            ids[..3].to_vec(),
+            "claims pop in ascending id order"
+        );
+        assert!(first.iter().all(|m| m.status == MessageStatus::Delivered));
+        assert_eq!(s.messages_with_status(MessageStatus::New), ids[3..].to_vec());
+        let rest = s.claim_messages(100);
+        assert_eq!(rest.len(), 2);
+        assert!(s.claim_messages(100).is_empty());
+        assert_eq!(s.messages_with_status(MessageStatus::Delivered).len(), 5);
     }
 
     #[test]
@@ -936,6 +1322,49 @@ mod tests {
         assert_eq!(
             colls[0].get_path(&["contents", "New"]).unwrap().as_u64(),
             Some(2)
+        );
+    }
+
+    #[test]
+    fn generation_counters_track_writes() {
+        let s = store();
+        let g0 = s.requests_generation();
+        let id = s.add_request("r", "u", RequestKind::Workflow, Json::Null);
+        let g1 = s.requests_generation();
+        assert!(g1 > g0, "insert must bump the generation");
+        // reads leave the generation alone
+        s.requests_with_status(RequestStatus::New);
+        let _ = s.get_request(id);
+        assert_eq!(s.requests_generation(), g1);
+        s.update_request_status(id, RequestStatus::Transforming).unwrap();
+        assert!(s.requests_generation() > g1);
+        // rejected transitions do not bump
+        let g2 = s.requests_generation();
+        assert!(s.update_request_status(id, RequestStatus::New).is_err());
+        assert_eq!(s.requests_generation(), g2);
+        // other tables independent
+        let mg = s.messages_generation();
+        s.add_message("t", None, Json::Null);
+        assert!(s.messages_generation() > mg);
+        assert_eq!(s.requests_generation(), g2);
+    }
+
+    #[test]
+    fn limit_variant_is_sorted_prefix() {
+        let s = store();
+        let ids: Vec<Id> = (0..100)
+            .map(|i| s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null))
+            .collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(s.requests_with_status(RequestStatus::New), sorted);
+        assert_eq!(
+            s.requests_with_status_limit(RequestStatus::New, 7),
+            sorted[..7].to_vec()
+        );
+        assert_eq!(
+            s.requests_with_status_limit(RequestStatus::New, 1000),
+            sorted
         );
     }
 

@@ -7,6 +7,12 @@
 //! preserves every record, status, and index relation. Ids are preserved
 //! verbatim; the process-wide id counter must be advanced past the
 //! snapshot's max id by the caller (`Store::restore` returns it).
+//!
+//! Snapshot reads walk the sorted status indexes, so output order is
+//! deterministic without any sorting here. Restore goes through the raw
+//! insert paths, which rebuild the striped status indexes and bump each
+//! table's generation counter — daemons resume change-driven polling
+//! correctly after a restore.
 
 use anyhow::{Context, Result};
 

@@ -16,6 +16,14 @@ use crate::util::json::Json;
 
 pub type Id = u64;
 
+/// Dense enum key for the store's striped status indexes: every status
+/// addresses a fixed slot in a per-table array of sorted id sets, so the
+/// index for one status can be locked without touching the others.
+pub trait StatusEnum: Copy + Eq + std::hash::Hash + std::fmt::Display + 'static {
+    const COUNT: usize;
+    fn index(self) -> usize;
+}
+
 // ---------------------------------------------------------------------------
 // Status enums + transition relations
 // ---------------------------------------------------------------------------
@@ -47,6 +55,13 @@ macro_rules! status_enum {
         impl std::fmt::Display for $name {
             fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
                 f.write_str(self.as_str())
+            }
+        }
+
+        impl StatusEnum for $name {
+            const COUNT: usize = Self::ALL.len();
+            fn index(self) -> usize {
+                self as usize
             }
         }
     };

@@ -60,16 +60,39 @@ impl Bencher {
     }
 
     /// Time `f` per call; `f` should do one logical operation.
-    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+    pub fn bench<T>(&mut self, name: &str, f: impl FnMut() -> T) -> BenchResult {
+        let mut f = f;
+        self.bench_with_setup(name, || (), move |_| f())
+    }
+
+    /// Like [`Bencher::bench`], but runs `setup` before every iteration
+    /// (warmup and timed) with only `f`'s execution inside the timed
+    /// region — for operations that consume their input (e.g. driving
+    /// contents to a terminal status needs fresh rows each round). `f`
+    /// borrows the state so both its construction *and its teardown* stay
+    /// outside the timed window.
+    pub fn bench_with_setup<S, T>(
+        &mut self,
+        name: &str,
+        mut setup: impl FnMut() -> S,
+        mut f: impl FnMut(&mut S) -> T,
+    ) -> BenchResult {
         for _ in 0..self.warmup {
-            std::hint::black_box(f());
+            let mut input = setup();
+            std::hint::black_box(f(&mut input));
         }
         let mut samples = Vec::with_capacity(self.iters);
         for _ in 0..self.iters {
+            let mut input = setup();
             let t0 = Instant::now();
-            std::hint::black_box(f());
+            std::hint::black_box(f(&mut input));
             samples.push(t0.elapsed().as_nanos() as f64);
+            drop(input); // teardown after the clock stops
         }
+        self.record(name, samples)
+    }
+
+    fn record(&mut self, name: &str, mut samples: Vec<f64>) -> BenchResult {
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let res = BenchResult {
             name: name.to_string(),
@@ -125,6 +148,18 @@ mod tests {
         assert!(r.mean_ns >= 0.0);
         assert!(r.p99_ns >= r.p50_ns || r.p99_ns >= r.min_ns);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn bench_with_setup_excludes_setup_cost() {
+        let mut b = Bencher::new(0, 3);
+        let r = b.bench_with_setup(
+            "setup-heavy",
+            || std::thread::sleep(std::time::Duration::from_millis(5)),
+            |_| 1 + 1,
+        );
+        // timed region is the trivial add, not the 5ms sleep
+        assert!(r.p50_ns < 4_000_000.0, "setup leaked into timing: {}", r.p50_ns);
     }
 
     #[test]

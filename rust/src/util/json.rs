@@ -115,20 +115,49 @@ impl Json {
     /// Serialize to a compact string.
     pub fn to_string(&self) -> String {
         let mut out = String::new();
-        self.write(&mut out);
+        self.write_to(&mut out);
         out
     }
 
+    /// Append the compact serialization to a caller-reusable buffer,
+    /// pre-reserving an estimate of the encoded size so large payloads
+    /// (REST bodies, snapshots) don't reallocate repeatedly. The buffer is
+    /// appended to, not cleared — callers decide when to reuse it.
+    pub fn write_to(&self, out: &mut String) {
+        out.reserve(self.encoded_size_hint());
+        self.write(out);
+    }
+
+    /// Cheap lower-bound estimate of the serialized length (no formatting
+    /// work, one structural walk).
+    fn encoded_size_hint(&self) -> usize {
+        match self {
+            Json::Null => 4,
+            Json::Bool(_) => 5,
+            Json::Num(_) => 8,
+            Json::Str(s) => s.len() + 2,
+            Json::Arr(a) => 2 + a.iter().map(|v| v.encoded_size_hint() + 1).sum::<usize>(),
+            Json::Obj(m) => {
+                2 + m
+                    .iter()
+                    .map(|(k, v)| k.len() + 4 + v.encoded_size_hint())
+                    .sum::<usize>()
+            }
+        }
+    }
+
     fn write(&self, out: &mut String) {
+        use std::fmt::Write as _;
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(n) => {
+                // write! into the buffer directly: no per-number String
                 if n.fract() == 0.0 && n.abs() < 1e15 {
-                    out.push_str(&format!("{}", *n as i64));
+                    let _ = write!(out, "{}", *n as i64);
                 } else {
-                    out.push_str(&format!("{}", n));
+                    let _ = write!(out, "{}", n);
                 }
             }
             Json::Str(s) => write_escaped(s, out),
@@ -159,6 +188,7 @@ impl Json {
 }
 
 fn write_escaped(s: &str, out: &mut String) {
+    use std::fmt::Write as _;
     out.push('"');
     for c in s.chars() {
         match c {
@@ -167,7 +197,9 @@ fn write_escaped(s: &str, out: &mut String) {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
             c => out.push(c),
         }
     }
@@ -550,5 +582,20 @@ mod tests {
     fn deterministic_object_order() {
         let a = parse(r#"{"b":1,"a":2}"#).unwrap();
         assert_eq!(a.to_string(), r#"{"a":2,"b":1}"#);
+    }
+
+    #[test]
+    fn write_to_appends_and_matches_to_string() {
+        let j = Json::obj()
+            .set("a", 1u64)
+            .set("s", "x\ny")
+            .set("arr", Json::Arr(vec![Json::Null, Json::Bool(true)]));
+        let mut buf = String::from("prefix:");
+        j.write_to(&mut buf);
+        assert_eq!(buf, format!("prefix:{}", j.to_string()));
+        // reuse the same buffer
+        buf.clear();
+        j.write_to(&mut buf);
+        assert_eq!(parse(&buf).unwrap(), j);
     }
 }

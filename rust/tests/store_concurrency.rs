@@ -1,0 +1,293 @@
+//! Tests for the store's striped-lock hot paths: batched transitions keep
+//! transition validation and index consistency, the sorted BTreeSet status
+//! indexes match the old sort-per-poll output, and a multi-thread smoke
+//! test hammers sharded writes + status polls and re-checks every
+//! index/row relation afterwards.
+
+use std::sync::Arc;
+
+use idds::store::{
+    CollectionKind, ContentStatus, Id, ProcessingStatus, RequestKind, RequestStatus, Store,
+    TransformStatus,
+};
+use idds::util::clock::WallClock;
+use idds::util::json::Json;
+use idds::util::rng::Rng;
+
+fn store() -> Store {
+    Store::new(Arc::new(WallClock::new()))
+}
+
+/// Every id must sit in exactly the status set matching its record.
+fn assert_request_indexes_consistent(s: &Store, ids: &[Id]) {
+    for &id in ids {
+        let rec = s.get_request(id).unwrap();
+        for st in RequestStatus::ALL {
+            let in_set = s.requests_with_status(*st).contains(&id);
+            assert_eq!(
+                in_set,
+                *st == rec.status,
+                "request {id} (status {}) membership wrong for set {st}",
+                rec.status
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_transitions_enforce_validation() {
+    let s = store();
+    let fresh: Vec<Id> = (0..10)
+        .map(|i| s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null))
+        .collect();
+    // drive half of them terminal so the batch below mixes legal and
+    // illegal members
+    s.update_requests_status(&fresh[..5], RequestStatus::Transforming);
+    assert_eq!(s.update_requests_status(&fresh[..5], RequestStatus::Finished), 5);
+    // batch over everything: only the 5 still-New requests may move
+    let moved = s.update_requests_status(&fresh, RequestStatus::Transforming);
+    assert_eq!(moved, 5, "terminal members must be skipped");
+    for &id in &fresh[..5] {
+        assert_eq!(s.get_request(id).unwrap().status, RequestStatus::Finished);
+    }
+    for &id in &fresh[5..] {
+        assert_eq!(s.get_request(id).unwrap().status, RequestStatus::Transforming);
+    }
+    // unknown ids are skipped, not errors
+    assert_eq!(s.update_requests_status(&[999_999_999], RequestStatus::Failed), 0);
+    assert_request_indexes_consistent(&s, &fresh);
+}
+
+#[test]
+fn batched_transform_transitions_match_single_api() {
+    let s = store();
+    let rid = s.add_request("r", "u", RequestKind::Workflow, Json::Null);
+    let tfs: Vec<Id> = (0..20)
+        .map(|i| s.add_transform(rid, &format!("w{i}"), Json::Null))
+        .collect();
+    assert_eq!(s.update_transforms_status(&tfs, TransformStatus::Activated), 20);
+    assert_eq!(s.update_transforms_status(&tfs, TransformStatus::Running), 20);
+    // illegal for all: Running -> Activated
+    assert_eq!(s.update_transforms_status(&tfs, TransformStatus::Activated), 0);
+    for &tf in &tfs {
+        assert_eq!(s.get_transform(tf).unwrap().status, TransformStatus::Running);
+    }
+    assert_eq!(s.transforms_with_status(TransformStatus::Running).len(), 20);
+    assert!(s.transforms_with_status(TransformStatus::Activated).is_empty());
+}
+
+#[test]
+fn sorted_index_matches_legacy_sorted_output() {
+    let s = store();
+    let mut rng = Rng::new(42);
+    let ids: Vec<Id> = (0..500)
+        .map(|i| s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null))
+        .collect();
+    // random single-id walks to scramble set membership
+    for _ in 0..2000 {
+        let id = ids[rng.below(ids.len() as u64) as usize];
+        let to = *rng.choose(RequestStatus::ALL);
+        let _ = s.update_request_status(id, to);
+    }
+    for st in RequestStatus::ALL {
+        let got = s.requests_with_status(*st);
+        // the old implementation collected a HashSet and sort_unstable'd;
+        // the BTreeSet index must produce the identical ascending list
+        let mut expect: Vec<Id> = ids
+            .iter()
+            .copied()
+            .filter(|id| s.get_request(*id).unwrap().status == *st)
+            .collect();
+        expect.sort_unstable();
+        assert_eq!(got, expect, "status {st}");
+        let mut sorted_check = got.clone();
+        sorted_check.sort_unstable();
+        assert_eq!(got, sorted_check, "index listing must be ascending");
+        // limit variant: exact prefix
+        for limit in [0usize, 1, 7, got.len(), got.len() + 3] {
+            assert_eq!(
+                s.requests_with_status_limit(*st, limit),
+                got[..limit.min(got.len())].to_vec()
+            );
+        }
+    }
+}
+
+#[test]
+fn contents_sorted_listing_and_counters_agree() {
+    let s = store();
+    let rid = s.add_request("r", "u", RequestKind::DataCarousel, Json::Null);
+    let tid = s.add_transform(rid, "w", Json::Null);
+    let cid = s.add_collection(tid, "in", CollectionKind::Input);
+    let ids = s.add_contents(cid, (0..300).map(|i| (format!("f{i}"), 1u64)));
+    let mut rng = Rng::new(7);
+    for _ in 0..200 {
+        let k = 1 + rng.below(80) as usize;
+        let start = rng.below((ids.len() - k) as u64 + 1) as usize;
+        let to = *rng.choose(ContentStatus::ALL);
+        s.update_contents_status(&ids[start..start + k], to);
+    }
+    for st in ContentStatus::ALL {
+        let listed = s.contents_with_status(cid, *st);
+        let mut sorted_check = listed.clone();
+        sorted_check.sort_unstable();
+        assert_eq!(listed, sorted_check, "contents listing must be ascending");
+        assert_eq!(listed.len(), s.count_contents(cid, *st));
+        for &id in &listed {
+            assert_eq!(s.get_content(id).unwrap().status, *st);
+        }
+    }
+    let total: usize = ContentStatus::ALL
+        .iter()
+        .map(|st| s.count_contents(cid, *st))
+        .sum();
+    assert_eq!(total, ids.len(), "every row in exactly one status set");
+}
+
+#[test]
+fn multithread_smoke_sharded_writes_and_polls() {
+    let s = store();
+    let rid = s.add_request("r", "u", RequestKind::DataCarousel, Json::Null);
+    let tid = s.add_transform(rid, "w", Json::Null);
+    // 4 collections, 4 writer threads with OVERLAPPING id sets plus 2
+    // poller threads; afterwards every index/row relation must hold.
+    let colls: Vec<(Id, Vec<Id>)> = (0..4)
+        .map(|c| {
+            let cid = s.add_collection(tid, &format!("in{c}"), CollectionKind::Input);
+            let ids = s.add_contents(cid, (0..2000).map(|i| (format!("f{c}/{i}"), 1u64)));
+            (cid, ids)
+        })
+        .collect();
+    let pids: Vec<Id> = (0..1000).map(|_| s.add_processing(tid)).collect();
+    std::thread::scope(|scope| {
+        for w in 0..4 {
+            let s = s.clone();
+            let colls = &colls;
+            let pids = &pids;
+            scope.spawn(move || {
+                let mut rng = Rng::new(1000 + w as u64);
+                for _ in 0..200 {
+                    // contents: random chunk of a random collection toward
+                    // a random status (illegal moves skipped by design)
+                    let (_, ids) = &colls[rng.below(4) as usize];
+                    let k = 1 + rng.below(400) as usize;
+                    let start = rng.below((ids.len() - k) as u64 + 1) as usize;
+                    let to = *rng.choose(ContentStatus::ALL);
+                    s.update_contents_status(&ids[start..start + k], to);
+                    // processings: batched walk on an overlapping window
+                    let pk = 1 + rng.below(200) as usize;
+                    let pstart = rng.below((pids.len() - pk) as u64 + 1) as usize;
+                    let pto = *rng.choose(ProcessingStatus::ALL);
+                    s.update_processings_status(&pids[pstart..pstart + pk], pto);
+                }
+            });
+        }
+        for r in 0..2 {
+            let s = s.clone();
+            let colls = &colls;
+            scope.spawn(move || {
+                for _ in 0..400 {
+                    for (cid, _) in colls.iter() {
+                        for st in ContentStatus::ALL {
+                            std::hint::black_box(s.count_contents(*cid, *st));
+                        }
+                    }
+                    std::hint::black_box(
+                        s.processings_with_status_limit(ProcessingStatus::Running, 64).len(),
+                    );
+                    if r == 0 {
+                        std::hint::black_box(
+                            s.processings_with_status(ProcessingStatus::Finished).len(),
+                        );
+                    }
+                }
+            });
+        }
+    });
+    // full consistency audit: rows vs indexes, everywhere
+    for (cid, ids) in &colls {
+        let mut total = 0;
+        for st in ContentStatus::ALL {
+            let listed = s.contents_with_status(*cid, *st);
+            assert_eq!(listed.len(), s.count_contents(*cid, *st));
+            for &id in &listed {
+                assert_eq!(
+                    s.get_content(id).unwrap().status,
+                    *st,
+                    "content {id} row/index disagree"
+                );
+            }
+            total += listed.len();
+        }
+        assert_eq!(total, ids.len(), "collection {cid}: row lost or duplicated");
+    }
+    let mut ptotal = 0;
+    for st in ProcessingStatus::ALL {
+        let listed = s.processings_with_status(*st);
+        for &pid in &listed {
+            assert_eq!(
+                s.get_processing(pid).unwrap().status,
+                *st,
+                "processing {pid} row/index disagree"
+            );
+        }
+        ptotal += listed.len();
+    }
+    assert_eq!(ptotal, pids.len(), "processing lost or duplicated across sets");
+}
+
+#[test]
+fn claim_messages_claims_each_exactly_once_across_threads() {
+    let s = store();
+    let n = 500usize;
+    for i in 0..n {
+        s.add_message("t", None, Json::Num(i as f64));
+    }
+    let claimed: Vec<Vec<Id>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let s = s.clone();
+                scope.spawn(move || {
+                    let mut mine = Vec::new();
+                    loop {
+                        let batch = s.claim_messages(32);
+                        if batch.is_empty() {
+                            break;
+                        }
+                        mine.extend(batch.iter().map(|m| m.id));
+                    }
+                    mine
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut all: Vec<Id> = claimed.into_iter().flatten().collect();
+    let before_dedup = all.len();
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len(), before_dedup, "a message was claimed twice");
+    assert_eq!(all.len(), n, "a message was never claimed");
+    assert!(s.messages_with_status(idds::store::MessageStatus::New).is_empty());
+}
+
+#[test]
+fn generation_counters_gate_like_daemons_do() {
+    let s = store();
+    let rid = s.add_request("r", "u", RequestKind::Workflow, Json::Null);
+    let g = s.requests_generation();
+    // a tick's worth of reads: generation stays put
+    s.requests_with_status(RequestStatus::New);
+    s.requests_with_status_limit(RequestStatus::New, 10);
+    let _ = s.get_request(rid);
+    assert_eq!(s.requests_generation(), g);
+    // a no-op batch does not bump either
+    assert_eq!(s.update_requests_status(&[], RequestStatus::Failed), 0);
+    assert_eq!(s.update_requests_status(&[rid], RequestStatus::Finished), 0); // illegal, skipped
+    assert_eq!(s.requests_generation(), g);
+    // a real move bumps exactly this table
+    let tg = s.transforms_generation();
+    assert_eq!(s.update_requests_status(&[rid], RequestStatus::Transforming), 1);
+    assert!(s.requests_generation() > g);
+    assert_eq!(s.transforms_generation(), tg);
+}

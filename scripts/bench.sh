@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Perf trajectory: run the store/carousel/workflow benches and emit
+# BENCH_store.json at the repo root so results are comparable PR-over-PR.
+# BENCH_QUICK=1 shrinks iteration counts 10x for smoke runs.
+set -euo pipefail
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$ROOT/rust"
+BENCH_STORE_JSON="$ROOT/BENCH_store.json" cargo bench --bench bench_store
+cargo bench --bench bench_carousel
+cargo bench --bench bench_workflow
+echo "wrote $ROOT/BENCH_store.json"

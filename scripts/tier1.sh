@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verify: release build + full test suite (see ROADMAP.md).
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+cargo build --release
+cargo test -q
