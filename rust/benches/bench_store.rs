@@ -199,11 +199,12 @@ fn main() {
         );
     }
 
-    section("broker");
+    section("broker: per-message vs batched publish/ack");
     {
+        // before: one mutex acquisition per publish and per ack
         let br = Broker::new(clock.clone());
         let sub = br.subscribe("t");
-        b.bench("publish+poll+ack 1k messages", || {
+        b.bench("per-message publish+poll+ack 1k", || {
             for i in 0..1000 {
                 br.publish("t", Json::Num(i as f64));
             }
@@ -211,6 +212,16 @@ fn main() {
             for d in &ds {
                 br.ack(sub, d.id);
             }
+            ds.len()
+        });
+        // after: the Conductor's fan-out shape — one lock per batch
+        let br = Broker::new(clock.clone());
+        let sub = br.subscribe("t");
+        b.bench("publish_many+poll+ack_many 1k", || {
+            br.publish_many("t", (0..1000).map(|i| Json::Num(i as f64)).collect());
+            let ds = br.poll(sub, 1000);
+            let ids: Vec<u64> = ds.iter().map(|d| d.id).collect();
+            br.ack_many(sub, &ids);
             ds.len()
         });
     }

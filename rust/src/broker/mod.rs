@@ -9,7 +9,10 @@
 //!   until acked; unacked messages past the redelivery timeout are
 //!   redelivered (property-tested in `rust/tests`),
 //! * bounded queues with backpressure signalling (publish returns the
-//!   queue depth so producers can throttle).
+//!   queue depth so producers can throttle),
+//! * batched `publish_many`/`ack_many` so high-rate producers/consumers
+//!   (the Conductor's per-tick fan-out) take the broker mutex once per
+//!   batch instead of once per message.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
@@ -121,14 +124,29 @@ impl Broker {
     /// Publish to a topic, fanning out to all subscribers. Returns the max
     /// subscriber queue depth (backpressure signal) — 0 if no subscribers.
     pub fn publish(&self, topic: &str, payload: Json) -> usize {
+        self.publish_many(topic, vec![payload])
+    }
+
+    /// Publish a whole batch to a topic under **one lock acquisition** —
+    /// the Conductor's per-tick fan-out takes the broker mutex once
+    /// instead of once per message. Returns the max subscriber queue
+    /// depth after the batch (backpressure signal) — 0 if no subscribers.
+    pub fn publish_many(&self, topic: &str, payloads: Vec<Json>) -> usize {
+        if payloads.is_empty() {
+            return 0;
+        }
         let mut inner = self.inner.lock().unwrap();
-        inner.published += 1;
-        let id = crate::util::next_id();
-        let msg = Arc::new(QueuedMsg {
-            id,
-            topic: topic.to_string(),
-            payload,
-        });
+        inner.published += payloads.len() as u64;
+        let msgs: Vec<Arc<QueuedMsg>> = payloads
+            .into_iter()
+            .map(|payload| {
+                Arc::new(QueuedMsg {
+                    id: crate::util::next_id(),
+                    topic: topic.to_string(),
+                    payload,
+                })
+            })
+            .collect();
         let subs = inner
             .topics
             .get(topic)
@@ -137,8 +155,10 @@ impl Broker {
         let mut depth = 0;
         for sub in subs {
             if let Some(q) = inner.queues.get_mut(&sub) {
-                if q.pending.len() < self.max_queue {
-                    q.pending.push_back(Arc::clone(&msg));
+                for msg in &msgs {
+                    if q.pending.len() < self.max_queue {
+                        q.pending.push_back(Arc::clone(msg));
+                    }
                 }
                 depth = depth.max(q.pending.len());
             }
@@ -205,15 +225,27 @@ impl Broker {
 
     /// Acknowledge a delivery; the message will not be redelivered.
     pub fn ack(&self, sub: SubId, msg: MsgId) -> bool {
+        self.ack_many(sub, &[msg]) == 1
+    }
+
+    /// Acknowledge a batch of deliveries under one lock acquisition.
+    /// Returns how many were actually in flight (already-acked or unknown
+    /// ids are skipped, matching [`Broker::ack`]).
+    pub fn ack_many(&self, sub: SubId, msgs: &[MsgId]) -> usize {
+        if msgs.is_empty() {
+            return 0;
+        }
         let mut inner = self.inner.lock().unwrap();
-        let mut ok = false;
+        let mut n = 0u64;
         if let Some(q) = inner.queues.get_mut(&sub) {
-            ok = q.in_flight.remove(&msg).is_some();
+            for msg in msgs {
+                if q.in_flight.remove(msg).is_some() {
+                    n += 1;
+                }
+            }
         }
-        if ok {
-            inner.acked += 1;
-        }
-        ok
+        inner.acked += n;
+        n as usize
     }
 
     /// Outstanding (pending + in-flight) for a subscriber.
@@ -315,6 +347,39 @@ mod tests {
         assert!(b.ack(s, d[0].id));
         assert!(!b.ack(s, d[0].id));
         assert_eq!(b.stats().acked, 1);
+    }
+
+    #[test]
+    fn publish_many_matches_per_message_path() {
+        let b = Broker::new(Arc::new(WallClock::new()));
+        let s1 = b.subscribe("t");
+        let s2 = b.subscribe("t");
+        let depth = b.publish_many("t", (0..10).map(|i| Json::Num(i as f64)).collect());
+        assert_eq!(depth, 10);
+        for sub in [s1, s2] {
+            let ds = b.poll(sub, 100);
+            assert_eq!(ds.len(), 10, "fan-out must reach every subscriber");
+            let payloads: Vec<f64> = ds.iter().filter_map(|d| d.payload.as_f64()).collect();
+            assert_eq!(payloads, (0..10).map(|i| i as f64).collect::<Vec<_>>(), "order kept");
+        }
+        assert_eq!(b.stats().published, 10);
+        // empty batch is a no-op
+        assert_eq!(b.publish_many("t", Vec::new()), 0);
+        assert_eq!(b.stats().published, 10);
+    }
+
+    #[test]
+    fn ack_many_acks_batch_and_skips_unknown() {
+        let b = Broker::new(Arc::new(WallClock::new()));
+        let s = b.subscribe("t");
+        b.publish_many("t", (0..5).map(|i| Json::Num(i as f64)).collect());
+        let ds = b.poll(s, 10);
+        let mut ids: Vec<MsgId> = ds.iter().map(|d| d.id).collect();
+        ids.push(999_999_999); // unknown: skipped, not an error
+        assert_eq!(b.ack_many(s, &ids), 5);
+        assert_eq!(b.ack_many(s, &ids), 0, "double ack is a no-op");
+        assert_eq!(b.stats().acked, 5);
+        assert_eq!(b.backlog(s), 0);
     }
 
     #[test]

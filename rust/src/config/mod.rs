@@ -29,6 +29,13 @@ impl Config {
         // daemons
         c.put("daemons.poll_interval_s", Json::Num(0.01));
         c.put("daemons.batch_size", Json::Num(256.0));
+        // durability (persist/): empty data_dir = in-memory only
+        c.put("persist.data_dir", Json::Str(String::new()));
+        c.put("persist.segment_bytes", Json::Num(8.0 * 1024.0 * 1024.0));
+        c.put("persist.checkpoint_interval_s", Json::Num(300.0));
+        c.put("persist.checkpoint_keep", Json::Num(2.0));
+        c.put("persist.fsync", Json::Str("group".into()));
+        c.put("persist.flush_idle_ms", Json::Num(50.0));
         // artifacts / runtime
         c.put("runtime.artifacts_dir", Json::Str("artifacts".into()));
         // DDM / tape simulator

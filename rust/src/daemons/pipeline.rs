@@ -651,14 +651,22 @@ impl Daemon for Conductor {
         if msgs.is_empty() {
             return 0;
         }
-        for msg in &msgs {
-            self.p.broker.publish(&msg.topic, msg.payload.clone());
+        let n = msgs.len();
+        // group by topic so the broker mutex is taken once per topic per
+        // tick (in practice one topic), not once per message; the claimed
+        // records are consumed, so payloads move instead of deep-cloning
+        let mut by_topic: HashMap<String, Vec<Json>> = HashMap::new();
+        for msg in msgs {
+            by_topic.entry(msg.topic).or_default().push(msg.payload);
+        }
+        for (topic, payloads) in by_topic {
+            self.p.broker.publish_many(&topic, payloads);
         }
         self.p
             .metrics
             .counter("pipeline.messages_delivered")
-            .add(msgs.len() as u64);
-        msgs.len()
+            .add(n as u64);
+        n
     }
 }
 

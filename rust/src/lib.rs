@@ -20,6 +20,7 @@
 
 pub mod util;
 pub mod config;
+pub mod persist;
 pub mod store;
 pub mod broker;
 pub mod tape;

@@ -1,7 +1,10 @@
 //! iDDS launcher: the leader entrypoint.
 //!
 //! ```text
-//! idds serve     [--set k=v ...]          run the head service + daemons
+//! idds serve     [--data-dir DIR] [--set k=v ...]
+//!                                          run the head service + daemons;
+//!                                          with a data dir, recover state
+//!                                          on boot and WAL every write
 //! idds carousel  [--scenario NAME]        Fig. 4 / Fig. 5 comparison run
 //! idds hpo       [--points N]             Bayesian-vs-random HPO run
 //! idds rubin     [--jobs N --layers L]    DAG release-policy comparison
@@ -19,6 +22,7 @@ use idds::daemons::executors::{ExecutorSet, NoopExecutor, RuntimeExecutor};
 use idds::daemons::{AgentHost, Daemon, Pipeline};
 use idds::hpo::{payload_space, BayesOpt, Strategy};
 use idds::metrics::Registry;
+use idds::persist::{Persist, PersistOptions};
 use idds::rest::{serve, ServerState};
 use idds::rubin::{generate_dag, schedule, Release};
 use idds::runtime::{default_artifacts_dir, EngineHandle};
@@ -94,11 +98,37 @@ fn main() -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let cfg = args.config()?;
+    let mut cfg = args.config()?;
+    if let Some(dir) = args.flag("data-dir") {
+        cfg.put("persist.data_dir", idds::util::json::Json::Str(dir.to_string()));
+    }
     let clock = Arc::new(WallClock::new());
     let store = Store::new(clock.clone());
     let broker = Broker::new(clock);
     let metrics = Registry::default();
+
+    // durability: recover checkpoint + WAL suffix before anything else
+    // touches the store, then leave the WAL attached for every write
+    let data_dir = cfg.str("persist.data_dir").unwrap_or_default();
+    let persist = if data_dir.is_empty() {
+        None
+    } else {
+        let opts = PersistOptions::from_config(&cfg)?;
+        let (persist, report) = Persist::open(std::path::Path::new(&data_dir), opts, &store, metrics.clone())
+            .with_context(|| format!("opening data dir {data_dir}"))?;
+        println!(
+            "recovered from {data_dir}: checkpoint {}, {} WAL events replayed ({} skipped, {} torn bytes truncated)",
+            report
+                .checkpoint_seq
+                .map(|s| format!("#{s}"))
+                .unwrap_or_else(|| "none".to_string()),
+            report.events_replayed,
+            report.events_skipped,
+            report.torn_bytes,
+        );
+        println!("recovered counts: {}", store.counts());
+        Some(persist)
+    };
 
     let engine = EngineHandle::start(&default_artifacts_dir())
         .context("loading AOT artifacts (run `make artifacts`)")?;
@@ -120,10 +150,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let interval = std::time::Duration::from_secs_f64(cfg.f64("daemons.poll_interval_s")?);
     let host = AgentHost::start(daemons, interval);
 
-    let state = ServerState::new(store, broker, metrics, &cfg);
+    // periodic checkpoints bound WAL replay time after a crash
+    if let Some(p) = &persist {
+        let every = cfg.f64("persist.checkpoint_interval_s")?;
+        if every > 0.0 {
+            let p = p.clone();
+            let store = store.clone();
+            std::thread::Builder::new()
+                .name("idds-checkpoint".into())
+                .spawn(move || loop {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(every));
+                    match p.checkpoint(&store) {
+                        Ok(r) => log::info!(
+                            "checkpoint #{} at lsn {} ({} bytes, {} wal segments pruned)",
+                            r.seq,
+                            r.start_lsn,
+                            r.bytes,
+                            r.segments_deleted
+                        ),
+                        Err(e) => log::warn!("periodic checkpoint failed: {e}"),
+                    }
+                })
+                .context("spawning checkpoint thread")?;
+        }
+    }
+
+    let mut state = ServerState::new(store, broker, metrics, &cfg);
+    if let Some(p) = &persist {
+        state = state.with_persist(p.clone());
+    }
     let server = serve(state, &cfg)?;
     println!("iDDS head service listening on {}", server.addr);
     println!("daemons: clerk, marshaller, transformer, carrier, conductor");
+    if persist.is_some() {
+        println!("durability: WAL + checkpoints under {data_dir}");
+    }
     println!("Ctrl-C to stop.");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

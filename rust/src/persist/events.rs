@@ -1,0 +1,488 @@
+//! The durability event vocabulary: every mutating store operation is
+//! described by one [`PersistEvent`], logged *after* the mutation applied
+//! and *while still holding the lock that made the touched ids
+//! discoverable* (see the "Durability model" section of DESIGN.md for why
+//! that ordering rule is what makes fuzzy checkpoints sound).
+//!
+//! Events record **applied effects, not requests**: a batch transition
+//! logs exactly the ids that actually moved, with the timestamp the store
+//! stamped on the rows, so replay never re-validates and never diverges.
+//! Insert events replay as insert-if-absent and transition events as
+//! last-write-wins, which makes replaying a WAL suffix that partially
+//! overlaps a checkpoint converge to the live state.
+
+use anyhow::{Context, Result};
+
+use crate::store::{
+    CollectionKind, ContentStatus, Id, MessageStatus, ProcessingStatus, RequestKind,
+    RequestStatus, TransformStatus,
+};
+use crate::util::json::Json;
+
+/// Sink for store mutation events. The store calls [`Persister::log`]
+/// under row/index locks, so implementations must only enqueue (no I/O,
+/// no store locks — the WAL's group-commit queue mutex is a leaf lock).
+pub trait Persister: Send + Sync {
+    fn log(&self, ev: PersistEvent);
+}
+
+/// One durable store mutation. `at` fields carry the store-stamped
+/// timestamp so replayed rows get byte-identical `created_at`/`updated_at`
+/// values.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PersistEvent {
+    AddRequest {
+        id: Id,
+        name: String,
+        requester: String,
+        kind: RequestKind,
+        workflow: Json,
+        at: f64,
+    },
+    RequestStatus {
+        ids: Vec<Id>,
+        to: RequestStatus,
+        at: f64,
+    },
+    AddTransform {
+        id: Id,
+        request_id: Id,
+        name: String,
+        work: Json,
+        at: f64,
+    },
+    TransformStatus {
+        ids: Vec<Id>,
+        to: TransformStatus,
+        at: f64,
+    },
+    TransformWork {
+        id: Id,
+        work: Json,
+        at: f64,
+    },
+    /// Absolute retry count (not an increment): idempotent on replay.
+    TransformRetries {
+        id: Id,
+        retries: u32,
+    },
+    AddProcessing {
+        id: Id,
+        transform_id: Id,
+        at: f64,
+    },
+    ProcessingStatus {
+        ids: Vec<Id>,
+        to: ProcessingStatus,
+        at: f64,
+    },
+    ProcessingWfmTask {
+        id: Id,
+        task: Id,
+    },
+    AddCollection {
+        id: Id,
+        transform_id: Id,
+        name: String,
+        kind: CollectionKind,
+        at: f64,
+    },
+    CloseCollection {
+        id: Id,
+    },
+    /// Bulk content registration: `(id, name, size_bytes)` triples, all
+    /// starting in `ContentStatus::New`.
+    AddContents {
+        collection_id: Id,
+        items: Vec<(Id, String, u64)>,
+        at: f64,
+    },
+    ContentStatus {
+        ids: Vec<Id>,
+        to: ContentStatus,
+        at: f64,
+    },
+    ContentDdmFile {
+        id: Id,
+        ddm_file: Id,
+    },
+    AddMessage {
+        id: Id,
+        topic: String,
+        source_transform: Option<Id>,
+        payload: Json,
+        at: f64,
+    },
+    MessageStatus {
+        ids: Vec<Id>,
+        to: MessageStatus,
+    },
+}
+
+fn ids_json(ids: &[Id]) -> Json {
+    Json::Arr(ids.iter().map(|&i| Json::from(i)).collect())
+}
+
+fn parse_ids(j: &Json) -> Result<Vec<Id>> {
+    j.get("ids")
+        .and_then(|a| a.as_arr())
+        .context("missing ids")?
+        .iter()
+        .map(|v| v.as_u64().context("non-integer id"))
+        .collect()
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<Id> {
+    j.get(key).and_then(|v| v.as_u64()).with_context(|| format!("missing {key}"))
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.get(key).and_then(|v| v.as_str()).with_context(|| format!("missing {key}"))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key).and_then(|v| v.as_f64()).with_context(|| format!("missing {key}"))
+}
+
+impl PersistEvent {
+    /// Tag string used as the `op` field of the encoded form.
+    pub fn op(&self) -> &'static str {
+        match self {
+            PersistEvent::AddRequest { .. } => "add_request",
+            PersistEvent::RequestStatus { .. } => "request_status",
+            PersistEvent::AddTransform { .. } => "add_transform",
+            PersistEvent::TransformStatus { .. } => "transform_status",
+            PersistEvent::TransformWork { .. } => "transform_work",
+            PersistEvent::TransformRetries { .. } => "transform_retries",
+            PersistEvent::AddProcessing { .. } => "add_processing",
+            PersistEvent::ProcessingStatus { .. } => "processing_status",
+            PersistEvent::ProcessingWfmTask { .. } => "processing_wfm_task",
+            PersistEvent::AddCollection { .. } => "add_collection",
+            PersistEvent::CloseCollection { .. } => "close_collection",
+            PersistEvent::AddContents { .. } => "add_contents",
+            PersistEvent::ContentStatus { .. } => "content_status",
+            PersistEvent::ContentDdmFile { .. } => "content_ddm_file",
+            PersistEvent::AddMessage { .. } => "add_message",
+            PersistEvent::MessageStatus { .. } => "message_status",
+        }
+    }
+
+    /// Largest id this event introduces or references — recovery advances
+    /// the process-wide id counter past the maximum over the whole log.
+    pub fn max_id(&self) -> Id {
+        match self {
+            PersistEvent::AddRequest { id, .. }
+            | PersistEvent::TransformWork { id, .. }
+            | PersistEvent::TransformRetries { id, .. }
+            | PersistEvent::CloseCollection { id }
+            | PersistEvent::AddMessage { id, .. } => *id,
+            PersistEvent::AddTransform { id, request_id, .. } => (*id).max(*request_id),
+            PersistEvent::AddProcessing { id, transform_id, .. } => (*id).max(*transform_id),
+            PersistEvent::AddCollection { id, transform_id, .. } => (*id).max(*transform_id),
+            PersistEvent::ProcessingWfmTask { id, task } => (*id).max(*task),
+            PersistEvent::ContentDdmFile { id, ddm_file } => (*id).max(*ddm_file),
+            PersistEvent::AddContents { collection_id, items, .. } => items
+                .iter()
+                .map(|(id, _, _)| *id)
+                .max()
+                .unwrap_or(0)
+                .max(*collection_id),
+            PersistEvent::RequestStatus { ids, .. }
+            | PersistEvent::TransformStatus { ids, .. }
+            | PersistEvent::ProcessingStatus { ids, .. }
+            | PersistEvent::ContentStatus { ids, .. }
+            | PersistEvent::MessageStatus { ids, .. } => ids.iter().copied().max().unwrap_or(0),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let base = Json::obj().set("op", self.op());
+        match self {
+            PersistEvent::AddRequest { id, name, requester, kind, workflow, at } => base
+                .set("id", *id)
+                .set("name", name.as_str())
+                .set("requester", requester.as_str())
+                .set("kind", kind.as_str())
+                .set("workflow", workflow.clone())
+                .set("at", *at),
+            PersistEvent::RequestStatus { ids, to, at } => {
+                base.set("ids", ids_json(ids)).set("to", to.as_str()).set("at", *at)
+            }
+            PersistEvent::AddTransform { id, request_id, name, work, at } => base
+                .set("id", *id)
+                .set("request_id", *request_id)
+                .set("name", name.as_str())
+                .set("work", work.clone())
+                .set("at", *at),
+            PersistEvent::TransformStatus { ids, to, at } => {
+                base.set("ids", ids_json(ids)).set("to", to.as_str()).set("at", *at)
+            }
+            PersistEvent::TransformWork { id, work, at } => {
+                base.set("id", *id).set("work", work.clone()).set("at", *at)
+            }
+            PersistEvent::TransformRetries { id, retries } => {
+                base.set("id", *id).set("retries", *retries)
+            }
+            PersistEvent::AddProcessing { id, transform_id, at } => {
+                base.set("id", *id).set("transform_id", *transform_id).set("at", *at)
+            }
+            PersistEvent::ProcessingStatus { ids, to, at } => {
+                base.set("ids", ids_json(ids)).set("to", to.as_str()).set("at", *at)
+            }
+            PersistEvent::ProcessingWfmTask { id, task } => {
+                base.set("id", *id).set("task", *task)
+            }
+            PersistEvent::AddCollection { id, transform_id, name, kind, at } => base
+                .set("id", *id)
+                .set("transform_id", *transform_id)
+                .set("name", name.as_str())
+                .set("kind", kind.as_str())
+                .set("at", *at),
+            PersistEvent::CloseCollection { id } => base.set("id", *id),
+            PersistEvent::AddContents { collection_id, items, at } => base
+                .set("collection_id", *collection_id)
+                .set(
+                    "items",
+                    Json::Arr(
+                        items
+                            .iter()
+                            .map(|(id, name, size)| {
+                                Json::Arr(vec![
+                                    Json::from(*id),
+                                    Json::from(name.as_str()),
+                                    Json::from(*size),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                )
+                .set("at", *at),
+            PersistEvent::ContentStatus { ids, to, at } => {
+                base.set("ids", ids_json(ids)).set("to", to.as_str()).set("at", *at)
+            }
+            PersistEvent::ContentDdmFile { id, ddm_file } => {
+                base.set("id", *id).set("ddm_file", *ddm_file)
+            }
+            PersistEvent::AddMessage { id, topic, source_transform, payload, at } => {
+                let mut j = base
+                    .set("id", *id)
+                    .set("topic", topic.as_str())
+                    .set("payload", payload.clone())
+                    .set("at", *at);
+                if let Some(src) = source_transform {
+                    j = j.set("source_transform", *src);
+                }
+                j
+            }
+            PersistEvent::MessageStatus { ids, to } => {
+                base.set("ids", ids_json(ids)).set("to", to.as_str())
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<PersistEvent> {
+        let op = req_str(j, "op")?;
+        Ok(match op {
+            "add_request" => PersistEvent::AddRequest {
+                id: req_u64(j, "id")?,
+                name: req_str(j, "name")?.to_string(),
+                requester: req_str(j, "requester")?.to_string(),
+                kind: RequestKind::parse(req_str(j, "kind")?).context("bad request kind")?,
+                workflow: j.get("workflow").cloned().unwrap_or(Json::Null),
+                at: req_f64(j, "at")?,
+            },
+            "request_status" => PersistEvent::RequestStatus {
+                ids: parse_ids(j)?,
+                to: RequestStatus::parse(req_str(j, "to")?).context("bad request status")?,
+                at: req_f64(j, "at")?,
+            },
+            "add_transform" => PersistEvent::AddTransform {
+                id: req_u64(j, "id")?,
+                request_id: req_u64(j, "request_id")?,
+                name: req_str(j, "name")?.to_string(),
+                work: j.get("work").cloned().unwrap_or(Json::Null),
+                at: req_f64(j, "at")?,
+            },
+            "transform_status" => PersistEvent::TransformStatus {
+                ids: parse_ids(j)?,
+                to: TransformStatus::parse(req_str(j, "to")?).context("bad transform status")?,
+                at: req_f64(j, "at")?,
+            },
+            "transform_work" => PersistEvent::TransformWork {
+                id: req_u64(j, "id")?,
+                work: j.get("work").cloned().unwrap_or(Json::Null),
+                at: req_f64(j, "at")?,
+            },
+            "transform_retries" => PersistEvent::TransformRetries {
+                id: req_u64(j, "id")?,
+                retries: req_u64(j, "retries")? as u32,
+            },
+            "add_processing" => PersistEvent::AddProcessing {
+                id: req_u64(j, "id")?,
+                transform_id: req_u64(j, "transform_id")?,
+                at: req_f64(j, "at")?,
+            },
+            "processing_status" => PersistEvent::ProcessingStatus {
+                ids: parse_ids(j)?,
+                to: ProcessingStatus::parse(req_str(j, "to")?).context("bad processing status")?,
+                at: req_f64(j, "at")?,
+            },
+            "processing_wfm_task" => PersistEvent::ProcessingWfmTask {
+                id: req_u64(j, "id")?,
+                task: req_u64(j, "task")?,
+            },
+            "add_collection" => PersistEvent::AddCollection {
+                id: req_u64(j, "id")?,
+                transform_id: req_u64(j, "transform_id")?,
+                name: req_str(j, "name")?.to_string(),
+                kind: CollectionKind::parse(req_str(j, "kind")?).context("bad collection kind")?,
+                at: req_f64(j, "at")?,
+            },
+            "close_collection" => PersistEvent::CloseCollection { id: req_u64(j, "id")? },
+            "add_contents" => PersistEvent::AddContents {
+                collection_id: req_u64(j, "collection_id")?,
+                items: j
+                    .get("items")
+                    .and_then(|a| a.as_arr())
+                    .context("missing items")?
+                    .iter()
+                    .map(|it| {
+                        let t = it.as_arr().context("item not a triple")?;
+                        anyhow::ensure!(t.len() == 3, "item not a triple");
+                        Ok((
+                            t[0].as_u64().context("item id")?,
+                            t[1].as_str().context("item name")?.to_string(),
+                            t[2].as_u64().context("item size")?,
+                        ))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                at: req_f64(j, "at")?,
+            },
+            "content_status" => PersistEvent::ContentStatus {
+                ids: parse_ids(j)?,
+                to: ContentStatus::parse(req_str(j, "to")?).context("bad content status")?,
+                at: req_f64(j, "at")?,
+            },
+            "content_ddm_file" => PersistEvent::ContentDdmFile {
+                id: req_u64(j, "id")?,
+                ddm_file: req_u64(j, "ddm_file")?,
+            },
+            "add_message" => PersistEvent::AddMessage {
+                id: req_u64(j, "id")?,
+                topic: req_str(j, "topic")?.to_string(),
+                source_transform: j.get("source_transform").and_then(|v| v.as_u64()),
+                payload: j.get("payload").cloned().unwrap_or(Json::Null),
+                at: req_f64(j, "at")?,
+            },
+            "message_status" => PersistEvent::MessageStatus {
+                ids: parse_ids(j)?,
+                to: MessageStatus::parse(req_str(j, "to")?).context("bad message status")?,
+            },
+            other => anyhow::bail!("unknown persist op '{other}'"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(ev: PersistEvent) {
+        let j = ev.to_json();
+        let text = j.to_string();
+        let back = PersistEvent::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(ev, back, "roundtrip via {text}");
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        roundtrip(PersistEvent::AddRequest {
+            id: 7,
+            name: "camp".into(),
+            requester: "alice".into(),
+            kind: RequestKind::DataCarousel,
+            workflow: Json::obj().set("w", 1u64),
+            at: 1.5,
+        });
+        roundtrip(PersistEvent::RequestStatus {
+            ids: vec![1, 2, 3],
+            to: RequestStatus::Transforming,
+            at: 2.0,
+        });
+        roundtrip(PersistEvent::AddTransform {
+            id: 8,
+            request_id: 7,
+            name: "w#0".into(),
+            work: Json::Null,
+            at: 0.0,
+        });
+        roundtrip(PersistEvent::TransformStatus {
+            ids: vec![8],
+            to: TransformStatus::Running,
+            at: 3.0,
+        });
+        roundtrip(PersistEvent::TransformWork { id: 8, work: Json::obj().set("k", "v"), at: 4.0 });
+        roundtrip(PersistEvent::TransformRetries { id: 8, retries: 3 });
+        roundtrip(PersistEvent::AddProcessing { id: 9, transform_id: 8, at: 5.0 });
+        roundtrip(PersistEvent::ProcessingStatus {
+            ids: vec![9],
+            to: ProcessingStatus::Finished,
+            at: 6.0,
+        });
+        roundtrip(PersistEvent::ProcessingWfmTask { id: 9, task: 77 });
+        roundtrip(PersistEvent::AddCollection {
+            id: 10,
+            transform_id: 8,
+            name: "in".into(),
+            kind: CollectionKind::Input,
+            at: 7.0,
+        });
+        roundtrip(PersistEvent::CloseCollection { id: 10 });
+        roundtrip(PersistEvent::AddContents {
+            collection_id: 10,
+            items: vec![(11, "f0".into(), 100), (12, "f1".into(), 200)],
+            at: 8.0,
+        });
+        roundtrip(PersistEvent::ContentStatus {
+            ids: vec![11, 12],
+            to: ContentStatus::Staging,
+            at: 9.0,
+        });
+        roundtrip(PersistEvent::ContentDdmFile { id: 11, ddm_file: 500 });
+        roundtrip(PersistEvent::AddMessage {
+            id: 13,
+            topic: "idds.work.finished".into(),
+            source_transform: Some(8),
+            payload: Json::obj().set("failed", false),
+            at: 10.0,
+        });
+        roundtrip(PersistEvent::AddMessage {
+            id: 14,
+            topic: "t".into(),
+            source_transform: None,
+            payload: Json::Null,
+            at: 11.0,
+        });
+        roundtrip(PersistEvent::MessageStatus { ids: vec![13, 14], to: MessageStatus::Delivered });
+    }
+
+    #[test]
+    fn max_id_covers_introduced_ids() {
+        let ev = PersistEvent::AddContents {
+            collection_id: 4,
+            items: vec![(90, "a".into(), 1), (95, "b".into(), 1)],
+            at: 0.0,
+        };
+        assert_eq!(ev.max_id(), 95);
+        assert_eq!(PersistEvent::CloseCollection { id: 3 }.max_id(), 3);
+        assert_eq!(
+            PersistEvent::MessageStatus { ids: vec![], to: MessageStatus::Acked }.max_id(),
+            0
+        );
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        assert!(PersistEvent::from_json(&Json::obj().set("op", "nope")).is_err());
+    }
+}

@@ -1,0 +1,768 @@
+//! Durable state for the head service: write-ahead log + checkpoints +
+//! crash recovery (production iDDS keeps this state in Oracle/PostgreSQL;
+//! here an append-only WAL over [`crate::store::Store`] plays that role —
+//! see DESIGN.md, "Durability model").
+//!
+//! Layout under the data dir:
+//!
+//! ```text
+//! <data_dir>/
+//!   checkpoint-00000001.json     Store::snapshot() + the WAL cut LSN
+//!   wal/wal-00000001.log         length+CRC-framed event segments
+//! ```
+//!
+//! * **Write path** — the store logs one [`PersistEvent`] per applied
+//!   mutation through the [`Persister`] hook; the WAL group-commits them
+//!   (one write+fsync per flusher batch, mirroring the store's batched
+//!   transition philosophy).
+//! * **Checkpoint** — flush the WAL, note the next LSN (`start_lsn`),
+//!   write `Store::snapshot()` durably, then rotate + delete segments
+//!   whose events all predate `start_lsn`.
+//! * **Recovery** — load the newest readable checkpoint, replay the WAL
+//!   suffix (`lsn >= start_lsn`) through [`crate::store::Store::apply_event`],
+//!   truncate any torn tail at the first bad frame, and advance the
+//!   process-wide id counter past everything seen.
+//!
+//! The soundness argument for the fuzzy checkpoint cut (log-after-apply
+//! under the discovery lock ⇒ `lsn < start_lsn` implies the effect is in
+//! the snapshot; replay is insert-if-absent + last-write-wins so the
+//! overlapping suffix converges) lives in DESIGN.md.
+
+pub mod events;
+pub mod wal;
+
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::Config;
+use crate::metrics::Registry;
+use crate::store::{Id, Store};
+use crate::util::json::{parse, Json};
+
+pub use events::{PersistEvent, Persister};
+pub use wal::Wal;
+
+use wal::{scan_segment, segment_path, segment_seq, sync_dir, ScanEnd, SegmentInfo};
+
+/// When the flusher calls `fsync`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncMode {
+    /// One `fsync` per group-commit batch (the durable default).
+    Group,
+    /// Never fsync — page cache only (fast, survives process crashes but
+    /// not power loss; useful for tests and benches).
+    Never,
+}
+
+impl FsyncMode {
+    pub fn parse(s: &str) -> Option<FsyncMode> {
+        match s {
+            "group" => Some(FsyncMode::Group),
+            "never" => Some(FsyncMode::Never),
+            _ => None,
+        }
+    }
+}
+
+/// Tunables, resolved from the `persist.*` config keys.
+#[derive(Debug, Clone)]
+pub struct PersistOptions {
+    pub segment_bytes: u64,
+    pub fsync: FsyncMode,
+    pub checkpoint_keep: usize,
+    pub flush_idle_ms: u64,
+}
+
+impl Default for PersistOptions {
+    fn default() -> Self {
+        PersistOptions {
+            segment_bytes: 8 * 1024 * 1024,
+            fsync: FsyncMode::Group,
+            checkpoint_keep: 2,
+            flush_idle_ms: 50,
+        }
+    }
+}
+
+impl PersistOptions {
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let fsync_str = cfg.str("persist.fsync")?;
+        Ok(PersistOptions {
+            segment_bytes: cfg.u64("persist.segment_bytes")?.max(1024),
+            fsync: FsyncMode::parse(&fsync_str)
+                .with_context(|| format!("persist.fsync '{fsync_str}' not one of group|never"))?,
+            checkpoint_keep: cfg.usize("persist.checkpoint_keep")?.max(1),
+            flush_idle_ms: cfg.u64("persist.flush_idle_ms")?,
+        })
+    }
+}
+
+/// What recovery found and did.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryReport {
+    pub checkpoint_seq: Option<u64>,
+    /// The loaded checkpoint's cut LSN (0 when starting empty).
+    pub start_lsn: u64,
+    pub segments_scanned: usize,
+    pub events_replayed: u64,
+    pub events_skipped: u64,
+    /// Bytes physically truncated off a torn segment tail.
+    pub torn_bytes: u64,
+    pub max_id: Id,
+}
+
+#[derive(Debug, Clone)]
+pub struct CheckpointReport {
+    pub seq: u64,
+    pub start_lsn: u64,
+    pub bytes: u64,
+    pub duration_ms: f64,
+    pub segments_deleted: usize,
+}
+
+impl CheckpointReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("seq", self.seq)
+            .set("start_lsn", self.start_lsn)
+            .set("bytes", self.bytes)
+            .set("duration_ms", self.duration_ms)
+            .set("segments_deleted", self.segments_deleted)
+    }
+}
+
+struct PersistInner {
+    dir: PathBuf,
+    opts: PersistOptions,
+    wal: Wal,
+    flusher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    checkpoint_mutex: Mutex<()>,
+    checkpoint_seq: AtomicU64,
+    last_checkpoint_lsn: AtomicU64,
+    /// `(seq, start_lsn)` of the checkpoints still on disk, ascending —
+    /// WAL segments are pruned to the *oldest* retained cut so every
+    /// fallback checkpoint keeps a complete replay suffix.
+    retained: Mutex<Vec<(u64, u64)>>,
+    metrics: Registry,
+}
+
+impl Drop for PersistInner {
+    fn drop(&mut self) {
+        self.wal.stop();
+        if let Some(t) = self.flusher.lock().unwrap().take() {
+            let _ = t.join();
+        }
+        let _ = std::fs::remove_file(self.dir.join("LOCK"));
+    }
+}
+
+/// The durability subsystem handle (cheap to clone).
+#[derive(Clone)]
+pub struct Persist {
+    inner: Arc<PersistInner>,
+}
+
+fn checkpoint_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("checkpoint-{seq:08}.json"))
+}
+
+fn checkpoint_seq_of(name: &str) -> Option<u64> {
+    name.strip_prefix("checkpoint-")?.strip_suffix(".json")?.parse().ok()
+}
+
+fn list_by<T: Ord>(dir: &Path, f: impl Fn(&str) -> Option<T>) -> Result<Vec<T>> {
+    let mut out = Vec::new();
+    if dir.is_dir() {
+        for entry in std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+            let entry = entry?;
+            if let Some(v) = entry.file_name().to_str().and_then(&f) {
+                out.push(v);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+impl Persist {
+    /// Open (or initialize) a data dir: recover the newest checkpoint +
+    /// WAL suffix into `store`, truncate any torn tail, advance the id
+    /// counter, arm the group-commit writer on a fresh segment, and attach
+    /// this WAL to the store as its persister. The store must be freshly
+    /// created and not yet shared with daemons or handlers.
+    pub fn open(
+        dir: &Path,
+        opts: PersistOptions,
+        store: &Store,
+        metrics: Registry,
+    ) -> Result<(Persist, RecoveryReport)> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating data dir {}", dir.display()))?;
+        let wal_dir = dir.join("wal");
+        std::fs::create_dir_all(&wal_dir)
+            .with_context(|| format!("creating wal dir {}", wal_dir.display()))?;
+
+        // single-writer guard: two live processes on one data dir would
+        // assign interleaved LSNs and prune each other's segments. The
+        // claim is atomic (create_new / O_EXCL); a stale lock from a
+        // crashed process (pid no longer alive) is removed and the claim
+        // retried — recovery after a crash is the point. Two racers both
+        // removing a stale lock still serialize on create_new: exactly
+        // one wins, the other re-reads a live pid and bails.
+        let lock_path = dir.join("LOCK");
+        let mut claimed = false;
+        for _ in 0..2 {
+            match OpenOptions::new().write(true).create_new(true).open(&lock_path) {
+                Ok(mut f) => {
+                    f.write_all(std::process::id().to_string().as_bytes())
+                        .with_context(|| format!("writing {}", lock_path.display()))?;
+                    claimed = true;
+                    break;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let holder = std::fs::read_to_string(&lock_path)
+                        .ok()
+                        .and_then(|t| t.trim().parse::<u32>().ok());
+                    match holder {
+                        Some(pid)
+                            if pid != std::process::id()
+                                && std::path::Path::new(&format!("/proc/{pid}")).exists() =>
+                        {
+                            anyhow::bail!(
+                                "data dir {} is locked by live process {pid}; \
+                                 remove {} only if that process is not an idds instance",
+                                dir.display(),
+                                lock_path.display()
+                            );
+                        }
+                        Some(pid) if pid == std::process::id() => {
+                            claimed = true; // same process re-opening (tests)
+                            break;
+                        }
+                        _ => {
+                            // dead holder or unreadable lock: clear and retry
+                            let _ = std::fs::remove_file(&lock_path);
+                        }
+                    }
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("claiming {}", lock_path.display()))
+                }
+            }
+        }
+        anyhow::ensure!(claimed, "could not claim {} (lock contention)", lock_path.display());
+
+        // sweep temp files a crash mid-checkpoint may have left — seqs
+        // never repeat, so nothing else would ever clean them up
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for entry in entries.flatten() {
+                if let Some(name) = entry.file_name().to_str() {
+                    if name.starts_with("checkpoint-") && name.ends_with(".json.tmp") {
+                        let _ = std::fs::remove_file(entry.path());
+                    }
+                }
+            }
+        }
+
+        let mut report = RecoveryReport::default();
+
+        // 1. newest *valid* checkpoint restores the store; every valid
+        //    checkpoint's cut LSN is remembered so WAL pruning can respect
+        //    the oldest retained fallback, not just the newest. A
+        //    checkpoint that fails any stage — read, parse, missing
+        //    start_lsn, or restore — is set aside as `.corrupt` and the
+        //    next older one is tried; `Store::restore` is two-phase
+        //    (decode-then-insert), so a half-bad snapshot fails before
+        //    touching the store and the fallback loads into a clean slate.
+        let checkpoint_seqs = list_by(dir, checkpoint_seq_of)?;
+        let mut retained: Vec<(u64, u64)> = Vec::new(); // (seq, start_lsn)
+        let mut loaded: Option<(u64, u64)> = None;
+        for &seq in checkpoint_seqs.iter().rev() {
+            let path = checkpoint_path(dir, seq);
+            let validated = std::fs::read_to_string(&path)
+                .map_err(anyhow::Error::from)
+                .and_then(|text| parse(&text).map_err(anyhow::Error::from))
+                .and_then(|j| {
+                    let start_lsn = j
+                        .get("start_lsn")
+                        .and_then(|v| v.as_u64())
+                        .context("missing start_lsn")?;
+                    anyhow::ensure!(j.get("snapshot").is_some(), "missing snapshot");
+                    if loaded.is_none() {
+                        let max_id = store
+                            .restore(j.get("snapshot").unwrap())
+                            .context("snapshot does not restore")?;
+                        return Ok((Some(max_id), start_lsn));
+                    }
+                    // fallback checkpoints get the same full decode the
+                    // restore path would need — a checkpoint that cannot
+                    // load must not be retained (the WAL is pruned to the
+                    // oldest *retained* cut, so retaining a dud would
+                    // leave no usable recovery point on a double fault)
+                    Store::validate_snapshot(j.get("snapshot").unwrap())
+                        .context("fallback snapshot does not decode")?;
+                    Ok((None, start_lsn))
+                });
+            match validated {
+                Ok((restored_max_id, start_lsn)) => {
+                    if let Some(max_id) = restored_max_id {
+                        report.max_id = report.max_id.max(max_id);
+                        loaded = Some((seq, start_lsn));
+                    }
+                    retained.push((seq, start_lsn));
+                }
+                Err(e) => {
+                    let aside = path.with_extension("json.corrupt");
+                    log::warn!(
+                        "setting aside unusable checkpoint {} ({e}); trying an older one",
+                        path.display()
+                    );
+                    let _ = std::fs::rename(&path, &aside);
+                }
+            }
+        }
+        retained.sort_unstable();
+        let start_lsn = loaded.map(|(_, lsn)| lsn).unwrap_or(0);
+        report.checkpoint_seq = loaded.map(|(seq, _)| seq);
+        report.start_lsn = start_lsn;
+
+        // 2. replay the WAL, truncating each torn tail at its first bad
+        //    frame. Scanning CONTINUES past a torn segment: LSNs are
+        //    globally monotone across segments and replay is idempotent,
+        //    so later segments hold durably committed events (e.g. written
+        //    after a rotate-on-write-error) that must not be thrown away —
+        //    only the torn suffix of the damaged segment itself is lost.
+        let segment_seqs = list_by(&wal_dir, segment_seq)?;
+        let mut catalog: Vec<SegmentInfo> = Vec::new();
+        let mut last_lsn = start_lsn.saturating_sub(1);
+        let mut on_disk_bytes = 0u64;
+        for &seq in segment_seqs.iter() {
+            let path = segment_path(&wal_dir, seq);
+            let scan = scan_segment(&path)?;
+            report.segments_scanned += 1;
+            let mut info = SegmentInfo { seq, first_lsn: None, last_lsn: None };
+            for (lsn, ev) in &scan.events {
+                info.first_lsn.get_or_insert(*lsn);
+                info.last_lsn = Some(*lsn);
+                report.max_id = report.max_id.max(ev.max_id());
+                if *lsn < start_lsn {
+                    report.events_skipped += 1;
+                } else {
+                    store.apply_event(ev);
+                    report.events_replayed += 1;
+                }
+                last_lsn = last_lsn.max(*lsn);
+            }
+            match &scan.end {
+                ScanEnd::Clean => {
+                    on_disk_bytes += scan.file_len;
+                    catalog.push(info);
+                }
+                ScanEnd::Torn { valid_len, reason } => {
+                    report.torn_bytes += scan.file_len - valid_len;
+                    if *valid_len == 0 {
+                        // no valid magic: a segment abandoned mid-creation
+                        // (or with a destroyed header) holds nothing
+                        // recoverable, and truncation can never repair it —
+                        // delete it so it stops re-tearing every boot
+                        log::warn!(
+                            "removing wal segment {} with no valid header ({reason})",
+                            path.display()
+                        );
+                        std::fs::remove_file(&path).with_context(|| {
+                            format!("removing headerless segment {}", path.display())
+                        })?;
+                    } else {
+                        log::warn!(
+                            "wal segment {} torn at byte {valid_len} ({reason}); truncating {} bytes",
+                            path.display(),
+                            scan.file_len - valid_len
+                        );
+                        OpenOptions::new()
+                            .write(true)
+                            .open(&path)
+                            .and_then(|f| f.set_len(*valid_len))
+                            .with_context(|| {
+                                format!("truncating torn tail of {}", path.display())
+                            })?;
+                        on_disk_bytes += valid_len;
+                        catalog.push(info);
+                    }
+                }
+            }
+        }
+        crate::util::advance_next_id(report.max_id);
+
+        // 3. arm the writer on a fresh segment
+        let next_seq = segment_seqs.last().copied().unwrap_or(0) + 1;
+        let (wal, flusher) = Wal::create(
+            &wal_dir,
+            opts.segment_bytes,
+            opts.fsync,
+            opts.flush_idle_ms,
+            last_lsn + 1,
+            next_seq,
+            catalog,
+            on_disk_bytes,
+            &metrics,
+        )?;
+
+        let persist = Persist {
+            inner: Arc::new(PersistInner {
+                dir: dir.to_path_buf(),
+                opts,
+                wal,
+                flusher: Mutex::new(Some(flusher)),
+                checkpoint_mutex: Mutex::new(()),
+                checkpoint_seq: AtomicU64::new(checkpoint_seqs.last().copied().unwrap_or(0)),
+                last_checkpoint_lsn: AtomicU64::new(start_lsn),
+                retained: Mutex::new(retained),
+                metrics,
+            }),
+        };
+        store.set_persister(persist.persister());
+        Ok((persist, report))
+    }
+
+    /// The hook the store logs through.
+    pub fn persister(&self) -> Arc<dyn Persister> {
+        Arc::new(self.inner.wal.clone())
+    }
+
+    /// Direct WAL handle (benches, tests).
+    pub fn wal(&self) -> &Wal {
+        &self.inner.wal
+    }
+
+    /// Block until every event logged so far is durable.
+    pub fn flush(&self) {
+        self.inner.wal.flush();
+    }
+
+    /// Write a durable checkpoint of `store` and prune fully-covered WAL
+    /// segments. Serialized: concurrent calls queue up.
+    pub fn checkpoint(&self, store: &Store) -> Result<CheckpointReport> {
+        let inner = &*self.inner;
+        let _gate = inner.checkpoint_mutex.lock().unwrap();
+        let t0 = Instant::now();
+        // everything below start_lsn must be on disk before the checkpoint
+        // claims to cover it
+        inner.wal.flush();
+        let start_lsn = inner.wal.next_lsn();
+        let snap = store.snapshot();
+        let seq = inner.checkpoint_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let body = Json::obj()
+            .set("version", 1u64)
+            .set("seq", seq)
+            .set("start_lsn", start_lsn)
+            .set("snapshot", snap);
+        let mut text = String::new();
+        body.write_to(&mut text);
+        let path = checkpoint_path(&inner.dir, seq);
+        let tmp = path.with_extension("json.tmp");
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(text.as_bytes())?;
+            if inner.opts.fsync != FsyncMode::Never {
+                f.sync_data()?;
+            }
+        }
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+        if inner.opts.fsync != FsyncMode::Never {
+            sync_dir(&inner.dir);
+        }
+        // retention first: drop all but the newest `checkpoint_keep`
+        // checkpoints, then prune the WAL only to the oldest cut we still
+        // retain — if this checkpoint ever fails to parse, the fallback
+        // still has its full replay suffix on disk
+        let prune_lsn = {
+            let mut retained = inner.retained.lock().unwrap();
+            retained.push((seq, start_lsn));
+            while retained.len() > inner.opts.checkpoint_keep {
+                retained.remove(0);
+            }
+            let oldest_seq = retained.first().map(|&(s, _)| s).unwrap_or(seq);
+            if let Ok(seqs) = list_by(&inner.dir, checkpoint_seq_of) {
+                for &old in seqs.iter().filter(|&&s| s < oldest_seq) {
+                    let _ = std::fs::remove_file(checkpoint_path(&inner.dir, old));
+                }
+            }
+            retained.iter().map(|&(_, lsn)| lsn).min().unwrap_or(start_lsn)
+        };
+        let segments_deleted = inner.wal.prune_below(prune_lsn);
+        inner.last_checkpoint_lsn.store(start_lsn, Ordering::Relaxed);
+        let report = CheckpointReport {
+            seq,
+            start_lsn,
+            bytes: text.len() as u64,
+            duration_ms: t0.elapsed().as_secs_f64() * 1e3,
+            segments_deleted,
+        };
+        inner.metrics.counter("persist.checkpoint.count").inc();
+        inner.metrics.counter("persist.checkpoint.bytes").add(report.bytes);
+        inner
+            .metrics
+            .histogram("persist.checkpoint.duration_us")
+            .observe((report.duration_ms * 1e3) as u64);
+        Ok(report)
+    }
+
+    /// Live durability stats for `/api/health`.
+    pub fn stats(&self) -> Json {
+        let wal = &self.inner.wal;
+        let next = wal.next_lsn();
+        let durable = wal.durable_lsn();
+        // no data-dir path here: stats land in the unauthenticated
+        // /api/health response, and filesystem layout should not leak
+        let mut j = Json::obj()
+            .set("next_lsn", next)
+            .set("durable_lsn", durable)
+            .set("lag_events", next - 1 - durable.min(next - 1))
+            .set("wal_segments", wal.segment_count())
+            .set("wal_bytes", wal.bytes_on_disk())
+            .set(
+                "last_checkpoint_seq",
+                self.inner.checkpoint_seq.load(Ordering::Relaxed),
+            )
+            .set(
+                "last_checkpoint_lsn",
+                self.inner.last_checkpoint_lsn.load(Ordering::Relaxed),
+            );
+        if let Some(e) = wal.io_error() {
+            j = j.set("io_error", e);
+        }
+        j
+    }
+
+    /// Stop the flusher after draining the queue. Also runs on drop of the
+    /// last clone.
+    pub fn shutdown(&self) {
+        self.inner.wal.flush();
+        self.inner.wal.stop();
+        if let Some(t) = self.inner.flusher.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{RequestKind, RequestStatus};
+    use crate::util::clock::WallClock;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "idds-persist-{tag}-{}-{}",
+            std::process::id(),
+            crate::util::next_id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn opts() -> PersistOptions {
+        PersistOptions {
+            segment_bytes: 32 * 1024,
+            fsync: FsyncMode::Never,
+            checkpoint_keep: 2,
+            flush_idle_ms: 5,
+        }
+    }
+
+    fn store() -> Store {
+        Store::new(Arc::new(WallClock::new()))
+    }
+
+    #[test]
+    fn empty_dir_opens_with_nothing_to_recover() {
+        let dir = tmp_dir("empty");
+        let s = store();
+        let (p, report) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+        assert_eq!(report.events_replayed, 0);
+        assert_eq!(report.checkpoint_seq, None);
+        assert_eq!(s.counts().get("requests").unwrap().as_u64(), Some(0));
+        p.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn log_recover_replays_events() {
+        let dir = tmp_dir("replay");
+        let s = store();
+        let (p, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+        let ids: Vec<_> = (0..20)
+            .map(|i| s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null))
+            .collect();
+        assert_eq!(s.update_requests_status(&ids[..10], RequestStatus::Transforming), 10);
+        p.shutdown();
+
+        let s2 = store();
+        let (p2, report) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+        // 20 inserts plus the batch transition (one event per stripe the
+        // batch touched, so between 1 and 10 events for 10 ids)
+        assert!(
+            (21..=30).contains(&report.events_replayed),
+            "unexpected replay count {}",
+            report.events_replayed
+        );
+        assert_eq!(
+            s2.requests_with_status(RequestStatus::Transforming),
+            s.requests_with_status(RequestStatus::Transforming)
+        );
+        assert_eq!(
+            s2.requests_with_status(RequestStatus::New),
+            s.requests_with_status(RequestStatus::New)
+        );
+        // ids keep flowing past everything recovered
+        let fresh = s2.add_request("fresh", "u", RequestKind::Workflow, Json::Null);
+        assert!(fresh > *ids.iter().max().unwrap());
+        p2.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_prunes_and_recovery_uses_it() {
+        let dir = tmp_dir("ckpt");
+        let s = store();
+        let (p, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+        let ids: Vec<_> = (0..50)
+            .map(|i| s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null))
+            .collect();
+        let rep = p.checkpoint(&s).unwrap();
+        assert!(rep.start_lsn > 50);
+        // post-checkpoint writes land in the WAL suffix
+        assert_eq!(s.update_requests_status(&ids, RequestStatus::Transforming), 50);
+        p.shutdown();
+
+        let s2 = store();
+        let (p2, report) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+        assert_eq!(report.checkpoint_seq, Some(rep.seq));
+        // only the post-checkpoint batch replays: one event per stripe it
+        // touched, never the 50 pre-checkpoint inserts
+        assert!(
+            (1..=16).contains(&report.events_replayed),
+            "unexpected replay count {}",
+            report.events_replayed
+        );
+        assert_eq!(
+            s2.requests_with_status(RequestStatus::Transforming).len(),
+            50
+        );
+        p2.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unusable_newest_checkpoint_falls_back_to_older() {
+        let dir = tmp_dir("fallback");
+        let s = store();
+        let (p, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+        for i in 0..10 {
+            s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null);
+        }
+        let first = p.checkpoint(&s).unwrap();
+        s.add_request("late", "u", RequestKind::Workflow, Json::Null);
+        let second = p.checkpoint(&s).unwrap();
+        p.shutdown();
+        // newest checkpoint parses as JSON but cannot restore (bad version)
+        std::fs::write(
+            checkpoint_path(&dir, second.seq),
+            Json::obj()
+                .set("version", 1u64)
+                .set("seq", second.seq)
+                .set("start_lsn", second.start_lsn)
+                .set("snapshot", Json::obj().set("version", 99u64))
+                .to_string(),
+        )
+        .unwrap();
+
+        let s2 = store();
+        let (p2, report) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+        assert_eq!(
+            report.checkpoint_seq,
+            Some(first.seq),
+            "recovery must fall back to the older checkpoint"
+        );
+        // WAL was pruned only to the oldest retained cut, so the suffix
+        // after the fallback checkpoint (incl. the 'late' insert) replays
+        assert_eq!(s2.counts().get("requests").unwrap().as_u64(), Some(11));
+        // the unusable file was set aside, not left to fail every boot
+        assert!(!checkpoint_path(&dir, second.seq).exists());
+        assert!(checkpoint_path(&dir, second.seq)
+            .with_extension("json.corrupt")
+            .exists());
+        p2.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn segments_after_a_torn_middle_segment_still_replay() {
+        let dir = tmp_dir("tornmid");
+        let s = store();
+        let small = PersistOptions { segment_bytes: 2048, ..opts() };
+        let (p, _) = Persist::open(&dir, small.clone(), &s, Registry::default()).unwrap();
+        let ids: Vec<_> = (0..120)
+            .map(|i| {
+                let id = s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null);
+                if i % 10 == 0 {
+                    p.flush(); // force small flush batches → several segments
+                }
+                id
+            })
+            .collect();
+        p.shutdown();
+        let wal_dir = dir.join("wal");
+        let mut segs = list_by(&wal_dir, super::wal::segment_seq).unwrap();
+        segs.retain(|&seq| {
+            std::fs::metadata(super::wal::segment_path(&wal_dir, seq))
+                .map(|m| m.len() > 16)
+                .unwrap_or(false)
+        });
+        assert!(segs.len() >= 3, "need several segments, got {}", segs.len());
+        // tear the tail of a MIDDLE segment
+        let victim = super::wal::segment_path(&wal_dir, segs[segs.len() / 2]);
+        let len = std::fs::metadata(&victim).unwrap().len();
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&victim)
+            .unwrap()
+            .set_len(len - 5)
+            .unwrap();
+
+        let s2 = store();
+        let (p2, report) = Persist::open(&dir, small, &s2, Registry::default()).unwrap();
+        assert!(report.torn_bytes > 0);
+        // events after the torn segment were durably committed and must
+        // survive — in particular the very last insert
+        assert!(s2.get_request(*ids.last().unwrap()).is_ok());
+        // only the torn frame's events are lost, not whole segments
+        assert!(report.events_replayed > 110, "lost more than the torn frame");
+        p2.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_retention_keeps_newest() {
+        let dir = tmp_dir("keep");
+        let s = store();
+        let (p, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+        for i in 0..4 {
+            s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null);
+            p.checkpoint(&s).unwrap();
+        }
+        let ckpts = list_by(&dir, checkpoint_seq_of).unwrap();
+        assert_eq!(ckpts.len(), 2, "retention must keep checkpoint_keep files");
+        assert_eq!(ckpts, vec![3, 4]);
+        p.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

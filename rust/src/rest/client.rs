@@ -66,6 +66,12 @@ impl Client {
         self.expect_ok("GET", "/api/health", None)
     }
 
+    /// Force a durable checkpoint on the head service; returns the
+    /// checkpoint report. Errors when the service runs without a data dir.
+    pub fn checkpoint(&self) -> Result<Json> {
+        self.expect_ok("POST", "/api/admin/checkpoint", None)
+    }
+
     /// Submit a workflow; returns the request id.
     pub fn submit(
         &self,

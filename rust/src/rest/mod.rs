@@ -4,7 +4,8 @@
 //! Conductor's message stream to consumers.
 //!
 //! Routes (all JSON):
-//! * `GET  /api/health`                     — liveness + store counts
+//! * `GET  /api/health`                     — liveness: uptime, store
+//!   counts, per-table generations, persist/WAL lag when durability is on
 //! * `GET  /api/metrics`                    — metrics snapshot
 //! * `POST /api/requests`                   — submit a serialized Workflow
 //! * `GET  /api/requests/<id>`              — request record
@@ -15,6 +16,8 @@
 //! * `POST /api/subscriptions`              — subscribe to a message topic
 //! * `GET  /api/messages?sub=<id>&max=<n>`  — poll deliveries
 //! * `POST /api/messages/ack`               — ack a delivery
+//! * `POST /api/admin/checkpoint`           — force a durable checkpoint
+//!   (503 when the service runs without a data dir)
 //!
 //! Authentication: `Authorization: Bearer <token>` checked against the
 //! configured token set (production iDDS uses OIDC; a static token list
@@ -29,6 +32,7 @@ use std::sync::Arc;
 use crate::broker::Broker;
 use crate::config::Config;
 use crate::metrics::Registry;
+use crate::persist::Persist;
 use crate::store::{RequestKind, RequestStatus, Store};
 use crate::util::json::{parse, Json};
 
@@ -41,6 +45,8 @@ pub struct ServerState {
     pub store: Store,
     pub broker: Broker,
     pub metrics: Registry,
+    pub persist: Option<Persist>,
+    started: std::time::Instant,
     tokens: Arc<Vec<String>>,
 }
 
@@ -55,8 +61,17 @@ impl ServerState {
             store,
             broker,
             metrics,
+            persist: None,
+            started: std::time::Instant::now(),
             tokens: Arc::new(tokens),
         }
+    }
+
+    /// Attach the durability subsystem (enables `/api/admin/checkpoint`
+    /// and the persist section of `/api/health`).
+    pub fn with_persist(mut self, persist: Persist) -> Self {
+        self.persist = Some(persist);
+        self
     }
 
     fn authed(&self, req: &Request) -> bool {
@@ -90,11 +105,23 @@ pub fn route(state: &ServerState, req: Request) -> Response {
     state.metrics.counter("rest.requests").inc();
     if req.path == "/api/health" {
         // health is unauthenticated (load balancer probes)
-        return ok_json(
-            Json::obj()
-                .set("status", "ok")
-                .set("counts", state.store.counts()),
-        );
+        let mut body = Json::obj()
+            .set("status", "ok")
+            .set("uptime_s", state.started.elapsed().as_secs_f64())
+            .set("counts", state.store.counts())
+            .set(
+                "generations",
+                Json::obj()
+                    .set("requests", state.store.requests_generation())
+                    .set("transforms", state.store.transforms_generation())
+                    .set("processings", state.store.processings_generation())
+                    .set("contents", state.store.contents_generation())
+                    .set("messages", state.store.messages_generation()),
+            );
+        if let Some(p) = &state.persist {
+            body = body.set("persist", p.stats());
+        }
+        return ok_json(body);
     }
     if !state.authed(&req) {
         state.metrics.counter("rest.unauthorized").inc();
@@ -201,6 +228,17 @@ pub fn route(state: &ServerState, req: Request) -> Response {
             ))
         }
 
+        ("POST", ["api", "admin", "checkpoint"]) => match &state.persist {
+            Some(p) => match p.checkpoint(&state.store) {
+                Ok(report) => {
+                    state.metrics.counter("rest.checkpoints_triggered").inc();
+                    ok_json(report.to_json())
+                }
+                Err(e) => err_json(500, &format!("checkpoint failed: {e}")),
+            },
+            None => err_json(503, "persistence not configured (start with --data-dir)"),
+        },
+
         ("POST", ["api", "messages", "ack"]) => {
             let body = match req.body_str().map(parse) {
                 Ok(Ok(j)) => j,
@@ -293,6 +331,22 @@ mod tests {
         r.headers.clear();
         let resp = route(&s, r);
         assert_eq!(resp.status, 200);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(j.get("uptime_s").and_then(|v| v.as_f64()).is_some());
+        assert!(j.get_path(&["generations", "requests"]).is_some());
+        // no persistence configured → no persist section
+        assert!(j.get("persist").is_none());
+    }
+
+    #[test]
+    fn checkpoint_unavailable_without_data_dir() {
+        let s = state();
+        let resp = route(&s, authed_req("POST", "/api/admin/checkpoint", ""));
+        assert_eq!(resp.status, 503);
+        // and it is authenticated like everything else
+        let mut r = authed_req("POST", "/api/admin/checkpoint", "");
+        r.headers.clear();
+        assert_eq!(route(&s, r).status, 401);
     }
 
     #[test]

@@ -32,14 +32,26 @@
 //! Lock ordering (deadlock freedom): row-shard lock first, then status-set
 //! locks in ascending slot order (or the contents index lock). No path
 //! acquires a shard lock while holding an index lock.
+//!
+//! * **Persistence hook** — every write path emits one
+//!   [`crate::persist::PersistEvent`] through an optional
+//!   `Arc<dyn Persister>` (see [`Store::set_persister`]). Events are
+//!   logged *after* the mutation applied and *while still holding the
+//!   lock that makes the touched ids discoverable*, so WAL order agrees
+//!   with application order for any single id — the invariant the
+//!   `persist` subsystem's fuzzy checkpoints rely on (DESIGN.md,
+//!   "Durability model"). The hook must only enqueue; it never takes
+//!   store locks.
 
+mod replay;
 pub mod snapshot;
 pub mod types;
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, OnceLock, RwLock};
 
+use crate::persist::{PersistEvent, Persister};
 use crate::util::clock::Clock;
 use crate::util::json::Json;
 
@@ -155,15 +167,25 @@ impl<R: StatusRec + Clone> Sharded<R> {
         self.len.load(Ordering::Relaxed)
     }
 
-    fn insert(&self, id: Id, rec: R) {
+    /// Insert-if-absent; returns false (and does nothing) when the id is
+    /// already present — WAL replay may re-deliver an insert a fuzzy
+    /// checkpoint already captured. `log` runs under the shard lock after
+    /// the row and index are written, so any later event touching this id
+    /// is logged after it.
+    fn insert(&self, id: Id, rec: R, log: impl FnOnce()) -> bool {
         let status = rec.status();
         {
             let mut shard = self.shards[stripe_of(id)].write().unwrap();
+            if shard.contains_key(&id) {
+                return false;
+            }
             shard.insert(id, rec);
             self.status_sets[status.index()].write().unwrap().insert(id);
+            log();
         }
         self.len.fetch_add(1, Ordering::Relaxed);
         self.bump();
+        true
     }
 
     fn get(&self, id: Id) -> Option<R> {
@@ -213,7 +235,7 @@ impl<R: StatusRec + Clone> Sharded<R> {
         }
     }
 
-    fn update_status(&self, id: Id, to: R::S, now: f64) -> Result<()> {
+    fn update_status(&self, id: Id, to: R::S, now: f64, log: impl FnOnce()) -> Result<()> {
         {
             let mut shard = self.shards[stripe_of(id)].write().unwrap();
             let rec = shard
@@ -232,16 +254,50 @@ impl<R: StatusRec + Clone> Sharded<R> {
             if from != to {
                 self.reindex(id, from, to);
             }
+            log();
         }
         self.bump();
         Ok(())
+    }
+
+    /// Replay-only transition: no validation, last-write-wins. Missing ids
+    /// are skipped (their insert event was replayed and deduplicated, or
+    /// the row arrived via the checkpoint with a newer status — either way
+    /// later suffix events settle the final state).
+    fn force_status(&self, id: Id, to: R::S, now: f64) -> bool {
+        let changed = {
+            let mut shard = self.shards[stripe_of(id)].write().unwrap();
+            match shard.get_mut(&id) {
+                Some(rec) => {
+                    let from = rec.status();
+                    rec.apply_status(to, now);
+                    if from != to {
+                        self.reindex(id, from, to);
+                    }
+                    true
+                }
+                None => false,
+            }
+        };
+        if changed {
+            self.bump();
+        }
+        changed
     }
 
     /// Bulk transition; unknown ids, no-op self-transitions and illegal
     /// transitions are skipped, not errors — a poller may race a consumer.
     /// Returns how many rows actually moved. One shard lock acquisition
     /// per stripe touched; index maintenance batched per from-status run.
-    fn update_status_batch(&self, ids: &[Id], to: R::S, now: f64) -> usize {
+    /// `log` is called once per stripe with the `(from-slot, id)` pairs
+    /// that moved, under that stripe's lock.
+    fn update_status_batch(
+        &self,
+        ids: &[Id],
+        to: R::S,
+        now: f64,
+        mut log: impl FnMut(&[(usize, Id)]),
+    ) -> usize {
         if ids.is_empty() {
             return 0;
         }
@@ -297,6 +353,7 @@ impl<R: StatusRec + Clone> Sharded<R> {
                 }
                 i = j;
             }
+            log(&moves);
         }
         if moved > 0 {
             self.bump();
@@ -387,6 +444,8 @@ struct Inner {
     coll_by_transform: RwLock<HashMap<Id, Vec<Id>>>,
     /// request -> transforms index
     tf_by_request: RwLock<HashMap<Id, Vec<Id>>>,
+    /// optional durability hook; attach-once, after recovery
+    persister: OnceLock<Arc<dyn Persister>>,
 }
 
 impl Store {
@@ -403,12 +462,60 @@ impl Store {
                 messages_gen: AtomicU64::new(0),
                 coll_by_transform: RwLock::new(HashMap::new()),
                 tf_by_request: RwLock::new(HashMap::new()),
+                persister: OnceLock::new(),
             }),
         }
     }
 
     fn now(&self) -> f64 {
         self.inner.clock.now()
+    }
+
+    // -- durability hook ------------------------------------------------------
+
+    /// Attach the durability hook. Attach-once, and only *after* recovery
+    /// has finished replaying into this store (replay must not re-log).
+    /// Returns false if a persister was already attached.
+    pub fn set_persister(&self, p: Arc<dyn Persister>) -> bool {
+        self.inner.persister.set(p).is_ok()
+    }
+
+    #[inline]
+    fn persister(&self) -> Option<&Arc<dyn Persister>> {
+        self.inner.persister.get()
+    }
+
+    /// Build the event only when a persister is attached — the disabled
+    /// path pays one atomic load and no clones.
+    #[inline]
+    fn make_ev(&self, f: impl FnOnce() -> PersistEvent) -> Option<(Arc<dyn Persister>, PersistEvent)> {
+        self.persister().map(|p| (Arc::clone(p), f()))
+    }
+
+    #[inline]
+    fn emit(ev: Option<(Arc<dyn Persister>, PersistEvent)>) {
+        if let Some((p, e)) = ev {
+            p.log(e);
+        }
+    }
+
+    /// Shared shape of the three batched-transition APIs: run the batch on
+    /// `table`, logging one event per stripe touched (built by `build`
+    /// from the ids that actually moved) under that stripe's lock.
+    fn batch_status_logged<R: StatusRec + Clone>(
+        &self,
+        table: &Sharded<R>,
+        ids: &[Id],
+        to: R::S,
+        build: impl Fn(Vec<Id>, R::S, f64) -> PersistEvent,
+    ) -> usize {
+        let now = self.now();
+        let p = self.persister().cloned();
+        table.update_status_batch(ids, to, now, |moves| {
+            if let Some(p) = &p {
+                p.log(build(moves.iter().map(|&(_, id)| id).collect(), to, now));
+            }
+        })
     }
 
     // -- generation counters (change-driven polling) -------------------------
@@ -433,52 +540,19 @@ impl Store {
         self.inner.messages_gen.load(Ordering::Acquire)
     }
 
-    // -- raw inserts (snapshot restore only: preserve ids + statuses) -------
+    // -- rec inserts (snapshot restore + WAL replay: preserve ids, statuses
+    //    and timestamps; insert-if-absent so replay over a fuzzy checkpoint
+    //    cannot duplicate rows or index entries) ------------------------------
 
-    pub(crate) fn insert_request_raw(
-        &self,
-        id: Id,
-        name: &str,
-        requester: &str,
-        kind: RequestKind,
-        status: RequestStatus,
-        workflow: Json,
-    ) {
-        let now = self.now();
-        let rec = RequestRec {
-            id,
-            name: name.to_string(),
-            requester: requester.to_string(),
-            kind,
-            status,
-            workflow,
-            created_at: now,
-            updated_at: now,
-        };
-        self.inner.requests.insert(id, rec);
+    pub(crate) fn insert_request_rec(&self, rec: RequestRec) -> bool {
+        self.inner.requests.insert(rec.id, rec, || ())
     }
 
-    pub(crate) fn insert_transform_raw(
-        &self,
-        id: Id,
-        request_id: Id,
-        name: &str,
-        status: TransformStatus,
-        work: Json,
-        retries: u32,
-    ) {
-        let now = self.now();
-        let rec = TransformRec {
-            id,
-            request_id,
-            name: name.to_string(),
-            status,
-            work,
-            retries,
-            created_at: now,
-            updated_at: now,
-        };
-        self.inner.transforms.insert(id, rec);
+    pub(crate) fn insert_transform_rec(&self, rec: TransformRec) -> bool {
+        let (id, request_id) = (rec.id, rec.request_id);
+        if !self.inner.transforms.insert(id, rec, || ()) {
+            return false;
+        }
         self.inner
             .tf_by_request
             .write()
@@ -486,25 +560,22 @@ impl Store {
             .entry(request_id)
             .or_default()
             .push(id);
+        true
     }
 
-    pub(crate) fn insert_collection_raw(
-        &self,
-        id: Id,
-        transform_id: Id,
-        name: &str,
-        kind: CollectionKind,
-        status: CollectionStatus,
-    ) {
-        let rec = CollectionRec {
-            id,
-            transform_id,
-            name: name.to_string(),
-            kind,
-            status,
-            created_at: self.now(),
-        };
-        self.inner.collections.write().unwrap().insert(id, rec);
+    pub(crate) fn insert_processing_rec(&self, rec: ProcessingRec) -> bool {
+        self.inner.processings.insert(rec.id, rec, || ())
+    }
+
+    pub(crate) fn insert_collection_rec(&self, rec: CollectionRec) -> bool {
+        let (id, transform_id) = (rec.id, rec.transform_id);
+        {
+            let mut colls = self.inner.collections.write().unwrap();
+            if colls.contains_key(&id) {
+                return false;
+            }
+            colls.insert(id, rec);
+        }
         self.inner
             .coll_by_transform
             .write()
@@ -512,31 +583,18 @@ impl Store {
             .entry(transform_id)
             .or_default()
             .push(id);
+        true
     }
 
-    pub(crate) fn insert_content_raw(
-        &self,
-        id: Id,
-        collection_id: Id,
-        name: &str,
-        size_bytes: u64,
-        status: ContentStatus,
-    ) {
+    pub(crate) fn insert_content_rec(&self, rec: ContentRec) -> bool {
         let c = &self.inner.contents;
+        let (id, collection_id, status) = (rec.id, rec.collection_id, rec.status);
         {
             let mut shard = c.shards[stripe_of(id)].write().unwrap();
-            shard.insert(
-                id,
-                ContentRec {
-                    id,
-                    collection_id,
-                    name: name.to_string(),
-                    size_bytes,
-                    status,
-                    ddm_file: None,
-                    updated_at: self.now(),
-                },
-            );
+            if shard.contains_key(&id) {
+                return false;
+            }
+            shard.insert(id, rec);
         }
         {
             let mut idx = c.index.write().unwrap();
@@ -548,6 +606,22 @@ impl Store {
         }
         c.len.fetch_add(1, Ordering::Relaxed);
         c.bump();
+        true
+    }
+
+    pub(crate) fn insert_message_rec(&self, rec: MessageRec) -> bool {
+        let id = rec.id;
+        let status = rec.status;
+        {
+            let mut t = self.inner.messages.write().unwrap();
+            if t.rows.contains_key(&id) {
+                return false;
+            }
+            t.rows.insert(id, rec);
+            t.by_status.entry(status).or_default().insert(id);
+        }
+        self.inner.messages_gen.fetch_add(1, Ordering::Release);
+        true
     }
 
     // -- requests -----------------------------------------------------------
@@ -561,6 +635,14 @@ impl Store {
     ) -> Id {
         let id = crate::util::next_id();
         let now = self.now();
+        let ev = self.make_ev(|| PersistEvent::AddRequest {
+            id,
+            name: name.to_string(),
+            requester: requester.to_string(),
+            kind,
+            workflow: workflow.clone(),
+            at: now,
+        });
         let rec = RequestRec {
             id,
             name: name.to_string(),
@@ -571,7 +653,7 @@ impl Store {
             created_at: now,
             updated_at: now,
         };
-        self.inner.requests.insert(id, rec);
+        self.inner.requests.insert(id, rec, move || Store::emit(ev));
         id
     }
 
@@ -593,12 +675,18 @@ impl Store {
     }
 
     pub fn update_request_status(&self, id: Id, to: RequestStatus) -> Result<()> {
-        self.inner.requests.update_status(id, to, self.now())
+        let now = self.now();
+        let ev = self.make_ev(|| PersistEvent::RequestStatus { ids: vec![id], to, at: now });
+        self.inner
+            .requests
+            .update_status(id, to, now, move || Store::emit(ev))
     }
 
     /// Bulk transition; skips illegal members, returns how many moved.
     pub fn update_requests_status(&self, ids: &[Id], to: RequestStatus) -> usize {
-        self.inner.requests.update_status_batch(ids, to, self.now())
+        self.batch_status_logged(&self.inner.requests, ids, to, |ids, to, at| {
+            PersistEvent::RequestStatus { ids, to, at }
+        })
     }
 
     /// Cancel a request and its non-terminal transforms/processings (the
@@ -624,6 +712,13 @@ impl Store {
     pub fn add_transform(&self, request_id: Id, name: &str, work: Json) -> Id {
         let id = crate::util::next_id();
         let now = self.now();
+        let ev = self.make_ev(|| PersistEvent::AddTransform {
+            id,
+            request_id,
+            name: name.to_string(),
+            work: work.clone(),
+            at: now,
+        });
         let rec = TransformRec {
             id,
             request_id,
@@ -634,7 +729,12 @@ impl Store {
             created_at: now,
             updated_at: now,
         };
-        self.inner.transforms.insert(id, rec);
+        // parent index BEFORE the logged insert: the snapshot walk
+        // discovers transforms through tf_by_request, so the entry must be
+        // visible before the insert event can get an LSN (fuzzy-checkpoint
+        // invariant 1, DESIGN.md). Readers tolerate the transient
+        // id-without-row window exactly as they tolerated the old
+        // row-without-index window: get fails → the id is skipped.
         self.inner
             .tf_by_request
             .write()
@@ -642,6 +742,7 @@ impl Store {
             .entry(request_id)
             .or_default()
             .push(id);
+        self.inner.transforms.insert(id, rec, move || Store::emit(ev));
         id
     }
 
@@ -671,26 +772,41 @@ impl Store {
     }
 
     pub fn update_transform_status(&self, id: Id, to: TransformStatus) -> Result<()> {
-        self.inner.transforms.update_status(id, to, self.now())
+        let now = self.now();
+        let ev = self.make_ev(|| PersistEvent::TransformStatus { ids: vec![id], to, at: now });
+        self.inner
+            .transforms
+            .update_status(id, to, now, move || Store::emit(ev))
     }
 
     /// Bulk transition; skips illegal members, returns how many moved.
     pub fn update_transforms_status(&self, ids: &[Id], to: TransformStatus) -> usize {
-        self.inner.transforms.update_status_batch(ids, to, self.now())
+        self.batch_status_logged(&self.inner.transforms, ids, to, |ids, to, at| {
+            PersistEvent::TransformStatus { ids, to, at }
+        })
     }
 
     /// Update the serialized Work payload (Marshaller rewrites parameters).
     pub fn update_transform_work(&self, id: Id, work: Json) -> Result<()> {
         let now = self.now();
+        let p = self.persister().cloned();
         self.inner.transforms.with_mut(id, |rec| {
             rec.work = work;
             rec.updated_at = now;
+            if let Some(p) = &p {
+                p.log(PersistEvent::TransformWork { id, work: rec.work.clone(), at: now });
+            }
         })
     }
 
     pub fn bump_transform_retries(&self, id: Id) -> Result<u32> {
+        let p = self.persister().cloned();
         self.inner.transforms.with_mut(id, |rec| {
             rec.retries += 1;
+            if let Some(p) = &p {
+                // absolute value, so replay is idempotent
+                p.log(PersistEvent::TransformRetries { id, retries: rec.retries });
+            }
             rec.retries
         })
     }
@@ -700,6 +816,7 @@ impl Store {
     pub fn add_processing(&self, transform_id: Id) -> Id {
         let id = crate::util::next_id();
         let now = self.now();
+        let ev = self.make_ev(|| PersistEvent::AddProcessing { id, transform_id, at: now });
         let rec = ProcessingRec {
             id,
             transform_id,
@@ -710,7 +827,7 @@ impl Store {
             created_at: now,
             updated_at: now,
         };
-        self.inner.processings.insert(id, rec);
+        self.inner.processings.insert(id, rec, move || Store::emit(ev));
         id
     }
 
@@ -736,17 +853,27 @@ impl Store {
     }
 
     pub fn update_processing_status(&self, id: Id, to: ProcessingStatus) -> Result<()> {
-        self.inner.processings.update_status(id, to, self.now())
+        let now = self.now();
+        let ev = self.make_ev(|| PersistEvent::ProcessingStatus { ids: vec![id], to, at: now });
+        self.inner
+            .processings
+            .update_status(id, to, now, move || Store::emit(ev))
     }
 
     /// Bulk transition; skips illegal members, returns how many moved.
     pub fn update_processings_status(&self, ids: &[Id], to: ProcessingStatus) -> usize {
-        self.inner.processings.update_status_batch(ids, to, self.now())
+        self.batch_status_logged(&self.inner.processings, ids, to, |ids, to, at| {
+            PersistEvent::ProcessingStatus { ids, to, at }
+        })
     }
 
     pub fn set_processing_wfm_task(&self, id: Id, task: Id) -> Result<()> {
+        let p = self.persister().cloned();
         self.inner.processings.with_mut(id, |rec| {
             rec.wfm_task = Some(task);
+            if let Some(p) = &p {
+                p.log(PersistEvent::ProcessingWfmTask { id, task });
+            }
         })
     }
 
@@ -754,15 +881,20 @@ impl Store {
 
     pub fn add_collection(&self, transform_id: Id, name: &str, kind: CollectionKind) -> Id {
         let id = crate::util::next_id();
+        let now = self.now();
         let rec = CollectionRec {
             id,
             transform_id,
             name: name.to_string(),
             kind,
             status: CollectionStatus::Open,
-            created_at: self.now(),
+            created_at: now,
         };
-        self.inner.collections.write().unwrap().insert(id, rec);
+        // parent index BEFORE the logged insert (see add_transform): the
+        // snapshot walk discovers collections through coll_by_transform.
+        // Taking it nested inside the collections lock would deadlock
+        // against collections_of_transform's coll_by_transform→collections
+        // order, so it is published first instead.
         self.inner
             .coll_by_transform
             .write()
@@ -770,6 +902,21 @@ impl Store {
             .entry(transform_id)
             .or_default()
             .push(id);
+        {
+            let mut colls = self.inner.collections.write().unwrap();
+            colls.insert(id, rec);
+            // log under the collections lock: close_collection on this id
+            // serializes behind it, so WAL order matches apply order
+            if let Some(p) = self.persister() {
+                p.log(PersistEvent::AddCollection {
+                    id,
+                    transform_id,
+                    name: name.to_string(),
+                    kind,
+                    at: now,
+                });
+            }
+        }
         id
     }
 
@@ -798,6 +945,9 @@ impl Store {
             .get_mut(&id)
             .ok_or(StoreError::NotFound { kind: "collection", id })?;
         rec.status = CollectionStatus::Closed;
+        if let Some(p) = self.persister() {
+            p.log(PersistEvent::CloseCollection { id });
+        }
         Ok(())
     }
 
@@ -814,11 +964,16 @@ impl Store {
     ) -> Vec<Id> {
         let now = self.now();
         let c = &self.inner.contents;
+        let log_enabled = self.persister().is_some();
+        let mut log_items: Vec<(Id, String, u64)> = Vec::new();
         let mut ids = Vec::new();
         let mut by_shard: Vec<Vec<(Id, ContentRec)>> = Vec::with_capacity(STRIPES);
         by_shard.resize_with(STRIPES, Vec::new);
         for (name, size_bytes) in files {
             let id = crate::util::next_id();
+            if log_enabled {
+                log_items.push((id, name.clone(), size_bytes));
+            }
             by_shard[stripe_of(id)].push((
                 id,
                 ContentRec {
@@ -856,6 +1011,32 @@ impl Store {
                 .entry((collection_id, ContentStatus::New))
                 .or_default()
                 .extend(ids.iter().copied());
+            // log under the index lock: the new ids only become
+            // discoverable (and thus transition-able) once it is released,
+            // so every later event on them gets a larger LSN. Chunked by
+            // accumulated bytes (names are client-supplied and unbounded),
+            // so even a multi-million-file registration stays far below
+            // the WAL's per-frame size bound.
+            if let Some(p) = self.persister() {
+                const CHUNK_BYTES: usize = 8 * 1024 * 1024;
+                let mut chunk: Vec<(Id, String, u64)> = Vec::new();
+                let mut bytes = 0usize;
+                for item in log_items {
+                    bytes += item.1.len() + 48; // name + id/size/framing slack
+                    chunk.push(item);
+                    if bytes >= CHUNK_BYTES {
+                        p.log(PersistEvent::AddContents {
+                            collection_id,
+                            items: std::mem::take(&mut chunk),
+                            at: now,
+                        });
+                        bytes = 0;
+                    }
+                }
+                if !chunk.is_empty() {
+                    p.log(PersistEvent::AddContents { collection_id, items: chunk, at: now });
+                }
+            }
         }
         c.len.fetch_add(ids.len(), Ordering::Relaxed);
         c.bump();
@@ -915,6 +1096,9 @@ impl Store {
                 .get_mut(&id)
                 .ok_or(StoreError::NotFound { kind: "content", id })?;
             rec.ddm_file = Some(ddm_file);
+            if let Some(p) = self.persister() {
+                p.log(PersistEvent::ContentDdmFile { id, ddm_file });
+            }
         }
         c.bump();
         Ok(())
@@ -949,6 +1133,9 @@ impl Store {
                 }
                 idx.by_coll_status.entry((coll, to)).or_default().insert(id);
             }
+            if let Some(p) = self.persister() {
+                p.log(PersistEvent::ContentStatus { ids: vec![id], to, at: now });
+            }
         }
         c.bump();
         Ok(())
@@ -968,6 +1155,7 @@ impl Store {
             return 0;
         }
         let now = self.now();
+        let persister = self.persister().cloned();
         let c = &self.inner.contents;
         let mut by_shard: Vec<Vec<Id>> = vec![Vec::new(); STRIPES];
         for &id in ids {
@@ -1017,6 +1205,15 @@ impl Store {
                 }
                 i = j;
             }
+            drop(idx);
+            // one event per stripe touched, logged under the shard lock
+            if let Some(p) = &persister {
+                p.log(PersistEvent::ContentStatus {
+                    ids: moves.iter().map(|&(_, _, id)| id).collect(),
+                    to,
+                    at: now,
+                });
+            }
         }
         if moved > 0 {
             c.bump();
@@ -1028,18 +1225,27 @@ impl Store {
 
     pub fn add_message(&self, topic: &str, source_transform: Option<Id>, payload: Json) -> Id {
         let id = crate::util::next_id();
+        let now = self.now();
+        let ev = self.make_ev(|| PersistEvent::AddMessage {
+            id,
+            topic: topic.to_string(),
+            source_transform,
+            payload: payload.clone(),
+            at: now,
+        });
         let rec = MessageRec {
             id,
             topic: topic.to_string(),
             source_transform,
             payload,
             status: MessageStatus::New,
-            created_at: self.now(),
+            created_at: now,
         };
         {
             let mut t = self.inner.messages.write().unwrap();
             t.rows.insert(id, rec);
             t.by_status.entry(MessageStatus::New).or_default().insert(id);
+            Store::emit(ev);
         }
         self.inner.messages_gen.fetch_add(1, Ordering::Release);
         id
@@ -1077,9 +1283,35 @@ impl Store {
             let from = rec.status;
             rec.status = to;
             t.reindex(id, from, to);
+            if let Some(p) = self.persister() {
+                p.log(PersistEvent::MessageStatus { ids: vec![id], to });
+            }
         }
         self.inner.messages_gen.fetch_add(1, Ordering::Release);
         Ok(())
+    }
+
+    /// Replay-only message transition (no validation, skip missing ids).
+    pub(crate) fn force_message_status(&self, id: Id, to: MessageStatus) -> bool {
+        let changed = {
+            let mut t = self.inner.messages.write().unwrap();
+            let from = t.rows.get_mut(&id).map(|rec| {
+                let from = rec.status;
+                rec.status = to;
+                from
+            });
+            match from {
+                Some(from) => {
+                    t.reindex(id, from, to);
+                    true
+                }
+                None => false,
+            }
+        };
+        if changed {
+            self.inner.messages_gen.fetch_add(1, Ordering::Release);
+        }
+        changed
     }
 
     /// Pop up to `max` New messages and mark them Delivered under a single
@@ -1087,11 +1319,12 @@ impl Store {
     /// Conductor's whole fetch-get-mark loop collapses into one call.
     ///
     /// Delivery semantics: the claim commits *before* the caller forwards
-    /// the records, so a crash between claim and forward drops rather than
+    /// the records (and is WAL-logged at claim time when persistence is
+    /// on), so a crash between claim and forward drops rather than
     /// duplicates (at-most-once). Acceptable here because the Conductor
     /// hands off to the in-process broker in the same tick with no failure
-    /// path, and snapshots never serialize messages anyway; an external
-    /// broker integration should add a Claimed state and ack-after-publish.
+    /// path; an external broker integration should add a Claimed state and
+    /// ack-after-publish.
     pub fn claim_messages(&self, max: usize) -> Vec<MessageRec> {
         let claimed = {
             let mut t = self.inner.messages.write().unwrap();
@@ -1119,6 +1352,9 @@ impl Store {
                 .entry(MessageStatus::Delivered)
                 .or_default()
                 .extend(ids.iter().copied());
+            if let Some(p) = self.persister() {
+                p.log(PersistEvent::MessageStatus { ids, to: MessageStatus::Delivered });
+            }
             out
         };
         self.inner.messages_gen.fetch_add(1, Ordering::Release);

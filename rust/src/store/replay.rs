@@ -1,0 +1,292 @@
+//! WAL replay: apply a [`PersistEvent`] to the store without validation.
+//!
+//! Replay semantics (the pair that makes fuzzy checkpoints converge — see
+//! DESIGN.md, "Durability model"):
+//!
+//! * **inserts are insert-if-absent** — an event whose effect the
+//!   checkpoint already captured is silently skipped, and any later
+//!   transition of that id is also in the replayed suffix (per-id WAL
+//!   order is application order), so the final state still agrees;
+//! * **everything else is last-write-wins** — events carry the values the
+//!   store actually stamped (status, timestamps, absolute retry counts),
+//!   so re-applying an already-included event writes the same bytes.
+//!
+//! Replay must run *before* a persister is attached; otherwise the
+//! replayed events would be logged again.
+
+use crate::persist::PersistEvent;
+
+use super::types::*;
+use super::Store;
+
+impl Store {
+    /// Apply one replayed event. Unknown ids in transition events are
+    /// skipped (their rows were pruned by an older snapshot walk or the
+    /// insert itself deduplicated) — replay never fails.
+    pub fn apply_event(&self, ev: &PersistEvent) {
+        match ev {
+            PersistEvent::AddRequest { id, name, requester, kind, workflow, at } => {
+                self.insert_request_rec(RequestRec {
+                    id: *id,
+                    name: name.clone(),
+                    requester: requester.clone(),
+                    kind: *kind,
+                    status: RequestStatus::New,
+                    workflow: workflow.clone(),
+                    created_at: *at,
+                    updated_at: *at,
+                });
+            }
+            PersistEvent::RequestStatus { ids, to, at } => {
+                for id in ids {
+                    self.inner.requests.force_status(*id, *to, *at);
+                }
+            }
+            PersistEvent::AddTransform { id, request_id, name, work, at } => {
+                self.insert_transform_rec(TransformRec {
+                    id: *id,
+                    request_id: *request_id,
+                    name: name.clone(),
+                    status: TransformStatus::New,
+                    work: work.clone(),
+                    retries: 0,
+                    created_at: *at,
+                    updated_at: *at,
+                });
+            }
+            PersistEvent::TransformStatus { ids, to, at } => {
+                for id in ids {
+                    self.inner.transforms.force_status(*id, *to, *at);
+                }
+            }
+            PersistEvent::TransformWork { id, work, at } => {
+                let _ = self.inner.transforms.with_mut(*id, |rec| {
+                    rec.work = work.clone();
+                    rec.updated_at = *at;
+                });
+            }
+            PersistEvent::TransformRetries { id, retries } => {
+                let _ = self.inner.transforms.with_mut(*id, |rec| {
+                    rec.retries = *retries;
+                });
+            }
+            PersistEvent::AddProcessing { id, transform_id, at } => {
+                self.insert_processing_rec(ProcessingRec {
+                    id: *id,
+                    transform_id: *transform_id,
+                    status: ProcessingStatus::New,
+                    wfm_task: None,
+                    submitted_at: None,
+                    finished_at: None,
+                    created_at: *at,
+                    updated_at: *at,
+                });
+            }
+            PersistEvent::ProcessingStatus { ids, to, at } => {
+                for id in ids {
+                    self.inner.processings.force_status(*id, *to, *at);
+                }
+            }
+            PersistEvent::ProcessingWfmTask { id, task } => {
+                let _ = self.inner.processings.with_mut(*id, |rec| {
+                    rec.wfm_task = Some(*task);
+                });
+            }
+            PersistEvent::AddCollection { id, transform_id, name, kind, at } => {
+                self.insert_collection_rec(CollectionRec {
+                    id: *id,
+                    transform_id: *transform_id,
+                    name: name.clone(),
+                    kind: *kind,
+                    status: CollectionStatus::Open,
+                    created_at: *at,
+                });
+            }
+            PersistEvent::CloseCollection { id } => {
+                let _ = self.close_collection(*id);
+            }
+            PersistEvent::AddContents { collection_id, items, at } => {
+                for (id, name, size) in items {
+                    self.insert_content_rec(ContentRec {
+                        id: *id,
+                        collection_id: *collection_id,
+                        name: name.clone(),
+                        size_bytes: *size,
+                        status: ContentStatus::New,
+                        ddm_file: None,
+                        updated_at: *at,
+                    });
+                }
+            }
+            PersistEvent::ContentStatus { ids, to, at } => {
+                for id in ids {
+                    self.force_content_status(*id, *to, *at);
+                }
+            }
+            PersistEvent::ContentDdmFile { id, ddm_file } => {
+                let _ = self.set_content_ddm_file(*id, *ddm_file);
+            }
+            PersistEvent::AddMessage { id, topic, source_transform, payload, at } => {
+                self.insert_message_rec(MessageRec {
+                    id: *id,
+                    topic: topic.clone(),
+                    source_transform: *source_transform,
+                    payload: payload.clone(),
+                    status: MessageStatus::New,
+                    created_at: *at,
+                });
+            }
+            PersistEvent::MessageStatus { ids, to } => {
+                for id in ids {
+                    self.force_message_status(*id, *to);
+                }
+            }
+        }
+    }
+
+    /// Replay-only content transition: no validation, skip missing ids.
+    fn force_content_status(&self, id: Id, to: ContentStatus, now: f64) -> bool {
+        let c = &self.inner.contents;
+        let changed = {
+            let mut shard = c.shards[super::stripe_of(id)].write().unwrap();
+            match shard.get_mut(&id) {
+                Some(rec) => {
+                    let from = rec.status;
+                    rec.status = to;
+                    rec.updated_at = now;
+                    let coll = rec.collection_id;
+                    if from != to {
+                        let mut idx = c.index.write().unwrap();
+                        if let Some(set) = idx.by_coll_status.get_mut(&(coll, from)) {
+                            set.remove(&id);
+                        }
+                        idx.by_coll_status.entry((coll, to)).or_default().insert(id);
+                    }
+                    true
+                }
+                None => false,
+            }
+        };
+        if changed {
+            c.bump();
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use crate::persist::PersistEvent;
+    use crate::util::clock::WallClock;
+    use crate::util::json::Json;
+
+    use super::super::*;
+
+    fn store() -> Store {
+        Store::new(Arc::new(WallClock::new()))
+    }
+
+    #[test]
+    fn replayed_inserts_are_deduplicated() {
+        let s = store();
+        let ev = PersistEvent::AddRequest {
+            id: 42,
+            name: "r".into(),
+            requester: "u".into(),
+            kind: RequestKind::Workflow,
+            workflow: Json::Null,
+            at: 1.0,
+        };
+        s.apply_event(&ev);
+        s.apply_event(&ev);
+        assert_eq!(s.counts().get("requests").unwrap().as_u64(), Some(1));
+        assert_eq!(s.requests_with_status(RequestStatus::New), vec![42]);
+    }
+
+    #[test]
+    fn replay_transitions_are_last_write_wins() {
+        let s = store();
+        s.apply_event(&PersistEvent::AddRequest {
+            id: 7,
+            name: "r".into(),
+            requester: "u".into(),
+            kind: RequestKind::Workflow,
+            workflow: Json::Null,
+            at: 0.0,
+        });
+        s.apply_event(&PersistEvent::RequestStatus {
+            ids: vec![7],
+            to: RequestStatus::Transforming,
+            at: 1.0,
+        });
+        s.apply_event(&PersistEvent::RequestStatus {
+            ids: vec![7],
+            to: RequestStatus::Finished,
+            at: 2.0,
+        });
+        // re-delivery of an already-included event converges
+        s.apply_event(&PersistEvent::RequestStatus {
+            ids: vec![7],
+            to: RequestStatus::Finished,
+            at: 2.0,
+        });
+        let r = s.get_request(7).unwrap();
+        assert_eq!(r.status, RequestStatus::Finished);
+        assert_eq!(r.updated_at, 2.0);
+        assert_eq!(s.requests_with_status(RequestStatus::Finished), vec![7]);
+        assert!(s.requests_with_status(RequestStatus::Transforming).is_empty());
+        // unknown ids are skipped silently
+        s.apply_event(&PersistEvent::RequestStatus {
+            ids: vec![999],
+            to: RequestStatus::Failed,
+            at: 3.0,
+        });
+    }
+
+    #[test]
+    fn replay_reconstructs_contents_indexes_and_timestamps() {
+        let s = store();
+        s.apply_event(&PersistEvent::AddContents {
+            collection_id: 5,
+            items: vec![(10, "a".into(), 100), (11, "b".into(), 200)],
+            at: 1.5,
+        });
+        s.apply_event(&PersistEvent::ContentStatus {
+            ids: vec![10],
+            to: ContentStatus::Staging,
+            at: 2.5,
+        });
+        assert_eq!(s.count_contents(5, ContentStatus::New), 1);
+        assert_eq!(s.count_contents(5, ContentStatus::Staging), 1);
+        let c = s.get_content(10).unwrap();
+        assert_eq!(c.updated_at, 2.5);
+        assert_eq!(s.get_content(11).unwrap().updated_at, 1.5);
+    }
+
+    #[test]
+    fn replay_processing_timestamps_match_event_times() {
+        let s = store();
+        s.apply_event(&PersistEvent::AddProcessing { id: 3, transform_id: 2, at: 0.5 });
+        s.apply_event(&PersistEvent::ProcessingStatus {
+            ids: vec![3],
+            to: ProcessingStatus::Submitting,
+            at: 1.0,
+        });
+        s.apply_event(&PersistEvent::ProcessingStatus {
+            ids: vec![3],
+            to: ProcessingStatus::Submitted,
+            at: 2.0,
+        });
+        s.apply_event(&PersistEvent::ProcessingStatus {
+            ids: vec![3],
+            to: ProcessingStatus::Finished,
+            at: 3.0,
+        });
+        let p = s.get_processing(3).unwrap();
+        assert_eq!(p.submitted_at, Some(2.0));
+        assert_eq!(p.finished_at, Some(3.0));
+        assert_eq!(p.created_at, 0.5);
+    }
+}

@@ -1,18 +1,26 @@
 //! Store snapshot/restore: serialize the full iDDS state to JSON and load
-//! it back — the restart-safety path (production iDDS persists in a
-//! relational DB; here a snapshot file plays that role for the head
-//! service and for reproducible test fixtures).
+//! it back — the checkpoint payload of the `persist` subsystem and the
+//! basis of reproducible test fixtures (production iDDS persists in a
+//! relational DB; here the snapshot + WAL play that role for the head
+//! service).
 //!
 //! Round-trip guarantee (property-tested): `restore(snapshot(s))`
-//! preserves every record, status, and index relation. Ids are preserved
-//! verbatim; the process-wide id counter must be advanced past the
-//! snapshot's max id by the caller (`Store::restore` returns it).
+//! preserves every record, status, timestamp, and index relation. Ids are
+//! preserved verbatim and **restore advances the process-wide id counter
+//! internally** — callers never have to (it still returns the max id seen,
+//! for reporting).
+//!
+//! Format version 2 covers all six tables — requests, transforms,
+//! processings, collections, contents, messages — with timestamps, so a
+//! recovered store is bit-identical to the snapshotted one. Version 1
+//! snapshots (no processings/messages/timestamps) still load, with
+//! timestamps defaulting to restore time.
 //!
 //! Snapshot reads walk the sorted status indexes, so output order is
-//! deterministic without any sorting here. Restore goes through the raw
-//! insert paths, which rebuild the striped status indexes and bump each
-//! table's generation counter — daemons resume change-driven polling
-//! correctly after a restore.
+//! deterministic without any sorting here. Restore goes through the
+//! insert-if-absent rec paths, which rebuild the striped status indexes
+//! and bump each table's generation counter — daemons resume
+//! change-driven polling correctly after a restore.
 
 use anyhow::{Context, Result};
 
@@ -21,8 +29,156 @@ use crate::util::json::{parse, Json};
 use super::types::*;
 use super::Store;
 
+fn opt_f64(j: &Json, key: &str, default: f64) -> f64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+}
+
+/// Fully decoded snapshot — phase 1 of restore. Building this validates
+/// every record without touching the store.
+#[derive(Default)]
+struct DecodedSnapshot {
+    requests: Vec<RequestRec>,
+    transforms: Vec<TransformRec>,
+    collections: Vec<CollectionRec>,
+    contents: Vec<ContentRec>,
+    processings: Vec<ProcessingRec>,
+    messages: Vec<MessageRec>,
+    max_id: Id,
+}
+
+fn decode_snapshot(snap: &Json, now: f64) -> Result<DecodedSnapshot> {
+    let version = snap.get("version").and_then(|v| v.as_u64()).unwrap_or(0);
+    anyhow::ensure!(
+        version == 1 || version == 2,
+        "unsupported snapshot version {version}"
+    );
+    let mut d = DecodedSnapshot::default();
+
+    for r in snap.get("requests").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+        let id = r.get("id").and_then(|v| v.as_u64()).context("request.id")?;
+        d.max_id = d.max_id.max(id);
+        d.requests.push(RequestRec {
+            id,
+            name: r.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            requester: r.get("requester").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            kind: r
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .and_then(RequestKind::parse)
+                .context("request.kind")?,
+            status: r
+                .get("status")
+                .and_then(|v| v.as_str())
+                .and_then(RequestStatus::parse)
+                .context("request.status")?,
+            workflow: r.get("workflow").cloned().unwrap_or(Json::Null),
+            created_at: opt_f64(r, "created_at", now),
+            updated_at: opt_f64(r, "updated_at", now),
+        });
+    }
+    for t in snap.get("transforms").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+        let id = t.get("id").and_then(|v| v.as_u64()).context("transform.id")?;
+        d.max_id = d.max_id.max(id);
+        d.transforms.push(TransformRec {
+            id,
+            request_id: t.get("request_id").and_then(|v| v.as_u64()).context("request_id")?,
+            name: t.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            status: t
+                .get("status")
+                .and_then(|v| v.as_str())
+                .and_then(TransformStatus::parse)
+                .context("transform.status")?,
+            work: t.get("work").cloned().unwrap_or(Json::Null),
+            retries: t.get("retries").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+            created_at: opt_f64(t, "created_at", now),
+            updated_at: opt_f64(t, "updated_at", now),
+        });
+    }
+    for c in snap.get("collections").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+        let id = c.get("id").and_then(|v| v.as_u64()).context("collection.id")?;
+        d.max_id = d.max_id.max(id);
+        d.collections.push(CollectionRec {
+            id,
+            transform_id: c
+                .get("transform_id")
+                .and_then(|v| v.as_u64())
+                .context("transform_id")?,
+            name: c.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            kind: c
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .and_then(CollectionKind::parse)
+                .unwrap_or(CollectionKind::Log),
+            status: if c.get("closed").and_then(|v| v.as_bool()).unwrap_or(false) {
+                CollectionStatus::Closed
+            } else {
+                CollectionStatus::Open
+            },
+            created_at: opt_f64(c, "created_at", now),
+        });
+    }
+    for c in snap.get("contents").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+        let id = c.get("id").and_then(|v| v.as_u64()).context("content.id")?;
+        d.max_id = d.max_id.max(id);
+        d.contents.push(ContentRec {
+            id,
+            collection_id: c
+                .get("collection_id")
+                .and_then(|v| v.as_u64())
+                .context("collection_id")?,
+            name: c.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            size_bytes: c.get("size").and_then(|v| v.as_u64()).unwrap_or(0),
+            status: c
+                .get("status")
+                .and_then(|v| v.as_str())
+                .and_then(ContentStatus::parse)
+                .context("content.status")?,
+            ddm_file: c.get("ddm_file").and_then(|v| v.as_u64()),
+            updated_at: opt_f64(c, "updated_at", now),
+        });
+    }
+    for p in snap.get("processings").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+        let id = p.get("id").and_then(|v| v.as_u64()).context("processing.id")?;
+        d.max_id = d.max_id.max(id);
+        d.processings.push(ProcessingRec {
+            id,
+            transform_id: p
+                .get("transform_id")
+                .and_then(|v| v.as_u64())
+                .context("transform_id")?,
+            status: p
+                .get("status")
+                .and_then(|v| v.as_str())
+                .and_then(ProcessingStatus::parse)
+                .context("processing.status")?,
+            wfm_task: p.get("wfm_task").and_then(|v| v.as_u64()),
+            submitted_at: p.get("submitted_at").and_then(|v| v.as_f64()),
+            finished_at: p.get("finished_at").and_then(|v| v.as_f64()),
+            created_at: opt_f64(p, "created_at", now),
+            updated_at: opt_f64(p, "updated_at", now),
+        });
+    }
+    for m in snap.get("messages").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+        let id = m.get("id").and_then(|v| v.as_u64()).context("message.id")?;
+        d.max_id = d.max_id.max(id);
+        d.messages.push(MessageRec {
+            id,
+            topic: m.get("topic").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            source_transform: m.get("source_transform").and_then(|v| v.as_u64()),
+            payload: m.get("payload").cloned().unwrap_or(Json::Null),
+            status: m
+                .get("status")
+                .and_then(|v| v.as_str())
+                .and_then(MessageStatus::parse)
+                .context("message.status")?,
+            created_at: opt_f64(m, "created_at", now),
+        });
+    }
+    Ok(d)
+}
+
 impl Store {
-    /// Serialize everything to a JSON value.
+    /// Serialize everything to a JSON value (snapshot format version 2).
     pub fn snapshot(&self) -> Json {
         let mut requests = Vec::new();
         for status in RequestStatus::ALL {
@@ -56,7 +212,9 @@ impl Store {
                             .set("name", t.name.as_str())
                             .set("status", t.status.as_str())
                             .set("work", t.work.clone())
-                            .set("retries", t.retries as u64),
+                            .set("retries", t.retries as u64)
+                            .set("created_at", t.created_at)
+                            .set("updated_at", t.updated_at),
                     );
                 }
                 for coll in self.collections_of_transform(tid) {
@@ -66,32 +224,75 @@ impl Store {
                             .set("transform_id", coll.transform_id)
                             .set("name", coll.name.as_str())
                             .set("kind", coll.kind.as_str())
-                            .set(
-                                "closed",
-                                coll.status == CollectionStatus::Closed,
-                            ),
+                            .set("closed", coll.status == CollectionStatus::Closed)
+                            .set("created_at", coll.created_at),
                     );
                     for cid in self.contents_of_collection(coll.id) {
                         if let Ok(c) = self.get_content(cid) {
-                            contents.push(
-                                Json::obj()
-                                    .set("id", c.id)
-                                    .set("collection_id", c.collection_id)
-                                    .set("name", c.name.as_str())
-                                    .set("size", c.size_bytes)
-                                    .set("status", c.status.as_str()),
-                            );
+                            let mut j = Json::obj()
+                                .set("id", c.id)
+                                .set("collection_id", c.collection_id)
+                                .set("name", c.name.as_str())
+                                .set("size", c.size_bytes)
+                                .set("status", c.status.as_str())
+                                .set("updated_at", c.updated_at);
+                            if let Some(d) = c.ddm_file {
+                                j = j.set("ddm_file", d);
+                            }
+                            contents.push(j);
                         }
                     }
                 }
             }
         }
+        let mut processings = Vec::new();
+        for status in ProcessingStatus::ALL {
+            for pid in self.processings_with_status(*status) {
+                if let Ok(p) = self.get_processing(pid) {
+                    let mut j = Json::obj()
+                        .set("id", p.id)
+                        .set("transform_id", p.transform_id)
+                        .set("status", p.status.as_str())
+                        .set("created_at", p.created_at)
+                        .set("updated_at", p.updated_at);
+                    if let Some(t) = p.wfm_task {
+                        j = j.set("wfm_task", t);
+                    }
+                    if let Some(t) = p.submitted_at {
+                        j = j.set("submitted_at", t);
+                    }
+                    if let Some(t) = p.finished_at {
+                        j = j.set("finished_at", t);
+                    }
+                    processings.push(j);
+                }
+            }
+        }
+        let mut messages = Vec::new();
+        for status in MessageStatus::ALL {
+            for mid in self.messages_with_status(*status) {
+                if let Ok(m) = self.get_message(mid) {
+                    let mut j = Json::obj()
+                        .set("id", m.id)
+                        .set("topic", m.topic.as_str())
+                        .set("payload", m.payload.clone())
+                        .set("status", m.status.as_str())
+                        .set("created_at", m.created_at);
+                    if let Some(src) = m.source_transform {
+                        j = j.set("source_transform", src);
+                    }
+                    messages.push(j);
+                }
+            }
+        }
         Json::obj()
-            .set("version", 1u64)
+            .set("version", 2u64)
             .set("requests", Json::Arr(requests))
             .set("transforms", Json::Arr(transforms))
             .set("collections", Json::Arr(collections))
             .set("contents", Json::Arr(contents))
+            .set("processings", Json::Arr(processings))
+            .set("messages", Json::Arr(messages))
     }
 
     pub fn snapshot_to_file(&self, path: &std::path::Path) -> Result<()> {
@@ -99,88 +300,42 @@ impl Store {
             .with_context(|| format!("writing snapshot {}", path.display()))
     }
 
-    /// Restore records into this (empty) store. Returns the max id seen so
-    /// the caller can bump the global id counter if needed.
-    pub fn restore(&self, snap: &Json) -> Result<Id> {
-        let version = snap.get("version").and_then(|v| v.as_u64()).unwrap_or(0);
-        anyhow::ensure!(version == 1, "unsupported snapshot version {version}");
-        let mut max_id = 0;
+    /// Restore records into this (empty) store and advance the process-wide
+    /// id counter past everything restored. Two-phase: the whole snapshot
+    /// is decoded and validated **before** the first insert, so a failed
+    /// restore leaves the store untouched (crash recovery relies on this
+    /// to fall back to an older checkpoint cleanly). Returns the max id
+    /// seen (for reporting; callers no longer need it for anything).
+    /// Phase-1 decode only: validates that every record of `snap` would
+    /// restore, without touching any store. Crash recovery uses this to
+    /// vet *fallback* checkpoints it is not loading right now, so WAL
+    /// pruning never trusts a checkpoint that could not actually load.
+    pub(crate) fn validate_snapshot(snap: &Json) -> Result<Id> {
+        Ok(decode_snapshot(snap, 0.0)?.max_id)
+    }
 
-        for r in snap.get("requests").and_then(|a| a.as_arr()).unwrap_or(&[]) {
-            let id = r.get("id").and_then(|v| v.as_u64()).context("request.id")?;
-            max_id = max_id.max(id);
-            let kind = r
-                .get("kind")
-                .and_then(|v| v.as_str())
-                .and_then(RequestKind::parse)
-                .context("request.kind")?;
-            let status = r
-                .get("status")
-                .and_then(|v| v.as_str())
-                .and_then(RequestStatus::parse)
-                .context("request.status")?;
-            self.insert_request_raw(
-                id,
-                r.get("name").and_then(|v| v.as_str()).unwrap_or(""),
-                r.get("requester").and_then(|v| v.as_str()).unwrap_or(""),
-                kind,
-                status,
-                r.get("workflow").cloned().unwrap_or(Json::Null),
-            );
+    pub fn restore(&self, snap: &Json) -> Result<Id> {
+        let decoded = decode_snapshot(snap, self.now())?;
+        let max_id = decoded.max_id;
+        for rec in decoded.requests {
+            self.insert_request_rec(rec);
         }
-        for t in snap.get("transforms").and_then(|a| a.as_arr()).unwrap_or(&[]) {
-            let id = t.get("id").and_then(|v| v.as_u64()).context("transform.id")?;
-            max_id = max_id.max(id);
-            let status = t
-                .get("status")
-                .and_then(|v| v.as_str())
-                .and_then(TransformStatus::parse)
-                .context("transform.status")?;
-            self.insert_transform_raw(
-                id,
-                t.get("request_id").and_then(|v| v.as_u64()).context("request_id")?,
-                t.get("name").and_then(|v| v.as_str()).unwrap_or(""),
-                status,
-                t.get("work").cloned().unwrap_or(Json::Null),
-                t.get("retries").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
-            );
+        for rec in decoded.transforms {
+            self.insert_transform_rec(rec);
         }
-        for c in snap.get("collections").and_then(|a| a.as_arr()).unwrap_or(&[]) {
-            let id = c.get("id").and_then(|v| v.as_u64()).context("collection.id")?;
-            max_id = max_id.max(id);
-            let kind = match c.get("kind").and_then(|v| v.as_str()) {
-                Some("Input") => CollectionKind::Input,
-                Some("Output") => CollectionKind::Output,
-                _ => CollectionKind::Log,
-            };
-            self.insert_collection_raw(
-                id,
-                c.get("transform_id").and_then(|v| v.as_u64()).context("transform_id")?,
-                c.get("name").and_then(|v| v.as_str()).unwrap_or(""),
-                kind,
-                if c.get("closed").and_then(|v| v.as_bool()).unwrap_or(false) {
-                    CollectionStatus::Closed
-                } else {
-                    CollectionStatus::Open
-                },
-            );
+        for rec in decoded.collections {
+            self.insert_collection_rec(rec);
         }
-        for c in snap.get("contents").and_then(|a| a.as_arr()).unwrap_or(&[]) {
-            let id = c.get("id").and_then(|v| v.as_u64()).context("content.id")?;
-            max_id = max_id.max(id);
-            let status = c
-                .get("status")
-                .and_then(|v| v.as_str())
-                .and_then(ContentStatus::parse)
-                .context("content.status")?;
-            self.insert_content_raw(
-                id,
-                c.get("collection_id").and_then(|v| v.as_u64()).context("collection_id")?,
-                c.get("name").and_then(|v| v.as_str()).unwrap_or(""),
-                c.get("size").and_then(|v| v.as_u64()).unwrap_or(0),
-                status,
-            );
+        for rec in decoded.contents {
+            self.insert_content_rec(rec);
         }
+        for rec in decoded.processings {
+            self.insert_processing_rec(rec);
+        }
+        for rec in decoded.messages {
+            self.insert_message_rec(rec);
+        }
+        crate::util::advance_next_id(max_id);
         Ok(max_id)
     }
 
@@ -203,27 +358,27 @@ mod tests {
         s.update_request_status(rid, RequestStatus::Transforming).unwrap();
         let tid = s.add_transform(rid, "work#0", Json::obj().set("kind", "Noop"));
         s.update_transform_status(tid, TransformStatus::Activated).unwrap();
+        let pid = s.add_processing(tid);
+        s.update_processing_status(pid, ProcessingStatus::Submitting).unwrap();
+        s.update_processing_status(pid, ProcessingStatus::Submitted).unwrap();
+        s.set_processing_wfm_task(pid, 9999).unwrap();
         let cid = s.add_collection(tid, "in", CollectionKind::Input);
         let ids = s.add_contents(cid, (0..50).map(|i| (format!("f{i}"), 100 + i)));
         s.update_contents_status(&ids[..20], ContentStatus::Staging);
         s.update_contents_status(&ids[..10], ContentStatus::Available);
+        s.add_message("idds.work.finished", Some(tid), Json::obj().set("x", 1u64));
         s
     }
 
     #[test]
-    fn snapshot_restore_roundtrip() {
+    fn snapshot_restore_roundtrip_is_exact() {
         let s = populated();
         let snap = s.snapshot();
         let s2 = Store::new(Arc::new(WallClock::new()));
         let max_id = s2.restore(&snap).unwrap();
         assert!(max_id > 0);
-        // identical snapshots after restore (ignoring timestamps, which
-        // snapshot() only includes for requests — compare structure)
-        let snap2 = s2.snapshot();
-        assert_eq!(
-            snap.get("contents").unwrap().as_arr().unwrap().len(),
-            snap2.get("contents").unwrap().as_arr().unwrap().len()
-        );
+        // v2 restore is exact: identical snapshot, timestamps included
+        assert_eq!(snap, s2.snapshot());
         // status indexes rebuilt correctly
         let rid = snap.get("requests").unwrap().as_arr().unwrap()[0]
             .get("id").unwrap().as_u64().unwrap();
@@ -234,6 +389,55 @@ mod tests {
         assert_eq!(s2.count_contents(colls[0].id, ContentStatus::Available), 10);
         assert_eq!(s2.count_contents(colls[0].id, ContentStatus::Staging), 10);
         assert_eq!(s2.count_contents(colls[0].id, ContentStatus::New), 30);
+        // processings and messages survive (they were lost in format v1)
+        assert_eq!(s2.processings_with_status(ProcessingStatus::Submitted).len(), 1);
+        let pid = s2.processings_with_status(ProcessingStatus::Submitted)[0];
+        let p = s2.get_processing(pid).unwrap();
+        assert_eq!(p.wfm_task, Some(9999));
+        assert!(p.submitted_at.is_some());
+        assert_eq!(s2.messages_with_status(MessageStatus::New).len(), 1);
+    }
+
+    #[test]
+    fn restore_advances_id_counter_internally() {
+        let s = populated();
+        let snap = s.snapshot();
+        let s2 = Store::new(Arc::new(WallClock::new()));
+        let max_id = s2.restore(&snap).unwrap();
+        // no caller-side bump needed: fresh ids must not collide with
+        // anything restored
+        let fresh = s2.add_request("after", "u", RequestKind::Workflow, Json::Null);
+        assert!(fresh > max_id, "fresh id {fresh} collides with restored range (max {max_id})");
+    }
+
+    #[test]
+    fn v1_snapshot_still_loads() {
+        let v1 = Json::obj()
+            .set("version", 1u64)
+            .set(
+                "requests",
+                Json::Arr(vec![Json::obj()
+                    .set("id", 3u64)
+                    .set("name", "old")
+                    .set("requester", "u")
+                    .set("kind", "Workflow")
+                    .set("status", "New")
+                    .set("workflow", Json::Null)]),
+            )
+            .set(
+                "transforms",
+                Json::Arr(vec![Json::obj()
+                    .set("id", 4u64)
+                    .set("request_id", 3u64)
+                    .set("name", "w")
+                    .set("status", "New")
+                    .set("work", Json::Null)
+                    .set("retries", 0u64)]),
+            );
+        let s = Store::new(Arc::new(WallClock::new()));
+        s.restore(&v1).unwrap();
+        assert_eq!(s.requests_with_status(RequestStatus::New), vec![3]);
+        assert_eq!(s.transforms_of_request(3), vec![4]);
     }
 
     #[test]

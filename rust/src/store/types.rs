@@ -207,14 +207,22 @@ impl CollectionKind {
             Self::Log => "Log",
         }
     }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "Input" => Some(Self::Input),
+            "Output" => Some(Self::Output),
+            "Log" => Some(Self::Log),
+            _ => None,
+        }
+    }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum MessageStatus {
+status_enum!(MessageStatus {
     New,
     Delivered,
     Acked,
-}
+});
 
 // ---------------------------------------------------------------------------
 // Records

@@ -25,17 +25,37 @@ pub mod pool;
 pub mod propcheck;
 pub mod bench;
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
 /// Monotonically increasing id generator (process-wide, lock-free).
 pub fn next_id() -> u64 {
-    use std::sync::atomic::{AtomicU64, Ordering};
-    static NEXT: AtomicU64 = AtomicU64::new(1);
-    NEXT.fetch_add(1, Ordering::Relaxed)
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Ensure every future [`next_id`] call returns an id strictly greater
+/// than `max_seen`. Used by snapshot restore and WAL replay so recovered
+/// rows can never collide with freshly allocated ids; callers no longer
+/// advance the counter themselves.
+pub fn advance_next_id(max_seen: u64) {
+    NEXT_ID.fetch_max(max_seen.saturating_add(1), Ordering::Relaxed);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::collections::HashSet;
+
+    #[test]
+    fn advance_next_id_skips_past_restored_ids() {
+        let seen = next_id();
+        advance_next_id(seen + 1000);
+        assert!(next_id() > seen + 1000);
+        // advancing backwards is a no-op
+        advance_next_id(seen);
+        assert!(next_id() > seen + 1000);
+    }
 
     #[test]
     fn next_id_unique_across_threads() {

@@ -1,0 +1,450 @@
+//! Crash-recovery integration tests for the `persist` subsystem: a
+//! property test that `recover(checkpoint + WAL suffix)` equals the live
+//! store after random interleavings of batched transitions, a torn-tail
+//! test, and the full kill-and-restart round trip over REST (populate →
+//! checkpoint → more batched writes → drop the process state → recover
+//! from the data dir → every table and status index matches, and the
+//! daemons resume).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use idds::broker::Broker;
+use idds::config::Config;
+use idds::daemons::executors::{ExecutorSet, NoopExecutor};
+use idds::daemons::{AgentHost, Daemon, Pipeline};
+use idds::metrics::Registry;
+use idds::persist::{FsyncMode, Persist, PersistOptions};
+use idds::rest::{serve, Client, ServerState};
+use idds::store::{
+    CollectionKind, ContentStatus, Id, MessageStatus, ProcessingStatus, RequestKind,
+    RequestStatus, Store, TransformStatus,
+};
+use idds::util::clock::WallClock;
+use idds::util::json::Json;
+use idds::util::propcheck::check;
+use idds::workflow::{Condition, WorkKind, WorkTemplate, Workflow};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "idds-recov-{tag}-{}-{}",
+        std::process::id(),
+        idds::util::next_id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn opts() -> PersistOptions {
+    PersistOptions {
+        segment_bytes: 16 * 1024, // small: rotation gets exercised
+        fsync: FsyncMode::Group,  // tier1 runs this in release, fsync paths live
+        checkpoint_keep: 2,
+        flush_idle_ms: 2,
+    }
+}
+
+fn opts_nofsync() -> PersistOptions {
+    PersistOptions { fsync: FsyncMode::Never, ..opts() }
+}
+
+fn store() -> Store {
+    Store::new(Arc::new(WallClock::new()))
+}
+
+/// Canonical snapshot: every table array sorted by id, so stores built in
+/// different insertion orders (live vs replayed) compare equal when their
+/// contents are equal.
+fn canon(mut snap: Json) -> Json {
+    if let Json::Obj(m) = &mut snap {
+        for arr in m.values_mut() {
+            if let Json::Arr(a) = arr {
+                a.sort_by_key(|row| row.get("id").and_then(|v| v.as_u64()).unwrap_or(0));
+            }
+        }
+    }
+    snap
+}
+
+fn assert_stores_equal(live: &Store, recovered: &Store) {
+    assert_eq!(
+        canon(live.snapshot()),
+        canon(recovered.snapshot()),
+        "recovered snapshot differs from live store"
+    );
+    // status indexes, not just rows
+    for st in RequestStatus::ALL {
+        assert_eq!(
+            live.requests_with_status(*st),
+            recovered.requests_with_status(*st),
+            "request index {st}"
+        );
+    }
+    for st in TransformStatus::ALL {
+        assert_eq!(
+            live.transforms_with_status(*st),
+            recovered.transforms_with_status(*st),
+            "transform index {st}"
+        );
+    }
+    for st in ProcessingStatus::ALL {
+        assert_eq!(
+            live.processings_with_status(*st),
+            recovered.processings_with_status(*st),
+            "processing index {st}"
+        );
+    }
+    for st in MessageStatus::ALL {
+        assert_eq!(
+            live.messages_with_status(*st),
+            recovered.messages_with_status(*st),
+            "message index {st}"
+        );
+    }
+    assert_eq!(live.counts(), recovered.counts());
+}
+
+#[test]
+fn wal_only_recovery_restores_everything() {
+    let dir = tmp_dir("walonly");
+    let s = store();
+    let (p, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+
+    let rid = s.add_request("camp", "alice", RequestKind::DataCarousel, Json::obj().set("w", 1u64));
+    s.update_request_status(rid, RequestStatus::Transforming).unwrap();
+    let tid = s.add_transform(rid, "w#0", Json::obj().set("kind", "Noop"));
+    s.update_transforms_status(&[tid], TransformStatus::Activated);
+    let pid = s.add_processing(tid);
+    s.update_processings_status(&[pid], ProcessingStatus::Submitting);
+    s.set_processing_wfm_task(pid, 424_242).unwrap();
+    let cid = s.add_collection(tid, "in", CollectionKind::Input);
+    let ids = s.add_contents(cid, (0..200).map(|i| (format!("f{i}"), 10 + i)));
+    s.update_contents_status(&ids[..80], ContentStatus::Staging);
+    s.update_contents_status(&ids[..40], ContentStatus::Available);
+    s.set_content_ddm_file(ids[0], 777).unwrap();
+    s.close_collection(cid).unwrap();
+    s.add_message("idds.work.finished", Some(tid), Json::obj().set("n", 1u64));
+    s.add_message("idds.work.finished", Some(tid), Json::obj().set("n", 2u64));
+    s.claim_messages(1);
+    p.shutdown();
+
+    let s2 = store();
+    let (p2, report) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+    assert!(report.events_replayed > 0);
+    assert_eq!(report.torn_bytes, 0);
+    assert_stores_equal(&s, &s2);
+    assert_eq!(s2.get_content(ids[0]).unwrap().ddm_file, Some(777));
+    assert_eq!(s2.get_processing(pid).unwrap().wfm_task, Some(424_242));
+    p2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prop_recovery_equals_live_after_random_batched_interleavings() {
+    check("recover(checkpoint + wal suffix) == live store", 10, |rng| {
+        let dir = tmp_dir("prop");
+        let s = store();
+        let (p, _) = Persist::open(&dir, opts_nofsync(), &s, Registry::default()).unwrap();
+
+        let mut requests: Vec<Id> = Vec::new();
+        let mut transforms: Vec<Id> = Vec::new();
+        let mut processings: Vec<Id> = Vec::new();
+        let mut contents: Vec<Id> = Vec::new();
+        let mut collections: Vec<Id> = Vec::new();
+        let n_ops = 120 + rng.below(120);
+        let checkpoint_at = rng.below(n_ops);
+        for op_i in 0..n_ops {
+            if op_i == checkpoint_at {
+                p.checkpoint(&s).map_err(|e| format!("checkpoint failed: {e}"))?;
+            }
+            match rng.below(12) {
+                0 => requests.push(s.add_request(
+                    &format!("r{op_i}"),
+                    "u",
+                    RequestKind::Workflow,
+                    Json::Null,
+                )),
+                1 if !requests.is_empty() => {
+                    let k = 1 + rng.below(requests.len() as u64) as usize;
+                    let to = *rng.choose(RequestStatus::ALL);
+                    s.update_requests_status(&requests[..k], to);
+                }
+                2 if !requests.is_empty() => {
+                    let rid = requests[rng.below(requests.len() as u64) as usize];
+                    transforms.push(s.add_transform(rid, &format!("t{op_i}"), Json::Null));
+                }
+                3 if !transforms.is_empty() => {
+                    let k = 1 + rng.below(transforms.len() as u64) as usize;
+                    let to = *rng.choose(TransformStatus::ALL);
+                    s.update_transforms_status(&transforms[..k], to);
+                }
+                4 if !transforms.is_empty() => {
+                    let tid = transforms[rng.below(transforms.len() as u64) as usize];
+                    processings.push(s.add_processing(tid));
+                }
+                5 if !processings.is_empty() => {
+                    let k = 1 + rng.below(processings.len() as u64) as usize;
+                    let to = *rng.choose(ProcessingStatus::ALL);
+                    s.update_processings_status(&processings[..k], to);
+                }
+                6 if !transforms.is_empty() => {
+                    let tid = transforms[rng.below(transforms.len() as u64) as usize];
+                    let cid = s.add_collection(tid, &format!("c{op_i}"), CollectionKind::Input);
+                    collections.push(cid);
+                    contents.extend(s.add_contents(
+                        cid,
+                        (0..1 + rng.below(40)).map(|i| (format!("f{op_i}/{i}"), 1u64)),
+                    ));
+                }
+                7 if !contents.is_empty() => {
+                    let k = 1 + rng.below(contents.len().min(200) as u64) as usize;
+                    let start = rng.below((contents.len() - k) as u64 + 1) as usize;
+                    let to = *rng.choose(ContentStatus::ALL);
+                    s.update_contents_status(&contents[start..start + k], to);
+                }
+                8 if !transforms.is_empty() => {
+                    let tid = transforms[rng.below(transforms.len() as u64) as usize];
+                    let _ = s.update_transform_work(tid, Json::obj().set("i", op_i));
+                    let _ = s.bump_transform_retries(tid);
+                }
+                9 if !processings.is_empty() => {
+                    let pid = processings[rng.below(processings.len() as u64) as usize];
+                    let _ = s.set_processing_wfm_task(pid, 10_000 + op_i);
+                }
+                10 => {
+                    s.add_message("t", None, Json::Num(op_i as f64));
+                    if rng.bool(0.3) {
+                        s.claim_messages(1 + rng.below(4) as usize);
+                    }
+                }
+                11 if !collections.is_empty() => {
+                    let cid = collections[rng.below(collections.len() as u64) as usize];
+                    let _ = s.close_collection(cid);
+                }
+                _ => {}
+            }
+        }
+        p.shutdown();
+
+        let s2 = store();
+        let (p2, _report) = Persist::open(&dir, opts_nofsync(), &s2, Registry::default())
+            .map_err(|e| format!("recovery failed: {e}"))?;
+        let live = canon(s.snapshot());
+        let recovered = canon(s2.snapshot());
+        if live != recovered {
+            return Err(format!(
+                "recovered state diverged after {n_ops} ops (checkpoint at {checkpoint_at})"
+            ));
+        }
+        p2.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn torn_tail_truncated_to_clean_prefix() {
+    let dir = tmp_dir("torn");
+    let s = store();
+    let (p, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+    let ids: Vec<Id> = (0..30)
+        .map(|i| s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null))
+        .collect();
+    s.update_requests_status(&ids, RequestStatus::Transforming);
+    p.flush();
+    // everything up to here survives; the NEXT event is the one we damage
+    let clean_prefix_state = canon(s.snapshot());
+    s.update_request_status(ids[0], RequestStatus::Finished).unwrap();
+    let expect_full = canon(s.snapshot());
+    p.shutdown();
+
+    // crash mid-write: cut 5 bytes out of the last frame of the newest
+    // segment — that frame is exactly the single Finished transition
+    let wal_dir = dir.join("wal");
+    let mut segs: Vec<PathBuf> = std::fs::read_dir(&wal_dir)
+        .unwrap()
+        .filter_map(|e| {
+            let p = e.unwrap().path();
+            (p.extension().map(|x| x == "log").unwrap_or(false)
+                && std::fs::metadata(&p).unwrap().len() > 16)
+                .then_some(p)
+        })
+        .collect();
+    segs.sort();
+    let last = segs.pop().expect("a non-empty wal segment");
+    let full = std::fs::metadata(&last).unwrap().len();
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(&last)
+        .unwrap()
+        .set_len(full - 5)
+        .unwrap();
+
+    let s2 = store();
+    let (p2, report) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+    assert!(report.torn_bytes > 0, "torn tail must be detected");
+    // the clean prefix survived intact, the damaged frame did not
+    assert_eq!(canon(s2.snapshot()), clean_prefix_state);
+    assert_eq!(
+        s2.get_request(ids[0]).unwrap().status,
+        RequestStatus::Transforming,
+        "the torn Finished transition must be gone"
+    );
+    // the segment file itself was truncated to the clean prefix
+    assert!(std::fs::metadata(&last).unwrap().len() < full - 5);
+    // re-apply the lost transition and persist it through the new WAL head
+    s2.update_request_status(ids[0], RequestStatus::Finished).unwrap();
+    p2.shutdown();
+
+    // recovery after the repair reaches the original state again
+    let s3 = store();
+    let (p3, report3) = Persist::open(&dir, opts(), &s3, Registry::default()).unwrap();
+    assert_eq!(report3.torn_bytes, 0, "torn tail already truncated");
+    assert_eq!(canon(s3.snapshot()), expect_full);
+    p3.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn recovery_is_stable_across_repeated_restarts() {
+    let dir = tmp_dir("stable");
+    let s = store();
+    let (p, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+    let ids: Vec<Id> = (0..40)
+        .map(|i| s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null))
+        .collect();
+    s.update_requests_status(&ids[..20], RequestStatus::Transforming);
+    p.checkpoint(&s).unwrap();
+    s.update_requests_status(&ids[..10], RequestStatus::Finished);
+    p.shutdown();
+    let expect = canon(s.snapshot());
+
+    for round in 0..3 {
+        let sr = store();
+        let (pr, _) = Persist::open(&dir, opts(), &sr, Registry::default()).unwrap();
+        assert_eq!(canon(sr.snapshot()), expect, "round {round} diverged");
+        pr.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn two_step() -> Workflow {
+    Workflow::new("two-step")
+        .add_template(WorkTemplate::new("prep"))
+        .add_template(WorkTemplate::new("main"))
+        .add_condition(Condition::always("prep", "main"))
+        .entry("prep")
+}
+
+struct Stack {
+    client: Client,
+    store: Store,
+    persist: Persist,
+    host: AgentHost,
+    server: idds::rest::HttpServer,
+}
+
+fn stack(dir: &std::path::Path) -> Stack {
+    let clock = Arc::new(WallClock::new());
+    let store = Store::new(clock.clone());
+    let (persist, _report) =
+        Persist::open(dir, opts(), &store, Registry::default()).unwrap();
+    let broker = Broker::new(clock);
+    let metrics = Registry::default();
+    let cfg = Config::defaults();
+    let executors =
+        ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default()));
+    let pipeline = Pipeline::new(store.clone(), broker.clone(), metrics.clone(), executors);
+    let (c, m, t, ca, co) = pipeline.daemons();
+    let daemons: Vec<Arc<dyn Daemon>> = vec![
+        Arc::new(c),
+        Arc::new(m),
+        Arc::new(t),
+        Arc::new(ca),
+        Arc::new(co),
+    ];
+    let host = AgentHost::start(daemons, std::time::Duration::from_millis(2));
+    let server = serve(
+        ServerState::new(store.clone(), broker, metrics, &cfg).with_persist(persist.clone()),
+        &cfg,
+    )
+    .unwrap();
+    let client = Client::new(server.addr, "dev-token");
+    Stack { client, store, persist, host, server }
+}
+
+#[test]
+fn kill_and_restart_roundtrip_over_rest() {
+    let dir = tmp_dir("killrestart");
+
+    // 1. populate via REST and let the daemons run campaigns to completion
+    let s = stack(&dir);
+    for i in 0..3 {
+        let req = s
+            .client
+            .submit(&format!("camp{i}"), "alice", RequestKind::Workflow, &two_step())
+            .unwrap();
+        let status = s
+            .client
+            .wait_terminal(req, std::time::Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(status, RequestStatus::Finished);
+    }
+
+    // 2. checkpoint on demand over REST
+    let report = s.client.checkpoint().unwrap();
+    assert!(report.get("seq").and_then(|v| v.as_u64()).is_some());
+    // health now reports durability state
+    let health = s.client.health().unwrap();
+    assert!(health.get_path(&["persist", "durable_lsn"]).is_some());
+    assert!(health.get_path(&["generations", "requests"]).is_some());
+
+    // quiesce the daemons before the direct-write phase so the pre-kill
+    // state is deterministic (a Clerk would pick the new request up)
+    let Stack { client, store: live, persist, host, server } = s;
+    host.stop();
+
+    // 3. more batched writes AFTER the checkpoint (the WAL suffix)
+    let rid = live.add_request("carousel", "bob", RequestKind::DataCarousel, Json::Null);
+    let tid = live.add_transform(rid, "stage", Json::Null);
+    let cid = live.add_collection(tid, "in-ds", CollectionKind::Input);
+    let files = live.add_contents(cid, (0..500).map(|i| (format!("f{i}"), 1_000u64 + i)));
+    assert_eq!(live.update_contents_status(&files[..250], ContentStatus::Staging), 250);
+    assert_eq!(live.update_contents_status(&files[..100], ContentStatus::Available), 100);
+    persist.flush();
+
+    // 4. drop the process state (server, daemons, flusher, store)
+    let expect = canon(live.snapshot());
+    server.stop();
+    persist.shutdown();
+    drop(client);
+
+    // 5. recover from the data dir into a brand-new store
+    let s2 = store();
+    let (p2, report) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+    assert!(report.checkpoint_seq.is_some(), "checkpoint must be found");
+    assert!(report.events_replayed > 0, "the WAL suffix must replay");
+    assert_stores_equal(&live, &s2);
+    assert_eq!(expect, canon(s2.snapshot()));
+    assert_eq!(s2.count_contents(cid, ContentStatus::Available), 100);
+    assert_eq!(s2.count_contents(cid, ContentStatus::Staging), 150);
+    assert_eq!(s2.count_contents(cid, ContentStatus::New), 250);
+    assert!(
+        s2.requests_generation() > 0,
+        "replay must bump generations so change-driven polling re-arms"
+    );
+
+    // 6. daemons resume on the recovered store: new work still flows
+    let broker = Broker::new(Arc::new(WallClock::new()));
+    let metrics = Registry::default();
+    let executors =
+        ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default()));
+    let pipeline = Pipeline::new(s2.clone(), broker, metrics, executors);
+    let (c, m, t, ca, co) = pipeline.daemons();
+    let req = s2.add_request("post-recovery", "alice", RequestKind::Workflow, two_step().to_json());
+    idds::daemons::pump(&[&c, &m, &t, &ca, &co], 1000);
+    assert_eq!(s2.get_request(req).unwrap().status, RequestStatus::Finished);
+
+    p2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
-# Perf trajectory: run the store/carousel/workflow benches and emit
-# BENCH_store.json at the repo root so results are comparable PR-over-PR.
-# BENCH_QUICK=1 shrinks iteration counts 10x for smoke runs.
+# Perf trajectory: run the store/wal/carousel/workflow benches and emit
+# BENCH_store.json + BENCH_wal.json at the repo root so results are
+# comparable PR-over-PR. BENCH_QUICK=1 shrinks iteration counts for smoke
+# runs.
 set -euo pipefail
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 cd "$ROOT/rust"
 BENCH_STORE_JSON="$ROOT/BENCH_store.json" cargo bench --bench bench_store
+BENCH_WAL_JSON="$ROOT/BENCH_wal.json" cargo bench --bench bench_wal
 cargo bench --bench bench_carousel
 cargo bench --bench bench_workflow
-echo "wrote $ROOT/BENCH_store.json"
+echo "wrote $ROOT/BENCH_store.json and $ROOT/BENCH_wal.json"

@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 verify: release build + full test suite (see ROADMAP.md).
+# The crash-recovery suite additionally runs in release mode so the real
+# fsync/group-commit paths are exercised at speed, not just debug logic.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 cargo build --release
 cargo test -q
+cargo test --release -q --test persist_recovery
