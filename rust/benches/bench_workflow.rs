@@ -1,9 +1,23 @@
-//! FIG3/DG bench: the directed-graph engine. Condition-evaluation
-//! throughput, cyclic-workflow iteration cost, serialization round-trip,
-//! and the full daemon pipeline running pure-orchestration workflows.
+//! FIG3/DG bench: the directed-graph engine, before/after the interned
+//! compiled-workflow rework.
+//!
+//! Sections:
+//! * engine microbenches (chain walk, gated cycle, serialization);
+//! * **resolve before/after** — parse+build a full `Workflow` per request
+//!   (the old Clerk path, which then kept that clone alive per engine) vs
+//!   resolving through the interned registry to a shared compilation;
+//! * **on_complete before/after** — the old full-condition-list linear
+//!   scan (reproduced below verbatim as the baseline) vs the per-source
+//!   out-edge index, at 10/100/1000 templates;
+//! * the full daemon pipeline running pure-orchestration workflows.
+//!
+//! Emits `BENCH_workflow.json` (override the path with
+//! `BENCH_WORKFLOW_JSON=...`; `scripts/bench.sh` points it at the repo
+//! root). `BENCH_QUICK=1` shrinks iteration counts for smoke runs.
 //!
 //!     cargo bench --bench bench_workflow
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use idds::broker::Broker;
@@ -14,10 +28,12 @@ use idds::store::{RequestKind, Store};
 use idds::util::bench::{section, Bencher};
 use idds::util::clock::WallClock;
 use idds::util::json::Json;
-use idds::workflow::{Condition, Engine, Predicate, WorkTemplate, Workflow};
+use idds::workflow::{
+    bind_params, Condition, Engine, Predicate, Work, WorkTemplate, Workflow, WorkflowRegistry,
+};
 
 fn chain_workflow(len: usize) -> Workflow {
-    let mut wf = Workflow::new("chain");
+    let mut wf = Workflow::new(&format!("chain{len}"));
     for i in 0..len {
         wf = wf.add_template(WorkTemplate::new(&format!("s{i}")));
         if i > 0 {
@@ -27,13 +43,55 @@ fn chain_workflow(len: usize) -> Workflow {
     wf.entry("s0")
 }
 
+fn first_work() -> Work {
+    Work {
+        instance: 1,
+        template: "s0".into(),
+        params: BTreeMap::new(),
+        iteration: 0,
+    }
+}
+
+/// The pre-index evaluation path, kept as the bench baseline: filter the
+/// FULL condition list by source (cloning the matches, as the old engine
+/// did), evaluate predicates, bind params, apply the instance cap.
+fn linear_on_complete(
+    wf: &Workflow,
+    instances: &mut BTreeMap<String, u32>,
+    work: &Work,
+    result: &Json,
+) -> usize {
+    let conds: Vec<Condition> = wf
+        .conditions
+        .iter()
+        .filter(|c| c.source == work.template)
+        .cloned()
+        .collect();
+    let mut fired = 0;
+    for c in conds {
+        if c.predicate.eval(result).unwrap() {
+            let params = bind_params(&c.bindings, &work.params, result).unwrap();
+            let tpl = wf.templates.get(&c.target).unwrap();
+            let count = instances.entry(c.target.clone()).or_insert(0);
+            if *count < tpl.max_instances {
+                *count += 1;
+                std::hint::black_box(&params);
+                fired += 1;
+            }
+        }
+    }
+    fired
+}
+
 fn main() {
     let mut b = Bencher::from_env();
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
 
     section("engine microbenches");
     let wf = chain_workflow(64);
+    let (chain64, _) = WorkflowRegistry::global().intern(&wf).unwrap();
     b.bench("engine start+walk 64-step chain", || {
-        let mut e = Engine::new(wf.clone()).unwrap();
+        let mut e = Engine::from_compiled(Arc::clone(&chain64));
         let mut frontier = e.start();
         let mut n = 0;
         while let Some(w) = frontier.pop() {
@@ -47,8 +105,9 @@ fn main() {
         .add_template(WorkTemplate::new("a").max_instances(1000))
         .add_condition(Condition::when("a", "a", Predicate::lt("loss", 0.5)))
         .entry("a");
+    let (cyc_c, _) = WorkflowRegistry::global().intern(&cyc).unwrap();
     b.bench("cyclic engine: 1000 gated iterations", || {
-        let mut e = Engine::new(cyc.clone()).unwrap();
+        let mut e = Engine::from_compiled(Arc::clone(&cyc_c));
         let mut frontier = e.start();
         let result = Json::obj().set("loss", 0.1);
         let mut n = 0;
@@ -66,6 +125,42 @@ fn main() {
         Workflow::from_json(&j).unwrap()
     });
 
+    section("resolve: clone-per-request vs interned registry (100 templates)");
+    let chain100_json = chain_workflow(100).to_json();
+    let resolve_before = b.bench("resolve before: parse+build full Workflow", || {
+        // the old Clerk path: every request deserialized its own Workflow
+        // and the engine kept that full copy alive
+        Workflow::from_json(&chain100_json).unwrap()
+    });
+    // warm the registry once so the timed path is the steady-state hit
+    WorkflowRegistry::global().intern_json(&chain100_json).unwrap();
+    let resolve_after = b.bench("resolve after: registry hit + engine", || {
+        let (compiled, hit) = WorkflowRegistry::global().intern_json(&chain100_json).unwrap();
+        assert!(hit);
+        Engine::from_compiled(compiled)
+    });
+
+    section("on_complete: linear condition scan vs out-edge index");
+    let mut on_complete_pairs: Vec<(usize, f64, f64)> = Vec::new();
+    for &n in &[10usize, 100, 1000] {
+        let wf = chain_workflow(n);
+        let (compiled, _) = WorkflowRegistry::global().intern(&wf).unwrap();
+        let result = Json::obj();
+        // completing the first template: the linear scan walks all n-1
+        // conditions, the index reads exactly one out-edge list
+        let before = b.bench_with_setup(
+            &format!("on_complete before: linear scan, {n} templates"),
+            BTreeMap::new,
+            |counts| linear_on_complete(&wf, counts, &first_work(), &result),
+        );
+        let after = b.bench_with_setup(
+            &format!("on_complete after: indexed, {n} templates"),
+            || Engine::from_compiled(Arc::clone(&compiled)),
+            |e| e.on_complete(&first_work(), &result).unwrap().len(),
+        );
+        on_complete_pairs.push((n, before.mean_ns, after.mean_ns));
+    }
+
     section("daemon pipeline end-to-end (Noop works)");
     b.bench("pipeline: 32-step chain request to Finished", || {
         let clock = Arc::new(WallClock::new());
@@ -73,7 +168,8 @@ fn main() {
             Store::new(clock.clone()),
             Broker::new(clock),
             Registry::default(),
-            ExecutorSet::default().with(idds::workflow::WorkKind::Noop, Arc::new(NoopExecutor::default())),
+            ExecutorSet::default()
+                .with(idds::workflow::WorkKind::Noop, Arc::new(NoopExecutor::default())),
         );
         let req = p
             .store
@@ -82,4 +178,45 @@ fn main() {
         pump(&[&c, &m, &t, &ca, &co], 100_000);
         assert!(p.store.get_request(req).unwrap().status.is_terminal());
     });
+
+    let mut before_after = Json::obj().set(
+        "resolve",
+        Json::obj()
+            .set("before_ns", resolve_before.mean_ns)
+            .set("after_ns", resolve_after.mean_ns)
+            .set("speedup", resolve_before.mean_ns / resolve_after.mean_ns.max(1.0)),
+    );
+    for (n, before_ns, after_ns) in &on_complete_pairs {
+        before_after = before_after.set(
+            &format!("on_complete_{n}"),
+            Json::obj()
+                .set("before_ns", *before_ns)
+                .set("after_ns", *after_ns)
+                .set("speedup", before_ns / after_ns.max(1.0)),
+        );
+    }
+    let registry = WorkflowRegistry::global();
+    let summary = Json::obj()
+        .set("bench", "bench_workflow")
+        .set("quick", quick)
+        .set(
+            "results",
+            Json::Arr(b.results().iter().map(|r| r.to_json()).collect()),
+        )
+        .set(
+            "derived",
+            Json::obj().set("before_after", before_after).set(
+                "registry",
+                Json::obj()
+                    .set("interned", registry.len())
+                    .set("hits", registry.hit_count())
+                    .set("misses", registry.miss_count()),
+            ),
+        );
+    let path = std::env::var("BENCH_WORKFLOW_JSON")
+        .unwrap_or_else(|_| "BENCH_workflow.json".to_string());
+    match std::fs::write(&path, summary.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
 }

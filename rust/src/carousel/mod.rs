@@ -29,9 +29,13 @@ use crate::tape::{FileId, TapeSystem};
 use crate::util::rng::Rng;
 use crate::wfm::{JobId, JobSpec, ReleaseMode, WfmEvent, WfmSim};
 
+/// Staging/release granularity — the variable under test (see the module
+/// docs for what each mode models).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Granularity {
+    /// Dataset-level staging, immediate job queueing (pre-iDDS).
     Coarse,
+    /// File-level staging window + message-triggered release (iDDS).
     Fine,
 }
 

@@ -19,6 +19,16 @@
 //! workflow engines and the marshalled set) so the daemons stay restartable
 //! and the store remains the single source of truth for status.
 //!
+//! **Interned workflows**: the Clerk resolves each submitted definition
+//! through the process-wide `WorkflowRegistry` to a shared compiled graph
+//! (`workflow.registry.hits`/`.misses`), so engines hold counters + an
+//! `Arc`, never a full `Workflow` clone, and the Marshaller's condition
+//! walk is driven by the per-source out-edge index
+//! (`workflow.engine.condition_evals` counts evaluated edges). Engine
+//! state is persisted per request (`Store::set_request_engine`) and the
+//! engines map is lazily rebuilt from it after a restart, so conditions
+//! pending at a crash still fire and already-fired ones never duplicate.
+//!
 //! **Change-driven polling**: every store table carries a generation
 //! counter; each daemon remembers the generations it observed at the start
 //! of its last tick and skips the tick entirely when nothing it depends on
@@ -45,7 +55,7 @@ use crate::store::{
     CollectionKind, Id, ProcessingStatus, RequestStatus, Store, TransformStatus,
 };
 use crate::util::json::Json;
-use crate::workflow::{Engine as WfEngine, Work, Workflow};
+use crate::workflow::{Engine as WfEngine, Work, WorkKind, WorkflowRegistry};
 
 use super::executors::ExecutorSet;
 use super::Daemon;
@@ -87,8 +97,17 @@ pub struct Pipeline {
     pub broker: Broker,
     pub metrics: Registry,
     pub executors: ExecutorSet,
-    /// request id → live workflow engine
+    /// request id → live workflow engine (per-request counters over the
+    /// interned compiled graph; lazily rebuilt from the store's persisted
+    /// engine state after a restart — see [`Pipeline::with_engine`])
     engines: Arc<Mutex<HashMap<Id, WfEngine>>>,
+    /// request id → names of transforms that already existed when the
+    /// request's engine was rebuilt from persisted state. A recovered
+    /// engine's counters may lag transforms written in the crash window,
+    /// so its fan-out dedupes against this set (O(1) per work, built once
+    /// per recovered request); requests that never recovered have no
+    /// entry and pay nothing.
+    recovered_names: Arc<Mutex<HashMap<Id, HashSet<String>>>>,
     /// transforms whose conditions the Marshaller has evaluated
     marshalled: Arc<Mutex<HashSet<Id>>>,
     /// bumped whenever `marshalled` grows — the non-store signal the
@@ -105,6 +124,7 @@ impl Pipeline {
             metrics,
             executors,
             engines: Arc::new(Mutex::new(HashMap::new())),
+            recovered_names: Arc::new(Mutex::new(HashMap::new())),
             marshalled: Arc::new(Mutex::new(HashSet::new())),
             marshal_epoch: Arc::new(AtomicU64::new(0)),
             batch: 256,
@@ -148,21 +168,114 @@ impl Pipeline {
         self.marshal_epoch.fetch_add(1, Ordering::Release);
     }
 
-    fn add_work_transform(&self, request_id: Id, work: &Work) {
+    /// Materialize a generated Work as a transform. Idempotent by name
+    /// (`template#iteration` is unique per engine) for recovered requests:
+    /// if a crash landed the transform in the WAL but not the engine-state
+    /// update, the re-fired condition after restart finds the name in the
+    /// request's `recovered_names` set and skips it. Requests with no
+    /// recovery history have no set and pay no check at all.
+    fn add_work_transform(&self, request_id: Id, work: &Work, kind: WorkKind) -> bool {
         let tf_name = format!("{}#{}", work.template, work.iteration);
-        let mut wj = work.to_json();
-        // record the kind so the Carrier can dispatch without the engine
-        if let Some(tpl) = self
-            .engines
-            .lock()
-            .unwrap()
-            .get(&request_id)
-            .and_then(|e| e.workflow.templates.get(&work.template))
         {
-            wj = wj.set("kind", tpl.kind.as_str());
+            let mut recovered = self.recovered_names.lock().unwrap();
+            if let Some(set) = recovered.get_mut(&request_id) {
+                if !set.insert(tf_name.clone()) {
+                    return false; // already materialized before the crash
+                }
+            }
         }
+        // record the kind so the Carrier can dispatch without the engine
+        let wj = work.to_json().set("kind", kind.as_str());
         self.store.add_transform(request_id, &tf_name, wj);
         self.metrics.counter("pipeline.works_generated").inc();
+        true
+    }
+
+    /// Record the transform names a request already has — called once
+    /// whenever an engine is rebuilt from persisted state, so subsequent
+    /// fan-out can deduplicate against the crash window in O(1) per work.
+    /// The store scan runs before the lock: holding `recovered_names`
+    /// across O(transforms) reads would stall the other daemon's
+    /// `add_work_transform` for the duration.
+    fn note_recovered(&self, request_id: Id) {
+        let names: HashSet<String> = self
+            .store
+            .transforms_of_request(request_id)
+            .into_iter()
+            .filter_map(|tid| self.store.get_transform(tid).ok().map(|t| t.name))
+            .collect();
+        self.recovered_names.lock().unwrap().entry(request_id).or_insert(names);
+    }
+
+    /// Resume a persisted engine and clamp it against the transforms
+    /// already in the store (see `Engine::clamp_to_materialized`).
+    fn resume_engine(
+        &self,
+        request_id: Id,
+        compiled: std::sync::Arc<crate::workflow::CompiledWorkflow>,
+        state: &Json,
+    ) -> WfEngine {
+        let mut e = WfEngine::resume(compiled, state);
+        e.clamp_to_materialized(self.store.transforms_of_request(request_id).into_iter().filter_map(
+            |tid| Work::from_json(&self.store.get_transform(tid).ok()?.work).ok(),
+        ));
+        e
+    }
+
+    /// Run `f` against the live engine for `request_id`, lazily rebuilding
+    /// it after a restart: the request's workflow definition is re-interned
+    /// through the global [`WorkflowRegistry`] and the persisted engine
+    /// state resumed (or, for snapshots predating engine state, counters
+    /// are reconciled from the request's transforms, treating terminal
+    /// Works as already marshalled so fan-out cannot duplicate). Returns
+    /// `None` when the request row is gone, its workflow no longer
+    /// compiles, or the request is already terminal — a finalized request
+    /// can never legitimately produce new works, so the Marshaller's
+    /// post-restart re-walk of its transforms costs one row read per
+    /// transform instead of a parse + engine rebuild.
+    fn with_engine<T>(&self, request_id: Id, f: impl FnOnce(&mut WfEngine) -> T) -> Option<T> {
+        {
+            let mut engines = self.engines.lock().unwrap();
+            if let Some(e) = engines.get_mut(&request_id) {
+                return Some(f(e));
+            }
+        }
+        let req = self.store.get_request(request_id).ok()?;
+        if req.status.is_terminal() {
+            return None;
+        }
+        let (compiled, hit) = match WorkflowRegistry::global().intern_json(&req.workflow) {
+            Ok(r) => r,
+            Err(e) => {
+                log::warn!("cannot re-intern workflow of request {request_id}: {e}");
+                return None;
+            }
+        };
+        self.count_registry(hit);
+        let engine = if req.engine.is_null() {
+            let mut e = WfEngine::from_compiled(compiled);
+            let works = self.store.transforms_of_request(request_id).into_iter().filter_map(
+                |tid| {
+                    let tf = self.store.get_transform(tid).ok()?;
+                    let w = Work::from_json(&tf.work).ok()?;
+                    Some((w, tf.status.is_terminal()))
+                },
+            );
+            e.reconcile(works);
+            e
+        } else {
+            self.resume_engine(request_id, compiled, &req.engine)
+        };
+        // arm crash-window dedupe before the engine can fire anything
+        self.note_recovered(request_id);
+        let mut engines = self.engines.lock().unwrap();
+        Some(f(engines.entry(request_id).or_insert(engine)))
+    }
+
+    fn count_registry(&self, hit: bool) {
+        self.metrics
+            .counter(if hit { "workflow.registry.hits" } else { "workflow.registry.misses" })
+            .inc();
     }
 }
 
@@ -206,13 +319,47 @@ impl Daemon for Clerk {
         {
             n += 1;
             let Ok(req) = self.p.store.get_request(req_id) else { continue };
-            match Workflow::from_json(&req.workflow).and_then(WfEngine::new) {
-                Ok(mut engine) => {
-                    let works = engine.start();
-                    self.p.engines.lock().unwrap().insert(req_id, engine);
-                    for w in &works {
-                        self.p.add_work_transform(req_id, w);
+            // resolve to the shared compiled workflow — no per-request
+            // Workflow clone; a campaign re-submitting one shape is all
+            // registry hits after the first request
+            match WorkflowRegistry::global().intern_json(&req.workflow) {
+                Ok((compiled, hit)) => {
+                    self.p.count_registry(hit);
+                    // A crash between a previous intake's writes and its
+                    // status batch re-intakes the request as New. If engine
+                    // state was persisted, start() already ran (the state
+                    // is written only after the entry transforms) — resume
+                    // it rather than clobbering any marshal progress and
+                    // minting duplicate entry iterations.
+                    let mut engine = if req.engine.is_null() {
+                        WfEngine::from_compiled(compiled)
+                    } else {
+                        self.p.resume_engine(req_id, compiled, &req.engine)
+                    };
+                    let works =
+                        if engine.was_recovered() { Vec::new() } else { engine.start() };
+                    if engine.was_recovered()
+                        || !self.p.store.transforms_of_request(req_id).is_empty()
+                    {
+                        // re-intake: arm crash-window dedupe
+                        self.p.note_recovered(req_id);
                     }
+                    for w in &works {
+                        let kind =
+                            engine.template(&w.template).map(|t| t.kind).unwrap_or(WorkKind::Noop);
+                        self.p.add_work_transform(req_id, w, kind);
+                    }
+                    if !engine.was_recovered() {
+                        // transforms first, engine state second: a crash in
+                        // between re-fires on restart and dedupes by name,
+                        // while the opposite order would lose the works
+                        let _ =
+                            self.p.store.set_request_engine(req_id, engine.state_json());
+                    }
+                    // or_insert: a Marshaller racing this re-intake may
+                    // already have rebuilt (and advanced) the engine —
+                    // never clobber it with a stale one
+                    self.p.engines.lock().unwrap().entry(req_id).or_insert(engine);
                     to_transforming.push(req_id);
                 }
                 Err(e) => {
@@ -277,8 +424,10 @@ impl Daemon for Clerk {
             let moved = self.p.store.update_requests_status(ids, to);
             if moved > 0 {
                 let mut engines = self.p.engines.lock().unwrap();
+                let mut recovered = self.p.recovered_names.lock().unwrap();
                 for id in ids.iter() {
                     engines.remove(id);
+                    recovered.remove(id);
                 }
                 self.p
                     .metrics
@@ -332,24 +481,66 @@ impl Daemon for Marshaller {
                     }
                 };
                 let result = tf.work.get("result").cloned().unwrap_or_else(Json::obj);
-                // only successful works fire condition branches
-                let new_works = if status == TransformStatus::Finished {
-                    let mut engines = self.p.engines.lock().unwrap();
-                    match engines.get_mut(&tf.request_id) {
-                        Some(engine) => match engine.on_complete(&work, &result) {
-                            Ok(ws) => ws,
-                            Err(e) => {
-                                log::warn!("marshaller: condition eval failed: {e}");
-                                Vec::new()
+                // only successful works fire condition branches; the
+                // completed-instance set makes the walk idempotent, so a
+                // restart re-visiting terminal transforms is a no-op
+                let (new_works, new_state) = self
+                    .p
+                    .with_engine(tf.request_id, |engine| {
+                        if engine.already_completed(work.instance) {
+                            return (Vec::new(), None);
+                        }
+                        let tagged: Vec<(Work, WorkKind)> = if status
+                            == TransformStatus::Finished
+                        {
+                            self.p
+                                .metrics
+                                .counter("workflow.engine.condition_evals")
+                                .add(engine.out_degree(&work.template) as u64);
+                            match engine.on_complete(&work, &result) {
+                                Ok(ws) => ws
+                                    .into_iter()
+                                    .map(|w| {
+                                        let kind = engine
+                                            .template(&w.template)
+                                            .map(|t| t.kind)
+                                            .unwrap_or(WorkKind::Noop);
+                                        (w, kind)
+                                    })
+                                    .collect(),
+                                Err(e) => {
+                                    log::warn!("marshaller: condition eval failed: {e}");
+                                    // the result is immutable, so the error
+                                    // is permanent — count the instance as
+                                    // complete so the floor advances and a
+                                    // restart stops re-evaluating a dead
+                                    // branch
+                                    engine.mark_complete(work.instance);
+                                    Vec::new()
+                                }
                             }
-                        },
-                        None => Vec::new(),
-                    }
-                } else {
-                    Vec::new()
-                };
-                for w in &new_works {
-                    self.p.add_work_transform(tf.request_id, w);
+                        } else {
+                            // failed works never fire conditions, but their
+                            // instances must still count as completed so
+                            // the completion floor can advance past them
+                            engine.mark_complete(work.instance);
+                            Vec::new()
+                        };
+                        (tagged, Some(engine.state_json()))
+                    })
+                    .unwrap_or((Vec::new(), None));
+                if !new_works.is_empty() {
+                    self.p
+                        .metrics
+                        .counter("workflow.engine.edges_fired")
+                        .add(new_works.len() as u64);
+                }
+                for (w, kind) in &new_works {
+                    self.p.add_work_transform(tf.request_id, w, *kind);
+                }
+                // transforms before state — see the Clerk's ordering note
+                if let Some(state) = new_state {
+                    let _ = self.p.store.set_request_engine(tf.request_id, state);
                 }
                 self.p.mark_marshalled(tf_id);
                 self.p.metrics.counter("pipeline.transforms_marshalled").inc();
@@ -582,7 +773,10 @@ impl Carrier {
                     }
                     Ok(Some(result)) => {
                         let failed = !result.get("error").map(Json::is_null).unwrap_or(true);
-                        let work = item.work.set("result", result.clone());
+                        // raw transforms (tests, foreign writers) may carry a
+                        // non-object work payload; Json::set would panic on it
+                        let base = if item.work.as_obj().is_some() { item.work } else { Json::obj() };
+                        let work = base.set("result", result.clone());
                         let _ = store.update_transform_work(item.tf_id, work);
                         if failed {
                             fail_pids.push(item.pid);
@@ -677,7 +871,7 @@ mod tests {
     use crate::daemons::pump;
     use crate::store::RequestKind;
     use crate::util::clock::WallClock;
-    use crate::workflow::{Condition, Predicate, WorkKind, WorkTemplate};
+    use crate::workflow::{Condition, Predicate, WorkKind, WorkTemplate, Workflow};
 
     fn pipeline() -> Pipeline {
         let clock = Arc::new(WallClock::new());
@@ -768,6 +962,182 @@ mod tests {
         assert_eq!(
             p.store.get_request(req).unwrap().status,
             RequestStatus::Finished
+        );
+    }
+
+    #[test]
+    fn pending_condition_fires_on_fresh_pipeline_after_restart() {
+        let p = pipeline();
+        let wf = Workflow::new("lin")
+            .add_template(WorkTemplate::new("a"))
+            .add_template(WorkTemplate::new("b"))
+            .add_condition(Condition::always("a", "b"))
+            .entry("a");
+        let req = p
+            .store
+            .add_request("r", "u", RequestKind::Workflow, wf.to_json());
+        {
+            // no Marshaller: 'a' terminates but its condition stays pending
+            let (clerk, _marsh, tfr, carrier, conductor) = p.daemons();
+            pump(&[&clerk, &tfr, &carrier, &conductor], 1000);
+        }
+        assert_eq!(p.store.transforms_of_request(req).len(), 1);
+        assert!(
+            !p.store.get_request(req).unwrap().engine.is_null(),
+            "the Clerk must persist engine state"
+        );
+
+        // "restart": a fresh pipeline over the same store starts with an
+        // empty engines map and must resume from the persisted state
+        let p2 = Pipeline::new(
+            p.store.clone(),
+            p.broker.clone(),
+            Registry::default(),
+            ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default())),
+        );
+        run_all(&p2);
+        assert_eq!(
+            p.store.transforms_of_request(req).len(),
+            2,
+            "the pending condition must fire after the restart"
+        );
+        assert_eq!(
+            p.store.get_request(req).unwrap().status,
+            RequestStatus::Finished
+        );
+    }
+
+    #[test]
+    fn clerk_reintake_resumes_state_without_duplicate_entries() {
+        let p = pipeline();
+        let wf = Workflow::new("lin")
+            .add_template(WorkTemplate::new("a"))
+            .add_template(WorkTemplate::new("b"))
+            .add_condition(Condition::always("a", "b"))
+            .entry("a");
+        let req = p
+            .store
+            .add_request("r", "u", RequestKind::Workflow, wf.to_json());
+        // simulate a crashed intake: entry transform + engine state were
+        // persisted, but the Transforming status batch never landed, so
+        // the request is still New at "restart"
+        let (compiled, _) = crate::workflow::WorkflowRegistry::global().intern(&wf).unwrap();
+        let mut engine = WfEngine::from_compiled(compiled);
+        let works = engine.start();
+        assert_eq!(works.len(), 1);
+        for w in &works {
+            p.add_work_transform(req, w, WorkKind::Noop);
+        }
+        p.store.set_request_engine(req, engine.state_json()).unwrap();
+        assert_eq!(p.store.get_request(req).unwrap().status, RequestStatus::New);
+
+        // a fresh pipeline re-intakes: it must resume the persisted state
+        // (no duplicate entry iteration, no clobbered progress)
+        let p2 = Pipeline::new(
+            p.store.clone(),
+            p.broker.clone(),
+            Registry::default(),
+            ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default())),
+        );
+        run_all(&p2);
+        let names: Vec<String> = p
+            .store
+            .transforms_of_request(req)
+            .into_iter()
+            .map(|t| p.store.get_transform(t).unwrap().name)
+            .collect();
+        assert_eq!(names.len(), 2, "exactly one a and one b: {names:?}");
+        assert!(names.contains(&"a#0".to_string()) && names.contains(&"b#0".to_string()));
+        assert_eq!(
+            p.store.get_request(req).unwrap().status,
+            RequestStatus::Finished
+        );
+    }
+
+    #[test]
+    fn refire_in_marshal_crash_window_is_deduped_not_duplicated() {
+        let p = pipeline();
+        let wf = Workflow::new("lin3w")
+            .add_template(WorkTemplate::new("a"))
+            .add_template(WorkTemplate::new("b"))
+            .add_template(WorkTemplate::new("c"))
+            .add_condition(Condition::always("a", "b"))
+            .add_condition(Condition::always("b", "c"))
+            .entry("a");
+        let req = p
+            .store
+            .add_request("r", "u", RequestKind::Workflow, wf.to_json());
+        {
+            // run everything except the Marshaller: a#0 finishes, engine
+            // state in the store is the Clerk's (a:1, nothing completed)
+            let (clerk, _marsh, tfr, carrier, conductor) = p.daemons();
+            pump(&[&clerk, &tfr, &carrier, &conductor], 1000);
+        }
+        // emulate a marshal of a#0 that crashed AFTER materializing b#0
+        // but BEFORE its set_request_engine write landed
+        let a_tf = p.store.transforms_of_request(req)[0];
+        let a_work = Work::from_json(&p.store.get_transform(a_tf).unwrap().work).unwrap();
+        let state = p.store.get_request(req).unwrap().engine;
+        let (compiled, _) = crate::workflow::WorkflowRegistry::global().intern(&wf).unwrap();
+        let mut pre_crash = WfEngine::resume(compiled, &state);
+        let fired = pre_crash.on_complete(&a_work, &Json::obj()).unwrap();
+        assert_eq!(fired.len(), 1);
+        p.add_work_transform(req, &fired[0], WorkKind::Noop);
+        // (no set_request_engine: the state now lags transform b#0)
+
+        // restart: the re-fire of a -> b must reproduce the name b#0 and
+        // be suppressed, not mint b#1
+        let p2 = Pipeline::new(
+            p.store.clone(),
+            p.broker.clone(),
+            Registry::default(),
+            ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default())),
+        );
+        run_all(&p2);
+        let mut names: Vec<String> = p
+            .store
+            .transforms_of_request(req)
+            .into_iter()
+            .map(|t| p.store.get_transform(t).unwrap().name)
+            .collect();
+        names.sort();
+        assert_eq!(names, vec!["a#0", "b#0", "c#0"], "no duplicate fan-out");
+        assert_eq!(
+            p.store.get_request(req).unwrap().status,
+            RequestStatus::Finished
+        );
+    }
+
+    #[test]
+    fn remarshalling_after_restart_does_not_duplicate_works() {
+        let p = pipeline();
+        let wf = Workflow::new("lin3")
+            .add_template(WorkTemplate::new("a"))
+            .add_template(WorkTemplate::new("b"))
+            .add_template(WorkTemplate::new("c"))
+            .add_condition(Condition::always("a", "b"))
+            .add_condition(Condition::always("b", "c"))
+            .entry("a");
+        let req = p
+            .store
+            .add_request("r", "u", RequestKind::Workflow, wf.to_json());
+        run_all(&p);
+        assert_eq!(p.store.transforms_of_request(req).len(), 3);
+
+        // a fresh pipeline re-walks the terminal transforms (its
+        // marshalled set is empty); the persisted completed-instance set
+        // must make that walk a no-op
+        let p2 = Pipeline::new(
+            p.store.clone(),
+            p.broker.clone(),
+            Registry::default(),
+            ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default())),
+        );
+        run_all(&p2);
+        assert_eq!(
+            p.store.transforms_of_request(req).len(),
+            3,
+            "re-marshalling must not duplicate fan-out"
         );
     }
 

@@ -15,6 +15,8 @@ use std::collections::{HashMap, HashSet};
 
 use crate::tape::{CartridgeId, FileId, TapeSystem};
 
+/// One cataloged file: identity, size, and the dataset it belongs to
+/// (staging rules act on datasets in coarse mode).
 #[derive(Debug, Clone)]
 pub struct DdmFile {
     pub id: FileId,
@@ -23,10 +25,14 @@ pub struct DdmFile {
     pub dataset: String,
 }
 
+/// Where a file's only accessible replica currently lives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ReplicaState {
+    /// Only the tape copy exists; reading it requires a recall.
     TapeOnly,
+    /// A recall is queued or in flight on the tape system.
     Staging,
+    /// A disk replica exists in the buffer and is deliverable.
     OnDisk,
 }
 
@@ -37,6 +43,8 @@ pub struct StagedFile {
     pub at: f64,
 }
 
+/// Disk-buffer occupancy accounting — the quantity behind the paper's
+/// "minimize the input data footprint on disk" claim (Fig. 5).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct DiskStats {
     pub used_bytes: u64,
@@ -45,6 +53,9 @@ pub struct DiskStats {
     pub byte_seconds: f64,
 }
 
+/// The DDM simulator: file/dataset catalog, replica states, staging rules
+/// at dataset or file granularity, and the disk buffer in front of the
+/// tape system.
 pub struct DdmSystem {
     files: HashMap<FileId, DdmFile>,
     datasets: HashMap<String, Vec<FileId>>,
@@ -99,18 +110,23 @@ impl DdmSystem {
         ids
     }
 
+    /// File ids of a dataset, in registration order.
     pub fn dataset_files(&self, dataset: &str) -> Vec<FileId> {
         self.datasets.get(dataset).cloned().unwrap_or_default()
     }
 
+    /// Catalog lookup by file id.
     pub fn file(&self, id: FileId) -> Option<&DdmFile> {
         self.files.get(&id)
     }
 
+    /// Current replica state of a file (`None` for unknown ids).
     pub fn replica_state(&self, id: FileId) -> Option<ReplicaState> {
         self.replicas.get(&id).copied()
     }
 
+    /// True when a disk replica exists — the availability predicate the
+    /// WFM's dispatch checks (see `crate::wfm::WfmSim::tick`).
     pub fn is_on_disk(&self, id: FileId) -> bool {
         self.replica_state(id) == Some(ReplicaState::OnDisk)
     }
@@ -185,26 +201,32 @@ impl DdmSystem {
         self.account_disk(now);
     }
 
+    /// Current/peak/integrated disk-buffer occupancy.
     pub fn disk_stats(&self) -> DiskStats {
         self.disk
     }
 
+    /// Counters of the underlying tape library (mounts, recalls, bytes).
     pub fn tape_stats(&self) -> crate::tape::TapeStats {
         self.tape.stats()
     }
 
+    /// Files that have landed on disk over the whole run.
     pub fn staged_total(&self) -> u64 {
         self.staged_total
     }
 
+    /// Files released from the disk buffer over the whole run.
     pub fn released_total(&self) -> u64 {
         self.released_total
     }
 
+    /// Earliest future tape event — the discrete-event loop's next wakeup.
     pub fn next_event_time(&self) -> Option<f64> {
         self.tape.next_event_time()
     }
 
+    /// Recalls queued or in flight on the tape system.
     pub fn pending_staging(&self) -> usize {
         self.tape.pending_recalls()
     }

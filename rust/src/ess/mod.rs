@@ -32,6 +32,8 @@ pub enum Delivery {
     EventRanges,
 }
 
+/// Shape of the event-streaming experiment: the file population, the edge
+/// cache in front of the WAN, and the delivery chunking.
 #[derive(Debug, Clone)]
 pub struct EssConfig {
     pub files: usize,
@@ -83,6 +85,7 @@ pub fn generate_trace(cfg: &EssConfig, jobs: usize, selectivity: f64, seed: u64)
         .collect()
 }
 
+/// Traffic accounting for one simulated trace under one delivery mode.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct EssResult {
     /// bytes pulled over the WAN (the paper's "minimize network traffic")

@@ -27,6 +27,7 @@ pub use space::{ParamDim, SearchSpace};
 /// Point-proposal strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {
+    /// Uniform sampling of the normalized search box (the baseline).
     Random,
     /// GP surrogate + EI through the AOT artifact.
     Bayesian,
@@ -50,6 +51,7 @@ pub struct HpoRunResult {
 }
 
 impl HpoRunResult {
+    /// Best loss found over the whole run.
     pub fn best(&self) -> f64 {
         *self.best_curve.last().unwrap_or(&f64::INFINITY)
     }
@@ -72,6 +74,8 @@ pub struct BayesOpt {
 }
 
 impl BayesOpt {
+    /// Bind the loop to the runtime's `gp_propose` artifact; fails when
+    /// the search space is wider than the artifact's compiled dimension.
     pub fn new(engine: EngineHandle, space: SearchSpace) -> Result<BayesOpt> {
         let spec = engine.spec("gp_propose").context("gp_propose artifact")?;
         let n_obs_cap = spec.consts["n_obs"] as usize;

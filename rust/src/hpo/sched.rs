@@ -22,6 +22,7 @@ pub enum Policy {
     AsyncPull,
 }
 
+/// Throughput/utilization summary of one policy over one duration sample.
 #[derive(Debug, Clone, Copy)]
 pub struct FleetResult {
     pub policy: Policy,

@@ -4,6 +4,7 @@
 
 use crate::util::json::Json;
 
+/// One continuous hyperparameter dimension with its physical range.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParamDim {
     pub name: String,
@@ -12,6 +13,7 @@ pub struct ParamDim {
 }
 
 impl ParamDim {
+    /// Build a dimension; panics unless `hi > lo` (caller bug).
     pub fn new(name: &str, lo: f64, hi: f64) -> ParamDim {
         assert!(hi > lo, "dim '{name}': hi must exceed lo");
         ParamDim {
@@ -22,6 +24,7 @@ impl ParamDim {
     }
 }
 
+/// An ordered set of dimensions — the box the proposal step samples.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct SearchSpace {
     pub dims: Vec<ParamDim>,
@@ -50,6 +53,7 @@ impl SearchSpace {
             .collect()
     }
 
+    /// Serialize for request payloads (clients ship spaces as JSON).
     pub fn to_json(&self) -> Json {
         Json::Arr(
             self.dims

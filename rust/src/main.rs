@@ -31,6 +31,52 @@ use idds::store::Store;
 use idds::util::clock::WallClock;
 use idds::workflow::WorkKind;
 
+/// Cooperative SIGINT/SIGTERM flag for `idds serve`. The handler performs
+/// exactly one async-signal-safe operation (an atomic store); the serve
+/// loop polls the flag and then runs the orderly teardown — stop daemons,
+/// stop the listener, cut a final checkpoint, drain the WAL group-commit
+/// flusher — so an acknowledged write can no longer die in the
+/// group-commit window when the operator stops the service.
+#[cfg(unix)]
+mod shutdown {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_sig: i32) {
+        REQUESTED.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        // libc is always linked on unix targets; signal(2) is enough here —
+        // no sigaction flags are needed for a single boolean flip
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    pub fn install() {
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn requested() -> bool {
+        REQUESTED.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod shutdown {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
+}
+
 struct Args {
     cmd: String,
     flags: Vec<(String, String)>,
@@ -175,7 +221,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
 
-    let mut state = ServerState::new(store, broker, metrics, &cfg);
+    // keep a store handle for the final-checkpoint teardown below
+    let mut state = ServerState::new(store.clone(), broker, metrics, &cfg);
     if let Some(p) = &persist {
         state = state.with_persist(p.clone());
     }
@@ -185,11 +232,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if persist.is_some() {
         println!("durability: WAL + checkpoints under {data_dir}");
     }
+    shutdown::install();
     println!("Ctrl-C to stop.");
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
-        let _ = &host;
+    while !shutdown::requested() {
+        std::thread::sleep(std::time::Duration::from_millis(200));
     }
+
+    // orderly teardown: quiesce writers, then make everything durable.
+    // Daemons stop first so no new mutations race the final checkpoint;
+    // the checkpoint flushes the WAL before cutting, and shutdown() drains
+    // and joins the group-commit flusher — closing the window where an
+    // acknowledged write was only queued, not fsynced.
+    println!("\nshutdown signal received, stopping daemons ...");
+    host.stop();
+    server.stop();
+    if let Some(p) = &persist {
+        match p.checkpoint(&store) {
+            Ok(r) => println!(
+                "final checkpoint #{} at lsn {} ({} bytes)",
+                r.seq, r.start_lsn, r.bytes
+            ),
+            Err(e) => eprintln!("final checkpoint failed (WAL still drains): {e}"),
+        }
+        p.shutdown();
+    }
+    println!("bye");
+    Ok(())
 }
 
 fn cmd_carousel(args: &Args) -> Result<()> {

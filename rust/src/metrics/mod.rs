@@ -1,5 +1,14 @@
 //! Metrics: counters, gauges, histograms, and the campaign timeline
 //! recorder that backs the Figure 4 / Figure 5 outputs.
+//!
+//! Naming inventory (dotted, lowercase): `pipeline.*` for daemon
+//! progress (`works_generated`, `transforms_marshalled`,
+//! `requests_finalized`, `<daemon>.poll_skips`, ...), `workflow.*` for
+//! the engine (`registry.hits`/`registry.misses` — compiled-workflow
+//! intern outcomes; `engine.condition_evals` — out-edges evaluated per
+//! completion; `engine.edges_fired`), `persist.*` for WAL/checkpoint
+//! durability, and `rest.*` for the head service. Everything lands in
+//! the shared [`Registry`] and is exposed by `GET /api/metrics`.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};

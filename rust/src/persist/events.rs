@@ -44,6 +44,14 @@ pub enum PersistEvent {
         to: RequestStatus,
         at: f64,
     },
+    /// Full serialized workflow-engine state for a request (instance
+    /// counters + completed set + structural hash): last-write-wins, so
+    /// replaying any suffix converges on the newest state.
+    RequestEngine {
+        id: Id,
+        engine: Json,
+        at: f64,
+    },
     AddTransform {
         id: Id,
         request_id: Id,
@@ -150,6 +158,7 @@ impl PersistEvent {
         match self {
             PersistEvent::AddRequest { .. } => "add_request",
             PersistEvent::RequestStatus { .. } => "request_status",
+            PersistEvent::RequestEngine { .. } => "request_engine",
             PersistEvent::AddTransform { .. } => "add_transform",
             PersistEvent::TransformStatus { .. } => "transform_status",
             PersistEvent::TransformWork { .. } => "transform_work",
@@ -172,6 +181,7 @@ impl PersistEvent {
     pub fn max_id(&self) -> Id {
         match self {
             PersistEvent::AddRequest { id, .. }
+            | PersistEvent::RequestEngine { id, .. }
             | PersistEvent::TransformWork { id, .. }
             | PersistEvent::TransformRetries { id, .. }
             | PersistEvent::CloseCollection { id }
@@ -207,6 +217,9 @@ impl PersistEvent {
                 .set("at", *at),
             PersistEvent::RequestStatus { ids, to, at } => {
                 base.set("ids", ids_json(ids)).set("to", to.as_str()).set("at", *at)
+            }
+            PersistEvent::RequestEngine { id, engine, at } => {
+                base.set("id", *id).set("engine", engine.clone()).set("at", *at)
             }
             PersistEvent::AddTransform { id, request_id, name, work, at } => base
                 .set("id", *id)
@@ -294,6 +307,11 @@ impl PersistEvent {
             "request_status" => PersistEvent::RequestStatus {
                 ids: parse_ids(j)?,
                 to: RequestStatus::parse(req_str(j, "to")?).context("bad request status")?,
+                at: req_f64(j, "at")?,
+            },
+            "request_engine" => PersistEvent::RequestEngine {
+                id: req_u64(j, "id")?,
+                engine: j.get("engine").cloned().unwrap_or(Json::Null),
                 at: req_f64(j, "at")?,
             },
             "add_transform" => PersistEvent::AddTransform {
@@ -408,6 +426,13 @@ mod tests {
             ids: vec![1, 2, 3],
             to: RequestStatus::Transforming,
             at: 2.0,
+        });
+        roundtrip(PersistEvent::RequestEngine {
+            id: 7,
+            engine: Json::obj()
+                .set("hash", "00deadbeef001234")
+                .set("instances", Json::obj().set("a", 2u64)),
+            at: 2.5,
         });
         roundtrip(PersistEvent::AddTransform {
             id: 8,

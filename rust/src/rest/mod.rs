@@ -277,9 +277,17 @@ fn handle_submit(state: &ServerState, req: &Request) -> Response {
         return err_json(400, "missing workflow");
     };
     // Validate the workflow deserializes before accepting (paper Fig. 2:
-    // requests are deserialized server-side and passed to the daemons).
-    if let Err(e) = crate::workflow::Workflow::from_json(workflow) {
-        return err_json(400, &format!("invalid workflow: {e}"));
+    // requests are deserialized server-side and passed to the daemons) —
+    // and intern it, so the Clerk's later resolve is a registry hit and
+    // repeated submissions of one campaign shape compile exactly once.
+    match crate::workflow::WorkflowRegistry::global().intern_json(workflow) {
+        Ok((_, hit)) => {
+            state
+                .metrics
+                .counter(if hit { "workflow.registry.hits" } else { "workflow.registry.misses" })
+                .inc();
+        }
+        Err(e) => return err_json(400, &format!("invalid workflow: {e}")),
     }
     let id = state
         .store

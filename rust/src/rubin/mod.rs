@@ -24,6 +24,7 @@ use crate::util::rng::Rng;
 
 pub type JobIdx = usize;
 
+/// One DAG vertex: dependencies, topological layer, and wall time.
 #[derive(Debug, Clone)]
 pub struct DagJob {
     /// indexes of jobs this one depends on (all in earlier layers)
@@ -32,6 +33,7 @@ pub struct DagJob {
     pub wall_s: f64,
 }
 
+/// A layered payload DAG (the shape Rubin middleware emits).
 #[derive(Debug, Clone)]
 pub struct Dag {
     pub jobs: Vec<DagJob>,
@@ -87,6 +89,7 @@ pub fn map_to_works(dag: &Dag) -> Vec<Vec<JobIdx>> {
     works
 }
 
+/// How jobs of the sequentially concatenated Works enter the queue.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Release {
     /// next Work starts only when the previous Work is fully done
@@ -95,6 +98,7 @@ pub enum Release {
     Incremental,
 }
 
+/// Outcome of one scheduled run (compare Bulk vs Incremental).
 #[derive(Debug, Clone, Copy)]
 pub struct ScheduleResult {
     pub release: Release,

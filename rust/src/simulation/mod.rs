@@ -1,8 +1,11 @@
-//! Workload generators + scenario presets shared by examples and benches.
+//! Workload generators + scenario presets shared by examples and benches
+//! (paper section 3: the use-case portfolio iDDS was deployed against).
 //!
 //! Everything the paper's production environment supplied (reprocessing
 //! campaigns on tape, Rubin payload DAGs, HPO task mixes) is synthesized
 //! here with explicit seeds so every figure is regenerable bit-for-bit.
+//! A [`Scenario`] names a campaign preset; `idds carousel --scenario NAME`
+//! and the bench targets map their arguments onto these.
 
 use crate::carousel::{CampaignSpec, CarouselConfig, Granularity};
 
@@ -20,6 +23,8 @@ pub enum Scenario {
 }
 
 impl Scenario {
+    /// Parse a CLI scenario name (`smoke`, `reprocessing`, `smallfiles`,
+    /// `bigfiles`).
     pub fn parse(s: &str) -> Option<Scenario> {
         match s {
             "smoke" => Some(Scenario::Smoke),
@@ -30,6 +35,8 @@ impl Scenario {
         }
     }
 
+    /// The campaign shape (datasets, files, sizes, tape layout, seed)
+    /// this scenario drives through the carousel.
     pub fn campaign(&self) -> CampaignSpec {
         match self {
             Scenario::Smoke => CampaignSpec {
@@ -63,6 +70,8 @@ impl Scenario {
         }
     }
 
+    /// Carousel configuration for this scenario at the given staging
+    /// granularity (the smoke preset shrinks the substrate for CI).
     pub fn config(&self, granularity: Granularity) -> CarouselConfig {
         let mut cfg = CarouselConfig {
             granularity,

@@ -8,7 +8,7 @@
 //! "Store concurrency model"):
 //!
 //! * **Lock striping** — each table's rows are sharded across
-//!   [`STRIPES`] `RwLock`ed hash maps keyed by id, so writers touching
+//!   `STRIPES` `RwLock`ed hash maps keyed by id, so writers touching
 //!   different requests/transforms/processings/contents do not serialize
 //!   on one table-wide lock.
 //! * **Sorted status indexes** — per-status `BTreeSet<Id>` indexes behind
@@ -650,6 +650,7 @@ impl Store {
             kind,
             status: RequestStatus::New,
             workflow,
+            engine: Json::Null,
             created_at: now,
             updated_at: now,
         };
@@ -686,6 +687,23 @@ impl Store {
     pub fn update_requests_status(&self, ids: &[Id], to: RequestStatus) -> usize {
         self.batch_status_logged(&self.inner.requests, ids, to, |ids, to, at| {
             PersistEvent::RequestStatus { ids, to, at }
+        })
+    }
+
+    /// Update the serialized workflow-engine state for a request (the
+    /// Clerk writes it after `start`, the Marshaller after every
+    /// `on_complete`). Logged like any field update, so engine state
+    /// replays through the WAL and lands in snapshots — in-flight
+    /// workflows survive a restart.
+    pub fn set_request_engine(&self, id: Id, engine: Json) -> Result<()> {
+        let now = self.now();
+        let p = self.persister().cloned();
+        self.inner.requests.with_mut(id, |rec| {
+            rec.engine = engine;
+            rec.updated_at = now;
+            if let Some(p) = &p {
+                p.log(PersistEvent::RequestEngine { id, engine: rec.engine.clone(), at: now });
+            }
         })
     }
 

@@ -15,6 +15,7 @@
 //! replayed events would be logged again.
 
 use crate::persist::PersistEvent;
+use crate::util::json::Json;
 
 use super::types::*;
 use super::Store;
@@ -33,6 +34,7 @@ impl Store {
                     kind: *kind,
                     status: RequestStatus::New,
                     workflow: workflow.clone(),
+                    engine: Json::Null,
                     created_at: *at,
                     updated_at: *at,
                 });
@@ -41,6 +43,12 @@ impl Store {
                 for id in ids {
                     self.inner.requests.force_status(*id, *to, *at);
                 }
+            }
+            PersistEvent::RequestEngine { id, engine, at } => {
+                let _ = self.inner.requests.with_mut(*id, |rec| {
+                    rec.engine = engine.clone();
+                    rec.updated_at = *at;
+                });
             }
             PersistEvent::AddTransform { id, request_id, name, work, at } => {
                 self.insert_transform_rec(TransformRec {
@@ -243,6 +251,35 @@ mod tests {
             to: RequestStatus::Failed,
             at: 3.0,
         });
+    }
+
+    #[test]
+    fn replay_engine_state_is_last_write_wins() {
+        let s = store();
+        s.apply_event(&PersistEvent::AddRequest {
+            id: 5,
+            name: "r".into(),
+            requester: "u".into(),
+            kind: RequestKind::Workflow,
+            workflow: Json::Null,
+            at: 0.0,
+        });
+        assert!(s.get_request(5).unwrap().engine.is_null());
+        s.apply_event(&PersistEvent::RequestEngine {
+            id: 5,
+            engine: Json::obj().set("next_instance", 2u64),
+            at: 1.0,
+        });
+        s.apply_event(&PersistEvent::RequestEngine {
+            id: 5,
+            engine: Json::obj().set("next_instance", 4u64),
+            at: 2.0,
+        });
+        let r = s.get_request(5).unwrap();
+        assert_eq!(r.engine.get("next_instance").and_then(|v| v.as_u64()), Some(4));
+        assert_eq!(r.updated_at, 2.0);
+        // unknown ids are skipped silently
+        s.apply_event(&PersistEvent::RequestEngine { id: 99, engine: Json::Null, at: 3.0 });
     }
 
     #[test]

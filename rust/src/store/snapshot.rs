@@ -14,7 +14,10 @@
 //! processings, collections, contents, messages — with timestamps, so a
 //! recovered store is bit-identical to the snapshotted one. Version 1
 //! snapshots (no processings/messages/timestamps) still load, with
-//! timestamps defaulting to restore time.
+//! timestamps defaulting to restore time. Request rows carry an optional
+//! `engine` field (the serialized workflow-engine state, see
+//! `Engine::state_json` in `crate::workflow`) so in-flight workflows
+//! resume after recovery; older snapshots without it still load.
 //!
 //! Snapshot reads walk the sorted status indexes, so output order is
 //! deterministic without any sorting here. Restore goes through the
@@ -72,6 +75,7 @@ fn decode_snapshot(snap: &Json, now: f64) -> Result<DecodedSnapshot> {
                 .and_then(RequestStatus::parse)
                 .context("request.status")?,
             workflow: r.get("workflow").cloned().unwrap_or(Json::Null),
+            engine: r.get("engine").cloned().unwrap_or(Json::Null),
             created_at: opt_f64(r, "created_at", now),
             updated_at: opt_f64(r, "updated_at", now),
         });
@@ -184,17 +188,21 @@ impl Store {
         for status in RequestStatus::ALL {
             for id in self.requests_with_status(*status) {
                 if let Ok(r) = self.get_request(id) {
-                    requests.push(
-                        Json::obj()
-                            .set("id", r.id)
-                            .set("name", r.name.as_str())
-                            .set("requester", r.requester.as_str())
-                            .set("kind", r.kind.as_str())
-                            .set("status", r.status.as_str())
-                            .set("workflow", r.workflow.clone())
-                            .set("created_at", r.created_at)
-                            .set("updated_at", r.updated_at),
-                    );
+                    let mut j = Json::obj()
+                        .set("id", r.id)
+                        .set("name", r.name.as_str())
+                        .set("requester", r.requester.as_str())
+                        .set("kind", r.kind.as_str())
+                        .set("status", r.status.as_str())
+                        .set("workflow", r.workflow.clone())
+                        .set("created_at", r.created_at)
+                        .set("updated_at", r.updated_at);
+                    if !r.engine.is_null() {
+                        // workflow-engine evaluation state (optional field
+                        // of format v2; older snapshots simply lack it)
+                        j = j.set("engine", r.engine.clone());
+                    }
+                    requests.push(j);
                 }
             }
         }
@@ -396,6 +404,23 @@ mod tests {
         assert_eq!(p.wfm_task, Some(9999));
         assert!(p.submitted_at.is_some());
         assert_eq!(s2.messages_with_status(MessageStatus::New).len(), 1);
+    }
+
+    #[test]
+    fn engine_state_roundtrips_through_snapshot() {
+        let s = populated();
+        let rid = s.requests_with_status(RequestStatus::Transforming)[0];
+        let state = Json::obj()
+            .set("hash", "00c0ffee00c0ffee")
+            .set("next_instance", 3u64)
+            .set("instances", Json::obj().set("work", 2u64));
+        s.set_request_engine(rid, state.clone()).unwrap();
+        let snap = s.snapshot();
+        let s2 = Store::new(Arc::new(WallClock::new()));
+        s2.restore(&snap).unwrap();
+        assert_eq!(s2.get_request(rid).unwrap().engine, state);
+        // the optional field survives a second round trip identically
+        assert_eq!(snap, s2.snapshot());
     }
 
     #[test]

@@ -270,6 +270,13 @@ pub struct RequestRec {
     pub status: RequestStatus,
     /// Serialized Workflow (paper Fig. 2: json-based requests).
     pub workflow: Json,
+    /// Serialized workflow-engine evaluation state (`Engine::state_json`):
+    /// the compiled workflow's structural hash plus instance counters and
+    /// the completed-instance set. `Null` until the Clerk first runs the
+    /// engine. Survives snapshot/WAL round trips so in-flight workflows
+    /// resume after a restart; the compiled graph itself is re-interned
+    /// from `workflow`.
+    pub engine: Json,
     pub created_at: f64,
     pub updated_at: f64,
 }

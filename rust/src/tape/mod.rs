@@ -39,6 +39,8 @@ pub struct RecallDone {
     pub at: f64,
 }
 
+/// Cumulative library counters; mounts are the scarce operation the
+/// carousel's recall ordering tries to minimize.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct TapeStats {
     pub mounts: u64,
@@ -59,6 +61,8 @@ impl Ord for OrdF64 {
     }
 }
 
+/// The tape library: registered files, per-cartridge recall queues, a
+/// bounded drive set, and the mount-minimizing scheduler.
 pub struct TapeSystem {
     files: HashMap<FileId, TapeFile>,
     /// per-cartridge FIFO of (file, requested_at)
@@ -73,6 +77,8 @@ pub struct TapeSystem {
 }
 
 impl TapeSystem {
+    /// Build a library with `drives` drives, the given mount/seek
+    /// latencies, and per-drive read bandwidth.
     pub fn new(drives: usize, mount_latency_s: f64, seek_latency_s: f64, bandwidth_mbps: f64) -> Self {
         assert!(drives > 0);
         TapeSystem {
@@ -113,10 +119,12 @@ impl TapeSystem {
         self.pending_total += 1;
     }
 
+    /// Recalls queued but not yet completed.
     pub fn pending_recalls(&self) -> usize {
         self.pending_total
     }
 
+    /// Cumulative counters so far.
     pub fn stats(&self) -> TapeStats {
         self.stats
     }

@@ -1,0 +1,514 @@
+//! Compiled, interned workflow representation — the engine's hot-path
+//! data structure.
+//!
+//! Before this module existed, the Clerk deserialized and kept a full
+//! [`Workflow`] per request and `on_complete` re-walked the *whole*
+//! condition list on every Work completion. Compilation fixes both costs
+//! once, at registration time:
+//!
+//! * templates move into a flat arena addressed by dense indexes; name
+//!   lookup is a single hash-map probe;
+//! * conditions are grouped into a per-source-template **out-edge index**
+//!   (in definition order, which fixes the firing order of multiple
+//!   satisfied branches), so completion handling evaluates only the
+//!   finished template's out-edges — O(out-degree), not O(conditions);
+//! * entry indexes, per-template instance caps and the cycle flag are
+//!   precomputed.
+//!
+//! A [`CompiledWorkflow`] is immutable and shared behind an `Arc`. The
+//! process-wide [`WorkflowRegistry`] interns compilations keyed by a
+//! [`structural_hash`], so a campaign that submits the same workflow shape
+//! a million times compiles it once and every request's engine state
+//! shrinks to instance counters referencing the shared graph (see
+//! [`super::Engine`]).
+//!
+//! The structural hash deliberately covers the workflow's *shape* only —
+//! template names, kinds, instance caps, entries, edges, predicate
+//! structure and binding keys — and **not** parameter values (template
+//! defaults, binding expressions, predicate constants). Same-shape
+//! workflows that differ only in parameters therefore hash to the same
+//! bucket and are disambiguated by full-definition equality; a hash is a
+//! bucket key, never an identity. Engine state serialized into snapshots
+//! carries this hash for validation, but restore always re-interns from
+//! the request's inline workflow definition, so snapshots taken by a
+//! foreign build with a different hash function still recover.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+use super::condition::Predicate;
+use super::template::WorkTemplate;
+use super::Workflow;
+
+/// One compiled condition branch: when a Work of the source template
+/// (implied by which out-edge list this sits in) terminates and
+/// `predicate` holds on its result, instantiate `target` with `bindings`.
+#[derive(Debug, Clone)]
+pub struct CompiledEdge {
+    /// Dense index of the target template in the compiled arena.
+    pub target: usize,
+    pub predicate: Predicate,
+    /// target-param name → binding expression (see
+    /// `template::resolve_binding`).
+    pub bindings: std::collections::BTreeMap<String, Json>,
+}
+
+/// An immutable, shareable compilation of one [`Workflow`]: flat template
+/// arena, per-source out-edge index, precomputed entries/caps/cycle flag,
+/// plus the source definition for registry equality / re-serialization.
+#[derive(Debug)]
+pub struct CompiledWorkflow {
+    name: String,
+    structural_hash: u64,
+    templates: Vec<WorkTemplate>,
+    index: HashMap<String, usize>,
+    out_edges: Vec<Vec<CompiledEdge>>,
+    entries: Vec<usize>,
+    cyclic: bool,
+    source: Workflow,
+}
+
+impl CompiledWorkflow {
+    /// Validate and compile `wf`. Most callers want
+    /// [`WorkflowRegistry::intern`] instead, which deduplicates
+    /// compilations process-wide.
+    pub fn compile(wf: &Workflow) -> Result<CompiledWorkflow> {
+        wf.validate()?;
+        Ok(Self::compile_validated(wf, structural_hash(wf)))
+    }
+
+    /// Compilation body for an already-validated workflow with its hash
+    /// precomputed — the registry path computes both for the lookup
+    /// anyway and must not pay them twice.
+    fn compile_validated(wf: &Workflow, hash: u64) -> CompiledWorkflow {
+        let mut templates = Vec::with_capacity(wf.templates.len());
+        let mut index = HashMap::with_capacity(wf.templates.len());
+        for (name, tpl) in &wf.templates {
+            index.insert(name.clone(), templates.len());
+            templates.push(tpl.clone());
+        }
+        let mut out_edges: Vec<Vec<CompiledEdge>> = vec![Vec::new(); templates.len()];
+        for c in &wf.conditions {
+            // validate() guarantees both endpoints exist
+            let src = index[&c.source];
+            out_edges[src].push(CompiledEdge {
+                target: index[&c.target],
+                predicate: c.predicate.clone(),
+                bindings: c.bindings.clone(),
+            });
+        }
+        let entries = wf.entries.iter().map(|e| index[e]).collect();
+        CompiledWorkflow {
+            name: wf.name.clone(),
+            structural_hash: hash,
+            cyclic: wf.has_cycle(),
+            templates,
+            index,
+            out_edges,
+            entries,
+            source: wf.clone(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The shape hash this compilation was interned under (bucket key, not
+    /// an identity — see the module docs).
+    pub fn structural_hash(&self) -> u64 {
+        self.structural_hash
+    }
+
+    pub fn template_count(&self) -> usize {
+        self.templates.len()
+    }
+
+    /// Dense index of a template by name.
+    pub fn template_index(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    pub fn template_at(&self, idx: usize) -> Option<&WorkTemplate> {
+        self.templates.get(idx)
+    }
+
+    pub fn template_name(&self, idx: usize) -> &str {
+        &self.templates[idx].name
+    }
+
+    pub fn template(&self, name: &str) -> Option<&WorkTemplate> {
+        self.index.get(name).map(|&i| &self.templates[i])
+    }
+
+    /// Out-edges of the template at `idx`, in definition order — the order
+    /// multiple satisfied branches fire in.
+    pub fn out_edges(&self, idx: usize) -> &[CompiledEdge] {
+        &self.out_edges[idx]
+    }
+
+    /// Entry template indexes.
+    pub fn entries(&self) -> &[usize] {
+        &self.entries
+    }
+
+    /// Whether any condition path forms a cycle (precomputed; cyclic
+    /// workflows are legal and bounded by the per-template instance caps).
+    pub fn is_cyclic(&self) -> bool {
+        self.cyclic
+    }
+
+    /// The source definition this compilation was built from.
+    pub fn source(&self) -> &Workflow {
+        &self.source
+    }
+
+    /// Canonical serialized definition, built on demand (rarely needed —
+    /// requests carry their own definition JSON).
+    pub fn definition(&self) -> Json {
+        self.source.to_json()
+    }
+}
+
+fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+}
+
+fn predicate_shape(p: &Predicate, out: &mut String) {
+    match p {
+        Predicate::Always => out.push_str("always"),
+        Predicate::Cmp { path, op, .. } => {
+            out.push_str("cmp:");
+            out.push_str(op.as_str());
+            out.push(':');
+            out.push_str(path);
+        }
+        Predicate::StrEq { path, .. } => {
+            out.push_str("streq:");
+            out.push_str(path);
+        }
+        Predicate::Truthy { path } => {
+            out.push_str("truthy:");
+            out.push_str(path);
+        }
+        Predicate::Not(inner) => {
+            out.push_str("not(");
+            predicate_shape(inner, out);
+            out.push(')');
+        }
+        Predicate::All(ps) | Predicate::Any(ps) => {
+            out.push_str(if matches!(p, Predicate::All(_)) { "all(" } else { "any(" });
+            for (i, inner) in ps.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                predicate_shape(inner, out);
+            }
+            out.push(')');
+        }
+    }
+}
+
+/// FNV-1a hash of the workflow's shape: name, templates (name, kind,
+/// instance cap, default *keys*), entries, and conditions (endpoints,
+/// predicate structure without constants, binding *keys*). Parameter
+/// values are deliberately excluded so same-shape/different-param
+/// workflows collide into one registry bucket (see the module docs).
+pub fn structural_hash(wf: &Workflow) -> u64 {
+    let mut text = String::with_capacity(256);
+    text.push_str("wf:");
+    text.push_str(&wf.name);
+    for (name, tpl) in &wf.templates {
+        text.push_str(";t:");
+        text.push_str(name);
+        text.push(':');
+        text.push_str(tpl.kind.as_str());
+        text.push(':');
+        text.push_str(&tpl.max_instances.to_string());
+        for key in tpl.defaults.keys() {
+            text.push_str(":d=");
+            text.push_str(key);
+        }
+    }
+    for e in &wf.entries {
+        text.push_str(";e:");
+        text.push_str(e);
+    }
+    for c in &wf.conditions {
+        text.push_str(";c:");
+        text.push_str(&c.source);
+        text.push_str("->");
+        text.push_str(&c.target);
+        text.push(':');
+        predicate_shape(&c.predicate, &mut text);
+        for key in c.bindings.keys() {
+            text.push_str(":b=");
+            text.push_str(key);
+        }
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    fnv1a(&mut h, text.as_bytes());
+    h
+}
+
+struct RegistryInner {
+    by_hash: HashMap<u64, Vec<Arc<CompiledWorkflow>>>,
+    /// Insertion order for capacity eviction; evicted entries stay alive
+    /// while engines still hold their `Arc` and simply recompile on the
+    /// next intern.
+    order: VecDeque<(u64, Arc<CompiledWorkflow>)>,
+    len: usize,
+}
+
+/// Process-wide intern table of compiled workflows, keyed by
+/// [`structural_hash`] and disambiguated by full-definition equality, so
+/// hash collisions between same-shape/different-param workflows resolve to
+/// distinct compilations. Bounded: the least-recently-*inserted* entry is
+/// evicted past `capacity`.
+pub struct WorkflowRegistry {
+    inner: Mutex<RegistryInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    capacity: usize,
+}
+
+static GLOBAL_REGISTRY: OnceLock<WorkflowRegistry> = OnceLock::new();
+
+impl WorkflowRegistry {
+    pub fn new(capacity: usize) -> WorkflowRegistry {
+        WorkflowRegistry {
+            inner: Mutex::new(RegistryInner {
+                by_hash: HashMap::new(),
+                order: VecDeque::new(),
+                len: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// The shared process-wide registry the Clerk, Marshaller and REST
+    /// submit path resolve workflows through.
+    pub fn global() -> &'static WorkflowRegistry {
+        GLOBAL_REGISTRY.get_or_init(|| WorkflowRegistry::new(4096))
+    }
+
+    /// Resolve `wf` to its shared compilation. Returns the `Arc` plus
+    /// whether this was a registry hit (an identical definition was
+    /// already interned).
+    pub fn intern(&self, wf: &Workflow) -> Result<(Arc<CompiledWorkflow>, bool)> {
+        wf.validate()?;
+        let hash = structural_hash(wf);
+        if let Some(found) = self.lookup(hash, wf) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((found, true));
+        }
+        // compile outside the lock — compilation may be arbitrarily large;
+        // reuse the validate/hash work done for the lookup
+        let compiled = Arc::new(CompiledWorkflow::compile_validated(wf, hash));
+        let mut inner = self.inner.lock().unwrap();
+        // a racing intern of the same definition may have won; prefer its
+        // entry so every caller shares one Arc
+        if let Some(bucket) = inner.by_hash.get(&hash) {
+            if let Some(c) = bucket.iter().find(|c| c.source == *wf) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((Arc::clone(c), true));
+            }
+        }
+        inner.by_hash.entry(hash).or_default().push(Arc::clone(&compiled));
+        inner.order.push_back((hash, Arc::clone(&compiled)));
+        inner.len += 1;
+        while inner.len > self.capacity {
+            let Some((old_hash, old)) = inner.order.pop_front() else { break };
+            if let Some(bucket) = inner.by_hash.get_mut(&old_hash) {
+                bucket.retain(|c| !Arc::ptr_eq(c, &old));
+                if bucket.is_empty() {
+                    inner.by_hash.remove(&old_hash);
+                }
+            }
+            inner.len -= 1;
+        }
+        drop(inner);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok((compiled, false))
+    }
+
+    /// Parse a serialized workflow and intern it — the form the REST
+    /// submit path and the Clerk use (requests carry definition JSON).
+    pub fn intern_json(&self, j: &Json) -> Result<(Arc<CompiledWorkflow>, bool)> {
+        let wf = Workflow::from_json(j)?;
+        self.intern(&wf)
+    }
+
+    fn lookup(&self, hash: u64, wf: &Workflow) -> Option<Arc<CompiledWorkflow>> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .by_hash
+            .get(&hash)?
+            .iter()
+            .find(|c| c.source == *wf)
+            .map(Arc::clone)
+    }
+
+    /// Number of live (non-evicted) compilations.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lifetime intern calls that found an existing compilation.
+    pub fn hit_count(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime intern calls that had to compile.
+    pub fn miss_count(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Condition, WorkKind};
+    use super::*;
+
+    fn diamond() -> Workflow {
+        Workflow::new("diamond")
+            .add_template(WorkTemplate::new("a"))
+            .add_template(WorkTemplate::new("b").kind(WorkKind::HpoTraining))
+            .add_template(WorkTemplate::new("c"))
+            .add_template(WorkTemplate::new("d"))
+            .add_condition(Condition::always("a", "b"))
+            .add_condition(Condition::always("a", "c"))
+            .add_condition(Condition::always("b", "d"))
+            .add_condition(Condition::always("c", "d"))
+            .entry("a")
+    }
+
+    #[test]
+    fn compile_builds_out_edge_index() {
+        let c = CompiledWorkflow::compile(&diamond()).unwrap();
+        assert_eq!(c.template_count(), 4);
+        let a = c.template_index("a").unwrap();
+        let targets: Vec<&str> = c
+            .out_edges(a)
+            .iter()
+            .map(|e| c.template_name(e.target))
+            .collect();
+        // definition order is preserved — the deterministic firing order
+        assert_eq!(targets, vec!["b", "c"]);
+        let d = c.template_index("d").unwrap();
+        assert!(c.out_edges(d).is_empty());
+        assert_eq!(c.entries(), &[a]);
+        assert!(!c.is_cyclic());
+        assert_eq!(c.template("b").unwrap().kind, WorkKind::HpoTraining);
+    }
+
+    #[test]
+    fn compile_rejects_invalid_workflows() {
+        let wf = Workflow::new("bad").add_template(WorkTemplate::new("a"));
+        assert!(CompiledWorkflow::compile(&wf).is_err(), "no entries");
+    }
+
+    #[test]
+    fn cyclic_flag_precomputed() {
+        let wf = Workflow::new("loop")
+            .add_template(WorkTemplate::new("a").max_instances(3))
+            .add_condition(Condition::always("a", "a"))
+            .entry("a");
+        assert!(CompiledWorkflow::compile(&wf).unwrap().is_cyclic());
+    }
+
+    #[test]
+    fn registry_interns_identical_definitions_to_one_arc() {
+        let reg = WorkflowRegistry::new(16);
+        let (c1, hit1) = reg.intern(&diamond()).unwrap();
+        let (c2, hit2) = reg.intern(&diamond()).unwrap();
+        assert!(!hit1);
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&c1, &c2));
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.hit_count(), 1);
+        assert_eq!(reg.miss_count(), 1);
+        // json route resolves to the same compilation
+        let (c3, hit3) = reg.intern_json(&diamond().to_json()).unwrap();
+        assert!(hit3);
+        assert!(Arc::ptr_eq(&c1, &c3));
+    }
+
+    #[test]
+    fn same_shape_different_params_collide_but_stay_distinct() {
+        let low = Workflow::new("tuned")
+            .add_template(WorkTemplate::new("train").default("lr", Json::Num(0.1)))
+            .entry("train");
+        let high = Workflow::new("tuned")
+            .add_template(WorkTemplate::new("train").default("lr", Json::Num(0.9)))
+            .entry("train");
+        // parameter values are excluded from the shape hash on purpose
+        assert_eq!(structural_hash(&low), structural_hash(&high));
+        let reg = WorkflowRegistry::new(16);
+        let (c_low, _) = reg.intern(&low).unwrap();
+        let (c_high, hit) = reg.intern(&high).unwrap();
+        assert!(!hit, "different definitions must not be conflated");
+        assert!(!Arc::ptr_eq(&c_low, &c_high));
+        assert_eq!(reg.len(), 2, "both live in the same hash bucket");
+        // each compilation keeps its own defaults
+        assert_eq!(
+            c_low.template("train").unwrap().defaults.get("lr"),
+            Some(&Json::Num(0.1))
+        );
+        assert_eq!(
+            c_high.template("train").unwrap().defaults.get("lr"),
+            Some(&Json::Num(0.9))
+        );
+        // and re-interning either still lands on the right entry
+        let (again, hit) = reg.intern(&high).unwrap();
+        assert!(hit);
+        assert!(Arc::ptr_eq(&again, &c_high));
+    }
+
+    #[test]
+    fn shape_hash_sensitive_to_structure() {
+        let base = diamond();
+        let mut renamed = diamond();
+        renamed.name = "other".into();
+        assert_ne!(structural_hash(&base), structural_hash(&renamed));
+        let extra_edge = diamond().add_condition(Condition::always("b", "c"));
+        assert_ne!(structural_hash(&base), structural_hash(&extra_edge));
+        let bigger_cap = Workflow::new("diamond")
+            .add_template(WorkTemplate::new("a").max_instances(7))
+            .entry("a");
+        let small_cap = Workflow::new("diamond")
+            .add_template(WorkTemplate::new("a").max_instances(8))
+            .entry("a");
+        assert_ne!(structural_hash(&bigger_cap), structural_hash(&small_cap));
+    }
+
+    #[test]
+    fn registry_capacity_evicts_oldest() {
+        let reg = WorkflowRegistry::new(2);
+        for i in 0..3 {
+            let wf = Workflow::new(&format!("wf{i}"))
+                .add_template(WorkTemplate::new("a"))
+                .entry("a");
+            reg.intern(&wf).unwrap();
+        }
+        assert_eq!(reg.len(), 2);
+        // the first workflow was evicted: re-interning recompiles (miss)
+        let wf0 = Workflow::new("wf0").add_template(WorkTemplate::new("a")).entry("a");
+        let (_, hit) = reg.intern(&wf0).unwrap();
+        assert!(!hit);
+    }
+}

@@ -4,6 +4,12 @@
 //! finished Work's result object: comparisons read a dotted path from the
 //! result, and `all`/`any`/`not` compose. `Always` is the unconditional
 //! edge (plain DAG dependency).
+//!
+//! Conditions are the *definition* form. At registration the compiler
+//! (`super::compile`) groups them into a per-source-template out-edge
+//! index, preserving their order here — which is therefore the
+//! deterministic firing order when one completion satisfies several
+//! branches.
 
 use std::collections::BTreeMap;
 

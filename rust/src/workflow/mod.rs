@@ -3,26 +3,41 @@
 //! A [`Workflow`] is a set of [`WorkTemplate`]s plus [`Condition`] branches
 //! between them. A template is a placeholder that generates [`Work`]
 //! instances by assigning values to pre-defined parameters. When a Work
-//! terminates, every condition rooted at its template is evaluated against
-//! the Work's result; satisfied conditions instantiate their target
-//! template with newly bound parameters. Because conditions may point
-//! *backwards* (A → B → A), the engine supports cyclic graphs — iteration
-//! is bounded by a per-template instance cap so cyclic workflows (Active
-//! Learning, HPO refinement loops) terminate deterministically.
+//! terminates, the condition branches rooted at its template are evaluated
+//! against the Work's result; satisfied conditions instantiate their
+//! target template with newly bound parameters. Because conditions may
+//! point *backwards* (A → B → A), the engine supports cyclic graphs —
+//! iteration is bounded by a per-template instance cap so cyclic workflows
+//! (Active Learning, HPO refinement loops) terminate deterministically.
 //!
 //! Everything is JSON-serializable end to end: clients define workflows,
 //! serialize them into requests (paper Fig. 2), and the Clerk/Marshaller
 //! deserialize them on the server side.
+//!
+//! # Evaluation model
+//!
+//! [`Workflow`] is the *definition* builder; evaluation runs on a
+//! [`CompiledWorkflow`] — an immutable, `Arc`-shared compilation with a
+//! per-source-template out-edge index — resolved through the process-wide
+//! [`WorkflowRegistry`] (see the [`compile`] module). An [`Engine`] holds
+//! only per-request state: instance counters, the set of completed Work
+//! instances, and the shared `Arc`. Its state round-trips through
+//! [`Engine::state_json`] / [`Engine::resume`] so in-flight workflows
+//! survive a head-service restart (snapshot + WAL carry the state; the
+//! compiled graph is re-interned from the request's inline definition).
 
+pub mod compile;
 pub mod condition;
 pub mod template;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+pub use compile::{structural_hash, CompiledEdge, CompiledWorkflow, WorkflowRegistry};
 pub use condition::{CmpOp, Condition, Predicate};
 pub use template::{bind_params, WorkKind, WorkTemplate};
 
@@ -72,7 +87,11 @@ impl Work {
 }
 
 /// The workflow definition: templates + conditions + entry points.
-#[derive(Debug, Clone, Default)]
+///
+/// This is the builder/interchange form. Evaluation compiles it into a
+/// shared [`CompiledWorkflow`] via the [`WorkflowRegistry`]; `PartialEq`
+/// is what disambiguates registry hash-bucket collisions.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Workflow {
     pub name: String,
     pub templates: BTreeMap<String, WorkTemplate>,
@@ -126,7 +145,8 @@ impl Workflow {
 
     /// True if any condition path forms a cycle (DFS over the template
     /// graph). Cyclic workflows are legal — this is informational (the
-    /// paper stresses DG, not just DAG, support).
+    /// paper stresses DG, not just DAG, support). Compilation precomputes
+    /// it once as [`CompiledWorkflow::is_cyclic`].
     pub fn has_cycle(&self) -> bool {
         let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
         for c in &self.conditions {
@@ -206,71 +226,164 @@ impl Workflow {
     }
 }
 
-/// Runtime evaluation state of one workflow instance: counts generated
-/// Works per template and applies the cycle bound.
+/// Per-request evaluation state over a shared [`CompiledWorkflow`]:
+/// instance counters (the cycle bound), the set of Work instances whose
+/// completion has already been evaluated (restart idempotence), and the
+/// next engine-local instance id. Cheap to clone; the compiled graph is
+/// never copied.
 #[derive(Debug, Clone)]
 pub struct Engine {
-    pub workflow: Workflow,
-    instances: BTreeMap<String, u32>,
+    compiled: Arc<CompiledWorkflow>,
+    /// Works generated so far, indexed like the compiled template arena.
+    instances: Vec<u32>,
+    /// Every instance id `<= completed_floor` has completed. Instance ids
+    /// are dense (1..next_instance) and mostly complete near-in-order, so
+    /// the floor absorbs the common case and keeps the serialized state
+    /// O(out-of-order stragglers) instead of O(all works).
+    completed_floor: u64,
+    /// Out-of-order completions above the floor — instances whose
+    /// `on_complete` already ran. Together with the floor this makes
+    /// replaying a completion (e.g. the Marshaller re-walking terminal
+    /// transforms after a restart) a no-op instead of a duplicate fan-out.
+    completed: BTreeSet<u64>,
     next_instance: u64,
+    /// True when this engine was rebuilt from persisted state rather than
+    /// freshly created — its counters may lag transforms written in the
+    /// crash window, so callers materializing its works must deduplicate.
+    recovered: bool,
 }
 
 impl Engine {
+    /// Validate, intern through the global [`WorkflowRegistry`] and build
+    /// a fresh engine.
     pub fn new(workflow: Workflow) -> Result<Engine> {
-        workflow.validate()?;
-        Ok(Engine {
-            workflow,
-            instances: BTreeMap::new(),
+        let (compiled, _) = WorkflowRegistry::global().intern(&workflow)?;
+        Ok(Engine::from_compiled(compiled))
+    }
+
+    /// Fresh engine over an already-compiled workflow (the Clerk's path:
+    /// the registry resolved the request's definition to a shared `Arc`).
+    pub fn from_compiled(compiled: Arc<CompiledWorkflow>) -> Engine {
+        let n = compiled.template_count();
+        Engine {
+            compiled,
+            instances: vec![0; n],
+            completed_floor: 0,
+            completed: BTreeSet::new(),
             next_instance: 1,
-        })
+            recovered: false,
+        }
+    }
+
+    /// True when this engine was resumed/reconciled from persisted state
+    /// (see the `recovered` field).
+    pub fn was_recovered(&self) -> bool {
+        self.recovered
+    }
+
+    /// The shared compiled graph this engine evaluates.
+    pub fn compiled(&self) -> &Arc<CompiledWorkflow> {
+        &self.compiled
+    }
+
+    /// Template lookup on the compiled arena (name → shared definition).
+    pub fn template(&self, name: &str) -> Option<&WorkTemplate> {
+        self.compiled.template(name)
     }
 
     /// Generate the initial Works from the entry templates.
     pub fn start(&mut self) -> Vec<Work> {
-        let entries = self.workflow.entries.clone();
+        let entries: Vec<usize> = self.compiled.entries().to_vec();
         entries
-            .iter()
+            .into_iter()
             .filter_map(|e| self.instantiate(e, BTreeMap::new()))
             .collect()
     }
 
     /// Total Works generated so far per template.
     pub fn instance_count(&self, template: &str) -> u32 {
-        self.instances.get(template).copied().unwrap_or(0)
+        self.compiled
+            .template_index(template)
+            .map(|i| self.instances[i])
+            .unwrap_or(0)
     }
 
-    /// Called when a Work terminates with `result`. Evaluates condition
-    /// branches from its template and returns the newly generated Works
-    /// (paper Fig. 3: "new Work objects can be generated from their
-    /// following Work templates, with newly assigned values").
+    /// Number of condition branches rooted at `template` — what one
+    /// completion of it costs to evaluate.
+    pub fn out_degree(&self, template: &str) -> usize {
+        self.compiled
+            .template_index(template)
+            .map(|i| self.compiled.out_edges(i).len())
+            .unwrap_or(0)
+    }
+
+    /// Whether `on_complete` already ran for this Work instance.
+    pub fn already_completed(&self, instance: u64) -> bool {
+        instance <= self.completed_floor || self.completed.contains(&instance)
+    }
+
+    /// Record that this instance's completion has been handled without
+    /// firing conditions — the Marshaller uses it for *failed* works,
+    /// which never fan out but must still advance the completion floor
+    /// (otherwise one early failure pins the floor and the serialized
+    /// completed set grows with every later work).
+    pub fn mark_complete(&mut self, instance: u64) {
+        if instance <= self.completed_floor {
+            return;
+        }
+        self.completed.insert(instance);
+        // drain any now-consecutive run into the floor
+        while self.completed.remove(&(self.completed_floor + 1)) {
+            self.completed_floor += 1;
+        }
+    }
+
+    /// Called when a Work terminates with `result`. Evaluates only the
+    /// out-edges indexed under its template — O(out-degree), not O(all
+    /// conditions) — and returns the newly generated Works (paper Fig. 3:
+    /// "new Work objects can be generated from their following Work
+    /// templates, with newly assigned values"). Multiple satisfied
+    /// branches fire in definition order.
+    ///
+    /// Atomic on failure: predicates and bindings are all evaluated
+    /// *before* any counter moves, so an error (missing predicate path,
+    /// bad binding) leaves the engine exactly as it was — a partial
+    /// fan-out would leak instance-cap slots, and with persisted state it
+    /// would re-leak on every restart.
     pub fn on_complete(&mut self, work: &Work, result: &Json) -> Result<Vec<Work>> {
-        let conds: Vec<Condition> = self
-            .workflow
-            .conditions
-            .iter()
-            .filter(|c| c.source == work.template)
-            .cloned()
-            .collect();
-        let mut out = Vec::new();
-        for c in conds {
-            if c.predicate.eval(result)? {
-                let params = bind_params(&c.bindings, &work.params, result)?;
-                if let Some(w) = self.instantiate(&c.target, params) {
-                    out.push(w);
-                }
+        let Some(src) = self.compiled.template_index(&work.template) else {
+            // foreign or renamed template: nothing to fire (the pre-index
+            // engine matched zero conditions here too)
+            self.mark_complete(work.instance);
+            return Ok(Vec::new());
+        };
+        let compiled = Arc::clone(&self.compiled);
+        // phase 1: evaluate + bind, no state mutation
+        let mut fired: Vec<(usize, BTreeMap<String, Json>)> = Vec::new();
+        for edge in compiled.out_edges(src) {
+            if edge.predicate.eval(result)? {
+                fired.push((edge.target, bind_params(&edge.bindings, &work.params, result)?));
             }
         }
+        // phase 2: instantiate
+        let mut out = Vec::new();
+        for (target, params) in fired {
+            if let Some(w) = self.instantiate(target, params) {
+                out.push(w);
+            }
+        }
+        self.mark_complete(work.instance);
         Ok(out)
     }
 
-    fn instantiate(&mut self, template: &str, overrides: BTreeMap<String, Json>) -> Option<Work> {
-        let tpl = self.workflow.templates.get(template)?;
-        let count = self.instances.entry(template.to_string()).or_insert(0);
-        if *count >= tpl.max_instances {
+    fn instantiate(&mut self, idx: usize, overrides: BTreeMap<String, Json>) -> Option<Work> {
+        let compiled = Arc::clone(&self.compiled);
+        let tpl = compiled.template_at(idx)?;
+        if self.instances[idx] >= tpl.max_instances {
             return None; // cycle bound reached
         }
-        let iteration = *count;
-        *count += 1;
+        let iteration = self.instances[idx];
+        self.instances[idx] += 1;
         let mut params = tpl.defaults.clone();
         for (k, v) in overrides {
             params.insert(k, v);
@@ -278,12 +391,118 @@ impl Engine {
         params.insert("_iteration".into(), Json::Num(iteration as f64));
         let w = Work {
             instance: self.next_instance,
-            template: template.to_string(),
+            template: tpl.name.clone(),
             params,
             iteration,
         };
         self.next_instance += 1;
         Some(w)
+    }
+
+    /// Serialize the per-request state: the compiled workflow's structural
+    /// hash (16 hex digits — `u64` does not survive a JSON `f64` number),
+    /// instance counters keyed by template *name* (robust against arena
+    /// reordering across builds), the completed-instance floor + sparse
+    /// stragglers (O(out-of-order completions), not O(all works)), and the
+    /// next instance id. This is what the store persists per request; the
+    /// compiled graph itself is recovered by re-interning the request's
+    /// inline workflow definition.
+    pub fn state_json(&self) -> Json {
+        let mut counts = Json::obj();
+        for (i, n) in self.instances.iter().enumerate() {
+            if *n > 0 {
+                counts = counts.set(self.compiled.template_name(i), *n as u64);
+            }
+        }
+        Json::obj()
+            .set("hash", format!("{:016x}", self.compiled.structural_hash()))
+            .set("next_instance", self.next_instance)
+            .set("instances", counts)
+            .set("completed_floor", self.completed_floor)
+            .set(
+                "completed",
+                Json::Arr(self.completed.iter().map(|&i| Json::from(i)).collect()),
+            )
+    }
+
+    /// Rebuild an engine from a compiled workflow plus serialized state
+    /// ([`Engine::state_json`]'s output). Restoration is tolerant: unknown
+    /// template names and missing fields are skipped, and a structural-hash
+    /// mismatch (snapshot from a foreign build) only logs — counters are
+    /// keyed by name, so they still restore against the re-interned graph.
+    pub fn resume(compiled: Arc<CompiledWorkflow>, state: &Json) -> Engine {
+        let mut e = Engine::from_compiled(compiled);
+        e.recovered = true;
+        if state.is_null() {
+            return e;
+        }
+        if let Some(h) = state.get("hash").and_then(|v| v.as_str()) {
+            if u64::from_str_radix(h, 16).ok() != Some(e.compiled.structural_hash()) {
+                log::warn!(
+                    "engine state hash {h} != compiled workflow {:016x}; restoring counters by template name",
+                    e.compiled.structural_hash()
+                );
+            }
+        }
+        if let Some(counts) = state.get("instances").and_then(|i| i.as_obj()) {
+            for (name, v) in counts {
+                if let (Some(idx), Some(n)) = (e.compiled.template_index(name), v.as_u64()) {
+                    e.instances[idx] = n as u32;
+                }
+            }
+        }
+        e.completed_floor = state
+            .get("completed_floor")
+            .and_then(|v| v.as_u64())
+            .unwrap_or(0);
+        if let Some(done) = state.get("completed").and_then(|c| c.as_arr()) {
+            for i in done.iter().filter_map(|v| v.as_u64()) {
+                e.mark_complete(i);
+            }
+        }
+        e.next_instance = state
+            .get("next_instance")
+            .and_then(|v| v.as_u64())
+            .unwrap_or(1)
+            .max(1);
+        e
+    }
+
+    /// Clamp the next instance id past Works already materialized in the
+    /// store. Resumed state may lag transforms written in the crash window
+    /// (engine state is persisted *after* the transforms); without the
+    /// clamp a post-restart re-fire could mint an instance id that
+    /// collides with one embedded in a persisted transform, and
+    /// `already_completed` would later suppress the twin's fan-out.
+    ///
+    /// Deliberately does NOT touch the per-template iteration counters:
+    /// the re-fire must reproduce the *same* `template#iteration` name as
+    /// the transform the crash already materialized, so the pipeline's
+    /// recovered-names dedupe can suppress it — advancing the counter
+    /// would mint a fresh name and duplicate the fan-out instead.
+    pub fn clamp_to_materialized(&mut self, works: impl IntoIterator<Item = Work>) {
+        for w in works {
+            self.next_instance = self.next_instance.max(w.instance + 1);
+        }
+    }
+
+    /// Fallback restoration for snapshots that predate persisted engine
+    /// state: derive counters from the Works already materialized in the
+    /// store. Terminal Works are treated as already completed, so a
+    /// restart cannot re-fire conditions that (probably) fired before —
+    /// this conservatively matches the pre-state-persistence behaviour,
+    /// where nothing re-fired after a restart.
+    pub fn reconcile(&mut self, works: impl IntoIterator<Item = (Work, bool)>) {
+        self.recovered = true;
+        for (w, terminal) in works {
+            if let Some(idx) = self.compiled.template_index(&w.template) {
+                self.instances[idx] = self.instances[idx].max(w.iteration + 1);
+            }
+            self.next_instance = self.next_instance.max(w.instance + 1);
+            if terminal {
+                self.mark_complete(w.instance);
+            }
+        }
     }
 }
 
@@ -316,6 +535,7 @@ mod tests {
         let next = e.on_complete(&w, &Json::obj()).unwrap();
         assert_eq!(next.len(), 1);
         assert_eq!(next[0].template, "main");
+        assert!(e.already_completed(w.instance));
     }
 
     #[test]
@@ -350,6 +570,7 @@ mod tests {
             .entry("a");
         assert!(wf.has_cycle());
         let mut e = Engine::new(wf).unwrap();
+        assert!(e.compiled().is_cyclic());
         let mut frontier = e.start();
         let mut total = 0;
         while let Some(w) = frontier.pop() {
@@ -358,6 +579,65 @@ mod tests {
         }
         assert_eq!(total, 5);
         assert_eq!(e.instance_count("a"), 5);
+    }
+
+    #[test]
+    fn backward_edge_hits_instance_cap() {
+        // A → B → A: the backward edge re-instantiates A until its cap
+        let wf = Workflow::new("pingpong")
+            .add_template(WorkTemplate::new("a").max_instances(3))
+            .add_template(WorkTemplate::new("b").max_instances(3))
+            .add_condition(Condition::always("a", "b"))
+            .add_condition(Condition::always("b", "a"))
+            .entry("a");
+        assert!(wf.has_cycle());
+        let mut e = Engine::new(wf).unwrap();
+        let mut frontier = e.start();
+        let mut total = 0;
+        while let Some(w) = frontier.pop() {
+            total += 1;
+            assert!(total <= 6, "cap must bound the cycle");
+            frontier.extend(e.on_complete(&w, &Json::obj()).unwrap());
+        }
+        assert_eq!(e.instance_count("a"), 3);
+        assert_eq!(e.instance_count("b"), 3);
+        assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn multiple_satisfied_edges_fire_in_definition_order() {
+        let wf = Workflow::new("fanout")
+            .add_template(WorkTemplate::new("a"))
+            .add_template(WorkTemplate::new("x"))
+            .add_template(WorkTemplate::new("y"))
+            .add_template(WorkTemplate::new("z"))
+            .add_condition(Condition::always("a", "z"))
+            .add_condition(Condition::when("a", "x", Predicate::gt("v", 0.0)))
+            .add_condition(Condition::always("a", "y"))
+            .entry("a");
+        let mut e = Engine::new(wf).unwrap();
+        let w = e.start().pop().unwrap();
+        let fired = e.on_complete(&w, &Json::obj().set("v", 1.0)).unwrap();
+        let order: Vec<&str> = fired.iter().map(|w| w.template.as_str()).collect();
+        // definition order, not alphabetical and not index order
+        assert_eq!(order, vec!["z", "x", "y"]);
+        // instance ids are assigned in the same deterministic order
+        assert!(fired.windows(2).all(|p| p[0].instance < p[1].instance));
+    }
+
+    #[test]
+    fn unsatisfied_predicate_is_a_noop() {
+        let wf = Workflow::new("gate")
+            .add_template(WorkTemplate::new("a"))
+            .add_template(WorkTemplate::new("b"))
+            .add_condition(Condition::when("a", "b", Predicate::lt("loss", 0.5)))
+            .entry("a");
+        let mut e = Engine::new(wf).unwrap();
+        let w = e.start().pop().unwrap();
+        let fired = e.on_complete(&w, &Json::obj().set("loss", 0.9)).unwrap();
+        assert!(fired.is_empty());
+        assert_eq!(e.instance_count("b"), 0, "no instance may be consumed");
+        assert!(e.already_completed(w.instance));
     }
 
     #[test]
@@ -427,5 +707,125 @@ mod tests {
         let w1 = e.on_complete(&w0, &Json::obj()).unwrap().pop().unwrap();
         assert_eq!(w1.params.get("_iteration"), Some(&Json::Num(1.0)));
         assert_eq!(w1.iteration, 1);
+    }
+
+    #[test]
+    fn engines_share_one_compiled_graph() {
+        let e1 = Engine::new(two_step()).unwrap();
+        let e2 = Engine::new(two_step()).unwrap();
+        assert!(Arc::ptr_eq(e1.compiled(), e2.compiled()));
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_mid_flight() {
+        let wf = Workflow::new("loop")
+            .add_template(WorkTemplate::new("a").max_instances(4))
+            .add_condition(Condition::always("a", "a"))
+            .entry("a");
+        let mut live = Engine::new(wf.clone()).unwrap();
+        let w0 = live.start().pop().unwrap();
+        let w1 = live.on_complete(&w0, &Json::obj()).unwrap().pop().unwrap();
+
+        // serialize, re-intern, resume — the restart path
+        let state = live.state_json();
+        let (compiled, _) = WorkflowRegistry::global().intern(&wf).unwrap();
+        let mut resumed = Engine::resume(compiled, &state);
+        assert_eq!(resumed.instance_count("a"), 2);
+        assert!(resumed.already_completed(w0.instance));
+        assert!(!resumed.already_completed(w1.instance));
+
+        // both continue identically to the cap
+        let mut frontier = vec![w1.clone()];
+        let mut live_total = 2;
+        while let Some(w) = frontier.pop() {
+            frontier.extend(live.on_complete(&w, &Json::obj()).unwrap());
+            live_total += 1;
+        }
+        let mut frontier = vec![w1];
+        let mut resumed_total = 2;
+        while let Some(w) = frontier.pop() {
+            frontier.extend(resumed.on_complete(&w, &Json::obj()).unwrap());
+            resumed_total += 1;
+        }
+        assert_eq!(live_total, resumed_total);
+        assert_eq!(live.instance_count("a"), 4);
+        assert_eq!(resumed.instance_count("a"), 4);
+        assert_eq!(live.state_json(), resumed.state_json());
+    }
+
+    #[test]
+    fn resume_of_null_state_is_fresh() {
+        let (compiled, _) = WorkflowRegistry::global().intern(&two_step()).unwrap();
+        let mut e = Engine::resume(Arc::clone(&compiled), &Json::Null);
+        assert_eq!(e.instance_count("prep"), 0);
+        assert_eq!(e.start().len(), 1);
+    }
+
+    #[test]
+    fn on_complete_error_is_state_neutral() {
+        let wf = Workflow::new("atomic")
+            .add_template(WorkTemplate::new("a"))
+            .add_template(WorkTemplate::new("x"))
+            .add_template(WorkTemplate::new("y"))
+            .add_condition(Condition::always("a", "x"))
+            .add_condition(Condition::when("a", "y", Predicate::gt("score", 0.5)))
+            .entry("a");
+        let mut e = Engine::new(wf).unwrap();
+        let w = e.start().pop().unwrap();
+        // result lacks 'score': the second edge errors by design; the
+        // first edge's instantiation must not leak an instance-cap slot
+        let before = e.state_json();
+        assert!(e.on_complete(&w, &Json::obj()).is_err());
+        assert_eq!(e.state_json(), before, "an eval error must not move state");
+        assert_eq!(e.instance_count("x"), 0);
+        assert!(!e.already_completed(w.instance));
+        // a well-formed result still fires both branches
+        let fired = e.on_complete(&w, &Json::obj().set("score", 0.9)).unwrap();
+        assert_eq!(fired.len(), 2);
+        assert!(e.already_completed(w.instance));
+    }
+
+    #[test]
+    fn completed_floor_absorbs_in_order_and_tracks_stragglers() {
+        let (compiled, _) = WorkflowRegistry::global().intern(&two_step()).unwrap();
+        let mut e = Engine::from_compiled(compiled);
+        e.mark_complete(1);
+        e.mark_complete(3); // out of order
+        assert!(e.already_completed(1));
+        assert!(!e.already_completed(2));
+        assert!(e.already_completed(3));
+        let s = e.state_json();
+        assert_eq!(s.get("completed_floor").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(
+            s.get("completed").unwrap().as_arr().unwrap().len(),
+            1,
+            "only the straggler serializes, not every completion"
+        );
+        // filling the gap drains the run into the floor
+        e.mark_complete(2);
+        let s = e.state_json();
+        assert_eq!(s.get("completed_floor").and_then(|v| v.as_u64()), Some(3));
+        assert!(s.get("completed").unwrap().as_arr().unwrap().is_empty());
+        // round trip preserves the compacted form
+        let e2 = Engine::resume(Arc::clone(e.compiled()), &s);
+        assert!(e2.already_completed(1) && e2.already_completed(2) && e2.already_completed(3));
+        assert!(!e2.already_completed(4));
+    }
+
+    #[test]
+    fn reconcile_rebuilds_counters_from_works() {
+        let (compiled, _) = WorkflowRegistry::global().intern(&two_step()).unwrap();
+        let mut e = Engine::from_compiled(compiled);
+        let w = Work {
+            instance: 7,
+            template: "prep".into(),
+            params: BTreeMap::new(),
+            iteration: 0,
+        };
+        e.reconcile([(w.clone(), true)]);
+        assert_eq!(e.instance_count("prep"), 1);
+        assert!(e.already_completed(7));
+        // terminal works are not re-fired, so nothing new appears
+        assert_eq!(e.next_instance, 8);
     }
 }

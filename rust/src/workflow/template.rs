@@ -5,6 +5,11 @@
 //! `${result.path.to.field}` (read from the finished Work's result JSON)
 //! and `${param.name}` (copy from the finished Work's own parameters);
 //! anything else is a literal.
+//!
+//! Templates are immutable once compiled: evaluation shares them out of
+//! the interned `CompiledWorkflow` arena (`super::compile`), so a
+//! template's defaults are cloned per instantiated Work but the template
+//! itself is never copied per request.
 
 use std::collections::BTreeMap;
 

@@ -1,10 +1,12 @@
 //! Crash-recovery integration tests for the `persist` subsystem: a
 //! property test that `recover(checkpoint + WAL suffix)` equals the live
 //! store after random interleavings of batched transitions, a torn-tail
-//! test, and the full kill-and-restart round trip over REST (populate →
+//! test, the full kill-and-restart round trip over REST (populate →
 //! checkpoint → more batched writes → drop the process state → recover
 //! from the data dir → every table and status index matches, and the
-//! daemons resume).
+//! daemons resume), and compiled-workflow round trips (engine state
+//! recovered from checkpoint+WAL lets conditions pending at the kill fire
+//! after the restart, without duplicating already-fired fan-out).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -445,6 +447,107 @@ fn kill_and_restart_roundtrip_over_rest() {
     idds::daemons::pump(&[&c, &m, &t, &ca, &co], 1000);
     assert_eq!(s2.get_request(req).unwrap().status, RequestStatus::Finished);
 
+    p2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn three_chain() -> Workflow {
+    Workflow::new("three-chain")
+        .add_template(WorkTemplate::new("a"))
+        .add_template(WorkTemplate::new("b"))
+        .add_template(WorkTemplate::new("c"))
+        .add_condition(Condition::always("a", "b"))
+        .add_condition(Condition::always("b", "c"))
+        .entry("a")
+}
+
+fn noop_pipeline(store: &Store) -> Pipeline {
+    Pipeline::new(
+        store.clone(),
+        Broker::new(Arc::new(WallClock::new())),
+        Registry::default(),
+        ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default())),
+    )
+}
+
+#[test]
+fn pending_workflow_condition_fires_after_kill_and_restart() {
+    let dir = tmp_dir("wfpending");
+    let s = store();
+    let (p, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+    let req = s.add_request("camp", "alice", RequestKind::Workflow, three_chain().to_json());
+    {
+        // run everything EXCEPT the Marshaller: 'a' finishes, but its
+        // condition branch (a → b) is still pending when the process dies
+        let pl = noop_pipeline(&s);
+        let (clerk, _marsh, tfr, carrier, conductor) = pl.daemons();
+        idds::daemons::pump(&[&clerk, &tfr, &carrier, &conductor], 1000);
+    }
+    assert_eq!(s.transforms_of_request(req).len(), 1, "only 'a' may exist pre-kill");
+    assert_eq!(s.get_request(req).unwrap().status, RequestStatus::Transforming);
+    assert!(
+        !s.get_request(req).unwrap().engine.is_null(),
+        "the Clerk must have persisted engine state"
+    );
+    p.shutdown(); // kill
+
+    // recover into a brand-new store + pipeline (empty engines map): the
+    // engine must be re-interned from the request's definition, resumed
+    // from the persisted state, and the pending condition must fire
+    let s2 = store();
+    let (p2, report) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+    assert!(report.events_replayed > 0);
+    assert_eq!(
+        s2.get_request(req).unwrap().engine,
+        s.get_request(req).unwrap().engine,
+        "engine state must survive the WAL round trip"
+    );
+    let pl2 = noop_pipeline(&s2);
+    let (clerk, marsh, tfr, carrier, conductor) = pl2.daemons();
+    idds::daemons::pump(&[&clerk, &marsh, &tfr, &carrier, &conductor], 1000);
+    let names: Vec<String> = s2
+        .transforms_of_request(req)
+        .into_iter()
+        .map(|t| s2.get_transform(t).unwrap().name)
+        .collect();
+    assert_eq!(names.len(), 3, "b and c must materialize after the restart: {names:?}");
+    assert_eq!(s2.get_request(req).unwrap().status, RequestStatus::Finished);
+    p2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn completed_workflow_does_not_refire_after_kill_and_restart() {
+    let dir = tmp_dir("wfnorefire");
+    let s = store();
+    let (p, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+    let req = s.add_request("camp", "alice", RequestKind::Workflow, three_chain().to_json());
+    {
+        let pl = noop_pipeline(&s);
+        let (clerk, marsh, tfr, carrier, conductor) = pl.daemons();
+        idds::daemons::pump(&[&clerk, &marsh, &tfr, &carrier, &conductor], 1000);
+    }
+    assert_eq!(s.get_request(req).unwrap().status, RequestStatus::Finished);
+    assert_eq!(s.transforms_of_request(req).len(), 3);
+    p.shutdown(); // kill
+
+    // after recovery a fresh Marshaller re-walks every terminal transform
+    // (its in-memory marshalled set died with the process); the recovered
+    // completed-instance set must make that walk a no-op
+    let s2 = store();
+    let (p2, _) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+    let pl2 = noop_pipeline(&s2);
+    let (clerk, marsh, tfr, carrier, conductor) = pl2.daemons();
+    idds::daemons::pump(&[&clerk, &marsh, &tfr, &carrier, &conductor], 1000);
+    assert_eq!(
+        s2.transforms_of_request(req).len(),
+        3,
+        "re-marshalling a finished request must not duplicate fan-out"
+    );
+    assert_eq!(s2.get_request(req).unwrap().status, RequestStatus::Finished);
+    for tid in s2.transforms_of_request(req) {
+        assert_eq!(s2.get_transform(tid).unwrap().status, TransformStatus::Finished);
+    }
     p2.shutdown();
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,13 +1,13 @@
 #!/usr/bin/env bash
 # Perf trajectory: run the store/wal/carousel/workflow benches and emit
-# BENCH_store.json + BENCH_wal.json at the repo root so results are
-# comparable PR-over-PR. BENCH_QUICK=1 shrinks iteration counts for smoke
-# runs.
+# BENCH_store.json + BENCH_wal.json + BENCH_workflow.json at the repo root
+# so results are comparable PR-over-PR. BENCH_QUICK=1 shrinks iteration
+# counts for smoke runs.
 set -euo pipefail
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 cd "$ROOT/rust"
 BENCH_STORE_JSON="$ROOT/BENCH_store.json" cargo bench --bench bench_store
 BENCH_WAL_JSON="$ROOT/BENCH_wal.json" cargo bench --bench bench_wal
 cargo bench --bench bench_carousel
-cargo bench --bench bench_workflow
-echo "wrote $ROOT/BENCH_store.json and $ROOT/BENCH_wal.json"
+BENCH_WORKFLOW_JSON="$ROOT/BENCH_workflow.json" cargo bench --bench bench_workflow
+echo "wrote $ROOT/BENCH_store.json, $ROOT/BENCH_wal.json and $ROOT/BENCH_workflow.json"

@@ -7,3 +7,18 @@ cd "$(dirname "$0")/../rust"
 cargo build --release
 cargo test -q
 cargo test --release -q --test persist_recovery
+
+# Docs gate: rustdoc warnings (dangling intra-doc links, malformed code
+# blocks, bad HTML in prose) are errors so the documentation pass cannot
+# rot.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+# Formatting check. Advisory for now: the seed tree predates rustfmt
+# enforcement and a pure-reformat commit should flip this to a hard gate;
+# until then a drift report must not mask real build/test failures (and
+# some toolchains ship without the rustfmt component).
+if command -v rustfmt >/dev/null 2>&1; then
+    cargo fmt --check || echo "WARNING: cargo fmt --check reports drift (advisory until the tree-wide reformat lands)"
+else
+    echo "NOTE: rustfmt not installed; skipping format check"
+fi
