@@ -1,0 +1,325 @@
+//! PERF-BROKER bench: before/after for the broker striping rework, plus
+//! the durability tax on the publish path.
+//!
+//!     cargo bench --bench bench_broker
+//!
+//! * **single mutex vs striped** — a trimmed replica of the pre-rework
+//!   broker (one `Mutex<Inner>` guarding every topic and queue) against
+//!   the real per-topic-lock broker, with N publisher threads each owning
+//!   a topic. On the single mutex the threads serialize; with striping
+//!   they do not, which is the whole point of the rework.
+//! * **durable vs non-durable publish** — the same publish workload with
+//!   the WAL persister attached (group commit, no fsync) vs detached.
+//!
+//! Emits `BENCH_broker.json` (override the path with `BENCH_BROKER_JSON`;
+//! `scripts/bench.sh` points it at the repo root). The `derived` section
+//! carries the cross-topic speedup so "publishers on different topics no
+//! longer serialize" is machine-checkable.
+
+use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use idds::broker::Broker;
+use idds::metrics::Registry;
+use idds::persist::{FsyncMode, Persist, PersistOptions};
+use idds::store::Store;
+use idds::util::bench::{section, BenchResult, Bencher};
+use idds::util::clock::WallClock;
+use idds::util::json::Json;
+
+/// Trimmed replica of the pre-striping broker: every operation takes the
+/// one mutex. Semantics match the old hot path (publish fan-out, FIFO
+/// poll, ack) minus redelivery bookkeeping, which favours the baseline —
+/// the measured gap is therefore a lower bound on the real one.
+mod single_mutex {
+    use super::*;
+
+    #[derive(Default)]
+    struct SubQueue {
+        pending: VecDeque<(u64, Json)>,
+        in_flight: HashMap<u64, Json>,
+    }
+
+    #[derive(Default)]
+    struct Inner {
+        topics: HashMap<String, Vec<u64>>,
+        queues: HashMap<u64, SubQueue>,
+    }
+
+    #[derive(Clone, Default)]
+    pub struct SingleMutexBroker {
+        inner: Arc<Mutex<Inner>>,
+    }
+
+    impl SingleMutexBroker {
+        pub fn subscribe(&self, topic: &str) -> u64 {
+            let id = idds::util::next_id();
+            let mut inner = self.inner.lock().unwrap();
+            inner.topics.entry(topic.to_string()).or_default().push(id);
+            inner.queues.insert(id, SubQueue::default());
+            id
+        }
+
+        pub fn publish_many(&self, topic: &str, payloads: Vec<Json>) -> usize {
+            let mut inner = self.inner.lock().unwrap();
+            let subs = inner.topics.get(topic).cloned().unwrap_or_default();
+            let msgs: Vec<(u64, Json)> =
+                payloads.into_iter().map(|p| (idds::util::next_id(), p)).collect();
+            let mut depth = 0;
+            for sub in subs {
+                if let Some(q) = inner.queues.get_mut(&sub) {
+                    for m in &msgs {
+                        q.pending.push_back(m.clone());
+                    }
+                    depth = depth.max(q.pending.len());
+                }
+            }
+            depth
+        }
+
+        pub fn poll(&self, sub: u64, max: usize) -> Vec<u64> {
+            let mut inner = self.inner.lock().unwrap();
+            let mut out = Vec::new();
+            if let Some(q) = inner.queues.get_mut(&sub) {
+                while out.len() < max {
+                    let Some((id, payload)) = q.pending.pop_front() else { break };
+                    q.in_flight.insert(id, payload);
+                    out.push(id);
+                }
+            }
+            out
+        }
+
+        pub fn ack_many(&self, sub: u64, ids: &[u64]) -> usize {
+            let mut inner = self.inner.lock().unwrap();
+            let mut n = 0;
+            if let Some(q) = inner.queues.get_mut(&sub) {
+                for id in ids {
+                    if q.in_flight.remove(id).is_some() {
+                        n += 1;
+                    }
+                }
+            }
+            n
+        }
+    }
+}
+
+use single_mutex::SingleMutexBroker;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "idds-bench-broker-{tag}-{}-{}",
+        std::process::id(),
+        idds::util::next_id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// One full producer/consumer round on `topics` topics: every topic gets
+/// its own publisher thread (batches of `batch`) and its own consumer
+/// thread (poll + ack until drained). `publish`/`consume` abstract over
+/// the two broker shapes.
+fn cross_topic_round(
+    topics: usize,
+    msgs_per_topic: usize,
+    batch: usize,
+    publish: impl Fn(usize, Vec<Json>) + Send + Sync + 'static + Clone,
+    consume: impl Fn(usize) -> usize + Send + Sync + 'static + Clone,
+) {
+    let mut handles = Vec::new();
+    for t in 0..topics {
+        let publish = publish.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut sent = 0;
+            while sent < msgs_per_topic {
+                let n = batch.min(msgs_per_topic - sent);
+                publish(t, (0..n).map(|i| Json::Num((sent + i) as f64)).collect());
+                sent += n;
+            }
+        }));
+        let consume = consume.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut got = 0;
+            while got < msgs_per_topic {
+                let n = consume(t);
+                if n == 0 {
+                    std::thread::yield_now();
+                }
+                got += n;
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+
+    let topics: usize = 8;
+    let msgs_per_topic: usize = if quick { 2_000 } else { 20_000 };
+    let batch: usize = 64;
+
+    section(&format!(
+        "cross-topic contention: {topics} publisher+consumer pairs, {msgs_per_topic} msgs/topic"
+    ));
+    // before: every topic hammers the same mutex
+    let single = b.bench_with_setup(
+        "single-mutex broker (pre-rework replica)",
+        || {
+            let br = SingleMutexBroker::default();
+            let subs: Vec<u64> = (0..topics).map(|t| br.subscribe(&format!("t{t}"))).collect();
+            (br, subs)
+        },
+        |(br, subs)| {
+            let (p, c) = (br.clone(), br.clone());
+            let subs = subs.clone();
+            cross_topic_round(
+                topics,
+                msgs_per_topic,
+                batch,
+                move |t, payloads| {
+                    p.publish_many(&format!("t{t}"), payloads);
+                },
+                move |t| {
+                    let ids = c.poll(subs[t], 64);
+                    c.ack_many(subs[t], &ids);
+                    ids.len()
+                },
+            );
+        },
+    );
+    // after: per-topic locks — the same workload, no shared lock
+    let striped = b.bench_with_setup(
+        "striped broker (per-topic locks)",
+        || {
+            let br = Broker::new(Arc::new(WallClock::new())).with_redelivery_timeout(3600.0);
+            let subs: Vec<u64> = (0..topics).map(|t| br.subscribe(&format!("t{t}"))).collect();
+            (br, subs)
+        },
+        |(br, subs)| {
+            let (p, c) = (br.clone(), br.clone());
+            let subs = subs.clone();
+            cross_topic_round(
+                topics,
+                msgs_per_topic,
+                batch,
+                move |t, payloads| {
+                    p.publish_many(&format!("t{t}"), payloads);
+                },
+                move |t| {
+                    let ds = c.poll(subs[t], 64);
+                    let ids: Vec<u64> = ds.iter().map(|d| d.id).collect();
+                    c.ack_many(subs[t], &ids);
+                    ids.len()
+                },
+            );
+        },
+    );
+    let total = (topics * msgs_per_topic) as f64;
+    let single_mps = total / (single.mean_ns / 1e9);
+    let striped_mps = total / (striped.mean_ns / 1e9);
+    let speedup = striped_mps / single_mps.max(1e-9);
+    println!(
+        "\nsingle mutex: {single_mps:.0} msg/s   striped: {striped_mps:.0} msg/s   \
+         cross-topic speedup: {speedup:.1}x"
+    );
+
+    section("single-topic parity (striping must not tax the uncontended path)");
+    let one_topic = {
+        let br = Broker::new(Arc::new(WallClock::new())).with_redelivery_timeout(3600.0);
+        let sub = br.subscribe("t");
+        b.bench("striped broker, 1 topic publish+poll+ack 1k", move || {
+            br.publish_many("t", (0..1000).map(|i| Json::Num(i as f64)).collect());
+            let ds = br.poll(sub, 1000);
+            let ids: Vec<u64> = ds.iter().map(|d| d.id).collect();
+            br.ack_many(sub, &ids)
+        })
+    };
+
+    section("durable vs non-durable publish (group commit, fsync off)");
+    let n_durable: usize = if quick { 1_000 } else { 10_000 };
+    let plain = {
+        let br = Broker::new(Arc::new(WallClock::new())).with_redelivery_timeout(3600.0);
+        let sub = br.subscribe("t");
+        let mut drained = 0usize;
+        let r = b.bench(&format!("publish_many x{n_durable}, no WAL"), || {
+            for _ in 0..(n_durable / 100) {
+                br.publish_many("t", (0..100).map(|i| Json::Num(i as f64)).collect());
+            }
+            // drain so queues do not grow across iterations
+            loop {
+                let ds = br.poll(sub, 4096);
+                if ds.is_empty() {
+                    break;
+                }
+                drained += ds.len();
+                br.ack_many(sub, &ds.iter().map(|d| d.id).collect::<Vec<_>>());
+            }
+        });
+        assert!(drained > 0);
+        r
+    };
+    let durable = {
+        let dir = tmp_dir("durable");
+        let store = Store::new(Arc::new(WallClock::new()));
+        let br = Broker::new(Arc::new(WallClock::new())).with_redelivery_timeout(3600.0);
+        let opts = PersistOptions {
+            segment_bytes: 256 * 1024 * 1024,
+            fsync: FsyncMode::Never,
+            checkpoint_keep: 2,
+            flush_idle_ms: 5,
+        };
+        let (persist, _) =
+            Persist::open_with_broker(&dir, opts, &store, Some(&br), Registry::default()).unwrap();
+        let sub = br.subscribe("t");
+        let mut drained = 0usize;
+        let r = b.bench(&format!("publish_many x{n_durable}, WAL attached"), || {
+            for _ in 0..(n_durable / 100) {
+                br.publish_many("t", (0..100).map(|i| Json::Num(i as f64)).collect());
+            }
+            loop {
+                let ds = br.poll(sub, 4096);
+                if ds.is_empty() {
+                    break;
+                }
+                drained += ds.len();
+                br.ack_many(sub, &ds.iter().map(|d| d.id).collect::<Vec<_>>());
+            }
+            persist.flush();
+        });
+        assert!(drained > 0);
+        persist.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+        r
+    };
+    let durable_overhead = durable.mean_ns / plain.mean_ns.max(1e-9);
+    println!("\ndurable publish overhead: {durable_overhead:.2}x over non-durable");
+
+    let to_json = |r: &BenchResult| r.to_json();
+    let summary = Json::obj()
+        .set("bench", "bench_broker")
+        .set("quick", quick)
+        .set("results", Json::Arr(b.results().iter().map(to_json).collect()))
+        .set(
+            "derived",
+            Json::obj()
+                .set("cross_topic_publishers", topics as u64)
+                .set("single_mutex_msgs_per_sec", single_mps)
+                .set("striped_msgs_per_sec", striped_mps)
+                .set("cross_topic_speedup", speedup)
+                .set("single_topic_roundtrip_ns", one_topic.mean_ns)
+                .set("durable_publish_overhead", durable_overhead),
+        );
+    let path =
+        std::env::var("BENCH_BROKER_JSON").unwrap_or_else(|_| "BENCH_broker.json".to_string());
+    match std::fs::write(&path, summary.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -13,7 +13,9 @@ use idds::util::bench::{section, Bencher};
 fn main() {
     let mut b = Bencher::from_env();
 
-    for scen in [Scenario::Smoke, Scenario::Reprocessing, Scenario::SmallFiles, Scenario::BigFiles] {
+    let scenarios =
+        [Scenario::Smoke, Scenario::Reprocessing, Scenario::SmallFiles, Scenario::BigFiles];
+    for scen in scenarios {
         section(&format!("FIG4/FIG5 scenario {scen:?}"));
         let spec = scen.campaign();
         let (coarse, fine) = compare_modes(&scen.config(Granularity::Fine), &spec);
@@ -24,9 +26,17 @@ fn main() {
         let rows: Vec<(&str, f64, f64)> = vec![
             ("total job attempts", coarse.total_attempts as f64, fine.total_attempts as f64),
             ("failed attempts", coarse.failed_attempts as f64, fine.failed_attempts as f64),
-            ("peak disk GB", coarse.peak_disk_bytes as f64 / 1e9, fine.peak_disk_bytes as f64 / 1e9),
+            (
+                "peak disk GB",
+                coarse.peak_disk_bytes as f64 / 1e9,
+                fine.peak_disk_bytes as f64 / 1e9,
+            ),
             ("mean disk GB", coarse.mean_disk_bytes / 1e9, fine.mean_disk_bytes / 1e9),
-            ("time-to-first-proc s", coarse.time_to_first_processing_s, fine.time_to_first_processing_s),
+            (
+                "time-to-first-proc s",
+                coarse.time_to_first_processing_s,
+                fine.time_to_first_processing_s,
+            ),
             ("makespan s", coarse.makespan_s, fine.makespan_s),
             ("tape mounts", coarse.tape_mounts as f64, fine.tape_mounts as f64),
         ];

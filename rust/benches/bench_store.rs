@@ -90,7 +90,9 @@ fn main() {
             move || {
                 let s = Store::new(clock2.clone());
                 let ids: Vec<Id> = (0..4096)
-                    .map(|i| s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null))
+                    .map(|i| {
+                        s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null)
+                    })
                     .collect();
                 (s, ids)
             },
@@ -106,7 +108,9 @@ fn main() {
             move || {
                 let s = Store::new(clock2.clone());
                 let ids: Vec<Id> = (0..4096)
-                    .map(|i| s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null))
+                    .map(|i| {
+                        s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null)
+                    })
                     .collect();
                 (s, ids)
             },

@@ -7,21 +7,72 @@
 //! * topics with independent subscriber queues (fan-out),
 //! * at-least-once delivery: a message stays "in flight" per subscriber
 //!   until acked; unacked messages past the redelivery timeout are
-//!   redelivered (property-tested in `rust/tests`),
+//!   redelivered (pinned down in `rust/tests/broker_semantics.rs`),
 //! * bounded queues with backpressure signalling (publish returns the
 //!   queue depth so producers can throttle),
 //! * batched `publish_many`/`ack_many` so high-rate producers/consumers
-//!   (the Conductor's per-tick fan-out) take the broker mutex once per
+//!   (the Conductor's per-tick fan-out) take a topic's lock once per
 //!   batch instead of once per message.
+//!
+//! # Striping model
+//!
+//! There is no broker-wide mutex. The topic map is sharded across
+//! `STRIPES` `RwLock`ed hash maps keyed by a topic-name hash, and every
+//! topic owns its state — subscriber list plus all per-subscriber queues —
+//! behind its *own* `Mutex`. Publishers and pollers on different topics
+//! therefore never serialize on a shared lock; within one topic, fan-out
+//! and per-subscriber FIFO still happen atomically under the topic lock,
+//! which is what keeps delivery order and redelivery semantics identical
+//! to the old single-mutex broker (`bench_broker` carries the
+//! before/after). A second striped index maps subscriber id → its topic,
+//! so `poll`/`ack`/`backlog` reach the right topic lock in O(1). Flow
+//! counters are plain atomics. Lock order: shard lock (topics or subs),
+//! *then* one topic mutex — never two topic mutexes, never a shard lock
+//! acquired while a topic mutex is held.
+//!
+//! # Durability
+//!
+//! Like the store, the broker emits one [`PersistEvent`] per applied
+//! mutation — subscribe, unsubscribe, publish fan-out (recording the
+//! fan-out set at publish time), delivery/redelivery, ack — through an
+//! optional [`Persister`] hook, logged *while still holding the
+//! topic lock that applied the mutation* (the same log-after-apply rule
+//! the store follows; see DESIGN.md, "Durability model"). Checkpoints
+//! embed [`Broker::snapshot_json`] as the `broker` section of snapshot
+//! format v3, and recovery rebuilds topics, subscriptions, backlogs and
+//! in-flight sets via [`Broker::restore`] + [`Broker::apply_event`], so
+//! consumers resume exactly where the previous process died. In-flight
+//! deadlines are deliberately *not* persisted: recovery re-arms every
+//! in-flight message at `now + redelivery_timeout`, so work that was
+//! unacked at the crash redelivers one timeout after the restart.
 
-use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Mutex};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
+use anyhow::{Context, Result};
+
+use crate::persist::{PersistEvent, Persister};
 use crate::util::clock::Clock;
 use crate::util::json::Json;
 
 pub type MsgId = u64;
 pub type SubId = u64;
+
+/// Number of lock stripes for the topic map and the subscriber index
+/// (power of two, mirroring the store's table striping).
+const STRIPES: usize = 16;
+
+fn topic_stripe(topic: &str) -> usize {
+    // FNV-1a over the name; topics are few and named, ids are not
+    let mut h = crate::util::FNV1A_OFFSET;
+    crate::util::fnv1a(&mut h, topic.as_bytes());
+    (h as usize) & (STRIPES - 1)
+}
+
+fn sub_stripe(sub: SubId) -> usize {
+    (sub as usize) & (STRIPES - 1)
+}
 
 #[derive(Debug, Clone)]
 pub struct Delivery {
@@ -42,29 +93,74 @@ struct QueuedMsg {
     payload: Json,
 }
 
+#[derive(Default)]
 struct SubQueue {
     pending: VecDeque<Arc<QueuedMsg>>,
     in_flight: HashMap<MsgId, InFlight>,
-    delivered_once: std::collections::HashSet<MsgId>,
+    /// Ids delivered at least once — sets the `redelivered` flag should a
+    /// message ever re-enter `pending`. Pruned on ack (an acked id can
+    /// never come back: ids are unique and per-topic WAL order means no
+    /// event about it follows its ack), so the set is bounded by the
+    /// un-acked backlog, not by lifetime traffic.
+    delivered_once: HashSet<MsgId>,
+    /// Every id currently known to this subscriber (enqueued and not yet
+    /// acked). WAL replay of a publish whose effect the checkpoint
+    /// already captured dedupes against this (replay is insert-if-absent,
+    /// exactly like the store's row inserts). Pruned on ack like
+    /// `delivered_once`, and for the same reason.
+    seen: HashSet<MsgId>,
 }
 
+impl SubQueue {
+    fn take_pending(&mut self, id: MsgId) -> Option<Arc<QueuedMsg>> {
+        let pos = self.pending.iter().position(|m| m.id == id)?;
+        self.pending.remove(pos)
+    }
+}
+
+/// Everything one topic owns, behind that topic's own lock: the
+/// subscriber list (fan-out set) and each subscriber's queue.
 struct TopicState {
+    name: String,
     subs: Vec<SubId>,
-}
-
-struct Inner {
-    topics: HashMap<String, TopicState>,
     queues: HashMap<SubId, SubQueue>,
-    published: u64,
-    delivered: u64,
-    redelivered: u64,
-    acked: u64,
+    /// Set (under both the shard write lock and this topic's lock) when
+    /// the last subscriber left and the shell was removed from the topic
+    /// map — a racing subscribe that already holds the `Arc` must retry
+    /// against the map instead of inserting into an unmapped shell.
+    dead: bool,
 }
 
-/// The broker. Clone-shareable.
+impl TopicState {
+    fn new(name: &str) -> Self {
+        TopicState {
+            name: name.to_string(),
+            subs: Vec::new(),
+            queues: HashMap::new(),
+            dead: false,
+        }
+    }
+}
+
+type TopicArc = Arc<Mutex<TopicState>>;
+
+struct BrokerInner {
+    /// topic name → topic state, sharded by topic-name hash.
+    topics: Vec<RwLock<HashMap<String, TopicArc>>>,
+    /// subscriber id → owning topic, sharded by subscriber id.
+    subs: Vec<RwLock<HashMap<SubId, TopicArc>>>,
+    published: AtomicU64,
+    delivered: AtomicU64,
+    redelivered: AtomicU64,
+    acked: AtomicU64,
+    /// optional durability hook; attach-once, after recovery
+    persister: OnceLock<Arc<dyn Persister>>,
+}
+
+/// The broker. Clone-shareable; clones share all topic state.
 #[derive(Clone)]
 pub struct Broker {
-    inner: Arc<Mutex<Inner>>,
+    inner: Arc<BrokerInner>,
     clock: Arc<dyn Clock>,
     redelivery_timeout: f64,
     max_queue: usize,
@@ -78,17 +174,49 @@ pub struct BrokerStats {
     pub acked: u64,
 }
 
+/// Fully decoded `broker` snapshot section — phase 1 of restore. Building
+/// this validates every record without touching the broker, so a snapshot
+/// that fails to decode leaves both broker and store untouched (crash
+/// recovery relies on that to fall back to an older checkpoint cleanly).
+pub(crate) struct DecodedBroker {
+    topics: Vec<DecodedTopic>,
+    max_id: u64,
+}
+
+impl DecodedBroker {
+    /// Largest subscriber/message id in the section — recovery advances
+    /// the process-wide id counter past it even when the section is only
+    /// carried through opaquely (store-only opens), so a store-only
+    /// writer can never mint ids colliding with persisted broker ids.
+    pub(crate) fn max_id(&self) -> u64 {
+        self.max_id
+    }
+}
+
+struct DecodedTopic {
+    name: String,
+    msgs: HashMap<MsgId, Json>,
+    subs: Vec<DecodedSub>,
+}
+
+struct DecodedSub {
+    id: SubId,
+    pending: Vec<MsgId>,
+    in_flight: Vec<MsgId>,
+}
+
 impl Broker {
     pub fn new(clock: Arc<dyn Clock>) -> Self {
         Broker {
-            inner: Arc::new(Mutex::new(Inner {
-                topics: HashMap::new(),
-                queues: HashMap::new(),
-                published: 0,
-                delivered: 0,
-                redelivered: 0,
-                acked: 0,
-            })),
+            inner: Arc::new(BrokerInner {
+                topics: (0..STRIPES).map(|_| RwLock::new(HashMap::new())).collect(),
+                subs: (0..STRIPES).map(|_| RwLock::new(HashMap::new())).collect(),
+                published: AtomicU64::new(0),
+                delivered: AtomicU64::new(0),
+                redelivered: AtomicU64::new(0),
+                acked: AtomicU64::new(0),
+                persister: OnceLock::new(),
+            }),
             clock,
             redelivery_timeout: 30.0,
             max_queue: 1_000_000,
@@ -100,25 +228,111 @@ impl Broker {
         self
     }
 
+    // -- durability hook ------------------------------------------------------
+
+    /// Attach the durability hook. Attach-once, and only *after* recovery
+    /// has finished replaying into this broker (replay must not re-log).
+    /// Returns false if a persister was already attached.
+    pub fn set_persister(&self, p: Arc<dyn Persister>) -> bool {
+        self.inner.persister.set(p).is_ok()
+    }
+
+    /// Build the event only when a persister is attached — the disabled
+    /// path pays one atomic load and no clones.
+    #[inline]
+    fn log(&self, f: impl FnOnce() -> PersistEvent) {
+        if let Some(p) = self.inner.persister.get() {
+            p.log(f());
+        }
+    }
+
+    // -- topic / subscriber resolution ---------------------------------------
+
+    /// Get or create the topic's state. Read-locks the shard on the fast
+    /// path; only the first subscriber of a topic takes the write lock.
+    fn topic_entry(&self, topic: &str) -> TopicArc {
+        let shard = &self.inner.topics[topic_stripe(topic)];
+        if let Some(t) = shard.read().unwrap().get(topic) {
+            return Arc::clone(t);
+        }
+        let mut w = shard.write().unwrap();
+        Arc::clone(
+            w.entry(topic.to_string())
+                .or_insert_with(|| Arc::new(Mutex::new(TopicState::new(topic)))),
+        )
+    }
+
+    fn topic_of(&self, topic: &str) -> Option<TopicArc> {
+        self.inner.topics[topic_stripe(topic)].read().unwrap().get(topic).map(Arc::clone)
+    }
+
+    fn topic_of_sub(&self, sub: SubId) -> Option<TopicArc> {
+        self.inner.subs[sub_stripe(sub)].read().unwrap().get(&sub).map(Arc::clone)
+    }
+
+    // -- core operations ------------------------------------------------------
+
     /// Subscribe to a topic; returns the subscriber handle.
     pub fn subscribe(&self, topic: &str) -> SubId {
         let id = crate::util::next_id();
-        let mut inner = self.inner.lock().unwrap();
-        inner
-            .topics
-            .entry(topic.to_string())
-            .or_insert_with(|| TopicState { subs: Vec::new() })
-            .subs
-            .push(id);
-        inner.queues.insert(
-            id,
-            SubQueue {
-                pending: VecDeque::new(),
-                in_flight: HashMap::new(),
-                delivered_once: std::collections::HashSet::new(),
-            },
-        );
+        let topic_arc = loop {
+            let arc = self.topic_entry(topic);
+            let mut t = arc.lock().unwrap();
+            if t.dead {
+                // raced the last-subscriber GC: this shell just left the
+                // map; retry resolves (or re-creates) the mapped entry
+                drop(t);
+                continue;
+            }
+            t.subs.push(id);
+            t.queues.insert(id, SubQueue::default());
+            self.log(|| PersistEvent::BrokerSubscribe { sub: id, topic: topic.to_string() });
+            drop(t);
+            break arc;
+        };
+        self.inner.subs[sub_stripe(id)].write().unwrap().insert(id, topic_arc);
         id
+    }
+
+    /// Drop a subscription: the subscriber leaves its topic's fan-out set
+    /// and its queue (backlog included) is discarded. Idempotent — false
+    /// for an unknown or already-dropped subscriber. With durability on
+    /// this is how an abandoned consumer stops accreting queue state
+    /// across checkpoints and restarts.
+    pub fn unsubscribe(&self, sub: SubId) -> bool {
+        let Some(topic_arc) = self.topic_of_sub(sub) else { return false };
+        {
+            let mut t = topic_arc.lock().unwrap();
+            if t.queues.remove(&sub).is_none() {
+                return false; // raced another unsubscribe of the same id
+            }
+            t.subs.retain(|&s| s != sub);
+            self.log(|| PersistEvent::BrokerUnsubscribe { sub });
+        }
+        self.inner.subs[sub_stripe(sub)].write().unwrap().remove(&sub);
+        self.gc_topic_if_empty(&topic_arc);
+        true
+    }
+
+    /// Remove `topic_arc` from the topic map if its last subscriber left
+    /// — otherwise empty shells would accrete in the map (and in every
+    /// snapshot) forever under dynamic topic naming. The shell is marked
+    /// `dead` while holding both the shard write lock and the topic lock,
+    /// which is what makes the racing-subscribe retry in
+    /// [`Broker::subscribe`] sound.
+    fn gc_topic_if_empty(&self, topic_arc: &TopicArc) {
+        let name = topic_arc.lock().unwrap().name.clone();
+        let mut shard = self.inner.topics[topic_stripe(&name)].write().unwrap();
+        let Some(mapped) = shard.get(&name) else { return };
+        if !Arc::ptr_eq(mapped, topic_arc) {
+            return; // the topic was already re-created under this name
+        }
+        let mut t = topic_arc.lock().unwrap();
+        if t.subs.is_empty() {
+            t.dead = true;
+            drop(t);
+            shard.remove(&name);
+        }
     }
 
     /// Publish to a topic, fanning out to all subscribers. Returns the max
@@ -127,41 +341,71 @@ impl Broker {
         self.publish_many(topic, vec![payload])
     }
 
-    /// Publish a whole batch to a topic under **one lock acquisition** —
-    /// the Conductor's per-tick fan-out takes the broker mutex once
-    /// instead of once per message. Returns the max subscriber queue
-    /// depth after the batch (backpressure signal) — 0 if no subscribers.
+    /// Publish a whole batch to a topic under **one topic-lock
+    /// acquisition** — the Conductor's per-tick fan-out takes the lock
+    /// once instead of once per message, and publishers on *other* topics
+    /// are untouched. Returns the max subscriber queue depth after the
+    /// batch (backpressure signal) — 0 if no subscribers.
     pub fn publish_many(&self, topic: &str, payloads: Vec<Json>) -> usize {
         if payloads.is_empty() {
             return 0;
         }
-        let mut inner = self.inner.lock().unwrap();
-        inner.published += payloads.len() as u64;
+        self.inner.published.fetch_add(payloads.len() as u64, Ordering::Relaxed);
+        // topics come into being on first subscribe; a publish to a topic
+        // nobody ever subscribed to fans out to zero queues and is dropped
+        let Some(topic_arc) = self.topic_of(topic) else { return 0 };
+        let mut t = topic_arc.lock().unwrap();
+        if t.subs.is_empty() {
+            return 0;
+        }
+        let topic_name = t.name.clone();
         let msgs: Vec<Arc<QueuedMsg>> = payloads
             .into_iter()
             .map(|payload| {
                 Arc::new(QueuedMsg {
                     id: crate::util::next_id(),
-                    topic: topic.to_string(),
+                    topic: topic_name.clone(),
                     payload,
                 })
             })
             .collect();
-        let subs = inner
-            .topics
-            .get(topic)
-            .map(|t| t.subs.clone())
-            .unwrap_or_default();
+        let TopicState { subs, queues, .. } = &mut *t;
         let mut depth = 0;
-        for sub in subs {
-            if let Some(q) = inner.queues.get_mut(&sub) {
-                for msg in &msgs {
+        let mut targets: Vec<SubId> = Vec::with_capacity(subs.len());
+        let mut enqueued = vec![false; msgs.len()];
+        for sub in subs.iter() {
+            if let Some(q) = queues.get_mut(sub) {
+                targets.push(*sub);
+                for (i, msg) in msgs.iter().enumerate() {
                     if q.pending.len() < self.max_queue {
+                        q.seen.insert(msg.id);
                         q.pending.push_back(Arc::clone(msg));
+                        enqueued[i] = true;
                     }
                 }
                 depth = depth.max(q.pending.len());
             }
+        }
+        // Applied effects only: a message every queue dropped at the
+        // max_queue bound never made it into broker state, so it must not
+        // be resurrected by replay. (A message dropped by only *some*
+        // full queues can still replay into them if the checkpoint caught
+        // those queues drained — a spurious extra delivery, inside the
+        // at-least-once contract consumers already tolerate.) The event
+        // records the fan-out set too: a snapshot taken after the cut may
+        // already hold a later-joining subscriber, and replay must not
+        // hand it messages published before it subscribed.
+        if enqueued.iter().any(|&e| e) {
+            self.log(|| PersistEvent::BrokerPublish {
+                topic: topic_name,
+                subs: targets,
+                msgs: msgs
+                    .iter()
+                    .zip(&enqueued)
+                    .filter(|(_, &e)| e)
+                    .map(|(m, _)| (m.id, m.payload.clone()))
+                    .collect(),
+            });
         }
         depth
     }
@@ -170,12 +414,13 @@ impl Broker {
     /// in-flight messages first.
     pub fn poll(&self, sub: SubId, max: usize) -> Vec<Delivery> {
         let now = self.clock.now();
-        let mut inner = self.inner.lock().unwrap();
         let timeout = self.redelivery_timeout;
+        let Some(topic_arc) = self.topic_of_sub(sub) else { return Vec::new() };
+        let mut t = topic_arc.lock().unwrap();
         let mut out = Vec::new();
-        let mut redelivered_n = 0;
-        let mut delivered_n = 0;
-        if let Some(q) = inner.queues.get_mut(&sub) {
+        let mut redelivered_n = 0u64;
+        let mut delivered_n = 0u64;
+        if let Some(q) = t.queues.get_mut(&sub) {
             // expire in-flight
             let expired: Vec<MsgId> = q
                 .in_flight
@@ -209,17 +454,18 @@ impl Broker {
                     redelivered,
                 });
                 delivered_n += 1;
-                q.in_flight.insert(
-                    msg.id,
-                    InFlight {
-                        msg,
-                        deadline: now + timeout,
-                    },
-                );
+                q.in_flight.insert(msg.id, InFlight { msg, deadline: now + timeout });
+            }
+            if !out.is_empty() {
+                self.log(|| PersistEvent::BrokerDeliver {
+                    sub,
+                    ids: out.iter().map(|d| d.id).collect(),
+                });
             }
         }
-        inner.delivered += delivered_n;
-        inner.redelivered += redelivered_n;
+        drop(t);
+        self.inner.delivered.fetch_add(delivered_n, Ordering::Relaxed);
+        self.inner.redelivered.fetch_add(redelivered_n, Ordering::Relaxed);
         out
     }
 
@@ -228,43 +474,352 @@ impl Broker {
         self.ack_many(sub, &[msg]) == 1
     }
 
-    /// Acknowledge a batch of deliveries under one lock acquisition.
+    /// Acknowledge a batch of deliveries under one topic-lock acquisition.
     /// Returns how many were actually in flight (already-acked or unknown
     /// ids are skipped, matching [`Broker::ack`]).
     pub fn ack_many(&self, sub: SubId, msgs: &[MsgId]) -> usize {
         if msgs.is_empty() {
             return 0;
         }
-        let mut inner = self.inner.lock().unwrap();
-        let mut n = 0u64;
-        if let Some(q) = inner.queues.get_mut(&sub) {
+        let Some(topic_arc) = self.topic_of_sub(sub) else { return 0 };
+        let mut t = topic_arc.lock().unwrap();
+        let mut removed: Vec<MsgId> = Vec::new();
+        if let Some(q) = t.queues.get_mut(&sub) {
             for msg in msgs {
                 if q.in_flight.remove(msg).is_some() {
-                    n += 1;
+                    // acked ids never come back — prune the history sets
+                    // so they stay bounded by the un-acked backlog
+                    q.delivered_once.remove(msg);
+                    q.seen.remove(msg);
+                    removed.push(*msg);
                 }
             }
+            if !removed.is_empty() {
+                // applied effects only: the event carries the ids that
+                // actually left the in-flight set
+                self.log(|| PersistEvent::BrokerAck { sub, ids: removed.clone() });
+            }
         }
-        inner.acked += n;
-        n as usize
+        drop(t);
+        let n = removed.len();
+        self.inner.acked.fetch_add(n as u64, Ordering::Relaxed);
+        n
     }
 
     /// Outstanding (pending + in-flight) for a subscriber.
     pub fn backlog(&self, sub: SubId) -> usize {
-        let inner = self.inner.lock().unwrap();
-        inner
-            .queues
-            .get(&sub)
-            .map(|q| q.pending.len() + q.in_flight.len())
-            .unwrap_or(0)
+        let Some(topic_arc) = self.topic_of_sub(sub) else { return 0 };
+        let t = topic_arc.lock().unwrap();
+        t.queues.get(&sub).map(|q| q.pending.len() + q.in_flight.len()).unwrap_or(0)
     }
 
     pub fn stats(&self) -> BrokerStats {
-        let inner = self.inner.lock().unwrap();
         BrokerStats {
-            published: inner.published,
-            delivered: inner.delivered,
-            redelivered: inner.redelivered,
-            acked: inner.acked,
+            published: self.inner.published.load(Ordering::Relaxed),
+            delivered: self.inner.delivered.load(Ordering::Relaxed),
+            redelivered: self.inner.redelivered.load(Ordering::Relaxed),
+            acked: self.inner.acked.load(Ordering::Relaxed),
+        }
+    }
+
+    // -- observability --------------------------------------------------------
+
+    /// Live broker state for `/api/health`: topology counts, total
+    /// backlog, and the flow counters.
+    pub fn health_json(&self) -> Json {
+        let mut topics = 0u64;
+        let mut subscriptions = 0u64;
+        let mut pending = 0u64;
+        let mut in_flight = 0u64;
+        for (_, arc) in self.all_topics() {
+            let t = arc.lock().unwrap();
+            topics += 1;
+            subscriptions += t.subs.len() as u64;
+            for q in t.queues.values() {
+                pending += q.pending.len() as u64;
+                in_flight += q.in_flight.len() as u64;
+            }
+        }
+        let st = self.stats();
+        Json::obj()
+            .set("topics", topics)
+            .set("subscriptions", subscriptions)
+            .set("pending", pending)
+            .set("in_flight", in_flight)
+            .set("published", st.published)
+            .set("delivered", st.delivered)
+            .set("redelivered", st.redelivered)
+            .set("acked", st.acked)
+    }
+
+    // -- snapshot / restore / replay -----------------------------------------
+
+    fn all_topics(&self) -> Vec<(String, TopicArc)> {
+        let mut out: Vec<(String, TopicArc)> = Vec::new();
+        for shard in &self.inner.topics {
+            for (name, arc) in shard.read().unwrap().iter() {
+                out.push((name.clone(), Arc::clone(arc)));
+            }
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Serialize topics, subscriptions, backlogs and in-flight sets — the
+    /// `broker` section of snapshot format v3. Deterministic: topics
+    /// sorted by name, subscribers by id, messages by id, pending in queue
+    /// order. Deadlines are not captured (recovery re-arms them), so this
+    /// is also the canonical form recovery tests compare against.
+    pub fn snapshot_json(&self) -> Json {
+        let mut topics = Vec::new();
+        for (_, arc) in self.all_topics() {
+            let t = arc.lock().unwrap();
+            if t.queues.is_empty() {
+                // an empty shell — a subscribe caught between topic-map
+                // insert and queue creation, or a just-GC'd arc — holds
+                // nothing recoverable; snapshotting it would resurrect a
+                // topic nothing subscribes to
+                continue;
+            }
+            // union of every message still referenced by some queue
+            let mut msgs: BTreeMap<MsgId, Json> = BTreeMap::new();
+            let mut subs: Vec<&SubId> = t.queues.keys().collect();
+            subs.sort_unstable();
+            let mut sub_rows = Vec::new();
+            for &sub in subs {
+                let q = &t.queues[&sub];
+                for m in &q.pending {
+                    msgs.entry(m.id).or_insert_with(|| m.payload.clone());
+                }
+                for f in q.in_flight.values() {
+                    msgs.entry(f.msg.id).or_insert_with(|| f.msg.payload.clone());
+                }
+                let in_flight: BTreeSet<MsgId> = q.in_flight.keys().copied().collect();
+                sub_rows.push(
+                    Json::obj()
+                        .set("id", sub)
+                        .set(
+                            "pending",
+                            Json::Arr(q.pending.iter().map(|m| Json::from(m.id)).collect()),
+                        )
+                        .set(
+                            "in_flight",
+                            Json::Arr(in_flight.into_iter().map(Json::from).collect()),
+                        ),
+                );
+            }
+            topics.push(
+                Json::obj()
+                    .set("name", t.name.as_str())
+                    .set(
+                        "messages",
+                        Json::Arr(
+                            msgs.into_iter()
+                                .map(|(id, payload)| {
+                                    Json::obj().set("id", id).set("payload", payload)
+                                })
+                                .collect(),
+                        ),
+                    )
+                    .set("subs", Json::Arr(sub_rows)),
+            );
+        }
+        Json::obj().set("topics", Json::Arr(topics))
+    }
+
+    /// Phase 1 of restore: decode and validate a `broker` section without
+    /// touching any broker. Crash recovery decodes *before* restoring the
+    /// store so a half-bad checkpoint is set aside with nothing mutated.
+    pub(crate) fn decode_snapshot(j: &Json) -> Result<DecodedBroker> {
+        let mut d = DecodedBroker { topics: Vec::new(), max_id: 0 };
+        for tj in j.get("topics").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+            let name = tj.get("name").and_then(|v| v.as_str()).context("topic.name")?.to_string();
+            let mut msgs = HashMap::new();
+            for mj in tj.get("messages").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+                let id = mj.get("id").and_then(|v| v.as_u64()).context("message.id")?;
+                d.max_id = d.max_id.max(id);
+                msgs.insert(id, mj.get("payload").cloned().unwrap_or(Json::Null));
+            }
+            let mut subs = Vec::new();
+            for sj in tj.get("subs").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+                let id = sj.get("id").and_then(|v| v.as_u64()).context("sub.id")?;
+                d.max_id = d.max_id.max(id);
+                let ids = |key: &str| -> Result<Vec<MsgId>> {
+                    sj.get(key)
+                        .and_then(|a| a.as_arr())
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|v| {
+                            let id = v.as_u64().with_context(|| format!("sub.{key} id"))?;
+                            anyhow::ensure!(
+                                msgs.contains_key(&id),
+                                "sub {key} references unknown message {id}"
+                            );
+                            Ok(id)
+                        })
+                        .collect()
+                };
+                subs.push(DecodedSub {
+                    id,
+                    pending: ids("pending")?,
+                    in_flight: ids("in_flight")?,
+                });
+            }
+            d.topics.push(DecodedTopic { name, msgs, subs });
+        }
+        Ok(d)
+    }
+
+    /// Phase 2 of restore: install a decoded snapshot into this (empty)
+    /// broker and advance the process-wide id counter past every restored
+    /// subscriber/message id. In-flight deadlines re-arm at
+    /// `now + redelivery_timeout`. Returns the max id seen.
+    pub(crate) fn install_decoded(&self, d: DecodedBroker) -> u64 {
+        let deadline = self.clock.now() + self.redelivery_timeout;
+        for topic in d.topics {
+            if topic.subs.is_empty() {
+                continue; // never reinstall a subscriber-less shell
+            }
+            let topic_arc = self.topic_entry(&topic.name);
+            let mut installed: Vec<SubId> = Vec::with_capacity(topic.subs.len());
+            {
+                let mut t = topic_arc.lock().unwrap();
+                let arcs: HashMap<MsgId, Arc<QueuedMsg>> = topic
+                    .msgs
+                    .into_iter()
+                    .map(|(id, payload)| {
+                        (id, Arc::new(QueuedMsg { id, topic: topic.name.clone(), payload }))
+                    })
+                    .collect();
+                for sub in topic.subs {
+                    if t.queues.contains_key(&sub.id) {
+                        continue; // insert-if-absent, like the store's rec paths
+                    }
+                    let mut q = SubQueue::default();
+                    for id in &sub.pending {
+                        q.seen.insert(*id);
+                        q.pending.push_back(Arc::clone(&arcs[id]));
+                    }
+                    for id in &sub.in_flight {
+                        q.seen.insert(*id);
+                        q.delivered_once.insert(*id);
+                        q.in_flight.insert(*id, InFlight { msg: Arc::clone(&arcs[id]), deadline });
+                    }
+                    t.subs.push(sub.id);
+                    t.queues.insert(sub.id, q);
+                    installed.push(sub.id);
+                }
+            }
+            // subscriber index after the topic lock is released (lock
+            // order: shard lock, then topic mutex — never the reverse)
+            for sub in installed {
+                self.inner.subs[sub_stripe(sub)]
+                    .write()
+                    .unwrap()
+                    .entry(sub)
+                    .or_insert_with(|| Arc::clone(&topic_arc));
+            }
+        }
+        crate::util::advance_next_id(d.max_id);
+        d.max_id
+    }
+
+    /// Restore a `broker` snapshot section (decode + install). The broker
+    /// must be freshly created and not yet shared with daemons/handlers.
+    pub fn restore(&self, j: &Json) -> Result<u64> {
+        Ok(self.install_decoded(Self::decode_snapshot(j)?))
+    }
+
+    /// Apply one replayed broker event. Replay semantics mirror the
+    /// store's: subscribes and publishes are insert-if-absent, delivers
+    /// move-or-renew, acks remove-if-present — so replaying a WAL suffix
+    /// that partially overlaps a checkpoint converges to the live state.
+    /// Unknown subscribers/ids are skipped; replay never fails. Must run
+    /// *before* a persister is attached (replay must not re-log).
+    pub fn apply_event(&self, ev: &PersistEvent) {
+        match ev {
+            PersistEvent::BrokerSubscribe { sub, topic } => {
+                let topic_arc = self.topic_entry(topic);
+                {
+                    let mut t = topic_arc.lock().unwrap();
+                    if !t.queues.contains_key(sub) {
+                        t.subs.push(*sub);
+                        t.queues.insert(*sub, SubQueue::default());
+                    }
+                }
+                self.inner.subs[sub_stripe(*sub)]
+                    .write()
+                    .unwrap()
+                    .entry(*sub)
+                    .or_insert(topic_arc);
+            }
+            PersistEvent::BrokerUnsubscribe { sub } => {
+                if let Some(topic_arc) = self.topic_of_sub(*sub) {
+                    {
+                        let mut t = topic_arc.lock().unwrap();
+                        t.queues.remove(sub);
+                        t.subs.retain(|s| s != sub);
+                    }
+                    self.inner.subs[sub_stripe(*sub)].write().unwrap().remove(sub);
+                    self.gc_topic_if_empty(&topic_arc);
+                }
+            }
+            PersistEvent::BrokerPublish { topic, subs, msgs } => {
+                let Some(topic_arc) = self.topic_of(topic) else { return };
+                let mut t = topic_arc.lock().unwrap();
+                let arcs: Vec<Arc<QueuedMsg>> = msgs
+                    .iter()
+                    .map(|(id, payload)| {
+                        Arc::new(QueuedMsg {
+                            id: *id,
+                            topic: topic.clone(),
+                            payload: payload.clone(),
+                        })
+                    })
+                    .collect();
+                // enqueue into the recorded fan-out set, not the current
+                // subscriber list: a subscriber restored from a snapshot
+                // taken after this event must not receive messages
+                // published before it joined
+                for sub in subs {
+                    if let Some(q) = t.queues.get_mut(sub) {
+                        for msg in &arcs {
+                            if q.pending.len() < self.max_queue && !q.seen.contains(&msg.id) {
+                                q.seen.insert(msg.id);
+                                q.pending.push_back(Arc::clone(msg));
+                            }
+                        }
+                    }
+                }
+            }
+            PersistEvent::BrokerDeliver { sub, ids } => {
+                let deadline = self.clock.now() + self.redelivery_timeout;
+                let Some(topic_arc) = self.topic_of_sub(*sub) else { return };
+                let mut t = topic_arc.lock().unwrap();
+                let Some(q) = t.queues.get_mut(sub) else { return };
+                for id in ids {
+                    // in-flight first: renewals are O(1) there, and an id
+                    // can never be in both sets — probing pending first
+                    // would pay a linear deque scan per redelivery event
+                    if let Some(f) = q.in_flight.get_mut(id) {
+                        f.deadline = deadline;
+                    } else if let Some(msg) = q.take_pending(*id) {
+                        q.delivered_once.insert(*id);
+                        q.in_flight.insert(*id, InFlight { msg, deadline });
+                    }
+                }
+            }
+            PersistEvent::BrokerAck { sub, ids } => {
+                let Some(topic_arc) = self.topic_of_sub(*sub) else { return };
+                let mut t = topic_arc.lock().unwrap();
+                let Some(q) = t.queues.get_mut(sub) else { return };
+                for id in ids {
+                    q.in_flight.remove(id);
+                    q.delivered_once.remove(id);
+                    q.seen.remove(id);
+                }
+            }
+            _ => {}
         }
     }
 }
@@ -398,5 +953,166 @@ mod tests {
         assert_eq!(st.delivered, 5);
         assert_eq!(st.acked, 5);
         assert_eq!(st.redelivered, 0);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_backlogs_and_inflight() {
+        let clock = SimClock::new();
+        let b = Broker::new(clock.clone()).with_redelivery_timeout(10.0);
+        let s1 = b.subscribe("alpha");
+        let s2 = b.subscribe("alpha");
+        let s3 = b.subscribe("beta");
+        b.publish_many("alpha", (0..6).map(|i| Json::Num(i as f64)).collect());
+        b.publish("beta", Json::Str("b".into()));
+        // s1: 2 in flight (unacked), 1 acked, 3 pending; s2: untouched
+        let ds = b.poll(s1, 3);
+        assert!(b.ack(s1, ds[2].id));
+        let snap = b.snapshot_json();
+
+        let clock2 = SimClock::new();
+        let b2 = Broker::new(clock2.clone()).with_redelivery_timeout(10.0);
+        b2.restore(&snap).unwrap();
+        assert_eq!(b2.backlog(s1), 5, "2 in flight + 3 pending");
+        assert_eq!(b2.backlog(s2), 6);
+        assert_eq!(b2.backlog(s3), 1);
+        // the canonical form is stable across the round trip
+        assert_eq!(snap, b2.snapshot_json());
+        // in-flight stays invisible until the re-armed timeout passes,
+        // then comes back flagged as redelivered
+        assert_eq!(b2.poll(s1, 2).len(), 2, "pending still polls (fresh)");
+        clock2.advance_by(11.0);
+        let redelivered: Vec<_> =
+            b2.poll(s1, 10).into_iter().filter(|d| d.redelivered).collect();
+        assert_eq!(redelivered.len(), 4, "2 restored in-flight + 2 just-delivered");
+        assert_eq!(
+            redelivered.iter().filter(|d| ds.iter().any(|o| o.id == d.id)).count(),
+            2,
+            "the pre-snapshot in-flight ids survive verbatim"
+        );
+    }
+
+    #[test]
+    fn restore_rejects_dangling_message_refs() {
+        let bad = Json::obj().set(
+            "topics",
+            Json::Arr(vec![Json::obj()
+                .set("name", "t")
+                .set("messages", Json::Arr(vec![]))
+                .set(
+                    "subs",
+                    Json::Arr(vec![Json::obj()
+                        .set("id", 7u64)
+                        .set("pending", Json::Arr(vec![Json::from(99u64)]))
+                        .set("in_flight", Json::Arr(vec![]))]),
+                )]),
+        );
+        let b = Broker::new(Arc::new(WallClock::new()));
+        assert!(b.restore(&bad).is_err());
+        // nothing was installed
+        assert_eq!(b.health_json().get("topics").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn replay_converges_over_a_snapshot_overlap() {
+        // live sequence: subscribe, publish 3, deliver 2, ack 1
+        let sub = 1_000_001u64;
+        let msgs: Vec<(u64, Json)> =
+            (0..3).map(|i| (2_000_000 + i, Json::Num(i as f64))).collect();
+        let subscribe = PersistEvent::BrokerSubscribe { sub, topic: "t".into() };
+        let publish = PersistEvent::BrokerPublish {
+            topic: "t".into(),
+            subs: vec![sub],
+            msgs: msgs.clone(),
+        };
+        let deliver = PersistEvent::BrokerDeliver { sub, ids: vec![msgs[0].0, msgs[1].0] };
+        let ack = PersistEvent::BrokerAck { sub, ids: vec![msgs[0].0] };
+
+        let live = Broker::new(Arc::new(WallClock::new()));
+        for ev in [&subscribe, &publish, &deliver, &ack] {
+            live.apply_event(ev);
+        }
+        // a recovered broker restores the snapshot, then replays a suffix
+        // that overlaps it — each replayed event must be idempotent
+        let recovered = Broker::new(Arc::new(WallClock::new()));
+        recovered.restore(&live.snapshot_json()).unwrap();
+        for ev in [&subscribe, &publish, &deliver, &ack] {
+            recovered.apply_event(ev);
+        }
+        assert_eq!(live.snapshot_json(), recovered.snapshot_json());
+        assert_eq!(recovered.backlog(sub), 2, "1 in flight + 1 pending");
+    }
+
+    #[test]
+    fn unsubscribe_drops_queue_and_fanout() {
+        let b = Broker::new(Arc::new(WallClock::new()));
+        let s1 = b.subscribe("t");
+        let s2 = b.subscribe("t");
+        b.publish("t", Json::Num(1.0));
+        assert!(b.unsubscribe(s1));
+        assert!(!b.unsubscribe(s1), "idempotent");
+        assert_eq!(b.backlog(s1), 0, "backlog discarded");
+        assert!(b.poll(s1, 10).is_empty(), "unknown subscriber polls empty");
+        b.publish("t", Json::Num(2.0));
+        assert_eq!(b.poll(s2, 10).len(), 2, "remaining subscriber unaffected");
+        let h = b.health_json();
+        assert_eq!(h.get("subscriptions").unwrap().as_u64(), Some(1));
+        // the dropped queue leaves the snapshot too
+        let snap = b.snapshot_json();
+        let b2 = Broker::new(Arc::new(WallClock::new()));
+        b2.restore(&snap).unwrap();
+        assert_eq!(b2.health_json().get("subscriptions").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn last_unsubscribe_garbage_collects_the_topic() {
+        let b = Broker::new(Arc::new(WallClock::new()));
+        let solo = b.subscribe("ephemeral");
+        b.publish("ephemeral", Json::Num(1.0));
+        assert_eq!(b.health_json().get("topics").unwrap().as_u64(), Some(1));
+        assert!(b.unsubscribe(solo));
+        let h = b.health_json();
+        assert_eq!(h.get("topics").unwrap().as_u64(), Some(0), "empty shell must be GC'd");
+        assert_eq!(h.get("subscriptions").unwrap().as_u64(), Some(0));
+        // GC'd topics leave the snapshot too
+        assert_eq!(b.snapshot_json().get("topics").unwrap().as_arr().unwrap().len(), 0);
+        // the name is immediately reusable
+        let again = b.subscribe("ephemeral");
+        b.publish("ephemeral", Json::Num(2.0));
+        assert_eq!(b.poll(again, 10).len(), 1);
+        assert!(b.poll(again, 10).is_empty(), "no stale messages from the old shell");
+    }
+
+    #[test]
+    fn replayed_publish_skips_subscribers_that_joined_later() {
+        // the snapshot may already contain a subscriber that joined AFTER
+        // a suffix publish; the event's recorded fan-out set must win
+        let early = 3_000_001u64;
+        let late = 3_000_002u64;
+        let b = Broker::new(Arc::new(WallClock::new()));
+        b.apply_event(&PersistEvent::BrokerSubscribe { sub: early, topic: "t".into() });
+        b.apply_event(&PersistEvent::BrokerSubscribe { sub: late, topic: "t".into() });
+        b.apply_event(&PersistEvent::BrokerPublish {
+            topic: "t".into(),
+            subs: vec![early], // late was not subscribed at publish time
+            msgs: vec![(3_000_010, Json::Num(1.0))],
+        });
+        assert_eq!(b.backlog(early), 1);
+        assert_eq!(b.backlog(late), 0, "fan-out is at publish time, even on replay");
+    }
+
+    #[test]
+    fn health_json_reports_topology_and_backlog() {
+        let b = Broker::new(Arc::new(WallClock::new()));
+        let s = b.subscribe("t");
+        b.subscribe("t");
+        b.subscribe("u");
+        b.publish_many("t", (0..4).map(|i| Json::Num(i as f64)).collect());
+        b.poll(s, 1);
+        let h = b.health_json();
+        assert_eq!(h.get("topics").unwrap().as_u64(), Some(2));
+        assert_eq!(h.get("subscriptions").unwrap().as_u64(), Some(3));
+        assert_eq!(h.get("pending").unwrap().as_u64(), Some(7), "3 + 4 still queued");
+        assert_eq!(h.get("in_flight").unwrap().as_u64(), Some(1));
+        assert_eq!(h.get("published").unwrap().as_u64(), Some(4));
     }
 }

@@ -232,10 +232,10 @@ impl Executor for RuntimeExecutor {
                 });
             }
             other => {
-                slots
-                    .lock()
-                    .unwrap()
-                    .insert(handle, SlotState::Failed(format!("RuntimeExecutor cannot run kind '{other}'")));
+                slots.lock().unwrap().insert(
+                    handle,
+                    SlotState::Failed(format!("RuntimeExecutor cannot run kind '{other}'")),
+                );
             }
         }
         Ok(handle)

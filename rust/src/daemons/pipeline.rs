@@ -15,6 +15,14 @@
 //!                 (claim commits first; see `Store::claim_messages` docs).
 //! ```
 //!
+//! With durability on (`idds serve --data-dir`), the broker the Conductor
+//! publishes into is itself durable: subscriptions, per-subscriber
+//! backlogs and in-flight deliveries are rebuilt by recovery
+//! (`Persist::open_with_broker`), so consumers resume exactly where the
+//! previous process died instead of silently losing queued work — no
+//! daemon-side resume logic is needed beyond publishing into the
+//! recovered broker.
+//!
 //! All daemon state beyond the store lives in [`Pipeline`] (the per-request
 //! workflow engines and the marshalled set) so the daemons stay restartable
 //! and the store remains the single source of truth for status.
@@ -592,8 +600,8 @@ impl Daemon for Transformer {
                 &format!("{}.input", tf.name),
                 CollectionKind::Input,
             );
-            if let Some(files) = tf.work.get_path(&["params", "input_files"]).and_then(|f| f.as_arr())
-            {
+            let files = tf.work.get_path(&["params", "input_files"]).and_then(|f| f.as_arr());
+            if let Some(files) = files {
                 let items: Vec<(String, u64)> = files
                     .iter()
                     .filter_map(|f| {
@@ -775,7 +783,8 @@ impl Carrier {
                         let failed = !result.get("error").map(Json::is_null).unwrap_or(true);
                         // raw transforms (tests, foreign writers) may carry a
                         // non-object work payload; Json::set would panic on it
-                        let base = if item.work.as_obj().is_some() { item.work } else { Json::obj() };
+                        let base =
+                            if item.work.as_obj().is_some() { item.work } else { Json::obj() };
                         let work = base.set("result", result.clone());
                         let _ = store.update_transform_work(item.tf_id, work);
                         if failed {

@@ -154,16 +154,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let metrics = Registry::default();
 
     // durability: recover checkpoint + WAL suffix before anything else
-    // touches the store, then leave the WAL attached for every write
+    // touches the store or the broker, then leave the WAL attached for
+    // every write — broker subscriptions/backlogs/in-flight included, so
+    // consumers resume where the previous process died
     let data_dir = cfg.str("persist.data_dir").unwrap_or_default();
     let persist = if data_dir.is_empty() {
         None
     } else {
         let opts = PersistOptions::from_config(&cfg)?;
-        let (persist, report) = Persist::open(std::path::Path::new(&data_dir), opts, &store, metrics.clone())
-            .with_context(|| format!("opening data dir {data_dir}"))?;
+        let (persist, report) = Persist::open_with_broker(
+            std::path::Path::new(&data_dir),
+            opts,
+            &store,
+            Some(&broker),
+            metrics.clone(),
+        )
+        .with_context(|| format!("opening data dir {data_dir}"))?;
         println!(
-            "recovered from {data_dir}: checkpoint {}, {} WAL events replayed ({} skipped, {} torn bytes truncated)",
+            "recovered from {data_dir}: checkpoint {}, {} WAL events replayed \
+             ({} skipped, {} torn bytes truncated)",
             report
                 .checkpoint_seq
                 .map(|s| format!("#{s}"))
@@ -173,6 +182,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             report.torn_bytes,
         );
         println!("recovered counts: {}", store.counts());
+        let bh = broker.health_json();
+        println!(
+            "recovered broker: {} topics, {} subscriptions, {} pending, {} in flight",
+            bh.get("topics").and_then(|v| v.as_u64()).unwrap_or(0),
+            bh.get("subscriptions").and_then(|v| v.as_u64()).unwrap_or(0),
+            bh.get("pending").and_then(|v| v.as_u64()).unwrap_or(0),
+            bh.get("in_flight").and_then(|v| v.as_u64()).unwrap_or(0),
+        );
         Some(persist)
     };
 

@@ -125,6 +125,38 @@ pub enum PersistEvent {
         ids: Vec<Id>,
         to: MessageStatus,
     },
+    /// Broker events (routed to [`crate::broker::Broker::apply_event`] on
+    /// recovery, not to the store): a new subscriber queue on a topic.
+    BrokerSubscribe {
+        sub: Id,
+        topic: String,
+    },
+    /// A subscriber queue dropped from its topic (consumer went away).
+    BrokerUnsubscribe {
+        sub: Id,
+    },
+    /// A publish fan-out: the `(msg id, payload)` pairs enqueued, plus
+    /// `subs` — the fan-out set *at publish time*. Replay must enqueue
+    /// into exactly those subscribers: a snapshot taken after the cut may
+    /// already contain a later-joining subscriber, and fan-out-at-publish
+    /// time means it must not receive this batch.
+    BrokerPublish {
+        topic: String,
+        subs: Vec<Id>,
+        msgs: Vec<(Id, Json)>,
+    },
+    /// Message ids a poll moved to (or renewed in) a subscriber's
+    /// in-flight set. Replay re-arms deadlines from the recovering
+    /// broker's clock, so the redelivery timer restarts at recovery.
+    BrokerDeliver {
+        sub: Id,
+        ids: Vec<Id>,
+    },
+    /// Message ids actually removed from a subscriber's in-flight set.
+    BrokerAck {
+        sub: Id,
+        ids: Vec<Id>,
+    },
 }
 
 fn ids_json(ids: &[Id]) -> Json {
@@ -173,7 +205,25 @@ impl PersistEvent {
             PersistEvent::ContentDdmFile { .. } => "content_ddm_file",
             PersistEvent::AddMessage { .. } => "add_message",
             PersistEvent::MessageStatus { .. } => "message_status",
+            PersistEvent::BrokerSubscribe { .. } => "broker_subscribe",
+            PersistEvent::BrokerUnsubscribe { .. } => "broker_unsubscribe",
+            PersistEvent::BrokerPublish { .. } => "broker_publish",
+            PersistEvent::BrokerDeliver { .. } => "broker_deliver",
+            PersistEvent::BrokerAck { .. } => "broker_ack",
         }
+    }
+
+    /// Whether recovery routes this event to the broker instead of the
+    /// store (see `Persist::open_with_broker`).
+    pub fn is_broker(&self) -> bool {
+        matches!(
+            self,
+            PersistEvent::BrokerSubscribe { .. }
+                | PersistEvent::BrokerUnsubscribe { .. }
+                | PersistEvent::BrokerPublish { .. }
+                | PersistEvent::BrokerDeliver { .. }
+                | PersistEvent::BrokerAck { .. }
+        )
     }
 
     /// Largest id this event introduces or references — recovery advances
@@ -202,6 +252,17 @@ impl PersistEvent {
             | PersistEvent::ProcessingStatus { ids, .. }
             | PersistEvent::ContentStatus { ids, .. }
             | PersistEvent::MessageStatus { ids, .. } => ids.iter().copied().max().unwrap_or(0),
+            PersistEvent::BrokerSubscribe { sub, .. }
+            | PersistEvent::BrokerUnsubscribe { sub } => *sub,
+            PersistEvent::BrokerPublish { subs, msgs, .. } => msgs
+                .iter()
+                .map(|(id, _)| *id)
+                .chain(subs.iter().copied())
+                .max()
+                .unwrap_or(0),
+            PersistEvent::BrokerDeliver { sub, ids } | PersistEvent::BrokerAck { sub, ids } => {
+                ids.iter().copied().max().unwrap_or(0).max(*sub)
+            }
         }
     }
 
@@ -289,6 +350,27 @@ impl PersistEvent {
             }
             PersistEvent::MessageStatus { ids, to } => {
                 base.set("ids", ids_json(ids)).set("to", to.as_str())
+            }
+            PersistEvent::BrokerSubscribe { sub, topic } => {
+                base.set("sub", *sub).set("topic", topic.as_str())
+            }
+            PersistEvent::BrokerUnsubscribe { sub } => base.set("sub", *sub),
+            PersistEvent::BrokerPublish { topic, subs, msgs } => base
+                .set("topic", topic.as_str())
+                .set("subs", Json::Arr(subs.iter().map(|&s| Json::from(s)).collect()))
+                .set(
+                    "msgs",
+                    Json::Arr(
+                        msgs.iter()
+                            .map(|(id, payload)| Json::Arr(vec![Json::from(*id), payload.clone()]))
+                            .collect(),
+                    ),
+                ),
+            PersistEvent::BrokerDeliver { sub, ids } => {
+                base.set("sub", *sub).set("ids", ids_json(ids))
+            }
+            PersistEvent::BrokerAck { sub, ids } => {
+                base.set("sub", *sub).set("ids", ids_json(ids))
             }
         }
     }
@@ -396,6 +478,40 @@ impl PersistEvent {
                 ids: parse_ids(j)?,
                 to: MessageStatus::parse(req_str(j, "to")?).context("bad message status")?,
             },
+            "broker_subscribe" => PersistEvent::BrokerSubscribe {
+                sub: req_u64(j, "sub")?,
+                topic: req_str(j, "topic")?.to_string(),
+            },
+            "broker_unsubscribe" => PersistEvent::BrokerUnsubscribe { sub: req_u64(j, "sub")? },
+            "broker_publish" => PersistEvent::BrokerPublish {
+                topic: req_str(j, "topic")?.to_string(),
+                subs: j
+                    .get("subs")
+                    .and_then(|a| a.as_arr())
+                    .context("missing subs")?
+                    .iter()
+                    .map(|v| v.as_u64().context("non-integer sub"))
+                    .collect::<Result<Vec<_>>>()?,
+                msgs: j
+                    .get("msgs")
+                    .and_then(|a| a.as_arr())
+                    .context("missing msgs")?
+                    .iter()
+                    .map(|it| {
+                        let pair = it.as_arr().context("msg not a pair")?;
+                        anyhow::ensure!(pair.len() == 2, "msg not a pair");
+                        Ok((pair[0].as_u64().context("msg id")?, pair[1].clone()))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            },
+            "broker_deliver" => PersistEvent::BrokerDeliver {
+                sub: req_u64(j, "sub")?,
+                ids: parse_ids(j)?,
+            },
+            "broker_ack" => PersistEvent::BrokerAck {
+                sub: req_u64(j, "sub")?,
+                ids: parse_ids(j)?,
+            },
             other => anyhow::bail!("unknown persist op '{other}'"),
         })
     }
@@ -489,6 +605,31 @@ mod tests {
             at: 11.0,
         });
         roundtrip(PersistEvent::MessageStatus { ids: vec![13, 14], to: MessageStatus::Delivered });
+        roundtrip(PersistEvent::BrokerSubscribe { sub: 21, topic: "idds.out".into() });
+        roundtrip(PersistEvent::BrokerUnsubscribe { sub: 21 });
+        roundtrip(PersistEvent::BrokerPublish {
+            topic: "idds.out".into(),
+            subs: vec![21],
+            msgs: vec![(22, Json::obj().set("f", "x")), (23, Json::Null)],
+        });
+        roundtrip(PersistEvent::BrokerDeliver { sub: 21, ids: vec![22, 23] });
+        roundtrip(PersistEvent::BrokerAck { sub: 21, ids: vec![22] });
+    }
+
+    #[test]
+    fn broker_events_are_flagged_and_cover_ids() {
+        let pubs = PersistEvent::BrokerPublish {
+            topic: "t".into(),
+            subs: vec![40],
+            msgs: vec![(5, Json::Null), (9, Json::Null)],
+        };
+        assert!(pubs.is_broker());
+        assert_eq!(pubs.max_id(), 40, "fan-out sub ids count too");
+        let deliver = PersistEvent::BrokerDeliver { sub: 40, ids: vec![5, 9] };
+        assert!(deliver.is_broker());
+        assert_eq!(deliver.max_id(), 40);
+        assert!(PersistEvent::BrokerUnsubscribe { sub: 7 }.is_broker());
+        assert!(!PersistEvent::CloseCollection { id: 3 }.is_broker());
     }
 
     #[test]

@@ -11,15 +11,18 @@
 //!   wal/wal-00000001.log         length+CRC-framed event segments
 //! ```
 //!
-//! * **Write path** — the store logs one [`PersistEvent`] per applied
-//!   mutation through the [`Persister`] hook; the WAL group-commits them
-//!   (one write+fsync per flusher batch, mirroring the store's batched
-//!   transition philosophy).
+//! * **Write path** — the store *and the broker* log one [`PersistEvent`]
+//!   per applied mutation through the [`Persister`] hook; the WAL
+//!   group-commits them (one write+fsync per flusher batch, mirroring the
+//!   store's batched transition philosophy).
 //! * **Checkpoint** — flush the WAL, note the next LSN (`start_lsn`),
-//!   write `Store::snapshot()` durably, then rotate + delete segments
-//!   whose events all predate `start_lsn`.
+//!   write `Store::snapshot()` durably — extended to snapshot format v3
+//!   with a `broker` section when a broker is attached (see
+//!   [`Persist::open_with_broker`]) — then rotate + delete segments whose
+//!   events all predate `start_lsn`.
 //! * **Recovery** — load the newest readable checkpoint, replay the WAL
-//!   suffix (`lsn >= start_lsn`) through [`crate::store::Store::apply_event`],
+//!   suffix (`lsn >= start_lsn`) through [`crate::store::Store::apply_event`]
+//!   (broker events route to [`crate::broker::Broker::apply_event`]),
 //!   truncate any torn tail at the first bad frame, and advance the
 //!   process-wide id counter past everything seen.
 //!
@@ -40,6 +43,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::broker::Broker;
 use crate::config::Config;
 use crate::metrics::Registry;
 use crate::store::{Id, Store};
@@ -140,6 +144,16 @@ impl CheckpointReport {
 struct PersistInner {
     dir: PathBuf,
     opts: PersistOptions,
+    /// Attached broker (see [`Persist::open_with_broker`]); checkpoints
+    /// include its state as the snapshot-v3 `broker` section.
+    broker: Option<Broker>,
+    /// On a *store-only* open of a data dir whose checkpoint carried a
+    /// broker section: the section, held opaquely so this writer's own
+    /// checkpoints carry it through instead of silently destroying
+    /// consumer state it never loaded. (Broker WAL-suffix events are
+    /// still lost to such a checkpoint's prune — acks among them re-show
+    /// as redeliveries, inside the at-least-once contract.)
+    carried_broker: Option<Json>,
     wal: Wal,
     flusher: Mutex<Option<std::thread::JoinHandle<()>>>,
     checkpoint_mutex: Mutex<()>,
@@ -195,11 +209,29 @@ impl Persist {
     /// WAL suffix into `store`, truncate any torn tail, advance the id
     /// counter, arm the group-commit writer on a fresh segment, and attach
     /// this WAL to the store as its persister. The store must be freshly
-    /// created and not yet shared with daemons or handlers.
+    /// created and not yet shared with daemons or handlers. Broker events
+    /// found in the log are dropped (no broker to put them in) — `idds
+    /// serve` uses [`Persist::open_with_broker`] instead.
     pub fn open(
         dir: &Path,
         opts: PersistOptions,
         store: &Store,
+        metrics: Registry,
+    ) -> Result<(Persist, RecoveryReport)> {
+        Self::open_with_broker(dir, opts, store, None, metrics)
+    }
+
+    /// Like [`Persist::open`], but also recovers broker state — topics,
+    /// subscriptions, per-subscriber backlogs and in-flight sets — from
+    /// the checkpoint's snapshot-v3 `broker` section plus the WAL suffix,
+    /// and attaches the WAL to the broker so subscribe/publish/deliver/ack
+    /// are durable from here on. The broker must be freshly created (same
+    /// contract as the store).
+    pub fn open_with_broker(
+        dir: &Path,
+        opts: PersistOptions,
+        store: &Store,
+        broker: Option<&Broker>,
         metrics: Registry,
     ) -> Result<(Persist, RecoveryReport)> {
         std::fs::create_dir_all(dir)
@@ -283,6 +315,7 @@ impl Persist {
         let checkpoint_seqs = list_by(dir, checkpoint_seq_of)?;
         let mut retained: Vec<(u64, u64)> = Vec::new(); // (seq, start_lsn)
         let mut loaded: Option<(u64, u64)> = None;
+        let mut carried_broker: Option<Json> = None;
         for &seq in checkpoint_seqs.iter().rev() {
             let path = checkpoint_path(dir, seq);
             let validated = std::fs::read_to_string(&path)
@@ -293,11 +326,43 @@ impl Persist {
                         .get("start_lsn")
                         .and_then(|v| v.as_u64())
                         .context("missing start_lsn")?;
-                    anyhow::ensure!(j.get("snapshot").is_some(), "missing snapshot");
+                    let snap = j.get("snapshot").context("missing snapshot")?;
                     if loaded.is_none() {
-                        let max_id = store
-                            .restore(j.get("snapshot").unwrap())
-                            .context("snapshot does not restore")?;
+                        // two-phase across both subsystems: the broker
+                        // section is decoded before the store restore
+                        // mutates anything, so a checkpoint that fails
+                        // either stage is set aside with both left clean
+                        let decoded_broker = match (broker, snap.get("broker")) {
+                            (Some(_), Some(bj)) => Some(
+                                Broker::decode_snapshot(bj)
+                                    .context("broker section does not decode")?,
+                            ),
+                            // store-only open: hold the section opaquely
+                            // so our own checkpoints carry it through
+                            // (see `carried_broker`) — decoded anyway so
+                            // its sub/msg ids still advance the id
+                            // counter; an undecodable section is dropped
+                            // rather than propagated
+                            (None, Some(bj)) => match Broker::decode_snapshot(bj) {
+                                Ok(d) => {
+                                    carried_broker = Some(bj.clone());
+                                    Some(d)
+                                }
+                                Err(e) => {
+                                    log::warn!("dropping undecodable broker section: {e}");
+                                    None
+                                }
+                            },
+                            _ => None,
+                        };
+                        let mut max_id =
+                            store.restore(snap).context("snapshot does not restore")?;
+                        if let Some(d) = decoded_broker {
+                            max_id = max_id.max(match broker {
+                                Some(b) => b.install_decoded(d),
+                                None => d.max_id(),
+                            });
+                        }
                         return Ok((Some(max_id), start_lsn));
                     }
                     // fallback checkpoints get the same full decode the
@@ -305,8 +370,17 @@ impl Persist {
                     // load must not be retained (the WAL is pruned to the
                     // oldest *retained* cut, so retaining a dud would
                     // leave no usable recovery point on a double fault)
-                    Store::validate_snapshot(j.get("snapshot").unwrap())
+                    Store::validate_snapshot(snap)
                         .context("fallback snapshot does not decode")?;
+                    // broker-less opens ignore the broker section on the
+                    // primary path, so a corrupt one must not disqualify
+                    // an otherwise-loadable fallback either
+                    if broker.is_some() {
+                        if let Some(bj) = snap.get("broker") {
+                            Broker::decode_snapshot(bj)
+                                .context("fallback broker section does not decode")?;
+                        }
+                    }
                     Ok((None, start_lsn))
                 });
             match validated {
@@ -353,6 +427,15 @@ impl Persist {
                 report.max_id = report.max_id.max(ev.max_id());
                 if *lsn < start_lsn {
                     report.events_skipped += 1;
+                } else if ev.is_broker() {
+                    match broker {
+                        Some(b) => {
+                            b.apply_event(ev);
+                            report.events_replayed += 1;
+                        }
+                        // store-only open: nowhere to put broker state
+                        None => report.events_skipped += 1,
+                    }
                 } else {
                     store.apply_event(ev);
                     report.events_replayed += 1;
@@ -417,6 +500,8 @@ impl Persist {
             inner: Arc::new(PersistInner {
                 dir: dir.to_path_buf(),
                 opts,
+                broker: broker.cloned(),
+                carried_broker,
                 wal,
                 flusher: Mutex::new(Some(flusher)),
                 checkpoint_mutex: Mutex::new(()),
@@ -427,6 +512,9 @@ impl Persist {
             }),
         };
         store.set_persister(persist.persister());
+        if let Some(b) = broker {
+            b.set_persister(persist.persister());
+        }
         Ok((persist, report))
     }
 
@@ -456,6 +544,18 @@ impl Persist {
         inner.wal.flush();
         let start_lsn = inner.wal.next_lsn();
         let snap = store.snapshot();
+        // with a broker attached, the checkpoint carries snapshot format
+        // v3: v2's six tables plus the broker section (topics,
+        // subscriptions, backlogs, in-flight). The broker read happens
+        // after the cut under the same topic locks the broker logs under,
+        // so the fuzzy-cut argument covers it (DESIGN.md, "Broker").
+        let snap = match (&inner.broker, &inner.carried_broker) {
+            (Some(b), _) => snap.set("version", 3u64).set("broker", b.snapshot_json()),
+            // store-only writer on a broker-bearing dir: pass the
+            // recovered section through unchanged
+            (None, Some(bj)) => snap.set("version", 3u64).set("broker", bj.clone()),
+            (None, None) => snap,
+        };
         let seq = inner.checkpoint_seq.fetch_add(1, Ordering::Relaxed) + 1;
         let body = Json::obj()
             .set("version", 1u64)
@@ -747,6 +847,63 @@ mod tests {
         // only the torn frame's events are lost, not whole segments
         assert!(report.events_replayed > 110, "lost more than the torn frame");
         p2.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn broker_state_round_trips_through_checkpoint_and_wal() {
+        let dir = tmp_dir("broker");
+        let s = store();
+        let clock = crate::util::clock::SimClock::new();
+        let b = Broker::new(clock.clone()).with_redelivery_timeout(10.0);
+        let (p, _) =
+            Persist::open_with_broker(&dir, opts(), &s, Some(&b), Registry::default()).unwrap();
+        let sub = b.subscribe("idds.out");
+        b.publish_many("idds.out", (0..5).map(|i| Json::from(i as u64)).collect());
+        let ds = b.poll(sub, 2); // 2 in flight
+        p.checkpoint(&s).unwrap();
+        // the WAL suffix past the checkpoint cut
+        b.publish("idds.out", Json::from(99u64));
+        assert!(b.ack(sub, ds[0].id));
+        p.shutdown();
+
+        let s2 = store();
+        let clock2 = crate::util::clock::SimClock::new();
+        let b2 = Broker::new(clock2).with_redelivery_timeout(10.0);
+        let (p2, report) =
+            Persist::open_with_broker(&dir, opts(), &s2, Some(&b2), Registry::default()).unwrap();
+        assert!(report.checkpoint_seq.is_some());
+        assert_eq!(b.snapshot_json(), b2.snapshot_json(), "broker state must survive");
+        assert_eq!(b2.backlog(sub), 5, "4 pending + 1 unacked in-flight");
+        p2.shutdown();
+
+        // a store-only open of the same dir must still work: the v3
+        // snapshot's broker section is held opaquely and broker WAL
+        // events are skipped
+        let s3 = store();
+        let (p3, r3) = Persist::open(&dir, opts(), &s3, Registry::default()).unwrap();
+        assert!(r3.checkpoint_seq.is_some());
+        // ... and a checkpoint it writes must carry the broker section
+        // through, not destroy it
+        p3.checkpoint(&s3).unwrap();
+        p3.shutdown();
+
+        let s4 = store();
+        let clock4 = crate::util::clock::SimClock::new();
+        let b4 = Broker::new(clock4).with_redelivery_timeout(10.0);
+        let (p4, _) =
+            Persist::open_with_broker(&dir, opts(), &s4, Some(&b4), Registry::default()).unwrap();
+        // the carried section is the state at the ORIGINAL checkpoint cut
+        // (3 pending + 2 in-flight); the suffix publish/ack predate the
+        // store-only checkpoint's cut, so they do not replay on top —
+        // the ack re-shows as a redelivery, per at-least-once
+        assert_eq!(b4.backlog(sub), 5, "broker state must survive a store-only checkpoint");
+        assert_eq!(
+            b4.health_json().get("subscriptions").unwrap().as_u64(),
+            Some(1),
+            "the subscription itself must survive"
+        );
+        p4.shutdown();
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -156,7 +156,9 @@ pub fn scan_segment(path: &Path) -> Result<SegmentScan> {
                 break ScanEnd::Torn { valid_len: off as u64, reason: "payload not utf-8".into() }
             }
         };
-        let ev = match parse(text).map_err(anyhow::Error::from).and_then(|j| PersistEvent::from_json(&j)) {
+        let decoded =
+            parse(text).map_err(anyhow::Error::from).and_then(|j| PersistEvent::from_json(&j));
+        let ev = match decoded {
             Ok(ev) => ev,
             Err(e) => {
                 break ScanEnd::Torn {

@@ -118,6 +118,11 @@ impl Client {
         j.get("sub").and_then(|v| v.as_u64()).context("missing sub")
     }
 
+    pub fn unsubscribe(&self, sub: u64) -> Result<bool> {
+        let j = self.expect_ok("DELETE", &format!("/api/subscriptions/{sub}"), None)?;
+        j.get("unsubscribed").and_then(|v| v.as_bool()).context("unsubscribed")
+    }
+
     pub fn poll_messages(&self, sub: u64, max: usize) -> Result<Vec<MessageDelivery>> {
         let j = self.expect_ok("GET", &format!("/api/messages?sub={sub}&max={max}"), None)?;
         let msgs = j.get("messages").and_then(|m| m.as_arr()).context("messages")?;

@@ -5,7 +5,8 @@
 //!
 //! Routes (all JSON):
 //! * `GET  /api/health`                     — liveness: uptime, store
-//!   counts, per-table generations, persist/WAL lag when durability is on
+//!   counts, per-table generations, broker topology/backlog, persist/WAL
+//!   lag when durability is on
 //! * `GET  /api/metrics`                    — metrics snapshot
 //! * `POST /api/requests`                   — submit a serialized Workflow
 //! * `GET  /api/requests/<id>`              — request record
@@ -14,6 +15,9 @@
 //!   collections, per-status content counts)
 //! * `GET  /api/requests?status=New`        — ids by status
 //! * `POST /api/subscriptions`              — subscribe to a message topic
+//! * `DELETE /api/subscriptions/<id>`       — drop a subscription (and its
+//!   queued backlog; with durability on this is how an abandoned consumer
+//!   stops accreting state across restarts)
 //! * `GET  /api/messages?sub=<id>&max=<n>`  — poll deliveries
 //! * `POST /api/messages/ack`               — ack a delivery
 //! * `POST /api/admin/checkpoint`           — force a durable checkpoint
@@ -117,7 +121,11 @@ pub fn route(state: &ServerState, req: Request) -> Response {
                     .set("processings", state.store.processings_generation())
                     .set("contents", state.store.contents_generation())
                     .set("messages", state.store.messages_generation()),
-            );
+            )
+            // topology + backlog (which survive restarts when durability
+            // is on — see README, "Durability operations") plus the flow
+            // counters, which are process-lifetime and reset at boot
+            .set("broker", state.broker.health_json());
         if let Some(p) = &state.persist {
             body = body.set("persist", p.stats());
         }
@@ -202,6 +210,17 @@ pub fn route(state: &ServerState, req: Request) -> Response {
             let sub = state.broker.subscribe(topic);
             ok_json(Json::obj().set("sub", sub))
         }
+
+        ("DELETE", ["api", "subscriptions", id]) => match id.parse::<u64>() {
+            Ok(id) => {
+                let dropped = state.broker.unsubscribe(id);
+                if dropped {
+                    state.metrics.counter("rest.unsubscribed").inc();
+                }
+                ok_json(Json::obj().set("unsubscribed", dropped))
+            }
+            Err(_) => err_json(400, "bad id"),
+        },
 
         ("GET", ["api", "messages"]) => {
             let Some(sub) = req.query_param("sub").and_then(|s| s.parse().ok()) else {
@@ -342,8 +361,28 @@ mod tests {
         let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
         assert!(j.get("uptime_s").and_then(|v| v.as_f64()).is_some());
         assert!(j.get_path(&["generations", "requests"]).is_some());
+        // broker topology/backlog is always reported
+        assert_eq!(j.get_path(&["broker", "topics"]).and_then(|v| v.as_u64()), Some(0));
+        assert!(j.get_path(&["broker", "in_flight"]).is_some());
         // no persistence configured → no persist section
         assert!(j.get("persist").is_none());
+    }
+
+    #[test]
+    fn health_broker_section_tracks_backlog() {
+        let s = state();
+        let sub = s.broker.subscribe("idds.out");
+        s.broker.publish("idds.out", Json::Num(1.0));
+        s.broker.publish("idds.out", Json::Num(2.0));
+        s.broker.poll(sub, 1);
+        let mut r = authed_req("GET", "/api/health", "");
+        r.headers.clear();
+        let resp = route(&s, r);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get_path(&["broker", "topics"]).and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(j.get_path(&["broker", "subscriptions"]).and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(j.get_path(&["broker", "pending"]).and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(j.get_path(&["broker", "in_flight"]).and_then(|v| v.as_u64()), Some(1));
     }
 
     #[test]
@@ -473,6 +512,37 @@ mod tests {
         );
         let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
         assert_eq!(j.get("acked").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn unsubscribe_over_rest() {
+        let s = state();
+        let resp = route(
+            &s,
+            authed_req("POST", "/api/subscriptions", r#"{"topic": "idds.out"}"#),
+        );
+        let sub = parse(std::str::from_utf8(&resp.body).unwrap())
+            .unwrap()
+            .get("sub")
+            .unwrap()
+            .as_u64()
+            .unwrap();
+        s.broker.publish("idds.out", Json::Num(1.0));
+        let resp = route(&s, authed_req("DELETE", &format!("/api/subscriptions/{sub}"), ""));
+        assert_eq!(resp.status, 200);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("unsubscribed").unwrap().as_bool(), Some(true));
+        // idempotent; bad ids rejected
+        let resp = route(&s, authed_req("DELETE", &format!("/api/subscriptions/{sub}"), ""));
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("unsubscribed").unwrap().as_bool(), Some(false));
+        assert_eq!(route(&s, authed_req("DELETE", "/api/subscriptions/abc", "")).status, 400);
+        // the queue is gone
+        let mut r = authed_req("GET", "/api/messages", "");
+        r.query = vec![("sub".into(), sub.to_string()), ("max".into(), "10".into())];
+        let resp = route(&s, r);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(j.get("messages").unwrap().as_arr().unwrap().is_empty());
     }
 
     #[test]

@@ -488,7 +488,10 @@ impl Store {
     /// Build the event only when a persister is attached — the disabled
     /// path pays one atomic load and no clones.
     #[inline]
-    fn make_ev(&self, f: impl FnOnce() -> PersistEvent) -> Option<(Arc<dyn Persister>, PersistEvent)> {
+    fn make_ev(
+        &self,
+        f: impl FnOnce() -> PersistEvent,
+    ) -> Option<(Arc<dyn Persister>, PersistEvent)> {
         self.persister().map(|p| (Arc::clone(p), f()))
     }
 

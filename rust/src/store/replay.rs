@@ -149,6 +149,14 @@ impl Store {
                     self.force_message_status(*id, *to);
                 }
             }
+            // broker events are routed to `Broker::apply_event` by
+            // recovery (`Persist::open_with_broker`); a store-only replay
+            // has nowhere to put them and drops them here
+            PersistEvent::BrokerSubscribe { .. }
+            | PersistEvent::BrokerUnsubscribe { .. }
+            | PersistEvent::BrokerPublish { .. }
+            | PersistEvent::BrokerDeliver { .. }
+            | PersistEvent::BrokerAck { .. } => {}
         }
     }
 

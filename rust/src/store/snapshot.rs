@@ -19,6 +19,14 @@
 //! `Engine::state_json` in `crate::workflow`) so in-flight workflows
 //! resume after recovery; older snapshots without it still load.
 //!
+//! Format version 3 adds a top-level `broker` section (topics,
+//! subscriptions, backlogs, in-flight sets — see
+//! [`crate::broker::Broker::snapshot_json`]). It is composed by
+//! `Persist::checkpoint` when a broker is attached; this module's store
+//! tables are identical to v2, so the store decoder accepts v3 and simply
+//! leaves the `broker` key to the broker's own restore path. Version 2
+//! snapshots (no broker section) still load everywhere.
+//!
 //! Snapshot reads walk the sorted status indexes, so output order is
 //! deterministic without any sorting here. Restore goes through the
 //! insert-if-absent rec paths, which rebuild the striped status indexes
@@ -52,7 +60,7 @@ struct DecodedSnapshot {
 fn decode_snapshot(snap: &Json, now: f64) -> Result<DecodedSnapshot> {
     let version = snap.get("version").and_then(|v| v.as_u64()).unwrap_or(0);
     anyhow::ensure!(
-        version == 1 || version == 2,
+        (1..=3).contains(&version),
         "unsupported snapshot version {version}"
     );
     let mut d = DecodedSnapshot::default();
@@ -362,7 +370,8 @@ mod tests {
 
     fn populated() -> Store {
         let s = Store::new(Arc::new(WallClock::new()));
-        let rid = s.add_request("camp", "alice", RequestKind::DataCarousel, Json::obj().set("w", 1u64));
+        let wf = Json::obj().set("w", 1u64);
+        let rid = s.add_request("camp", "alice", RequestKind::DataCarousel, wf);
         s.update_request_status(rid, RequestStatus::Transforming).unwrap();
         let tid = s.add_transform(rid, "work#0", Json::obj().set("kind", "Noop"));
         s.update_transform_status(tid, TransformStatus::Activated).unwrap();

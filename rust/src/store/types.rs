@@ -121,7 +121,8 @@ impl TransformStatus {
         match (from, to) {
             (New, Activated) | (New, Cancelled) | (New, Failed) => true,
             (Activated, Running) | (Activated, Cancelled) | (Activated, Failed) => true,
-            (Running, Finished) | (Running, SubFinished) | (Running, Failed) | (Running, Cancelled) => true,
+            (Running, Finished) | (Running, SubFinished) => true,
+            (Running, Failed) | (Running, Cancelled) => true,
             _ => false,
         }
     }
@@ -150,7 +151,8 @@ impl ProcessingStatus {
         match (from, to) {
             (New, Submitting) | (New, Cancelled) => true,
             (Submitting, Submitted) | (Submitting, Failed) | (Submitting, Cancelled) => true,
-            (Submitted, Running) | (Submitted, Finished) | (Submitted, Failed) | (Submitted, Cancelled) => true,
+            (Submitted, Running) | (Submitted, Finished) => true,
+            (Submitted, Failed) | (Submitted, Cancelled) => true,
             (Running, Finished) | (Running, Failed) | (Running, Cancelled) => true,
             _ => false,
         }

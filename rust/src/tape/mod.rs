@@ -79,7 +79,12 @@ pub struct TapeSystem {
 impl TapeSystem {
     /// Build a library with `drives` drives, the given mount/seek
     /// latencies, and per-drive read bandwidth.
-    pub fn new(drives: usize, mount_latency_s: f64, seek_latency_s: f64, bandwidth_mbps: f64) -> Self {
+    pub fn new(
+        drives: usize,
+        mount_latency_s: f64,
+        seek_latency_s: f64,
+        bandwidth_mbps: f64,
+    ) -> Self {
         assert!(drives > 0);
         TapeSystem {
             files: HashMap::new(),

@@ -27,6 +27,19 @@ pub mod bench;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+/// FNV-1a 64-bit offset basis — seed for [`fnv1a`].
+pub const FNV1A_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into an FNV-1a 64-bit hash state. The crate's one cheap
+/// structural hash: workflow shape/definition hashing and broker topic
+/// striping all share this implementation.
+pub fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+}
+
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
 /// Monotonically increasing id generator (process-wide, lock-free).

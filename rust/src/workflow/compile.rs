@@ -20,7 +20,10 @@
 //! [`structural_hash`], so a campaign that submits the same workflow shape
 //! a million times compiles it once and every request's engine state
 //! shrinks to instance counters referencing the shared graph (see
-//! [`super::Engine`]).
+//! [`super::Engine`]). On the JSON route ([`WorkflowRegistry::intern_json`],
+//! the REST submit path and Clerk intake), a [`definition_hash`] over the
+//! canonical JSON value is checked first, so a registry hit never even
+//! parses the definition — steady-state intake is allocation-free.
 //!
 //! The structural hash deliberately covers the workflow's *shape* only —
 //! template names, kinds, instance caps, entries, edges, predicate
@@ -40,6 +43,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use anyhow::Result;
 
 use crate::util::json::Json;
+use crate::util::{fnv1a, FNV1A_OFFSET};
 
 use super::condition::Predicate;
 use super::template::WorkTemplate;
@@ -175,11 +179,49 @@ impl CompiledWorkflow {
     }
 }
 
-fn fnv1a(h: &mut u64, bytes: &[u8]) {
-    for &b in bytes {
-        *h ^= b as u64;
-        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+fn json_fnv(j: &Json, h: &mut u64) {
+    match j {
+        Json::Null => fnv1a(h, b"n"),
+        Json::Bool(b) => fnv1a(h, if *b { b"t" } else { b"f" }),
+        Json::Num(n) => {
+            fnv1a(h, b"#");
+            fnv1a(h, &n.to_bits().to_le_bytes());
+        }
+        Json::Str(s) => {
+            fnv1a(h, b"\"");
+            fnv1a(h, s.as_bytes());
+            fnv1a(h, b"\"");
+        }
+        Json::Arr(a) => {
+            fnv1a(h, b"[");
+            for v in a {
+                json_fnv(v, h);
+                fnv1a(h, b",");
+            }
+            fnv1a(h, b"]");
+        }
+        Json::Obj(m) => {
+            fnv1a(h, b"{");
+            for (k, v) in m {
+                fnv1a(h, k.as_bytes());
+                fnv1a(h, b":");
+                json_fnv(v, h);
+                fnv1a(h, b",");
+            }
+            fnv1a(h, b"}");
+        }
     }
+}
+
+/// FNV-1a hash of a JSON value's canonical form (object keys are ordered,
+/// so structurally equal values hash equal), computed by walking the value
+/// — no serialization, no allocation. This keys the registry's
+/// definition-text cache: a re-submitted known definition is recognized
+/// *before* `Workflow::from_json` runs (see [`WorkflowRegistry::intern_json`]).
+pub fn definition_hash(j: &Json) -> u64 {
+    let mut h: u64 = FNV1A_OFFSET;
+    json_fnv(j, &mut h);
+    h
 }
 
 fn predicate_shape(p: &Predicate, out: &mut String) {
@@ -254,7 +296,7 @@ pub fn structural_hash(wf: &Workflow) -> u64 {
             text.push_str(key);
         }
     }
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut h: u64 = FNV1A_OFFSET;
     fnv1a(&mut h, text.as_bytes());
     h
 }
@@ -266,6 +308,14 @@ struct RegistryInner {
     /// next intern.
     order: VecDeque<(u64, Arc<CompiledWorkflow>)>,
     len: usize,
+    /// [`definition_hash`] → (definition, compilation): the steady-state
+    /// intake fast path. A registry hit resolved here never runs
+    /// `Workflow::from_json`, so re-submits of a known workflow are
+    /// allocation-free (one hash walk + one structural equality check).
+    /// Bounded separately with the same capacity; a hash collision with a
+    /// *different* definition simply falls back to the parse path.
+    by_json: HashMap<u64, (Json, Arc<CompiledWorkflow>)>,
+    json_order: VecDeque<u64>,
 }
 
 /// Process-wide intern table of compiled workflows, keyed by
@@ -277,6 +327,9 @@ pub struct WorkflowRegistry {
     inner: Mutex<RegistryInner>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// `Workflow::from_json` runs — the cost the definition-hash fast path
+    /// exists to avoid on registry hits.
+    parses: AtomicU64,
     capacity: usize,
 }
 
@@ -289,9 +342,12 @@ impl WorkflowRegistry {
                 by_hash: HashMap::new(),
                 order: VecDeque::new(),
                 len: 0,
+                by_json: HashMap::new(),
+                json_order: VecDeque::new(),
             }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            parses: AtomicU64::new(0),
             capacity: capacity.max(1),
         }
     }
@@ -342,11 +398,39 @@ impl WorkflowRegistry {
         Ok((compiled, false))
     }
 
-    /// Parse a serialized workflow and intern it — the form the REST
-    /// submit path and the Clerk use (requests carry definition JSON).
+    /// Resolve a serialized workflow — the form the REST submit path and
+    /// the Clerk use (requests carry definition JSON). Steady state is a
+    /// *definition-hash* hit: the JSON value is hashed canonically and
+    /// checked against previously interned definitions **before parsing**,
+    /// so a campaign re-submitting one known shape never pays
+    /// `Workflow::from_json` again (regression-pinned by
+    /// `intern_json_hit_skips_reparse`; `parse_count` observes it).
     pub fn intern_json(&self, j: &Json) -> Result<(Arc<CompiledWorkflow>, bool)> {
+        let jh = definition_hash(j);
+        {
+            let inner = self.inner.lock().unwrap();
+            if let Some((cached, compiled)) = inner.by_json.get(&jh) {
+                if cached == j {
+                    let found = Arc::clone(compiled);
+                    drop(inner);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((found, true));
+                }
+            }
+        }
+        self.parses.fetch_add(1, Ordering::Relaxed);
         let wf = Workflow::from_json(j)?;
-        self.intern(&wf)
+        let resolved = self.intern(&wf)?;
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.by_json.contains_key(&jh) {
+            inner.by_json.insert(jh, (j.clone(), Arc::clone(&resolved.0)));
+            inner.json_order.push_back(jh);
+            while inner.json_order.len() > self.capacity {
+                let Some(old) = inner.json_order.pop_front() else { break };
+                inner.by_json.remove(&old);
+            }
+        }
+        Ok(resolved)
     }
 
     fn lookup(&self, hash: u64, wf: &Workflow) -> Option<Arc<CompiledWorkflow>> {
@@ -376,6 +460,12 @@ impl WorkflowRegistry {
     /// Lifetime intern calls that had to compile.
     pub fn miss_count(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime `intern_json` calls that actually ran
+    /// `Workflow::from_json` — stays flat across registry hits.
+    pub fn parse_count(&self) -> u64 {
+        self.parses.load(Ordering::Relaxed)
     }
 }
 
@@ -494,6 +584,49 @@ mod tests {
             .add_template(WorkTemplate::new("a").max_instances(8))
             .entry("a");
         assert_ne!(structural_hash(&bigger_cap), structural_hash(&small_cap));
+    }
+
+    #[test]
+    fn intern_json_hit_skips_reparse() {
+        let reg = WorkflowRegistry::new(16);
+        let j = diamond().to_json();
+        let (c1, hit1) = reg.intern_json(&j).unwrap();
+        assert!(!hit1);
+        assert_eq!(reg.parse_count(), 1);
+        // same value again: a hit, and the definition is NOT re-parsed
+        let (c2, hit2) = reg.intern_json(&j).unwrap();
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&c1, &c2));
+        assert_eq!(reg.parse_count(), 1, "a registry hit must not re-parse");
+        // a structurally equal but freshly built value also skips the parse
+        let (c3, hit3) = reg.intern_json(&diamond().to_json()).unwrap();
+        assert!(hit3);
+        assert!(Arc::ptr_eq(&c1, &c3));
+        assert_eq!(reg.parse_count(), 1);
+        // a different definition pays exactly one more parse
+        let other = Workflow::new("other").add_template(WorkTemplate::new("a")).entry("a");
+        let (_, hit4) = reg.intern_json(&other.to_json()).unwrap();
+        assert!(!hit4);
+        assert_eq!(reg.parse_count(), 2);
+    }
+
+    #[test]
+    fn definition_hash_is_canonical_and_structure_sensitive() {
+        let a = diamond().to_json();
+        let b = diamond().to_json();
+        assert_eq!(definition_hash(&a), definition_hash(&b), "equal values hash equal");
+        let mut renamed = diamond();
+        renamed.name = "other".into();
+        assert_ne!(definition_hash(&a), definition_hash(&renamed.to_json()));
+        // value-level differences matter here (unlike structural_hash):
+        // this cache keys exact definitions, parameters included
+        let low = Workflow::new("tuned")
+            .add_template(WorkTemplate::new("train").default("lr", Json::Num(0.1)))
+            .entry("train");
+        let high = Workflow::new("tuned")
+            .add_template(WorkTemplate::new("train").default("lr", Json::Num(0.9)))
+            .entry("train");
+        assert_ne!(definition_hash(&low.to_json()), definition_hash(&high.to_json()));
     }
 
     #[test]

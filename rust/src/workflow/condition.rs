@@ -297,7 +297,8 @@ mod tests {
         ]);
         assert!(p.eval(&r).unwrap());
         assert!(!Predicate::Not(Box::new(p)).eval(&r).unwrap());
-        let q = Predicate::Any(vec![Predicate::gt("m.loss", 0.5), Predicate::truthy("m.converged")]);
+        let q =
+            Predicate::Any(vec![Predicate::gt("m.loss", 0.5), Predicate::truthy("m.converged")]);
         assert!(q.eval(&r).unwrap());
     }
 

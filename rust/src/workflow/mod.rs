@@ -37,7 +37,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
-pub use compile::{structural_hash, CompiledEdge, CompiledWorkflow, WorkflowRegistry};
+pub use compile::{
+    definition_hash, structural_hash, CompiledEdge, CompiledWorkflow, WorkflowRegistry,
+};
 pub use condition::{CmpOp, Condition, Predicate};
 pub use template::{bind_params, WorkKind, WorkTemplate};
 

@@ -4,14 +4,17 @@
 //! test, the full kill-and-restart round trip over REST (populate →
 //! checkpoint → more batched writes → drop the process state → recover
 //! from the data dir → every table and status index matches, and the
-//! daemons resume), and compiled-workflow round trips (engine state
-//! recovered from checkpoint+WAL lets conditions pending at the kill fire
-//! after the restart, without duplicating already-fired fan-out).
+//! daemons resume), compiled-workflow round trips (engine state recovered
+//! from checkpoint+WAL lets conditions pending at the kill fire after the
+//! restart, without duplicating already-fired fan-out), and broker round
+//! trips (kill-and-restart preserves per-subscriber backlogs and un-acked
+//! in-flight deliveries, plus a property check that the recovered broker
+//! equals the live one over random publish/poll/ack interleavings).
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use idds::broker::Broker;
+use idds::broker::{Broker, MsgId, SubId};
 use idds::config::Config;
 use idds::daemons::executors::{ExecutorSet, NoopExecutor};
 use idds::daemons::{AgentHost, Daemon, Pipeline};
@@ -22,7 +25,7 @@ use idds::store::{
     CollectionKind, ContentStatus, Id, MessageStatus, ProcessingStatus, RequestKind,
     RequestStatus, Store, TransformStatus,
 };
-use idds::util::clock::WallClock;
+use idds::util::clock::{SimClock, WallClock};
 use idds::util::json::Json;
 use idds::util::propcheck::check;
 use idds::workflow::{Condition, WorkKind, WorkTemplate, Workflow};
@@ -328,6 +331,150 @@ fn recovery_is_stable_across_repeated_restarts() {
         pr.shutdown();
     }
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn broker_backlogs_and_inflight_survive_kill_and_restart() {
+    let dir = tmp_dir("bkill");
+    let s = store();
+    let clock = SimClock::new();
+    let b = Broker::new(clock.clone()).with_redelivery_timeout(30.0);
+    let (p, _) =
+        Persist::open_with_broker(&dir, opts(), &s, Some(&b), Registry::default()).unwrap();
+
+    // two consumers on the conductor topic, one on an unrelated topic,
+    // and one that unsubscribes before the kill
+    let c1 = b.subscribe("idds.work.finished");
+    let c2 = b.subscribe("idds.work.finished");
+    let other = b.subscribe("idds.other");
+    let quitter = b.subscribe("idds.work.finished");
+    b.publish_many("idds.work.finished", (0..10).map(|i| Json::Num(i as f64)).collect());
+    b.publish("idds.other", Json::Str("o".into()));
+    // c1 takes 4 in flight and acks 2 of them; c2 stays fully backlogged
+    let ds = b.poll(c1, 4);
+    assert_eq!(b.ack_many(c1, &[ds[0].id, ds[1].id]), 2);
+    p.checkpoint(&s).unwrap();
+    // post-checkpoint traffic lives only in the WAL suffix
+    assert!(b.unsubscribe(quitter));
+    b.publish_many("idds.work.finished", (10..13).map(|i| Json::Num(i as f64)).collect());
+    b.poll(c2, 1);
+    p.shutdown(); // kill
+
+    let s2 = store();
+    let clock2 = SimClock::new();
+    let b2 = Broker::new(clock2.clone()).with_redelivery_timeout(30.0);
+    let (p2, report) =
+        Persist::open_with_broker(&dir, opts(), &s2, Some(&b2), Registry::default()).unwrap();
+    assert!(report.checkpoint_seq.is_some());
+    assert!(report.events_replayed > 0, "the broker WAL suffix must replay");
+    assert_eq!(b.snapshot_json(), b2.snapshot_json(), "recovered broker differs from live");
+
+    // queued backlogs per subscriber survive the restart
+    assert_eq!(b2.backlog(c1), 11, "9 pending + 2 un-acked in-flight");
+    assert_eq!(b2.backlog(c2), 13, "12 pending + 1 in-flight");
+    assert_eq!(b2.backlog(other), 1);
+    // the suffix unsubscribe replayed: the quitter's checkpointed queue
+    // is gone, and it saw none of the suffix publishes
+    assert_eq!(b2.backlog(quitter), 0, "unsubscribe in the WAL suffix must replay");
+    assert!(b2.poll(quitter, 10).is_empty());
+
+    // pending messages flow immediately and in the original order (c2's
+    // message 0 is in flight, so 1..13 are still queued)
+    let fresh: Vec<f64> = b2.poll(c2, 100).iter().filter_map(|d| d.payload.as_f64()).collect();
+    assert_eq!(fresh, (1..13).map(|i| i as f64).collect::<Vec<_>>());
+
+    // un-acked in-flight stays invisible until the re-armed timeout
+    // passes, then redelivers flagged as redelivered
+    clock2.advance_by(31.0);
+    let ds3 = b2.poll(c1, 100);
+    assert_eq!(ds3.len(), 11);
+    let mut redelivered: Vec<MsgId> =
+        ds3.iter().filter(|d| d.redelivered).map(|d| d.id).collect();
+    redelivered.sort_unstable();
+    let mut want = vec![ds[2].id, ds[3].id];
+    want.sort_unstable();
+    assert_eq!(redelivered, want, "exactly the pre-kill un-acked in-flight redelivers");
+
+    // draining and acking everything empties the recovered queues
+    let all: Vec<MsgId> = ds3.iter().map(|d| d.id).collect();
+    assert_eq!(b2.ack_many(c1, &all), 11);
+    assert_eq!(b2.backlog(c1), 0);
+    p2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prop_broker_recovery_equals_live_after_random_interleavings() {
+    check("recover(checkpoint + wal suffix) == live broker", 10, |rng| {
+        let dir = tmp_dir("bprop");
+        let s = store();
+        let clock = SimClock::new();
+        let b = Broker::new(clock.clone()).with_redelivery_timeout(5.0);
+        let (p, _) =
+            Persist::open_with_broker(&dir, opts_nofsync(), &s, Some(&b), Registry::default())
+                .map_err(|e| format!("open failed: {e}"))?;
+        let topics = ["alpha", "beta", "gamma"];
+        let mut subs: Vec<SubId> = Vec::new();
+        let mut unacked: Vec<(SubId, MsgId)> = Vec::new();
+        let n_ops = 80 + rng.below(80);
+        let checkpoint_at = rng.below(n_ops);
+        for op_i in 0..n_ops {
+            if op_i == checkpoint_at {
+                p.checkpoint(&s).map_err(|e| format!("checkpoint failed: {e}"))?;
+            }
+            match rng.below(11) {
+                0 | 1 if subs.len() < 12 => {
+                    subs.push(b.subscribe(rng.choose(&topics)));
+                }
+                10 if subs.len() > 2 => {
+                    // rare consumer churn: dropped queues must also drop
+                    // identically on the recovered side (acks of their
+                    // old deliveries become no-ops on both)
+                    let i = rng.below(subs.len() as u64) as usize;
+                    b.unsubscribe(subs.swap_remove(i));
+                }
+                2..=4 => {
+                    let topic = *rng.choose(&topics);
+                    let n = 1 + rng.below(5);
+                    b.publish_many(
+                        topic,
+                        (0..n).map(|i| Json::Num((op_i * 100 + i) as f64)).collect(),
+                    );
+                }
+                5..=7 if !subs.is_empty() => {
+                    let sub = subs[rng.below(subs.len() as u64) as usize];
+                    for d in b.poll(sub, 1 + rng.below(6) as usize) {
+                        unacked.push((sub, d.id));
+                    }
+                }
+                8 if !unacked.is_empty() => {
+                    let k = 1 + rng.below(unacked.len().min(8) as u64) as usize;
+                    for (sub, id) in unacked.drain(..k) {
+                        b.ack(sub, id);
+                    }
+                }
+                // time passing makes later polls exercise the redelivery
+                // (deadline-renewal) event path too
+                9 => clock.advance_by(rng.below(8) as f64),
+                _ => {}
+            }
+        }
+        p.shutdown();
+
+        let s2 = store();
+        let b2 = Broker::new(SimClock::new()).with_redelivery_timeout(5.0);
+        let (p2, _) =
+            Persist::open_with_broker(&dir, opts_nofsync(), &s2, Some(&b2), Registry::default())
+                .map_err(|e| format!("recovery failed: {e}"))?;
+        if b.snapshot_json() != b2.snapshot_json() {
+            return Err(format!(
+                "broker state diverged after {n_ops} ops (checkpoint at {checkpoint_at})"
+            ));
+        }
+        p2.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
 }
 
 fn two_step() -> Workflow {

@@ -13,12 +13,14 @@ cargo test --release -q --test persist_recovery
 # rot.
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
-# Formatting check. Advisory for now: the seed tree predates rustfmt
-# enforcement and a pure-reformat commit should flip this to a hard gate;
-# until then a drift report must not mask real build/test failures (and
-# some toolchains ship without the rustfmt component).
+# Formatting gate (hard since the PR-4 tree-wide normalization pass):
+# drift fails tier-1. Fix with `cargo fmt` and commit the result. Only
+# skipped when the toolchain ships without the rustfmt component.
 if command -v rustfmt >/dev/null 2>&1; then
-    cargo fmt --check || echo "WARNING: cargo fmt --check reports drift (advisory until the tree-wide reformat lands)"
+    cargo fmt --check || {
+        echo "ERROR: cargo fmt --check reports drift; run 'cargo fmt' and commit" >&2
+        exit 1
+    }
 else
     echo "NOTE: rustfmt not installed; skipping format check"
 fi
