@@ -274,6 +274,7 @@ fn main() {
             fsync: FsyncMode::Never,
             checkpoint_keep: 2,
             flush_idle_ms: 5,
+            ..PersistOptions::default()
         };
         let (persist, _) =
             Persist::open_with_broker(&dir, opts, &store, Some(&br), Registry::default()).unwrap();

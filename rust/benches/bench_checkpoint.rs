@@ -1,0 +1,197 @@
+//! PERF-CHECKPOINT bench: full (base) vs delta checkpoint cost on a
+//! large store — bytes and latency at 0.1% / 1% / 10% churn — plus the
+//! chain-fold recovery cost (base + K deltas vs base alone).
+//!
+//!     cargo bench --bench bench_checkpoint
+//!
+//! Emits `BENCH_checkpoint.json` (override the path with
+//! `BENCH_CHECKPOINT_JSON=...`; `scripts/bench.sh` points it at the repo
+//! root). The `derived` section carries the delta-vs-base byte ratios so
+//! the "≥10× fewer bytes at ≤1% churn" acceptance bar is
+//! machine-checkable: delta checkpoint I/O must scale with dirty rows,
+//! not table size.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use idds::metrics::Registry;
+use idds::persist::{FsyncMode, Persist, PersistOptions};
+use idds::store::{CollectionKind, RequestKind, Store};
+use idds::util::bench::{fmt_ns, section, Bencher};
+use idds::util::clock::WallClock;
+use idds::util::json::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "idds-bench-ckpt-{tag}-{}-{}",
+        std::process::id(),
+        idds::util::next_id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn opts() -> PersistOptions {
+    PersistOptions {
+        segment_bytes: 256 * 1024 * 1024,
+        fsync: FsyncMode::Never, // isolate serialization+write cost from fsync
+        checkpoint_keep: 2,
+        flush_idle_ms: 5,
+        ..PersistOptions::default()
+    }
+}
+
+/// One campaign-shaped store: a request/transform/collection spine with
+/// `n` contents (the table that dominates at HL-LHC scale).
+fn populate(store: &Store, n: usize) -> Vec<u64> {
+    let rid = store.add_request("campaign", "bench", RequestKind::DataCarousel, Json::Null);
+    let tid = store.add_transform(rid, "stage", Json::Null);
+    let cid = store.add_collection(tid, "in-ds", CollectionKind::Input);
+    store.add_contents(cid, (0..n).map(|i| (format!("f{i}"), 1_000_000 + i as u64)))
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    // full-checkpoint serialization of 1M rows is heavy; keep iteration
+    // counts small and let the spread show in p50/p99
+    let mut b = Bencher::new(1, if quick { 2 } else { 5 });
+    let n_contents: usize = if quick { 50_000 } else { 1_000_000 };
+
+    let dir = tmp_dir("main");
+    let store = Store::new(Arc::new(WallClock::new()));
+    let (persist, _) = Persist::open(&dir, opts(), &store, Registry::default()).unwrap();
+    let ids = populate(&store, n_contents);
+    println!("store populated: {n_contents} contents");
+
+    section("base (full) checkpoint");
+    let mut base_bytes = 0u64;
+    let base = b.bench(&format!("base checkpoint ({n_contents} contents)"), || {
+        let r = persist.checkpoint_full(&store).unwrap();
+        base_bytes = r.bytes;
+        r.bytes
+    });
+    println!("base checkpoint bytes: {base_bytes}");
+
+    section("delta checkpoints at 0.1% / 1% / 10% churn");
+    // churn via set_content_ddm_file: always legal, marks exactly k rows
+    // dirty, and the delta must scale with k — not with n_contents
+    let mut delta_stats: Vec<(f64, u64, f64)> = Vec::new(); // (churn, bytes, mean_ns)
+    for churn in [0.001_f64, 0.01, 0.1] {
+        let k = ((n_contents as f64 * churn) as usize).max(1);
+        let mut bytes = 0u64;
+        let mut stamp = 0u64;
+        let res = b.bench_with_setup(
+            &format!("delta checkpoint @ {:.1}% churn ({k} rows)", churn * 100.0),
+            || {
+                stamp += 1;
+                for &id in &ids[..k] {
+                    store.set_content_ddm_file(id, stamp).unwrap();
+                }
+            },
+            |_| {
+                let r = persist.checkpoint_delta(&store).unwrap();
+                assert!(!r.full, "forced delta");
+                assert_eq!(r.rows, k as u64, "delta rows == churned rows");
+                bytes = r.bytes;
+                r.bytes
+            },
+        );
+        let ratio = base_bytes as f64 / bytes.max(1) as f64;
+        println!(
+            "churn {:>5.1}%: delta {bytes} bytes vs base {base_bytes} ({ratio:.1}x smaller)",
+            churn * 100.0
+        );
+        delta_stats.push((churn, bytes, res.mean_ns));
+    }
+    persist.shutdown();
+
+    section("chain-fold recovery (base + K deltas) vs base-only");
+    // a fresh dir with a deterministic chain: base, then K deltas of 1%
+    // churn each, no WAL suffix beyond the chain tail
+    let k_deltas = 8usize;
+    let chain_dir = tmp_dir("chain");
+    {
+        let s = Store::new(Arc::new(WallClock::new()));
+        let (p, _) = Persist::open(&chain_dir, opts(), &s, Registry::default()).unwrap();
+        let ids = populate(&s, n_contents);
+        p.checkpoint_full(&s).unwrap();
+        let step = (n_contents / 100).max(1);
+        for round in 0..k_deltas {
+            for &id in &ids[round * step..(round + 1) * step] {
+                s.set_content_ddm_file(id, round as u64 + 1).unwrap();
+            }
+            let r = p.checkpoint_delta(&s).unwrap();
+            assert!(!r.full);
+        }
+        p.shutdown();
+    }
+    let chain_recovery = b.bench_with_setup(
+        &format!("recovery: base + {k_deltas} deltas fold"),
+        || Store::new(Arc::new(WallClock::new())),
+        |s| {
+            let (p, report) = Persist::open(&chain_dir, opts(), s, Registry::default()).unwrap();
+            assert_eq!(report.deltas_folded, k_deltas);
+            p.shutdown();
+        },
+    );
+    std::fs::remove_dir_all(&chain_dir).ok();
+
+    let base_dir = tmp_dir("baseonly");
+    {
+        let s = Store::new(Arc::new(WallClock::new()));
+        let (p, _) = Persist::open(&base_dir, opts(), &s, Registry::default()).unwrap();
+        populate(&s, n_contents);
+        p.checkpoint_full(&s).unwrap();
+        p.shutdown();
+    }
+    let base_recovery = b.bench_with_setup(
+        "recovery: base only",
+        || Store::new(Arc::new(WallClock::new())),
+        |s| {
+            let (p, report) = Persist::open(&base_dir, opts(), s, Registry::default()).unwrap();
+            assert_eq!(report.deltas_folded, 0);
+            p.shutdown();
+        },
+    );
+    std::fs::remove_dir_all(&base_dir).ok();
+    std::fs::remove_dir_all(&dir).ok();
+
+    println!(
+        "\nchain-fold overhead: {} (base-only) -> {} (base + {k_deltas} deltas)",
+        fmt_ns(base_recovery.mean_ns),
+        fmt_ns(chain_recovery.mean_ns)
+    );
+
+    let mut derived = Json::obj()
+        .set("contents", n_contents)
+        .set("base_bytes", base_bytes)
+        .set("base_checkpoint_ms", base.mean_ns / 1e6)
+        .set("chain_deltas", k_deltas)
+        .set("chain_fold_recovery_ms", chain_recovery.mean_ns / 1e6)
+        .set("base_only_recovery_ms", base_recovery.mean_ns / 1e6);
+    for (churn, bytes, mean_ns) in &delta_stats {
+        let tag = format!("{}pct", churn * 1000.0 / 10.0);
+        derived = derived
+            .set(&format!("delta_bytes_{tag}"), *bytes)
+            .set(&format!("delta_ms_{tag}"), mean_ns / 1e6)
+            .set(
+                &format!("base_over_delta_bytes_{tag}"),
+                base_bytes as f64 / (*bytes).max(1) as f64,
+            );
+    }
+
+    let summary = Json::obj()
+        .set("bench", "bench_checkpoint")
+        .set("quick", quick)
+        .set(
+            "results",
+            Json::Arr(b.results().iter().map(|r| r.to_json()).collect()),
+        )
+        .set("derived", derived);
+    let path = std::env::var("BENCH_CHECKPOINT_JSON")
+        .unwrap_or_else(|_| "BENCH_checkpoint.json".to_string());
+    match std::fs::write(&path, summary.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

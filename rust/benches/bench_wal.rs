@@ -35,6 +35,7 @@ fn opts(fsync: FsyncMode) -> PersistOptions {
         fsync,
         checkpoint_keep: 2,
         flush_idle_ms: 5,
+        ..PersistOptions::default()
     }
 }
 
@@ -136,8 +137,10 @@ fn main() {
         for i in 0..(if quick { 2_000 } else { 50_000 }) {
             store.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null);
         }
+        // full base on purpose: the auto policy would write (empty) deltas
+        // after the first round — bench_checkpoint covers the delta path
         b.bench("checkpoint snapshot+fsync", || {
-            persist.checkpoint(&store).unwrap().bytes
+            persist.checkpoint_full(&store).unwrap().bytes
         });
         persist.shutdown();
         std::fs::remove_dir_all(&dir).ok();

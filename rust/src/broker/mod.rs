@@ -47,7 +47,7 @@
 //! unacked at the crash redelivers one timeout after the restart.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use anyhow::{Context, Result};
@@ -144,6 +144,57 @@ impl TopicState {
 
 type TopicArc = Arc<Mutex<TopicState>>;
 
+/// Canonical per-topic snapshot entry (shared by full sections and delta
+/// sections): message union sorted by id, subscribers by id, pending in
+/// queue order, in-flight sorted. `None` for a subscriber-less shell — a
+/// subscribe caught between topic-map insert and queue creation, or a
+/// just-GC'd arc — which holds nothing recoverable.
+fn topic_json(t: &TopicState) -> Option<Json> {
+    if t.queues.is_empty() {
+        return None;
+    }
+    // union of every message still referenced by some queue
+    let mut msgs: BTreeMap<MsgId, Json> = BTreeMap::new();
+    let mut subs: Vec<&SubId> = t.queues.keys().collect();
+    subs.sort_unstable();
+    let mut sub_rows = Vec::new();
+    for &sub in subs {
+        let q = &t.queues[&sub];
+        for m in &q.pending {
+            msgs.entry(m.id).or_insert_with(|| m.payload.clone());
+        }
+        for f in q.in_flight.values() {
+            msgs.entry(f.msg.id).or_insert_with(|| f.msg.payload.clone());
+        }
+        let in_flight: BTreeSet<MsgId> = q.in_flight.keys().copied().collect();
+        sub_rows.push(
+            Json::obj()
+                .set("id", sub)
+                .set(
+                    "pending",
+                    Json::Arr(q.pending.iter().map(|m| Json::from(m.id)).collect()),
+                )
+                .set(
+                    "in_flight",
+                    Json::Arr(in_flight.into_iter().map(Json::from).collect()),
+                ),
+        )
+    }
+    Some(
+        Json::obj()
+            .set("name", t.name.as_str())
+            .set(
+                "messages",
+                Json::Arr(
+                    msgs.into_iter()
+                        .map(|(id, payload)| Json::obj().set("id", id).set("payload", payload))
+                        .collect(),
+                ),
+            )
+            .set("subs", Json::Arr(sub_rows)),
+    )
+}
+
 struct BrokerInner {
     /// topic name → topic state, sharded by topic-name hash.
     topics: Vec<RwLock<HashMap<String, TopicArc>>>,
@@ -153,6 +204,17 @@ struct BrokerInner {
     delivered: AtomicU64,
     redelivered: AtomicU64,
     acked: AtomicU64,
+    /// Topic names touched since the last delta-checkpoint drain — marked
+    /// inside the topic-lock critical section, before the mutation's event
+    /// can get an LSN (same fuzzy-cut ordering rule as the store's dirty
+    /// sets). A drained name whose topic no longer exists encodes as a
+    /// removal in the delta section.
+    dirty_topics: Mutex<HashSet<String>>,
+    /// Gate for the set above: off by default (non-durable brokers accrete
+    /// nothing), flipped once by `Persist::open_with_broker` between the
+    /// checkpoint install and WAL replay — installed topics are already
+    /// durable in the loaded files; replayed events must mark.
+    dirty_enabled: AtomicBool,
     /// optional durability hook; attach-once, after recovery
     persister: OnceLock<Arc<dyn Persister>>,
 }
@@ -215,6 +277,8 @@ impl Broker {
                 delivered: AtomicU64::new(0),
                 redelivered: AtomicU64::new(0),
                 acked: AtomicU64::new(0),
+                dirty_topics: Mutex::new(HashSet::new()),
+                dirty_enabled: AtomicBool::new(false),
                 persister: OnceLock::new(),
             }),
             clock,
@@ -243,6 +307,26 @@ impl Broker {
     fn log(&self, f: impl FnOnce() -> PersistEvent) {
         if let Some(p) = self.inner.persister.get() {
             p.log(f());
+        }
+    }
+
+    /// Turn touched-topic tracking on (see `dirty_enabled`); called by
+    /// `Persist::open_with_broker` after the checkpoint install, before
+    /// WAL replay.
+    pub(crate) fn enable_dirty_tracking(&self) {
+        self.inner.dirty_enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Mark a topic touched for the next delta checkpoint. Call inside the
+    /// topic-lock critical section that applied the mutation (before its
+    /// event can receive an LSN — the fuzzy-cut ordering rule).
+    fn mark_dirty(&self, topic: &str) {
+        if !self.inner.dirty_enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut d = self.inner.dirty_topics.lock().unwrap();
+        if !d.contains(topic) {
+            d.insert(topic.to_string());
         }
     }
 
@@ -286,6 +370,7 @@ impl Broker {
             }
             t.subs.push(id);
             t.queues.insert(id, SubQueue::default());
+            self.mark_dirty(topic);
             self.log(|| PersistEvent::BrokerSubscribe { sub: id, topic: topic.to_string() });
             drop(t);
             break arc;
@@ -307,6 +392,7 @@ impl Broker {
                 return false; // raced another unsubscribe of the same id
             }
             t.subs.retain(|&s| s != sub);
+            self.mark_dirty(&t.name);
             self.log(|| PersistEvent::BrokerUnsubscribe { sub });
         }
         self.inner.subs[sub_stripe(sub)].write().unwrap().remove(&sub);
@@ -396,6 +482,7 @@ impl Broker {
         // already hold a later-joining subscriber, and replay must not
         // hand it messages published before it subscribed.
         if enqueued.iter().any(|&e| e) {
+            self.mark_dirty(&topic_name);
             self.log(|| PersistEvent::BrokerPublish {
                 topic: topic_name,
                 subs: targets,
@@ -456,12 +543,13 @@ impl Broker {
                 delivered_n += 1;
                 q.in_flight.insert(msg.id, InFlight { msg, deadline: now + timeout });
             }
-            if !out.is_empty() {
-                self.log(|| PersistEvent::BrokerDeliver {
-                    sub,
-                    ids: out.iter().map(|d| d.id).collect(),
-                });
-            }
+        }
+        if !out.is_empty() {
+            self.mark_dirty(&t.name);
+            self.log(|| PersistEvent::BrokerDeliver {
+                sub,
+                ids: out.iter().map(|d| d.id).collect(),
+            });
         }
         drop(t);
         self.inner.delivered.fetch_add(delivered_n, Ordering::Relaxed);
@@ -494,11 +582,12 @@ impl Broker {
                     removed.push(*msg);
                 }
             }
-            if !removed.is_empty() {
-                // applied effects only: the event carries the ids that
-                // actually left the in-flight set
-                self.log(|| PersistEvent::BrokerAck { sub, ids: removed.clone() });
-            }
+        }
+        if !removed.is_empty() {
+            // applied effects only: the event carries the ids that
+            // actually left the in-flight set
+            self.mark_dirty(&t.name);
+            self.log(|| PersistEvent::BrokerAck { sub, ids: removed.clone() });
         }
         drop(t);
         let n = removed.len();
@@ -566,7 +655,7 @@ impl Broker {
     }
 
     /// Serialize topics, subscriptions, backlogs and in-flight sets — the
-    /// `broker` section of snapshot format v3. Deterministic: topics
+    /// `broker` section of snapshot format v3+. Deterministic: topics
     /// sorted by name, subscribers by id, messages by id, pending in queue
     /// order. Deadlines are not captured (recovery re-arms them), so this
     /// is also the canonical form recovery tests compare against.
@@ -574,57 +663,103 @@ impl Broker {
         let mut topics = Vec::new();
         for (_, arc) in self.all_topics() {
             let t = arc.lock().unwrap();
-            if t.queues.is_empty() {
-                // an empty shell — a subscribe caught between topic-map
-                // insert and queue creation, or a just-GC'd arc — holds
-                // nothing recoverable; snapshotting it would resurrect a
-                // topic nothing subscribes to
-                continue;
+            if let Some(j) = topic_json(&t) {
+                topics.push(j);
             }
-            // union of every message still referenced by some queue
-            let mut msgs: BTreeMap<MsgId, Json> = BTreeMap::new();
-            let mut subs: Vec<&SubId> = t.queues.keys().collect();
-            subs.sort_unstable();
-            let mut sub_rows = Vec::new();
-            for &sub in subs {
-                let q = &t.queues[&sub];
-                for m in &q.pending {
-                    msgs.entry(m.id).or_insert_with(|| m.payload.clone());
-                }
-                for f in q.in_flight.values() {
-                    msgs.entry(f.msg.id).or_insert_with(|| f.msg.payload.clone());
-                }
-                let in_flight: BTreeSet<MsgId> = q.in_flight.keys().copied().collect();
-                sub_rows.push(
-                    Json::obj()
-                        .set("id", sub)
-                        .set(
-                            "pending",
-                            Json::Arr(q.pending.iter().map(|m| Json::from(m.id)).collect()),
-                        )
-                        .set(
-                            "in_flight",
-                            Json::Arr(in_flight.into_iter().map(Json::from).collect()),
-                        ),
-                );
-            }
-            topics.push(
-                Json::obj()
-                    .set("name", t.name.as_str())
-                    .set(
-                        "messages",
-                        Json::Arr(
-                            msgs.into_iter()
-                                .map(|(id, payload)| {
-                                    Json::obj().set("id", id).set("payload", payload)
-                                })
-                                .collect(),
-                        ),
-                    )
-                    .set("subs", Json::Arr(sub_rows)),
-            );
         }
         Json::obj().set("topics", Json::Arr(topics))
+    }
+
+    // -- delta checkpoints ----------------------------------------------------
+
+    /// Drain the touched-topic names (sorted). Called by `Persist` after
+    /// the checkpoint cut; on failure the names must go back via
+    /// [`Broker::restore_dirty_topics`].
+    pub(crate) fn take_dirty_topics(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            std::mem::take(&mut *self.inner.dirty_topics.lock().unwrap()).into_iter().collect();
+        v.sort();
+        v
+    }
+
+    pub(crate) fn restore_dirty_topics(&self, names: Vec<String>) {
+        self.inner.dirty_topics.lock().unwrap().extend(names);
+    }
+
+    /// Topics touched since the last drain — the `/api/health` delta gauge.
+    pub fn dirty_topic_count(&self) -> usize {
+        self.inner.dirty_topics.lock().unwrap().len()
+    }
+
+    /// Encode the broker delta section for a drained touched-name list:
+    /// the full current state of each touched topic that still exists
+    /// (same per-topic format as [`Broker::snapshot_json`]) plus the
+    /// `removed` names whose topics are gone (last-unsubscribe GC) or
+    /// shrank to subscriber-less shells. Folding a chain of these onto a
+    /// base section is replace-by-name + remove.
+    pub(crate) fn delta_json(&self, touched: &[String]) -> Json {
+        let mut topics = Vec::new();
+        let mut removed = Vec::new();
+        for name in touched {
+            match self.topic_of(name) {
+                Some(arc) => {
+                    let t = arc.lock().unwrap();
+                    match topic_json(&t) {
+                        Some(j) => topics.push(j),
+                        None => removed.push(Json::Str(name.clone())),
+                    }
+                }
+                None => removed.push(Json::Str(name.clone())),
+            }
+        }
+        Json::obj()
+            .set("topics", Json::Arr(topics))
+            .set("removed", Json::Arr(removed))
+    }
+
+    /// Validate a broker delta section without touching any broker;
+    /// returns the largest id referenced (id-counter advance). Fallback
+    /// and chain validation use this.
+    pub(crate) fn validate_delta(j: &Json) -> Result<u64> {
+        let d = Self::decode_snapshot(j)?;
+        for v in j.get("removed").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+            anyhow::ensure!(v.as_str().is_some(), "removed entry is not a topic name");
+        }
+        Ok(d.max_id)
+    }
+
+    /// Fold a broker delta section into a base `broker` snapshot section
+    /// (both JSON): touched topics replace their base entries wholesale,
+    /// removed names drop out, and the result stays in canonical
+    /// name-sorted order. A `Null`/absent base folds from empty. Purely
+    /// structural — recovery decodes the folded result once at the end.
+    pub(crate) fn fold_snapshot_section(base: &mut Json, delta: &Json) {
+        let mut topics: Vec<Json> = base
+            .get("topics")
+            .and_then(|a| a.as_arr())
+            .map(|a| a.to_vec())
+            .unwrap_or_default();
+        let gone: HashSet<&str> = delta
+            .get("removed")
+            .and_then(|a| a.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_str())
+            .collect();
+        let fresh = delta.get("topics").and_then(|a| a.as_arr()).unwrap_or(&[]);
+        let replaced: HashSet<&str> =
+            fresh.iter().filter_map(|t| t.get("name").and_then(|n| n.as_str())).collect();
+        topics.retain(|t| {
+            let name = t.get("name").and_then(|n| n.as_str()).unwrap_or("");
+            !gone.contains(name) && !replaced.contains(name)
+        });
+        topics.extend(fresh.iter().cloned());
+        topics.sort_by(|a, b| {
+            let an = a.get("name").and_then(|n| n.as_str()).unwrap_or("");
+            let bn = b.get("name").and_then(|n| n.as_str()).unwrap_or("");
+            an.cmp(bn)
+        });
+        *base = Json::obj().set("topics", Json::Arr(topics));
     }
 
     /// Phase 1 of restore: decode and validate a `broker` section without
@@ -746,6 +881,7 @@ impl Broker {
                         t.subs.push(*sub);
                         t.queues.insert(*sub, SubQueue::default());
                     }
+                    self.mark_dirty(topic);
                 }
                 self.inner.subs[sub_stripe(*sub)]
                     .write()
@@ -759,6 +895,7 @@ impl Broker {
                         let mut t = topic_arc.lock().unwrap();
                         t.queues.remove(sub);
                         t.subs.retain(|s| s != sub);
+                        self.mark_dirty(&t.name);
                     }
                     self.inner.subs[sub_stripe(*sub)].write().unwrap().remove(sub);
                     self.gc_topic_if_empty(&topic_arc);
@@ -767,6 +904,7 @@ impl Broker {
             PersistEvent::BrokerPublish { topic, subs, msgs } => {
                 let Some(topic_arc) = self.topic_of(topic) else { return };
                 let mut t = topic_arc.lock().unwrap();
+                self.mark_dirty(&t.name);
                 let arcs: Vec<Arc<QueuedMsg>> = msgs
                     .iter()
                     .map(|(id, payload)| {
@@ -796,6 +934,7 @@ impl Broker {
                 let deadline = self.clock.now() + self.redelivery_timeout;
                 let Some(topic_arc) = self.topic_of_sub(*sub) else { return };
                 let mut t = topic_arc.lock().unwrap();
+                self.mark_dirty(&t.name);
                 let Some(q) = t.queues.get_mut(sub) else { return };
                 for id in ids {
                     // in-flight first: renewals are O(1) there, and an id
@@ -812,6 +951,7 @@ impl Broker {
             PersistEvent::BrokerAck { sub, ids } => {
                 let Some(topic_arc) = self.topic_of_sub(*sub) else { return };
                 let mut t = topic_arc.lock().unwrap();
+                self.mark_dirty(&t.name);
                 let Some(q) = t.queues.get_mut(sub) else { return };
                 for id in ids {
                     q.in_flight.remove(id);
@@ -1098,6 +1238,101 @@ mod tests {
         });
         assert_eq!(b.backlog(early), 1);
         assert_eq!(b.backlog(late), 0, "fan-out is at publish time, even on replay");
+    }
+
+    #[test]
+    fn delta_section_tracks_touched_topics_and_removals() {
+        let clock = SimClock::new();
+        let b = Broker::new(clock.clone()).with_redelivery_timeout(10.0);
+        b.enable_dirty_tracking();
+        let s1 = b.subscribe("alpha");
+        let _s2 = b.subscribe("beta");
+        let doomed = b.subscribe("gamma");
+        b.publish_many("alpha", (0..3).map(|i| Json::Num(i as f64)).collect());
+        b.publish("beta", Json::Num(9.0));
+        let base_names = b.take_dirty_topics();
+        assert_eq!(base_names, vec!["alpha", "beta", "gamma"]);
+        let base = b.snapshot_json();
+        assert!(b.take_dirty_topics().is_empty(), "drain resets the set");
+
+        // churn: alpha polls+acks, gamma's last subscriber leaves, beta idle
+        let ds = b.poll(s1, 2);
+        assert!(b.ack(s1, ds[0].id));
+        assert!(b.unsubscribe(doomed));
+        let touched = b.take_dirty_topics();
+        assert_eq!(touched, vec!["alpha", "gamma"], "beta was not touched");
+        let delta = b.delta_json(&touched);
+        assert_eq!(delta.get("topics").unwrap().as_arr().unwrap().len(), 1, "alpha only");
+        assert_eq!(
+            delta.get("removed").unwrap().as_arr().unwrap().to_vec(),
+            vec![Json::Str("gamma".into())],
+            "GC'd topics encode as removals"
+        );
+        Broker::validate_delta(&delta).unwrap();
+
+        // fold base + delta → decodes to exactly the live broker
+        let mut folded = base;
+        Broker::fold_snapshot_section(&mut folded, &delta);
+        assert_eq!(folded, b.snapshot_json(), "base+delta fold must equal live");
+        let b2 = Broker::new(SimClock::new()).with_redelivery_timeout(10.0);
+        b2.restore(&folded).unwrap();
+        assert_eq!(b2.snapshot_json(), b.snapshot_json());
+        assert_eq!(b2.backlog(s1), 2, "1 pending + 1 un-acked in-flight");
+        assert_eq!(b2.backlog(doomed), 0);
+        // a failed checkpoint hands the names back
+        b.restore_dirty_topics(touched.clone());
+        assert_eq!(b.dirty_topic_count(), 2);
+        assert_eq!(b.take_dirty_topics(), touched);
+    }
+
+    #[test]
+    fn fold_snapshot_section_handles_recreated_topics() {
+        // delta1 removes X; delta2 re-creates it — sequential folds win
+        let base = Json::obj().set(
+            "topics",
+            Json::Arr(vec![Json::obj()
+                .set("name", "x")
+                .set("messages", Json::Arr(vec![]))
+                .set(
+                    "subs",
+                    Json::Arr(vec![Json::obj()
+                        .set("id", 1u64)
+                        .set("pending", Json::Arr(vec![]))
+                        .set("in_flight", Json::Arr(vec![]))]),
+                )]),
+        );
+        let mut folded = base.clone();
+        let d1 = Json::obj()
+            .set("topics", Json::Arr(vec![]))
+            .set("removed", Json::Arr(vec![Json::Str("x".into())]));
+        Broker::fold_snapshot_section(&mut folded, &d1);
+        assert!(folded.get("topics").unwrap().as_arr().unwrap().is_empty());
+        let d2 = Json::obj()
+            .set(
+                "topics",
+                Json::Arr(vec![Json::obj()
+                    .set("name", "x")
+                    .set("messages", Json::Arr(vec![]))
+                    .set(
+                        "subs",
+                        Json::Arr(vec![Json::obj()
+                            .set("id", 2u64)
+                            .set("pending", Json::Arr(vec![]))
+                            .set("in_flight", Json::Arr(vec![]))]),
+                    )]),
+            )
+            .set("removed", Json::Arr(vec![]));
+        Broker::fold_snapshot_section(&mut folded, &d2);
+        let topics = folded.get("topics").unwrap().as_arr().unwrap();
+        assert_eq!(topics.len(), 1);
+        assert_eq!(
+            topics[0].get_path(&["subs"]).unwrap().as_arr().unwrap()[0]
+                .get("id")
+                .unwrap()
+                .as_u64(),
+            Some(2),
+            "the re-created topic's state wins"
+        );
     }
 
     #[test]

@@ -36,6 +36,12 @@ impl Config {
         c.put("persist.checkpoint_keep", Json::Num(2.0));
         c.put("persist.fsync", Json::Str("group".into()));
         c.put("persist.flush_idle_ms", Json::Num(50.0));
+        // delta checkpoints: auto-compact to a base past either bound
+        c.put("persist.delta_chain_max", Json::Num(8.0));
+        c.put("persist.delta_dirty_ratio", Json::Num(0.5));
+        // synchronous submits: POST /api/requests returns 201 only after
+        // the group-commit flusher fsynced the submit's LSN
+        c.put("persist.sync_submit", Json::Bool(false));
         // artifacts / runtime
         c.put("runtime.artifacts_dir", Json::Str("artifacts".into()));
         // DDM / tape simulator

@@ -63,7 +63,7 @@ use crate::store::{
     CollectionKind, Id, ProcessingStatus, RequestStatus, Store, TransformStatus,
 };
 use crate::util::json::Json;
-use crate::workflow::{Engine as WfEngine, Work, WorkKind, WorkflowRegistry};
+use crate::workflow::{Engine as WfEngine, StateUpdate, Work, WorkKind, WorkflowRegistry};
 
 use super::executors::ExecutorSet;
 use super::Daemon;
@@ -280,6 +280,22 @@ impl Pipeline {
         Some(f(engines.entry(request_id).or_insert(engine)))
     }
 
+    /// Persist a drained engine-state update: the full state rewrites the
+    /// row (`RequestEngine` in the WAL); a delta folds into the row and
+    /// logs only the compact `RequestEngineDelta` — closing the "full
+    /// state per completion" write amplification on wide workflows.
+    fn write_engine_update(&self, request_id: Id, update: Option<StateUpdate>) {
+        match update {
+            Some(StateUpdate::Full(state)) => {
+                let _ = self.store.set_request_engine(request_id, state);
+            }
+            Some(StateUpdate::Delta(delta)) => {
+                let _ = self.store.apply_engine_delta(request_id, delta);
+            }
+            None => {}
+        }
+    }
+
     fn count_registry(&self, hit: bool) {
         self.metrics
             .counter(if hit { "workflow.registry.hits" } else { "workflow.registry.misses" })
@@ -360,9 +376,10 @@ impl Daemon for Clerk {
                     if !engine.was_recovered() {
                         // transforms first, engine state second: a crash in
                         // between re-fires on restart and dedupes by name,
-                        // while the opposite order would lose the works
-                        let _ =
-                            self.p.store.set_request_engine(req_id, engine.state_json());
+                        // while the opposite order would lose the works. A
+                        // fresh engine's first write is always the full
+                        // state (its row has no base to fold a delta onto).
+                        self.p.write_engine_update(req_id, engine.take_state_update());
                     }
                     // or_insert: a Marshaller racing this re-intake may
                     // already have rebuilt (and advanced) the engine —
@@ -534,7 +551,10 @@ impl Daemon for Marshaller {
                             engine.mark_complete(work.instance);
                             Vec::new()
                         };
-                        (tagged, Some(engine.state_json()))
+                        // drain the compact delta (or the full state right
+                        // after a rebuild) instead of serializing the whole
+                        // engine per completion
+                        (tagged, engine.take_state_update())
                     })
                     .unwrap_or((Vec::new(), None));
                 if !new_works.is_empty() {
@@ -547,9 +567,7 @@ impl Daemon for Marshaller {
                     self.p.add_work_transform(tf.request_id, w, *kind);
                 }
                 // transforms before state — see the Clerk's ordering note
-                if let Some(state) = new_state {
-                    let _ = self.p.store.set_request_engine(tf.request_id, state);
-                }
+                self.p.write_engine_update(tf.request_id, new_state);
                 self.p.mark_marshalled(tf_id);
                 self.p.metrics.counter("pipeline.transforms_marshalled").inc();
                 n += 1;

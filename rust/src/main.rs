@@ -171,12 +171,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         )
         .with_context(|| format!("opening data dir {data_dir}"))?;
         println!(
-            "recovered from {data_dir}: checkpoint {}, {} WAL events replayed \
-             ({} skipped, {} torn bytes truncated)",
+            "recovered from {data_dir}: checkpoint {} (+{} deltas folded), \
+             {} WAL events replayed ({} skipped, {} torn bytes truncated)",
             report
                 .checkpoint_seq
                 .map(|s| format!("#{s}"))
                 .unwrap_or_else(|| "none".to_string()),
+            report.deltas_folded,
             report.events_replayed,
             report.events_skipped,
             report.torn_bytes,
@@ -213,7 +214,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let interval = std::time::Duration::from_secs_f64(cfg.f64("daemons.poll_interval_s")?);
     let host = AgentHost::start(daemons, interval);
 
-    // periodic checkpoints bound WAL replay time after a crash
+    // periodic checkpoints bound WAL replay time after a crash. The call
+    // is delta-aware: each tick writes a compact delta of the rows/topics
+    // touched since the last cut, auto-compacting to a fresh base when
+    // the chain hits persist.delta_chain_max or the dirty ratio crosses
+    // persist.delta_dirty_ratio — so this one thread is also the
+    // compaction driver, and steady-state checkpoint I/O scales with
+    // churn, not store size.
     if let Some(p) = &persist {
         let every = cfg.f64("persist.checkpoint_interval_s")?;
         if every > 0.0 {
@@ -224,11 +231,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .spawn(move || loop {
                     std::thread::sleep(std::time::Duration::from_secs_f64(every));
                     match p.checkpoint(&store) {
-                        Ok(r) => log::info!(
-                            "checkpoint #{} at lsn {} ({} bytes, {} wal segments pruned)",
+                        Ok(r) if r.skipped => log::debug!(
+                            "checkpoint skipped: quiescent since #{} (chain {})",
                             r.seq,
+                            r.chain_len
+                        ),
+                        Ok(r) => log::info!(
+                            "checkpoint #{} ({}) at lsn {} ({} bytes, {} rows, chain {}, \
+                             {} wal segments pruned)",
+                            r.seq,
+                            if r.full { "base" } else { "delta" },
                             r.start_lsn,
                             r.bytes,
+                            r.rows,
+                            r.chain_len,
                             r.segments_deleted
                         ),
                         Err(e) => log::warn!("periodic checkpoint failed: {e}"),
@@ -264,10 +280,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     host.stop();
     server.stop();
     if let Some(p) = &persist {
+        // auto: usually a small delta — a fast shutdown — unless the
+        // chain/dirty policy says it is time to compact anyway; an idle
+        // service since the last cut writes nothing at all
         match p.checkpoint(&store) {
+            Ok(r) if r.skipped => println!(
+                "final checkpoint skipped: nothing new since #{}",
+                r.seq
+            ),
             Ok(r) => println!(
-                "final checkpoint #{} at lsn {} ({} bytes)",
-                r.seq, r.start_lsn, r.bytes
+                "final checkpoint #{} ({}) at lsn {} ({} bytes)",
+                r.seq,
+                if r.full { "base" } else { "delta" },
+                r.start_lsn,
+                r.bytes
             ),
             Err(e) => eprintln!("final checkpoint failed (WAL still drains): {e}"),
         }

@@ -52,6 +52,17 @@ pub enum PersistEvent {
         engine: Json,
         at: f64,
     },
+    /// Compact engine-state delta (absolute counter values for the
+    /// templates that changed, newly completed instances, monotone next
+    /// id — see `crate::workflow::StateUpdate::Delta`). Replay folds it
+    /// into the row's full state via `crate::workflow::fold_engine_state`,
+    /// which is idempotent — so per-completion WAL bytes are O(changed
+    /// templates) while full state appears only in checkpoints.
+    RequestEngineDelta {
+        id: Id,
+        delta: Json,
+        at: f64,
+    },
     AddTransform {
         id: Id,
         request_id: Id,
@@ -191,6 +202,7 @@ impl PersistEvent {
             PersistEvent::AddRequest { .. } => "add_request",
             PersistEvent::RequestStatus { .. } => "request_status",
             PersistEvent::RequestEngine { .. } => "request_engine",
+            PersistEvent::RequestEngineDelta { .. } => "request_engine_delta",
             PersistEvent::AddTransform { .. } => "add_transform",
             PersistEvent::TransformStatus { .. } => "transform_status",
             PersistEvent::TransformWork { .. } => "transform_work",
@@ -232,6 +244,7 @@ impl PersistEvent {
         match self {
             PersistEvent::AddRequest { id, .. }
             | PersistEvent::RequestEngine { id, .. }
+            | PersistEvent::RequestEngineDelta { id, .. }
             | PersistEvent::TransformWork { id, .. }
             | PersistEvent::TransformRetries { id, .. }
             | PersistEvent::CloseCollection { id }
@@ -281,6 +294,9 @@ impl PersistEvent {
             }
             PersistEvent::RequestEngine { id, engine, at } => {
                 base.set("id", *id).set("engine", engine.clone()).set("at", *at)
+            }
+            PersistEvent::RequestEngineDelta { id, delta, at } => {
+                base.set("id", *id).set("delta", delta.clone()).set("at", *at)
             }
             PersistEvent::AddTransform { id, request_id, name, work, at } => base
                 .set("id", *id)
@@ -394,6 +410,11 @@ impl PersistEvent {
             "request_engine" => PersistEvent::RequestEngine {
                 id: req_u64(j, "id")?,
                 engine: j.get("engine").cloned().unwrap_or(Json::Null),
+                at: req_f64(j, "at")?,
+            },
+            "request_engine_delta" => PersistEvent::RequestEngineDelta {
+                id: req_u64(j, "id")?,
+                delta: j.get("delta").cloned().unwrap_or(Json::Null),
                 at: req_f64(j, "at")?,
             },
             "add_transform" => PersistEvent::AddTransform {
@@ -549,6 +570,14 @@ mod tests {
                 .set("hash", "00deadbeef001234")
                 .set("instances", Json::obj().set("a", 2u64)),
             at: 2.5,
+        });
+        roundtrip(PersistEvent::RequestEngineDelta {
+            id: 7,
+            delta: Json::obj()
+                .set("instances", Json::obj().set("a", 3u64))
+                .set("completed", Json::Arr(vec![Json::from(2u64)]))
+                .set("next_instance", 4u64),
+            at: 2.75,
         });
         roundtrip(PersistEvent::AddTransform {
             id: 8,

@@ -7,8 +7,11 @@
 //!
 //! ```text
 //! <data_dir>/
-//!   checkpoint-00000001.json     Store::snapshot() + the WAL cut LSN
-//!   wal/wal-00000001.log         length+CRC-framed event segments
+//!   checkpoint-00000001.json        base: Store::snapshot() + the cut LSN
+//!   checkpoint-00000003.delta.json  delta: dirty rows since the previous
+//!                                   chain element + broker delta + chain
+//!                                   linkage (base_seq / prev_seq)
+//!   wal/wal-00000001.log            length+CRC-framed event segments
 //! ```
 //!
 //! * **Write path** — the store *and the broker* log one [`PersistEvent`]
@@ -16,20 +19,29 @@
 //!   group-commits them (one write+fsync per flusher batch, mirroring the
 //!   store's batched transition philosophy).
 //! * **Checkpoint** — flush the WAL, note the next LSN (`start_lsn`),
-//!   write `Store::snapshot()` durably — extended to snapshot format v3
-//!   with a `broker` section when a broker is attached (see
-//!   [`Persist::open_with_broker`]) — then rotate + delete segments whose
-//!   events all predate `start_lsn`.
-//! * **Recovery** — load the newest readable checkpoint, replay the WAL
-//!   suffix (`lsn >= start_lsn`) through [`crate::store::Store::apply_event`]
-//!   (broker events route to [`crate::broker::Broker::apply_event`]),
-//!   truncate any torn tail at the first bad frame, and advance the
-//!   process-wide id counter past everything seen.
+//!   drain the store's and broker's dirty sets, then write either a
+//!   **base** (full `Store::snapshot()` + broker section) or a **delta**
+//!   (`checkpoint-<seq>.delta.json`: the dirty rows' current state +
+//!   touched broker topics + removals), per the compaction policy
+//!   (`persist.delta_chain_max`, `persist.delta_dirty_ratio`). Bases
+//!   apply retention and prune WAL segments below the *oldest retained
+//!   base's* cut; deltas never move the prune horizon — checkpoint I/O
+//!   scales with churn, not table size.
+//! * **Recovery** — load the newest readable base, fold its delta chain
+//!   in order (full-row upserts; a chain broken by a corrupt or missing
+//!   link is discarded wholesale and the base + WAL suffix covers it),
+//!   then replay the WAL suffix (`lsn >=` the last folded cut) through
+//!   [`crate::store::Store::apply_event`] (broker events route to
+//!   [`crate::broker::Broker::apply_event`]), truncate any torn tail at
+//!   the first bad frame, and advance the process-wide id counter past
+//!   everything seen.
 //!
 //! The soundness argument for the fuzzy checkpoint cut (log-after-apply
 //! under the discovery lock ⇒ `lsn < start_lsn` implies the effect is in
-//! the snapshot; replay is insert-if-absent + last-write-wins so the
-//! overlapping suffix converges) lives in DESIGN.md.
+//! the snapshot; mark-dirty-before-log ⇒ it is in the drained dirty set
+//! too; replay is insert-if-absent + last-write-wins so the overlapping
+//! suffix converges) lives in DESIGN.md, "Durability model" and "Delta
+//! checkpoints".
 
 pub mod events;
 pub mod wal;
@@ -43,10 +55,11 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::broker::Broker;
+use crate::broker::{Broker, DecodedBroker};
 use crate::config::Config;
 use crate::metrics::Registry;
-use crate::store::{Id, Store};
+use crate::store::snapshot::DecodedSnapshot;
+use crate::store::{DirtySets, Id, Store};
 use crate::util::json::{parse, Json};
 
 pub use events::{PersistEvent, Persister};
@@ -81,6 +94,13 @@ pub struct PersistOptions {
     pub fsync: FsyncMode,
     pub checkpoint_keep: usize,
     pub flush_idle_ms: u64,
+    /// Auto-compaction: a delta chain longer than this forces the next
+    /// checkpoint to be a base.
+    pub delta_chain_max: usize,
+    /// Auto-compaction: a dirty-row ratio (dirty / total rows) at or above
+    /// this forces a base — a delta nearly the size of a base buys
+    /// nothing and lengthens recovery.
+    pub delta_dirty_ratio: f64,
 }
 
 impl Default for PersistOptions {
@@ -90,6 +110,8 @@ impl Default for PersistOptions {
             fsync: FsyncMode::Group,
             checkpoint_keep: 2,
             flush_idle_ms: 50,
+            delta_chain_max: 8,
+            delta_dirty_ratio: 0.5,
         }
     }
 }
@@ -103,6 +125,8 @@ impl PersistOptions {
                 .with_context(|| format!("persist.fsync '{fsync_str}' not one of group|never"))?,
             checkpoint_keep: cfg.usize("persist.checkpoint_keep")?.max(1),
             flush_idle_ms: cfg.u64("persist.flush_idle_ms")?,
+            delta_chain_max: cfg.usize("persist.delta_chain_max")?.max(1),
+            delta_dirty_ratio: cfg.f64("persist.delta_dirty_ratio")?,
         })
     }
 }
@@ -110,9 +134,15 @@ impl PersistOptions {
 /// What recovery found and did.
 #[derive(Debug, Clone, Default)]
 pub struct RecoveryReport {
+    /// Seq of the BASE checkpoint loaded (delta-chain elements fold onto
+    /// it; see `deltas_folded`).
     pub checkpoint_seq: Option<u64>,
-    /// The loaded checkpoint's cut LSN (0 when starting empty).
+    /// The replay start — the last folded chain element's cut LSN (the
+    /// base's own cut when no deltas folded; 0 when starting empty).
     pub start_lsn: u64,
+    /// Delta checkpoints folded onto the base (0 when the chain was empty
+    /// or discarded after a mid-chain corruption).
+    pub deltas_folded: usize,
     pub segments_scanned: usize,
     pub events_replayed: u64,
     pub events_skipped: u64,
@@ -128,17 +158,51 @@ pub struct CheckpointReport {
     pub bytes: u64,
     pub duration_ms: f64,
     pub segments_deleted: usize,
+    /// True for a base checkpoint, false for a delta.
+    pub full: bool,
+    /// The base this element belongs to (self for a base).
+    pub base_seq: u64,
+    /// Delta-chain length after this checkpoint (0 right after a base).
+    pub chain_len: usize,
+    /// Rows written: the dirty-row count for a delta, all rows for a base.
+    pub rows: u64,
+    /// True when an *auto* checkpoint wrote nothing because the interval
+    /// was quiescent (no dirty rows/topics, no WAL growth since the last
+    /// cut) — an empty delta would only lengthen the chain until the
+    /// length policy forced a pointless full base. `seq` then names the
+    /// existing chain tail.
+    pub skipped: bool,
 }
 
 impl CheckpointReport {
     pub fn to_json(&self) -> Json {
+        let kind = if self.skipped {
+            "skipped"
+        } else if self.full {
+            "base"
+        } else {
+            "delta"
+        };
         Json::obj()
             .set("seq", self.seq)
             .set("start_lsn", self.start_lsn)
             .set("bytes", self.bytes)
             .set("duration_ms", self.duration_ms)
             .set("segments_deleted", self.segments_deleted)
+            .set("kind", kind)
+            .set("base_seq", self.base_seq)
+            .set("chain_len", self.chain_len)
+            .set("rows", self.rows)
     }
+}
+
+/// Live chain position: the base the next delta folds onto, the tail it
+/// links from, and the current length (compaction input). Guarded by the
+/// checkpoint mutex for writers; readers take the chain mutex only.
+struct ChainState {
+    base_seq: u64,
+    tail_seq: u64,
+    len: usize,
 }
 
 struct PersistInner {
@@ -159,10 +223,15 @@ struct PersistInner {
     checkpoint_mutex: Mutex<()>,
     checkpoint_seq: AtomicU64,
     last_checkpoint_lsn: AtomicU64,
-    /// `(seq, start_lsn)` of the checkpoints still on disk, ascending —
-    /// WAL segments are pruned to the *oldest* retained cut so every
-    /// fallback checkpoint keeps a complete replay suffix.
+    last_checkpoint_bytes: AtomicU64,
+    /// `(seq, start_lsn)` of the BASE checkpoints still on disk, ascending
+    /// — WAL segments are pruned to the *oldest* retained base's cut so
+    /// every fallback (including a delta chain discarded over a corrupt
+    /// link) keeps a complete replay suffix. Deltas never enter this list:
+    /// pruning to a delta cut would strand exactly the fallback that a
+    /// mid-chain corruption needs.
     retained: Mutex<Vec<(u64, u64)>>,
+    chain: Mutex<ChainState>,
     metrics: Registry,
 }
 
@@ -186,8 +255,18 @@ fn checkpoint_path(dir: &Path, seq: u64) -> PathBuf {
     dir.join(format!("checkpoint-{seq:08}.json"))
 }
 
+/// Base file names only — `checkpoint-N.delta.json` does not parse here
+/// (its stem still contains `.delta`).
 fn checkpoint_seq_of(name: &str) -> Option<u64> {
     name.strip_prefix("checkpoint-")?.strip_suffix(".json")?.parse().ok()
+}
+
+fn delta_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("checkpoint-{seq:08}.delta.json"))
+}
+
+fn delta_seq_of(name: &str) -> Option<u64> {
+    name.strip_prefix("checkpoint-")?.strip_suffix(".delta.json")?.parse().ok()
 }
 
 fn list_by<T: Ord>(dir: &Path, f: impl Fn(&str) -> Option<T>) -> Result<Vec<T>> {
@@ -304,93 +383,99 @@ impl Persist {
 
         let mut report = RecoveryReport::default();
 
-        // 1. newest *valid* checkpoint restores the store; every valid
-        //    checkpoint's cut LSN is remembered so WAL pruning can respect
-        //    the oldest retained fallback, not just the newest. A
-        //    checkpoint that fails any stage — read, parse, missing
-        //    start_lsn, or restore — is set aside as `.corrupt` and the
-        //    next older one is tried; `Store::restore` is two-phase
-        //    (decode-then-insert), so a half-bad snapshot fails before
-        //    touching the store and the fallback loads into a clean slate.
-        let checkpoint_seqs = list_by(dir, checkpoint_seq_of)?;
-        let mut retained: Vec<(u64, u64)> = Vec::new(); // (seq, start_lsn)
-        let mut loaded: Option<(u64, u64)> = None;
+        // 1. newest *valid* BASE checkpoint anchors recovery; every valid
+        //    base's cut LSN is remembered so WAL pruning can respect the
+        //    oldest retained fallback, not just the newest. A base that
+        //    fails any stage — read, parse, missing start_lsn, or decode —
+        //    is set aside as `.corrupt` and the next older one is tried.
+        //    Decoding is two-phase across both subsystems (decode
+        //    everything, fold the chain, install once), so a half-bad
+        //    chain fails before touching the store or the broker.
+        let base_seqs = list_by(dir, checkpoint_seq_of)?;
+        let delta_seqs = list_by(dir, delta_seq_of)?;
+
+        struct Primary {
+            seq: u64,
+            start_lsn: u64,
+            store: DecodedSnapshot,
+            broker_json: Option<Json>,
+            /// Step-1 decode of the base's broker section, reused at
+            /// install when the chain folds no broker deltas on top (the
+            /// common case) — otherwise the folded JSON is decoded once.
+            broker_decoded: Option<DecodedBroker>,
+        }
+
+        let mut retained: Vec<(u64, u64)> = Vec::new(); // usable bases
+        let mut primary: Option<Primary> = None;
         let mut carried_broker: Option<Json> = None;
-        for &seq in checkpoint_seqs.iter().rev() {
+        for &seq in base_seqs.iter().rev() {
             let path = checkpoint_path(dir, seq);
-            let validated = std::fs::read_to_string(&path)
-                .map_err(anyhow::Error::from)
-                .and_then(|text| parse(&text).map_err(anyhow::Error::from))
-                .and_then(|j| {
-                    let start_lsn = j
-                        .get("start_lsn")
-                        .and_then(|v| v.as_u64())
-                        .context("missing start_lsn")?;
-                    let snap = j.get("snapshot").context("missing snapshot")?;
-                    if loaded.is_none() {
-                        // two-phase across both subsystems: the broker
-                        // section is decoded before the store restore
-                        // mutates anything, so a checkpoint that fails
-                        // either stage is set aside with both left clean
-                        let decoded_broker = match (broker, snap.get("broker")) {
-                            (Some(_), Some(bj)) => Some(
+            let validated = (|| -> Result<u64> {
+                let text = std::fs::read_to_string(&path)?;
+                let body = parse(&text)?;
+                let start_lsn = body
+                    .get("start_lsn")
+                    .and_then(|v| v.as_u64())
+                    .context("missing start_lsn")?;
+                let snap = body.get("snapshot").context("missing snapshot")?;
+                if primary.is_none() {
+                    let decoded = store
+                        .decode_snapshot_json(snap)
+                        .context("snapshot does not decode")?;
+                    let mut broker_decoded = None;
+                    let broker_json = match snap.get("broker") {
+                        Some(bj) if broker.is_some() => {
+                            broker_decoded = Some(
                                 Broker::decode_snapshot(bj)
                                     .context("broker section does not decode")?,
-                            ),
-                            // store-only open: hold the section opaquely
-                            // so our own checkpoints carry it through
-                            // (see `carried_broker`) — decoded anyway so
-                            // its sub/msg ids still advance the id
-                            // counter; an undecodable section is dropped
-                            // rather than propagated
-                            (None, Some(bj)) => match Broker::decode_snapshot(bj) {
-                                Ok(d) => {
-                                    carried_broker = Some(bj.clone());
-                                    Some(d)
-                                }
-                                Err(e) => {
-                                    log::warn!("dropping undecodable broker section: {e}");
-                                    None
-                                }
-                            },
-                            _ => None,
-                        };
-                        let mut max_id =
-                            store.restore(snap).context("snapshot does not restore")?;
-                        if let Some(d) = decoded_broker {
-                            max_id = max_id.max(match broker {
-                                Some(b) => b.install_decoded(d),
-                                None => d.max_id(),
-                            });
+                            );
+                            Some(bj.clone())
                         }
-                        return Ok((Some(max_id), start_lsn));
-                    }
-                    // fallback checkpoints get the same full decode the
-                    // restore path would need — a checkpoint that cannot
-                    // load must not be retained (the WAL is pruned to the
-                    // oldest *retained* cut, so retaining a dud would
-                    // leave no usable recovery point on a double fault)
-                    Store::validate_snapshot(snap)
-                        .context("fallback snapshot does not decode")?;
-                    // broker-less opens ignore the broker section on the
-                    // primary path, so a corrupt one must not disqualify
-                    // an otherwise-loadable fallback either
-                    if broker.is_some() {
-                        if let Some(bj) = snap.get("broker") {
-                            Broker::decode_snapshot(bj)
-                                .context("fallback broker section does not decode")?;
-                        }
-                    }
-                    Ok((None, start_lsn))
-                });
-            match validated {
-                Ok((restored_max_id, start_lsn)) => {
-                    if let Some(max_id) = restored_max_id {
-                        report.max_id = report.max_id.max(max_id);
-                        loaded = Some((seq, start_lsn));
-                    }
-                    retained.push((seq, start_lsn));
+                        // store-only open: held opaquely so this writer's
+                        // own base checkpoints carry it through — decoded
+                        // anyway so its sub/msg ids still advance the id
+                        // counter; an undecodable section is dropped
+                        // rather than propagated
+                        Some(bj) => match Broker::decode_snapshot(bj) {
+                            Ok(d) => {
+                                report.max_id = report.max_id.max(d.max_id());
+                                Some(bj.clone())
+                            }
+                            Err(e) => {
+                                log::warn!("dropping undecodable broker section: {e}");
+                                None
+                            }
+                        },
+                        None => None,
+                    };
+                    primary = Some(Primary {
+                        seq,
+                        start_lsn,
+                        store: decoded,
+                        broker_json,
+                        broker_decoded,
+                    });
+                    return Ok(start_lsn);
                 }
+                // fallback checkpoints get the same full decode the
+                // restore path would need — a checkpoint that cannot
+                // load must not be retained (the WAL is pruned to the
+                // oldest *retained base's* cut, so retaining a dud would
+                // leave no usable recovery point on a double fault)
+                Store::validate_snapshot(snap).context("fallback snapshot does not decode")?;
+                // broker-less opens ignore the broker section on the
+                // primary path, so a corrupt one must not disqualify
+                // an otherwise-loadable fallback either
+                if broker.is_some() {
+                    if let Some(bj) = snap.get("broker") {
+                        Broker::decode_snapshot(bj)
+                            .context("fallback broker section does not decode")?;
+                    }
+                }
+                Ok(start_lsn)
+            })();
+            match validated {
+                Ok(start_lsn) => retained.push((seq, start_lsn)),
                 Err(e) => {
                     let aside = path.with_extension("json.corrupt");
                     log::warn!(
@@ -402,9 +487,169 @@ impl Persist {
             }
         }
         retained.sort_unstable();
-        let start_lsn = loaded.map(|(_, lsn)| lsn).unwrap_or(0);
-        report.checkpoint_seq = loaded.map(|(seq, _)| seq);
+
+        // 1b. fold the chosen base's delta chain: ascending seqs, each
+        //     prev-linked to the previous element, every file decodable.
+        //     A chain broken anywhere — unreadable file, failed decode, or
+        //     a linkage gap — is discarded *wholesale* (the bad file set
+        //     aside, the stale rest deleted) and recovery proceeds from
+        //     the base + the WAL suffix, which pruning keeps back to the
+        //     oldest retained base's cut for exactly this fallback.
+        let mut chain_tail = 0u64;
+        let mut chain_len = 0usize;
+        if let Some(pri) = &mut primary {
+            chain_tail = pri.seq;
+            type ParsedDelta = (u64, u64, u64, DecodedSnapshot, Option<Json>);
+            let mut parsed: Vec<ParsedDelta> = Vec::new();
+            let mut chain_ok = true;
+            for &dseq in delta_seqs.iter() {
+                if dseq < pri.seq {
+                    continue; // debris from an older base; retention clears it
+                }
+                let path = delta_path(dir, dseq);
+                let read = (|| -> Result<Option<ParsedDelta>> {
+                    let text = std::fs::read_to_string(&path)?;
+                    let body = parse(&text)?;
+                    let base_seq = body
+                        .get("base_seq")
+                        .and_then(|v| v.as_u64())
+                        .context("missing base_seq")?;
+                    if base_seq != pri.seq {
+                        return Ok(None); // stale chain of another base
+                    }
+                    let prev_seq = body
+                        .get("prev_seq")
+                        .and_then(|v| v.as_u64())
+                        .context("missing prev_seq")?;
+                    let start_lsn = body
+                        .get("start_lsn")
+                        .and_then(|v| v.as_u64())
+                        .context("missing start_lsn")?;
+                    let delta = body.get("delta").context("missing delta")?;
+                    let decoded = store
+                        .decode_snapshot_json(delta)
+                        .context("delta payload does not decode")?;
+                    let bdelta = body.get("broker").cloned();
+                    if let Some(bj) = &bdelta {
+                        let max = Broker::validate_delta(bj)
+                            .context("broker delta does not decode")?;
+                        report.max_id = report.max_id.max(max);
+                    }
+                    Ok(Some((dseq, prev_seq, start_lsn, decoded, bdelta)))
+                })();
+                match read {
+                    Ok(Some(d)) => parsed.push(d),
+                    Ok(None) => {}
+                    Err(e) => {
+                        let aside = path.with_extension("json.corrupt");
+                        log::warn!(
+                            "unusable delta checkpoint {} ({e}): set aside; discarding \
+                             the delta chain, recovering from base #{} + WAL suffix",
+                            path.display(),
+                            pri.seq
+                        );
+                        let _ = std::fs::rename(&path, &aside);
+                        chain_ok = false;
+                    }
+                }
+            }
+            if chain_ok {
+                let mut expected_prev = pri.seq;
+                for (seq, prev, _, _, _) in &parsed {
+                    if *prev != expected_prev {
+                        log::warn!(
+                            "delta chain of base #{} broken at #{seq} (prev {prev}, \
+                             expected {expected_prev}); discarding the chain",
+                            pri.seq
+                        );
+                        chain_ok = false;
+                        break;
+                    }
+                    expected_prev = *seq;
+                }
+            }
+            if chain_ok {
+                let mut folded_broker = pri.broker_json.take();
+                let mut store_deltas = Vec::with_capacity(parsed.len());
+                for (seq, _, lsn, decoded, bdelta) in parsed {
+                    store_deltas.push(decoded);
+                    if let Some(bj) = &bdelta {
+                        let mut base = folded_broker.take().unwrap_or(Json::Null);
+                        Broker::fold_snapshot_section(&mut base, bj);
+                        folded_broker = Some(base);
+                        // the base's step-1 decode no longer matches the
+                        // folded section; install decodes the fold once
+                        pri.broker_decoded = None;
+                    }
+                    pri.start_lsn = lsn;
+                    chain_tail = seq;
+                    chain_len += 1;
+                }
+                // one id→position map per table for the whole chain
+                pri.store.fold_chain(store_deltas);
+                pri.broker_json = folded_broker;
+                report.deltas_folded = chain_len;
+            } else {
+                // stale links would break prev-linkage for deltas written
+                // this run (their prev points at the base) — remove them;
+                // their effects are fully covered by the WAL suffix
+                for (seq, _, _, _, _) in parsed {
+                    let _ = std::fs::remove_file(delta_path(dir, seq));
+                }
+            }
+        }
+
+        // 1c. install the folded state — the first store/broker mutation
+        //     of the whole recovery, after every decode/validation passed.
+        let (start_lsn, loaded_seq) = match primary {
+            Some(mut pri) => {
+                let max_id = store.install_decoded(pri.store);
+                report.max_id = report.max_id.max(max_id);
+                match (broker, &pri.broker_json) {
+                    (Some(b), Some(bj)) => {
+                        // reuse the step-1 decode unless broker deltas
+                        // folded on top; the re-decode of the folded
+                        // section cannot fail (every component validated)
+                        // but is dropped defensively if it somehow does
+                        let decoded = match pri.broker_decoded.take() {
+                            Some(d) => Some(d),
+                            None => match Broker::decode_snapshot(bj) {
+                                Ok(d) => Some(d),
+                                Err(e) => {
+                                    log::warn!(
+                                        "folded broker section does not decode ({e}); dropped"
+                                    );
+                                    None
+                                }
+                            },
+                        };
+                        if let Some(d) = decoded {
+                            report.max_id = report.max_id.max(b.install_decoded(d));
+                        }
+                    }
+                    (None, Some(bj)) => carried_broker = Some(bj.clone()),
+                    _ => {}
+                }
+                (pri.start_lsn, Some(pri.seq))
+            }
+            None => (0, None),
+        };
+        report.checkpoint_seq = loaded_seq;
         report.start_lsn = start_lsn;
+
+        // dirty tracking on AFTER the base+chain install and BEFORE WAL
+        // replay: installed rows are already durable in the very files
+        // just loaded (retained until the next base supersedes them), so
+        // marking them would only force the first post-boot checkpoint
+        // into a full base and spike memory by O(table size); replayed
+        // suffix events DO mark, because the chain continues from the
+        // recovered tail and the next delta's cut moves past them — their
+        // effects must ride in that delta once the old suffix stops
+        // replaying.
+        store.enable_dirty_tracking();
+        if let Some(b) = broker {
+            b.enable_dirty_tracking();
+        }
 
         // 2. replay the WAL, truncating each torn tail at its first bad
         //    frame. Scanning CONTINUES past a torn segment: LSNs are
@@ -505,9 +750,21 @@ impl Persist {
                 wal,
                 flusher: Mutex::new(Some(flusher)),
                 checkpoint_mutex: Mutex::new(()),
-                checkpoint_seq: AtomicU64::new(checkpoint_seqs.last().copied().unwrap_or(0)),
+                checkpoint_seq: AtomicU64::new(
+                    base_seqs
+                        .last()
+                        .copied()
+                        .unwrap_or(0)
+                        .max(delta_seqs.last().copied().unwrap_or(0)),
+                ),
                 last_checkpoint_lsn: AtomicU64::new(start_lsn),
+                last_checkpoint_bytes: AtomicU64::new(0),
                 retained: Mutex::new(retained),
+                chain: Mutex::new(ChainState {
+                    base_seq: loaded_seq.unwrap_or(0),
+                    tail_seq: chain_tail,
+                    len: chain_len,
+                }),
                 metrics,
             }),
         };
@@ -533,9 +790,33 @@ impl Persist {
         self.inner.wal.flush();
     }
 
-    /// Write a durable checkpoint of `store` and prune fully-covered WAL
-    /// segments. Serialized: concurrent calls queue up.
+    /// Write a durable checkpoint of `store`: a compact **delta**
+    /// (`checkpoint-<seq>.delta.json`, the rows and broker topics touched
+    /// since the previous cut) when the compaction policy allows, else a
+    /// full **base** — the policy forces a base when no base exists yet,
+    /// the chain has reached `persist.delta_chain_max`, or the dirty-row
+    /// ratio crossed `persist.delta_dirty_ratio`. Bases apply retention
+    /// and prune the WAL to the oldest retained base's cut; deltas never
+    /// move the prune horizon. Serialized: concurrent calls queue up.
     pub fn checkpoint(&self, store: &Store) -> Result<CheckpointReport> {
+        self.checkpoint_inner(store, None)
+    }
+
+    /// Force a full base checkpoint (compaction on demand —
+    /// `POST /api/admin/checkpoint?full=1`).
+    pub fn checkpoint_full(&self, store: &Store) -> Result<CheckpointReport> {
+        self.checkpoint_inner(store, Some(true))
+    }
+
+    /// Force a delta checkpoint — always writes a file, unlike the auto
+    /// path's quiescent skip (the admin route and tests/benches pinning
+    /// the chain shape use this). Still writes a base when none exists
+    /// yet: a delta without a base would have nothing to fold onto.
+    pub fn checkpoint_delta(&self, store: &Store) -> Result<CheckpointReport> {
+        self.checkpoint_inner(store, Some(false))
+    }
+
+    fn checkpoint_inner(&self, store: &Store, force_full: Option<bool>) -> Result<CheckpointReport> {
         let inner = &*self.inner;
         let _gate = inner.checkpoint_mutex.lock().unwrap();
         let t0 = Instant::now();
@@ -543,17 +824,122 @@ impl Persist {
         // claims to cover it
         inner.wal.flush();
         let start_lsn = inner.wal.next_lsn();
+        // drain dirtiness AFTER the cut read: every mutation whose event
+        // predates the cut marked itself before this drain (marks happen
+        // before the log enqueue, inside the same lock critical section),
+        // so nothing can fall between the delta and the WAL suffix
+        let dirty = store.take_dirty();
+        let broker_dirty = match &inner.broker {
+            Some(b) => b.take_dirty_topics(),
+            None => Vec::new(),
+        };
+        let (base_seq_now, chain_len_now, tail_seq_now) = {
+            let chain = inner.chain.lock().unwrap();
+            (chain.base_seq, chain.len, chain.tail_seq)
+        };
+        // quiescent interval: nothing dirty and no WAL growth since the
+        // last cut — an auto checkpoint writes nothing, because an empty
+        // delta would only lengthen the chain until the length policy
+        // forced a pointless full base of an unchanged store. Forced
+        // base/delta calls are explicit requests for a file and still
+        // write.
+        if force_full.is_none()
+            && base_seq_now != 0
+            && dirty.is_empty()
+            && broker_dirty.is_empty()
+            && start_lsn == inner.last_checkpoint_lsn.load(Ordering::Relaxed)
+        {
+            inner.metrics.counter("persist.checkpoint.skipped").inc();
+            return Ok(CheckpointReport {
+                seq: tail_seq_now,
+                start_lsn,
+                bytes: 0,
+                duration_ms: t0.elapsed().as_secs_f64() * 1e3,
+                segments_deleted: 0,
+                full: false,
+                base_seq: base_seq_now,
+                chain_len: chain_len_now,
+                rows: 0,
+                skipped: true,
+            });
+        }
+        let write_base = match force_full {
+            Some(true) => true,
+            Some(false) => base_seq_now == 0,
+            None => {
+                base_seq_now == 0
+                    || chain_len_now >= inner.opts.delta_chain_max
+                    || dirty.total() as f64
+                        >= inner.opts.delta_dirty_ratio * store.rows_total().max(1) as f64
+            }
+        };
+        let result = if write_base {
+            self.write_base(store, start_lsn, t0)
+        } else {
+            self.write_delta(store, start_lsn, t0, &dirty, &broker_dirty)
+        };
+        match &result {
+            Ok(report) => {
+                inner.last_checkpoint_lsn.store(start_lsn, Ordering::Relaxed);
+                inner.last_checkpoint_bytes.store(report.bytes, Ordering::Relaxed);
+                inner.metrics.counter("persist.checkpoint.count").inc();
+                if !report.full {
+                    inner.metrics.counter("persist.checkpoint.delta.count").inc();
+                }
+                inner.metrics.counter("persist.checkpoint.bytes").add(report.bytes);
+                inner.metrics.counter("persist.checkpoint.rows").add(report.rows);
+                inner
+                    .metrics
+                    .histogram("persist.checkpoint.duration_us")
+                    .observe((report.duration_ms * 1e3) as u64);
+            }
+            Err(_) => {
+                // hand the drained dirtiness back or the next delta would
+                // silently miss these rows
+                store.restore_dirty(dirty);
+                if let Some(b) = &inner.broker {
+                    b.restore_dirty_topics(broker_dirty);
+                }
+            }
+        }
+        result
+    }
+
+    /// Atomic durable publish: tmp → write → fsync → rename → dir sync.
+    fn publish_json(&self, body: &Json, path: &Path) -> Result<u64> {
+        let inner = &*self.inner;
+        let mut text = String::new();
+        body.write_to(&mut text);
+        let tmp = path.with_extension("json.tmp");
+        {
+            let mut f =
+                File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(text.as_bytes())?;
+            if inner.opts.fsync != FsyncMode::Never {
+                f.sync_data()?;
+            }
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+        if inner.opts.fsync != FsyncMode::Never {
+            sync_dir(&inner.dir);
+        }
+        Ok(text.len() as u64)
+    }
+
+    fn write_base(&self, store: &Store, start_lsn: u64, t0: Instant) -> Result<CheckpointReport> {
+        let inner = &*self.inner;
+        let rows = store.rows_total() as u64;
         let snap = store.snapshot();
-        // with a broker attached, the checkpoint carries snapshot format
-        // v3: v2's six tables plus the broker section (topics,
-        // subscriptions, backlogs, in-flight). The broker read happens
-        // after the cut under the same topic locks the broker logs under,
-        // so the fuzzy-cut argument covers it (DESIGN.md, "Broker").
+        // with a broker attached the base carries the broker section
+        // (topics, subscriptions, backlogs, in-flight), read after the cut
+        // under the same topic locks the broker logs under — the fuzzy-cut
+        // argument covers it (DESIGN.md, "Broker").
         let snap = match (&inner.broker, &inner.carried_broker) {
-            (Some(b), _) => snap.set("version", 3u64).set("broker", b.snapshot_json()),
+            (Some(b), _) => snap.set("broker", b.snapshot_json()),
             // store-only writer on a broker-bearing dir: pass the
-            // recovered section through unchanged
-            (None, Some(bj)) => snap.set("version", 3u64).set("broker", bj.clone()),
+            // recovered (chain-folded) section through unchanged
+            (None, Some(bj)) => snap.set("broker", bj.clone()),
             (None, None) => snap,
         };
         let seq = inner.checkpoint_seq.fetch_add(1, Ordering::Relaxed) + 1;
@@ -562,27 +948,13 @@ impl Persist {
             .set("seq", seq)
             .set("start_lsn", start_lsn)
             .set("snapshot", snap);
-        let mut text = String::new();
-        body.write_to(&mut text);
         let path = checkpoint_path(&inner.dir, seq);
-        let tmp = path.with_extension("json.tmp");
-        {
-            let mut f = File::create(&tmp)
-                .with_context(|| format!("creating {}", tmp.display()))?;
-            f.write_all(text.as_bytes())?;
-            if inner.opts.fsync != FsyncMode::Never {
-                f.sync_data()?;
-            }
-        }
-        std::fs::rename(&tmp, &path)
-            .with_context(|| format!("publishing checkpoint {}", path.display()))?;
-        if inner.opts.fsync != FsyncMode::Never {
-            sync_dir(&inner.dir);
-        }
-        // retention first: drop all but the newest `checkpoint_keep`
-        // checkpoints, then prune the WAL only to the oldest cut we still
-        // retain — if this checkpoint ever fails to parse, the fallback
-        // still has its full replay suffix on disk
+        let bytes = self.publish_json(&body, &path)?;
+        // retention first: drop all but the newest `checkpoint_keep` BASES
+        // plus every delta (this base supersedes any chain), then prune
+        // the WAL only to the oldest base cut still retained — if this
+        // checkpoint ever fails to parse, the fallback still has its full
+        // replay suffix on disk
         let prune_lsn = {
             let mut retained = inner.retained.lock().unwrap();
             retained.push((seq, start_lsn));
@@ -595,24 +967,110 @@ impl Persist {
                     let _ = std::fs::remove_file(checkpoint_path(&inner.dir, old));
                 }
             }
+            if let Ok(dseqs) = list_by(&inner.dir, delta_seq_of) {
+                for &old in dseqs.iter().filter(|&&s| s < seq) {
+                    let _ = std::fs::remove_file(delta_path(&inner.dir, old));
+                }
+            }
             retained.iter().map(|&(_, lsn)| lsn).min().unwrap_or(start_lsn)
         };
         let segments_deleted = inner.wal.prune_below(prune_lsn);
-        inner.last_checkpoint_lsn.store(start_lsn, Ordering::Relaxed);
-        let report = CheckpointReport {
+        {
+            let mut chain = inner.chain.lock().unwrap();
+            chain.base_seq = seq;
+            chain.tail_seq = seq;
+            chain.len = 0;
+        }
+        Ok(CheckpointReport {
             seq,
             start_lsn,
-            bytes: text.len() as u64,
+            bytes,
             duration_ms: t0.elapsed().as_secs_f64() * 1e3,
             segments_deleted,
+            full: true,
+            base_seq: seq,
+            chain_len: 0,
+            rows,
+            skipped: false,
+        })
+    }
+
+    fn write_delta(
+        &self,
+        store: &Store,
+        start_lsn: u64,
+        t0: Instant,
+        dirty: &DirtySets,
+        broker_dirty: &[String],
+    ) -> Result<CheckpointReport> {
+        let inner = &*self.inner;
+        let rows = dirty.total() as u64;
+        let delta = store.delta_snapshot(dirty);
+        let (base_seq, prev_seq, new_len) = {
+            let chain = inner.chain.lock().unwrap();
+            (chain.base_seq, chain.tail_seq, chain.len + 1)
         };
-        inner.metrics.counter("persist.checkpoint.count").inc();
-        inner.metrics.counter("persist.checkpoint.bytes").add(report.bytes);
-        inner
-            .metrics
-            .histogram("persist.checkpoint.duration_us")
-            .observe((report.duration_ms * 1e3) as u64);
-        Ok(report)
+        let seq = inner.checkpoint_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut body = Json::obj()
+            .set("version", 1u64)
+            .set("kind", "delta")
+            .set("seq", seq)
+            .set("base_seq", base_seq)
+            .set("prev_seq", prev_seq)
+            .set("start_lsn", start_lsn)
+            .set("delta", delta);
+        if let Some(b) = &inner.broker {
+            if !broker_dirty.is_empty() {
+                // touched topics read after the cut under their topic
+                // locks — the same fuzzy-cut argument as the store tables
+                body = body.set("broker", b.delta_json(broker_dirty));
+            }
+        }
+        let path = delta_path(&inner.dir, seq);
+        let bytes = self.publish_json(&body, &path)?;
+        // no retention and no WAL pruning here: the prune horizon is the
+        // oldest retained BASE's cut (regression-pinned — pruning to a
+        // delta cut would strand exactly the base fallback a mid-chain
+        // corruption needs), and that horizon only moves when a base lands
+        {
+            let mut chain = inner.chain.lock().unwrap();
+            chain.tail_seq = seq;
+            chain.len = new_len;
+        }
+        Ok(CheckpointReport {
+            seq,
+            start_lsn,
+            bytes,
+            duration_ms: t0.elapsed().as_secs_f64() * 1e3,
+            segments_deleted: 0,
+            full: false,
+            base_seq,
+            chain_len: new_len,
+            rows,
+            skipped: false,
+        })
+    }
+
+    /// Checkpoint topology for the `/api/health` persist section: current
+    /// base, delta-chain length, last checkpoint size, and the live
+    /// dirty-row counts the next delta would write.
+    pub fn checkpoint_topology(&self, store: &Store) -> Json {
+        let inner = &*self.inner;
+        let (base_seq, chain_len) = {
+            let chain = inner.chain.lock().unwrap();
+            (chain.base_seq, chain.len)
+        };
+        let mut j = Json::obj()
+            .set("base_seq", base_seq)
+            .set("chain_len", chain_len)
+            .set("last_seq", inner.checkpoint_seq.load(Ordering::Relaxed))
+            .set("last_bytes", inner.last_checkpoint_bytes.load(Ordering::Relaxed))
+            .set("dirty", store.dirty_counts())
+            .set("dirty_total", store.dirty_total());
+        if let Some(b) = &inner.broker {
+            j = j.set("dirty_topics", b.dirty_topic_count());
+        }
+        j
     }
 
     /// Live durability stats for `/api/health`.
@@ -635,6 +1093,10 @@ impl Persist {
             .set(
                 "last_checkpoint_lsn",
                 self.inner.last_checkpoint_lsn.load(Ordering::Relaxed),
+            )
+            .set(
+                "last_checkpoint_bytes",
+                self.inner.last_checkpoint_bytes.load(Ordering::Relaxed),
             );
         if let Some(e) = wal.io_error() {
             j = j.set("io_error", e);
@@ -675,6 +1137,7 @@ mod tests {
             fsync: FsyncMode::Never,
             checkpoint_keep: 2,
             flush_idle_ms: 5,
+            ..PersistOptions::default()
         }
     }
 
@@ -769,9 +1232,9 @@ mod tests {
         for i in 0..10 {
             s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null);
         }
-        let first = p.checkpoint(&s).unwrap();
+        let first = p.checkpoint_full(&s).unwrap();
         s.add_request("late", "u", RequestKind::Workflow, Json::Null);
-        let second = p.checkpoint(&s).unwrap();
+        let second = p.checkpoint_full(&s).unwrap();
         p.shutdown();
         // newest checkpoint parses as JSON but cannot restore (bad version)
         std::fs::write(
@@ -914,12 +1377,130 @@ mod tests {
         let (p, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
         for i in 0..4 {
             s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null);
-            p.checkpoint(&s).unwrap();
+            p.checkpoint_full(&s).unwrap();
         }
         let ckpts = list_by(&dir, checkpoint_seq_of).unwrap();
         assert_eq!(ckpts.len(), 2, "retention must keep checkpoint_keep files");
         assert_eq!(ckpts, vec![3, 4]);
         p.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn delta_checkpoints_chain_and_recover() {
+        let dir = tmp_dir("delta");
+        let s = store();
+        let (p, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+        for i in 0..20 {
+            s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null);
+        }
+        let base = p.checkpoint(&s).unwrap();
+        assert!(base.full, "the first checkpoint must be a base");
+        let ids = s.requests_with_status(RequestStatus::New);
+        s.update_requests_status(&ids[..3], RequestStatus::Transforming);
+        let d1 = p.checkpoint_delta(&s).unwrap();
+        assert!(!d1.full);
+        assert_eq!(d1.base_seq, base.seq);
+        assert_eq!(d1.chain_len, 1);
+        assert_eq!(d1.rows, 3, "a delta writes only the dirty rows");
+        assert!(d1.bytes < base.bytes, "delta bytes scale with churn");
+        assert!(delta_path(&dir, d1.seq).exists());
+        s.update_requests_status(&ids[..1], RequestStatus::Finished);
+        let d2 = p.checkpoint_delta(&s).unwrap();
+        assert_eq!(d2.chain_len, 2);
+        assert_eq!(d2.rows, 1);
+        // suffix past the last delta
+        s.add_request("suffix", "u", RequestKind::Workflow, Json::Null);
+        p.shutdown();
+
+        let s2 = store();
+        let (p2, report) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+        assert_eq!(report.checkpoint_seq, Some(base.seq), "the base anchors recovery");
+        assert_eq!(report.deltas_folded, 2);
+        assert_eq!(report.start_lsn, d2.start_lsn, "replay starts at the chain tail");
+        assert_eq!(s2.counts().get("requests").unwrap().as_u64(), Some(21));
+        assert_eq!(s2.requests_with_status(RequestStatus::Transforming).len(), 2);
+        assert_eq!(s2.requests_with_status(RequestStatus::Finished), ids[..1].to_vec());
+        p2.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn auto_policy_compacts_on_chain_length_and_dirty_ratio() {
+        let dir = tmp_dir("policy");
+        let s = store();
+        let tuned = PersistOptions { delta_chain_max: 2, delta_dirty_ratio: 0.5, ..opts() };
+        let (p, _) = Persist::open(&dir, tuned, &s, Registry::default()).unwrap();
+        let ids: Vec<_> = (0..40)
+            .map(|i| s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null))
+            .collect();
+        assert!(p.checkpoint(&s).unwrap().full, "no base yet → base");
+        // small churn → deltas, until the chain cap forces compaction
+        s.update_requests_status(&ids[..2], RequestStatus::Transforming);
+        assert!(!p.checkpoint(&s).unwrap().full);
+        s.update_requests_status(&ids[..2], RequestStatus::Finished);
+        assert!(!p.checkpoint(&s).unwrap().full);
+        s.update_requests_status(&ids[2..4], RequestStatus::Transforming);
+        let compacted = p.checkpoint(&s).unwrap();
+        assert!(compacted.full, "chain at delta_chain_max must compact to a base");
+        assert_eq!(compacted.chain_len, 0);
+        assert!(
+            list_by(&dir, delta_seq_of).unwrap().is_empty(),
+            "a new base supersedes and removes the old chain"
+        );
+        // heavy churn → ratio forces a base even with a short chain
+        s.update_requests_status(&ids, RequestStatus::Transforming);
+        assert!(p.checkpoint(&s).unwrap().full, "dirty ratio >= threshold must compact");
+        p.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quiescent_auto_checkpoints_write_nothing() {
+        let dir = tmp_dir("quiescent");
+        let s = store();
+        let (p, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+        for i in 0..5 {
+            s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null);
+        }
+        let base = p.checkpoint(&s).unwrap();
+        assert!(base.full && !base.skipped);
+        // nothing changed since the base: every further auto tick is free
+        for _ in 0..3 {
+            let r = p.checkpoint(&s).unwrap();
+            assert!(r.skipped, "an idle interval must not write a file");
+            assert_eq!(r.seq, base.seq);
+            assert_eq!(r.chain_len, 0, "skips must not lengthen the chain");
+        }
+        assert!(list_by(&dir, delta_seq_of).unwrap().is_empty());
+        // forced calls are explicit requests for a file and still write
+        assert!(!p.checkpoint_delta(&s).unwrap().skipped);
+        // ... and new work re-arms the auto path
+        s.add_request("r2", "u", RequestKind::Workflow, Json::Null);
+        let r = p.checkpoint(&s).unwrap();
+        assert!(!r.skipped);
+        assert_eq!(r.rows, 1);
+        p.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_delta_checkpoint_is_valid() {
+        let dir = tmp_dir("emptydelta");
+        let s = store();
+        let (p, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+        s.add_request("r", "u", RequestKind::Workflow, Json::Null);
+        p.checkpoint(&s).unwrap();
+        // nothing dirty: the delta is empty but keeps the chain linked
+        let d = p.checkpoint_delta(&s).unwrap();
+        assert!(!d.full);
+        assert_eq!(d.rows, 0);
+        p.shutdown();
+        let s2 = store();
+        let (p2, report) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+        assert_eq!(report.deltas_folded, 1);
+        assert_eq!(s2.counts().get("requests").unwrap().as_u64(), Some(1));
+        p2.shutdown();
         std::fs::remove_dir_all(&dir).ok();
     }
 }

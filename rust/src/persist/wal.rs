@@ -560,6 +560,19 @@ impl Wal {
         }
     }
 
+    /// Block until `lsn` is durable and report honestly: `true` only when
+    /// the durable mark passed `lsn` *and* no write error has been
+    /// recorded (the mark advances past failed flushes by design so
+    /// waiters never hang — see [`Wal::sync`]). The synchronous-submit
+    /// REST path (`persist.sync_submit`) gates its `201` on this, still
+    /// riding group commit: every waiter of one flush batch shares its
+    /// single fsync.
+    pub fn wait_durable(&self, lsn: u64) -> bool {
+        self.sync(lsn);
+        let d = self.inner.d.lock().unwrap();
+        d.lsn >= lsn && d.io_error.is_none()
+    }
+
     /// Rotate the live segment (if it has frames) and delete closed
     /// segments that only contain LSNs below `start_lsn` — called after a
     /// successful checkpoint. Returns how many segment files were removed.
@@ -750,6 +763,25 @@ mod tests {
         let scan = scan_segment(&segment_path(&dir, 1)).unwrap();
         assert_eq!(scan.end, ScanEnd::Clean);
         assert_eq!(scan.events.len(), 100);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wait_durable_reports_fsynced_lsns() {
+        let dir = tmp_dir("waitdur");
+        let metrics = Registry::default();
+        let (wal, flusher) =
+            Wal::create(&dir, 1 << 30, FsyncMode::Never, 5, 1, 1, Vec::new(), 0, &metrics).unwrap();
+        for i in 0..10u64 {
+            wal.log(ev(i));
+        }
+        let target = wal.next_lsn() - 1;
+        assert!(wal.wait_durable(target), "a flushed lsn must report durable");
+        assert!(wal.durable_lsn() >= target);
+        // a stopped WAL cannot promise future durability
+        wal.stop();
+        flusher.join().unwrap();
+        assert!(!wal.wait_durable(target + 100));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -66,10 +66,18 @@ impl Client {
         self.expect_ok("GET", "/api/health", None)
     }
 
-    /// Force a durable checkpoint on the head service; returns the
-    /// checkpoint report. Errors when the service runs without a data dir.
+    /// Force a durable checkpoint on the head service — always writes a
+    /// file: a delta of the rows touched since the last cut, or a base
+    /// when none exists yet. Returns the checkpoint report; errors when
+    /// the service runs without a data dir.
     pub fn checkpoint(&self) -> Result<Json> {
         self.expect_ok("POST", "/api/admin/checkpoint", None)
+    }
+
+    /// Force a full *base* checkpoint (compaction on demand) — the
+    /// `?full=1` form of `POST /api/admin/checkpoint`.
+    pub fn checkpoint_full(&self) -> Result<Json> {
+        self.expect_ok("POST", "/api/admin/checkpoint?full=1", None)
     }
 
     /// Submit a workflow; returns the request id.

@@ -50,6 +50,9 @@ pub struct ServerState {
     pub broker: Broker,
     pub metrics: Registry,
     pub persist: Option<Persist>,
+    /// `persist.sync_submit`: acknowledge `POST /api/requests` only after
+    /// the group-commit flusher fsynced the submit's LSN.
+    sync_submit: bool,
     started: std::time::Instant,
     tokens: Arc<Vec<String>>,
 }
@@ -61,11 +64,16 @@ impl ServerState {
             .and_then(|j| j.as_arr())
             .map(|a| a.iter().filter_map(|t| t.as_str().map(str::to_string)).collect())
             .unwrap_or_default();
+        let sync_submit = config
+            .get("persist.sync_submit")
+            .and_then(|j| j.as_bool())
+            .unwrap_or(false);
         ServerState {
             store,
             broker,
             metrics,
             persist: None,
+            sync_submit,
             started: std::time::Instant::now(),
             tokens: Arc::new(tokens),
         }
@@ -127,7 +135,10 @@ pub fn route(state: &ServerState, req: Request) -> Response {
             // counters, which are process-lifetime and reset at boot
             .set("broker", state.broker.health_json());
         if let Some(p) = &state.persist {
-            body = body.set("persist", p.stats());
+            // WAL stats plus checkpoint topology: base seq, delta-chain
+            // length, dirty-row counts per table, last checkpoint bytes
+            body = body
+                .set("persist", p.stats().set("checkpoint", p.checkpoint_topology(&state.store)));
         }
         return ok_json(body);
     }
@@ -248,13 +259,28 @@ pub fn route(state: &ServerState, req: Request) -> Response {
         }
 
         ("POST", ["api", "admin", "checkpoint"]) => match &state.persist {
-            Some(p) => match p.checkpoint(&state.store) {
-                Ok(report) => {
-                    state.metrics.counter("rest.checkpoints_triggered").inc();
-                    ok_json(report.to_json())
+            Some(p) => {
+                // an explicit admin request always writes a file (the
+                // quiescent skip is for the periodic auto path only):
+                // the default writes a delta (a base when none exists),
+                // ?full=1 forces a base (compaction on demand)
+                let full = req
+                    .query_param("full")
+                    .map(|v| v == "1" || v == "true")
+                    .unwrap_or(false);
+                let result = if full {
+                    p.checkpoint_full(&state.store)
+                } else {
+                    p.checkpoint_delta(&state.store)
+                };
+                match result {
+                    Ok(report) => {
+                        state.metrics.counter("rest.checkpoints_triggered").inc();
+                        ok_json(report.to_json())
+                    }
+                    Err(e) => err_json(500, &format!("checkpoint failed: {e}")),
                 }
-                Err(e) => err_json(500, &format!("checkpoint failed: {e}")),
-            },
+            }
             None => err_json(503, "persistence not configured (start with --data-dir)"),
         },
 
@@ -311,6 +337,24 @@ fn handle_submit(state: &ServerState, req: &Request) -> Response {
     let id = state
         .store
         .add_request(name, requester, kind, workflow.clone());
+    if state.sync_submit {
+        if let Some(p) = &state.persist {
+            // synchronous commit, still riding group commit: wait for the
+            // current WAL head (>= this submit's LSN — the event was
+            // enqueued inside add_request), so concurrent submits all
+            // share the flusher's single fsync
+            let lsn = p.wal().next_lsn().saturating_sub(1);
+            if !p.wal().wait_durable(lsn) {
+                state.metrics.counter("rest.submit_sync_failures").inc();
+                return Response::json(
+                    500,
+                    Json::obj()
+                        .set("error", "write-ahead log failed before the submit became durable")
+                        .set("request_id", id),
+                );
+            }
+        }
+    }
     state.metrics.counter("rest.requests_submitted").inc();
     Response::json(201, Json::obj().set("request_id", id))
 }
@@ -394,6 +438,63 @@ mod tests {
         let mut r = authed_req("POST", "/api/admin/checkpoint", "");
         r.headers.clear();
         assert_eq!(route(&s, r).status, 401);
+    }
+
+    #[test]
+    fn sync_submit_acknowledges_after_durable_and_full_forces_base() {
+        let clock = Arc::new(WallClock::new());
+        let store = Store::new(clock.clone());
+        let dir = std::env::temp_dir()
+            .join(format!("idds-rest-sync-{}-{}", std::process::id(), crate::util::next_id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = crate::persist::PersistOptions {
+            fsync: crate::persist::FsyncMode::Never,
+            flush_idle_ms: 2,
+            ..Default::default()
+        };
+        let (persist, _) =
+            crate::persist::Persist::open(&dir, opts, &store, Registry::default()).unwrap();
+        let mut cfg = Config::defaults();
+        cfg.apply_override("persist.sync_submit=true").unwrap();
+        let s = ServerState::new(store, Broker::new(clock), Registry::default(), &cfg)
+            .with_persist(persist.clone());
+
+        let body = format!(
+            r#"{{"name": "r1", "requester": "u", "workflow": {}}}"#,
+            wf_json()
+        );
+        let resp = route(&s, authed_req("POST", "/api/requests", &body));
+        assert_eq!(resp.status, 201, "sync submit still acknowledges");
+        // the 201 implies the submit's event is past the durable mark
+        assert!(persist.wal().durable_lsn() >= 1);
+
+        // health now carries the checkpoint topology
+        let mut r = authed_req("GET", "/api/health", "");
+        r.headers.clear();
+        let resp = route(&s, r);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(j.get_path(&["persist", "checkpoint", "chain_len"]).is_some());
+        assert_eq!(
+            j.get_path(&["persist", "checkpoint", "dirty", "requests"])
+                .and_then(|v| v.as_u64()),
+            Some(1),
+            "the un-checkpointed submit shows as a dirty row"
+        );
+
+        // default checkpoint obeys the policy (first one is a base);
+        // ?full=1 forces a base explicitly
+        let resp = route(&s, authed_req("POST", "/api/admin/checkpoint", ""));
+        assert_eq!(resp.status, 200);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("base"));
+        let mut r = authed_req("POST", "/api/admin/checkpoint", "");
+        r.query = vec![("full".into(), "1".into())];
+        let resp = route(&s, r);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("base"), "?full=1 forces a base");
+        assert_eq!(j.get("chain_len").unwrap().as_u64(), Some(0));
+        persist.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

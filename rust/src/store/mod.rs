@@ -47,9 +47,9 @@ mod replay;
 pub mod snapshot;
 pub mod types;
 
-use std::collections::{BTreeMap, BTreeSet, HashMap};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, OnceLock, RwLock};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use crate::persist::{PersistEvent, Persister};
 use crate::util::clock::Clock;
@@ -71,6 +71,37 @@ pub enum StoreError {
 }
 
 pub type Result<T> = std::result::Result<T, StoreError>;
+
+/// Per-table dirty-row ids accumulated since the last delta-checkpoint
+/// drain (sorted, deduplicated) — the input [`Store::delta_snapshot`]
+/// encodes. Produced by [`Store::take_dirty`]; a checkpoint that fails
+/// after draining must hand the sets back via [`Store::restore_dirty`] or
+/// the next delta would silently miss those rows.
+#[derive(Debug, Default, Clone)]
+pub struct DirtySets {
+    pub requests: Vec<Id>,
+    pub transforms: Vec<Id>,
+    pub processings: Vec<Id>,
+    pub collections: Vec<Id>,
+    pub contents: Vec<Id>,
+    pub messages: Vec<Id>,
+}
+
+impl DirtySets {
+    /// Total dirty rows across all six tables.
+    pub fn total(&self) -> usize {
+        self.requests.len()
+            + self.transforms.len()
+            + self.processings.len()
+            + self.collections.len()
+            + self.contents.len()
+            + self.messages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total() == 0
+    }
+}
 
 /// Number of row-lock stripes per table (power of two; ids are assigned
 /// sequentially, so consecutive inserts land on distinct stripes).
@@ -137,6 +168,18 @@ struct Sharded<R: StatusRec> {
     can: fn(R::S, R::S) -> bool,
     shards: Vec<RwLock<HashMap<Id, R>>>,
     status_sets: Vec<RwLock<BTreeSet<Id>>>,
+    /// Ids mutated since the last delta-checkpoint drain, one leaf-lock set
+    /// per stripe. Marked inside the id's shard-lock critical section,
+    /// *before* the mutation's [`PersistEvent`] can receive an LSN — that
+    /// ordering is what makes the delta cut fuzzy-safe (DESIGN.md, "Delta
+    /// checkpoints"). Lock order: shard write lock → dirty mutex, never
+    /// the reverse; checkpoint drains take only the dirty mutexes.
+    dirty: Vec<Mutex<HashSet<Id>>>,
+    /// Gate for the dirty sets: off by default so non-durable runs (pure
+    /// simulations, benches) pay one relaxed load and accrete nothing;
+    /// flipped once by `Persist::open` between the checkpoint install
+    /// and WAL replay (see [`Store::enable_dirty_tracking`]).
+    dirty_enabled: AtomicBool,
     len: AtomicUsize,
     generation: AtomicU64,
 }
@@ -150,8 +193,37 @@ impl<R: StatusRec + Clone> Sharded<R> {
             status_sets: (0..<R::S as StatusEnum>::COUNT)
                 .map(|_| RwLock::new(BTreeSet::new()))
                 .collect(),
+            dirty: (0..STRIPES).map(|_| Mutex::new(HashSet::new())).collect(),
+            dirty_enabled: AtomicBool::new(false),
             len: AtomicUsize::new(0),
             generation: AtomicU64::new(0),
+        }
+    }
+
+    fn mark_dirty(&self, id: Id) {
+        if self.dirty_enabled.load(Ordering::Relaxed) {
+            self.dirty[stripe_of(id)].lock().unwrap().insert(id);
+        }
+    }
+
+    fn dirty_len(&self) -> usize {
+        self.dirty.iter().map(|d| d.lock().unwrap().len()).sum()
+    }
+
+    /// Drain the dirty ids (sorted). The caller owns making them durable —
+    /// on failure it must hand them back via [`Sharded::mark_dirty_many`].
+    fn take_dirty(&self) -> Vec<Id> {
+        let mut out = Vec::new();
+        for d in &self.dirty {
+            out.extend(std::mem::take(&mut *d.lock().unwrap()));
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn mark_dirty_many(&self, ids: &[Id]) {
+        for &id in ids {
+            self.mark_dirty(id);
         }
     }
 
@@ -181,6 +253,7 @@ impl<R: StatusRec + Clone> Sharded<R> {
             }
             shard.insert(id, rec);
             self.status_sets[status.index()].write().unwrap().insert(id);
+            self.mark_dirty(id);
             log();
         }
         self.len.fetch_add(1, Ordering::Relaxed);
@@ -196,10 +269,14 @@ impl<R: StatusRec + Clone> Sharded<R> {
     fn with_mut<T>(&self, id: Id, f: impl FnOnce(&mut R) -> T) -> Result<T> {
         let out = {
             let mut shard = self.shards[stripe_of(id)].write().unwrap();
-            shard
+            let rec = shard
                 .get_mut(&id)
-                .map(f)
-                .ok_or(StoreError::NotFound { kind: self.kind, id })?
+                .ok_or(StoreError::NotFound { kind: self.kind, id })?;
+            // dirty BEFORE `f`: callers log their event inside `f`, and
+            // the mark must precede the LSN assignment (fuzzy-cut rule) —
+            // a drain that misses the mark must imply the event replays
+            self.mark_dirty(id);
+            f(rec)
         };
         self.bump();
         Ok(out)
@@ -254,6 +331,7 @@ impl<R: StatusRec + Clone> Sharded<R> {
             if from != to {
                 self.reindex(id, from, to);
             }
+            self.mark_dirty(id);
             log();
         }
         self.bump();
@@ -274,6 +352,7 @@ impl<R: StatusRec + Clone> Sharded<R> {
                     if from != to {
                         self.reindex(id, from, to);
                     }
+                    self.mark_dirty(id);
                     true
                 }
                 None => false,
@@ -326,6 +405,12 @@ impl<R: StatusRec + Clone> Sharded<R> {
             }
             moved += moves.len();
             moves.sort_unstable();
+            if self.dirty_enabled.load(Ordering::Relaxed) {
+                let mut d = self.dirty[si].lock().unwrap();
+                for (_, id) in &moves {
+                    d.insert(*id);
+                }
+            }
             // one (from-set, to-set) lock pair per from-status run, still
             // under the shard lock, locks ordered by slot
             let b = to.index();
@@ -387,6 +472,10 @@ struct ContentsIndex {
 struct ContentsStore {
     shards: Vec<RwLock<HashMap<Id, ContentRec>>>,
     index: RwLock<ContentsIndex>,
+    /// Delta-checkpoint dirty ids, striped like [`Sharded::dirty`].
+    dirty: Vec<Mutex<HashSet<Id>>>,
+    /// See [`Sharded::dirty_enabled`].
+    dirty_enabled: AtomicBool,
     len: AtomicUsize,
     generation: AtomicU64,
 }
@@ -396,6 +485,8 @@ impl ContentsStore {
         ContentsStore {
             shards: (0..STRIPES).map(|_| RwLock::new(HashMap::new())).collect(),
             index: RwLock::new(ContentsIndex::default()),
+            dirty: (0..STRIPES).map(|_| Mutex::new(HashSet::new())).collect(),
+            dirty_enabled: AtomicBool::new(false),
             len: AtomicUsize::new(0),
             generation: AtomicU64::new(0),
         }
@@ -403,6 +494,31 @@ impl ContentsStore {
 
     fn bump(&self) {
         self.generation.fetch_add(1, Ordering::Release);
+    }
+
+    fn mark_dirty(&self, id: Id) {
+        if self.dirty_enabled.load(Ordering::Relaxed) {
+            self.dirty[stripe_of(id)].lock().unwrap().insert(id);
+        }
+    }
+
+    fn dirty_len(&self) -> usize {
+        self.dirty.iter().map(|d| d.lock().unwrap().len()).sum()
+    }
+
+    fn take_dirty(&self) -> Vec<Id> {
+        let mut out = Vec::new();
+        for d in &self.dirty {
+            out.extend(std::mem::take(&mut *d.lock().unwrap()));
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn mark_dirty_many(&self, ids: &[Id]) {
+        for &id in ids {
+            self.mark_dirty(id);
+        }
     }
 }
 
@@ -440,6 +556,12 @@ struct Inner {
     contents: ContentsStore,
     messages: RwLock<MessagesTable>,
     messages_gen: AtomicU64,
+    /// Delta-checkpoint dirty ids for the two single-lock tables (marked
+    /// under the table lock, same ordering rule as [`Sharded::dirty`]).
+    collections_dirty: Mutex<HashSet<Id>>,
+    messages_dirty: Mutex<HashSet<Id>>,
+    /// See [`Sharded::dirty_enabled`] — gates the two sets above.
+    dirty_enabled: AtomicBool,
     /// transform -> collections index
     coll_by_transform: RwLock<HashMap<Id, Vec<Id>>>,
     /// request -> transforms index
@@ -460,6 +582,9 @@ impl Store {
                 contents: ContentsStore::new(),
                 messages: RwLock::new(MessagesTable::default()),
                 messages_gen: AtomicU64::new(0),
+                collections_dirty: Mutex::new(HashSet::new()),
+                messages_dirty: Mutex::new(HashSet::new()),
+                dirty_enabled: AtomicBool::new(false),
                 coll_by_transform: RwLock::new(HashMap::new()),
                 tf_by_request: RwLock::new(HashMap::new()),
                 persister: OnceLock::new(),
@@ -543,6 +668,94 @@ impl Store {
         self.inner.messages_gen.load(Ordering::Acquire)
     }
 
+    // -- dirty tracking (delta checkpoints) ----------------------------------
+
+    /// Turn dirty tracking on. `Persist::open` calls this once — after
+    /// the checkpoint install (those rows are already durable in the
+    /// files just loaded; marking them would force a full base and spike
+    /// memory by O(table size)) but *before* WAL replay, whose effects
+    /// must ride in the next delta once its cut moves past the replayed
+    /// suffix. Off by default: non-durable runs (simulations, benches)
+    /// pay one relaxed load per mutation and accrete no sets.
+    pub fn enable_dirty_tracking(&self) {
+        self.inner.requests.dirty_enabled.store(true, Ordering::Relaxed);
+        self.inner.transforms.dirty_enabled.store(true, Ordering::Relaxed);
+        self.inner.processings.dirty_enabled.store(true, Ordering::Relaxed);
+        self.inner.contents.dirty_enabled.store(true, Ordering::Relaxed);
+        self.inner.dirty_enabled.store(true, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn dirty_on(&self) -> bool {
+        self.inner.dirty_enabled.load(Ordering::Relaxed)
+    }
+
+    /// Drain every table's dirty-id set. Called by `Persist` *after* the
+    /// checkpoint cut LSN has been read — any mutation whose WAL event
+    /// predates the cut marked itself dirty before the drain (the mark
+    /// happens before the log enqueue, inside the same lock critical
+    /// section), so it lands in this drain; anything later is covered by
+    /// the WAL suffix. See DESIGN.md, "Delta checkpoints".
+    pub fn take_dirty(&self) -> DirtySets {
+        let drain_set = |m: &Mutex<HashSet<Id>>| {
+            let mut v: Vec<Id> = std::mem::take(&mut *m.lock().unwrap()).into_iter().collect();
+            v.sort_unstable();
+            v
+        };
+        DirtySets {
+            requests: self.inner.requests.take_dirty(),
+            transforms: self.inner.transforms.take_dirty(),
+            processings: self.inner.processings.take_dirty(),
+            collections: drain_set(&self.inner.collections_dirty),
+            contents: self.inner.contents.take_dirty(),
+            messages: drain_set(&self.inner.messages_dirty),
+        }
+    }
+
+    /// Re-mark previously drained dirty ids — the failure path of a delta
+    /// checkpoint that could not be made durable.
+    pub fn restore_dirty(&self, sets: DirtySets) {
+        self.inner.requests.mark_dirty_many(&sets.requests);
+        self.inner.transforms.mark_dirty_many(&sets.transforms);
+        self.inner.processings.mark_dirty_many(&sets.processings);
+        self.inner.collections_dirty.lock().unwrap().extend(sets.collections);
+        self.inner.contents.mark_dirty_many(&sets.contents);
+        self.inner.messages_dirty.lock().unwrap().extend(sets.messages);
+    }
+
+    /// Dirty rows accumulated since the last drain (all tables) — the
+    /// numerator of the delta-vs-base compaction policy.
+    pub fn dirty_total(&self) -> usize {
+        self.inner.requests.dirty_len()
+            + self.inner.transforms.dirty_len()
+            + self.inner.processings.dirty_len()
+            + self.inner.collections_dirty.lock().unwrap().len()
+            + self.inner.contents.dirty_len()
+            + self.inner.messages_dirty.lock().unwrap().len()
+    }
+
+    /// Total live rows across all tables — the denominator of the
+    /// compaction policy and the scale a base checkpoint pays for.
+    pub fn rows_total(&self) -> usize {
+        self.inner.requests.len()
+            + self.inner.transforms.len()
+            + self.inner.processings.len()
+            + self.inner.collections.read().unwrap().len()
+            + self.inner.contents.len.load(Ordering::Relaxed)
+            + self.inner.messages.read().unwrap().rows.len()
+    }
+
+    /// Per-table dirty-row counts for the `/api/health` persist section.
+    pub fn dirty_counts(&self) -> Json {
+        Json::obj()
+            .set("requests", self.inner.requests.dirty_len())
+            .set("transforms", self.inner.transforms.dirty_len())
+            .set("processings", self.inner.processings.dirty_len())
+            .set("collections", self.inner.collections_dirty.lock().unwrap().len())
+            .set("contents", self.inner.contents.dirty_len())
+            .set("messages", self.inner.messages_dirty.lock().unwrap().len())
+    }
+
     // -- rec inserts (snapshot restore + WAL replay: preserve ids, statuses
     //    and timestamps; insert-if-absent so replay over a fuzzy checkpoint
     //    cannot duplicate rows or index entries) ------------------------------
@@ -578,6 +791,9 @@ impl Store {
                 return false;
             }
             colls.insert(id, rec);
+            if self.dirty_on() {
+                self.inner.collections_dirty.lock().unwrap().insert(id);
+            }
         }
         self.inner
             .coll_by_transform
@@ -598,6 +814,7 @@ impl Store {
                 return false;
             }
             shard.insert(id, rec);
+            c.mark_dirty(id);
         }
         {
             let mut idx = c.index.write().unwrap();
@@ -622,6 +839,9 @@ impl Store {
             }
             t.rows.insert(id, rec);
             t.by_status.entry(status).or_default().insert(id);
+            if self.dirty_on() {
+                self.inner.messages_dirty.lock().unwrap().insert(id);
+            }
         }
         self.inner.messages_gen.fetch_add(1, Ordering::Release);
         true
@@ -706,6 +926,27 @@ impl Store {
             rec.updated_at = now;
             if let Some(p) = &p {
                 p.log(PersistEvent::RequestEngine { id, engine: rec.engine.clone(), at: now });
+            }
+        })
+    }
+
+    /// Fold a compact workflow-engine *delta* (absolute counter values for
+    /// the templates that changed, newly completed instances, monotone
+    /// next-instance id — see `crate::workflow::StateUpdate::Delta`) into
+    /// the request row's full engine state in place, and log only the
+    /// delta (`PersistEvent::RequestEngineDelta`). The Marshaller's
+    /// per-completion state writes go through here, so WAL bytes per
+    /// completion stay O(changed templates), not O(all templates); the
+    /// full state appears only in checkpoints. Replay applies the same
+    /// fold, which is idempotent (absolute values, set-union completions).
+    pub fn apply_engine_delta(&self, id: Id, delta: Json) -> Result<()> {
+        let now = self.now();
+        let p = self.persister().cloned();
+        self.inner.requests.with_mut(id, |rec| {
+            crate::workflow::fold_engine_state(&mut rec.engine, &delta);
+            rec.updated_at = now;
+            if let Some(p) = &p {
+                p.log(PersistEvent::RequestEngineDelta { id, delta, at: now });
             }
         })
     }
@@ -926,6 +1167,9 @@ impl Store {
         {
             let mut colls = self.inner.collections.write().unwrap();
             colls.insert(id, rec);
+            if self.dirty_on() {
+                self.inner.collections_dirty.lock().unwrap().insert(id);
+            }
             // log under the collections lock: close_collection on this id
             // serializes behind it, so WAL order matches apply order
             if let Some(p) = self.persister() {
@@ -966,6 +1210,9 @@ impl Store {
             .get_mut(&id)
             .ok_or(StoreError::NotFound { kind: "collection", id })?;
         rec.status = CollectionStatus::Closed;
+        if self.dirty_on() {
+            self.inner.collections_dirty.lock().unwrap().insert(id);
+        }
         if let Some(p) = self.persister() {
             p.log(PersistEvent::CloseCollection { id });
         }
@@ -1012,13 +1259,18 @@ impl Store {
         if ids.is_empty() {
             return ids;
         }
+        let track_dirty = c.dirty_enabled.load(Ordering::Relaxed);
         for (si, rows) in by_shard.into_iter().enumerate() {
             if rows.is_empty() {
                 continue;
             }
             let mut shard = c.shards[si].write().unwrap();
             shard.reserve(rows.len());
+            let mut d = if track_dirty { Some(c.dirty[si].lock().unwrap()) } else { None };
             for (id, rec) in rows {
+                if let Some(d) = d.as_mut() {
+                    d.insert(id);
+                }
                 shard.insert(id, rec);
             }
         }
@@ -1117,6 +1369,7 @@ impl Store {
                 .get_mut(&id)
                 .ok_or(StoreError::NotFound { kind: "content", id })?;
             rec.ddm_file = Some(ddm_file);
+            c.mark_dirty(id);
             if let Some(p) = self.persister() {
                 p.log(PersistEvent::ContentDdmFile { id, ddm_file });
             }
@@ -1154,6 +1407,7 @@ impl Store {
                 }
                 idx.by_coll_status.entry((coll, to)).or_default().insert(id);
             }
+            c.mark_dirty(id);
             if let Some(p) = self.persister() {
                 p.log(PersistEvent::ContentStatus { ids: vec![id], to, at: now });
             }
@@ -1205,6 +1459,12 @@ impl Store {
             }
             moved += moves.len();
             moves.sort_unstable();
+            if c.dirty_enabled.load(Ordering::Relaxed) {
+                let mut d = c.dirty[si].lock().unwrap();
+                for (_, _, id) in &moves {
+                    d.insert(*id);
+                }
+            }
             // pass 2: one index lookup per (coll, from) run, under the
             // shard lock
             let mut idx = c.index.write().unwrap();
@@ -1266,6 +1526,9 @@ impl Store {
             let mut t = self.inner.messages.write().unwrap();
             t.rows.insert(id, rec);
             t.by_status.entry(MessageStatus::New).or_default().insert(id);
+            if self.dirty_on() {
+                self.inner.messages_dirty.lock().unwrap().insert(id);
+            }
             Store::emit(ev);
         }
         self.inner.messages_gen.fetch_add(1, Ordering::Release);
@@ -1304,6 +1567,9 @@ impl Store {
             let from = rec.status;
             rec.status = to;
             t.reindex(id, from, to);
+            if self.dirty_on() {
+                self.inner.messages_dirty.lock().unwrap().insert(id);
+            }
             if let Some(p) = self.persister() {
                 p.log(PersistEvent::MessageStatus { ids: vec![id], to });
             }
@@ -1324,6 +1590,9 @@ impl Store {
             match from {
                 Some(from) => {
                     t.reindex(id, from, to);
+                    if self.dirty_on() {
+                        self.inner.messages_dirty.lock().unwrap().insert(id);
+                    }
                     true
                 }
                 None => false,
@@ -1373,6 +1642,9 @@ impl Store {
                 .entry(MessageStatus::Delivered)
                 .or_default()
                 .extend(ids.iter().copied());
+            if self.dirty_on() {
+                self.inner.messages_dirty.lock().unwrap().extend(ids.iter().copied());
+            }
             if let Some(p) = self.persister() {
                 p.log(PersistEvent::MessageStatus { ids, to: MessageStatus::Delivered });
             }
@@ -1623,6 +1895,49 @@ mod tests {
             s.requests_with_status_limit(RequestStatus::New, 1000),
             sorted
         );
+    }
+
+    #[test]
+    fn dirty_sets_track_writes_and_drain() {
+        let s = store();
+        s.enable_dirty_tracking();
+        let rid = s.add_request("r", "u", RequestKind::DataCarousel, Json::Null);
+        let tid = s.add_transform(rid, "w", Json::Null);
+        let cid = s.add_collection(tid, "in", CollectionKind::Input);
+        let ids = s.add_contents(cid, (0..20).map(|i| (format!("f{i}"), 1)));
+        let mid = s.add_message("t", None, Json::Null);
+        let d = s.take_dirty();
+        assert_eq!(d.requests, vec![rid]);
+        assert_eq!(d.transforms, vec![tid]);
+        assert_eq!(d.collections, vec![cid]);
+        assert_eq!(d.contents, ids);
+        assert_eq!(d.messages, vec![mid]);
+        assert_eq!(d.total(), 23 + 1);
+        // drained: nothing dirty until the next write
+        assert_eq!(s.dirty_total(), 0);
+        assert!(s.take_dirty().is_empty());
+        // only the touched rows re-dirty
+        s.update_contents_status(&ids[..5], ContentStatus::Staging);
+        s.update_request_status(rid, RequestStatus::Transforming).unwrap();
+        let d2 = s.take_dirty();
+        assert_eq!(d2.requests, vec![rid]);
+        assert_eq!(d2.contents, ids[..5].to_vec());
+        assert!(d2.transforms.is_empty() && d2.messages.is_empty());
+        // a failed checkpoint hands the sets back
+        s.restore_dirty(d2.clone());
+        assert_eq!(s.dirty_total(), d2.total());
+        assert_eq!(
+            s.dirty_counts().get("contents").unwrap().as_u64(),
+            Some(5),
+            "per-table dirty counts feed /api/health"
+        );
+        let again = s.take_dirty();
+        assert_eq!(again.requests, d2.requests);
+        assert_eq!(again.contents, d2.contents);
+        // tracking is opt-in: a fresh store accretes nothing
+        let plain = store();
+        plain.add_request("r", "u", RequestKind::Workflow, Json::Null);
+        assert_eq!(plain.dirty_total(), 0, "tracking must be off by default");
     }
 
     #[test]

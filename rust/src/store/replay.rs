@@ -50,6 +50,15 @@ impl Store {
                     rec.updated_at = *at;
                 });
             }
+            PersistEvent::RequestEngineDelta { id, delta, at } => {
+                // same fold the live `apply_engine_delta` used: absolute
+                // values + set-union completions, so re-folding a delta a
+                // checkpoint already captured converges
+                let _ = self.inner.requests.with_mut(*id, |rec| {
+                    crate::workflow::fold_engine_state(&mut rec.engine, delta);
+                    rec.updated_at = *at;
+                });
+            }
             PersistEvent::AddTransform { id, request_id, name, work, at } => {
                 self.insert_transform_rec(TransformRec {
                     id: *id,
@@ -288,6 +297,40 @@ mod tests {
         assert_eq!(r.updated_at, 2.0);
         // unknown ids are skipped silently
         s.apply_event(&PersistEvent::RequestEngine { id: 99, engine: Json::Null, at: 3.0 });
+    }
+
+    #[test]
+    fn replay_engine_delta_folds_and_is_idempotent() {
+        let s = store();
+        s.apply_event(&PersistEvent::AddRequest {
+            id: 6,
+            name: "r".into(),
+            requester: "u".into(),
+            kind: RequestKind::Workflow,
+            workflow: Json::Null,
+            at: 0.0,
+        });
+        let delta = PersistEvent::RequestEngineDelta {
+            id: 6,
+            delta: Json::obj()
+                .set("instances", Json::obj().set("a", 1u64))
+                .set("completed", Json::Arr(vec![Json::from(1u64)]))
+                .set("next_instance", 2u64),
+            at: 1.0,
+        };
+        s.apply_event(&delta);
+        let once = s.get_request(6).unwrap().engine;
+        assert_eq!(once.get_path(&["instances", "a"]).and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(once.get("completed_floor").and_then(|v| v.as_u64()), Some(1));
+        // re-delivery over a checkpoint that already folded it: no change
+        s.apply_event(&delta);
+        assert_eq!(s.get_request(6).unwrap().engine, once);
+        // unknown ids are skipped silently
+        s.apply_event(&PersistEvent::RequestEngineDelta {
+            id: 999,
+            delta: Json::obj(),
+            at: 2.0,
+        });
     }
 
     #[test]

@@ -27,27 +27,40 @@
 //! leaves the `broker` key to the broker's own restore path. Version 2
 //! snapshots (no broker section) still load everywhere.
 //!
+//! Format version 4 is the delta-checkpoint era: the table layout is
+//! unchanged (v2/v3 still load), but the same per-row encoding now also
+//! serves **delta payloads** — [`Store::delta_snapshot`] encodes only the
+//! rows named in a [`super::DirtySets`] drain, and recovery folds a chain
+//! of such deltas onto a base snapshot row-by-row (full-row last-write-
+//! wins upserts, see [`DecodedSnapshot::fold`]) before a single install.
+//! The store has no row deletions, so a delta is purely upserts; the
+//! broker's delta section (which does delete) lives with the broker.
+//!
 //! Snapshot reads walk the sorted status indexes, so output order is
 //! deterministic without any sorting here. Restore goes through the
 //! insert-if-absent rec paths, which rebuild the striped status indexes
 //! and bump each table's generation counter — daemons resume
 //! change-driven polling correctly after a restore.
 
+use std::collections::HashMap;
+
 use anyhow::{Context, Result};
 
 use crate::util::json::{parse, Json};
 
 use super::types::*;
-use super::Store;
+use super::{DirtySets, Store};
 
 fn opt_f64(j: &Json, key: &str, default: f64) -> f64 {
     j.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
 }
 
-/// Fully decoded snapshot — phase 1 of restore. Building this validates
-/// every record without touching the store.
+/// Fully decoded snapshot (or delta payload — same row types) — phase 1
+/// of restore. Building this validates every record without touching the
+/// store, and crash recovery folds a delta chain onto it before the
+/// single phase-2 install.
 #[derive(Default)]
-struct DecodedSnapshot {
+pub(crate) struct DecodedSnapshot {
     requests: Vec<RequestRec>,
     transforms: Vec<TransformRec>,
     collections: Vec<CollectionRec>,
@@ -57,10 +70,73 @@ struct DecodedSnapshot {
     max_id: Id,
 }
 
+/// Replace-or-append every delta generation of one table into `base` by
+/// id — the chain fold's last-write-wins upsert. The id→position map is
+/// built **once per table for the whole chain** (not per delta), so
+/// folding a `delta_chain_max`-long chain onto a 10M-row base costs
+/// O(base + Σ delta rows), not O(chain × base).
+fn fold_table<R>(base: &mut Vec<R>, chain: Vec<Vec<R>>, id_of: fn(&R) -> Id) {
+    if chain.iter().all(|rows| rows.is_empty()) {
+        return;
+    }
+    let mut pos: HashMap<Id, usize> =
+        base.iter().enumerate().map(|(i, r)| (id_of(r), i)).collect();
+    for rows in chain {
+        for r in rows {
+            let id = id_of(&r);
+            match pos.get(&id).copied() {
+                Some(i) => base[i] = r,
+                None => {
+                    pos.insert(id, base.len());
+                    base.push(r);
+                }
+            }
+        }
+    }
+}
+
+impl DecodedSnapshot {
+    /// Fold a whole decoded delta chain onto this (decoded base) state in
+    /// order: every delta row carries the full row state at its cut, so
+    /// the fold is a per-table upsert by id and later deltas win.
+    pub(crate) fn fold_chain(&mut self, deltas: Vec<DecodedSnapshot>) {
+        if deltas.is_empty() {
+            return;
+        }
+        let n = deltas.len();
+        let mut requests = Vec::with_capacity(n);
+        let mut transforms = Vec::with_capacity(n);
+        let mut collections = Vec::with_capacity(n);
+        let mut contents = Vec::with_capacity(n);
+        let mut processings = Vec::with_capacity(n);
+        let mut messages = Vec::with_capacity(n);
+        for d in deltas {
+            self.max_id = self.max_id.max(d.max_id);
+            requests.push(d.requests);
+            transforms.push(d.transforms);
+            collections.push(d.collections);
+            contents.push(d.contents);
+            processings.push(d.processings);
+            messages.push(d.messages);
+        }
+        fold_table(&mut self.requests, requests, |r| r.id);
+        fold_table(&mut self.transforms, transforms, |r| r.id);
+        fold_table(&mut self.collections, collections, |r| r.id);
+        fold_table(&mut self.contents, contents, |r| r.id);
+        fold_table(&mut self.processings, processings, |r| r.id);
+        fold_table(&mut self.messages, messages, |r| r.id);
+    }
+
+    /// Single-delta fold (tests, incremental callers).
+    pub(crate) fn fold(&mut self, delta: DecodedSnapshot) {
+        self.fold_chain(vec![delta]);
+    }
+}
+
 fn decode_snapshot(snap: &Json, now: f64) -> Result<DecodedSnapshot> {
     let version = snap.get("version").and_then(|v| v.as_u64()).unwrap_or(0);
     anyhow::ensure!(
-        (1..=3).contains(&version),
+        (1..=4).contains(&version),
         "unsupported snapshot version {version}"
     );
     let mut d = DecodedSnapshot::default();
@@ -189,28 +265,103 @@ fn decode_snapshot(snap: &Json, now: f64) -> Result<DecodedSnapshot> {
     Ok(d)
 }
 
+// -- per-row encoders (shared by full snapshots and delta payloads) --------
+
+fn request_row(r: &RequestRec) -> Json {
+    let mut j = Json::obj()
+        .set("id", r.id)
+        .set("name", r.name.as_str())
+        .set("requester", r.requester.as_str())
+        .set("kind", r.kind.as_str())
+        .set("status", r.status.as_str())
+        .set("workflow", r.workflow.clone())
+        .set("created_at", r.created_at)
+        .set("updated_at", r.updated_at);
+    if !r.engine.is_null() {
+        // workflow-engine evaluation state (optional field since format
+        // v2; older snapshots simply lack it)
+        j = j.set("engine", r.engine.clone());
+    }
+    j
+}
+
+fn transform_row(t: &TransformRec) -> Json {
+    Json::obj()
+        .set("id", t.id)
+        .set("request_id", t.request_id)
+        .set("name", t.name.as_str())
+        .set("status", t.status.as_str())
+        .set("work", t.work.clone())
+        .set("retries", t.retries as u64)
+        .set("created_at", t.created_at)
+        .set("updated_at", t.updated_at)
+}
+
+fn collection_row(c: &CollectionRec) -> Json {
+    Json::obj()
+        .set("id", c.id)
+        .set("transform_id", c.transform_id)
+        .set("name", c.name.as_str())
+        .set("kind", c.kind.as_str())
+        .set("closed", c.status == CollectionStatus::Closed)
+        .set("created_at", c.created_at)
+}
+
+fn content_row(c: &ContentRec) -> Json {
+    let mut j = Json::obj()
+        .set("id", c.id)
+        .set("collection_id", c.collection_id)
+        .set("name", c.name.as_str())
+        .set("size", c.size_bytes)
+        .set("status", c.status.as_str())
+        .set("updated_at", c.updated_at);
+    if let Some(d) = c.ddm_file {
+        j = j.set("ddm_file", d);
+    }
+    j
+}
+
+fn processing_row(p: &ProcessingRec) -> Json {
+    let mut j = Json::obj()
+        .set("id", p.id)
+        .set("transform_id", p.transform_id)
+        .set("status", p.status.as_str())
+        .set("created_at", p.created_at)
+        .set("updated_at", p.updated_at);
+    if let Some(t) = p.wfm_task {
+        j = j.set("wfm_task", t);
+    }
+    if let Some(t) = p.submitted_at {
+        j = j.set("submitted_at", t);
+    }
+    if let Some(t) = p.finished_at {
+        j = j.set("finished_at", t);
+    }
+    j
+}
+
+fn message_row(m: &MessageRec) -> Json {
+    let mut j = Json::obj()
+        .set("id", m.id)
+        .set("topic", m.topic.as_str())
+        .set("payload", m.payload.clone())
+        .set("status", m.status.as_str())
+        .set("created_at", m.created_at);
+    if let Some(src) = m.source_transform {
+        j = j.set("source_transform", src);
+    }
+    j
+}
+
 impl Store {
-    /// Serialize everything to a JSON value (snapshot format version 2).
+    /// Serialize everything to a JSON value (snapshot format version 4;
+    /// table layout unchanged since v2).
     pub fn snapshot(&self) -> Json {
         let mut requests = Vec::new();
         for status in RequestStatus::ALL {
             for id in self.requests_with_status(*status) {
                 if let Ok(r) = self.get_request(id) {
-                    let mut j = Json::obj()
-                        .set("id", r.id)
-                        .set("name", r.name.as_str())
-                        .set("requester", r.requester.as_str())
-                        .set("kind", r.kind.as_str())
-                        .set("status", r.status.as_str())
-                        .set("workflow", r.workflow.clone())
-                        .set("created_at", r.created_at)
-                        .set("updated_at", r.updated_at);
-                    if !r.engine.is_null() {
-                        // workflow-engine evaluation state (optional field
-                        // of format v2; older snapshots simply lack it)
-                        j = j.set("engine", r.engine.clone());
-                    }
-                    requests.push(j);
+                    requests.push(request_row(&r));
                 }
             }
         }
@@ -221,41 +372,13 @@ impl Store {
             let rid = req.get("id").unwrap().as_u64().unwrap();
             for tid in self.transforms_of_request(rid) {
                 if let Ok(t) = self.get_transform(tid) {
-                    transforms.push(
-                        Json::obj()
-                            .set("id", t.id)
-                            .set("request_id", t.request_id)
-                            .set("name", t.name.as_str())
-                            .set("status", t.status.as_str())
-                            .set("work", t.work.clone())
-                            .set("retries", t.retries as u64)
-                            .set("created_at", t.created_at)
-                            .set("updated_at", t.updated_at),
-                    );
+                    transforms.push(transform_row(&t));
                 }
                 for coll in self.collections_of_transform(tid) {
-                    collections.push(
-                        Json::obj()
-                            .set("id", coll.id)
-                            .set("transform_id", coll.transform_id)
-                            .set("name", coll.name.as_str())
-                            .set("kind", coll.kind.as_str())
-                            .set("closed", coll.status == CollectionStatus::Closed)
-                            .set("created_at", coll.created_at),
-                    );
+                    collections.push(collection_row(&coll));
                     for cid in self.contents_of_collection(coll.id) {
                         if let Ok(c) = self.get_content(cid) {
-                            let mut j = Json::obj()
-                                .set("id", c.id)
-                                .set("collection_id", c.collection_id)
-                                .set("name", c.name.as_str())
-                                .set("size", c.size_bytes)
-                                .set("status", c.status.as_str())
-                                .set("updated_at", c.updated_at);
-                            if let Some(d) = c.ddm_file {
-                                j = j.set("ddm_file", d);
-                            }
-                            contents.push(j);
+                            contents.push(content_row(&c));
                         }
                     }
                 }
@@ -265,22 +388,7 @@ impl Store {
         for status in ProcessingStatus::ALL {
             for pid in self.processings_with_status(*status) {
                 if let Ok(p) = self.get_processing(pid) {
-                    let mut j = Json::obj()
-                        .set("id", p.id)
-                        .set("transform_id", p.transform_id)
-                        .set("status", p.status.as_str())
-                        .set("created_at", p.created_at)
-                        .set("updated_at", p.updated_at);
-                    if let Some(t) = p.wfm_task {
-                        j = j.set("wfm_task", t);
-                    }
-                    if let Some(t) = p.submitted_at {
-                        j = j.set("submitted_at", t);
-                    }
-                    if let Some(t) = p.finished_at {
-                        j = j.set("finished_at", t);
-                    }
-                    processings.push(j);
+                    processings.push(processing_row(&p));
                 }
             }
         }
@@ -288,21 +396,65 @@ impl Store {
         for status in MessageStatus::ALL {
             for mid in self.messages_with_status(*status) {
                 if let Ok(m) = self.get_message(mid) {
-                    let mut j = Json::obj()
-                        .set("id", m.id)
-                        .set("topic", m.topic.as_str())
-                        .set("payload", m.payload.clone())
-                        .set("status", m.status.as_str())
-                        .set("created_at", m.created_at);
-                    if let Some(src) = m.source_transform {
-                        j = j.set("source_transform", src);
-                    }
-                    messages.push(j);
+                    messages.push(message_row(&m));
                 }
             }
         }
         Json::obj()
-            .set("version", 2u64)
+            .set("version", 4u64)
+            .set("requests", Json::Arr(requests))
+            .set("transforms", Json::Arr(transforms))
+            .set("collections", Json::Arr(collections))
+            .set("contents", Json::Arr(contents))
+            .set("processings", Json::Arr(processings))
+            .set("messages", Json::Arr(messages))
+    }
+
+    /// Encode only the rows named in `dirty` — the payload of a **delta
+    /// checkpoint**. Same per-row format and table keys as the full
+    /// snapshot (so the same decoder reads it); ids sorted (the drain
+    /// sorts), rows carry their *current* full state, which is what makes
+    /// the chain fold a plain last-write-wins upsert. The store never
+    /// deletes rows, so a store delta has no removal list.
+    pub fn delta_snapshot(&self, dirty: &DirtySets) -> Json {
+        let mut requests = Vec::with_capacity(dirty.requests.len());
+        for &id in &dirty.requests {
+            if let Ok(r) = self.get_request(id) {
+                requests.push(request_row(&r));
+            }
+        }
+        let mut transforms = Vec::with_capacity(dirty.transforms.len());
+        for &id in &dirty.transforms {
+            if let Ok(t) = self.get_transform(id) {
+                transforms.push(transform_row(&t));
+            }
+        }
+        let mut collections = Vec::with_capacity(dirty.collections.len());
+        for &id in &dirty.collections {
+            if let Ok(c) = self.get_collection(id) {
+                collections.push(collection_row(&c));
+            }
+        }
+        let mut contents = Vec::with_capacity(dirty.contents.len());
+        for &id in &dirty.contents {
+            if let Ok(c) = self.get_content(id) {
+                contents.push(content_row(&c));
+            }
+        }
+        let mut processings = Vec::with_capacity(dirty.processings.len());
+        for &id in &dirty.processings {
+            if let Ok(p) = self.get_processing(id) {
+                processings.push(processing_row(&p));
+            }
+        }
+        let mut messages = Vec::with_capacity(dirty.messages.len());
+        for &id in &dirty.messages {
+            if let Ok(m) = self.get_message(id) {
+                messages.push(message_row(&m));
+            }
+        }
+        Json::obj()
+            .set("version", 4u64)
             .set("requests", Json::Arr(requests))
             .set("transforms", Json::Arr(transforms))
             .set("collections", Json::Arr(collections))
@@ -330,8 +482,16 @@ impl Store {
         Ok(decode_snapshot(snap, 0.0)?.max_id)
     }
 
-    pub fn restore(&self, snap: &Json) -> Result<Id> {
-        let decoded = decode_snapshot(snap, self.now())?;
+    /// Phase-1 decode against this store's clock (v1 rows without
+    /// timestamps default to now). Crash recovery holds the result while
+    /// it validates and folds the delta chain, then installs once.
+    pub(crate) fn decode_snapshot_json(&self, snap: &Json) -> Result<DecodedSnapshot> {
+        decode_snapshot(snap, self.now())
+    }
+
+    /// Phase 2: install a decoded (possibly chain-folded) snapshot into
+    /// this (empty) store and advance the process-wide id counter.
+    pub(crate) fn install_decoded(&self, decoded: DecodedSnapshot) -> Id {
         let max_id = decoded.max_id;
         for rec in decoded.requests {
             self.insert_request_rec(rec);
@@ -352,7 +512,11 @@ impl Store {
             self.insert_message_rec(rec);
         }
         crate::util::advance_next_id(max_id);
-        Ok(max_id)
+        max_id
+    }
+
+    pub fn restore(&self, snap: &Json) -> Result<Id> {
+        Ok(self.install_decoded(self.decode_snapshot_json(snap)?))
     }
 
     pub fn restore_from_file(&self, path: &std::path::Path) -> Result<Id> {
@@ -494,5 +658,60 @@ mod tests {
     fn restore_rejects_bad_version() {
         let s = Store::new(Arc::new(WallClock::new()));
         assert!(s.restore(&Json::obj().set("version", 99u64)).is_err());
+    }
+
+    #[test]
+    fn delta_snapshot_folds_onto_base_exactly() {
+        let s = populated();
+        s.enable_dirty_tracking();
+        let _ = s.take_dirty(); // reset the baseline at the "base cut"
+        let base = s.snapshot();
+        // churn a small subset of rows past the cut
+        let rid = s.requests_with_status(RequestStatus::Transforming)[0];
+        let tid = s.transforms_of_request(rid)[0];
+        let coll = s.collections_of_transform(tid)[0].id;
+        let ids = s.contents_of_collection(coll);
+        s.update_contents_status(&ids[20..30], ContentStatus::Staging);
+        s.set_content_ddm_file(ids[25], 4242).unwrap();
+        s.update_transform_status(tid, TransformStatus::Running).unwrap();
+        let mid = s.add_message("t2", None, Json::obj().set("late", true));
+        let dirty = s.take_dirty();
+        assert!(dirty.total() > 0 && dirty.total() < 20, "delta covers churn only");
+        let delta = s.delta_snapshot(&dirty);
+        assert_eq!(
+            delta.get("contents").unwrap().as_arr().unwrap().len(),
+            10,
+            "delta contents = exactly the churned rows"
+        );
+        // fold base + delta into a fresh store: identical to live
+        let s2 = Store::new(Arc::new(WallClock::new()));
+        let mut decoded = s2.decode_snapshot_json(&base).unwrap();
+        decoded.fold(s2.decode_snapshot_json(&delta).unwrap());
+        s2.install_decoded(decoded);
+        assert_eq!(s.snapshot(), s2.snapshot(), "base+delta fold must equal live");
+        assert_eq!(s2.get_content(ids[25]).unwrap().ddm_file, Some(4242));
+        assert_eq!(s2.get_message(mid).unwrap().topic, "t2");
+        assert_eq!(s2.count_contents(coll, ContentStatus::Staging), 20);
+    }
+
+    #[test]
+    fn delta_fold_is_last_write_wins_per_row() {
+        let s = populated();
+        s.enable_dirty_tracking();
+        let _ = s.take_dirty();
+        let base = s.snapshot();
+        let rid = s.requests_with_status(RequestStatus::Transforming)[0];
+        s.update_request_status(rid, RequestStatus::Finished).unwrap();
+        let d1 = s.delta_snapshot(&s.take_dirty());
+        // a second delta touching the same row must win over the first
+        let s_mid = Store::new(Arc::new(WallClock::new()));
+        {
+            let mut dec = s_mid.decode_snapshot_json(&base).unwrap();
+            dec.fold(s_mid.decode_snapshot_json(&d1).unwrap());
+            dec.fold(s_mid.decode_snapshot_json(&d1).unwrap()); // re-fold: idempotent
+            s_mid.install_decoded(dec);
+        }
+        assert_eq!(s_mid.get_request(rid).unwrap().status, RequestStatus::Finished);
+        assert_eq!(s.snapshot(), s_mid.snapshot());
     }
 }

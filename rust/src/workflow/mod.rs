@@ -228,6 +228,70 @@ impl Workflow {
     }
 }
 
+/// What a daemon should write to the store after an engine step: the
+/// **full** serialized state ([`Engine::state_json`] — the first write of
+/// a fresh or reconciled engine, whose store row may still be null) or a
+/// compact **delta** (absolute counter values for the templates that
+/// changed, newly completed instances, the monotone next id). Deltas are
+/// folded back into full state by [`fold_engine_state`]; the WAL carries
+/// only the delta (`PersistEvent::RequestEngineDelta`), so per-completion
+/// log bytes stay O(changed), not O(all templates) — the full state
+/// appears only in store rows and checkpoints.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StateUpdate {
+    Full(Json),
+    Delta(Json),
+}
+
+/// Fold a [`StateUpdate::Delta`] payload into a serialized full engine
+/// state in place — the store's row fold and WAL replay share this.
+/// Counter values are absolute (overwrite), completed instances advance
+/// the floor+stragglers form exactly like [`Engine::mark_complete`], and
+/// `next_instance` is monotone (max) — so re-folding an already-included
+/// delta is a no-op and replaying any WAL suffix converges. A `Null` base
+/// (engine state never written) folds into a minimal valid state.
+pub fn fold_engine_state(base: &mut Json, delta: &Json) {
+    if !matches!(base, Json::Obj(_)) {
+        *base = Json::obj();
+    }
+    let Json::Obj(map) = base else { unreachable!() };
+    if let Some(Json::Obj(counters)) = delta.get("instances") {
+        let entry = map.entry("instances".to_string()).or_insert_with(Json::obj);
+        if !matches!(entry, Json::Obj(_)) {
+            *entry = Json::obj();
+        }
+        if let Json::Obj(dst) = entry {
+            for (k, v) in counters {
+                dst.insert(k.clone(), v.clone());
+            }
+        }
+    }
+    let cur_next = map.get("next_instance").and_then(|v| v.as_u64()).unwrap_or(1);
+    let new_next = delta.get("next_instance").and_then(|v| v.as_u64()).unwrap_or(1);
+    map.insert("next_instance".to_string(), Json::from(cur_next.max(new_next)));
+    let mut floor = map.get("completed_floor").and_then(|v| v.as_u64()).unwrap_or(0);
+    let mut stragglers: BTreeSet<u64> = map
+        .get("completed")
+        .and_then(|c| c.as_arr())
+        .map(|a| a.iter().filter_map(|v| v.as_u64()).collect())
+        .unwrap_or_default();
+    if let Some(done) = delta.get("completed").and_then(|c| c.as_arr()) {
+        for i in done.iter().filter_map(|v| v.as_u64()) {
+            if i > floor {
+                stragglers.insert(i);
+            }
+        }
+    }
+    while stragglers.remove(&(floor + 1)) {
+        floor += 1;
+    }
+    map.insert("completed_floor".to_string(), Json::from(floor));
+    map.insert(
+        "completed".to_string(),
+        Json::Arr(stragglers.into_iter().map(Json::from).collect()),
+    );
+}
+
 /// Per-request evaluation state over a shared [`CompiledWorkflow`]:
 /// instance counters (the cycle bound), the set of Work instances whose
 /// completion has already been evaluated (restart idempotence), and the
@@ -253,6 +317,16 @@ pub struct Engine {
     /// freshly created — its counters may lag transforms written in the
     /// crash window, so callers materializing its works must deduplicate.
     recovered: bool,
+    /// Template indexes whose counters changed since the last
+    /// [`Engine::take_state_update`] drain.
+    pending_counters: BTreeSet<usize>,
+    /// Instances newly marked complete since the last drain.
+    pending_completed: Vec<u64>,
+    /// `next_instance` moved since the last drain.
+    pending_next: bool,
+    /// The next drained update must be the full state: fresh engines and
+    /// reconciled ones have no (or a null) store row to fold a delta onto.
+    needs_full: bool,
 }
 
 impl Engine {
@@ -274,6 +348,10 @@ impl Engine {
             completed: BTreeSet::new(),
             next_instance: 1,
             recovered: false,
+            pending_counters: BTreeSet::new(),
+            pending_completed: Vec::new(),
+            pending_next: false,
+            needs_full: true,
         }
     }
 
@@ -330,10 +408,10 @@ impl Engine {
     /// (otherwise one early failure pins the floor and the serialized
     /// completed set grows with every later work).
     pub fn mark_complete(&mut self, instance: u64) {
-        if instance <= self.completed_floor {
-            return;
+        if instance <= self.completed_floor || !self.completed.insert(instance) {
+            return; // already recorded: nothing changed, nothing pending
         }
-        self.completed.insert(instance);
+        self.pending_completed.push(instance);
         // drain any now-consecutive run into the floor
         while self.completed.remove(&(self.completed_floor + 1)) {
             self.completed_floor += 1;
@@ -386,6 +464,8 @@ impl Engine {
         }
         let iteration = self.instances[idx];
         self.instances[idx] += 1;
+        self.pending_counters.insert(idx);
+        self.pending_next = true;
         let mut params = tpl.defaults.clone();
         for (k, v) in overrides {
             params.insert(k, v);
@@ -467,6 +547,10 @@ impl Engine {
             .and_then(|v| v.as_u64())
             .unwrap_or(1)
             .max(1);
+        // the row we resumed from already holds this state: later writes
+        // can be deltas folded onto it, and nothing is pending yet
+        e.clear_pending();
+        e.needs_full = false;
         e
     }
 
@@ -484,8 +568,52 @@ impl Engine {
     /// would mint a fresh name and duplicate the fan-out instead.
     pub fn clamp_to_materialized(&mut self, works: impl IntoIterator<Item = Work>) {
         for w in works {
-            self.next_instance = self.next_instance.max(w.instance + 1);
+            if w.instance + 1 > self.next_instance {
+                self.next_instance = w.instance + 1;
+                self.pending_next = true;
+            }
         }
+    }
+
+    fn clear_pending(&mut self) {
+        self.pending_counters.clear();
+        self.pending_completed.clear();
+        self.pending_next = false;
+    }
+
+    /// Drain the state changes accumulated since the last call into what
+    /// the caller should persist: `Full` for the first write of a fresh or
+    /// reconciled engine (their store row may be null — a delta would have
+    /// no base to fold onto), `Delta` afterwards, `None` when nothing
+    /// changed. The delta carries absolute counter values for exactly the
+    /// templates that changed, so folding it (and re-folding it on WAL
+    /// replay) converges — see [`fold_engine_state`].
+    pub fn take_state_update(&mut self) -> Option<StateUpdate> {
+        let changed = !self.pending_counters.is_empty()
+            || !self.pending_completed.is_empty()
+            || self.pending_next;
+        if self.needs_full {
+            self.needs_full = false;
+            self.clear_pending();
+            return Some(StateUpdate::Full(self.state_json()));
+        }
+        if !changed {
+            return None;
+        }
+        let mut counters = Json::obj();
+        for &idx in &self.pending_counters {
+            counters =
+                counters.set(self.compiled.template_name(idx), self.instances[idx] as u64);
+        }
+        let delta = Json::obj()
+            .set("instances", counters)
+            .set(
+                "completed",
+                Json::Arr(self.pending_completed.iter().map(|&i| Json::from(i)).collect()),
+            )
+            .set("next_instance", self.next_instance);
+        self.clear_pending();
+        Some(StateUpdate::Delta(delta))
     }
 
     /// Fallback restoration for snapshots that predate persisted engine
@@ -812,6 +940,97 @@ mod tests {
         let e2 = Engine::resume(Arc::clone(e.compiled()), &s);
         assert!(e2.already_completed(1) && e2.already_completed(2) && e2.already_completed(3));
         assert!(!e2.already_completed(4));
+    }
+
+    #[test]
+    fn state_update_deltas_fold_to_full_state() {
+        // drive a cyclic workflow; after every step, fold the drained
+        // update into a shadow row — the shadow must track state_json
+        // exactly (this is the store-row/WAL-replay contract)
+        let wf = Workflow::new("loop")
+            .add_template(WorkTemplate::new("a").max_instances(4))
+            .add_condition(Condition::always("a", "a"))
+            .entry("a");
+        let mut e = Engine::new(wf).unwrap();
+        let mut row = Json::Null;
+        let mut apply = |row: &mut Json, upd: Option<StateUpdate>| match upd {
+            Some(StateUpdate::Full(j)) => *row = j,
+            Some(StateUpdate::Delta(d)) => fold_engine_state(row, &d),
+            None => {}
+        };
+        let mut frontier = e.start();
+        let first = e.take_state_update();
+        assert!(
+            matches!(first, Some(StateUpdate::Full(_))),
+            "a fresh engine's first write must be the full state"
+        );
+        apply(&mut row, first);
+        assert_eq!(row, e.state_json());
+        while let Some(w) = frontier.pop() {
+            frontier.extend(e.on_complete(&w, &Json::obj()).unwrap());
+            let upd = e.take_state_update();
+            assert!(
+                matches!(upd, Some(StateUpdate::Delta(_))),
+                "steady-state writes must be deltas"
+            );
+            apply(&mut row, upd);
+            assert_eq!(row, e.state_json(), "fold chain must track the live state");
+        }
+        // nothing pending after the drain
+        assert_eq!(e.take_state_update(), None);
+        // an engine resumed from the folded row equals the live one
+        let resumed = Engine::resume(Arc::clone(e.compiled()), &row);
+        assert_eq!(resumed.state_json(), e.state_json());
+    }
+
+    #[test]
+    fn fold_engine_state_is_idempotent_and_null_safe() {
+        let delta = Json::obj()
+            .set("instances", Json::obj().set("a", 2u64))
+            .set("completed", Json::Arr(vec![Json::from(2u64)]))
+            .set("next_instance", 3u64);
+        let mut row = Json::Null;
+        fold_engine_state(&mut row, &delta);
+        assert_eq!(row.get_path(&["instances", "a"]).and_then(|v| v.as_u64()), Some(2));
+        assert_eq!(row.get("completed_floor").and_then(|v| v.as_u64()), Some(0));
+        let once = row.clone();
+        // re-fold (WAL replay over a checkpoint that already holds it)
+        fold_engine_state(&mut row, &delta);
+        assert_eq!(row, once, "re-folding an included delta must be a no-op");
+        // filling the gap drains the straggler into the floor
+        let fill = Json::obj()
+            .set("completed", Json::Arr(vec![Json::from(1u64)]))
+            .set("next_instance", 3u64);
+        fold_engine_state(&mut row, &fill);
+        assert_eq!(row.get("completed_floor").and_then(|v| v.as_u64()), Some(2));
+        assert!(row.get("completed").unwrap().as_arr().unwrap().is_empty());
+        // next_instance is monotone: an older delta cannot move it back
+        let stale = Json::obj().set("next_instance", 2u64);
+        fold_engine_state(&mut row, &stale);
+        assert_eq!(row.get("next_instance").and_then(|v| v.as_u64()), Some(3));
+    }
+
+    #[test]
+    fn resumed_engine_updates_are_deltas() {
+        let wf = Workflow::new("loop")
+            .add_template(WorkTemplate::new("a").max_instances(3))
+            .add_condition(Condition::always("a", "a"))
+            .entry("a");
+        let mut live = Engine::new(wf.clone()).unwrap();
+        let w0 = live.start().pop().unwrap();
+        let _ = live.take_state_update();
+        let row = live.state_json();
+        let (compiled, _) = WorkflowRegistry::global().intern(&wf).unwrap();
+        let mut resumed = Engine::resume(compiled, &row);
+        // the row already holds the resumed state: no Full rewrite needed
+        assert_eq!(resumed.take_state_update(), None);
+        let mut shadow = row.clone();
+        let _ = resumed.on_complete(&w0, &Json::obj()).unwrap();
+        match resumed.take_state_update() {
+            Some(StateUpdate::Delta(d)) => fold_engine_state(&mut shadow, &d),
+            other => panic!("expected a delta, got {other:?}"),
+        }
+        assert_eq!(shadow, resumed.state_json());
     }
 
     #[test]

@@ -9,7 +9,13 @@
 //! restart, without duplicating already-fired fan-out), and broker round
 //! trips (kill-and-restart preserves per-subscriber backlogs and un-acked
 //! in-flight deliveries, plus a property check that the recovered broker
-//! equals the live one over random publish/poll/ack interleavings).
+//! equals the live one over random publish/poll/ack interleavings), and
+//! the delta-checkpoint chain: a property test interleaving random
+//! base/delta checkpoints with random mutations (recover == live for
+//! store *and* broker), a kill-between-deltas restart, a corrupt
+//! mid-chain delta falling back to the newest intact base, and the
+//! WAL-retention rule that makes that fallback lossless (segments are
+//! pruned only to the oldest retained *base* cut, never a delta's).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -46,6 +52,7 @@ fn opts() -> PersistOptions {
         fsync: FsyncMode::Group,  // tier1 runs this in release, fsync paths live
         checkpoint_keep: 2,
         flush_idle_ms: 2,
+        ..PersistOptions::default()
     }
 }
 
@@ -475,6 +482,277 @@ fn prop_broker_recovery_equals_live_after_random_interleavings() {
         std::fs::remove_dir_all(&dir).ok();
         Ok(())
     });
+}
+
+fn delta_file(dir: &std::path::Path, seq: u64) -> PathBuf {
+    dir.join(format!("checkpoint-{seq:08}.delta.json"))
+}
+
+#[test]
+fn prop_delta_chain_recovery_equals_live() {
+    check("recover(base + delta chain + wal suffix) == live store+broker", 8, |rng| {
+        let dir = tmp_dir("dprop");
+        let s = store();
+        let clock = SimClock::new();
+        let b = Broker::new(clock.clone()).with_redelivery_timeout(5.0);
+        let (p, _) =
+            Persist::open_with_broker(&dir, opts_nofsync(), &s, Some(&b), Registry::default())
+                .map_err(|e| format!("open failed: {e}"))?;
+        let topics = ["alpha", "beta"];
+        let mut subs: Vec<SubId> = Vec::new();
+        let mut requests: Vec<Id> = Vec::new();
+        let mut transforms: Vec<Id> = Vec::new();
+        let mut contents: Vec<Id> = Vec::new();
+        let mut unacked: Vec<(SubId, MsgId)> = Vec::new();
+        let mut checkpoints = 0u32;
+        let n_ops = 100 + rng.below(100);
+        for op_i in 0..n_ops {
+            if rng.bool(0.08) {
+                // checkpoints (base or delta, randomly) interleave the
+                // mutations at random points — the delta chain must fold
+                // to the same state every base+WAL recovery reaches
+                let rep = if rng.bool(0.3) {
+                    p.checkpoint_full(&s)
+                } else {
+                    p.checkpoint_delta(&s)
+                };
+                rep.map_err(|e| format!("checkpoint failed: {e}"))?;
+                checkpoints += 1;
+            }
+            match rng.below(10) {
+                0 => requests.push(s.add_request(
+                    &format!("r{op_i}"),
+                    "u",
+                    RequestKind::Workflow,
+                    Json::Null,
+                )),
+                1 if !requests.is_empty() => {
+                    let k = 1 + rng.below(requests.len() as u64) as usize;
+                    let to = *rng.choose(RequestStatus::ALL);
+                    s.update_requests_status(&requests[..k], to);
+                }
+                2 if !requests.is_empty() => {
+                    let rid = requests[rng.below(requests.len() as u64) as usize];
+                    transforms.push(s.add_transform(rid, &format!("t{op_i}"), Json::Null));
+                }
+                3 if !transforms.is_empty() => {
+                    let k = 1 + rng.below(transforms.len() as u64) as usize;
+                    let to = *rng.choose(TransformStatus::ALL);
+                    s.update_transforms_status(&transforms[..k], to);
+                }
+                4 if !transforms.is_empty() => {
+                    let tid = transforms[rng.below(transforms.len() as u64) as usize];
+                    let cid = s.add_collection(tid, &format!("c{op_i}"), CollectionKind::Input);
+                    contents.extend(s.add_contents(
+                        cid,
+                        (0..1 + rng.below(20)).map(|i| (format!("f{op_i}/{i}"), 1u64)),
+                    ));
+                }
+                5 if !contents.is_empty() => {
+                    let k = 1 + rng.below(contents.len().min(100) as u64) as usize;
+                    let start = rng.below((contents.len() - k) as u64 + 1) as usize;
+                    let to = *rng.choose(ContentStatus::ALL);
+                    s.update_contents_status(&contents[start..start + k], to);
+                }
+                6 if subs.len() < 8 => {
+                    subs.push(b.subscribe(rng.choose(&topics)));
+                }
+                7 => {
+                    let n = 1 + rng.below(4);
+                    b.publish_many(
+                        rng.choose(&topics),
+                        (0..n).map(|i| Json::Num((op_i * 10 + i) as f64)).collect(),
+                    );
+                }
+                8 if !subs.is_empty() => {
+                    let sub = subs[rng.below(subs.len() as u64) as usize];
+                    for d in b.poll(sub, 1 + rng.below(4) as usize) {
+                        unacked.push((sub, d.id));
+                    }
+                }
+                9 if !unacked.is_empty() => {
+                    let k = 1 + rng.below(unacked.len().min(6) as u64) as usize;
+                    for (sub, id) in unacked.drain(..k) {
+                        b.ack(sub, id);
+                    }
+                }
+                _ => {}
+            }
+        }
+        p.shutdown();
+
+        let s2 = store();
+        let b2 = Broker::new(SimClock::new()).with_redelivery_timeout(5.0);
+        let (p2, _report) =
+            Persist::open_with_broker(&dir, opts_nofsync(), &s2, Some(&b2), Registry::default())
+                .map_err(|e| format!("recovery failed: {e}"))?;
+        if canon(s.snapshot()) != canon(s2.snapshot()) {
+            return Err(format!(
+                "store diverged after {n_ops} ops ({checkpoints} checkpoints)"
+            ));
+        }
+        if b.snapshot_json() != b2.snapshot_json() {
+            return Err(format!(
+                "broker diverged after {n_ops} ops ({checkpoints} checkpoints)"
+            ));
+        }
+        p2.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn kill_between_deltas_restarts_from_chain() {
+    let dir = tmp_dir("deltakill");
+    let s = store();
+    let clock = SimClock::new();
+    let b = Broker::new(clock.clone()).with_redelivery_timeout(30.0);
+    let (p, _) =
+        Persist::open_with_broker(&dir, opts(), &s, Some(&b), Registry::default()).unwrap();
+    let c1 = b.subscribe("idds.out");
+    let ids: Vec<Id> = (0..30)
+        .map(|i| s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null))
+        .collect();
+    let base = p.checkpoint_full(&s).unwrap();
+    assert!(base.full);
+
+    // churn → delta 1 (store rows + broker topic)
+    s.update_requests_status(&ids[..10], RequestStatus::Transforming);
+    b.publish_many("idds.out", (0..5).map(|i| Json::Num(i as f64)).collect());
+    let d1 = p.checkpoint_delta(&s).unwrap();
+    assert!(!d1.full);
+    assert_eq!(d1.base_seq, base.seq);
+    assert_eq!(d1.rows, 10, "delta 1 carries exactly the churned request rows");
+
+    // churn → delta 2
+    let ds = b.poll(c1, 2);
+    assert!(b.ack(c1, ds[0].id));
+    s.update_requests_status(&ids[10..15], RequestStatus::Transforming);
+    let d2 = p.checkpoint_delta(&s).unwrap();
+    assert_eq!(d2.chain_len, 2);
+
+    // WAL suffix past the chain tail, then kill
+    s.update_requests_status(&ids[..5], RequestStatus::Finished);
+    b.publish("idds.out", Json::Num(99.0));
+    p.shutdown();
+    let expect_store = canon(s.snapshot());
+    let expect_broker = b.snapshot_json();
+
+    assert!(delta_file(&dir, d1.seq).exists());
+    assert!(delta_file(&dir, d2.seq).exists());
+
+    // restart: base + 2 deltas + WAL suffix
+    let s2 = store();
+    let b2 = Broker::new(SimClock::new()).with_redelivery_timeout(30.0);
+    let (p2, report) =
+        Persist::open_with_broker(&dir, opts(), &s2, Some(&b2), Registry::default()).unwrap();
+    assert_eq!(report.checkpoint_seq, Some(base.seq));
+    assert_eq!(report.deltas_folded, 2);
+    assert_eq!(report.start_lsn, d2.start_lsn, "replay starts at the chain tail cut");
+    assert_eq!(canon(s2.snapshot()), expect_store);
+    assert_eq!(b2.snapshot_json(), expect_broker);
+    assert_eq!(b2.backlog(c1), 5, "3 pending + 1 un-acked in-flight + 1 suffix publish");
+    p2.shutdown();
+
+    // restart again: recovery over an on-disk chain is stable
+    let s3 = store();
+    let b3 = Broker::new(SimClock::new()).with_redelivery_timeout(30.0);
+    let (p3, report3) =
+        Persist::open_with_broker(&dir, opts(), &s3, Some(&b3), Registry::default()).unwrap();
+    assert_eq!(report3.deltas_folded, 2);
+    assert_eq!(canon(s3.snapshot()), expect_store);
+    assert_eq!(b3.snapshot_json(), expect_broker);
+    p3.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_middle_delta_falls_back_to_newest_base() {
+    let dir = tmp_dir("corruptdelta");
+    let s = store();
+    let (p, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+    let ids: Vec<Id> = (0..20)
+        .map(|i| s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null))
+        .collect();
+    let base = p.checkpoint_full(&s).unwrap();
+    s.update_requests_status(&ids[..5], RequestStatus::Transforming);
+    let d1 = p.checkpoint_delta(&s).unwrap();
+    s.update_requests_status(&ids[..5], RequestStatus::Finished);
+    let d2 = p.checkpoint_delta(&s).unwrap();
+    s.update_requests_status(&ids[5..8], RequestStatus::Transforming);
+    let d3 = p.checkpoint_delta(&s).unwrap();
+    assert_eq!(d3.chain_len, 3);
+    p.shutdown();
+    let expect = canon(s.snapshot());
+
+    // damage the MIDDLE link only
+    let victim = delta_file(&dir, d2.seq);
+    std::fs::write(&victim, b"{ not a checkpoint").unwrap();
+
+    let s2 = store();
+    let (p2, report) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+    assert_eq!(report.checkpoint_seq, Some(base.seq));
+    assert_eq!(report.deltas_folded, 0, "a broken chain is discarded wholesale");
+    assert_eq!(report.start_lsn, base.start_lsn, "replay restarts at the base cut");
+    // nothing invented, nothing lost: WAL retention reaches back to the
+    // base cut (deltas never moved the prune horizon), so the suffix
+    // reconstructs everything the discarded deltas held
+    assert_eq!(canon(s2.snapshot()), expect);
+    // the corrupt link was set aside; the stale rest of the chain cannot
+    // confuse the next boot
+    assert!(!victim.exists());
+    assert!(victim.with_extension("json.corrupt").exists());
+    assert!(!delta_file(&dir, d1.seq).exists());
+    assert!(!delta_file(&dir, d3.seq).exists());
+    p2.shutdown();
+
+    // and the next boot reaches the same state again
+    let s3 = store();
+    let (p3, _) = Persist::open(&dir, opts(), &s3, Registry::default()).unwrap();
+    assert_eq!(canon(s3.snapshot()), expect);
+    p3.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wal_retention_covers_base_fallback_after_delta_checkpoints() {
+    // regression pin for the retention rule: after delta checkpoints the
+    // WAL must still reach back to the *base's* cut (not the newest
+    // delta's) — removing every delta must leave a fully recoverable dir
+    let dir = tmp_dir("deltaretention");
+    let s = store();
+    let (p, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+    let ids: Vec<Id> = (0..15)
+        .map(|i| s.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null))
+        .collect();
+    p.checkpoint_full(&s).unwrap();
+    s.update_requests_status(&ids[..6], RequestStatus::Transforming);
+    let d1 = p.checkpoint_delta(&s).unwrap();
+    s.update_requests_status(&ids[..3], RequestStatus::Finished);
+    let d2 = p.checkpoint_delta(&s).unwrap();
+    assert_eq!(
+        d1.segments_deleted + d2.segments_deleted,
+        0,
+        "delta checkpoints must not move the WAL prune horizon"
+    );
+    p.shutdown();
+    let expect = canon(s.snapshot());
+
+    // a hostile fault: the whole chain disappears
+    std::fs::remove_file(delta_file(&dir, d1.seq)).unwrap();
+    std::fs::remove_file(delta_file(&dir, d2.seq)).unwrap();
+
+    let s2 = store();
+    let (p2, report) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+    assert_eq!(report.deltas_folded, 0);
+    assert_eq!(
+        canon(s2.snapshot()),
+        expect,
+        "base + WAL alone must reconstruct everything the deltas held"
+    );
+    p2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 fn two_step() -> Workflow {

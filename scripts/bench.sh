@@ -1,14 +1,16 @@
 #!/usr/bin/env bash
-# Perf trajectory: run the store/wal/broker/carousel/workflow benches and
-# emit BENCH_store.json + BENCH_wal.json + BENCH_broker.json +
-# BENCH_workflow.json at the repo root so results are comparable
-# PR-over-PR. BENCH_QUICK=1 shrinks iteration counts for smoke runs.
+# Perf trajectory: run the store/wal/checkpoint/broker/carousel/workflow
+# benches and emit BENCH_store.json + BENCH_wal.json +
+# BENCH_checkpoint.json + BENCH_broker.json + BENCH_workflow.json at the
+# repo root so results are comparable PR-over-PR. BENCH_QUICK=1 shrinks
+# iteration counts for smoke runs.
 set -euo pipefail
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 cd "$ROOT/rust"
 BENCH_STORE_JSON="$ROOT/BENCH_store.json" cargo bench --bench bench_store
 BENCH_WAL_JSON="$ROOT/BENCH_wal.json" cargo bench --bench bench_wal
+BENCH_CHECKPOINT_JSON="$ROOT/BENCH_checkpoint.json" cargo bench --bench bench_checkpoint
 BENCH_BROKER_JSON="$ROOT/BENCH_broker.json" cargo bench --bench bench_broker
 cargo bench --bench bench_carousel
 BENCH_WORKFLOW_JSON="$ROOT/BENCH_workflow.json" cargo bench --bench bench_workflow
-echo "wrote $ROOT/BENCH_store.json, $ROOT/BENCH_wal.json, $ROOT/BENCH_broker.json and $ROOT/BENCH_workflow.json"
+echo "wrote $ROOT/BENCH_store.json, $ROOT/BENCH_wal.json, $ROOT/BENCH_checkpoint.json, $ROOT/BENCH_broker.json and $ROOT/BENCH_workflow.json"

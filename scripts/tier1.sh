@@ -13,6 +13,17 @@ cargo test --release -q --test persist_recovery
 # rot.
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
+# Lint gate (advisory until the tree is clippy-clean, mirroring the fmt
+# playbook: land a pure-lint-fix commit, then flip this to a hard gate).
+# Skipped when the toolchain ships without the clippy component.
+if cargo clippy --version >/dev/null 2>&1; then
+    if ! cargo clippy -q --all-targets -- -D warnings; then
+        echo "NOTE: cargo clippy reports issues (advisory for now; see ROADMAP.md)"
+    fi
+else
+    echo "NOTE: cargo clippy not installed; skipping lint check"
+fi
+
 # Formatting gate (hard since the PR-4 tree-wide normalization pass):
 # drift fails tier-1. Fix with `cargo fmt` and commit the result. Only
 # skipped when the toolchain ships without the rustfmt component.
