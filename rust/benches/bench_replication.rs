@@ -1,0 +1,234 @@
+//! PERF-REPLICATION bench: WAL-shipping throughput and standby lag —
+//! the primary-side ship scan (re-encode durable frames from segment
+//! files), the standby-side fold (decode → idempotent replay → local
+//! append), the full REST catch-up pipeline, and the steady-state lag a
+//! follower holds while the primary writes at full speed.
+//!
+//!     cargo bench --bench bench_replication
+//!
+//! Emits `BENCH_replication.json` (override the path with
+//! `BENCH_REPLICATION_JSON=...`; `scripts/bench.sh` points it at the
+//! repo root). The `derived` section carries apply events/sec and the
+//! steady-state `replication.lag_lsn` stats the acceptance bar asks for.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use idds::broker::Broker;
+use idds::config::Config;
+use idds::metrics::Registry;
+use idds::persist::replicate::{ship_frames, ShipReply};
+use idds::persist::wal::decode_frames;
+use idds::persist::{
+    ClusterState, FsyncMode, Persist, PersistOptions, Replica, ReplicationOptions,
+};
+use idds::rest::{serve, ServerState};
+use idds::store::{RequestKind, Store};
+use idds::util::bench::{section, Bencher};
+use idds::util::clock::WallClock;
+use idds::util::json::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "idds-bench-repl-{tag}-{}-{}",
+        std::process::id(),
+        idds::util::next_id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn opts() -> PersistOptions {
+    PersistOptions {
+        segment_bytes: 4 * 1024 * 1024,
+        fsync: FsyncMode::Never, // shipping reads durable bytes either way
+        checkpoint_keep: 2,
+        flush_idle_ms: 2,
+        ..PersistOptions::default()
+    }
+}
+
+/// A primary data dir preloaded with `n` request events, WAL flushed.
+fn preload(n: usize, tag: &str) -> (Store, Persist, PathBuf) {
+    let dir = tmp_dir(tag);
+    let store = Store::new(Arc::new(WallClock::new()));
+    let (persist, _) = Persist::open(&dir, opts(), &store, Registry::default()).unwrap();
+    for i in 0..n {
+        store.add_request(&format!("r{i}"), "u", RequestKind::Workflow, Json::Null);
+    }
+    persist.flush();
+    (store, persist, dir)
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let n: usize = if quick { 2_000 } else { 20_000 };
+
+    section(&format!("ship scan: re-encode {n} durable frames from segments"));
+    let (store, persist, dir) = preload(n, "ship");
+    let durable = persist.wal().durable_lsn();
+    let ship = b.bench("ship_frames full history", || {
+        match ship_frames(persist.wal(), 1, usize::MAX).unwrap() {
+            ShipReply::Batch { count, .. } => {
+                assert!(count >= n);
+                count
+            }
+            ShipReply::Gone { .. } => panic!("nothing pruned here"),
+        }
+    });
+    let ship_evps = durable as f64 / (ship.mean_ns / 1e9);
+
+    section(&format!("standby fold: decode + replay + local append of {n} frames"));
+    let frames = match ship_frames(persist.wal(), 1, usize::MAX).unwrap() {
+        ShipReply::Batch { frames, .. } => frames,
+        ShipReply::Gone { .. } => unreachable!(),
+    };
+    let frame_bytes = frames.len();
+    let mut fold_dirs = Vec::new();
+    let fold = b.bench_with_setup(
+        "decode+apply+append_shipped",
+        || {
+            let sdir = tmp_dir("fold");
+            let sstore = Store::new(Arc::new(WallClock::new()));
+            let sbroker = Broker::new(Arc::new(WallClock::new()));
+            let (spersist, _) =
+                Persist::open_replica(&sdir, opts(), &sstore, &sbroker, Registry::default())
+                    .unwrap();
+            (sstore, spersist, sdir)
+        },
+        |(sstore, spersist, sdir)| {
+            let evs = decode_frames(&frames).unwrap();
+            let applied = evs.len();
+            for (lsn, ev) in evs {
+                sstore.apply_event(&ev);
+                spersist.wal().append_shipped(lsn, ev);
+            }
+            spersist.flush();
+            fold_dirs.push(sdir.clone());
+            applied
+        },
+    );
+    for d in &fold_dirs {
+        std::fs::remove_dir_all(d).ok();
+    }
+    let apply_evps = durable as f64 / (fold.mean_ns / 1e9);
+
+    section(&format!("end-to-end catch-up over REST: {n} events"));
+    let cfg = Config::defaults();
+    let broker = Broker::new(Arc::new(WallClock::new()));
+    let cluster = ClusterState::primary(Some(dir.clone()), 1);
+    let server = serve(
+        ServerState::new(store.clone(), broker, Registry::default(), &cfg)
+            .with_persist(persist.clone())
+            .with_cluster(cluster),
+        &cfg,
+    )
+    .unwrap();
+    let primary_addr = server.addr.to_string();
+    let ropts = ReplicationOptions { poll_interval_ms: 1, batch_bytes: 1 << 20, retry_ms: 10 };
+    let catchup = {
+        let t0 = std::time::Instant::now();
+        let sdir = tmp_dir("e2e");
+        let sstore = Store::new(Arc::new(WallClock::new()));
+        let sbroker = Broker::new(Arc::new(WallClock::new()));
+        let smetrics = Registry::default();
+        let (spersist, _) =
+            Persist::open_replica(&sdir, opts(), &sstore, &sbroker, smetrics.clone()).unwrap();
+        let scluster = ClusterState::replica(sdir.clone(), &primary_addr, 1);
+        let replica = Replica::start(
+            sstore,
+            sbroker,
+            spersist.clone(),
+            scluster,
+            "dev-token",
+            ropts.clone(),
+            smetrics,
+        )
+        .unwrap();
+        while replica.cluster().applied_lsn() < durable {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        replica.stop();
+        spersist.shutdown();
+        std::fs::remove_dir_all(&sdir).ok();
+        println!("  catch-up: {n} events in {dt:.3}s ({:.0} ev/s)", durable as f64 / dt);
+        durable as f64 / dt
+    };
+
+    section("steady-state lag: follower under a writing primary");
+    let (lag_mean, lag_max) = {
+        let sdir = tmp_dir("lag");
+        let sstore = Store::new(Arc::new(WallClock::new()));
+        let sbroker = Broker::new(Arc::new(WallClock::new()));
+        let smetrics = Registry::default();
+        let (spersist, _) =
+            Persist::open_replica(&sdir, opts(), &sstore, &sbroker, smetrics.clone()).unwrap();
+        let scluster = ClusterState::replica(sdir.clone(), &primary_addr, 1);
+        let replica = Replica::start(
+            sstore,
+            sbroker,
+            spersist.clone(),
+            scluster,
+            "dev-token",
+            ropts,
+            smetrics,
+        )
+        .unwrap();
+        // let the follower reach the preloaded head before sampling
+        while replica.cluster().applied_lsn() < durable {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let writes: usize = if quick { 2_000 } else { 10_000 };
+        let mut samples = Vec::new();
+        for i in 0..writes {
+            store.add_request(&format!("w{i}"), "u", RequestKind::Workflow, Json::Null);
+            if i % 64 == 0 {
+                persist.flush();
+                samples.push(replica.cluster().lag_lsn());
+            }
+        }
+        persist.flush();
+        let target = persist.wal().durable_lsn();
+        while replica.cluster().applied_lsn() < target {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        replica.stop();
+        spersist.shutdown();
+        std::fs::remove_dir_all(&sdir).ok();
+        let max = samples.iter().copied().max().unwrap_or(0);
+        let mean = samples.iter().sum::<u64>() as f64 / samples.len().max(1) as f64;
+        println!("  lag over {} samples: mean {mean:.1}, max {max}", samples.len());
+        (mean, max)
+    };
+
+    server.stop();
+    persist.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let summary = Json::obj()
+        .set("bench", "bench_replication")
+        .set("quick", quick)
+        .set(
+            "results",
+            Json::Arr(b.results().iter().map(|r| r.to_json()).collect()),
+        )
+        .set(
+            "derived",
+            Json::obj()
+                .set("events", n as u64)
+                .set("ship_scan_events_per_sec", ship_evps)
+                .set("ship_batch_bytes", frame_bytes as u64)
+                .set("apply_events_per_sec", apply_evps)
+                .set("rest_catchup_events_per_sec", catchup)
+                .set("steady_state_lag_mean_lsn", lag_mean)
+                .set("steady_state_lag_max_lsn", lag_max),
+        );
+    let path = std::env::var("BENCH_REPLICATION_JSON")
+        .unwrap_or_else(|_| "BENCH_replication.json".to_string());
+    match std::fs::write(&path, summary.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

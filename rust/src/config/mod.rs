@@ -42,6 +42,16 @@ impl Config {
         // synchronous submits: POST /api/requests returns 201 only after
         // the group-commit flusher fsynced the submit's LSN
         c.put("persist.sync_submit", Json::Bool(false));
+        // fault injection (tests/chaos drills): comma-separated
+        // `site=always|<count>` entries, e.g. "wal.fsync=always" — see
+        // persist::failpoints for the site table; empty = disabled
+        c.put("persist.failpoints", Json::Str(String::new()));
+        // replication (persist/replicate): primary address for standby
+        // mode (empty = standalone; `idds serve --replica-of ADDR` sets it)
+        c.put("replication.primary", Json::Str(String::new()));
+        c.put("replication.poll_interval_ms", Json::Num(50.0));
+        c.put("replication.batch_bytes", Json::Num(1024.0 * 1024.0));
+        c.put("replication.retry_ms", Json::Num(200.0));
         // artifacts / runtime
         c.put("runtime.artifacts_dir", Json::Str("artifacts".into()));
         // DDM / tape simulator

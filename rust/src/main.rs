@@ -5,6 +5,10 @@
 //!                                          run the head service + daemons;
 //!                                          with a data dir, recover state
 //!                                          on boot and WAL every write
+//!                [--replica-of ADDR]       run as a warm standby instead:
+//!                                          pull the primary's WAL, serve
+//!                                          read-only GETs, take writes
+//!                                          after POST /api/admin/promote
 //! idds carousel  [--scenario NAME]        Fig. 4 / Fig. 5 comparison run
 //! idds hpo       [--points N]             Bayesian-vs-random HPO run
 //! idds rubin     [--jobs N --layers L]    DAG release-policy comparison
@@ -22,7 +26,8 @@ use idds::daemons::executors::{ExecutorSet, NoopExecutor, RuntimeExecutor};
 use idds::daemons::{AgentHost, Daemon, Pipeline};
 use idds::hpo::{payload_space, BayesOpt, Strategy};
 use idds::metrics::Registry;
-use idds::persist::{Persist, PersistOptions};
+use idds::persist::replicate::{read_epoch, read_fenced, write_epoch};
+use idds::persist::{ClusterState, Persist, PersistOptions, Replica, ReplicationOptions};
 use idds::rest::{serve, ServerState};
 use idds::rubin::{generate_dag, schedule, Release};
 use idds::runtime::{default_artifacts_dir, EngineHandle};
@@ -148,6 +153,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(dir) = args.flag("data-dir") {
         cfg.put("persist.data_dir", idds::util::json::Json::Str(dir.to_string()));
     }
+    if let Some(addr) = args.flag("replica-of") {
+        cfg.put("replication.primary", idds::util::json::Json::Str(addr.to_string()));
+    }
+    let replica_of = cfg.str("replication.primary").unwrap_or_default();
+    let is_replica = !replica_of.is_empty();
+    let data_dir = cfg.str("persist.data_dir").unwrap_or_default();
+    if is_replica && data_dir.is_empty() {
+        bail!("--replica-of requires --data-dir (the standby keeps a local WAL copy)");
+    }
+    if !data_dir.is_empty() {
+        // a fenced dir belonged to a primary that was superseded; its log
+        // may have diverged from the promoted timeline, so it must not
+        // serve again without an operator re-seeding it
+        if let Some(epoch) = read_fenced(std::path::Path::new(&data_dir)) {
+            bail!(
+                "data dir {data_dir} was fenced at epoch {epoch}: a newer primary took over \
+                 and this node's log may have diverged; clear the dir (or re-seed it as a \
+                 replica of the new primary) before reuse"
+            );
+        }
+    }
     let clock = Arc::new(WallClock::new());
     let store = Store::new(clock.clone());
     let broker = Broker::new(clock);
@@ -156,19 +182,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // durability: recover checkpoint + WAL suffix before anything else
     // touches the store or the broker, then leave the WAL attached for
     // every write — broker subscriptions/backlogs/in-flight included, so
-    // consumers resume where the previous process died
-    let data_dir = cfg.str("persist.data_dir").unwrap_or_default();
+    // consumers resume where the previous process died. A standby opens
+    // the same way but defers the attach to promote: until then its only
+    // writer is the replication pull loop.
     let persist = if data_dir.is_empty() {
         None
     } else {
         let opts = PersistOptions::from_config(&cfg)?;
-        let (persist, report) = Persist::open_with_broker(
-            std::path::Path::new(&data_dir),
-            opts,
-            &store,
-            Some(&broker),
-            metrics.clone(),
-        )
+        let dirp = std::path::Path::new(&data_dir);
+        let (persist, report) = if is_replica {
+            Persist::open_replica(dirp, opts, &store, &broker, metrics.clone())
+        } else {
+            Persist::open_with_broker(dirp, opts, &store, Some(&broker), metrics.clone())
+        }
         .with_context(|| format!("opening data dir {data_dir}"))?;
         println!(
             "recovered from {data_dir}: checkpoint {} (+{} deltas folded), \
@@ -212,7 +238,55 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Arc::new(conductor),
     ];
     let interval = std::time::Duration::from_secs_f64(cfg.f64("daemons.poll_interval_s")?);
-    let host = AgentHost::start(daemons, interval);
+    // a standby keeps its daemons parked: they would race the primary's
+    // shipped transitions; the serve loop starts them the moment promote
+    // latches (the standby then IS the head and the campaign continues)
+    let mut pending_daemons = Some(daemons);
+    let mut host = if is_replica {
+        None
+    } else {
+        Some(AgentHost::start(pending_daemons.take().unwrap(), interval))
+    };
+
+    // replication roles: a standby starts its pull loop here; a durable
+    // primary makes sure its cluster epoch exists on disk (epoch 1 on
+    // first boot) so fencing has a persisted baseline
+    let replica_handle: Option<std::sync::Arc<Replica>> = if is_replica {
+        let p = persist.clone().expect("replica requires a data dir");
+        let dirp = std::path::PathBuf::from(&data_dir);
+        let epoch = read_epoch(&dirp);
+        let cluster = ClusterState::replica(dirp, &replica_of, epoch);
+        let token = cfg
+            .get("rest.auth_tokens")
+            .and_then(|j| j.as_arr())
+            .and_then(|a| a.first())
+            .and_then(|t| t.as_str())
+            .unwrap_or("dev-token")
+            .to_string();
+        let ropts = ReplicationOptions::from_config(&cfg)?;
+        Some(Replica::start(
+            store.clone(),
+            broker.clone(),
+            p,
+            cluster,
+            &token,
+            ropts,
+            metrics.clone(),
+        )?)
+    } else {
+        None
+    };
+    let primary_cluster = if !is_replica && !data_dir.is_empty() {
+        let dirp = std::path::PathBuf::from(&data_dir);
+        let mut epoch = read_epoch(&dirp);
+        if epoch == 0 {
+            epoch = 1;
+            write_epoch(&dirp, epoch)?;
+        }
+        Some(ClusterState::primary(Some(dirp), epoch))
+    } else {
+        None
+    };
 
     // periodic checkpoints bound WAL replay time after a crash. The call
     // is delta-aware: each tick writes a compact delta of the rows/topics
@@ -259,15 +333,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(p) = &persist {
         state = state.with_persist(p.clone());
     }
+    if let Some(r) = &replica_handle {
+        state = state.with_replica(std::sync::Arc::clone(r));
+    } else if let Some(c) = &primary_cluster {
+        state = state.with_cluster(std::sync::Arc::clone(c));
+    }
     let server = serve(state, &cfg)?;
     println!("iDDS head service listening on {}", server.addr);
-    println!("daemons: clerk, marshaller, transformer, carrier, conductor");
+    if replica_handle.is_some() {
+        println!(
+            "role: warm standby of {replica_of} (read-only; POST /api/admin/promote to take over)"
+        );
+        println!("replication lag: watch replication.lag_lsn in GET /api/health");
+    } else {
+        println!("daemons: clerk, marshaller, transformer, carrier, conductor");
+    }
     if persist.is_some() {
         println!("durability: WAL + checkpoints under {data_dir}");
     }
     shutdown::install();
     println!("Ctrl-C to stop.");
     while !shutdown::requested() {
+        // failover: once promote latches, this standby is the primary —
+        // start the daemon pipeline so in-flight campaigns continue here
+        if host.is_none() {
+            if let Some(r) = &replica_handle {
+                if r.cluster().is_promoted() {
+                    if let Some(d) = pending_daemons.take() {
+                        println!(
+                            "promoted to primary at epoch {}; starting daemons",
+                            r.cluster().epoch()
+                        );
+                        host = Some(AgentHost::start(d, interval));
+                    }
+                }
+            }
+        }
         std::thread::sleep(std::time::Duration::from_millis(200));
     }
 
@@ -277,7 +378,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // and joins the group-commit flusher — closing the window where an
     // acknowledged write was only queued, not fsynced.
     println!("\nshutdown signal received, stopping daemons ...");
-    host.stop();
+    if let Some(r) = &replica_handle {
+        r.stop();
+    }
+    if let Some(h) = host.take() {
+        h.stop();
+    }
     server.stop();
     if let Some(p) = &persist {
         // auto: usually a small delta — a fast shutdown — unless the

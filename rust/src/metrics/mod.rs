@@ -7,8 +7,13 @@
 //! the engine (`registry.hits`/`registry.misses` — compiled-workflow
 //! intern outcomes; `engine.condition_evals` — out-edges evaluated per
 //! completion; `engine.edges_fired`), `persist.*` for WAL/checkpoint
-//! durability, and `rest.*` for the head service. Everything lands in
-//! the shared [`Registry`] and is exposed by `GET /api/metrics`.
+//! durability, `replication.*` for WAL shipping (`lag_lsn` gauge —
+//! primary durable LSN minus locally applied, the standby's health
+//! number; `ship.batches`/`ship.frames`/`ship.bytes` on the primary;
+//! `pull.frames`/`pull.bytes`, `bootstraps`, `promotions` on the
+//! standby), and `rest.*` for the head service (including
+//! `rejected_replica`/`rejected_fenced` write-gate hits). Everything
+//! lands in the shared [`Registry`] and is exposed by `GET /api/metrics`.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};

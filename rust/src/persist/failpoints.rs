@@ -1,0 +1,179 @@
+//! Named fault-injection points for the durability stack.
+//!
+//! Real disk faults are the rarest inputs the persist layer sees, and the
+//! sticky `io_error` path, the rotate-on-write-error recovery, and the
+//! `.corrupt` checkpoint sidelining all exist for exactly those inputs.
+//! A failpoint makes them drivable on demand: tests (or an operator via
+//! `persist.failpoints`) arm a named site and the next time execution
+//! passes it, it reports an injected `io::Error` instead of doing the
+//! real syscall's error path by accident of hardware.
+//!
+//! Sites wired in this crate:
+//!
+//! | name                | effect when armed                               |
+//! |---------------------|-------------------------------------------------|
+//! | `wal.write`         | `Wal::flush_batch` write fails (batch lost,     |
+//! |                     | segment rotates, `io_error` goes sticky)        |
+//! | `wal.fsync`         | group-commit fsync fails (bytes are in the      |
+//! |                     | file, durability unacknowledged — the degraded- |
+//! |                     | write path: `sync_submit` must answer 503)      |
+//! | `checkpoint.write`  | checkpoint tmp-file write fails                 |
+//! | `checkpoint.fsync`  | checkpoint tmp-file fsync fails                 |
+//! | `checkpoint.rename` | the atomic publish rename fails (tmp swept at   |
+//! |                     | next open; dirty sets restored)                 |
+//! | `checkpoint.corrupt`| the checkpoint publishes *successfully* but     |
+//! |                     | with a truncated body — recovery must sideline  |
+//! |                     | it as `.corrupt` and fall back                  |
+//!
+//! The disarmed fast path is a single relaxed atomic load, so the hooks
+//! are always compiled in (no test-only cfg split to drift) and cost
+//! nothing in production. Arming is process-global: tests that arm sites
+//! must serialize among themselves (see `tests/failpoints.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{bail, Result};
+
+/// Fast path: one relaxed load when nothing is armed anywhere.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Remaining trigger count per armed site; `None` = fail every pass.
+fn registry() -> &'static Mutex<HashMap<String, Option<u64>>> {
+    static REG: OnceLock<Mutex<HashMap<String, Option<u64>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Arm `name` to fail `times` passes (`None` = until disarmed).
+pub fn arm(name: &str, times: Option<u64>) {
+    let mut reg = registry().lock().unwrap();
+    reg.insert(name.to_string(), times);
+    ARMED.store(true, Ordering::Release);
+}
+
+pub fn disarm(name: &str) {
+    let mut reg = registry().lock().unwrap();
+    reg.remove(name);
+    if reg.is_empty() {
+        ARMED.store(false, Ordering::Release);
+    }
+}
+
+pub fn disarm_all() {
+    let mut reg = registry().lock().unwrap();
+    reg.clear();
+    ARMED.store(false, Ordering::Release);
+}
+
+/// Parse and arm a `persist.failpoints` spec: comma-separated
+/// `site=always` or `site=<n>` entries, e.g.
+/// `wal.fsync=always,checkpoint.rename=2`.
+pub fn arm_from_spec(spec: &str) -> Result<()> {
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let Some((name, mode)) = entry.split_once('=') else {
+            bail!("failpoint entry '{entry}' is not site=always|<count>");
+        };
+        let times = match mode.trim() {
+            "always" => None,
+            n => Some(n.parse::<u64>().map_err(|_| {
+                anyhow::anyhow!("failpoint count '{n}' in '{entry}' is not a number")
+            })?),
+        };
+        arm(name.trim(), times);
+    }
+    Ok(())
+}
+
+/// Called at each site: `Ok(())` when disarmed, an injected error while
+/// the site's trigger budget lasts. A counted site disarms itself after
+/// its last trigger.
+pub fn check(name: &str) -> std::io::Result<()> {
+    if !ARMED.load(Ordering::Acquire) {
+        return Ok(());
+    }
+    let mut reg = registry().lock().unwrap();
+    let fire = match reg.get_mut(name) {
+        None => false,
+        Some(None) => true,
+        Some(Some(left)) => {
+            if *left > 0 {
+                *left -= 1;
+                if *left == 0 {
+                    reg.remove(name);
+                    if reg.is_empty() {
+                        ARMED.store(false, Ordering::Release);
+                    }
+                }
+                true
+            } else {
+                false
+            }
+        }
+    };
+    if fire {
+        Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            format!("injected failpoint: {name}"),
+        ))
+    } else {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; this module's tests serialize on
+    // one mutex so parallel test threads cannot see each other's arms.
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn disarmed_is_ok() {
+        let _g = serial();
+        disarm_all();
+        assert!(check("never.armed").is_ok());
+    }
+
+    #[test]
+    fn counted_site_fires_then_self_disarms() {
+        let _g = serial();
+        disarm_all();
+        arm("unit.counted", Some(2));
+        assert!(check("unit.counted").is_err());
+        assert!(check("unit.counted").is_err());
+        assert!(check("unit.counted").is_ok(), "budget exhausted → disarmed");
+        assert!(!ARMED.load(Ordering::Acquire), "last site clears the fast path");
+    }
+
+    #[test]
+    fn always_site_fires_until_disarmed() {
+        let _g = serial();
+        disarm_all();
+        arm("unit.always", None);
+        for _ in 0..5 {
+            assert!(check("unit.always").is_err());
+        }
+        // other sites stay clean
+        assert!(check("unit.other").is_ok());
+        disarm("unit.always");
+        assert!(check("unit.always").is_ok());
+    }
+
+    #[test]
+    fn spec_parsing() {
+        let _g = serial();
+        disarm_all();
+        arm_from_spec("a.b=always, c.d=1").unwrap();
+        assert!(check("a.b").is_err());
+        assert!(check("c.d").is_err());
+        assert!(check("c.d").is_ok());
+        assert!(arm_from_spec("nope").is_err());
+        assert!(arm_from_spec("x=notanumber").is_err());
+        disarm_all();
+    }
+}

@@ -44,6 +44,8 @@
 //! checkpoints".
 
 pub mod events;
+pub mod failpoints;
+pub mod replicate;
 pub mod wal;
 
 use std::fs::{File, OpenOptions};
@@ -63,6 +65,7 @@ use crate::store::{DirtySets, Id, Store};
 use crate::util::json::{parse, Json};
 
 pub use events::{PersistEvent, Persister};
+pub use replicate::{ClusterState, Replica, ReplicationOptions};
 pub use wal::Wal;
 
 use wal::{scan_segment, segment_path, segment_seq, sync_dir, ScanEnd, SegmentInfo};
@@ -101,6 +104,10 @@ pub struct PersistOptions {
     /// this forces a base — a delta nearly the size of a base buys
     /// nothing and lengthens recovery.
     pub delta_dirty_ratio: f64,
+    /// Fault-injection spec armed at open (`persist.failpoints`, e.g.
+    /// `wal.fsync=always,checkpoint.rename=2`); empty = none. See
+    /// [`failpoints`].
+    pub failpoints: String,
 }
 
 impl Default for PersistOptions {
@@ -112,6 +119,7 @@ impl Default for PersistOptions {
             flush_idle_ms: 50,
             delta_chain_max: 8,
             delta_dirty_ratio: 0.5,
+            failpoints: String::new(),
         }
     }
 }
@@ -127,6 +135,7 @@ impl PersistOptions {
             flush_idle_ms: cfg.u64("persist.flush_idle_ms")?,
             delta_chain_max: cfg.usize("persist.delta_chain_max")?.max(1),
             delta_dirty_ratio: cfg.f64("persist.delta_dirty_ratio")?,
+            failpoints: cfg.str("persist.failpoints")?,
         })
     }
 }
@@ -313,6 +322,38 @@ impl Persist {
         broker: Option<&Broker>,
         metrics: Registry,
     ) -> Result<(Persist, RecoveryReport)> {
+        Self::open_inner(dir, opts, store, broker, metrics, true)
+    }
+
+    /// Like [`Persist::open_with_broker`], but does NOT attach the WAL as
+    /// the store/broker persister: a warm standby's only writer is its
+    /// pull loop, which appends shipped primary frames explicitly
+    /// ([`Wal::append_shipped`]) — locally logging the folds too would
+    /// double every event and assign conflicting LSNs. Promote calls
+    /// [`Persist::attach`] to turn writes on.
+    pub fn open_replica(
+        dir: &Path,
+        opts: PersistOptions,
+        store: &Store,
+        broker: &Broker,
+        metrics: Registry,
+    ) -> Result<(Persist, RecoveryReport)> {
+        Self::open_inner(dir, opts, store, Some(broker), metrics, false)
+    }
+
+    fn open_inner(
+        dir: &Path,
+        opts: PersistOptions,
+        store: &Store,
+        broker: Option<&Broker>,
+        metrics: Registry,
+        attach: bool,
+    ) -> Result<(Persist, RecoveryReport)> {
+        if !opts.failpoints.is_empty() {
+            failpoints::arm_from_spec(&opts.failpoints)
+                .context("parsing persist.failpoints")?;
+            log::warn!("fault injection armed: {}", opts.failpoints);
+        }
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating data dir {}", dir.display()))?;
         let wal_dir = dir.join("wal");
@@ -768,11 +809,20 @@ impl Persist {
                 metrics,
             }),
         };
-        store.set_persister(persist.persister());
-        if let Some(b) = broker {
-            b.set_persister(persist.persister());
+        if attach {
+            persist.attach(store, broker);
         }
         Ok((persist, report))
+    }
+
+    /// Attach the WAL as the store's (and broker's) persister so their
+    /// mutations are logged from here on. Open does this automatically;
+    /// a replica open defers it to promote.
+    pub fn attach(&self, store: &Store, broker: Option<&Broker>) {
+        store.set_persister(self.persister());
+        if let Some(b) = broker {
+            b.set_persister(self.persister());
+        }
     }
 
     /// The hook the store logs through.
@@ -814,6 +864,28 @@ impl Persist {
     /// yet: a delta without a base would have nothing to fold onto.
     pub fn checkpoint_delta(&self, store: &Store) -> Result<CheckpointReport> {
         self.checkpoint_inner(store, Some(false))
+    }
+
+    /// Seed checkpoint for a snapshot-bootstrapped standby: the installed
+    /// store corresponds to the primary's WAL position `cut_lsn`, so the
+    /// local (empty) WAL must first adopt that LSN and then a base is
+    /// written with it as the cut — recovery on this standby thereafter
+    /// starts from the seed instead of an empty store. The dirty sets the
+    /// snapshot install marked are drained and *discarded*: every row is
+    /// in the base being written.
+    pub fn bootstrap_base(&self, store: &Store, cut_lsn: u64) -> Result<CheckpointReport> {
+        let inner = &*self.inner;
+        let _gate = inner.checkpoint_mutex.lock().unwrap();
+        let t0 = Instant::now();
+        inner.wal.advance_next_lsn(cut_lsn);
+        let _ = store.take_dirty();
+        if let Some(b) = &inner.broker {
+            let _ = b.take_dirty_topics();
+        }
+        let report = self.write_base(store, cut_lsn, t0)?;
+        inner.last_checkpoint_lsn.store(cut_lsn, Ordering::Relaxed);
+        inner.last_checkpoint_bytes.store(report.bytes, Ordering::Relaxed);
+        Ok(report)
     }
 
     fn checkpoint_inner(&self, store: &Store, force_full: Option<bool>) -> Result<CheckpointReport> {
@@ -910,16 +982,28 @@ impl Persist {
         let inner = &*self.inner;
         let mut text = String::new();
         body.write_to(&mut text);
+        // `checkpoint.corrupt` publishes "successfully" with a truncated
+        // body — the input that drives recovery's `.corrupt` sidelining
+        if failpoints::check("checkpoint.corrupt").is_err() {
+            text.truncate(text.len() / 2);
+            log::warn!("failpoint checkpoint.corrupt: publishing truncated {}", path.display());
+        }
         let tmp = path.with_extension("json.tmp");
         {
             let mut f =
                 File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
-            f.write_all(text.as_bytes())?;
+            failpoints::check("checkpoint.write")
+                .and_then(|_| f.write_all(text.as_bytes()))
+                .with_context(|| format!("writing {}", tmp.display()))?;
             if inner.opts.fsync != FsyncMode::Never {
-                f.sync_data()?;
+                failpoints::check("checkpoint.fsync")
+                    .and_then(|_| f.sync_data())
+                    .with_context(|| format!("syncing {}", tmp.display()))?;
             }
         }
-        std::fs::rename(&tmp, path)
+        failpoints::check("checkpoint.rename")
+            .map_err(anyhow::Error::new)
+            .and_then(|_| std::fs::rename(&tmp, path).map_err(anyhow::Error::new))
             .with_context(|| format!("publishing checkpoint {}", path.display()))?;
         if inner.opts.fsync != FsyncMode::Never {
             sync_dir(&inner.dir);

@@ -1,0 +1,626 @@
+//! WAL-shipping replication: warm standby + fenced failover.
+//!
+//! Production iDDS survives head-node loss by keeping all state in an HA
+//! relational database; this reproduction's head owns its state, so a
+//! second copy needs log shipping. The design (DESIGN.md, "Replication"):
+//!
+//! * **Ship** — the primary serves `GET /api/replication/wal?from_lsn=N`:
+//!   frames re-encoded from its on-disk segments (closed segments first,
+//!   then the live one), capped at the *durable* LSN read before any file
+//!   is touched, chunked by `max_bytes`. The body is pure WAL framing
+//!   (`len|crc|lsn|event-json`), so the standby runs the same CRC check a
+//!   local recovery would.
+//! * **Fold** — the standby pulls continuously, applies each event through
+//!   the idempotent replay path ([`crate::store::Store::apply_event`] /
+//!   [`crate::broker::Broker::apply_event`]), *then* appends the frame to
+//!   its own WAL via [`Wal::append_shipped`], preserving the primary's
+//!   LSNs. Apply-before-append keeps the fuzzy-checkpoint-cut invariant
+//!   (mark-dirty happens before the standby's cut can pass the LSN), so
+//!   standby checkpoints are safe; a crash between the two just re-pulls.
+//! * **Fence** — a cluster epoch lives in an `EPOCH` file next to the
+//!   seed's LOCK. Every ship request carries the caller's epoch; seeing a
+//!   higher one fences the node (sticky `FENCED` marker + [`Wal::fence`],
+//!   which drops all further appends). `POST /api/admin/promote` bumps the
+//!   standby's epoch, attaches its WAL for writes, and best-effort fences
+//!   the old primary over REST — so two heads never both write: the old
+//!   primary is fenced on its next ship/serve touch even if the fence
+//!   POST never arrived, because its epoch is now stale everywhere.
+//! * **Bootstrap** — a fresh standby asking for history the primary has
+//!   pruned gets `410 Gone` and falls back to
+//!   `GET /api/replication/snapshot` (a full store+broker snapshot cut at
+//!   a flushed LSN), installs it, writes a local base checkpoint at that
+//!   cut, and resumes pulling frames from there.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::broker::Broker;
+use crate::config::Config;
+use crate::metrics::Registry;
+use crate::rest::http::{http_request_full, HttpResponse};
+use crate::store::Store;
+use crate::util::json::{parse, Json};
+
+use super::wal::{decode_frames, encode_frame, scan_segment, segment_path};
+use super::{Persist, Wal};
+
+/// Request/response headers carrying the fencing epoch and watermarks.
+pub const H_EPOCH: &str = "X-IDDS-Epoch";
+pub const H_PEER_EPOCH: &str = "X-IDDS-Peer-Epoch";
+pub const H_DURABLE_LSN: &str = "X-IDDS-Durable-LSN";
+pub const H_OLDEST_LSN: &str = "X-IDDS-Oldest-LSN";
+
+// ---------------------------------------------------------------------------
+// Epoch + fence marker files (next to the data dir's LOCK)
+// ---------------------------------------------------------------------------
+
+fn epoch_path(dir: &Path) -> PathBuf {
+    dir.join("EPOCH")
+}
+
+fn fenced_path(dir: &Path) -> PathBuf {
+    dir.join("FENCED")
+}
+
+/// Read the persisted cluster epoch; 0 when the file is absent (a dir
+/// that has never participated in a cluster).
+pub fn read_epoch(dir: &Path) -> u64 {
+    std::fs::read_to_string(epoch_path(dir))
+        .ok()
+        .and_then(|t| t.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+/// Persist the cluster epoch (tmp + rename + dir sync, like checkpoints).
+pub fn write_epoch(dir: &Path, epoch: u64) -> Result<()> {
+    let tmp = dir.join("EPOCH.tmp");
+    std::fs::write(&tmp, epoch.to_string())
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, epoch_path(dir)).context("publishing EPOCH")?;
+    super::wal::sync_dir(dir);
+    Ok(())
+}
+
+/// The epoch that fenced this dir, if a FENCED marker exists. A fenced
+/// data dir must not serve again without operator intervention — its log
+/// may have diverged from the promoted timeline.
+pub fn read_fenced(dir: &Path) -> Option<u64> {
+    std::fs::read_to_string(fenced_path(dir))
+        .ok()
+        .map(|t| t.trim().parse().unwrap_or(0))
+}
+
+fn write_fenced(dir: &Path, epoch: u64) {
+    if let Err(e) = std::fs::write(fenced_path(dir), epoch.to_string()) {
+        log::error!("could not persist FENCED marker in {}: {e}", dir.display());
+    }
+    super::wal::sync_dir(dir);
+}
+
+// ---------------------------------------------------------------------------
+// Cluster state
+// ---------------------------------------------------------------------------
+
+/// Shared replication/fencing state, attached to the REST server. Present
+/// on every node: a plain primary carries role + epoch, a standby also
+/// tracks its pull position and lag.
+pub struct ClusterState {
+    data_dir: Option<PathBuf>,
+    /// The primary this node replicates from (empty for a primary).
+    primary_addr: String,
+    replica: AtomicBool,
+    epoch: AtomicU64,
+    fenced: AtomicBool,
+    /// Latched by promote: the serve loop watches this to start daemons.
+    promoted: AtomicBool,
+    /// Last primary LSN applied to the local store/broker.
+    applied_lsn: AtomicU64,
+    /// Primary's durable LSN as of the last successful pull.
+    primary_durable_lsn: AtomicU64,
+    pulls: AtomicU64,
+    pull_errors: AtomicU64,
+    last_error: Mutex<Option<String>>,
+}
+
+impl ClusterState {
+    pub fn primary(data_dir: Option<PathBuf>, epoch: u64) -> Arc<ClusterState> {
+        Arc::new(ClusterState {
+            data_dir,
+            primary_addr: String::new(),
+            replica: AtomicBool::new(false),
+            epoch: AtomicU64::new(epoch.max(1)),
+            fenced: AtomicBool::new(false),
+            promoted: AtomicBool::new(false),
+            applied_lsn: AtomicU64::new(0),
+            primary_durable_lsn: AtomicU64::new(0),
+            pulls: AtomicU64::new(0),
+            pull_errors: AtomicU64::new(0),
+            last_error: Mutex::new(None),
+        })
+    }
+
+    pub fn replica(data_dir: PathBuf, primary_addr: &str, epoch: u64) -> Arc<ClusterState> {
+        Arc::new(ClusterState {
+            data_dir: Some(data_dir),
+            primary_addr: primary_addr.to_string(),
+            replica: AtomicBool::new(true),
+            epoch: AtomicU64::new(epoch),
+            fenced: AtomicBool::new(false),
+            promoted: AtomicBool::new(false),
+            applied_lsn: AtomicU64::new(0),
+            primary_durable_lsn: AtomicU64::new(0),
+            pulls: AtomicU64::new(0),
+            pull_errors: AtomicU64::new(0),
+            last_error: Mutex::new(None),
+        })
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    pub fn is_replica(&self) -> bool {
+        self.replica.load(Ordering::Acquire)
+    }
+
+    pub fn is_fenced(&self) -> bool {
+        self.fenced.load(Ordering::Acquire)
+    }
+
+    /// True once promote completed — `idds serve --replica-of` polls this
+    /// to start the daemon host on the new primary.
+    pub fn is_promoted(&self) -> bool {
+        self.promoted.load(Ordering::Acquire)
+    }
+
+    pub fn applied_lsn(&self) -> u64 {
+        self.applied_lsn.load(Ordering::Acquire)
+    }
+
+    /// Replication lag in LSNs (primary durable − locally applied).
+    pub fn lag_lsn(&self) -> u64 {
+        self.primary_durable_lsn
+            .load(Ordering::Acquire)
+            .saturating_sub(self.applied_lsn.load(Ordering::Acquire))
+    }
+
+    /// Adopt a (higher) epoch learned from the primary, persisting it so a
+    /// restarted standby never re-offers a stale epoch.
+    fn adopt_epoch(&self, epoch: u64) {
+        let prev = self.epoch.fetch_max(epoch, Ordering::AcqRel);
+        if epoch > prev {
+            if let Some(dir) = &self.data_dir {
+                if let Err(e) = write_epoch(dir, epoch) {
+                    log::error!("could not persist adopted epoch {epoch}: {e}");
+                }
+            }
+        }
+    }
+
+    fn note_error(&self, e: &str) {
+        self.pull_errors.fetch_add(1, Ordering::Relaxed);
+        *self.last_error.lock().unwrap() = Some(e.to_string());
+    }
+
+    /// The `replication` section of `/api/health`.
+    pub fn health_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("role", if self.is_replica() { "replica" } else { "primary" })
+            .set("epoch", self.epoch())
+            .set("fenced", self.is_fenced());
+        if self.is_replica() || self.is_promoted() {
+            j = j
+                .set("primary", self.primary_addr.as_str())
+                .set("applied_lsn", self.applied_lsn())
+                .set(
+                    "primary_durable_lsn",
+                    self.primary_durable_lsn.load(Ordering::Acquire),
+                )
+                .set("lag_lsn", self.lag_lsn())
+                .set("pulls", self.pulls.load(Ordering::Relaxed))
+                .set("pull_errors", self.pull_errors.load(Ordering::Relaxed))
+                .set("promoted", self.is_promoted());
+            if let Some(e) = self.last_error.lock().unwrap().clone() {
+                j = j.set("last_error", e);
+            }
+        }
+        j
+    }
+}
+
+/// Fence this node: sticky marker on disk, WAL refuses further appends,
+/// cluster state reports it. Called when a ship/fence request proves a
+/// higher epoch exists.
+pub fn fence_node(cluster: &ClusterState, wal: Option<&Wal>, their_epoch: u64) {
+    cluster.fenced.store(true, Ordering::Release);
+    if let Some(w) = wal {
+        w.fence();
+    }
+    if let Some(dir) = &cluster.data_dir {
+        write_fenced(dir, their_epoch);
+    }
+    log::error!(
+        "node fenced: epoch {} superseded by {their_epoch}; all writes refused",
+        cluster.epoch()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Ship side (primary)
+// ---------------------------------------------------------------------------
+
+/// What the ship endpoint returns for one pull.
+pub enum ShipReply {
+    /// Re-encoded frames `from_lsn ..= last_lsn` (empty when caught up).
+    Batch { frames: Vec<u8>, count: usize, last_lsn: u64, durable_lsn: u64 },
+    /// History before `oldest_lsn` was pruned by checkpoints — the caller
+    /// must bootstrap from a snapshot instead.
+    Gone { oldest_lsn: u64, durable_lsn: u64 },
+}
+
+/// Collect up to `max_bytes` of durable frames starting at `from_lsn`.
+///
+/// The durable mark is read *before* any file: it only advances after the
+/// flusher's `write_all` returns, so every frame at or below it is fully
+/// present in the segment bytes we then read — a concurrent flush can at
+/// worst add a torn tail of *newer* frames, which the segment scanner
+/// already stops at. At least one frame is returned even if it alone
+/// exceeds `max_bytes`, so a single oversized event cannot wedge a pull.
+pub fn ship_frames(wal: &Wal, from_lsn: u64, max_bytes: usize) -> Result<ShipReply> {
+    let durable_lsn = wal.durable_lsn();
+    let (dir, segs) = wal.catalog();
+    let oldest_lsn = segs
+        .iter()
+        .filter_map(|s| s.first_lsn)
+        .min()
+        .unwrap_or(durable_lsn + 1);
+    if from_lsn < oldest_lsn {
+        return Ok(ShipReply::Gone { oldest_lsn, durable_lsn });
+    }
+    let mut frames = Vec::new();
+    let mut count = 0usize;
+    let mut last_lsn = 0u64;
+    let mut text = String::new();
+    'segments: for seg in &segs {
+        if let Some(last) = seg.last_lsn {
+            if last < from_lsn {
+                continue; // fully below the requested window
+            }
+        }
+        // a segment pruned between catalog and scan just skips — its
+        // frames were below a checkpoint cut the standby can re-request
+        let scan = match scan_segment(&segment_path(&dir, seg.seq)) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        for (lsn, ev) in &scan.events {
+            if *lsn < from_lsn {
+                continue;
+            }
+            if *lsn > durable_lsn {
+                break 'segments; // LSNs are globally monotone across segments
+            }
+            text.clear();
+            ev.to_json().write_to(&mut text);
+            encode_frame(*lsn, &text, &mut frames);
+            count += 1;
+            last_lsn = *lsn;
+            if frames.len() >= max_bytes {
+                break 'segments;
+            }
+        }
+    }
+    Ok(ShipReply::Batch { frames, count, last_lsn, durable_lsn })
+}
+
+// ---------------------------------------------------------------------------
+// Pull side (standby)
+// ---------------------------------------------------------------------------
+
+/// Standby tunables, resolved from the `replication.*` config keys.
+#[derive(Debug, Clone)]
+pub struct ReplicationOptions {
+    /// Idle poll interval when the last pull returned no frames.
+    pub poll_interval_ms: u64,
+    /// Per-pull byte cap passed to the ship endpoint.
+    pub batch_bytes: u64,
+    /// Backoff after a failed pull (primary down, transfer error).
+    pub retry_ms: u64,
+}
+
+impl Default for ReplicationOptions {
+    fn default() -> Self {
+        ReplicationOptions { poll_interval_ms: 50, batch_bytes: 1 << 20, retry_ms: 200 }
+    }
+}
+
+impl ReplicationOptions {
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        Ok(ReplicationOptions {
+            poll_interval_ms: cfg.u64("replication.poll_interval_ms")?.max(1),
+            batch_bytes: cfg.u64("replication.batch_bytes")?.max(4096),
+            retry_ms: cfg.u64("replication.retry_ms")?.max(1),
+        })
+    }
+}
+
+struct ReplicaShared {
+    store: Store,
+    broker: Broker,
+    persist: Persist,
+    cluster: Arc<ClusterState>,
+    token: String,
+    opts: ReplicationOptions,
+    metrics: Registry,
+    stop: AtomicBool,
+}
+
+/// A running standby: the pull thread plus the promote entry point.
+pub struct Replica {
+    shared: Arc<ReplicaShared>,
+    puller: Mutex<Option<std::thread::JoinHandle<()>>>,
+    promote_gate: Mutex<()>,
+}
+
+impl Replica {
+    /// Spawn the pull loop. `persist` must come from
+    /// [`Persist::open_replica`] (WAL not yet attached to the store — the
+    /// standby's only writers are this thread and, after promote, the
+    /// daemons).
+    pub fn start(
+        store: Store,
+        broker: Broker,
+        persist: Persist,
+        cluster: Arc<ClusterState>,
+        token: &str,
+        opts: ReplicationOptions,
+        metrics: Registry,
+    ) -> Result<Arc<Replica>> {
+        // resume where the local WAL ends: recovery replayed it into the
+        // store, so the first pull asks for the next primary LSN
+        let resume = persist.wal().next_lsn().saturating_sub(1);
+        cluster.applied_lsn.store(resume, Ordering::Release);
+        let shared = Arc::new(ReplicaShared {
+            store,
+            broker,
+            persist,
+            cluster,
+            token: token.to_string(),
+            opts,
+            metrics,
+            stop: AtomicBool::new(false),
+        });
+        let replica = Arc::new(Replica {
+            shared: Arc::clone(&shared),
+            puller: Mutex::new(None),
+            promote_gate: Mutex::new(()),
+        });
+        let thread = std::thread::Builder::new()
+            .name("idds-replica-pull".into())
+            .spawn(move || pull_loop(&shared))
+            .context("spawning replica pull thread")?;
+        *replica.puller.lock().unwrap() = Some(thread);
+        Ok(replica)
+    }
+
+    pub fn cluster(&self) -> Arc<ClusterState> {
+        Arc::clone(&self.shared.cluster)
+    }
+
+    /// Stop pulling (graceful standby shutdown; promote calls this too).
+    pub fn stop(&self) {
+        self.shared.stop.store(true, Ordering::Release);
+        if let Some(t) = self.puller.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Take over as primary: stop the pull loop, drain shipped frames to
+    /// local disk, bump + persist the cluster epoch, attach the WAL to the
+    /// store/broker so their writes are durable from here on, and
+    /// best-effort fence the old primary over REST (it is fenced on its
+    /// next ship touch regardless, its epoch now being stale). Idempotent:
+    /// a second call reports the already-promoted state.
+    pub fn promote(&self) -> Result<Json> {
+        let _gate = self.promote_gate.lock().unwrap();
+        let sh = &*self.shared;
+        if sh.cluster.is_promoted() {
+            return Ok(Json::obj()
+                .set("promoted", true)
+                .set("already", true)
+                .set("epoch", sh.cluster.epoch())
+                .set("applied_lsn", sh.cluster.applied_lsn()));
+        }
+        self.stop();
+        sh.persist.wal().flush();
+        let new_epoch = sh.cluster.epoch() + 1;
+        let dir = sh
+            .cluster
+            .data_dir
+            .as_ref()
+            .context("replica has no data dir")?;
+        write_epoch(dir, new_epoch)?;
+        sh.cluster.epoch.store(new_epoch, Ordering::Release);
+        sh.persist.attach(&sh.store, Some(&sh.broker));
+        sh.cluster.replica.store(false, Ordering::Release);
+        sh.cluster.promoted.store(true, Ordering::Release);
+        sh.metrics.counter("replication.promotions").inc();
+        log::info!(
+            "promoted to primary at epoch {new_epoch} (applied through lsn {})",
+            sh.cluster.applied_lsn()
+        );
+        // fence the old primary now rather than waiting for its next ship
+        // touch; best-effort — on failover it is usually already dead
+        let fence_body = Json::obj().set("epoch", new_epoch).to_string();
+        let auth = format!("Bearer {}", sh.token);
+        match http_request_full(
+            sh.cluster.primary_addr.as_str(),
+            "POST",
+            "/api/replication/fence",
+            &[("Authorization", auth.as_str()), ("Content-Type", "application/json")],
+            fence_body.as_bytes(),
+        ) {
+            Ok(r) if r.status == 200 => log::info!("old primary acknowledged fence"),
+            Ok(r) => log::warn!("old primary fence returned {}", r.status),
+            Err(e) => log::warn!("old primary unreachable for fence (expected on failover): {e}"),
+        }
+        Ok(Json::obj()
+            .set("promoted", true)
+            .set("epoch", new_epoch)
+            .set("applied_lsn", sh.cluster.applied_lsn()))
+    }
+}
+
+fn pull_loop(sh: &ReplicaShared) {
+    let lag_gauge = sh.metrics.gauge("replication.lag_lsn");
+    while !sh.stop.load(Ordering::Acquire) {
+        match pull_once(sh) {
+            Ok(applied) => {
+                lag_gauge.set(sh.cluster.lag_lsn() as i64);
+                if applied == 0 && !sh.stop.load(Ordering::Acquire) {
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        sh.opts.poll_interval_ms,
+                    ));
+                }
+            }
+            Err(e) => {
+                sh.cluster.note_error(&e.to_string());
+                log::debug!("replica pull failed (will retry): {e:#}");
+                if !sh.stop.load(Ordering::Acquire) {
+                    std::thread::sleep(std::time::Duration::from_millis(sh.opts.retry_ms));
+                }
+            }
+        }
+    }
+}
+
+/// One pull round trip; returns how many frames were applied.
+fn pull_once(sh: &ReplicaShared) -> Result<usize> {
+    let from = sh.cluster.applied_lsn() + 1;
+    let auth = format!("Bearer {}", sh.token);
+    let peer_epoch = sh.cluster.epoch().to_string();
+    let path = format!(
+        "/api/replication/wal?from_lsn={from}&max_bytes={}",
+        sh.opts.batch_bytes
+    );
+    let resp = http_request_full(
+        sh.cluster.primary_addr.as_str(),
+        "GET",
+        &path,
+        &[(("Authorization"), auth.as_str()), ((H_PEER_EPOCH), peer_epoch.as_str())],
+        b"",
+    )?;
+    sh.cluster.pulls.fetch_add(1, Ordering::Relaxed);
+    match resp.status {
+        200 => apply_batch(sh, &resp),
+        410 => {
+            // primary pruned past our position: only a *fresh* standby may
+            // re-seed itself — one with applied history would silently
+            // lose the gap
+            if sh.cluster.applied_lsn() > 0 {
+                bail!(
+                    "primary pruned wal history past lsn {} (oldest {}); \
+                     clear this replica's data dir to re-seed from a snapshot",
+                    sh.cluster.applied_lsn(),
+                    resp.header_u64(H_OLDEST_LSN).unwrap_or(0)
+                );
+            }
+            bootstrap_snapshot(sh)?;
+            Ok(1)
+        }
+        409 => {
+            // epoch conflict: ours is stale → adopt the primary's and
+            // retry next round; theirs stale means a partitioned old
+            // primary answered — back off and keep trying
+            let theirs = resp.header_u64(H_EPOCH).unwrap_or(0);
+            if theirs > sh.cluster.epoch() {
+                sh.cluster.adopt_epoch(theirs);
+                Ok(0)
+            } else {
+                bail!("ship rejected: primary reports stale epoch {theirs}")
+            }
+        }
+        401 => bail!("primary rejected our auth token"),
+        s => bail!("ship request returned {s}"),
+    }
+}
+
+fn apply_batch(sh: &ReplicaShared, resp: &HttpResponse) -> Result<usize> {
+    if let Some(e) = resp.header_u64(H_EPOCH) {
+        sh.cluster.adopt_epoch(e);
+    }
+    if let Some(d) = resp.header_u64(H_DURABLE_LSN) {
+        sh.cluster.primary_durable_lsn.store(d, Ordering::Release);
+    }
+    // strict CRC verification — a damaged transfer rejects the whole batch
+    let frames = decode_frames(&resp.body).context("verifying shipped frames")?;
+    let mut applied = 0usize;
+    let mut max_id = 0;
+    for (lsn, ev) in frames {
+        if lsn <= sh.cluster.applied_lsn() {
+            continue; // replay across a retried pull; apply is idempotent anyway
+        }
+        max_id = max_id.max(ev.max_id());
+        // apply FIRST, then append: the dirty mark lands before the local
+        // WAL's next_lsn can pass this frame, so a standby checkpoint cut
+        // between the two still covers the row (same fuzzy-cut argument
+        // as the primary's log-after-apply). A crash between them loses
+        // only the append — the next pull re-fetches from applied+1.
+        if ev.is_broker() {
+            sh.broker.apply_event(&ev);
+        } else {
+            sh.store.apply_event(&ev);
+        }
+        sh.persist.wal().append_shipped(lsn, ev);
+        sh.cluster.applied_lsn.store(lsn, Ordering::Release);
+        applied += 1;
+    }
+    if applied > 0 {
+        // keep the global id allocator ahead of every replicated id so a
+        // promoted standby never re-mints one
+        crate::util::advance_next_id(max_id);
+        sh.metrics.counter("replication.pull.frames").add(applied as u64);
+        sh.metrics.counter("replication.pull.bytes").add(resp.body.len() as u64);
+    }
+    Ok(applied)
+}
+
+/// Seed an empty standby from the primary's snapshot endpoint (history
+/// before the oldest retained WAL frame is only available this way).
+fn bootstrap_snapshot(sh: &ReplicaShared) -> Result<()> {
+    let auth = format!("Bearer {}", sh.token);
+    let resp = http_request_full(
+        sh.cluster.primary_addr.as_str(),
+        "GET",
+        "/api/replication/snapshot",
+        &[("Authorization", auth.as_str())],
+        b"",
+    )?;
+    anyhow::ensure!(resp.status == 200, "snapshot request returned {}", resp.status);
+    let j = parse(std::str::from_utf8(&resp.body).context("snapshot utf-8")?)
+        .context("snapshot json")?;
+    let cut_lsn = j
+        .get("cut_lsn")
+        .and_then(|v| v.as_u64())
+        .context("snapshot missing cut_lsn")?;
+    let snap = j.get("snapshot").context("snapshot missing body")?;
+    sh.store.restore(snap).context("installing primary snapshot")?;
+    if let Some(bj) = snap.get("broker") {
+        sh.broker.restore(bj).context("installing primary broker section")?;
+    }
+    // a local base checkpoint at the cut makes the seed durable and lets
+    // recovery on the standby start from it instead of an empty store
+    sh.persist
+        .bootstrap_base(&sh.store, cut_lsn)
+        .context("writing bootstrap checkpoint")?;
+    sh.cluster.applied_lsn.store(cut_lsn.saturating_sub(1), Ordering::Release);
+    if let Some(e) = j.get("epoch").and_then(|v| v.as_u64()) {
+        sh.cluster.adopt_epoch(e);
+    }
+    sh.metrics.counter("replication.bootstraps").inc();
+    log::info!("standby bootstrapped from primary snapshot at cut lsn {cut_lsn}");
+    Ok(())
+}

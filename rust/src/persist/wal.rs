@@ -111,6 +111,36 @@ pub struct SegmentScan {
     pub file_len: u64,
 }
 
+/// Strictly decode a buffer of shipped frames (no segment magic prefix).
+/// Unlike [`scan_segment`], which tolerates a torn tail on a crashed
+/// writer's own disk, a replication batch travels over TCP after being
+/// read from fully-durable bytes — anything short or corrupt means the
+/// transfer itself is damaged, so the whole batch is rejected.
+pub fn decode_frames(buf: &[u8]) -> Result<Vec<(u64, PersistEvent)>> {
+    let mut events = Vec::new();
+    let mut off = 0usize;
+    while off < buf.len() {
+        anyhow::ensure!(buf.len() - off >= FRAME_HEADER, "partial frame header at {off}");
+        let len = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+        let crc = u32::from_le_bytes(buf[off + 4..off + 8].try_into().unwrap());
+        anyhow::ensure!(
+            len >= 8 && len <= MAX_FRAME && buf.len() - off - FRAME_HEADER >= len as usize,
+            "implausible frame length {len} at {off}"
+        );
+        let payload = &buf[off + FRAME_HEADER..off + FRAME_HEADER + len as usize];
+        anyhow::ensure!(crc32(payload) == crc, "frame crc mismatch at {off}");
+        let lsn = u64::from_le_bytes(payload[..8].try_into().unwrap());
+        let text = std::str::from_utf8(&payload[8..]).context("frame payload not utf-8")?;
+        let ev = parse(text)
+            .map_err(anyhow::Error::from)
+            .and_then(|j| PersistEvent::from_json(&j))
+            .with_context(|| format!("undecodable event at lsn {lsn}"))?;
+        events.push((lsn, ev));
+        off += FRAME_HEADER + len as usize;
+    }
+    Ok(events)
+}
+
 /// Read and validate one segment file front to back.
 pub fn scan_segment(path: &Path) -> Result<SegmentScan> {
     let mut bytes = Vec::new();
@@ -270,6 +300,11 @@ struct WalInner {
     d_cv: Condvar,
     writer: Mutex<WriterState>,
     stop: AtomicBool,
+    /// Epoch fencing (see `persist/replicate.rs`): once a node learns a
+    /// higher cluster epoch exists, its WAL refuses every further append —
+    /// checked on the hot path so a fenced old primary cannot durably
+    /// acknowledge writes even if a request slips past the REST gate.
+    fenced: AtomicBool,
     wal_bytes_total: AtomicU64,
     /// closed + live segment files, mirrored atomically so stats/health
     /// never wait behind the writer mutex (held across write+fsync)
@@ -287,6 +322,18 @@ pub struct Wal {
 
 impl Persister for Wal {
     fn log(&self, ev: PersistEvent) {
+        // epoch check on append: a fenced node (superseded by a promoted
+        // standby) must never extend its log — two heads both writing is
+        // exactly the split brain fencing exists to prevent. Dropped
+        // loudly and recorded as the sticky io_error so health and
+        // sync_submit surface it.
+        if self.inner.fenced.load(Ordering::Acquire) {
+            log::error!("wal.log on fenced node: event dropped ({})", ev.op());
+            self.inner.d.lock().unwrap().io_error.get_or_insert_with(|| {
+                "node fenced: a newer primary epoch exists; writes dropped".to_string()
+            });
+            return;
+        }
         let wake = {
             let mut q = self.inner.q.lock().unwrap();
             // bounded queue: block (durability-preserving backpressure)
@@ -371,6 +418,7 @@ impl Wal {
                 fsync,
             }),
             stop: AtomicBool::new(false),
+            fenced: AtomicBool::new(false),
             wal_bytes_total: AtomicU64::new(on_disk_bytes + bytes),
             segments: AtomicUsize::new(closed_count + 1),
             idle_wait: std::time::Duration::from_millis(idle_wait_ms.max(1)),
@@ -441,14 +489,21 @@ impl Wal {
         let mut wrote_ok = false;
         {
             let mut w = inner.writer.lock().unwrap();
-            let res = w.file.write_all(&buf).and_then(|_| {
-                if w.fsync == FsyncMode::Group {
-                    inner.m.fsyncs.inc();
-                    w.file.sync_data()
-                } else {
-                    Ok(())
-                }
-            });
+            let res = super::failpoints::check("wal.write")
+                .and_then(|_| w.file.write_all(&buf))
+                .and_then(|_| {
+                    if w.fsync == FsyncMode::Group {
+                        inner.m.fsyncs.inc();
+                        // the fsync failpoint fires AFTER the write: bytes
+                        // are in the file (recoverable) but durability is
+                        // unacknowledged — the degraded-write shape the
+                        // sync_submit 503 path is tested against
+                        super::failpoints::check("wal.fsync")?;
+                        w.file.sync_data()
+                    } else {
+                        Ok(())
+                    }
+                });
             match res {
                 Ok(()) => {
                     wrote_ok = true;
@@ -510,6 +565,70 @@ impl Wal {
     /// LSN the next logged event will get.
     pub fn next_lsn(&self) -> u64 {
         self.inner.q.lock().unwrap().next_lsn
+    }
+
+    /// Standby append path: enqueue a frame shipped from the primary,
+    /// *preserving its LSN* — the standby's WAL is a logical copy of the
+    /// primary's, so on promotion `log()` continues the same dense LSN
+    /// sequence and a restarted standby recovers its position from its own
+    /// files. Shipped LSNs arrive in order from the pull loop; gaps or
+    /// replays are the caller's to filter.
+    pub fn append_shipped(&self, lsn: u64, ev: PersistEvent) {
+        let wake = {
+            let mut q = self.inner.q.lock().unwrap();
+            while q.pending.len() >= MAX_PENDING && !self.inner.stop.load(Ordering::Acquire) {
+                self.inner.q_cv.notify_one();
+                q = self
+                    .inner
+                    .q_space
+                    .wait_timeout(q, std::time::Duration::from_millis(100))
+                    .unwrap()
+                    .0;
+            }
+            if self.inner.stop.load(Ordering::Acquire) {
+                drop(q);
+                log::error!("wal.append_shipped after shutdown: frame {lsn} dropped");
+                return;
+            }
+            q.next_lsn = q.next_lsn.max(lsn + 1);
+            q.pending.push((lsn, ev));
+            q.pending.len() == 1
+        };
+        self.inner.m.appends.inc();
+        if wake {
+            self.inner.q_cv.notify_one();
+        }
+    }
+
+    /// Jump the LSN counter forward (snapshot bootstrap: a standby seeded
+    /// from a primary snapshot cut at `to` starts logging there). No-op
+    /// when the counter is already past `to`.
+    pub fn advance_next_lsn(&self, to: u64) {
+        let mut q = self.inner.q.lock().unwrap();
+        q.next_lsn = q.next_lsn.max(to);
+        // the durable mark must not trail below the synthetic start or
+        // wait_durable(cut-1) would block forever on a fresh standby
+        let mut d = self.inner.d.lock().unwrap();
+        d.lsn = d.lsn.max(to.saturating_sub(1));
+    }
+
+    /// Refuse every further append (see `persist/replicate.rs`).
+    pub fn fence(&self) {
+        self.inner.fenced.store(true, Ordering::Release);
+    }
+
+    pub fn is_fenced(&self) -> bool {
+        self.inner.fenced.load(Ordering::Acquire)
+    }
+
+    /// Snapshot of the on-disk segment catalog (closed segments plus the
+    /// live one) for the replication ship reader. The writer lock is held
+    /// only to clone the metadata, never across I/O.
+    pub(crate) fn catalog(&self) -> (PathBuf, Vec<SegmentInfo>) {
+        let w = self.inner.writer.lock().unwrap();
+        let mut segs = w.closed.clone();
+        segs.push(w.current.clone());
+        (w.dir.clone(), segs)
     }
 
     /// Last LSN known durable on disk.

@@ -1,19 +1,39 @@
 //! Typed client for the iDDS head service (the paper's "Client" box in
 //! Fig. 2: define a Workflow, serialize it to a json-based request, submit
 //! over REST).
+//!
+//! Transient transport failures are retried with capped exponential
+//! backoff + jitter, under a safety rule: a request is re-sent only when
+//! either (a) the connection itself failed — nothing reached the server —
+//! or (b) the method is idempotent (GET/DELETE), where a duplicate
+//! converges. A POST whose connection succeeded is never retried: the
+//! server may have executed it, and `http_request` only errors before any
+//! response was read, so "never retry a non-idempotent call after a
+//! response was read" holds by construction.
+
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
 use crate::store::{RequestKind, RequestStatus};
 use crate::util::json::{parse, Json};
+use crate::util::rng::Rng;
 use crate::workflow::Workflow;
 
-use super::http::http_request;
+use super::http::{http_request, ConnectError};
 
 pub struct Client {
     addr: std::net::SocketAddr,
     token: String,
+    /// Additional attempts after the first failure (0 = no retries).
+    retries: u32,
+    /// Base backoff; doubles per attempt, capped at [`BACKOFF_CAP_MS`].
+    backoff_ms: u64,
+    rng: Mutex<Rng>,
 }
+
+/// Ceiling for one backoff sleep, however many attempts have failed.
+const BACKOFF_CAP_MS: u64 = 1_000;
 
 #[derive(Debug, Clone)]
 pub struct MessageDelivery {
@@ -28,7 +48,17 @@ impl Client {
         Client {
             addr,
             token: token.to_string(),
+            retries: 3,
+            backoff_ms: 25,
+            rng: Mutex::new(Rng::new(0x1dd5_c11e * u64::from(addr.port()) + 1)),
         }
+    }
+
+    /// Override the retry budget (0 disables retries entirely).
+    pub fn with_retries(mut self, retries: u32, backoff_ms: u64) -> Self {
+        self.retries = retries;
+        self.backoff_ms = backoff_ms.max(1);
+        self
     }
 
     fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
@@ -41,7 +71,33 @@ impl Client {
                 buf.into_bytes()
             })
             .unwrap_or_default();
-        let (status, resp) = http_request(self.addr, method, path, &headers, &body_bytes)?;
+        let idempotent = matches!(method, "GET" | "DELETE");
+        let mut attempt = 0u32;
+        let (status, resp) = loop {
+            match http_request(self.addr, method, path, &headers, &body_bytes) {
+                Ok(r) => break r,
+                Err(e) => {
+                    // a connect failure is always safe to retry (the
+                    // request never left this process); any later IO error
+                    // may have executed server-side, so only idempotent
+                    // methods go again
+                    let connect_failed = e.downcast_ref::<ConnectError>().is_some();
+                    if attempt >= self.retries || !(connect_failed || idempotent) {
+                        return Err(e);
+                    }
+                    let cap = (self.backoff_ms << attempt.min(16)).min(BACKOFF_CAP_MS);
+                    // full jitter: uniform in [1, cap] decorrelates clients
+                    // hammering a head that just came back
+                    let sleep_ms = 1 + self.rng.lock().unwrap().below(cap);
+                    log::debug!(
+                        "{method} {path} attempt {} failed ({e}); retrying in {sleep_ms}ms",
+                        attempt + 1
+                    );
+                    std::thread::sleep(std::time::Duration::from_millis(sleep_ms));
+                    attempt += 1;
+                }
+            }
+        };
         let j = if resp.is_empty() {
             Json::Null
         } else {
@@ -176,5 +232,80 @@ impl Client {
             }
             std::thread::sleep(std::time::Duration::from_millis(20));
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::{Read as _, Write as _};
+    use std::net::TcpListener;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    use super::*;
+
+    const CANNED: &[u8] =
+        b"HTTP/1.1 200 OK\r\nContent-Type: application/json\r\nContent-Length: 11\r\n\r\n{\"ok\":true}";
+
+    /// A listener that sabotages the first `drops` connections (accept,
+    /// half-read, close without responding) and answers the next one.
+    fn flaky_listener(drops: usize) -> (std::net::SocketAddr, Arc<AtomicUsize>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let conns = Arc::new(AtomicUsize::new(0));
+        let counter = Arc::clone(&conns);
+        std::thread::spawn(move || {
+            for i in 0.. {
+                let Ok((mut sock, _)) = listener.accept() else { break };
+                counter.fetch_add(1, Ordering::SeqCst);
+                let mut buf = [0u8; 4096];
+                let _ = sock.read(&mut buf); // let the request leave the client
+                if i >= drops {
+                    let _ = sock.write_all(CANNED);
+                    break;
+                }
+                // dropped without a response: the client sees an IO error
+                // after a *successful* connect
+            }
+        });
+        (addr, conns)
+    }
+
+    #[test]
+    fn idempotent_get_retries_through_dropped_connections() {
+        let (addr, conns) = flaky_listener(2);
+        let client = Client::new(addr, "t").with_retries(3, 2);
+        let (status, j) = client.call("GET", "/api/health", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(conns.load(Ordering::SeqCst), 3, "two drops + one success");
+    }
+
+    #[test]
+    fn post_is_not_retried_after_connection_succeeded() {
+        // every connection is sabotaged — a POST must fail on the FIRST
+        // one, because the server may have executed it before dropping
+        let (addr, conns) = flaky_listener(usize::MAX);
+        let client = Client::new(addr, "t").with_retries(3, 2);
+        let err = client.call("POST", "/api/requests", Some(&Json::obj()));
+        assert!(err.is_err());
+        // give an (incorrect) retry time to show up before counting
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        assert_eq!(conns.load(Ordering::SeqCst), 1, "non-idempotent calls go once");
+    }
+
+    #[test]
+    fn retry_budget_is_bounded() {
+        // nothing listens here: connect fails every time, and even though
+        // connect failures are always retryable the budget must cap them
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let client = Client::new(addr, "t").with_retries(2, 1);
+        let err = client.call("POST", "/api/requests", Some(&Json::obj())).unwrap_err();
+        assert!(
+            err.downcast_ref::<ConnectError>().is_some(),
+            "the final error still classifies as a connect failure: {err:#}"
+        );
     }
 }

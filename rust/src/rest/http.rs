@@ -47,6 +47,9 @@ impl Request {
 pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
+    /// Extra response headers (the replication endpoints carry epoch and
+    /// LSN watermarks here so binary bodies stay pure frame bytes).
+    pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
 }
 
@@ -59,6 +62,7 @@ impl Response {
         Response {
             status,
             content_type: "application/json",
+            headers: Vec::new(),
             body: buf.into_bytes(),
         }
     }
@@ -67,8 +71,24 @@ impl Response {
         Response {
             status,
             content_type: "text/plain",
+            headers: Vec::new(),
             body: body.as_bytes().to_vec(),
         }
+    }
+
+    /// Raw binary body (`application/octet-stream`) — WAL frame batches.
+    pub fn bytes(status: u16, body: Vec<u8>) -> Response {
+        Response {
+            status,
+            content_type: "application/octet-stream",
+            headers: Vec::new(),
+            body,
+        }
+    }
+
+    pub fn with_header(mut self, name: &str, value: impl std::fmt::Display) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
     }
 }
 
@@ -81,6 +101,8 @@ fn status_text(code: u16) -> &'static str {
         401 => "Unauthorized",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        409 => "Conflict",
+        410 => "Gone",
         413 => "Payload Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
@@ -182,13 +204,17 @@ pub fn write_response(
     head.clear();
     let _ = write!(
         head,
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
         resp.status,
         status_text(resp.status),
         resp.content_type,
         resp.body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
+    for (k, v) in &resp.headers {
+        let _ = write!(head, "{k}: {v}\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(&resp.body)?;
     stream.flush()?;
@@ -294,6 +320,43 @@ fn handle_conn(
     Ok(())
 }
 
+/// Marker context attached to client errors that happened at the TCP
+/// *connect* phase — before any bytes were sent, so retrying is safe for
+/// every method including non-idempotent POSTs. Classify with
+/// `err.downcast_ref::<ConnectError>()` on the anyhow chain.
+#[derive(Debug, Clone, Copy)]
+pub struct ConnectError;
+
+impl std::fmt::Display for ConnectError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "connection failed")
+    }
+}
+
+impl std::error::Error for ConnectError {}
+
+/// A parsed client-side HTTP response.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse a numeric header (the replication LSN/epoch watermarks).
+    pub fn header_u64(&self, name: &str) -> Option<u64> {
+        self.header(name).and_then(|v| v.trim().parse().ok())
+    }
+}
+
 /// Minimal blocking HTTP client (one request per call, Connection: close).
 pub fn http_request(
     addr: impl ToSocketAddrs,
@@ -302,7 +365,23 @@ pub fn http_request(
     headers: &[(&str, &str)],
     body: &[u8],
 ) -> Result<(u16, Vec<u8>)> {
-    let mut stream = TcpStream::connect(addr).context("connect")?;
+    let resp = http_request_full(addr, method, path, headers, body)?;
+    Ok((resp.status, resp.body))
+}
+
+/// Like [`http_request`] but returns the response headers too, and tags
+/// connect-phase failures with [`ConnectError`] so callers can retry them
+/// for any method (nothing was sent yet).
+pub fn http_request_full(
+    addr: impl ToSocketAddrs,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<HttpResponse> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(anyhow::Error::new)
+        .context(ConnectError)?;
     stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
     let mut req = format!(
         "{method} {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\
@@ -326,6 +405,7 @@ pub fn http_request(
         .context("bad status line")?
         .parse()
         .context("bad status code")?;
+    let mut resp_headers = Vec::new();
     let mut content_length = None;
     loop {
         let mut h = String::new();
@@ -337,9 +417,11 @@ pub fn http_request(
             break;
         }
         if let Some((k, v)) = h.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_length = Some(v.trim().parse::<usize>().context("content-length")?);
+            let (k, v) = (k.trim(), v.trim());
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = Some(v.parse::<usize>().context("content-length")?);
             }
+            resp_headers.push((k.to_string(), v.to_string()));
         }
     }
     let mut body = Vec::new();
@@ -352,7 +434,7 @@ pub fn http_request(
             reader.read_to_end(&mut body)?;
         }
     }
-    Ok((status, body))
+    Ok(HttpResponse { status, headers: resp_headers, body })
 }
 
 #[cfg(test)]

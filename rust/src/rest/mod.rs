@@ -23,6 +23,21 @@
 //! * `POST /api/admin/checkpoint`           — force a durable checkpoint
 //!   (503 when the service runs without a data dir)
 //!
+//! Replication routes (see DESIGN.md, "Replication"):
+//! * `GET  /api/replication/wal?from_lsn=N` — ship durable WAL frames to a
+//!   standby (raw WAL framing, chunked by `?max_bytes=`; `410 Gone` when
+//!   the history was pruned, `409 Conflict` on an epoch mismatch — every
+//!   ship request carries the caller's epoch and seeing a higher one
+//!   fences this node)
+//! * `GET  /api/replication/snapshot`       — full store+broker snapshot
+//!   at a flushed cut LSN (standby bootstrap after a 410)
+//! * `POST /api/replication/fence`          — `{epoch}`: fence this node
+//!   if the given epoch is newer (called by a promoted standby)
+//! * `POST /api/admin/promote`              — promote a standby to primary
+//!
+//! A standby answers read-only GETs and 503s every mutating route until
+//! promoted; a fenced node 503s them forever.
+//!
 //! Authentication: `Authorization: Bearer <token>` checked against the
 //! configured token set (production iDDS uses OIDC; a static token list
 //! preserves the control-flow: every request is authenticated before any
@@ -36,7 +51,10 @@ use std::sync::Arc;
 use crate::broker::Broker;
 use crate::config::Config;
 use crate::metrics::Registry;
-use crate::persist::Persist;
+use crate::persist::replicate::{
+    fence_node, ship_frames, ShipReply, H_DURABLE_LSN, H_EPOCH, H_OLDEST_LSN, H_PEER_EPOCH,
+};
+use crate::persist::{ClusterState, Persist, Replica};
 use crate::store::{RequestKind, RequestStatus, Store};
 use crate::util::json::{parse, Json};
 
@@ -53,6 +71,11 @@ pub struct ServerState {
     /// `persist.sync_submit`: acknowledge `POST /api/requests` only after
     /// the group-commit flusher fsynced the submit's LSN.
     sync_submit: bool,
+    /// Replication role + fencing epoch. A standalone head is a plain
+    /// primary at epoch 1 with no on-disk epoch state.
+    pub cluster: Arc<ClusterState>,
+    /// Present on a standby: the pull loop + promote entry point.
+    replica: Option<Arc<Replica>>,
     started: std::time::Instant,
     tokens: Arc<Vec<String>>,
 }
@@ -74,6 +97,8 @@ impl ServerState {
             metrics,
             persist: None,
             sync_submit,
+            cluster: ClusterState::primary(None, 1),
+            replica: None,
             started: std::time::Instant::now(),
             tokens: Arc::new(tokens),
         }
@@ -83,6 +108,21 @@ impl ServerState {
     /// and the persist section of `/api/health`).
     pub fn with_persist(mut self, persist: Persist) -> Self {
         self.persist = Some(persist);
+        self
+    }
+
+    /// Attach replication/fencing state (a primary participating in a
+    /// cluster — epoch persisted in its data dir).
+    pub fn with_cluster(mut self, cluster: Arc<ClusterState>) -> Self {
+        self.cluster = cluster;
+        self
+    }
+
+    /// Attach a running standby (its cluster state comes along; enables
+    /// `POST /api/admin/promote` and turns on the read-only write gate).
+    pub fn with_replica(mut self, replica: Arc<Replica>) -> Self {
+        self.cluster = replica.cluster();
+        self.replica = Some(replica);
         self
     }
 
@@ -133,7 +173,10 @@ pub fn route(state: &ServerState, req: Request) -> Response {
             // topology + backlog (which survive restarts when durability
             // is on — see README, "Durability operations") plus the flow
             // counters, which are process-lifetime and reset at boot
-            .set("broker", state.broker.health_json());
+            .set("broker", state.broker.health_json())
+            // role, epoch, fenced flag; on a standby also applied/durable
+            // LSNs, lag_lsn, pull counters — the operator's lag monitor
+            .set("replication", state.cluster.health_json());
         if let Some(p) = &state.persist {
             // WAL stats plus checkpoint topology: base seq, delta-chain
             // length, dirty-row counts per table, last checkpoint bytes
@@ -148,7 +191,87 @@ pub fn route(state: &ServerState, req: Request) -> Response {
     }
 
     let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+
+    // Write gate: a standby (or a fenced ex-primary) must not mutate
+    // state — a standby's store tracks the primary and local writes would
+    // fork it; a fenced node's writes are lost by construction (its WAL
+    // refuses them). GET /api/messages mutates too (polling moves
+    // deliveries in-flight). Promote and fence stay reachable — they are
+    // how the roles change — and admin/checkpoint only persists what the
+    // pull loop already applied.
+    let mutating = matches!(req.method.as_str(), "POST" | "DELETE")
+        || (req.method == "GET" && segs.as_slice() == ["api", "messages"]);
+    let role_exempt = matches!(
+        segs.as_slice(),
+        ["api", "admin", "promote"] | ["api", "replication", "fence"] | ["api", "admin", "checkpoint"]
+    );
+    if mutating && !role_exempt {
+        if state.cluster.is_fenced() {
+            state.metrics.counter("rest.rejected_fenced").inc();
+            return err_json(503, "node fenced: a newer primary epoch exists");
+        }
+        if state.cluster.is_replica() {
+            state.metrics.counter("rest.rejected_replica").inc();
+            return err_json(503, "read-only replica; POST /api/admin/promote to take writes");
+        }
+    }
+
     match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["api", "replication", "wal"]) => handle_ship(state, &req),
+
+        ("GET", ["api", "replication", "snapshot"]) => match &state.persist {
+            Some(p) => {
+                // flush first so the cut is durable on our side; events
+                // racing past the cut are shipped as WAL frames and the
+                // standby's idempotent fold converges either way
+                p.flush();
+                let cut_lsn = p.wal().next_lsn();
+                let snap = state
+                    .store
+                    .snapshot()
+                    .set("broker", state.broker.snapshot_json());
+                state.metrics.counter("replication.snapshots_served").inc();
+                ok_json(
+                    Json::obj()
+                        .set("epoch", state.cluster.epoch())
+                        .set("cut_lsn", cut_lsn)
+                        .set("snapshot", snap),
+                )
+            }
+            None => err_json(503, "persistence not configured (start with --data-dir)"),
+        },
+
+        ("POST", ["api", "replication", "fence"]) => {
+            let body = match req.body_str().map(parse) {
+                Ok(Ok(j)) => j,
+                _ => return err_json(400, "body must be json"),
+            };
+            let Some(epoch) = body.get("epoch").and_then(|v| v.as_u64()) else {
+                return err_json(400, "missing epoch");
+            };
+            if epoch > state.cluster.epoch() {
+                fence_node(&state.cluster, state.persist.as_ref().map(|p| p.wal()), epoch);
+                ok_json(Json::obj().set("fenced", true).set("epoch", epoch))
+            } else {
+                err_json(409, &format!(
+                    "refusing fence: epoch {epoch} is not newer than ours ({})",
+                    state.cluster.epoch()
+                ))
+                .with_header(H_EPOCH, state.cluster.epoch())
+            }
+        }
+
+        ("POST", ["api", "admin", "promote"]) => match &state.replica {
+            Some(r) => match r.promote() {
+                Ok(j) => {
+                    state.metrics.counter("rest.promotions").inc();
+                    ok_json(j)
+                }
+                Err(e) => err_json(500, &format!("promote failed: {e}")),
+            },
+            None => err_json(400, "not a replica (started without --replica-of)"),
+        },
+
         ("GET", ["api", "metrics"]) => ok_json(state.metrics.snapshot()),
 
         ("POST", ["api", "requests"]) => handle_submit(state, &req),
@@ -302,6 +425,58 @@ pub fn route(state: &ServerState, req: Request) -> Response {
     }
 }
 
+/// `GET /api/replication/wal?from_lsn=N[&max_bytes=M]` — the ship side.
+/// Epoch fencing happens here: the standby sends its epoch with every
+/// pull, so the moment a promoted standby (higher epoch) touches an old
+/// primary, the old primary fences itself — even if the explicit fence
+/// POST at promote time never arrived.
+fn handle_ship(state: &ServerState, req: &Request) -> Response {
+    let Some(p) = &state.persist else {
+        return err_json(503, "persistence not configured (start with --data-dir)");
+    };
+    if state.cluster.is_fenced() {
+        return err_json(409, "node fenced: not a valid ship source")
+            .with_header(H_EPOCH, state.cluster.epoch());
+    }
+    let ours = state.cluster.epoch();
+    if let Some(peer) = req.header(H_PEER_EPOCH).and_then(|v| v.parse::<u64>().ok()) {
+        if peer > ours {
+            fence_node(&state.cluster, Some(p.wal()), peer);
+            return err_json(409, "your epoch supersedes ours; this node is now fenced")
+                .with_header(H_EPOCH, ours);
+        }
+        if peer < ours {
+            return err_json(409, &format!("stale peer epoch {peer} (ours is {ours})"))
+                .with_header(H_EPOCH, ours);
+        }
+    }
+    let Some(from_lsn) = req.query_param("from_lsn").and_then(|v| v.parse::<u64>().ok()) else {
+        return err_json(400, "missing or invalid ?from_lsn=");
+    };
+    let max_bytes = req
+        .query_param("max_bytes")
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(1 << 20)
+        .clamp(4096, 64 << 20);
+    match ship_frames(p.wal(), from_lsn, max_bytes) {
+        Ok(ShipReply::Batch { frames, count, last_lsn: _, durable_lsn }) => {
+            state.metrics.counter("replication.ship.batches").inc();
+            state.metrics.counter("replication.ship.frames").add(count as u64);
+            state.metrics.counter("replication.ship.bytes").add(frames.len() as u64);
+            Response::bytes(200, frames)
+                .with_header(H_EPOCH, ours)
+                .with_header(H_DURABLE_LSN, durable_lsn)
+        }
+        Ok(ShipReply::Gone { oldest_lsn, durable_lsn }) => {
+            err_json(410, "requested wal history was pruned; bootstrap from /api/replication/snapshot")
+                .with_header(H_EPOCH, ours)
+                .with_header(H_OLDEST_LSN, oldest_lsn)
+                .with_header(H_DURABLE_LSN, durable_lsn)
+        }
+        Err(e) => err_json(500, &format!("ship failed: {e}")),
+    }
+}
+
 fn handle_submit(state: &ServerState, req: &Request) -> Response {
     let body = match req.body_str().map(parse) {
         Ok(Ok(j)) => j,
@@ -345,9 +520,12 @@ fn handle_submit(state: &ServerState, req: &Request) -> Response {
             // share the flusher's single fsync
             let lsn = p.wal().next_lsn().saturating_sub(1);
             if !p.wal().wait_durable(lsn) {
+                // 503, not 500: the head is degraded (sticky WAL error),
+                // not broken on this request — clients should back off
+                // and operators should read persist.io_error in health
                 state.metrics.counter("rest.submit_sync_failures").inc();
                 return Response::json(
-                    500,
+                    503,
                     Json::obj()
                         .set("error", "write-ahead log failed before the submit became durable")
                         .set("request_id", id),

@@ -1,0 +1,284 @@
+//! Degraded-write drills driven by the `persist::failpoints` sites: the
+//! rarest inputs the durability stack handles — fsync failures, write
+//! failures, checkpoint publish failures, silently-truncated checkpoint
+//! files — forced on demand, and the promised behavior asserted end to
+//! end: `persist.sync_submit` answers 503 (never a false 201, never a
+//! hang), health surfaces the sticky `persist.io_error`, write errors
+//! rotate to a fresh segment so later batches stay reachable, a failed
+//! checkpoint publish restores the dirty sets for the next attempt, and
+//! a truncated checkpoint is sidelined as `.corrupt` at recovery.
+//!
+//! Failpoints are process-global, so every test takes the same guard:
+//! it serializes the tests in this binary and disarms everything on drop
+//! (panic included).
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use idds::broker::Broker;
+use idds::config::Config;
+use idds::metrics::Registry;
+use idds::persist::{failpoints, FsyncMode, Persist, PersistOptions};
+use idds::rest::http::http_request;
+use idds::rest::{serve, ServerState};
+use idds::store::{RequestKind, Store};
+use idds::util::clock::WallClock;
+use idds::util::json::{parse, Json};
+
+struct FpGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for FpGuard {
+    fn drop(&mut self) {
+        failpoints::disarm_all();
+    }
+}
+
+fn serial() -> FpGuard {
+    static GATE: Mutex<()> = Mutex::new(());
+    FpGuard(GATE.lock().unwrap_or_else(|p| p.into_inner()))
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "idds-fp-{tag}-{}-{}",
+        std::process::id(),
+        idds::util::next_id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn opts() -> PersistOptions {
+    PersistOptions {
+        segment_bytes: 16 * 1024,
+        fsync: FsyncMode::Group, // fsync paths must be live here
+        checkpoint_keep: 2,
+        flush_idle_ms: 2,
+        ..PersistOptions::default()
+    }
+}
+
+fn store() -> Store {
+    Store::new(Arc::new(WallClock::new()))
+}
+
+fn canon(mut snap: Json) -> Json {
+    if let Json::Obj(m) = &mut snap {
+        for arr in m.values_mut() {
+            if let Json::Arr(a) = arr {
+                a.sort_by_key(|row| row.get("id").and_then(|v| v.as_u64()).unwrap_or(0));
+            }
+        }
+    }
+    snap
+}
+
+fn submit_body() -> String {
+    let wf = idds::workflow::Workflow::new("w")
+        .add_template(idds::workflow::WorkTemplate::new("a"))
+        .entry("a");
+    Json::obj()
+        .set("name", "fp")
+        .set("requester", "u")
+        .set("workflow", wf.to_json())
+        .to_string()
+}
+
+#[test]
+fn injected_fsync_failure_degrades_sync_submit_to_503() {
+    let _g = serial();
+    let dir = tmp_dir("fsync503");
+    let s = store();
+    let broker = Broker::new(Arc::new(WallClock::new()));
+    let (persist, _) =
+        Persist::open_with_broker(&dir, opts(), &s, Some(&broker), Registry::default()).unwrap();
+    let mut cfg = Config::defaults();
+    cfg.apply_override("persist.sync_submit=true").unwrap();
+    let server = serve(
+        ServerState::new(s.clone(), broker, Registry::default(), &cfg)
+            .with_persist(persist.clone()),
+        &cfg,
+    )
+    .unwrap();
+    let auth = [("Authorization", "Bearer dev-token"), ("Content-Type", "application/json")];
+    let body = submit_body();
+
+    // healthy head: synchronous submit acknowledges with 201
+    let (st, _) =
+        http_request(server.addr, "POST", "/api/requests", &auth, body.as_bytes()).unwrap();
+    assert_eq!(st, 201);
+
+    // one injected fsync failure: the event's bytes reach the file but
+    // durability is unacknowledged — the submit must degrade to a 503,
+    // not hang on the flusher and not claim a durable 201
+    failpoints::arm("wal.fsync", Some(1));
+    let (st, resp) =
+        http_request(server.addr, "POST", "/api/requests", &auth, body.as_bytes()).unwrap();
+    assert_eq!(st, 503, "degraded write must 503: {:?}", String::from_utf8_lossy(&resp));
+
+    // the error is sticky: later submits stay 503 even though their own
+    // fsync would succeed, until an operator intervenes
+    let (st, _) =
+        http_request(server.addr, "POST", "/api/requests", &auth, body.as_bytes()).unwrap();
+    assert_eq!(st, 503);
+
+    // and health tells the operator why
+    let (st, resp) = http_request(server.addr, "GET", "/api/health", &[], b"").unwrap();
+    assert_eq!(st, 200);
+    let health = parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+    assert!(
+        health.get_path(&["persist", "io_error"]).and_then(|v| v.as_str()).is_some(),
+        "health must surface the sticky io_error"
+    );
+
+    // recovery after the fault clears: every 503'd submit was written
+    // before its failed fsync, so recover == live — nothing acknowledged
+    // was lost and nothing written is missing
+    let live = canon(s.snapshot());
+    assert_eq!(s.counts().get("requests").and_then(|v| v.as_u64()), Some(3));
+    server.stop();
+    persist.shutdown();
+    failpoints::disarm_all();
+    let s2 = store();
+    let (p2, report) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+    assert!(report.events_replayed > 0);
+    assert_eq!(canon(s2.snapshot()), live);
+    p2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn injected_write_failure_is_sticky_and_rotates_to_a_fresh_segment() {
+    let _g = serial();
+    let dir = tmp_dir("writerot");
+    let s = store();
+    let (persist, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+
+    let a = s.add_request("alpha", "u", RequestKind::Workflow, Json::Null);
+    persist.flush();
+    assert!(persist.wal().io_error().is_none());
+    let segments_before = persist.wal().segment_count();
+
+    // the failing batch is lost (its segment may end in a torn frame),
+    // the error goes sticky, and the writer rotates so later batches
+    // land in a fresh segment instead of behind a poisoned tail
+    failpoints::arm("wal.write", Some(1));
+    let b = s.add_request("bravo", "u", RequestKind::Workflow, Json::Null);
+    persist.flush();
+    assert!(persist.wal().io_error().is_some(), "write failure must stick");
+    assert!(persist.wal().segment_count() > segments_before, "rotated after the error");
+
+    failpoints::disarm_all();
+    let c = s.add_request("charlie", "u", RequestKind::Workflow, Json::Null);
+    persist.flush();
+    persist.shutdown();
+
+    // recovery: everything around the lost batch survives — the rotation
+    // kept charlie's frame out of the torn segment's shadow
+    let s2 = store();
+    let (p2, _) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+    assert_eq!(s2.get_request(a).unwrap().name, "alpha");
+    assert!(s2.get_request(b).is_err(), "the failed batch is lost, by design");
+    assert_eq!(s2.get_request(c).unwrap().name, "charlie");
+    p2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn injected_checkpoint_publish_failure_restores_dirty_sets() {
+    let _g = serial();
+    let dir = tmp_dir("ckptrename");
+    let s = store();
+    let (persist, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+
+    // a base, then dirty rows on top of it
+    s.add_request("base-row", "u", RequestKind::Workflow, Json::Null);
+    persist.flush();
+    persist.checkpoint_full(&s).unwrap();
+    let rid = s.add_request("delta-row", "u", RequestKind::Workflow, Json::Null);
+    persist.flush();
+
+    // publish fails at the atomic rename: the delta must error out AND
+    // put the drained dirty ids back, or the next delta would silently
+    // skip these rows
+    failpoints::arm("checkpoint.rename", Some(1));
+    assert!(persist.checkpoint_delta(&s).is_err());
+
+    let report = persist.checkpoint_delta(&s).unwrap();
+    assert!(!report.full);
+    assert!(report.rows >= 1, "restored dirty rows written by the retry, got {}", report.rows);
+
+    // the tmp file from the failed publish is swept at the next open and
+    // the recovered store matches the live one
+    let live = canon(s.snapshot());
+    s.update_request_status(rid, idds::store::RequestStatus::Cancelled).unwrap();
+    let live_after = canon(s.snapshot());
+    assert_ne!(live, live_after);
+    persist.flush();
+    persist.shutdown();
+    let s2 = store();
+    let (p2, _) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+    assert_eq!(canon(s2.snapshot()), live_after);
+    assert!(
+        std::fs::read_dir(&dir).unwrap().all(|e| {
+            let p = e.unwrap().path();
+            p.extension().map(|x| x != "tmp").unwrap_or(true)
+        }),
+        "failed-publish tmp files are swept at open"
+    );
+    p2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_checkpoint_is_sidelined_and_recovery_falls_back() {
+    let _g = serial();
+    let dir = tmp_dir("ckptcorrupt");
+    let s = store();
+    let (persist, _) = Persist::open(&dir, opts(), &s, Registry::default()).unwrap();
+
+    s.add_request("one", "u", RequestKind::Workflow, Json::Null);
+    persist.flush();
+    persist.checkpoint_full(&s).unwrap(); // good base
+
+    s.add_request("two", "u", RequestKind::Workflow, Json::Null);
+    persist.flush();
+    // this base "succeeds" but its body is truncated on disk — the shape
+    // of a torn-at-power-loss or bit-rotted checkpoint file
+    failpoints::arm("checkpoint.corrupt", Some(1));
+    persist.checkpoint_full(&s).unwrap();
+
+    let live = canon(s.snapshot());
+    persist.shutdown();
+    failpoints::disarm_all();
+
+    // recovery must refuse the truncated base, set it aside as .corrupt,
+    // and fold the older base + WAL suffix back to the live state (WAL
+    // retention keeps segments back to the oldest *retained* base cut)
+    let s2 = store();
+    let (p2, report) = Persist::open(&dir, opts(), &s2, Registry::default()).unwrap();
+    assert_eq!(canon(s2.snapshot()), live, "fallback recovery must equal live");
+    assert!(report.checkpoint_seq.is_some());
+    let sidelined = std::fs::read_dir(&dir).unwrap().any(|e| {
+        e.unwrap().path().extension().map(|x| x == "corrupt").unwrap_or(false)
+    });
+    assert!(sidelined, "the truncated checkpoint must be set aside as .corrupt");
+    p2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn failpoints_armed_from_persist_options_spec() {
+    let _g = serial();
+    let dir = tmp_dir("spec");
+    let s = store();
+    // the `persist.failpoints` config string arms sites at open — the
+    // operator-facing chaos-drill path (no code changes, just config)
+    let o = PersistOptions { failpoints: "wal.write=1".into(), ..opts() };
+    let (persist, _) = Persist::open(&dir, o, &s, Registry::default()).unwrap();
+    s.add_request("doomed", "u", RequestKind::Workflow, Json::Null);
+    persist.flush();
+    assert!(persist.wal().io_error().is_some(), "spec-armed site must fire");
+    persist.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

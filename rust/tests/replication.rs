@@ -1,0 +1,605 @@
+//! WAL-shipping replication integration tests: two full head stacks
+//! (store + broker + persist + REST server) in one process over real
+//! sockets. Covered here:
+//!
+//! * the ship endpoint serves CRC-framed durable WAL bytes with epoch +
+//!   durable-LSN headers;
+//! * the flagship failover: primary runs a campaign, a warm standby
+//!   follows over REST, the primary dies mid-flight, the standby is
+//!   promoted and `recover == live` holds across the ship/promote
+//!   boundary — then the standby's daemons finish the campaign;
+//! * fencing: promoting next to a *live* old primary fences it (writes
+//!   503, direct WAL appends dropped with a sticky io_error, FENCED
+//!   marker on disk, stale-epoch ship requests 409);
+//! * a standby 503s every mutating route and reports lag in health;
+//! * snapshot bootstrap when the primary pruned the history a fresh
+//!   standby would need (410 → snapshot → frames);
+//! * standby restart resumes from its local WAL copy (no re-bootstrap).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use idds::broker::Broker;
+use idds::config::Config;
+use idds::daemons::executors::{ExecutorSet, NoopExecutor};
+use idds::daemons::{AgentHost, Daemon, Pipeline};
+use idds::metrics::Registry;
+use idds::persist::replicate::{read_epoch, read_fenced, write_epoch};
+use idds::persist::wal::decode_frames;
+use idds::persist::{
+    ClusterState, FsyncMode, Persist, PersistOptions, Replica, ReplicationOptions,
+};
+use idds::rest::http::{http_request, http_request_full, HttpServer};
+use idds::rest::{serve, Client, ServerState};
+use idds::store::{RequestKind, RequestStatus, Store};
+use idds::util::clock::WallClock;
+use idds::util::json::{parse, Json};
+use idds::workflow::{Condition, WorkKind, WorkTemplate, Workflow};
+
+const TOKEN: &str = "dev-token";
+const AUTH: &str = "Bearer dev-token";
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "idds-repl-{tag}-{}-{}",
+        std::process::id(),
+        idds::util::next_id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn opts() -> PersistOptions {
+    PersistOptions {
+        segment_bytes: 16 * 1024, // small: ship spans segment rotations
+        fsync: FsyncMode::Never,
+        checkpoint_keep: 2,
+        flush_idle_ms: 2,
+        ..PersistOptions::default()
+    }
+}
+
+fn ropts() -> ReplicationOptions {
+    ReplicationOptions { poll_interval_ms: 2, batch_bytes: 8 * 1024, retry_ms: 10 }
+}
+
+fn two_step() -> Workflow {
+    Workflow::new("two-step")
+        .add_template(WorkTemplate::new("a"))
+        .add_template(WorkTemplate::new("b"))
+        .add_condition(Condition::always("a", "b"))
+        .entry("a")
+}
+
+fn canon(mut snap: Json) -> Json {
+    if let Json::Obj(m) = &mut snap {
+        for arr in m.values_mut() {
+            if let Json::Arr(a) = arr {
+                a.sort_by_key(|row| row.get("id").and_then(|v| v.as_u64()).unwrap_or(0));
+            }
+        }
+    }
+    snap
+}
+
+fn wait_until(what: &str, timeout: std::time::Duration, mut f: impl FnMut() -> bool) {
+    let deadline = std::time::Instant::now() + timeout;
+    while !f() {
+        assert!(std::time::Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+}
+
+/// A primary head: full daemon pipeline + REST server over a data dir.
+struct PrimaryStack {
+    store: Store,
+    broker: Broker,
+    persist: Persist,
+    cluster: Arc<ClusterState>,
+    host: Option<AgentHost>,
+    server: HttpServer,
+    client: Client,
+}
+
+impl PrimaryStack {
+    fn addr(&self) -> String {
+        self.server.addr.to_string()
+    }
+
+    fn quiesce(&mut self) {
+        if let Some(h) = self.host.take() {
+            h.stop();
+        }
+        self.persist.flush();
+    }
+
+    /// "Kill" the primary: stop the listener and drain/release the WAL
+    /// (drops the LOCK so the dir could be reopened).
+    fn kill(mut self) -> Store {
+        self.quiesce();
+        self.server.stop();
+        self.persist.shutdown();
+        self.store
+    }
+}
+
+fn primary_stack(dir: &Path, popts: PersistOptions) -> PrimaryStack {
+    let clock = Arc::new(WallClock::new());
+    let store = Store::new(clock.clone());
+    let broker = Broker::new(clock);
+    let metrics = Registry::default();
+    let (persist, _) =
+        Persist::open_with_broker(dir, popts, &store, Some(&broker), metrics.clone()).unwrap();
+    write_epoch(dir, 1).unwrap();
+    let cluster = ClusterState::primary(Some(dir.to_path_buf()), 1);
+    let executors =
+        ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default()));
+    let pipeline = Pipeline::new(store.clone(), broker.clone(), metrics.clone(), executors);
+    let (c, m, t, ca, co) = pipeline.daemons();
+    let daemons: Vec<Arc<dyn Daemon>> =
+        vec![Arc::new(c), Arc::new(m), Arc::new(t), Arc::new(ca), Arc::new(co)];
+    let host = AgentHost::start(daemons, std::time::Duration::from_millis(2));
+    let cfg = Config::defaults();
+    let server = serve(
+        ServerState::new(store.clone(), broker.clone(), metrics, &cfg)
+            .with_persist(persist.clone())
+            .with_cluster(Arc::clone(&cluster)),
+        &cfg,
+    )
+    .unwrap();
+    let client = Client::new(server.addr, TOKEN);
+    PrimaryStack { store, broker, persist, cluster, host: Some(host), server, client }
+}
+
+/// A warm standby: pull loop + read-only REST server, daemons parked.
+struct StandbyStack {
+    store: Store,
+    broker: Broker,
+    persist: Persist,
+    replica: Arc<Replica>,
+    metrics: Registry,
+    server: HttpServer,
+}
+
+impl StandbyStack {
+    fn cluster(&self) -> Arc<ClusterState> {
+        self.replica.cluster()
+    }
+
+    fn wait_applied(&self, lsn: u64) {
+        wait_until("standby catch-up", std::time::Duration::from_secs(20), || {
+            self.cluster().applied_lsn() >= lsn
+        });
+    }
+}
+
+fn standby_stack(dir: &Path, primary_addr: &str) -> StandbyStack {
+    let clock = Arc::new(WallClock::new());
+    let store = Store::new(clock.clone());
+    let broker = Broker::new(clock);
+    let metrics = Registry::default();
+    let (persist, _) =
+        Persist::open_replica(dir, opts(), &store, &broker, metrics.clone()).unwrap();
+    let cluster = ClusterState::replica(dir.to_path_buf(), primary_addr, read_epoch(dir));
+    let replica = Replica::start(
+        store.clone(),
+        broker.clone(),
+        persist.clone(),
+        cluster,
+        TOKEN,
+        ropts(),
+        metrics.clone(),
+    )
+    .unwrap();
+    let cfg = Config::defaults();
+    let server = serve(
+        ServerState::new(store.clone(), broker.clone(), metrics.clone(), &cfg)
+            .with_persist(persist.clone())
+            .with_replica(Arc::clone(&replica)),
+        &cfg,
+    )
+    .unwrap();
+    StandbyStack { store, broker, persist, replica, metrics, server }
+}
+
+fn submit_body() -> String {
+    format!(
+        r#"{{"name": "r", "requester": "u", "workflow": {}}}"#,
+        two_step().to_json()
+    )
+}
+
+#[test]
+fn ship_endpoint_serves_crc_framed_durable_wal() {
+    let dir = tmp_dir("ship");
+    let mut p = primary_stack(&dir, opts());
+    for i in 0..20 {
+        p.client.submit(&format!("c{i}"), "u", RequestKind::Workflow, &two_step()).unwrap();
+    }
+    p.quiesce();
+    let durable = p.persist.wal().durable_lsn();
+    assert!(durable >= 20);
+
+    let resp = http_request_full(
+        p.addr().as_str(),
+        "GET",
+        "/api/replication/wal?from_lsn=1&max_bytes=1048576",
+        &[("Authorization", AUTH), ("X-IDDS-Peer-Epoch", "1")],
+        b"",
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header_u64("X-IDDS-Epoch"), Some(1));
+    assert_eq!(resp.header_u64("X-IDDS-Durable-LSN"), Some(durable));
+    let frames = decode_frames(&resp.body).expect("shipped bytes are valid WAL framing");
+    assert_eq!(frames.first().unwrap().0, 1, "ships from the requested lsn");
+    assert_eq!(frames.last().unwrap().0, durable, "ships through the durable mark");
+    let lsns: Vec<u64> = frames.iter().map(|(l, _)| *l).collect();
+    assert!(lsns.windows(2).all(|w| w[1] == w[0] + 1), "dense lsn sequence");
+
+    // caught-up pull: empty body, still 200 with watermarks
+    let resp = http_request_full(
+        p.addr().as_str(),
+        "GET",
+        &format!("/api/replication/wal?from_lsn={}", durable + 1),
+        &[("Authorization", AUTH), ("X-IDDS-Peer-Epoch", "1")],
+        b"",
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200);
+    assert!(resp.body.is_empty());
+
+    // chunking: a tiny max_bytes still makes progress (>= 1 frame)
+    let resp = http_request_full(
+        p.addr().as_str(),
+        "GET",
+        "/api/replication/wal?from_lsn=1&max_bytes=4096",
+        &[("Authorization", AUTH)],
+        b"",
+    )
+    .unwrap();
+    let chunk = decode_frames(&resp.body).unwrap();
+    assert!(!chunk.is_empty());
+    assert!(chunk.len() < frames.len(), "max_bytes chunks the transfer");
+
+    p.kill();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn failover_preserves_state_and_finishes_the_campaign() {
+    let dir_p = tmp_dir("failover-p");
+    let dir_s = tmp_dir("failover-s");
+    let mut primary = primary_stack(&dir_p, opts());
+
+    // a few campaigns run to completion on the primary
+    for i in 0..3 {
+        let req = primary
+            .client
+            .submit(&format!("camp{i}"), "alice", RequestKind::Workflow, &two_step())
+            .unwrap();
+        let st = primary.client.wait_terminal(req, std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(st, RequestStatus::Finished);
+    }
+
+    // warm standby comes up and follows
+    let standby = standby_stack(&dir_s, &primary.addr());
+
+    // standby is read-only and reports replication health while following
+    let (st, body) = http_request(
+        standby.server.addr,
+        "POST",
+        "/api/requests",
+        &[("Authorization", AUTH), ("Content-Type", "application/json")],
+        submit_body().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(st, 503, "writes rejected on a standby: {body:?}");
+    let (st, _) = http_request(
+        standby.server.addr,
+        "GET",
+        "/api/messages?sub=1&max=1",
+        &[("Authorization", AUTH)],
+        b"",
+    )
+    .unwrap();
+    assert_eq!(st, 503, "message polling mutates delivery state: gated too");
+    let (st, body) =
+        http_request(standby.server.addr, "GET", "/api/health", &[], b"").unwrap();
+    assert_eq!(st, 200);
+    let health = parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(
+        health.get_path(&["replication", "role"]).and_then(|v| v.as_str()),
+        Some("replica")
+    );
+    assert!(health.get_path(&["replication", "lag_lsn"]).is_some());
+
+    // mid-flight campaign: daemons quiesced right after the submit, so the
+    // request is underway but unfinished when the primary dies
+    let midflight = primary
+        .client
+        .submit("midflight", "alice", RequestKind::Workflow, &two_step())
+        .unwrap();
+    primary.quiesce();
+    let durable = primary.persist.wal().durable_lsn();
+    standby.wait_applied(durable);
+    let live_snapshot = canon(primary.store.snapshot());
+    let live_counts = primary.store.counts();
+
+    // the primary dies; the standby is promoted
+    primary.kill();
+    let (st, body) = http_request(
+        standby.server.addr,
+        "POST",
+        "/api/admin/promote",
+        &[("Authorization", AUTH)],
+        b"",
+    )
+    .unwrap();
+    assert_eq!(st, 200, "promote: {body:?}");
+    let j = parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("epoch").and_then(|v| v.as_u64()), Some(2), "epoch bumped");
+    assert_eq!(read_epoch(&dir_s), 2, "epoch persisted next to the standby's LOCK");
+
+    // recover == live across the ship/promote boundary
+    assert_eq!(canon(standby.store.snapshot()), live_snapshot);
+    assert_eq!(standby.store.counts(), live_counts);
+
+    // promote is idempotent
+    let (st, body) = http_request(
+        standby.server.addr,
+        "POST",
+        "/api/admin/promote",
+        &[("Authorization", AUTH)],
+        b"",
+    )
+    .unwrap();
+    assert_eq!(st, 200);
+    let j = parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(j.get("already").and_then(|v| v.as_bool()), Some(true));
+
+    // writes flow on the new primary...
+    let client = Client::new(standby.server.addr, TOKEN);
+    let post_failover = client.submit("after", "alice", RequestKind::Workflow, &two_step()).unwrap();
+    assert!(post_failover > midflight, "id allocator advanced past replicated ids");
+
+    // ...and the daemons (started on promote) finish both the mid-flight
+    // and the post-failover campaign on the standby's state
+    let executors =
+        ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default()));
+    let pipeline = Pipeline::new(
+        standby.store.clone(),
+        standby.broker.clone(),
+        standby.metrics.clone(),
+        executors,
+    );
+    let (c, m, t, ca, co) = pipeline.daemons();
+    idds::daemons::pump(&[&c, &m, &t, &ca, &co], 2000);
+    assert_eq!(standby.store.get_request(midflight).unwrap().status, RequestStatus::Finished);
+    assert_eq!(
+        standby.store.get_request(post_failover).unwrap().status,
+        RequestStatus::Finished
+    );
+
+    // the new primary's writes are durable: recover its dir and compare
+    standby.server.stop();
+    standby.replica.stop();
+    standby.persist.flush();
+    let final_snapshot = canon(standby.store.snapshot());
+    standby.persist.shutdown();
+    let clock = Arc::new(WallClock::new());
+    let recovered = Store::new(clock.clone());
+    let rbroker = Broker::new(clock);
+    let (p2, _) = Persist::open_with_broker(
+        &dir_s,
+        opts(),
+        &recovered,
+        Some(&rbroker),
+        Registry::default(),
+    )
+    .unwrap();
+    assert_eq!(canon(recovered.snapshot()), final_snapshot, "post-promote writes recovered");
+    p2.shutdown();
+
+    std::fs::remove_dir_all(&dir_p).ok();
+    std::fs::remove_dir_all(&dir_s).ok();
+}
+
+#[test]
+fn promote_fences_a_live_old_primary() {
+    let dir_p = tmp_dir("fence-p");
+    let dir_s = tmp_dir("fence-s");
+    let mut primary = primary_stack(&dir_p, opts());
+    for i in 0..5 {
+        primary.client.submit(&format!("c{i}"), "u", RequestKind::Workflow, &two_step()).unwrap();
+    }
+    primary.quiesce();
+    let standby = standby_stack(&dir_s, &primary.addr());
+    standby.wait_applied(primary.persist.wal().durable_lsn());
+
+    // split-brain drill: promote while the old primary is still serving
+    let (st, _) = http_request(
+        standby.server.addr,
+        "POST",
+        "/api/admin/promote",
+        &[("Authorization", AUTH)],
+        b"",
+    )
+    .unwrap();
+    assert_eq!(st, 200);
+
+    // the fence POST from promote landed: old primary refuses writes
+    wait_until("old primary fenced", std::time::Duration::from_secs(5), || {
+        primary.cluster.is_fenced()
+    });
+    let (st, _) = http_request(
+        primary.server.addr,
+        "POST",
+        "/api/requests",
+        &[("Authorization", AUTH), ("Content-Type", "application/json")],
+        submit_body().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(st, 503, "fenced primary 503s writes");
+    let (_, body) = http_request(primary.server.addr, "GET", "/api/health", &[], b"").unwrap();
+    let health = parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(
+        health.get_path(&["replication", "fenced"]).and_then(|v| v.as_bool()),
+        Some(true)
+    );
+    assert_eq!(read_fenced(&dir_p), Some(2), "FENCED marker names the superseding epoch");
+
+    // a write sneaking past REST (direct store handle) is dropped by the
+    // fenced WAL and surfaces as a sticky io_error
+    primary.store.add_request("rogue", "u", RequestKind::Workflow, Json::Null);
+    wait_until("sticky io_error", std::time::Duration::from_secs(5), || {
+        primary.persist.wal().io_error().is_some()
+    });
+
+    // stale-epoch ship requests are refused (the fenced node is not a
+    // valid source), and so are fence requests with non-newer epochs
+    let resp = http_request_full(
+        primary.addr().as_str(),
+        "GET",
+        "/api/replication/wal?from_lsn=1",
+        &[("Authorization", AUTH), ("X-IDDS-Peer-Epoch", "1")],
+        b"",
+    )
+    .unwrap();
+    assert_eq!(resp.status, 409);
+    let (st, _) = http_request(
+        standby.server.addr,
+        "POST",
+        "/api/replication/fence",
+        &[("Authorization", AUTH), ("Content-Type", "application/json")],
+        b"{\"epoch\": 1}",
+    )
+    .unwrap();
+    assert_eq!(st, 409, "stale fence epoch refused by the new primary");
+
+    standby.server.stop();
+    standby.replica.stop();
+    standby.persist.shutdown();
+    primary.kill();
+    std::fs::remove_dir_all(&dir_p).ok();
+    std::fs::remove_dir_all(&dir_s).ok();
+}
+
+#[test]
+fn fresh_standby_bootstraps_from_snapshot_after_prune() {
+    let dir_p = tmp_dir("boot-p");
+    let dir_s = tmp_dir("boot-s");
+    // keep=1 so every base moves the prune horizon to its own cut
+    let mut primary = primary_stack(&dir_p, PersistOptions { checkpoint_keep: 1, ..opts() });
+    for i in 0..10 {
+        primary.client.submit(&format!("a{i}"), "u", RequestKind::Workflow, &two_step()).unwrap();
+    }
+    primary.persist.checkpoint_full(&primary.store).unwrap();
+    for i in 0..10 {
+        primary.client.submit(&format!("b{i}"), "u", RequestKind::Workflow, &two_step()).unwrap();
+    }
+    primary.quiesce();
+    primary.persist.checkpoint_full(&primary.store).unwrap();
+
+    // lsn 1 is gone from the primary's WAL now
+    let resp = http_request_full(
+        primary.addr().as_str(),
+        "GET",
+        "/api/replication/wal?from_lsn=1",
+        &[("Authorization", AUTH), ("X-IDDS-Peer-Epoch", "1")],
+        b"",
+    )
+    .unwrap();
+    assert_eq!(resp.status, 410, "pruned history answers Gone");
+    assert!(resp.header_u64("X-IDDS-Oldest-LSN").unwrap() > 1);
+
+    // a fresh standby must take the snapshot path and still converge
+    let standby = standby_stack(&dir_s, &primary.addr());
+    standby.wait_applied(primary.persist.wal().durable_lsn());
+    assert_eq!(canon(standby.store.snapshot()), canon(primary.store.snapshot()));
+    assert_eq!(standby.store.counts(), primary.store.counts());
+    assert!(
+        standby.metrics.counter("replication.bootstraps").get() >= 1,
+        "the snapshot path was actually taken"
+    );
+
+    // and keeps following WAL frames after the bootstrap
+    let more = primary.client.submit("late", "u", RequestKind::Workflow, &two_step()).unwrap();
+    primary.persist.flush();
+    standby.wait_applied(primary.persist.wal().durable_lsn());
+    assert_eq!(standby.store.get_request(more).unwrap().status.as_str(), "New");
+
+    standby.server.stop();
+    standby.replica.stop();
+    standby.persist.shutdown();
+    primary.kill();
+    std::fs::remove_dir_all(&dir_p).ok();
+    std::fs::remove_dir_all(&dir_s).ok();
+}
+
+#[test]
+fn standby_restart_resumes_from_its_local_wal() {
+    let dir_p = tmp_dir("resume-p");
+    let dir_s = tmp_dir("resume-s");
+    let mut primary = primary_stack(&dir_p, opts());
+    for i in 0..8 {
+        primary.client.submit(&format!("c{i}"), "u", RequestKind::Workflow, &two_step()).unwrap();
+    }
+    primary.quiesce();
+    let durable = primary.persist.wal().durable_lsn();
+
+    // first standby incarnation catches up, then dies
+    let standby = standby_stack(&dir_s, &primary.addr());
+    standby.wait_applied(durable);
+    standby.server.stop();
+    standby.replica.stop();
+    standby.persist.flush();
+    standby.persist.shutdown();
+
+    // more primary history while the standby is down
+    let host = {
+        // restart daemons so campaigns can move again
+        let executors =
+            ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default()));
+        let pipeline = Pipeline::new(
+            primary.store.clone(),
+            primary.broker.clone(),
+            Registry::default(),
+            executors,
+        );
+        let (c, m, t, ca, co) = pipeline.daemons();
+        let daemons: Vec<Arc<dyn Daemon>> =
+            vec![Arc::new(c), Arc::new(m), Arc::new(t), Arc::new(ca), Arc::new(co)];
+        AgentHost::start(daemons, std::time::Duration::from_millis(2))
+    };
+    for i in 0..4 {
+        primary.client.submit(&format!("d{i}"), "u", RequestKind::Workflow, &two_step()).unwrap();
+    }
+    host.stop();
+    primary.persist.flush();
+    let durable2 = primary.persist.wal().durable_lsn();
+    assert!(durable2 > durable);
+
+    // second incarnation: local recovery replays the shipped copy and the
+    // pull loop resumes from there — applied starts at the local WAL end,
+    // never back at zero (which would mean a redundant re-bootstrap)
+    let standby2 = standby_stack(&dir_s, &primary.addr());
+    assert!(
+        standby2.cluster().applied_lsn() >= durable,
+        "resume position comes from the local wal"
+    );
+    standby2.wait_applied(durable2);
+    assert_eq!(canon(standby2.store.snapshot()), canon(primary.store.snapshot()));
+    assert_eq!(
+        standby2.metrics.counter("replication.bootstraps").get(),
+        0,
+        "restart must not re-bootstrap"
+    );
+
+    standby2.server.stop();
+    standby2.replica.stop();
+    standby2.persist.shutdown();
+    primary.kill();
+    std::fs::remove_dir_all(&dir_p).ok();
+    std::fs::remove_dir_all(&dir_s).ok();
+}

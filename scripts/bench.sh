@@ -13,4 +13,5 @@ BENCH_CHECKPOINT_JSON="$ROOT/BENCH_checkpoint.json" cargo bench --bench bench_ch
 BENCH_BROKER_JSON="$ROOT/BENCH_broker.json" cargo bench --bench bench_broker
 cargo bench --bench bench_carousel
 BENCH_WORKFLOW_JSON="$ROOT/BENCH_workflow.json" cargo bench --bench bench_workflow
-echo "wrote $ROOT/BENCH_store.json, $ROOT/BENCH_wal.json, $ROOT/BENCH_checkpoint.json, $ROOT/BENCH_broker.json and $ROOT/BENCH_workflow.json"
+BENCH_REPLICATION_JSON="$ROOT/BENCH_replication.json" cargo bench --bench bench_replication
+echo "wrote $ROOT/BENCH_store.json, $ROOT/BENCH_wal.json, $ROOT/BENCH_checkpoint.json, $ROOT/BENCH_broker.json, $ROOT/BENCH_workflow.json and $ROOT/BENCH_replication.json"
