@@ -123,6 +123,12 @@ pub struct ClusterState {
     pulls: AtomicU64,
     pull_errors: AtomicU64,
     last_error: Mutex<Option<String>>,
+    /// Serializes EPOCH-file writes: `epoch` itself is monotone via
+    /// `fetch_max`, but two racing persists could otherwise interleave so
+    /// the file ends up holding the smaller value (re-offered after a
+    /// restart). Writers take this lock and re-read the in-memory epoch
+    /// under it, so the file always ends at the newest adopted value.
+    epoch_file: Mutex<()>,
 }
 
 impl ClusterState {
@@ -139,6 +145,7 @@ impl ClusterState {
             pulls: AtomicU64::new(0),
             pull_errors: AtomicU64::new(0),
             last_error: Mutex::new(None),
+            epoch_file: Mutex::new(()),
         })
     }
 
@@ -155,6 +162,7 @@ impl ClusterState {
             pulls: AtomicU64::new(0),
             pull_errors: AtomicU64::new(0),
             last_error: Mutex::new(None),
+            epoch_file: Mutex::new(()),
         })
     }
 
@@ -193,8 +201,14 @@ impl ClusterState {
         let prev = self.epoch.fetch_max(epoch, Ordering::AcqRel);
         if epoch > prev {
             if let Some(dir) = &self.data_dir {
-                if let Err(e) = write_epoch(dir, epoch) {
-                    log::error!("could not persist adopted epoch {epoch}: {e}");
+                // Persist under the file lock, re-reading the in-memory
+                // epoch: a concurrent adopter that won the fetch_max race
+                // with a larger value must not have its file write
+                // overwritten by ours landing later with the smaller one.
+                let _g = self.epoch_file.lock().unwrap();
+                let current = self.epoch.load(Ordering::Acquire);
+                if let Err(e) = write_epoch(dir, current) {
+                    log::error!("could not persist adopted epoch {current}: {e}");
                 }
             }
         }
@@ -290,12 +304,19 @@ pub fn ship_frames(wal: &Wal, from_lsn: u64, max_bytes: usize) -> Result<ShipRep
                 continue; // fully below the requested window
             }
         }
-        // a segment pruned between catalog and scan just skips — its
-        // frames were below a checkpoint cut the standby can re-request
-        let scan = match scan_segment(&segment_path(&dir, seg.seq)) {
-            Ok(s) => s,
-            Err(_) => continue,
-        };
+        // This segment's catalog entry may hold frames >= from_lsn, so a
+        // scan failure here must NOT be skipped: a checkpoint prune racing
+        // this read can delete the file, and silently resuming at a later
+        // segment would ship a batch with a hole the standby would apply
+        // over — permanent divergence. Fail the pull instead; the standby
+        // retries against a fresh catalog, which reports a real prune as
+        // an honest 410 Gone (from_lsn < the new oldest_lsn).
+        let scan = scan_segment(&segment_path(&dir, seg.seq)).with_context(|| {
+            format!(
+                "scanning wal segment {} for ship (pruned or unreadable mid-batch)",
+                seg.seq
+            )
+        })?;
         for (lsn, ev) in &scan.events {
             if *lsn < from_lsn {
                 continue;
@@ -434,15 +455,33 @@ impl Replica {
                 .set("epoch", sh.cluster.epoch())
                 .set("applied_lsn", sh.cluster.applied_lsn()));
         }
+        // A standby that has never completed a pull still sits at epoch 0
+        // and knows nothing about the cluster; epoch 0 + 1 = 1 would tie a
+        // first-boot primary's epoch, so the fence comparison (strictly
+        // newer) would never fire and both heads would accept writes.
+        // Refuse the blind promote — the operator can retry once a pull
+        // (or snapshot bootstrap) has adopted the primary's epoch. Checked
+        // before stop() so a refused promote leaves the pull loop running.
+        if sh.cluster.epoch() == 0 {
+            bail!(
+                "standby has never synced with the primary (cluster epoch still 0); \
+                 refusing promote that could not fence the old primary"
+            );
+        }
         self.stop();
         sh.persist.wal().flush();
-        let new_epoch = sh.cluster.epoch() + 1;
+        let new_epoch = sh.cluster.epoch().max(1) + 1;
         let dir = sh
             .cluster
             .data_dir
             .as_ref()
             .context("replica has no data dir")?;
-        write_epoch(dir, new_epoch)?;
+        {
+            // same file lock as adopt_epoch — the pull loop is stopped by
+            // now, but any straggling persist must not clobber this write
+            let _g = sh.cluster.epoch_file.lock().unwrap();
+            write_epoch(dir, new_epoch)?;
+        }
         sh.cluster.epoch.store(new_epoch, Ordering::Release);
         sh.persist.attach(&sh.store, Some(&sh.broker));
         sh.cluster.replica.store(false, Ordering::Release);
@@ -477,6 +516,17 @@ impl Replica {
 fn pull_loop(sh: &ReplicaShared) {
     let lag_gauge = sh.metrics.gauge("replication.lag_lsn");
     while !sh.stop.load(Ordering::Acquire) {
+        // A fenced standby's timeline is dead: a newer epoch superseded it
+        // (e.g. a sibling standby was promoted). Stop pulling — its WAL
+        // refuses appends anyway, and continuing to apply into memory
+        // would only let reads drift from what the dir can recover.
+        if sh.cluster.is_fenced() {
+            log::error!(
+                "replica pull loop exiting: node fenced at epoch {}",
+                sh.cluster.epoch()
+            );
+            break;
+        }
         match pull_once(sh) {
             Ok(applied) => {
                 lag_gauge.set(sh.cluster.lag_lsn() as i64);
@@ -559,10 +609,23 @@ fn apply_batch(sh: &ReplicaShared, resp: &HttpResponse) -> Result<usize> {
     let frames = decode_frames(&resp.body).context("verifying shipped frames")?;
     let mut applied = 0usize;
     let mut max_id = 0;
+    // Primary LSNs are dense, so a correct batch continues exactly at
+    // applied+1 (frames at or below applied are replay overlap from a
+    // retried pull). Anything else means frames were lost in shipping —
+    // applying over a gap would diverge this replica from the primary
+    // forever, so refuse the rest of the batch and re-pull.
+    let mut expect = sh.cluster.applied_lsn() + 1;
     for (lsn, ev) in frames {
-        if lsn <= sh.cluster.applied_lsn() {
+        if lsn < expect {
             continue; // replay across a retried pull; apply is idempotent anyway
         }
+        if lsn > expect {
+            bail!(
+                "shipped batch skips lsn {expect} (next frame is {lsn}); \
+                 refusing non-contiguous apply"
+            );
+        }
+        expect = lsn + 1;
         max_id = max_id.max(ev.max_id());
         // apply FIRST, then append: the dirty mark lands before the local
         // WAL's next_lsn can pass this frame, so a standby checkpoint cut
@@ -623,4 +686,73 @@ fn bootstrap_snapshot(sh: &ReplicaShared) -> Result<()> {
     sh.metrics.counter("replication.bootstraps").inc();
     log::info!("standby bootstrapped from primary snapshot at cut lsn {cut_lsn}");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::{FsyncMode, PersistEvent, Persister};
+    use crate::store::RequestKind;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "idds-repl-unit-{tag}-{}-{}",
+            std::process::id(),
+            crate::util::next_id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn ev(i: u64) -> PersistEvent {
+        PersistEvent::AddRequest {
+            id: i,
+            name: format!("r{i}"),
+            requester: "u".into(),
+            kind: RequestKind::Workflow,
+            workflow: Json::Null,
+            at: i as f64,
+        }
+    }
+
+    /// The prune/ship race: a cataloged segment that may hold frames the
+    /// standby asked for vanishes (checkpoint prune) before the scan
+    /// reaches it. Shipping must fail — a skip would hand the standby a
+    /// batch with a silent hole it would apply over.
+    #[test]
+    fn ship_scan_failure_is_an_error_not_a_gap() {
+        let dir = tmp_dir("shipgap");
+        let metrics = Registry::default();
+        let (wal, flusher) =
+            Wal::create(&dir, 2048, FsyncMode::Never, 5, 1, 1, Vec::new(), 0, &metrics)
+                .unwrap();
+        for i in 0..200u64 {
+            wal.log(ev(i));
+            if i % 10 == 0 {
+                wal.flush(); // many small batches → several segment rotations
+            }
+        }
+        wal.flush();
+        let (wdir, segs) = wal.catalog();
+        assert!(segs.len() >= 3, "need multiple segments to stage the race");
+        let victim = segs[1].clone();
+        std::fs::remove_file(segment_path(&wdir, victim.seq)).unwrap();
+
+        let r = ship_frames(&wal, 1, 1 << 20);
+        assert!(r.is_err(), "a vanished in-range segment must fail the ship, not skip");
+
+        // history wholly below from_lsn is legitimately skippable: a pull
+        // starting past the victim never opens it and still gets frames
+        let from = victim.last_lsn.unwrap() + 1;
+        match ship_frames(&wal, from, 1 << 20).unwrap() {
+            ShipReply::Batch { count, last_lsn, .. } => {
+                assert!(count > 0, "later segments still ship");
+                assert_eq!(last_lsn, wal.durable_lsn());
+            }
+            ShipReply::Gone { .. } => panic!("history at lsn {from} still exists"),
+        }
+        wal.stop();
+        flusher.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }

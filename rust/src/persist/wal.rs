@@ -574,6 +574,18 @@ impl Wal {
     /// files. Shipped LSNs arrive in order from the pull loop; gaps or
     /// replays are the caller's to filter.
     pub fn append_shipped(&self, lsn: u64, ev: PersistEvent) {
+        // Same fence check as `Persister::log`: a fenced standby's
+        // timeline has been superseded, so extending its local WAL with
+        // further shipped frames would grow a log nothing should ever
+        // recover from. Dropped loudly with the sticky io_error so health
+        // surfaces it (the pull loop also exits on the fence).
+        if self.inner.fenced.load(Ordering::Acquire) {
+            log::error!("wal.append_shipped on fenced node: frame {lsn} dropped");
+            self.inner.d.lock().unwrap().io_error.get_or_insert_with(|| {
+                "node fenced: a newer primary epoch exists; writes dropped".to_string()
+            });
+            return;
+        }
         let wake = {
             let mut q = self.inner.q.lock().unwrap();
             while q.pending.len() >= MAX_PENDING && !self.inner.stop.load(Ordering::Acquire) {
@@ -901,6 +913,26 @@ mod tests {
         wal.stop();
         flusher.join().unwrap();
         assert!(!wal.wait_durable(target + 100));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fenced_wal_drops_both_append_paths() {
+        let dir = tmp_dir("fenced");
+        let metrics = Registry::default();
+        let (wal, flusher) =
+            Wal::create(&dir, 1 << 30, FsyncMode::Never, 5, 1, 1, Vec::new(), 0, &metrics).unwrap();
+        wal.log(ev(1));
+        wal.flush();
+        let durable = wal.durable_lsn();
+        wal.fence();
+        wal.log(ev(2)); // primary append path: dropped
+        wal.append_shipped(durable + 1, ev(3)); // standby ship path: dropped too
+        wal.flush();
+        assert_eq!(wal.durable_lsn(), durable, "no frame may land after the fence");
+        assert!(wal.io_error().is_some(), "the drop surfaces as the sticky io_error");
+        wal.stop();
+        flusher.join().unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 

