@@ -1,0 +1,103 @@
+//! PERF-OBS bench: the cost of the tracing subsystem, on and off.
+//!
+//!     cargo bench --bench bench_obs
+//!
+//! * **disarmed span** — `obs::span()` with the tracer disarmed. This is
+//!   the tax every instrumented call site pays in a production process
+//!   that has tracing switched off: one relaxed atomic load and an
+//!   immediate return. It must be indistinguishable from noise.
+//! * **armed span + ring push** — span create + drop with the tracer
+//!   armed, i.e. id allocation, thread-local swap, clock reads, and the
+//!   completed-span ring push.
+//! * **hot path, tracing on vs off** — a real workload (striped broker
+//!   publish/poll/ack, which now carries `broker.publish` and
+//!   `broker.deliver` spans) run both ways, so the end-to-end overhead of
+//!   arming the tracer is machine-checkable.
+//!
+//! Emits `BENCH_obs.json` (override the path with `BENCH_OBS_JSON`;
+//! `scripts/bench.sh` points it at the repo root).
+
+use std::sync::Arc;
+
+use idds::broker::Broker;
+use idds::obs;
+use idds::util::bench::{section, BenchResult, Bencher};
+use idds::util::clock::WallClock;
+use idds::util::json::Json;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+
+    let spans_per_iter: usize = if quick { 10_000 } else { 100_000 };
+
+    section(&format!("span create+drop x{spans_per_iter} (micro)"));
+    obs::arm(false);
+    let disarmed = b.bench("disarmed span (armed check only)", || {
+        for _ in 0..spans_per_iter {
+            let sp = obs::span("bench.noop");
+            std::hint::black_box(&sp);
+        }
+    });
+    obs::arm(true);
+    let armed = b.bench("armed span (ids + clock + ring push)", || {
+        for _ in 0..spans_per_iter {
+            let mut sp = obs::span("bench.noop");
+            sp.attr("i", 1u64);
+            std::hint::black_box(&sp);
+        }
+    });
+    let disarmed_ns = disarmed.mean_ns / spans_per_iter as f64;
+    let armed_ns = armed.mean_ns / spans_per_iter as f64;
+    println!("\ndisarmed: {disarmed_ns:.1} ns/span   armed: {armed_ns:.1} ns/span");
+
+    section("hot path: broker publish/poll/ack 10k msgs, tracing off vs on");
+    let n_msgs: usize = if quick { 1_000 } else { 10_000 };
+    let round = |br: &Broker, sub: u64| {
+        for _ in 0..(n_msgs / 100) {
+            br.publish_many("t", (0..100).map(|i| Json::Num(i as f64)).collect());
+        }
+        loop {
+            let ds = br.poll(sub, 4096);
+            if ds.is_empty() {
+                break;
+            }
+            br.ack_many(sub, &ds.iter().map(|d| d.id).collect::<Vec<_>>());
+        }
+    };
+    obs::arm(false);
+    let off = {
+        let br = Broker::new(Arc::new(WallClock::new())).with_redelivery_timeout(3600.0);
+        let sub = br.subscribe("t");
+        b.bench(&format!("broker round x{n_msgs}, tracing off"), move || round(&br, sub))
+    };
+    obs::arm(true);
+    let on = {
+        let br = Broker::new(Arc::new(WallClock::new())).with_redelivery_timeout(3600.0);
+        let sub = br.subscribe("t");
+        b.bench(&format!("broker round x{n_msgs}, tracing on"), move || round(&br, sub))
+    };
+    // leave the process as tests expect it: disarmed unless configured
+    obs::arm(false);
+    let hot_overhead = on.mean_ns / off.mean_ns.max(1e-9);
+    println!("\nhot-path overhead with tracing armed: {hot_overhead:.3}x");
+
+    let to_json = |r: &BenchResult| r.to_json();
+    let summary = Json::obj()
+        .set("bench", "bench_obs")
+        .set("quick", quick)
+        .set("results", Json::Arr(b.results().iter().map(to_json).collect()))
+        .set(
+            "derived",
+            Json::obj()
+                .set("disarmed_span_ns", disarmed_ns)
+                .set("armed_span_ns", armed_ns)
+                .set("armed_over_disarmed", armed_ns / disarmed_ns.max(1e-9))
+                .set("hot_path_tracing_overhead", hot_overhead),
+        );
+    let path = std::env::var("BENCH_OBS_JSON").unwrap_or_else(|_| "BENCH_obs.json".to_string());
+    match std::fs::write(&path, summary.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -437,6 +437,9 @@ impl Broker {
             return 0;
         }
         self.inner.published.fetch_add(payloads.len() as u64, Ordering::Relaxed);
+        let mut sp = crate::obs::span("broker.publish");
+        sp.attr("topic", topic);
+        sp.attr("n", payloads.len());
         // topics come into being on first subscribe; a publish to a topic
         // nobody ever subscribed to fans out to zero queues and is dropped
         let Some(topic_arc) = self.topic_of(topic) else { return 0 };
@@ -503,6 +506,9 @@ impl Broker {
         let now = self.clock.now();
         let timeout = self.redelivery_timeout;
         let Some(topic_arc) = self.topic_of_sub(sub) else { return Vec::new() };
+        // cancelled below when the queue turns out to be empty, so consumer
+        // poll loops don't flood the trace ring with no-op deliveries
+        let mut sp = crate::obs::span("broker.deliver");
         let mut t = topic_arc.lock().unwrap();
         let mut out = Vec::new();
         let mut redelivered_n = 0u64;
@@ -552,6 +558,12 @@ impl Broker {
             });
         }
         drop(t);
+        if out.is_empty() {
+            sp.cancel();
+        } else {
+            sp.attr("n", out.len());
+            sp.attr("redelivered", redelivered_n);
+        }
         self.inner.delivered.fetch_add(delivered_n, Ordering::Relaxed);
         self.inner.redelivered.fetch_add(redelivered_n, Ordering::Relaxed);
         out

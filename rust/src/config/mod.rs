@@ -52,6 +52,14 @@ impl Config {
         c.put("replication.poll_interval_ms", Json::Num(50.0));
         c.put("replication.batch_bytes", Json::Num(1024.0 * 1024.0));
         c.put("replication.retry_ms", Json::Num(200.0));
+        // observability (obs/): span tracing, JSON-lines logging, and
+        // the timeline recorder's per-series memory bound
+        c.put("obs.trace.enabled", Json::Bool(true));
+        c.put("obs.trace.ring_capacity", Json::Num(4096.0));
+        c.put("obs.trace.slow_us", Json::Num(100_000.0));
+        c.put("obs.log.level", Json::Str("info".into()));
+        c.put("obs.log.repeat_window_s", Json::Num(5.0));
+        c.put("obs.timeline.max_points", Json::Num(65536.0));
         // artifacts / runtime
         c.put("runtime.artifacts_dir", Json::Str("artifacts".into()));
         // DDM / tape simulator

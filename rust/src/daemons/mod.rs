@@ -20,6 +20,9 @@ pub mod pipeline;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+use crate::metrics::Registry;
+use crate::obs;
+
 pub use pipeline::{Carrier, Clerk, Conductor, Marshaller, Pipeline, Transformer};
 
 /// One iDDS daemon: a named poll loop.
@@ -28,6 +31,31 @@ pub trait Daemon: Send + Sync {
 
     /// Process up to one batch; returns how many items made progress.
     fn poll_once(&self) -> usize;
+}
+
+/// Instrumentation shared by every daemon's `poll_once`: a
+/// `daemon.<name>.tick` span plus a `pipeline.<name>.tick_us` latency
+/// histogram, recorded only for *active* ticks — idle polls (generation
+/// gate hit, nothing claimed) cancel the span and record nothing, so the
+/// trace ring and histograms hold signal instead of a poll-interval
+/// heartbeat.
+pub(crate) fn traced_tick(metrics: &Registry, name: &str, f: impl FnOnce() -> usize) -> usize {
+    let mut sp = if obs::armed() {
+        obs::span(&format!("daemon.{name}.tick"))
+    } else {
+        obs::span("")
+    };
+    let t0 = std::time::Instant::now();
+    let n = f();
+    if n == 0 {
+        sp.cancel();
+        return 0;
+    }
+    sp.attr("rows", n);
+    metrics
+        .histogram(&format!("pipeline.{name}.tick_us"))
+        .observe(t0.elapsed().as_micros() as u64);
+    n
 }
 
 /// Run daemons until a full sweep makes no progress (or `max_sweeps`).

@@ -320,6 +320,12 @@ impl Daemon for Clerk {
     }
 
     fn poll_once(&self) -> usize {
+        super::traced_tick(&self.p.metrics, "clerk", || self.tick())
+    }
+}
+
+impl Clerk {
+    fn tick(&self) -> usize {
         let rg = self.p.store.requests_generation();
         let tg = self.p.store.transforms_generation();
         let me = self.p.marshal_epoch.load(Ordering::Acquire);
@@ -343,6 +349,15 @@ impl Daemon for Clerk {
         {
             n += 1;
             let Ok(req) = self.p.store.get_request(req_id) else { continue };
+            // Stitch across the REST boundary: the submit handler tagged
+            // this request id with its request-span context, so intake
+            // joins the submitter's trace; untagged requests (recovered
+            // after restart, direct store writes) parent to the tick span.
+            let mut req_sp = match crate::obs::take_tag(req_id) {
+                Some(ctx) => crate::obs::span_with_parent("daemon.clerk.request", ctx),
+                None => crate::obs::span("daemon.clerk.request"),
+            };
+            req_sp.attr("request_id", req_id);
             // resolve to the shared compiled workflow — no per-request
             // Workflow clone; a campaign re-submitting one shape is all
             // registry hits after the first request
@@ -480,6 +495,12 @@ impl Daemon for Marshaller {
     }
 
     fn poll_once(&self) -> usize {
+        super::traced_tick(&self.p.metrics, "marshaller", || self.tick())
+    }
+}
+
+impl Marshaller {
+    fn tick(&self) -> usize {
         if self
             .seen_transforms
             .unchanged(self.p.store.transforms_generation())
@@ -522,7 +543,12 @@ impl Daemon for Marshaller {
                                 .metrics
                                 .counter("workflow.engine.condition_evals")
                                 .add(engine.out_degree(&work.template) as u64);
-                            match engine.on_complete(&work, &result) {
+                            let fired = {
+                                let mut wf_sp = crate::obs::span("workflow.on_complete");
+                                wf_sp.attr("template", work.template.as_str());
+                                engine.on_complete(&work, &result)
+                            };
+                            match fired {
                                 Ok(ws) => ws
                                     .into_iter()
                                     .map(|w| {
@@ -598,6 +624,12 @@ impl Daemon for Transformer {
     }
 
     fn poll_once(&self) -> usize {
+        super::traced_tick(&self.p.metrics, "transformer", || self.tick())
+    }
+}
+
+impl Transformer {
+    fn tick(&self) -> usize {
         if self
             .seen_transforms
             .unchanged(self.p.store.transforms_generation())
@@ -671,6 +703,12 @@ impl Daemon for Carrier {
     }
 
     fn poll_once(&self) -> usize {
+        super::traced_tick(&self.p.metrics, "carrier", || self.tick())
+    }
+}
+
+impl Carrier {
+    fn tick(&self) -> usize {
         // submit stage: driven purely by store state, so it is gated
         let mut n = 0;
         if self
@@ -686,9 +724,7 @@ impl Daemon for Carrier {
         // empty)
         n + self.poll_running()
     }
-}
 
-impl Carrier {
     fn submit_new(&self) -> usize {
         let store = &self.p.store;
         let mut items: Vec<(Id, Id, Json)> = Vec::new(); // (pid, transform_id, work)
@@ -861,6 +897,12 @@ impl Daemon for Conductor {
     }
 
     fn poll_once(&self) -> usize {
+        super::traced_tick(&self.p.metrics, "conductor", || self.tick())
+    }
+}
+
+impl Conductor {
+    fn tick(&self) -> usize {
         if self
             .seen_messages
             .unchanged(self.p.store.messages_generation())

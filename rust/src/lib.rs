@@ -36,4 +36,5 @@ pub mod carousel;
 pub mod activelearning;
 pub mod rubin;
 pub mod metrics;
+pub mod obs;
 pub mod simulation;

@@ -150,6 +150,9 @@ fn main() -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = args.config()?;
+    // JSON-lines logger on stderr, leveled per component via obs.log.*
+    // (rest::serve arms the tracer from the same config later)
+    idds::obs::log::init(&cfg);
     if let Some(dir) = args.flag("data-dir") {
         cfg.put("persist.data_dir", idds::util::json::Json::Str(dir.to_string()));
     }
@@ -401,7 +404,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 r.start_lsn,
                 r.bytes
             ),
-            Err(e) => eprintln!("final checkpoint failed (WAL still drains): {e}"),
+            Err(e) => log::error!("final checkpoint failed (WAL still drains): {e}"),
         }
         p.shutdown();
     }

@@ -1,19 +1,11 @@
 //! Metrics: counters, gauges, histograms, and the campaign timeline
 //! recorder that backs the Figure 4 / Figure 5 outputs.
 //!
-//! Naming inventory (dotted, lowercase): `pipeline.*` for daemon
-//! progress (`works_generated`, `transforms_marshalled`,
-//! `requests_finalized`, `<daemon>.poll_skips`, ...), `workflow.*` for
-//! the engine (`registry.hits`/`registry.misses` — compiled-workflow
-//! intern outcomes; `engine.condition_evals` — out-edges evaluated per
-//! completion; `engine.edges_fired`), `persist.*` for WAL/checkpoint
-//! durability, `replication.*` for WAL shipping (`lag_lsn` gauge —
-//! primary durable LSN minus locally applied, the standby's health
-//! number; `ship.batches`/`ship.frames`/`ship.bytes` on the primary;
-//! `pull.frames`/`pull.bytes`, `bootstraps`, `promotions` on the
-//! standby), and `rest.*` for the head service (including
-//! `rejected_replica`/`rejected_fenced` write-gate hits). Everything
-//! lands in the shared [`Registry`] and is exposed by `GET /api/metrics`.
+//! Names are dotted lowercase (`pipeline.*`, `workflow.*`, `persist.*`,
+//! `replication.*`, `rest.*`); the full naming inventory lives in
+//! DESIGN.md's "Observability" section. Everything lands in the shared
+//! [`Registry`], exposed by `GET /api/metrics` (JSON snapshot) and
+//! `GET /api/metrics?format=prometheus` ([`Registry::render_prometheus`]).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
@@ -54,10 +46,14 @@ impl Gauge {
 }
 
 /// Fixed-bucket histogram (log2 buckets over nanoseconds/values).
+/// Bucket `i` (for `i >= 1`) holds values in `[2^(i-1), 2^i - 1]`;
+/// bucket 0 holds only zero.
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
     count: AtomicU64,
     sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
 }
 
 impl Default for Histogram {
@@ -66,6 +62,8 @@ impl Default for Histogram {
             buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
             count: AtomicU64::new(0),
             sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
         }
     }
 }
@@ -76,10 +74,33 @@ impl Histogram {
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observed values (Prometheus `_sum`).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Smallest observed value (0 when empty).
+    pub fn min(&self) -> u64 {
+        let m = self.min.load(Ordering::Relaxed);
+        if m == u64::MAX && self.count() == 0 { 0 } else { m }
+    }
+
+    /// Largest observed value.
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Raw per-bucket counts (index = log2 bucket).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
     }
 
     pub fn mean(&self) -> f64 {
@@ -91,22 +112,28 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile from bucket boundaries (upper bound of the
-    /// bucket containing the q-th sample).
+    /// Approximate quantile: the upper bound of the bucket containing
+    /// the q-th sample, clamped into `[min, max]` of the observed
+    /// values — so a single sample in the top bucket reports that
+    /// sample's magnitude, not `u64::MAX`, and no quantile can exceed
+    /// the largest value actually seen.
     pub fn quantile(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
             return 0;
         }
+        let lo = self.min.load(Ordering::Relaxed).min(self.max.load(Ordering::Relaxed));
+        let hi = self.max.load(Ordering::Relaxed);
         let target = ((total as f64) * q).ceil() as u64;
         let mut seen = 0;
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return if i >= 63 { u64::MAX } else { 1u64 << i };
+                let ub = if i >= 63 { u64::MAX } else { 1u64 << i };
+                return ub.clamp(lo, hi);
             }
         }
-        u64::MAX
+        hi
     }
 }
 
@@ -158,6 +185,70 @@ impl Registry {
         )
     }
 
+    /// `(name, value)` of every counter whose name starts with `prefix`
+    /// (the `/api/health` per-route rollup).
+    pub fn counters_with_prefix(&self, prefix: &str) -> Vec<(String, u64)> {
+        self.inner
+            .counters
+            .read()
+            .unwrap()
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect()
+    }
+
+    /// Prometheus text exposition (`GET /api/metrics?format=prometheus`):
+    /// counters and gauges verbatim, histograms as cumulative
+    /// `_bucket{le="..."}` series over the log2 bucket bounds plus
+    /// `_sum`/`_count`. Dotted names map to legal metric names by
+    /// replacing every non-`[a-zA-Z0-9_:]` byte with `_` under an
+    /// `idds_` prefix.
+    pub fn render_prometheus(&self) -> String {
+        fn prom_name(k: &str) -> String {
+            let mut out = String::with_capacity(k.len() + 5);
+            out.push_str("idds_");
+            for ch in k.chars() {
+                if ch.is_ascii_alphanumeric() || ch == '_' || ch == ':' {
+                    out.push(ch);
+                } else {
+                    out.push('_');
+                }
+            }
+            out
+        }
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (k, v) in self.inner.counters.read().unwrap().iter() {
+            let name = prom_name(k);
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", v.get());
+        }
+        for (k, v) in self.inner.gauges.read().unwrap().iter() {
+            let name = prom_name(k);
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {}", v.get());
+        }
+        for (k, v) in self.inner.histograms.read().unwrap().iter() {
+            let name = prom_name(k);
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            let counts = v.bucket_counts();
+            let last = counts.iter().rposition(|&c| c > 0).unwrap_or(0);
+            let mut cum = 0u64;
+            // bucket i's largest member is 2^i - 1 (bucket 63 has no
+            // finite bound and lands in +Inf only)
+            for (i, &c) in counts.iter().enumerate().take(last + 1).take(63) {
+                cum += c;
+                let le = (1u64 << i) - 1;
+                let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+            }
+            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", v.count());
+            let _ = writeln!(out, "{name}_sum {}", v.sum());
+            let _ = writeln!(out, "{name}_count {}", v.count());
+        }
+        out
+    }
+
     pub fn snapshot(&self) -> Json {
         let mut obj = Json::obj();
         for (k, v) in self.inner.counters.read().unwrap().iter() {
@@ -180,11 +271,64 @@ impl Registry {
     }
 }
 
+/// One bounded series: when `pts` reaches the cap, every second point
+/// is dropped and the keep-stride doubles, so a series that runs
+/// forever keeps a uniformly thinned history in `[cap/2, cap]` points.
+#[derive(Default)]
+struct Series {
+    pts: Vec<(f64, f64)>,
+    /// Keep pushes whose index is a multiple of `2^halvings`. Keying
+    /// the stride off the global push index (not a since-last-kept
+    /// counter) keeps retained samples uniformly spaced across a
+    /// halving boundary: the survivors of a halve are exactly the
+    /// pushes divisible by the doubled stride.
+    halvings: u32,
+    pushes: u64,
+}
+
+impl Series {
+    fn push(&mut self, t: f64, v: f64, cap: usize) {
+        let n = self.pushes;
+        self.pushes += 1;
+        if n % (1u64 << self.halvings.min(63)) != 0 {
+            return;
+        }
+        self.pts.push((t, v));
+        if cap > 1 && self.pts.len() >= cap {
+            let mut i = 0;
+            self.pts.retain(|_| {
+                let keep = i % 2 == 0;
+                i += 1;
+                keep
+            });
+            self.halvings += 1;
+        }
+    }
+}
+
 /// Time-series recorder for campaign plots (Fig. 5): named series of
-/// (t, value) samples.
-#[derive(Default, Clone)]
+/// (t, value) samples. Per-series memory is bounded by `max_points`
+/// (`obs.timeline.max_points`, default 65536) with stride-doubling
+/// downsampling on insert.
+#[derive(Clone)]
 pub struct Timeline {
-    series: Arc<Mutex<BTreeMap<String, Vec<(f64, f64)>>>>,
+    inner: Arc<TimelineInner>,
+}
+
+struct TimelineInner {
+    series: Mutex<BTreeMap<String, Series>>,
+    max_points: AtomicU64,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Timeline {
+            inner: Arc::new(TimelineInner {
+                series: Mutex::new(BTreeMap::new()),
+                max_points: AtomicU64::new(65536),
+            }),
+        }
+    }
 }
 
 impl std::fmt::Debug for Timeline {
@@ -195,26 +339,34 @@ impl std::fmt::Debug for Timeline {
 }
 
 impl Timeline {
+    /// Cap every series at `n` retained points (shared by all clones).
+    pub fn set_max_points(&self, n: usize) {
+        self.inner.max_points.store(n.max(2) as u64, Ordering::Relaxed);
+    }
+
     pub fn record(&self, series: &str, t: f64, v: f64) {
-        self.series
+        let cap = self.inner.max_points.load(Ordering::Relaxed) as usize;
+        self.inner
+            .series
             .lock()
             .unwrap()
             .entry(series.to_string())
             .or_default()
-            .push((t, v));
+            .push(t, v, cap);
     }
 
     pub fn series(&self, name: &str) -> Vec<(f64, f64)> {
-        self.series
+        self.inner
+            .series
             .lock()
             .unwrap()
             .get(name)
-            .cloned()
+            .map(|s| s.pts.clone())
             .unwrap_or_default()
     }
 
     pub fn names(&self) -> Vec<String> {
-        self.series.lock().unwrap().keys().cloned().collect()
+        self.inner.series.lock().unwrap().keys().cloned().collect()
     }
 
     /// Downsample a series to at most `n` points (for terminal plots).
@@ -230,13 +382,14 @@ impl Timeline {
     }
 
     pub fn to_json(&self) -> Json {
-        let guard = self.series.lock().unwrap();
+        let guard = self.inner.series.lock().unwrap();
         let mut obj = Json::obj();
-        for (k, pts) in guard.iter() {
+        for (k, s) in guard.iter() {
             obj = obj.set(
                 k,
                 Json::Arr(
-                    pts.iter()
+                    s.pts
+                        .iter()
                         .map(|(t, v)| Json::Arr(vec![Json::Num(*t), Json::Num(*v)]))
                         .collect(),
                 ),
@@ -318,6 +471,150 @@ mod tests {
         let plot = t.ascii_plot("disk", 40, 8);
         assert!(plot.contains('*'));
         assert_eq!(t.names(), vec!["disk".to_string()]);
+    }
+
+    #[test]
+    fn histogram_quantile_clamps_to_observed_range() {
+        // v = 0: lives in bucket 0, must report 0 (not the bucket's
+        // nominal upper bound of 1)
+        let h = Histogram::default();
+        h.observe(0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.quantile(1.0), 0);
+        assert_eq!((h.min(), h.max()), (0, 0));
+
+        // v = 1: bucket 1's bound is 2, clamp brings it back to 1
+        let h = Histogram::default();
+        h.observe(1);
+        assert_eq!(h.quantile(0.99), 1);
+
+        // v = u64::MAX: the old code was "right" here, and the clamp
+        // must not break it
+        let h = Histogram::default();
+        h.observe(u64::MAX);
+        assert_eq!(h.quantile(0.5), u64::MAX);
+        assert_eq!(h.max(), u64::MAX);
+
+        // one mid-range sample: before the fix this reported the
+        // bucket bound (1024), a 2.4% overshoot — now the exact max
+        let h = Histogram::default();
+        h.observe(1000);
+        assert_eq!(h.quantile(0.5), 1000);
+        assert_eq!(h.quantile(1.0), 1000);
+
+        // mixed: no quantile may exceed the largest observed value
+        let h = Histogram::default();
+        for v in [3u64, 900, 70_000] {
+            h.observe(v);
+        }
+        assert!(h.quantile(0.99) <= 70_000);
+        assert!(h.quantile(0.0) >= 3);
+        assert_eq!(h.sum(), 70_903);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!((h.min(), h.max(), h.sum()), (0, 0, 0));
+    }
+
+    #[test]
+    fn timeline_bounded_by_stride_doubling() {
+        let t = Timeline::default();
+        t.set_max_points(64);
+        for i in 0..10_000 {
+            t.record("s", i as f64, i as f64);
+        }
+        let pts = t.series("s");
+        assert!(pts.len() <= 64, "cap held: {}", pts.len());
+        assert!(pts.len() >= 32, "at least half the cap retained: {}", pts.len());
+        assert_eq!(pts[0], (0.0, 0.0), "first sample survives halving");
+        for w in pts.windows(2) {
+            assert!(w[0].0 < w[1].0, "time stays monotone");
+        }
+        // spacing is uniform (one stride) apart from rounding
+        let stride = pts[1].0 - pts[0].0;
+        for w in pts.windows(2) {
+            assert_eq!(w[1].0 - w[0].0, stride);
+        }
+        // downsample still behaves on a bounded series
+        let d = t.downsample("s", 10);
+        assert_eq!(d.len(), 10);
+        assert_eq!(d[0], (0.0, 0.0));
+    }
+
+    #[test]
+    fn prometheus_exposition_golden() {
+        let r = Registry::default();
+        r.counter("rest.requests").add(7);
+        r.gauge("replication.lag_lsn").set(-2);
+        let h = r.histogram("rest.route.GET.api_health.latency_us");
+        for v in [1u64, 2, 4, 100, 1000] {
+            h.observe(v);
+        }
+        let text = r.render_prometheus();
+        // every sample line: legal name, single space, numeric value
+        let mut bucket_counts: Vec<u64> = Vec::new();
+        let mut inf = None;
+        let (mut sum, mut count) = (None, None);
+        for line in text.lines() {
+            if line.starts_with("# TYPE ") {
+                let mut parts = line[7..].split(' ');
+                let (name, kind) = (parts.next().unwrap(), parts.next().unwrap());
+                assert!(matches!(kind, "counter" | "gauge" | "histogram"), "{line}");
+                assert!(name.starts_with("idds_"), "{line}");
+                continue;
+            }
+            let (name, value) = line.split_once(' ').expect("name value");
+            let bare = name.split('{').next().unwrap();
+            assert!(
+                bare.chars().next().unwrap().is_ascii_alphabetic() || bare.starts_with('_'),
+                "{line}"
+            );
+            assert!(
+                bare.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "illegal metric name in {line}"
+            );
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line}");
+            if bare == "idds_rest_route_GET_api_health_latency_us_bucket" {
+                if name.contains("+Inf") {
+                    inf = Some(value.parse::<u64>().unwrap());
+                } else {
+                    bucket_counts.push(value.parse().unwrap());
+                }
+            }
+            if bare == "idds_rest_route_GET_api_health_latency_us_sum" {
+                sum = Some(value.parse::<u64>().unwrap());
+            }
+            if bare == "idds_rest_route_GET_api_health_latency_us_count" {
+                count = Some(value.parse::<u64>().unwrap());
+            }
+        }
+        assert!(text.contains("idds_rest_requests 7"));
+        assert!(text.contains("idds_replication_lag_lsn -2"));
+        for w in bucket_counts.windows(2) {
+            assert!(w[0] <= w[1], "bucket counts must be cumulative");
+        }
+        assert_eq!(inf, Some(5), "+Inf bucket equals the sample count");
+        assert_eq!(count, Some(5));
+        assert_eq!(sum, Some(1107));
+        assert_eq!(
+            *bucket_counts.last().unwrap(),
+            5,
+            "last finite bucket covers all 5 samples (max is 1000 < 1023)"
+        );
+    }
+
+    #[test]
+    fn counters_with_prefix_filters() {
+        let r = Registry::default();
+        r.counter("rest.route.a.requests").inc();
+        r.counter("rest.route.b.requests").add(2);
+        r.counter("pipeline.ticks").inc();
+        let got = r.counters_with_prefix("rest.route.");
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, "rest.route.a.requests");
     }
 
     #[test]

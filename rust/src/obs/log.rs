@@ -1,0 +1,214 @@
+//! Leveled JSON-lines logger behind the `log` facade.
+//!
+//! One line per event on stderr, e.g.
+//! `{"ts":1754650000.123,"level":"WARN","target":"idds::persist::wal","msg":"..."}`
+//! — machine-parseable where the old scattered `eprintln!` sites were
+//! not. Levels resolve per component: `obs.log.level` is the default
+//! and any `obs.log.<component>` key (say `obs.log.persist = "debug"`)
+//! overrides it for log targets containing that component name.
+//! Repeats are rate-limited per call site: within
+//! `obs.log.repeat_window_s` seconds a `(target, line)` pair logs once,
+//! and the next emission carries a `"repeated": N` count for the
+//! suppressed occurrences.
+//!
+//! The logger is a `static` installed with [`log::set_logger`]
+//! (the facade's allocation-free path), so [`init`] is idempotent —
+//! repeated calls just re-apply configuration.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use ::log::{LevelFilter, Metadata, Record};
+
+use crate::config::Config;
+use crate::util::json::Json;
+
+/// Call sites tracked for repeat suppression before the map is pruned.
+const REPEAT_SITES_CAP: usize = 1024;
+
+struct Repeat {
+    last_s: u64,
+    suppressed: u64,
+}
+
+pub struct JsonLogger {
+    /// Default [`LevelFilter`] as usize (atomics can't hold the enum).
+    default_level: AtomicUsize,
+    /// `(component, level)` overrides; longest component match wins.
+    components: Mutex<Vec<(String, LevelFilter)>>,
+    repeat_window_s: AtomicU64,
+    repeats: Mutex<BTreeMap<(String, u32), Repeat>>,
+}
+
+static LOGGER: JsonLogger = JsonLogger {
+    default_level: AtomicUsize::new(LevelFilter::Info as usize),
+    components: Mutex::new(Vec::new()),
+    repeat_window_s: AtomicU64::new(5),
+    repeats: Mutex::new(BTreeMap::new()),
+};
+
+fn filter_from_usize(v: usize) -> LevelFilter {
+    match v {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+fn now_epoch() -> f64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+impl JsonLogger {
+    fn level_for(&self, target: &str) -> LevelFilter {
+        let comps = self.components.lock().unwrap();
+        let mut best: Option<(usize, LevelFilter)> = None;
+        for (comp, lvl) in comps.iter() {
+            if target.contains(comp.as_str())
+                && best.map(|(len, _)| comp.len() > len).unwrap_or(true)
+            {
+                best = Some((comp.len(), *lvl));
+            }
+        }
+        match best {
+            Some((_, lvl)) => lvl,
+            None => filter_from_usize(self.default_level.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+fn format_line(level: &str, target: &str, msg: &str, repeated: u64) -> String {
+    let mut j = Json::obj()
+        .set("ts", now_epoch())
+        .set("level", Json::Str(level.to_string()))
+        .set("target", Json::Str(target.to_string()))
+        .set("msg", Json::Str(msg.to_string()));
+    if repeated > 0 {
+        j = j.set("repeated", repeated);
+    }
+    j.to_string()
+}
+
+impl ::log::Log for JsonLogger {
+    fn enabled(&self, md: &Metadata) -> bool {
+        md.level() <= self.level_for(md.target())
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let mut repeated = 0;
+        let window = self.repeat_window_s.load(Ordering::Relaxed);
+        if window > 0 {
+            let now_s = now_epoch() as u64;
+            let key = (record.target().to_string(), record.line().unwrap_or(0));
+            let mut map = self.repeats.lock().unwrap();
+            let e = map.entry(key).or_insert(Repeat { last_s: 0, suppressed: 0 });
+            if now_s < e.last_s.saturating_add(window) {
+                e.suppressed += 1;
+                return;
+            }
+            repeated = e.suppressed;
+            e.suppressed = 0;
+            e.last_s = now_s;
+            while map.len() > REPEAT_SITES_CAP {
+                map.pop_first();
+            }
+        }
+        let line = format_line(
+            record.level().as_str(),
+            record.target(),
+            &record.args().to_string(),
+            repeated,
+        );
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "{line}");
+    }
+
+    fn flush(&self) {
+        let _ = std::io::stderr().flush();
+    }
+}
+
+fn parse_level(s: &str) -> Option<LevelFilter> {
+    s.parse::<LevelFilter>().ok()
+}
+
+/// Install (idempotent) and configure the logger from `obs.log.*`.
+pub fn init(cfg: &Config) {
+    let default = cfg
+        .str("obs.log.level")
+        .ok()
+        .and_then(|s| parse_level(&s))
+        .unwrap_or(LevelFilter::Info);
+    LOGGER.default_level.store(default as usize, Ordering::Relaxed);
+    if let Ok(w) = cfg.u64("obs.log.repeat_window_s") {
+        LOGGER.repeat_window_s.store(w, Ordering::Relaxed);
+    }
+    let mut comps: Vec<(String, LevelFilter)> = Vec::new();
+    for key in cfg.keys() {
+        let Some(comp) = key.strip_prefix("obs.log.") else { continue };
+        if comp == "level" || comp == "repeat_window_s" || comp.is_empty() {
+            continue;
+        }
+        if let Some(lvl) = cfg.str(key).ok().and_then(|s| parse_level(&s)) {
+            comps.push((comp.to_string(), lvl));
+        }
+    }
+    // the facade's global gate must admit the most verbose resolver
+    let global = comps.iter().map(|&(_, l)| l).chain([default]).max().unwrap_or(default);
+    *LOGGER.components.lock().unwrap() = comps;
+    let _ = ::log::set_logger(&LOGGER);
+    ::log::set_max_level(global);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_is_valid_json() {
+        let line = format_line("WARN", "idds::persist::wal", "fsync \"failed\"\n", 3);
+        let j = crate::util::json::parse(&line).unwrap();
+        assert_eq!(j.get("level").unwrap().as_str(), Some("WARN"));
+        assert_eq!(j.get("msg").unwrap().as_str(), Some("fsync \"failed\"\n"));
+        assert_eq!(j.get("repeated").unwrap().as_u64(), Some(3));
+        let quiet = format_line("INFO", "t", "m", 0);
+        assert!(crate::util::json::parse(&quiet).unwrap().get("repeated").is_none());
+    }
+
+    #[test]
+    fn component_override_beats_default() {
+        LOGGER
+            .default_level
+            .store(LevelFilter::Info as usize, Ordering::Relaxed);
+        {
+            let mut comps = LOGGER.components.lock().unwrap();
+            comps.clear();
+            comps.push(("persist".to_string(), LevelFilter::Debug));
+            comps.push(("persist::wal".to_string(), LevelFilter::Error));
+        }
+        assert_eq!(LOGGER.level_for("idds::broker"), LevelFilter::Info);
+        assert_eq!(LOGGER.level_for("idds::persist::mod"), LevelFilter::Debug);
+        // longest component match wins
+        assert_eq!(LOGGER.level_for("idds::persist::wal"), LevelFilter::Error);
+        LOGGER.components.lock().unwrap().clear();
+    }
+
+    #[test]
+    fn level_parse() {
+        assert_eq!(parse_level("debug"), Some(LevelFilter::Debug));
+        assert_eq!(parse_level("WARN"), Some(LevelFilter::Warn));
+        assert_eq!(parse_level("nope"), None);
+    }
+}

@@ -1,0 +1,602 @@
+//! Observability: spans, trace propagation, and the completed-span ring.
+//!
+//! The tracer is a process-global with an **armed** flag: when tracing is
+//! off, [`span`] is one relaxed atomic load returning an inert guard — no
+//! id generation, no clock read, no allocation — so instrumentation can
+//! sit on hot paths (store insert, broker publish) at negligible cost
+//! (`bench_obs` pins the number). When armed, a span guard carries a
+//! process-unique `(trace_id, span_id)` pair, parents itself under the
+//! thread's current span, and on drop records a [`SpanRecord`] into a
+//! bounded ring. A second, smaller ring pins every span whose duration
+//! crossed `obs.trace.slow_us`, so outliers survive even when the main
+//! ring has churned past them. Traces are assembled at query time by
+//! scanning both rings for a trace id (`GET /api/traces/<id>`): spans
+//! that finish late (a daemon tick completing after the client already
+//! got its response) still join the tree.
+//!
+//! Cross-process propagation rides the `X-IDDS-Trace: <trace>-<span>`
+//! header (both halves lowercase hex): `rest::Client` and the standby's
+//! replication pull inject it, `rest::route` adopts it, so one trace id
+//! spans a `Client::submit` on one box and the handler on another.
+//! Cross-*daemon* stitching uses the [`tag`]/[`take_tag`] map: the
+//! submit handler tags the new request id with its span context and the
+//! Clerk picks the tag up on intake, parenting the asynchronous pipeline
+//! work under the original submit trace.
+
+pub mod log;
+
+use std::cell::Cell;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::config::Config;
+use crate::util::json::Json;
+
+/// Header carrying `<trace_id hex>-<span_id hex>` across processes.
+pub const TRACE_HEADER: &str = "X-IDDS-Trace";
+
+const DEFAULT_RING: usize = 4096;
+const DEFAULT_SLOW_RING: usize = 512;
+const DEFAULT_SLOW_US: u64 = 100_000;
+/// Bound on the request-id → submit-context stitch map.
+const TAG_CAP: usize = 4096;
+/// Odd stride for id generation: never repeats within 2^64 draws.
+const ID_STRIDE: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// A span's identity: which trace it belongs to and its own id.
+/// `trace_id == 0` means "no active span" (the disarmed / root state).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub span_id: u64,
+}
+
+impl TraceCtx {
+    pub const NONE: TraceCtx = TraceCtx { trace_id: 0, span_id: 0 };
+
+    pub fn is_none(self) -> bool {
+        self.trace_id == 0
+    }
+
+    /// Wire form for [`TRACE_HEADER`].
+    pub fn header_value(self) -> String {
+        format!("{:016x}-{:016x}", self.trace_id, self.span_id)
+    }
+
+    /// Parse the wire form; `None` on anything malformed.
+    pub fn parse(s: &str) -> Option<TraceCtx> {
+        let (t, p) = s.trim().split_once('-')?;
+        let trace_id = u64::from_str_radix(t, 16).ok()?;
+        let span_id = u64::from_str_radix(p, 16).ok()?;
+        if trace_id == 0 {
+            return None;
+        }
+        Some(TraceCtx { trace_id, span_id })
+    }
+}
+
+/// A completed span as retained by the rings.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent_id: u64,
+    pub name: String,
+    /// Wall-clock start, microseconds since the Unix epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub attrs: Vec<(String, String)>,
+}
+
+/// Fixed-capacity ring of completed spans (oldest evicted first).
+struct Ring {
+    cap: usize,
+    buf: VecDeque<SpanRecord>,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring { cap: cap.max(1), buf: VecDeque::new() }
+    }
+
+    fn push(&mut self, rec: SpanRecord) {
+        while self.buf.len() >= self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(rec);
+    }
+
+    fn set_cap(&mut self, cap: usize) {
+        self.cap = cap.max(1);
+        while self.buf.len() > self.cap {
+            self.buf.pop_front();
+        }
+    }
+}
+
+struct Tracer {
+    next_id: AtomicU64,
+    slow_us: AtomicU64,
+    ring: Mutex<Ring>,
+    slow: Mutex<Ring>,
+    tags: Mutex<BTreeMap<u64, TraceCtx>>,
+}
+
+/// Kept outside the `OnceLock` so the disarmed fast path is exactly one
+/// relaxed load with no pointer chase.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static TRACER: OnceLock<Tracer> = OnceLock::new();
+
+thread_local! {
+    static CURRENT: Cell<TraceCtx> = Cell::new(TraceCtx::NONE);
+}
+
+fn tracer() -> &'static Tracer {
+    TRACER.get_or_init(|| {
+        let seed = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(1)
+            ^ ((std::process::id() as u64) << 32);
+        Tracer {
+            next_id: AtomicU64::new(seed | 1),
+            slow_us: AtomicU64::new(DEFAULT_SLOW_US),
+            ring: Mutex::new(Ring::new(DEFAULT_RING)),
+            slow: Mutex::new(Ring::new(DEFAULT_SLOW_RING)),
+            tags: Mutex::new(BTreeMap::new()),
+        }
+    })
+}
+
+fn next_id(t: &Tracer) -> u64 {
+    let id = t.next_id.fetch_add(ID_STRIDE, Ordering::Relaxed);
+    if id == 0 { ID_STRIDE } else { id }
+}
+
+fn now_us() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+/// Is tracing armed? One relaxed load — callers may use this to skip
+/// attribute formatting entirely.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Arm or disarm the tracer at runtime.
+pub fn arm(on: bool) {
+    if on {
+        tracer(); // make sure the rings exist before spans land
+    }
+    ARMED.store(on, Ordering::Relaxed);
+}
+
+/// Apply `obs.trace.*` config (ring capacities, slow threshold, armed).
+pub fn configure(cfg: &Config) {
+    let t = tracer();
+    if let Some(cap) = cfg.get("obs.trace.ring_capacity").and_then(|j| j.as_u64()) {
+        t.ring.lock().unwrap().set_cap(cap as usize);
+    }
+    if let Some(us) = cfg.get("obs.trace.slow_us").and_then(|j| j.as_u64()) {
+        t.slow_us.store(us, Ordering::Relaxed);
+    }
+    let enabled = cfg
+        .get("obs.trace.enabled")
+        .and_then(|j| j.as_bool())
+        .unwrap_or(true);
+    arm(enabled);
+}
+
+/// The calling thread's active span context ([`TraceCtx::NONE`] when
+/// disarmed or outside any span).
+pub fn current() -> TraceCtx {
+    CURRENT.with(|c| c.get())
+}
+
+struct ActiveSpan {
+    ctx: TraceCtx,
+    /// Thread-local context to restore on drop (NOT the span's parent:
+    /// an adopted remote parent never becomes this thread's context).
+    prev: TraceCtx,
+    /// `span_id` of the parent recorded into the ring (0 = root).
+    parent_span: u64,
+    name: String,
+    started: Instant,
+    start_us: u64,
+    attrs: Vec<(String, String)>,
+}
+
+/// RAII span: records itself into the ring on drop. Inert (a single
+/// `None`) when the tracer is disarmed.
+pub struct SpanGuard(Option<ActiveSpan>);
+
+impl SpanGuard {
+    /// This span's identity (NONE when inert).
+    pub fn ctx(&self) -> TraceCtx {
+        self.0.as_ref().map(|a| a.ctx).unwrap_or(TraceCtx::NONE)
+    }
+
+    /// Attach a key/value attribute (no-op when inert).
+    pub fn attr(&mut self, key: &str, val: impl std::fmt::Display) {
+        if let Some(a) = self.0.as_mut() {
+            a.attrs.push((key.to_string(), val.to_string()));
+        }
+    }
+
+    /// Drop without recording — for spans that turned out to be no-ops
+    /// (a daemon tick that touched zero rows). Still restores the
+    /// thread's previous context.
+    pub fn cancel(mut self) {
+        if let Some(a) = self.0.take() {
+            CURRENT.with(|c| c.set(a.prev));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(a) = self.0.take() else { return };
+        CURRENT.with(|c| c.set(a.prev));
+        let rec = SpanRecord {
+            trace_id: a.ctx.trace_id,
+            span_id: a.ctx.span_id,
+            parent_id: a.parent_span,
+            name: a.name,
+            start_us: a.start_us,
+            dur_us: a.started.elapsed().as_micros() as u64,
+            attrs: a.attrs,
+        };
+        let t = tracer();
+        if rec.dur_us >= t.slow_us.load(Ordering::Relaxed) {
+            t.slow.lock().unwrap().push(rec.clone());
+        }
+        t.ring.lock().unwrap().push(rec);
+    }
+}
+
+fn start_span(name: &str, parent: TraceCtx) -> SpanGuard {
+    let t = tracer();
+    let span_id = next_id(t);
+    let trace_id = if parent.is_none() { next_id(t) } else { parent.trace_id };
+    let ctx = TraceCtx { trace_id, span_id };
+    let prev = CURRENT.with(|c| {
+        let p = c.get();
+        c.set(ctx);
+        p
+    });
+    SpanGuard(Some(ActiveSpan {
+        ctx,
+        prev,
+        parent_span: parent.span_id,
+        name: name.to_string(),
+        started: Instant::now(),
+        start_us: now_us(),
+        attrs: Vec::new(),
+    }))
+}
+
+/// Open a span parented under the thread's current span (a new root if
+/// there is none). Disarmed: returns an inert guard after one relaxed
+/// atomic load.
+#[inline]
+pub fn span(name: &str) -> SpanGuard {
+    if !armed() {
+        return SpanGuard(None);
+    }
+    let parent = current();
+    start_span(name, parent)
+}
+
+/// Open a span under an explicit parent context — the adoption point
+/// for `X-IDDS-Trace` headers and [`take_tag`] stitches.
+pub fn span_with_parent(name: &str, parent: TraceCtx) -> SpanGuard {
+    if !armed() {
+        return SpanGuard(None);
+    }
+    if parent.is_none() {
+        return start_span(name, current());
+    }
+    start_span(name, parent)
+}
+
+/// Remember `ctx` under a numeric key (request id) so an asynchronous
+/// consumer can stitch its work into the originating trace. Bounded:
+/// oldest keys evicted past [`TAG_CAP`].
+pub fn tag(key: u64, ctx: TraceCtx) {
+    if !armed() || ctx.is_none() {
+        return;
+    }
+    let mut tags = tracer().tags.lock().unwrap();
+    while tags.len() >= TAG_CAP {
+        tags.pop_first();
+    }
+    tags.insert(key, ctx);
+}
+
+/// Claim (and remove) a context stashed by [`tag`].
+pub fn take_tag(key: u64) -> Option<TraceCtx> {
+    if !armed() {
+        return None;
+    }
+    tracer().tags.lock().unwrap().remove(&key)
+}
+
+/// Parse a 16-digit-hex trace id from a URL path segment.
+pub fn parse_trace_id(s: &str) -> Option<u64> {
+    let id = u64::from_str_radix(s.trim(), 16).ok()?;
+    if id == 0 { None } else { Some(id) }
+}
+
+fn span_json(s: &SpanRecord) -> Json {
+    let mut j = Json::obj()
+        .set("span_id", Json::Str(format!("{:016x}", s.span_id)))
+        .set("parent_id", Json::Str(format!("{:016x}", s.parent_id)))
+        .set("name", Json::Str(s.name.clone()))
+        .set("start_us", s.start_us)
+        .set("dur_us", s.dur_us);
+    if !s.attrs.is_empty() {
+        let mut attrs = Json::obj();
+        for (k, v) in &s.attrs {
+            attrs = attrs.set(k, Json::Str(v.clone()));
+        }
+        j = j.set("attrs", attrs);
+    }
+    j
+}
+
+/// Every retained span of `trace_id`, deduped across the two rings and
+/// sorted by start time.
+fn collect_trace(trace_id: u64) -> Vec<SpanRecord> {
+    let t = tracer();
+    let mut seen = BTreeMap::new();
+    for rec in t.ring.lock().unwrap().buf.iter() {
+        if rec.trace_id == trace_id {
+            seen.insert(rec.span_id, rec.clone());
+        }
+    }
+    for rec in t.slow.lock().unwrap().buf.iter() {
+        if rec.trace_id == trace_id {
+            seen.entry(rec.span_id).or_insert_with(|| rec.clone());
+        }
+    }
+    let mut spans: Vec<SpanRecord> = seen.into_values().collect();
+    spans.sort_by_key(|s| (s.start_us, s.span_id));
+    spans
+}
+
+fn build_tree(span: &SpanRecord, by_parent: &BTreeMap<u64, Vec<&SpanRecord>>) -> Json {
+    let mut j = span_json(span);
+    if let Some(kids) = by_parent.get(&span.span_id) {
+        j = j.set(
+            "children",
+            Json::Arr(kids.iter().map(|k| build_tree(k, by_parent)).collect()),
+        );
+    }
+    j
+}
+
+/// The span tree for one trace (`GET /api/traces/<id>`); `None` when
+/// nothing is retained for that id.
+pub fn trace_json(trace_id: u64) -> Option<Json> {
+    let spans = collect_trace(trace_id);
+    if spans.is_empty() {
+        return None;
+    }
+    let ids: std::collections::BTreeSet<u64> = spans.iter().map(|s| s.span_id).collect();
+    let mut by_parent: BTreeMap<u64, Vec<&SpanRecord>> = BTreeMap::new();
+    let mut roots: Vec<&SpanRecord> = Vec::new();
+    for s in &spans {
+        // orphans (parent evicted or still open) surface as roots
+        if s.parent_id != 0 && ids.contains(&s.parent_id) {
+            by_parent.entry(s.parent_id).or_default().push(s);
+        } else {
+            roots.push(s);
+        }
+    }
+    let start = spans.iter().map(|s| s.start_us).min().unwrap_or(0);
+    let end = spans.iter().map(|s| s.start_us + s.dur_us).max().unwrap_or(0);
+    Some(
+        Json::obj()
+            .set("trace_id", Json::Str(format!("{trace_id:016x}")))
+            .set("spans", spans.len() as u64)
+            .set("dur_us", end.saturating_sub(start))
+            .set(
+                "roots",
+                Json::Arr(roots.iter().map(|r| build_tree(r, &by_parent)).collect()),
+            ),
+    )
+}
+
+fn summarize(trace_id: u64) -> Json {
+    let spans = collect_trace(trace_id);
+    let root = spans
+        .iter()
+        .find(|s| s.parent_id == 0)
+        .or_else(|| spans.first());
+    let start = spans.iter().map(|s| s.start_us).min().unwrap_or(0);
+    let end = spans.iter().map(|s| s.start_us + s.dur_us).max().unwrap_or(0);
+    Json::obj()
+        .set("trace_id", Json::Str(format!("{trace_id:016x}")))
+        .set(
+            "root",
+            Json::Str(root.map(|r| r.name.clone()).unwrap_or_default()),
+        )
+        .set("spans", spans.len() as u64)
+        .set("start_us", start)
+        .set("dur_us", end.saturating_sub(start))
+}
+
+/// `GET /api/traces?limit=N`: the most recently completed traces plus
+/// the slowest retained outliers.
+pub fn traces_json(limit: usize) -> Json {
+    let limit = limit.clamp(1, 256);
+    let t = tracer();
+    // distinct ids, newest completion first
+    let mut recent_ids: Vec<u64> = Vec::new();
+    for rec in t.ring.lock().unwrap().buf.iter().rev() {
+        if !recent_ids.contains(&rec.trace_id) {
+            recent_ids.push(rec.trace_id);
+            if recent_ids.len() >= limit {
+                break;
+            }
+        }
+    }
+    // slowest retained spans, one entry per trace
+    let mut slow_ids: Vec<(u64, u64)> = Vec::new();
+    for rec in t.slow.lock().unwrap().buf.iter() {
+        match slow_ids.iter_mut().find(|(id, _)| *id == rec.trace_id) {
+            Some((_, d)) => *d = (*d).max(rec.dur_us),
+            None => slow_ids.push((rec.trace_id, rec.dur_us)),
+        }
+    }
+    slow_ids.sort_by(|a, b| b.1.cmp(&a.1));
+    slow_ids.truncate(limit);
+    Json::obj()
+        .set(
+            "recent",
+            Json::Arr(recent_ids.iter().map(|&id| summarize(id)).collect()),
+        )
+        .set(
+            "slowest",
+            Json::Arr(slow_ids.iter().map(|&(id, _)| summarize(id)).collect()),
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        let ctx = TraceCtx { trace_id: 0xdead_beef, span_id: 42 };
+        let parsed = TraceCtx::parse(&ctx.header_value()).unwrap();
+        assert_eq!(parsed, ctx);
+        assert!(TraceCtx::parse("garbage").is_none());
+        assert!(TraceCtx::parse("0-1").is_none(), "zero trace id rejected");
+        assert!(TraceCtx::parse("").is_none());
+    }
+
+    #[test]
+    fn ring_evicts_oldest() {
+        let mut r = Ring::new(3);
+        for i in 0..5u64 {
+            r.push(SpanRecord {
+                trace_id: 1,
+                span_id: i + 1,
+                parent_id: 0,
+                name: format!("s{i}"),
+                start_us: i,
+                dur_us: 1,
+                attrs: Vec::new(),
+            });
+        }
+        assert_eq!(r.buf.len(), 3);
+        assert_eq!(r.buf.front().unwrap().span_id, 3);
+        r.set_cap(1);
+        assert_eq!(r.buf.len(), 1);
+        assert_eq!(r.buf.back().unwrap().span_id, 5);
+    }
+
+    #[test]
+    fn nested_spans_share_a_trace() {
+        arm(true);
+        let trace_id;
+        {
+            let outer = span("outer");
+            trace_id = outer.ctx().trace_id;
+            assert_ne!(trace_id, 0);
+            assert_eq!(current(), outer.ctx());
+            {
+                let inner = span("inner");
+                assert_eq!(inner.ctx().trace_id, trace_id);
+                assert_ne!(inner.ctx().span_id, outer.ctx().span_id);
+            }
+            assert_eq!(current(), outer.ctx(), "inner drop restored outer");
+        }
+        assert!(current().is_none());
+        let j = trace_json(trace_id).expect("trace retained");
+        assert_eq!(j.get("spans").unwrap().as_u64(), Some(2));
+        let roots = j.get("roots").unwrap().as_arr().unwrap();
+        assert_eq!(roots.len(), 1);
+        let root = &roots[0];
+        assert_eq!(root.get("name").unwrap().as_str(), Some("outer"));
+        let kids = root.get("children").unwrap().as_arr().unwrap();
+        assert_eq!(kids[0].get("name").unwrap().as_str(), Some("inner"));
+    }
+
+    #[test]
+    fn cancel_restores_context_without_recording() {
+        arm(true);
+        let outer = span("cancel-outer");
+        let trace_id = outer.ctx().trace_id;
+        let inner = span("cancelled");
+        inner.cancel();
+        assert_eq!(current(), outer.ctx());
+        drop(outer);
+        let j = trace_json(trace_id).unwrap();
+        assert_eq!(j.get("spans").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn remote_parent_adoption() {
+        arm(true);
+        let remote = TraceCtx { trace_id: next_id(tracer()), span_id: next_id(tracer()) };
+        let sp = span_with_parent("adopted", remote);
+        assert_eq!(sp.ctx().trace_id, remote.trace_id);
+        drop(sp);
+        let spans = collect_trace(remote.trace_id);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].parent_id, remote.span_id);
+    }
+
+    #[test]
+    fn tag_stitches_and_is_bounded() {
+        arm(true);
+        let root = span("tag-root");
+        let ctx = root.ctx();
+        tag(7_000_001, ctx);
+        assert_eq!(take_tag(7_000_001), Some(ctx));
+        assert_eq!(take_tag(7_000_001), None, "tags are claim-once");
+        tag(7_000_002, ctx);
+        for i in 0..TAG_CAP as u64 + 10 {
+            tag(8_000_000 + i, ctx);
+        }
+        assert!(take_tag(7_000_002).is_none(), "oldest evicted at cap");
+        assert!(tracer().tags.lock().unwrap().len() <= TAG_CAP);
+        tracer().tags.lock().unwrap().clear();
+    }
+
+    #[test]
+    fn slow_ring_pins_outliers() {
+        arm(true);
+        // everything qualifies as slow under a zero threshold
+        let prev = tracer().slow_us.swap(0, Ordering::Relaxed);
+        let sp = span("slow-op");
+        let trace_id = sp.ctx().trace_id;
+        drop(sp);
+        tracer().slow_us.store(prev, Ordering::Relaxed);
+        let in_slow = tracer()
+            .slow
+            .lock()
+            .unwrap()
+            .buf
+            .iter()
+            .any(|r| r.trace_id == trace_id);
+        assert!(in_slow, "slow span retained in the outlier ring");
+        let j = traces_json(16);
+        assert!(j.get("recent").unwrap().as_arr().unwrap().len() >= 1);
+    }
+
+    #[test]
+    fn trace_id_parses_hex() {
+        assert_eq!(parse_trace_id("00000000000000ff"), Some(255));
+        assert_eq!(parse_trace_id("zz"), None);
+        assert_eq!(parse_trace_id("0"), None);
+    }
+}

@@ -891,6 +891,7 @@ impl Persist {
     fn checkpoint_inner(&self, store: &Store, force_full: Option<bool>) -> Result<CheckpointReport> {
         let inner = &*self.inner;
         let _gate = inner.checkpoint_mutex.lock().unwrap();
+        let mut sp = crate::obs::span("persist.checkpoint");
         let t0 = Instant::now();
         // everything below start_lsn must be on disk before the checkpoint
         // claims to cover it
@@ -922,6 +923,9 @@ impl Persist {
             && start_lsn == inner.last_checkpoint_lsn.load(Ordering::Relaxed)
         {
             inner.metrics.counter("persist.checkpoint.skipped").inc();
+            // a quiescent skip writes nothing — don't let poll-interval
+            // no-ops crowd real checkpoints out of the trace ring
+            sp.cancel();
             return Ok(CheckpointReport {
                 seq: tail_seq_now,
                 start_lsn,
@@ -952,6 +956,9 @@ impl Persist {
         };
         match &result {
             Ok(report) => {
+                sp.attr("kind", if report.full { "base" } else { "delta" });
+                sp.attr("bytes", report.bytes);
+                sp.attr("rows", report.rows);
                 inner.last_checkpoint_lsn.store(start_lsn, Ordering::Relaxed);
                 inner.last_checkpoint_bytes.store(report.bytes, Ordering::Relaxed);
                 inner.metrics.counter("persist.checkpoint.count").inc();
@@ -980,6 +987,7 @@ impl Persist {
     /// Atomic durable publish: tmp → write → fsync → rename → dir sync.
     fn publish_json(&self, body: &Json, path: &Path) -> Result<u64> {
         let inner = &*self.inner;
+        let _sp = crate::obs::span("persist.checkpoint.write");
         let mut text = String::new();
         body.write_to(&mut text);
         // `checkpoint.corrupt` publishes "successfully" with a truncated

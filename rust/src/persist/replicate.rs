@@ -448,7 +448,9 @@ impl Replica {
     pub fn promote(&self) -> Result<Json> {
         let _gate = self.promote_gate.lock().unwrap();
         let sh = &*self.shared;
+        let mut sp = crate::obs::span("replication.promote");
         if sh.cluster.is_promoted() {
+            sp.cancel(); // idempotent re-call, no takeover happened
             return Ok(Json::obj()
                 .set("promoted", true)
                 .set("already", true)
@@ -486,6 +488,8 @@ impl Replica {
         sh.persist.attach(&sh.store, Some(&sh.broker));
         sh.cluster.replica.store(false, Ordering::Release);
         sh.cluster.promoted.store(true, Ordering::Release);
+        sp.attr("epoch", new_epoch);
+        sp.attr("applied_lsn", sh.cluster.applied_lsn());
         sh.metrics.counter("replication.promotions").inc();
         log::info!(
             "promoted to primary at epoch {new_epoch} (applied through lsn {})",
@@ -550,22 +554,36 @@ fn pull_loop(sh: &ReplicaShared) {
 /// One pull round trip; returns how many frames were applied.
 fn pull_once(sh: &ReplicaShared) -> Result<usize> {
     let from = sh.cluster.applied_lsn() + 1;
+    // Root span on the pull thread. Its context rides the X-IDDS-Trace
+    // header, so the primary's request span (and the nested ship span)
+    // join this trace — one cross-process view of a replication round.
+    let mut sp = crate::obs::span("replication.pull");
+    sp.attr("from_lsn", from);
+    let trace_hv = {
+        let c = sp.ctx();
+        (!c.is_none()).then(|| c.header_value())
+    };
     let auth = format!("Bearer {}", sh.token);
     let peer_epoch = sh.cluster.epoch().to_string();
     let path = format!(
         "/api/replication/wal?from_lsn={from}&max_bytes={}",
         sh.opts.batch_bytes
     );
+    let mut headers =
+        vec![("Authorization", auth.as_str()), (H_PEER_EPOCH, peer_epoch.as_str())];
+    if let Some(hv) = trace_hv.as_deref() {
+        headers.push((crate::obs::TRACE_HEADER, hv));
+    }
     let resp = http_request_full(
         sh.cluster.primary_addr.as_str(),
         "GET",
         &path,
-        &[(("Authorization"), auth.as_str()), ((H_PEER_EPOCH), peer_epoch.as_str())],
+        &headers,
         b"",
     )?;
     sh.cluster.pulls.fetch_add(1, Ordering::Relaxed);
-    match resp.status {
-        200 => apply_batch(sh, &resp),
+    let applied = match resp.status {
+        200 => apply_batch(sh, &resp)?,
         410 => {
             // primary pruned past our position: only a *fresh* standby may
             // re-seed itself — one with applied history would silently
@@ -579,7 +597,7 @@ fn pull_once(sh: &ReplicaShared) -> Result<usize> {
                 );
             }
             bootstrap_snapshot(sh)?;
-            Ok(1)
+            1
         }
         409 => {
             // epoch conflict: ours is stale → adopt the primary's and
@@ -588,14 +606,21 @@ fn pull_once(sh: &ReplicaShared) -> Result<usize> {
             let theirs = resp.header_u64(H_EPOCH).unwrap_or(0);
             if theirs > sh.cluster.epoch() {
                 sh.cluster.adopt_epoch(theirs);
-                Ok(0)
+                0
             } else {
                 bail!("ship rejected: primary reports stale epoch {theirs}")
             }
         }
         401 => bail!("primary rejected our auth token"),
         s => bail!("ship request returned {s}"),
+    };
+    if applied == 0 {
+        // caught-up idle poll: keep the 50ms heartbeat out of the ring
+        sp.cancel();
+    } else {
+        sp.attr("frames", applied);
     }
+    Ok(applied)
 }
 
 fn apply_batch(sh: &ReplicaShared, resp: &HttpResponse) -> Result<usize> {
@@ -654,6 +679,7 @@ fn apply_batch(sh: &ReplicaShared, resp: &HttpResponse) -> Result<usize> {
 /// Seed an empty standby from the primary's snapshot endpoint (history
 /// before the oldest retained WAL frame is only available this way).
 fn bootstrap_snapshot(sh: &ReplicaShared) -> Result<()> {
+    let mut sp = crate::obs::span("replication.bootstrap");
     let auth = format!("Bearer {}", sh.token);
     let resp = http_request_full(
         sh.cluster.primary_addr.as_str(),
@@ -683,6 +709,7 @@ fn bootstrap_snapshot(sh: &ReplicaShared) -> Result<()> {
     if let Some(e) = j.get("epoch").and_then(|v| v.as_u64()) {
         sh.cluster.adopt_epoch(e);
     }
+    sp.attr("cut_lsn", cut_lsn);
     sh.metrics.counter("replication.bootstraps").inc();
     log::info!("standby bootstrapped from primary snapshot at cut lsn {cut_lsn}");
     Ok(())

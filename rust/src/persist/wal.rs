@@ -462,6 +462,10 @@ impl Wal {
 
     fn flush_batch(&self, batch: &[(u64, PersistEvent)]) {
         let inner = &*self.inner;
+        // root span on the flusher thread: one per group commit, so the
+        // trace ring shows write+fsync cost per batch, not per event
+        let mut sp = crate::obs::span("persist.wal.flush");
+        sp.attr("frames", batch.len());
         let mut buf = Vec::with_capacity(batch.len() * 128);
         for (lsn, ev) in batch {
             let mut text = String::new();
@@ -494,6 +498,7 @@ impl Wal {
                 .and_then(|_| {
                     if w.fsync == FsyncMode::Group {
                         inner.m.fsyncs.inc();
+                        let _fsync_sp = crate::obs::span("persist.wal.fsync");
                         // the fsync failpoint fires AFTER the write: bytes
                         // are in the file (recoverable) but durability is
                         // unacknowledged — the degraded-write shape the
@@ -542,6 +547,7 @@ impl Wal {
             inner.wal_bytes_total.fetch_add(buf.len() as u64, Ordering::Relaxed);
             inner.m.bytes.add(buf.len() as u64);
         }
+        sp.attr("bytes", buf.len());
         inner.m.flushes.inc();
         {
             // advance the durable mark even on I/O error (recorded and

@@ -62,8 +62,18 @@ impl Client {
     }
 
     fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+        // Client-side span: parents whatever the caller had open, and its
+        // context rides the X-IDDS-Trace header so the server-side request
+        // span joins the same trace across the process boundary.
+        let mut sp = crate::obs::span(&format!("client.{method} {path}"));
+        let span_ctx = sp.ctx();
+        let trace_hv = (!span_ctx.is_none()).then(|| span_ctx.header_value());
         let auth = format!("Bearer {}", self.token);
-        let headers = [("Authorization", auth.as_str()), ("Content-Type", "application/json")];
+        let mut headers =
+            vec![("Authorization", auth.as_str()), ("Content-Type", "application/json")];
+        if let Some(hv) = trace_hv.as_deref() {
+            headers.push((crate::obs::TRACE_HEADER, hv));
+        }
         let body_bytes = body
             .map(|b| {
                 let mut buf = String::new();
@@ -98,6 +108,8 @@ impl Client {
                 }
             }
         };
+        sp.attr("status", status);
+        sp.attr("attempts", attempt + 1);
         let j = if resp.is_empty() {
             Json::Null
         } else {

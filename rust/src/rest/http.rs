@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::util::pool::ThreadPool;
+use crate::util::pool::{PoolStats, ThreadPool};
 
 pub const MAX_BODY: usize = 64 * 1024 * 1024;
 
@@ -234,6 +234,21 @@ impl HttpServer {
     where
         H: Fn(Request) -> Response + Send + Sync + 'static,
     {
+        Self::serve_with_stats(bind, workers, Arc::new(PoolStats::default()), handler)
+    }
+
+    /// [`serve`](Self::serve) with a caller-owned [`PoolStats`]: the
+    /// worker pool lives on the accept thread, so occupancy is handed
+    /// out through the shared stats struct (`/api/health` reads it).
+    pub fn serve_with_stats<H>(
+        bind: &str,
+        workers: usize,
+        pool_stats: Arc<PoolStats>,
+        handler: H,
+    ) -> Result<HttpServer>
+    where
+        H: Fn(Request) -> Response + Send + Sync + 'static,
+    {
         let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -243,7 +258,7 @@ impl HttpServer {
         let accept_thread = std::thread::Builder::new()
             .name("http-accept".into())
             .spawn(move || {
-                let pool = ThreadPool::new(workers, "http");
+                let pool = ThreadPool::with_stats(workers, "http", pool_stats);
                 while !stop2.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((stream, _)) => {

@@ -8,6 +8,9 @@
 //!   counts, per-table generations, broker topology/backlog, persist/WAL
 //!   lag when durability is on
 //! * `GET  /api/metrics`                    — metrics snapshot
+//!   (`?format=prometheus` for text exposition)
+//! * `GET  /api/traces?limit=N`             — recent + slowest traces
+//! * `GET  /api/traces/<id>`                — one trace's span tree
 //! * `POST /api/requests`                   — submit a serialized Workflow
 //! * `GET  /api/requests/<id>`              — request record
 //! * `POST /api/requests/<id>/cancel`       — abort a non-terminal request
@@ -46,17 +49,20 @@
 pub mod client;
 pub mod http;
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use crate::broker::Broker;
 use crate::config::Config;
 use crate::metrics::Registry;
+use crate::obs;
 use crate::persist::replicate::{
     fence_node, ship_frames, ShipReply, H_DURABLE_LSN, H_EPOCH, H_OLDEST_LSN, H_PEER_EPOCH,
 };
 use crate::persist::{ClusterState, Persist, Replica};
 use crate::store::{RequestKind, RequestStatus, Store};
 use crate::util::json::{parse, Json};
+use crate::util::pool::PoolStats;
 
 pub use client::Client;
 pub use http::{HttpServer, Request, Response};
@@ -78,6 +84,9 @@ pub struct ServerState {
     replica: Option<Arc<Replica>>,
     started: std::time::Instant,
     tokens: Arc<Vec<String>>,
+    /// HTTP worker-pool occupancy, shared with the pool living on the
+    /// accept thread (`/api/health`'s saturation numbers).
+    pool_stats: Arc<PoolStats>,
 }
 
 impl ServerState {
@@ -101,6 +110,7 @@ impl ServerState {
             replica: None,
             started: std::time::Instant::now(),
             tokens: Arc::new(tokens),
+            pool_stats: Arc::new(PoolStats::default()),
         }
     }
 
@@ -147,13 +157,65 @@ fn ok_json(body: Json) -> Response {
 
 /// Start the head service on the configured bind address.
 pub fn serve(state: ServerState, config: &Config) -> anyhow::Result<HttpServer> {
+    obs::configure(config);
     let bind = config.str("rest.bind")?;
     let workers = config.usize("rest.workers")?;
-    HttpServer::serve(&bind, workers, move |req| route(&state, req))
+    let pool_stats = Arc::clone(&state.pool_stats);
+    HttpServer::serve_with_stats(&bind, workers, pool_stats, move |req| route(&state, req))
 }
 
-/// Top-level router (public for in-process tests without sockets).
+/// Metric key for a route: method plus path with id-like segments
+/// (decimal ids, 16-digit hex trace ids) collapsed to `id`, so the
+/// per-route counter space stays bounded.
+fn route_key(method: &str, path: &str) -> String {
+    let mut key = String::with_capacity(method.len() + path.len() + 8);
+    key.push_str(method);
+    for seg in path.split('/').filter(|s| !s.is_empty()) {
+        key.push('.');
+        let id_like = seg.bytes().all(|b| b.is_ascii_digit())
+            || (seg.len() == 16 && seg.bytes().all(|b| b.is_ascii_hexdigit()));
+        key.push_str(if id_like { "id" } else { seg });
+    }
+    if key.len() == method.len() {
+        key.push_str(".root");
+    }
+    key
+}
+
+/// Top-level router (public for in-process tests without sockets): the
+/// instrumentation shell around [`route_inner`] — opens the request
+/// span (adopting an `X-IDDS-Trace` parent when the caller sent one)
+/// and feeds the per-route request/error counters and latency
+/// histograms plus the `rest.inflight` gauge.
 pub fn route(state: &ServerState, req: Request) -> Response {
+    let key = route_key(&req.method, &req.path);
+    let mut sp = if obs::armed() {
+        let parent = req
+            .header(obs::TRACE_HEADER)
+            .and_then(obs::TraceCtx::parse)
+            .unwrap_or(obs::TraceCtx::NONE);
+        obs::span_with_parent(&format!("rest.{key}"), parent)
+    } else {
+        obs::span("")
+    };
+    state.metrics.gauge("rest.inflight").add(1);
+    let t0 = std::time::Instant::now();
+    let resp = route_inner(state, &req);
+    let elapsed_us = t0.elapsed().as_micros() as u64;
+    state.metrics.gauge("rest.inflight").add(-1);
+    state.metrics.counter(&format!("rest.route.{key}.requests")).inc();
+    if resp.status >= 400 {
+        state.metrics.counter(&format!("rest.route.{key}.errors")).inc();
+    }
+    state
+        .metrics
+        .histogram(&format!("rest.route.{key}.latency_us"))
+        .observe(elapsed_us);
+    sp.attr("status", resp.status);
+    resp
+}
+
+fn route_inner(state: &ServerState, req: &Request) -> Response {
     state.metrics.counter("rest.requests").inc();
     if req.path == "/api/health" {
         // health is unauthenticated (load balancer probes)
@@ -176,7 +238,29 @@ pub fn route(state: &ServerState, req: Request) -> Response {
             .set("broker", state.broker.health_json())
             // role, epoch, fenced flag; on a standby also applied/durable
             // LSNs, lag_lsn, pull counters — the operator's lag monitor
-            .set("replication", state.cluster.health_json());
+            .set("replication", state.cluster.health_json())
+            // head-service load: live inflight count, worker-pool
+            // occupancy, and the per-route request/error rollup — the
+            // before/after baseline for the planned epoll refactor
+            .set("rest", {
+                let mut routes = Json::obj();
+                for (k, v) in state.metrics.counters_with_prefix("rest.route.") {
+                    let short = k.strip_prefix("rest.route.").unwrap_or(&k);
+                    routes = routes.set(short, v);
+                }
+                Json::obj()
+                    .set("inflight", state.metrics.gauge("rest.inflight").get() as f64)
+                    .set("requests", state.metrics.counter("rest.requests").get())
+                    .set("routes", routes)
+                    .set(
+                        "pool",
+                        Json::obj()
+                            .set("size", state.pool_stats.size.load(Ordering::Relaxed))
+                            .set("busy", state.pool_stats.busy.load(Ordering::Relaxed))
+                            .set("queued", state.pool_stats.queued.load(Ordering::Relaxed))
+                            .set("saturation", state.pool_stats.saturation()),
+                    )
+            });
         if let Some(p) = &state.persist {
             // WAL stats plus checkpoint topology: base seq, delta-chain
             // length, dirty-row counts per table, last checkpoint bytes
@@ -217,7 +301,7 @@ pub fn route(state: &ServerState, req: Request) -> Response {
     }
 
     match (req.method.as_str(), segs.as_slice()) {
-        ("GET", ["api", "replication", "wal"]) => handle_ship(state, &req),
+        ("GET", ["api", "replication", "wal"]) => handle_ship(state, req),
 
         ("GET", ["api", "replication", "snapshot"]) => match &state.persist {
             Some(p) => {
@@ -272,9 +356,35 @@ pub fn route(state: &ServerState, req: Request) -> Response {
             None => err_json(400, "not a replica (started without --replica-of)"),
         },
 
-        ("GET", ["api", "metrics"]) => ok_json(state.metrics.snapshot()),
+        ("GET", ["api", "metrics"]) => {
+            if req.query_param("format") == Some("prometheus") {
+                Response {
+                    status: 200,
+                    content_type: "text/plain; version=0.0.4",
+                    headers: Vec::new(),
+                    body: state.metrics.render_prometheus().into_bytes(),
+                }
+            } else {
+                ok_json(state.metrics.snapshot())
+            }
+        }
 
-        ("POST", ["api", "requests"]) => handle_submit(state, &req),
+        ("GET", ["api", "traces"]) => {
+            let limit = req
+                .query_param("limit")
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(20);
+            ok_json(obs::traces_json(limit))
+        }
+
+        ("GET", ["api", "traces", id]) => {
+            match obs::parse_trace_id(id).and_then(obs::trace_json) {
+                Some(j) => ok_json(j),
+                None => err_json(404, "no such trace (never recorded, or aged out of the ring)"),
+            }
+        }
+
+        ("POST", ["api", "requests"]) => handle_submit(state, req),
 
         ("GET", ["api", "requests"]) => {
             let Some(status) = req
@@ -458,11 +568,17 @@ fn handle_ship(state: &ServerState, req: &Request) -> Response {
         .and_then(|v| v.parse::<usize>().ok())
         .unwrap_or(1 << 20)
         .clamp(4096, 64 << 20);
+    // child of the request span — which adopted the standby's pull
+    // trace from X-IDDS-Trace, so this ship lands in the puller's trace
+    let mut sp = obs::span("replication.ship");
+    sp.attr("from_lsn", from_lsn);
     match ship_frames(p.wal(), from_lsn, max_bytes) {
         Ok(ShipReply::Batch { frames, count, last_lsn: _, durable_lsn }) => {
             state.metrics.counter("replication.ship.batches").inc();
             state.metrics.counter("replication.ship.frames").add(count as u64);
             state.metrics.counter("replication.ship.bytes").add(frames.len() as u64);
+            sp.attr("frames", count);
+            sp.attr("bytes", frames.len());
             Response::bytes(200, frames)
                 .with_header(H_EPOCH, ours)
                 .with_header(H_DURABLE_LSN, durable_lsn)
@@ -512,6 +628,9 @@ fn handle_submit(state: &ServerState, req: &Request) -> Response {
     let id = state
         .store
         .add_request(name, requester, kind, workflow.clone());
+    // stitch point: the Clerk claims this tag on intake and parents its
+    // processing span under this request's trace
+    obs::tag(id, obs::current());
     if state.sync_submit {
         if let Some(p) = &state.persist {
             // synchronous commit, still riding group commit: wait for the
@@ -849,6 +968,79 @@ mod tests {
         // unknown id -> 404
         let resp = route(&s, authed_req("POST", "/api/requests/999999/cancel", ""));
         assert_eq!(resp.status, 404);
+    }
+
+    #[test]
+    fn route_key_collapses_ids() {
+        assert_eq!(route_key("GET", "/api/requests/123"), "GET.api.requests.id");
+        assert_eq!(
+            route_key("GET", "/api/traces/00f3a9b2c4d5e6f7"),
+            "GET.api.traces.id"
+        );
+        assert_eq!(route_key("POST", "/api/requests"), "POST.api.requests");
+        assert_eq!(route_key("GET", "/"), "GET.root");
+    }
+
+    #[test]
+    fn health_rest_section_and_per_route_counters() {
+        let s = state();
+        assert_eq!(route(&s, authed_req("GET", "/api/metrics", "")).status, 200);
+        route(&s, authed_req("GET", "/api/nope", ""));
+        let mut r = authed_req("GET", "/api/health", "");
+        r.headers.clear();
+        let resp = route(&s, r);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(
+            j.get_path(&["rest", "routes", "GET.api.metrics.requests"])
+                .and_then(|v| v.as_u64()),
+            Some(1)
+        );
+        assert_eq!(
+            j.get_path(&["rest", "routes", "GET.api.nope.errors"])
+                .and_then(|v| v.as_u64()),
+            Some(1),
+            "4xx responses count as route errors"
+        );
+        // route() is being called in-process (no server): pool idle,
+        // inflight covers only the current request
+        assert!(j.get_path(&["rest", "pool", "saturation"]).is_some());
+        assert_eq!(
+            j.get_path(&["rest", "inflight"]).and_then(|v| v.as_f64()),
+            Some(1.0),
+            "the health request itself is in flight"
+        );
+    }
+
+    #[test]
+    fn metrics_prometheus_format() {
+        let s = state();
+        route(&s, authed_req("GET", "/api/metrics", ""));
+        let mut r = authed_req("GET", "/api/metrics", "");
+        r.query = vec![("format".into(), "prometheus".into())];
+        let resp = route(&s, r);
+        assert_eq!(resp.status, 200);
+        assert!(resp.content_type.starts_with("text/plain"));
+        let text = std::str::from_utf8(&resp.body).unwrap();
+        assert!(text.contains("# TYPE idds_rest_requests counter"), "{text}");
+        assert!(
+            text.contains("idds_rest_route_GET_api_metrics_latency_us_bucket"),
+            "route latency histogram exposed: {text}"
+        );
+    }
+
+    #[test]
+    fn unknown_trace_is_404() {
+        let s = state();
+        let resp = route(&s, authed_req("GET", "/api/traces/ffffffffffffffff", ""));
+        assert_eq!(resp.status, 404);
+        let resp = route(&s, authed_req("GET", "/api/traces/nothex", ""));
+        assert_eq!(resp.status, 404);
+        // the listing endpoint always answers, even with nothing armed
+        let resp = route(&s, authed_req("GET", "/api/traces", ""));
+        assert_eq!(resp.status, 200);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(j.get("recent").unwrap().as_arr().is_some());
+        assert!(j.get("slowest").unwrap().as_arr().is_some());
     }
 
     #[test]

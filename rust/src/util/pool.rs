@@ -12,15 +12,48 @@ use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Live occupancy counters shared with whoever wants to watch the pool
+/// (the REST head surfaces its pool here in `/api/health`). All loads
+/// and stores are relaxed: these are monitoring numbers, not a
+/// synchronization protocol.
+#[derive(Default)]
+pub struct PoolStats {
+    /// Worker threads currently running a job.
+    pub busy: AtomicU64,
+    /// Jobs submitted but not yet picked up by a worker.
+    pub queued: AtomicU64,
+    /// Pool size (set once at construction).
+    pub size: AtomicU64,
+}
+
+impl PoolStats {
+    /// `busy / size` in [0, 1].
+    pub fn saturation(&self) -> f64 {
+        let size = self.size.load(Ordering::Relaxed);
+        if size == 0 {
+            return 0.0;
+        }
+        self.busy.load(Ordering::Relaxed) as f64 / size as f64
+    }
+}
+
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
     panics: Arc<AtomicU64>,
+    stats: Arc<PoolStats>,
 }
 
 impl ThreadPool {
     pub fn new(size: usize, name: &str) -> Self {
+        Self::with_stats(size, name, Arc::new(PoolStats::default()))
+    }
+
+    /// Construct with an externally owned [`PoolStats`] so a caller can
+    /// keep reading occupancy after moving the pool elsewhere.
+    pub fn with_stats(size: usize, name: &str, stats: Arc<PoolStats>) -> Self {
         assert!(size > 0);
+        stats.size.store(size as u64, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let panics = Arc::new(AtomicU64::new(0));
@@ -28,6 +61,7 @@ impl ThreadPool {
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 let panics = Arc::clone(&panics);
+                let stats = Arc::clone(&stats);
                 std::thread::Builder::new()
                     .name(format!("{name}-{i}"))
                     .spawn(move || loop {
@@ -37,9 +71,12 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
+                                stats.queued.fetch_sub(1, Ordering::Relaxed);
+                                stats.busy.fetch_add(1, Ordering::Relaxed);
                                 if std::panic::catch_unwind(AssertUnwindSafe(job)).is_err() {
                                     panics.fetch_add(1, Ordering::Relaxed);
                                 }
+                                stats.busy.fetch_sub(1, Ordering::Relaxed);
                             }
                             Err(_) => break, // sender dropped: shut down
                         }
@@ -51,11 +88,13 @@ impl ThreadPool {
             tx: Some(tx),
             workers,
             panics,
+            stats,
         }
     }
 
     /// Submit a job. Panics if the pool is shut down.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.stats.queued.fetch_add(1, Ordering::Relaxed);
         self.tx
             .as_ref()
             .expect("pool shut down")
@@ -66,6 +105,11 @@ impl ThreadPool {
     /// Number of jobs that panicked since construction.
     pub fn panic_count(&self) -> u64 {
         self.panics.load(Ordering::Relaxed)
+    }
+
+    /// Live occupancy counters.
+    pub fn stats(&self) -> Arc<PoolStats> {
+        Arc::clone(&self.stats)
     }
 
     /// Drop the sender and join all workers (runs queued jobs first).
@@ -153,6 +197,39 @@ mod tests {
         pool.shutdown();
         assert_eq!(counter.load(Ordering::SeqCst), 11);
         assert_eq!(panics, 10);
+    }
+
+    #[test]
+    fn stats_track_occupancy() {
+        let pool = ThreadPool::new(2, "s");
+        let stats = pool.stats();
+        assert_eq!(stats.size.load(Ordering::Relaxed), 2);
+        let (hold_tx, hold_rx) = mpsc::channel::<()>();
+        let hold_rx = Arc::new(Mutex::new(hold_rx));
+        // occupy both workers until released
+        for _ in 0..2 {
+            let rx = Arc::clone(&hold_rx);
+            pool.execute(move || {
+                let _ = rx.lock().unwrap().recv();
+            });
+        }
+        // wait for both to be picked up
+        for _ in 0..200 {
+            if stats.busy.load(Ordering::Relaxed) == 2 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(stats.busy.load(Ordering::Relaxed), 2);
+        assert!(stats.saturation() >= 1.0);
+        // a third job has nowhere to go: it queues
+        pool.execute(|| {});
+        assert!(stats.queued.load(Ordering::Relaxed) >= 1);
+        hold_tx.send(()).unwrap();
+        hold_tx.send(()).unwrap();
+        pool.shutdown();
+        assert_eq!(stats.busy.load(Ordering::Relaxed), 0);
+        assert_eq!(stats.queued.load(Ordering::Relaxed), 0);
     }
 
     #[test]

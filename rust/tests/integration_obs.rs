@@ -1,0 +1,217 @@
+//! Observability integration: one trace id spans `Client::submit` → REST
+//! handler → Clerk intake across real sockets (tag-stitched through the
+//! store), and a standby's replication pull carries its trace context in
+//! `X-IDDS-Trace` so the primary's request + ship spans land in the same
+//! trace — both retrievable through `GET /api/traces/<id>`.
+//!
+//! Both "processes" share this test binary's global trace ring, so the
+//! cross-process stitch is observable from either head's traces endpoint.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use idds::broker::Broker;
+use idds::config::Config;
+use idds::daemons::executors::{ExecutorSet, NoopExecutor};
+use idds::daemons::{AgentHost, Daemon, Pipeline};
+use idds::metrics::Registry;
+use idds::obs;
+use idds::persist::replicate::write_epoch;
+use idds::persist::{ClusterState, FsyncMode, Persist, PersistOptions, Replica, ReplicationOptions};
+use idds::rest::http::http_request;
+use idds::rest::{serve, Client, ServerState};
+use idds::store::{RequestKind, RequestStatus, Store};
+use idds::util::clock::WallClock;
+use idds::util::json::{parse, Json};
+use idds::workflow::{WorkKind, WorkTemplate, Workflow};
+
+const TOKEN: &str = "dev-token";
+const AUTH: &str = "Bearer dev-token";
+
+fn one_step() -> Workflow {
+    Workflow::new("one-step").add_template(WorkTemplate::new("a")).entry("a")
+}
+
+/// Collect every span name in a `roots` tree, depth-first.
+fn names_in(node: &Json, out: &mut Vec<String>) {
+    if let Some(n) = node.get("name").and_then(|v| v.as_str()) {
+        out.push(n.to_string());
+    }
+    if let Some(kids) = node.get("children").and_then(|v| v.as_arr()) {
+        for k in kids {
+            names_in(k, out);
+        }
+    }
+}
+
+fn fetch_trace_names(addr: std::net::SocketAddr, trace_hex: &str) -> Vec<String> {
+    let (st, body) = http_request(
+        addr,
+        "GET",
+        &format!("/api/traces/{trace_hex}"),
+        &[("Authorization", AUTH)],
+        b"",
+    )
+    .unwrap();
+    assert_eq!(st, 200, "trace {trace_hex} must be retrievable");
+    let j = parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let mut names = Vec::new();
+    for root in j.get("roots").unwrap().as_arr().unwrap() {
+        names_in(root, &mut names);
+    }
+    names
+}
+
+#[test]
+fn one_trace_spans_client_rest_and_daemon() {
+    let clock = Arc::new(WallClock::new());
+    let store = Store::new(clock.clone());
+    let broker = Broker::new(clock);
+    let metrics = Registry::default();
+    let cfg = Config::defaults();
+    let executors =
+        ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default()));
+    let pipeline = Pipeline::new(store.clone(), broker.clone(), metrics.clone(), executors);
+    let (c, m, t, ca, co) = pipeline.daemons();
+    let daemons: Vec<Arc<dyn Daemon>> =
+        vec![Arc::new(c), Arc::new(m), Arc::new(t), Arc::new(ca), Arc::new(co)];
+    let _host = AgentHost::start(daemons, std::time::Duration::from_millis(2));
+    let server = serve(ServerState::new(store, broker, metrics, &cfg), &cfg).unwrap();
+    let client = Client::new(server.addr, TOKEN);
+
+    // serve() armed the tracer from config; everything the client does
+    // inside this root span joins its trace
+    let sp = obs::span("test.campaign");
+    let trace_id = sp.ctx().trace_id;
+    assert_ne!(trace_id, 0, "rest::serve must arm tracing from config defaults");
+    let req = client.submit("obs-campaign", "alice", RequestKind::Workflow, &one_step()).unwrap();
+    let status = client.wait_terminal(req, std::time::Duration::from_secs(30)).unwrap();
+    assert_eq!(status, RequestStatus::Finished);
+    drop(sp);
+
+    let names = fetch_trace_names(server.addr, &format!("{trace_id:016x}"));
+    assert!(
+        names.iter().any(|n| n.starts_with("client.POST")),
+        "client submit span missing: {names:?}"
+    );
+    assert!(
+        names.iter().any(|n| n == "rest.POST.api.requests"),
+        "server request span missing (header propagation broke): {names:?}"
+    );
+    assert!(
+        names.iter().any(|n| n == "daemon.clerk.request"),
+        "clerk intake span missing (request-id tag stitch broke): {names:?}"
+    );
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "idds-obs-{tag}-{}-{}",
+        std::process::id(),
+        idds::util::next_id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn replication_pull_trace_contains_primary_ship_span() {
+    let pdir = tmp_dir("primary");
+    let sdir = tmp_dir("standby");
+    let popts = PersistOptions {
+        segment_bytes: 16 * 1024,
+        fsync: FsyncMode::Never,
+        flush_idle_ms: 2,
+        ..PersistOptions::default()
+    };
+    let cfg = Config::defaults();
+
+    // primary: store + WAL + REST (no daemons — raw submits make frames)
+    let clock = Arc::new(WallClock::new());
+    let store = Store::new(clock.clone());
+    let broker = Broker::new(clock);
+    let metrics = Registry::default();
+    let (persist, _) =
+        Persist::open_with_broker(&pdir, popts.clone(), &store, Some(&broker), metrics.clone())
+            .unwrap();
+    write_epoch(&pdir, 1).unwrap();
+    let cluster = ClusterState::primary(Some(pdir.clone()), 1);
+    let server = serve(
+        ServerState::new(store.clone(), broker.clone(), metrics, &cfg)
+            .with_persist(persist.clone())
+            .with_cluster(Arc::clone(&cluster)),
+        &cfg,
+    )
+    .unwrap();
+    let client = Client::new(server.addr, TOKEN);
+    for i in 0..10 {
+        client.submit(&format!("c{i}"), "u", RequestKind::Workflow, &one_step()).unwrap();
+    }
+    persist.flush();
+    let durable = persist.wal().durable_lsn();
+
+    // standby: pull loop only
+    let sclock = Arc::new(WallClock::new());
+    let sstore = Store::new(sclock.clone());
+    let sbroker = Broker::new(sclock);
+    let smetrics = Registry::default();
+    let (spersist, _) =
+        Persist::open_replica(&sdir, popts, &sstore, &sbroker, smetrics.clone()).unwrap();
+    let scluster = ClusterState::replica(sdir.clone(), &server.addr.to_string(), 0);
+    let ropts = ReplicationOptions { poll_interval_ms: 2, batch_bytes: 8 * 1024, retry_ms: 10 };
+    let replica = Replica::start(
+        sstore,
+        sbroker,
+        spersist.clone(),
+        scluster,
+        TOKEN,
+        ropts,
+        smetrics,
+    )
+    .unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    while replica.cluster().applied_lsn() < durable {
+        assert!(std::time::Instant::now() < deadline, "standby never caught up");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+
+    // find a frame-carrying pull in the recent traces (idle polls cancel
+    // their spans, so every retained pull did real work)
+    let (st, body) = http_request(
+        server.addr,
+        "GET",
+        "/api/traces?limit=64",
+        &[("Authorization", AUTH)],
+        b"",
+    )
+    .unwrap();
+    assert_eq!(st, 200);
+    let j = parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let pull = j
+        .get("recent")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|s| s.get("root").and_then(|v| v.as_str()) == Some("replication.pull"))
+        .expect("a replication.pull trace in the recent list")
+        .clone();
+    let trace_hex = pull.get("trace_id").unwrap().as_str().unwrap().to_string();
+    let names = fetch_trace_names(server.addr, &trace_hex);
+    assert!(names.iter().any(|n| n == "replication.pull"), "{names:?}");
+    assert!(
+        names.iter().any(|n| n == "rest.GET.api.replication.wal"),
+        "primary request span must join the pull trace: {names:?}"
+    );
+    assert!(
+        names.iter().any(|n| n == "replication.ship"),
+        "ship span must join the pull trace: {names:?}"
+    );
+
+    replica.stop();
+    server.stop();
+    spersist.shutdown();
+    persist.shutdown();
+    std::fs::remove_dir_all(&pdir).ok();
+    std::fs::remove_dir_all(&sdir).ok();
+}

@@ -14,4 +14,5 @@ BENCH_BROKER_JSON="$ROOT/BENCH_broker.json" cargo bench --bench bench_broker
 cargo bench --bench bench_carousel
 BENCH_WORKFLOW_JSON="$ROOT/BENCH_workflow.json" cargo bench --bench bench_workflow
 BENCH_REPLICATION_JSON="$ROOT/BENCH_replication.json" cargo bench --bench bench_replication
-echo "wrote $ROOT/BENCH_store.json, $ROOT/BENCH_wal.json, $ROOT/BENCH_checkpoint.json, $ROOT/BENCH_broker.json, $ROOT/BENCH_workflow.json and $ROOT/BENCH_replication.json"
+BENCH_OBS_JSON="$ROOT/BENCH_obs.json" cargo bench --bench bench_obs
+echo "wrote $ROOT/BENCH_store.json, $ROOT/BENCH_wal.json, $ROOT/BENCH_checkpoint.json, $ROOT/BENCH_broker.json, $ROOT/BENCH_workflow.json, $ROOT/BENCH_replication.json and $ROOT/BENCH_obs.json"
