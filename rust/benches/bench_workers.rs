@@ -1,0 +1,190 @@
+//! PERF-WORKERS bench: the distributed-executor lease machinery — lease
+//! claim throughput off the shared kind-queue, scheduler fairness when
+//! four workers race the same queue, and how quickly a killed worker's
+//! leases come back to the fleet.
+//!
+//!     cargo bench --bench bench_workers
+//!
+//! Emits `BENCH_workers.json` (override the path with
+//! `BENCH_WORKERS_JSON=...`; `scripts/bench.sh` points it at the repo
+//! root). The `derived` section carries claims/sec, the per-worker claim
+//! spread (stddev / max-min ratio) across the 4-worker race, and the
+//! observed redelivery latency beyond the lease timeout after a "kill"
+//! (a worker that leases and then simply never heartbeats again).
+
+use std::sync::Arc;
+
+use idds::broker::lease::WorkerRegistry;
+use idds::broker::Broker;
+use idds::metrics::Registry;
+use idds::util::bench::{section, Bencher};
+use idds::util::clock::WallClock;
+use idds::util::json::Json;
+
+fn registry(timeout_s: f64) -> WorkerRegistry {
+    let clock = Arc::new(WallClock::new());
+    let broker = Broker::new(clock.clone()).with_redelivery_timeout(timeout_s);
+    WorkerRegistry::new(broker, clock, Registry::default())
+}
+
+fn enqueue(reg: &WorkerRegistry, n: usize) {
+    for i in 0..n {
+        reg.enqueue("Noop", idds::util::next_id(), &Json::obj().set("i", i as f64));
+    }
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let n: usize = if quick { 2_000 } else { 20_000 };
+    let kinds = ["Noop".to_string()];
+
+    section(&format!("lease claim throughput: one worker draining {n} queued Works"));
+    let claim = b.bench_with_setup(
+        &format!("lease_claim_{n}_batch64"),
+        || {
+            let reg = registry(30.0);
+            let (w, _epoch) = reg.register("bench-claim", &kinds);
+            enqueue(&reg, n);
+            (reg, w)
+        },
+        |(reg, w)| {
+            let mut got = 0usize;
+            while got < n {
+                let grants = reg.lease(*w, 64).expect("known worker");
+                assert!(!grants.is_empty(), "queue drained early at {got}");
+                got += grants.len();
+            }
+            got
+        },
+    );
+    let claims_per_sec = n as f64 / (claim.mean_ns / 1e9);
+
+    section(&format!("claim+complete+settle round-trip: {n} Works"));
+    let roundtrip = b.bench_with_setup(
+        &format!("lease_complete_take_{n}"),
+        || {
+            let reg = registry(30.0);
+            let (w, epoch) = reg.register("bench-rt", &kinds);
+            enqueue(&reg, n);
+            (reg, w, epoch)
+        },
+        |(reg, w, epoch)| {
+            let mut done = 0usize;
+            while done < n {
+                for g in reg.lease(*w, 64).expect("known worker") {
+                    assert!(reg.complete(*w, *epoch, g.lease, g.handle, Json::obj()));
+                    assert!(reg.take_result(g.handle).is_some());
+                    done += 1;
+                }
+            }
+            done
+        },
+    );
+    let roundtrips_per_sec = n as f64 / (roundtrip.mean_ns / 1e9);
+
+    section(&format!("scheduler fairness: 4 workers racing {n} Works"));
+    let (fair_counts, fair_stddev, fair_spread) = {
+        let reg = registry(30.0);
+        enqueue(&reg, n);
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let reg = reg.clone();
+                let kinds = kinds.clone();
+                std::thread::spawn(move || {
+                    let (w, epoch) = reg.register(&format!("fair-{i}"), &kinds);
+                    let mut claimed = 0u64;
+                    let mut idle = 0u32;
+                    // race until the queue stays dry: every claim is
+                    // completed+settled so nothing redelivers
+                    while idle < 3 {
+                        let grants = reg.lease(w, 8).expect("known worker");
+                        if grants.is_empty() {
+                            idle += 1;
+                            std::thread::sleep(std::time::Duration::from_micros(50));
+                            continue;
+                        }
+                        idle = 0;
+                        for g in grants {
+                            reg.complete(w, epoch, g.lease, g.handle, Json::obj());
+                            reg.take_result(g.handle);
+                            claimed += 1;
+                        }
+                    }
+                    claimed
+                })
+            })
+            .collect();
+        let counts: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(counts.iter().sum::<u64>(), n as u64);
+        let mean = n as f64 / counts.len() as f64;
+        let var = counts.iter().map(|&c| (c as f64 - mean).powi(2)).sum::<f64>()
+            / counts.len() as f64;
+        let stddev = var.sqrt();
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        let spread = if min > 0.0 { max / min } else { f64::INFINITY };
+        println!("  per-worker claims {counts:?} (stddev {stddev:.1}, max/min {spread:.2})");
+        (counts, stddev, spread)
+    };
+
+    section("redelivery latency after a kill: lease, never heartbeat, re-lease");
+    let redeliveries: usize = if quick { 5 } else { 20 };
+    let timeout_s = 0.05;
+    let redeliver_ms = {
+        let mut total_beyond_timeout = 0.0f64;
+        for i in 0..redeliveries {
+            let reg = registry(timeout_s);
+            let (dead, _) = reg.register(&format!("dead-{i}"), &kinds);
+            let (live, _) = reg.register(&format!("live-{i}"), &kinds);
+            reg.enqueue("Noop", idds::util::next_id(), &Json::obj());
+            assert_eq!(reg.lease(dead, 1).unwrap().len(), 1);
+            let t0 = std::time::Instant::now();
+            // the "kill": dead never heartbeats; poll as a survivor until
+            // the broker hands the Work over
+            loop {
+                let grants = reg.lease(live, 1).expect("known worker");
+                if !grants.is_empty() {
+                    assert!(grants[0].redelivered);
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            total_beyond_timeout += (t0.elapsed().as_secs_f64() - timeout_s).max(0.0);
+        }
+        let mean_ms = total_beyond_timeout / redeliveries as f64 * 1e3;
+        println!(
+            "  mean latency beyond the {:.0}ms lease timeout: {mean_ms:.2} ms",
+            timeout_s * 1e3
+        );
+        mean_ms
+    };
+
+    let summary = Json::obj()
+        .set("bench", "bench_workers")
+        .set("quick", quick)
+        .set(
+            "results",
+            Json::Arr(b.results().iter().map(|r| r.to_json()).collect()),
+        )
+        .set(
+            "derived",
+            Json::obj()
+                .set("works", n as u64)
+                .set("lease_claims_per_sec", claims_per_sec)
+                .set("claim_complete_settle_per_sec", roundtrips_per_sec)
+                .set(
+                    "fairness_claims_per_worker",
+                    Json::Arr(fair_counts.iter().map(|&c| Json::from(c)).collect()),
+                )
+                .set("fairness_stddev", fair_stddev)
+                .set("fairness_max_over_min", fair_spread)
+                .set("redelivery_extra_latency_ms", redeliver_ms),
+        );
+    let path =
+        std::env::var("BENCH_WORKERS_JSON").unwrap_or_else(|_| "BENCH_workers.json".to_string());
+    match std::fs::write(&path, summary.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -1,0 +1,685 @@
+//! Work leases for the distributed worker fleet (ISSUE 8 tentpole).
+//!
+//! The paper's iDDS never executes payloads itself — it hands processing
+//! to a fleet of backends. This module is the head's side of that
+//! protocol: a [`WorkerRegistry`] through which remote worker processes
+//! register capabilities, *lease* queued work, renew their leases by
+//! heartbeat, and report completions idempotently.
+//!
+//! # A lease IS a broker in-flight delivery
+//!
+//! There is no second timeout machine. Each work kind gets one **shared**
+//! claim queue: a single durable subscription on the topic
+//! `idds.work.queue.<kind>` that *all* workers poll through the registry.
+//! Because the broker's in-flight set blocks redelivery of a polled
+//! message until its deadline passes, each message is held by exactly one
+//! worker at a time — work-queue semantics built from the existing
+//! pub/sub primitives:
+//!
+//! * **claim**   = [`Broker::poll`] on the shared subscription,
+//! * **renew**   = [`Broker::renew`] (deadline → now + timeout),
+//! * **release** = do nothing and let the deadline expire — the next
+//!   poll redelivers the message to whichever worker asks first,
+//! * **settle**  = [`Broker::ack`], once the Carrier has consumed the
+//!   buffered result.
+//!
+//! Durability rides along for free: the subscription, its backlog and
+//! the in-flight set are exactly the state PR 4 made durable
+//! (`BrokerSubscribe`/`BrokerPublish`/`BrokerDeliver`/`BrokerAck`), so a
+//! head restart recovers every queued and leased message, re-arming
+//! lease deadlines at `now + timeout` just like any other in-flight
+//! delivery. No new [`crate::persist::PersistEvent`] variants exist for
+//! the worker protocol.
+//!
+//! # What is deliberately NOT durable
+//!
+//! The registry itself — worker ids, epochs, lease *bindings* (which
+//! worker holds which message) and buffered results — is in-memory.
+//! After a head restart workers simply re-register (same name → same id,
+//! epoch + 1) and lease again; completions referencing unknown bindings
+//! are no-ops; the *work itself* survives in the broker. Losing a
+//! binding can only delay a message by one lease timeout, never lose it.
+//!
+//! # Idempotent completion
+//!
+//! A completion is accepted iff its (worker, epoch, lease, handle) tuple
+//! matches the registry's *current* binding for that lease and the
+//! worker's *current* epoch. Everything else — duplicate reports,
+//! reports from a worker whose lease expired and was re-leased
+//! elsewhere, reports from a previous epoch of a rejoined worker — falls
+//! through as a rejected no-op. Accepted results are buffered under the
+//! executor handle; the Carrier's poll consumes the buffer and only then
+//! acks the broker message, so a head crash between completion and
+//! Carrier-poll redelivers the work (at-least-once) instead of dropping
+//! the result on the floor.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::Registry;
+use crate::util::clock::Clock;
+use crate::util::json::Json;
+
+use super::{Broker, MsgId, SubId};
+
+/// Topic prefix for per-kind shared claim queues.
+pub const QUEUE_TOPIC_PREFIX: &str = "idds.work.queue.";
+
+fn queue_topic(kind: &str) -> String {
+    format!("{QUEUE_TOPIC_PREFIX}{kind}")
+}
+
+/// One granted lease, as returned to a worker.
+#[derive(Debug, Clone)]
+pub struct LeaseGrant {
+    /// Lease id — the broker message id; quote it in heartbeats and the
+    /// completion report.
+    pub lease: MsgId,
+    /// Executor handle minted at submit time; echoed in the completion so
+    /// the head can match the result to the waiting processing.
+    pub handle: u64,
+    pub kind: String,
+    /// The serialized Work (template params under `params`).
+    pub work: Json,
+    /// True when a previous holder's lease expired — the work may have
+    /// been partially executed before.
+    pub redelivered: bool,
+}
+
+struct WorkerInfo {
+    name: String,
+    epoch: u64,
+    kinds: Vec<String>,
+    registered_at: f64,
+    last_seen: f64,
+    /// lifetime counters, for `/api/health`
+    leased: u64,
+    completed: u64,
+}
+
+/// Current holder of one in-flight claim-queue message. Overwritten
+/// whenever the message is (re)leased, which is what invalidates every
+/// stale holder's heartbeat and completion in one move.
+struct Lease {
+    worker: u64,
+    epoch: u64,
+    handle: u64,
+    kind: String,
+    sub: SubId,
+}
+
+/// A completion accepted but not yet consumed by the Carrier's poll. The
+/// broker ack is deferred to consumption so the message redelivers if the
+/// head dies with the result still buffered in memory.
+struct Done {
+    msg: MsgId,
+    sub: SubId,
+    result: Json,
+}
+
+#[derive(Default)]
+struct Inner {
+    workers: HashMap<u64, WorkerInfo>,
+    names: HashMap<String, u64>,
+    /// kind → the shared claim-queue subscription.
+    subs: HashMap<String, SubId>,
+    leases: HashMap<MsgId, Lease>,
+    /// executor handle → buffered completion.
+    results: HashMap<u64, Done>,
+}
+
+/// Head-side state of the worker protocol. Clone-shareable; clones share
+/// all registry state. One registry per head process, attached to the
+/// REST layer (worker routes) and to the Carrier's `RemoteExecutor`s.
+#[derive(Clone)]
+pub struct WorkerRegistry {
+    broker: Broker,
+    clock: Arc<dyn Clock>,
+    metrics: Registry,
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl WorkerRegistry {
+    pub fn new(broker: Broker, clock: Arc<dyn Clock>, metrics: Registry) -> Self {
+        WorkerRegistry {
+            broker,
+            clock,
+            metrics,
+            inner: Arc::new(Mutex::new(Inner::default())),
+        }
+    }
+
+    /// The lease timeout workers must heartbeat within — the broker's
+    /// redelivery timeout, because a lease *is* an in-flight delivery.
+    pub fn lease_timeout(&self) -> f64 {
+        self.broker.redelivery_timeout()
+    }
+
+    /// Resolve (or create) the shared claim-queue subscription for a
+    /// kind. After a head restart the durable subscription already exists
+    /// in the recovered broker — adopt the lowest-id one instead of
+    /// subscribing anew, which would orphan the recovered backlog.
+    fn ensure_queue(inner: &mut Inner, broker: &Broker, kind: &str) -> SubId {
+        if let Some(&sub) = inner.subs.get(kind) {
+            return sub;
+        }
+        let topic = queue_topic(kind);
+        let sub = match broker.subscriptions_of_topic(&topic).first() {
+            Some(&recovered) => recovered,
+            None => broker.subscribe(&topic),
+        };
+        inner.subs.insert(kind.to_string(), sub);
+        sub
+    }
+
+    /// Enqueue one work payload on a kind's claim queue — the
+    /// `RemoteExecutor` submit path. Ensures the shared subscription
+    /// exists *before* publishing (a publish with no subscribers is
+    /// dropped by design).
+    pub fn enqueue(&self, kind: &str, handle: u64, work: &Json) {
+        let mut inner = self.inner.lock().unwrap();
+        Self::ensure_queue(&mut inner, &self.broker, kind);
+        drop(inner);
+        self.broker.publish(
+            &queue_topic(kind),
+            Json::obj().set("handle", handle).set("work", work.clone()),
+        );
+        self.metrics.counter("workers.enqueued").inc();
+    }
+
+    /// Register a worker (or re-register after a crash). Same name →
+    /// same worker id with a bumped epoch; every lease binding taken
+    /// under the previous epoch is dead from this moment (its messages
+    /// redeliver after their deadlines). Returns `(worker_id, epoch)`.
+    pub fn register(&self, name: &str, kinds: &[String]) -> (u64, u64) {
+        let now = self.clock.now();
+        let mut inner = self.inner.lock().unwrap();
+        for kind in kinds {
+            Self::ensure_queue(&mut inner, &self.broker, kind);
+        }
+        let id = match inner.names.get(name).copied() {
+            Some(id) => id,
+            None => {
+                let id = crate::util::next_id();
+                inner.names.insert(name.to_string(), id);
+                inner.workers.insert(
+                    id,
+                    WorkerInfo {
+                        name: name.to_string(),
+                        epoch: 0,
+                        kinds: Vec::new(),
+                        registered_at: now,
+                        last_seen: now,
+                        leased: 0,
+                        completed: 0,
+                    },
+                );
+                id
+            }
+        };
+        let w = inner.workers.get_mut(&id).expect("names/workers in sync");
+        w.epoch += 1;
+        w.kinds = kinds.to_vec();
+        w.registered_at = now;
+        w.last_seen = now;
+        let epoch = w.epoch;
+        drop(inner);
+        self.metrics.counter("workers.registered").inc();
+        (id, epoch)
+    }
+
+    /// Lease up to `max` messages across the worker's kinds. `None` for
+    /// an unknown worker id (the REST layer turns that into a 404 — the
+    /// worker must re-register). Malformed queue payloads are acked away.
+    pub fn lease(&self, worker_id: u64, max: usize) -> Option<Vec<LeaseGrant>> {
+        let mut inner = self.inner.lock().unwrap();
+        let w = inner.workers.get_mut(&worker_id)?;
+        w.last_seen = self.clock.now();
+        let epoch = w.epoch;
+        let kinds = w.kinds.clone();
+        let mut grants = Vec::new();
+        for kind in &kinds {
+            if grants.len() >= max {
+                break;
+            }
+            let sub = Self::ensure_queue(&mut inner, &self.broker, kind);
+            for d in self.broker.poll(sub, max - grants.len()) {
+                let (handle, work) = match (
+                    d.payload.get("handle").and_then(Json::as_u64),
+                    d.payload.get("work"),
+                ) {
+                    (Some(h), Some(wk)) => (h, wk.clone()),
+                    _ => {
+                        self.broker.ack(sub, d.id); // foreign junk: drop it
+                        continue;
+                    }
+                };
+                // (Re)binding the lease to this worker is what invalidates
+                // any previous holder: their epoch/worker no longer match.
+                inner.leases.insert(
+                    d.id,
+                    Lease { worker: worker_id, epoch, handle, kind: kind.clone(), sub },
+                );
+                if d.redelivered {
+                    self.metrics.counter("workers.leases_redelivered").inc();
+                }
+                grants.push(LeaseGrant {
+                    lease: d.id,
+                    handle,
+                    kind: kind.clone(),
+                    work,
+                    redelivered: d.redelivered,
+                });
+            }
+        }
+        if let Some(w) = inner.workers.get_mut(&worker_id) {
+            w.leased += grants.len() as u64;
+        }
+        self.metrics.counter("workers.leases_granted").add(grants.len() as u64);
+        Some(grants)
+    }
+
+    /// Heartbeat: extend the deadline of every lease this worker still
+    /// holds. Returns how many renewed — a lease that expired and was
+    /// re-leased elsewhere (or was completed) silently drops out, telling
+    /// the worker its claim is gone. `None` for an unknown worker.
+    pub fn heartbeat(&self, worker_id: u64, lease_ids: &[MsgId]) -> Option<usize> {
+        let mut inner = self.inner.lock().unwrap();
+        let w = inner.workers.get_mut(&worker_id)?;
+        w.last_seen = self.clock.now();
+        let epoch = w.epoch;
+        let mut renewed = 0;
+        for &id in lease_ids {
+            let Some(l) = inner.leases.get(&id) else { continue };
+            if l.worker != worker_id || l.epoch != epoch {
+                continue; // stale holder: never resurrect its claim
+            }
+            if self.broker.renew(l.sub, id) {
+                renewed += 1;
+            }
+        }
+        self.metrics.counter("workers.heartbeats_renewed").add(renewed as u64);
+        Some(renewed)
+    }
+
+    /// Report a completion. Accepted iff `(worker, epoch, lease, handle)`
+    /// matches the current binding *and* the worker's current epoch —
+    /// anything else (duplicate report, expired-and-re-leased claim,
+    /// previous epoch of a rejoined worker, unknown worker after a head
+    /// restart) is a rejected no-op, which is what makes worker-side
+    /// retries of this call safe. The result is buffered; the broker ack
+    /// waits for [`WorkerRegistry::take_result`].
+    pub fn complete(
+        &self,
+        worker_id: u64,
+        epoch: u64,
+        lease: MsgId,
+        handle: u64,
+        result: Json,
+    ) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let current_epoch = match inner.workers.get(&worker_id) {
+            Some(w) => w.epoch,
+            None => {
+                self.metrics.counter("workers.completions_rejected").inc();
+                return false;
+            }
+        };
+        let ok = matches!(
+            inner.leases.get(&lease),
+            Some(l)
+                if l.worker == worker_id
+                    && l.epoch == epoch
+                    && l.handle == handle
+                    && epoch == current_epoch
+        );
+        if !ok {
+            self.metrics.counter("workers.completions_rejected").inc();
+            return false;
+        }
+        let l = inner.leases.remove(&lease).unwrap();
+        inner.results.insert(handle, Done { msg: lease, sub: l.sub, result });
+        if let Some(w) = inner.workers.get_mut(&worker_id) {
+            w.completed += 1;
+            w.last_seen = self.clock.now();
+        }
+        self.metrics.counter("workers.completions_accepted").inc();
+        true
+    }
+
+    /// Consume a buffered completion — the `RemoteExecutor` poll path.
+    /// Acks the underlying broker message, which is the durable point of
+    /// no return: from here the work can never redeliver.
+    pub fn take_result(&self, handle: u64) -> Option<Json> {
+        let done = self.inner.lock().unwrap().results.remove(&handle)?;
+        self.broker.ack(done.sub, done.msg);
+        Some(done.result)
+    }
+
+    /// The `workers` section of `/api/health`: per-worker rows plus
+    /// fleet totals and queue backlogs.
+    pub fn health_json(&self) -> Json {
+        let now = self.clock.now();
+        let inner = self.inner.lock().unwrap();
+        let mut active_per_worker: HashMap<u64, u64> = HashMap::new();
+        for l in inner.leases.values() {
+            *active_per_worker.entry(l.worker).or_insert(0) += 1;
+        }
+        let mut ids: Vec<&u64> = inner.workers.keys().collect();
+        ids.sort_unstable();
+        let rows: Vec<Json> = ids
+            .iter()
+            .map(|id| {
+                let w = &inner.workers[id];
+                Json::obj()
+                    .set("id", **id)
+                    .set("name", w.name.as_str())
+                    .set("epoch", w.epoch)
+                    .set(
+                        "kinds",
+                        Json::Arr(w.kinds.iter().map(|k| Json::Str(k.clone())).collect()),
+                    )
+                    .set("active_leases", active_per_worker.get(id).copied().unwrap_or(0))
+                    .set("leased_total", w.leased)
+                    .set("completed_total", w.completed)
+                    .set("registered_age_s", now - w.registered_at)
+                    .set("last_seen_age_s", now - w.last_seen)
+            })
+            .collect();
+        let mut kinds: Vec<&String> = inner.subs.keys().collect();
+        kinds.sort();
+        let queues: Vec<Json> = kinds
+            .iter()
+            .map(|kind| {
+                let sub = inner.subs[*kind];
+                Json::obj()
+                    .set("kind", kind.as_str())
+                    .set("backlog", self.broker.backlog(sub) as u64)
+            })
+            .collect();
+        Json::obj()
+            .set("lease_timeout_s", self.lease_timeout())
+            .set("registered", inner.workers.len() as u64)
+            .set("active_leases", inner.leases.len() as u64)
+            .set("buffered_results", inner.results.len() as u64)
+            .set("workers", Json::Arr(rows))
+            .set("queues", Json::Arr(queues))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::SimClock;
+
+    fn registry(timeout: f64) -> (WorkerRegistry, Arc<SimClock>) {
+        let clock = SimClock::new();
+        let broker =
+            Broker::new(clock.clone() as Arc<dyn Clock>).with_redelivery_timeout(timeout);
+        (WorkerRegistry::new(broker, clock.clone(), Registry::default()), clock)
+    }
+
+    fn work(x: f64) -> Json {
+        Json::obj().set("params", Json::obj().set("x", x))
+    }
+
+    #[test]
+    fn register_lease_complete_roundtrip() {
+        let (r, _clock) = registry(10.0);
+        let (w, epoch) = r.register("alpha", &["Noop".into()]);
+        assert_eq!(epoch, 1);
+        r.enqueue("Noop", 77, &work(1.0));
+        let grants = r.lease(w, 10).unwrap();
+        assert_eq!(grants.len(), 1);
+        assert_eq!(grants[0].handle, 77);
+        assert!(!grants[0].redelivered);
+        assert_eq!(grants[0].work.get_path(&["params", "x"]).unwrap().as_f64(), Some(1.0));
+        assert!(r.complete(w, epoch, grants[0].lease, 77, Json::obj().set("ok", true)));
+        let res = r.take_result(77).unwrap();
+        assert_eq!(res.get("ok").unwrap().as_bool(), Some(true));
+        assert!(r.take_result(77).is_none(), "result consumed");
+    }
+
+    #[test]
+    fn reregister_same_name_keeps_id_and_bumps_epoch() {
+        let (r, _clock) = registry(10.0);
+        let (w1, e1) = r.register("alpha", &["Noop".into()]);
+        let (w2, e2) = r.register("alpha", &["Noop".into()]);
+        assert_eq!(w1, w2, "same name, same id");
+        assert_eq!(e2, e1 + 1, "rejoin bumps the epoch");
+        let (w3, e3) = r.register("beta", &["Noop".into()]);
+        assert_ne!(w3, w1);
+        assert_eq!(e3, 1);
+    }
+
+    #[test]
+    fn heartbeat_renewal_extends_deadline() {
+        let (r, clock) = registry(10.0);
+        let (w, _e) = r.register("alpha", &["Noop".into()]);
+        r.enqueue("Noop", 1, &work(1.0));
+        let g = r.lease(w, 10).unwrap();
+        // heartbeat at t=8 pushes the deadline to 18; without it the lease
+        // would expire at 10
+        clock.advance_by(8.0);
+        assert_eq!(r.heartbeat(w, &[g[0].lease]).unwrap(), 1);
+        clock.advance_by(9.0); // t=17 < 18: still held
+        let (w2, _e2) = r.register("beta", &["Noop".into()]);
+        assert!(r.lease(w2, 10).unwrap().is_empty(), "lease still held by alpha");
+        clock.advance_by(2.0); // t=19 > 18: expired
+        let g2 = r.lease(w2, 10).unwrap();
+        assert_eq!(g2.len(), 1);
+        assert!(g2[0].redelivered);
+    }
+
+    #[test]
+    fn expiry_reclaims_exactly_once_under_heartbeat_race() {
+        // Round 1: expiry wins — B leases the expired message, then A's
+        // late heartbeat must NOT renew (its binding is gone).
+        let (r, clock) = registry(10.0);
+        let (a, ea) = r.register("a", &["Noop".into()]);
+        let (b, _eb) = r.register("b", &["Noop".into()]);
+        r.enqueue("Noop", 1, &work(1.0));
+        let ga = r.lease(a, 10).unwrap();
+        clock.advance_by(11.0);
+        let gb = r.lease(b, 10).unwrap();
+        assert_eq!(gb.len(), 1, "expired lease reclaimed");
+        assert_eq!(gb[0].lease, ga[0].lease, "same message");
+        assert_eq!(r.heartbeat(a, &[ga[0].lease]).unwrap(), 0, "stale holder cannot renew");
+        assert!(r.lease(a, 10).unwrap().is_empty(), "no double reclaim");
+        assert!(
+            !r.complete(a, ea, ga[0].lease, ga[0].handle, Json::obj()),
+            "stale holder cannot complete"
+        );
+
+        // Round 2: heartbeat wins — renewal lands before anyone re-polls,
+        // so the original holder keeps the claim past the old deadline.
+        let (r, clock) = registry(10.0);
+        let (a, ea) = r.register("a", &["Noop".into()]);
+        let (b, _eb) = r.register("b", &["Noop".into()]);
+        r.enqueue("Noop", 2, &work(2.0));
+        let ga = r.lease(a, 10).unwrap();
+        clock.advance_by(11.0); // past the deadline, but nobody polled yet
+        assert_eq!(
+            r.heartbeat(a, &[ga[0].lease]).unwrap(),
+            1,
+            "un-repolled expiry: the holder reclaims its own lease"
+        );
+        assert!(r.lease(b, 10).unwrap().is_empty(), "renewal landed first");
+        assert!(r.complete(a, ea, ga[0].lease, ga[0].handle, Json::obj()));
+    }
+
+    #[test]
+    fn stale_epoch_completion_rejected() {
+        let (r, _clock) = registry(10.0);
+        let (w, e1) = r.register("alpha", &["Noop".into()]);
+        r.enqueue("Noop", 5, &work(1.0));
+        let g = r.lease(w, 10).unwrap();
+        // the worker dies and rejoins: epoch bumps, old leases are dead
+        let (w2, e2) = r.register("alpha", &["Noop".into()]);
+        assert_eq!(w, w2);
+        assert!(
+            !r.complete(w, e1, g[0].lease, g[0].handle, Json::obj()),
+            "completion from the previous epoch is a no-op"
+        );
+        assert!(
+            !r.complete(w, e2, g[0].lease, g[0].handle, Json::obj()),
+            "claiming the new epoch against an old binding is a no-op too"
+        );
+        assert!(r.take_result(g[0].handle).is_none(), "nothing buffered");
+    }
+
+    #[test]
+    fn duplicate_completion_is_idempotent() {
+        let (r, _clock) = registry(10.0);
+        let (w, e) = r.register("alpha", &["Noop".into()]);
+        r.enqueue("Noop", 9, &work(1.0));
+        let g = r.lease(w, 10).unwrap();
+        assert!(r.complete(w, e, g[0].lease, 9, Json::obj().set("n", 1u64)));
+        assert!(!r.complete(w, e, g[0].lease, 9, Json::obj().set("n", 2u64)), "duplicate no-op");
+        let res = r.take_result(9).unwrap();
+        assert_eq!(res.get("n").unwrap().as_u64(), Some(1), "first result wins");
+        // ... and the message is settled: nothing left to lease
+        let (w2, _e2) = r.register("beta", &["Noop".into()]);
+        assert!(r.lease(w2, 10).unwrap().is_empty());
+    }
+
+    #[test]
+    fn completion_with_wrong_handle_or_worker_rejected() {
+        let (r, _clock) = registry(10.0);
+        let (a, ea) = r.register("a", &["Noop".into()]);
+        let (b, eb) = r.register("b", &["Noop".into()]);
+        r.enqueue("Noop", 3, &work(1.0));
+        let g = r.lease(a, 10).unwrap();
+        assert!(!r.complete(b, eb, g[0].lease, 3, Json::obj()), "not b's lease");
+        assert!(!r.complete(a, ea, g[0].lease, 999, Json::obj()), "wrong handle");
+        assert!(!r.complete(12345, 1, g[0].lease, 3, Json::obj()), "unknown worker");
+        assert!(r.complete(a, ea, g[0].lease, 3, Json::obj()), "the real one still lands");
+    }
+
+    #[test]
+    fn unacked_result_keeps_message_leasable_until_taken() {
+        // A completion buffers the result but does NOT ack: until the
+        // Carrier consumes it, the message is still in flight and would
+        // redeliver if the deadline passed (head-crash window). Once
+        // taken, the ack settles it for good.
+        let (r, clock) = registry(10.0);
+        let (w, e) = r.register("alpha", &["Noop".into()]);
+        r.enqueue("Noop", 4, &work(1.0));
+        let g = r.lease(w, 10).unwrap();
+        assert!(r.complete(w, e, g[0].lease, 4, Json::obj()));
+        clock.advance_by(11.0);
+        let (w2, _e2) = r.register("beta", &["Noop".into()]);
+        let g2 = r.lease(w2, 10).unwrap();
+        assert_eq!(g2.len(), 1, "un-consumed completion still redelivers after timeout");
+        assert!(g2[0].redelivered);
+        // the buffered result is still there; consuming it acks
+        assert!(r.take_result(4).is_some());
+        clock.advance_by(11.0);
+        assert!(r.lease(w, 10).unwrap().is_empty(), "acked: gone for good");
+    }
+
+    #[test]
+    fn leases_route_by_kind() {
+        let (r, _clock) = registry(10.0);
+        let (noop_w, _) = r.register("n", &["Noop".into()]);
+        let (dec_w, _) = r.register("d", &["Decision".into()]);
+        r.enqueue("Noop", 1, &work(1.0));
+        r.enqueue("Decision", 2, &work(2.0));
+        let gn = r.lease(noop_w, 10).unwrap();
+        assert_eq!(gn.len(), 1);
+        assert_eq!(gn[0].kind, "Noop");
+        let gd = r.lease(dec_w, 10).unwrap();
+        assert_eq!(gd.len(), 1);
+        assert_eq!(gd[0].kind, "Decision");
+    }
+
+    #[test]
+    fn lease_respects_max() {
+        let (r, _clock) = registry(10.0);
+        let (w, _) = r.register("alpha", &["Noop".into()]);
+        for h in 0..5 {
+            r.enqueue("Noop", h, &work(h as f64));
+        }
+        assert_eq!(r.lease(w, 2).unwrap().len(), 2);
+        assert_eq!(r.lease(w, 10).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn unknown_worker_gets_none() {
+        let (r, _clock) = registry(10.0);
+        assert!(r.lease(42, 10).is_none());
+        assert!(r.heartbeat(42, &[1]).is_none());
+    }
+
+    #[test]
+    fn registry_readopts_recovered_subscription() {
+        // Simulate a head restart: the durable broker still holds the
+        // claim-queue subscription and its backlog; a fresh registry must
+        // adopt it rather than subscribe anew and strand the backlog.
+        let clock = SimClock::new();
+        let broker = Broker::new(clock.clone() as Arc<dyn Clock>).with_redelivery_timeout(10.0);
+        let r1 = WorkerRegistry::new(broker.clone(), clock.clone(), Registry::default());
+        let (w, _e) = r1.register("alpha", &["Noop".into()]);
+        r1.enqueue("Noop", 8, &work(8.0));
+        let _held = r1.lease(w, 10).unwrap(); // in flight at the "crash"
+
+        // head restarts: same broker (recovered), fresh registry
+        let r2 = WorkerRegistry::new(broker.clone(), clock.clone(), Registry::default());
+        let (w2, _e2) = r2.register("alpha", &["Noop".into()]);
+        assert!(r2.lease(w2, 10).unwrap().is_empty(), "deadline re-armed, not yet expired");
+        clock.advance_by(11.0);
+        let g = r2.lease(w2, 10).unwrap();
+        assert_eq!(g.len(), 1, "recovered backlog leases from the adopted subscription");
+        assert_eq!(g[0].handle, 8);
+        assert!(g[0].redelivered);
+        assert_eq!(
+            broker.subscriptions_of_topic(&queue_topic("Noop")).len(),
+            1,
+            "no duplicate subscription"
+        );
+    }
+
+    #[test]
+    fn malformed_queue_payload_is_dropped() {
+        let (r, clock) = registry(10.0);
+        let (w, _e) = r.register("alpha", &["Noop".into()]);
+        // junk straight onto the topic, bypassing enqueue
+        r.broker.publish(&queue_topic("Noop"), Json::Str("junk".into()));
+        r.enqueue("Noop", 6, &work(6.0));
+        let g = r.lease(w, 10).unwrap();
+        assert_eq!(g.len(), 1, "junk skipped, real work granted");
+        assert_eq!(g[0].handle, 6);
+        clock.advance_by(11.0);
+        // the junk was acked away, not left to redeliver forever
+        let g2 = r.lease(w, 10).unwrap();
+        assert_eq!(g2.len(), 1, "only the un-completed real lease redelivers");
+        assert_eq!(g2[0].handle, 6);
+    }
+
+    #[test]
+    fn health_json_reports_fleet_state() {
+        let (r, _clock) = registry(7.5);
+        let (w, e) = r.register("alpha", &["Noop".into(), "Decision".into()]);
+        r.register("beta", &["Noop".into()]);
+        r.enqueue("Noop", 1, &work(1.0));
+        r.enqueue("Noop", 2, &work(2.0));
+        let g = r.lease(w, 1).unwrap();
+        assert!(r.complete(w, e, g[0].lease, g[0].handle, Json::obj()));
+        let h = r.health_json();
+        assert_eq!(h.get("lease_timeout_s").unwrap().as_f64(), Some(7.5));
+        assert_eq!(h.get("registered").unwrap().as_u64(), Some(2));
+        assert_eq!(h.get("active_leases").unwrap().as_u64(), Some(0));
+        assert_eq!(h.get("buffered_results").unwrap().as_u64(), Some(1));
+        let rows = h.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        let alpha = rows.iter().find(|r| r.get("name").unwrap().as_str() == Some("alpha")).unwrap();
+        assert_eq!(alpha.get("epoch").unwrap().as_u64(), Some(1));
+        assert_eq!(alpha.get("leased_total").unwrap().as_u64(), Some(1));
+        assert_eq!(alpha.get("completed_total").unwrap().as_u64(), Some(1));
+        let queues = h.get("queues").unwrap().as_arr().unwrap();
+        // Decision queue (empty) + Noop queue (1 pending + 1 in-flight-completed)
+        assert_eq!(queues.len(), 2);
+        let noop = queues.iter().find(|q| q.get("kind").unwrap().as_str() == Some("Noop")).unwrap();
+        assert_eq!(noop.get("backlog").unwrap().as_u64(), Some(2));
+    }
+}

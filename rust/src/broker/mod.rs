@@ -56,6 +56,8 @@ use crate::persist::{PersistEvent, Persister};
 use crate::util::clock::Clock;
 use crate::util::json::Json;
 
+pub mod lease;
+
 pub type MsgId = u64;
 pub type SubId = u64;
 
@@ -290,6 +292,13 @@ impl Broker {
     pub fn with_redelivery_timeout(mut self, secs: f64) -> Self {
         self.redelivery_timeout = secs;
         self
+    }
+
+    /// The in-flight redelivery timeout, in seconds. Work leases
+    /// ([`lease::WorkerRegistry`]) are broker in-flight deliveries, so this
+    /// is also the lease timeout the worker protocol advertises.
+    pub fn redelivery_timeout(&self) -> f64 {
+        self.redelivery_timeout
     }
 
     // -- durability hook ------------------------------------------------------
@@ -605,6 +614,43 @@ impl Broker {
         let n = removed.len();
         self.inner.acked.fetch_add(n as u64, Ordering::Relaxed);
         n
+    }
+
+    /// Extend an in-flight delivery's deadline to `now + redelivery_timeout`
+    /// — the worker heartbeat path. Returns false when the message is not in
+    /// flight for this subscriber (already acked, expired back to pending and
+    /// re-leased, or never delivered): the caller's claim on it is gone and a
+    /// renewal must not resurrect it. Durable via the same `BrokerDeliver`
+    /// event a redelivery logs — replay's move-or-renew arm re-arms the
+    /// deadline, so renewals survive restarts like deliveries do.
+    pub fn renew(&self, sub: SubId, msg: MsgId) -> bool {
+        let deadline = self.clock.now() + self.redelivery_timeout;
+        let Some(topic_arc) = self.topic_of_sub(sub) else { return false };
+        let mut t = topic_arc.lock().unwrap();
+        let renewed = match t.queues.get_mut(&sub).and_then(|q| q.in_flight.get_mut(&msg)) {
+            Some(f) => {
+                f.deadline = deadline;
+                true
+            }
+            None => false,
+        };
+        if renewed {
+            self.mark_dirty(&t.name);
+            self.log(|| PersistEvent::BrokerDeliver { sub, ids: vec![msg] });
+        }
+        renewed
+    }
+
+    /// Current subscriber ids of a topic, sorted — `None`-safe (empty for an
+    /// unknown topic). The worker registry uses this to re-adopt a durable
+    /// shared claim queue after a head restart instead of subscribing anew
+    /// (which would orphan the recovered queue's backlog).
+    pub fn subscriptions_of_topic(&self, topic: &str) -> Vec<SubId> {
+        let Some(topic_arc) = self.topic_of(topic) else { return Vec::new() };
+        let t = topic_arc.lock().unwrap();
+        let mut subs: Vec<SubId> = t.queues.keys().copied().collect();
+        subs.sort_unstable();
+        subs
     }
 
     /// Outstanding (pending + in-flight) for a subscriber.
@@ -1031,6 +1077,61 @@ mod tests {
         assert_eq!(d2.len(), 1);
         assert!(d2[0].redelivered);
         assert_eq!(d2[0].id, d1[0].id);
+    }
+
+    #[test]
+    fn renew_extends_inflight_deadline() {
+        let clock = SimClock::new();
+        let b = Broker::new(clock.clone()).with_redelivery_timeout(10.0);
+        let s = b.subscribe("t");
+        b.publish("t", Json::Num(1.0));
+        let d = b.poll(s, 10);
+        assert_eq!(d.len(), 1);
+        // renew at t=8 → new deadline t=18; the original would have fired at 10
+        clock.advance_by(8.0);
+        assert!(b.renew(s, d[0].id));
+        clock.advance_by(9.0); // t=17 < 18
+        assert!(b.poll(s, 10).is_empty(), "renewed message must not redeliver yet");
+        clock.advance_by(2.0); // t=19 > 18
+        let d2 = b.poll(s, 10);
+        assert_eq!(d2.len(), 1);
+        assert!(d2[0].redelivered);
+    }
+
+    #[test]
+    fn renew_rejects_acked_expired_and_unknown() {
+        let clock = SimClock::new();
+        let b = Broker::new(clock.clone()).with_redelivery_timeout(10.0);
+        let s = b.subscribe("t");
+        let s2 = b.subscribe("t");
+        b.publish("t", Json::Num(1.0));
+        let d = b.poll(s, 10);
+        assert!(!b.renew(s, d[0].id + 1_000_000), "unknown id");
+        assert!(!b.renew(s2, d[0].id), "delivered to s, not s2: per-subscriber state");
+        assert!(b.ack(s, d[0].id));
+        assert!(!b.renew(s, d[0].id), "acked is not renewable");
+        // expiry + re-poll hands the claim back out; only the *current*
+        // in-flight entry is renewable, and ack after renew still works
+        let e = b.poll(s2, 10);
+        clock.advance_by(11.0);
+        let e2 = b.poll(s2, 10);
+        assert!(e2[0].redelivered);
+        assert!(b.renew(s2, e[0].id), "the re-delivered claim renews");
+        assert!(b.ack(s2, e[0].id));
+        assert!(!b.renew(s2, e[0].id));
+    }
+
+    #[test]
+    fn subscriptions_of_topic_lists_current_subs() {
+        let b = Broker::new(Arc::new(WallClock::new()));
+        assert!(b.subscriptions_of_topic("t").is_empty());
+        let s1 = b.subscribe("t");
+        let s2 = b.subscribe("t");
+        let mut want = vec![s1, s2];
+        want.sort_unstable();
+        assert_eq!(b.subscriptions_of_topic("t"), want);
+        b.unsubscribe(s1);
+        assert_eq!(b.subscriptions_of_topic("t"), vec![s2]);
     }
 
     #[test]

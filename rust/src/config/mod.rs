@@ -52,6 +52,17 @@ impl Config {
         c.put("replication.poll_interval_ms", Json::Num(50.0));
         c.put("replication.batch_bytes", Json::Num(1024.0 * 1024.0));
         c.put("replication.retry_ms", Json::Num(200.0));
+        // broker: in-flight deliveries (and therefore work leases —
+        // broker::lease rides the same machinery) redeliver after this
+        // many seconds without an ack or a renewal
+        c.put("broker.redelivery_timeout_s", Json::Num(30.0));
+        // distributed workers: comma-separated Work kinds the head
+        // delegates to the remote fleet via RemoteExecutor (empty = all
+        // kinds execute in-process, no registry attached); the heartbeat
+        // cadence and lease batch size are the `idds work` loop's knobs
+        c.put("workers.remote_kinds", Json::Str(String::new()));
+        c.put("workers.heartbeat_s", Json::Num(1.0));
+        c.put("workers.lease_batch", Json::Num(4.0));
         // observability (obs/): span tracing, JSON-lines logging, and
         // the timeline recorder's per-series memory bound
         c.put("obs.trace.enabled", Json::Bool(true));

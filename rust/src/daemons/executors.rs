@@ -10,6 +10,11 @@
 //!   AOT PJRT artifacts (`mlp_train`, `al_decision`) on a worker pool,
 //!   completion is observed by polling (matching the asynchronous
 //!   evaluation structure of paper Fig. 6).
+//! * [`RemoteExecutor`]  — distributed Works: submits by enqueueing a
+//!   lease on the kind's shared claim queue
+//!   ([`crate::broker::lease::WorkerRegistry`]); remote worker processes
+//!   execute and report back, completion is observed by polling the
+//!   registry's buffered results. Same contract, different machine.
 //!
 //! Data-processing Works run against the DDM/WFM discrete-event
 //! simulators and are driven by the carousel module, not by an executor
@@ -20,6 +25,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
+use crate::broker::lease::WorkerRegistry;
 use crate::runtime::EngineHandle;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -57,6 +63,14 @@ impl ExecutorSet {
     pub fn get(&self, kind: &str) -> Option<Arc<dyn Executor>> {
         self.map.get(kind).cloned()
     }
+
+    /// The kinds this set can execute, sorted — what a worker process
+    /// advertises at registration.
+    pub fn kinds(&self) -> Vec<&'static str> {
+        let mut kinds: Vec<&'static str> = self.map.keys().copied().collect();
+        kinds.sort_unstable();
+        kinds
+    }
 }
 
 /// Completes immediately; result echoes `params.result` (or {}).
@@ -90,6 +104,46 @@ impl Executor for NoopExecutor {
     fn poll_many(&self, handles: &[u64]) -> Vec<(u64, Result<Option<Json>>)> {
         let mut done = self.done.lock().unwrap();
         handles.iter().map(|&h| (h, Ok(done.remove(&h)))).collect()
+    }
+}
+
+/// Submits by enqueueing a lease on the kind's shared claim queue instead
+/// of executing in-process — the Carrier cannot tell the difference. The
+/// work is durably queued in the broker (it survives head restarts like
+/// any published message); a fleet worker leases it, executes, and reports
+/// the completion back through the registry, where [`Executor::poll`]
+/// picks it up on the next Carrier tick.
+///
+/// `poll` on a handle with no buffered result returns `Ok(None)` — that
+/// covers "still queued", "leased and running", *and* "registry forgot the
+/// binding across a head restart" (the broker redelivers the work, a
+/// worker re-executes it, and the result shows up one lease cycle later).
+/// Remote execution is therefore at-least-once; the Carrier transitions
+/// each processing exactly once regardless.
+pub struct RemoteExecutor {
+    registry: WorkerRegistry,
+    kind: &'static str,
+}
+
+impl RemoteExecutor {
+    pub fn new(registry: WorkerRegistry, kind: WorkKind) -> Self {
+        RemoteExecutor { registry, kind: kind.as_str() }
+    }
+}
+
+impl Executor for RemoteExecutor {
+    fn submit(&self, work: &Json) -> Result<u64> {
+        let handle = crate::util::next_id();
+        self.registry.enqueue(self.kind, handle, work);
+        Ok(handle)
+    }
+
+    fn poll(&self, handle: u64) -> Result<Option<Json>> {
+        Ok(self.registry.take_result(handle))
+    }
+
+    fn poll_many(&self, handles: &[u64]) -> Vec<(u64, Result<Option<Json>>)> {
+        handles.iter().map(|&h| (h, Ok(self.registry.take_result(h)))).collect()
     }
 }
 
@@ -317,5 +371,32 @@ mod tests {
         let set = ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default()));
         assert!(set.get("Noop").is_some());
         assert!(set.get("HpoTraining").is_none());
+    }
+
+    #[test]
+    fn remote_executor_round_trips_through_the_registry() {
+        let clock = crate::util::clock::SimClock::new();
+        let broker = crate::broker::Broker::new(clock.clone() as Arc<dyn crate::util::clock::Clock>);
+        let registry = WorkerRegistry::new(
+            broker,
+            clock,
+            crate::metrics::Registry::default(),
+        );
+        let exec = RemoteExecutor::new(registry.clone(), WorkKind::Noop);
+        let work = Json::obj().set("kind", "Noop").set("params", Json::obj().set("y", 3.0));
+        let h = exec.submit(&work).unwrap();
+        assert!(exec.poll(h).unwrap().is_none(), "nothing until a worker completes");
+
+        // an inline "worker": register, lease, execute (echo), complete
+        let (w, e) = registry.register("inline", &["Noop".into()]);
+        let grants = registry.lease(w, 10).unwrap();
+        assert_eq!(grants.len(), 1);
+        assert_eq!(grants[0].handle, h);
+        assert_eq!(grants[0].work.get_path(&["params", "y"]).unwrap().as_f64(), Some(3.0));
+        assert!(registry.complete(w, e, grants[0].lease, h, Json::obj().set("done", true)));
+
+        let out = exec.poll_many(&[h]);
+        assert_eq!(out[0].1.as_ref().unwrap().as_ref().unwrap().get("done").unwrap().as_bool(), Some(true));
+        assert!(exec.poll(h).unwrap().is_none(), "consumed, like every executor");
     }
 }

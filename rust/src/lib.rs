@@ -30,6 +30,7 @@ pub mod wfm;
 pub mod workflow;
 pub mod daemons;
 pub mod rest;
+pub mod worker;
 pub mod runtime;
 pub mod hpo;
 pub mod carousel;

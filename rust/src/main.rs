@@ -9,6 +9,10 @@
 //!                                          pull the primary's WAL, serve
 //!                                          read-only GETs, take writes
 //!                                          after POST /api/admin/promote
+//! idds work      --connect ADDR [--name N] [--kinds K,K] [--set k=v ...]
+//!                                          run a worker process: lease Works
+//!                                          from the head at ADDR, execute
+//!                                          them locally, report completions
 //! idds carousel  [--scenario NAME]        Fig. 4 / Fig. 5 comparison run
 //! idds hpo       [--points N]             Bayesian-vs-random HPO run
 //! idds rubin     [--jobs N --layers L]    DAG release-policy comparison
@@ -19,10 +23,11 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use idds::broker::lease::WorkerRegistry;
 use idds::broker::Broker;
 use idds::carousel::{compare_modes, Granularity};
 use idds::config::Config;
-use idds::daemons::executors::{ExecutorSet, NoopExecutor, RuntimeExecutor};
+use idds::daemons::executors::{ExecutorSet, NoopExecutor, RemoteExecutor, RuntimeExecutor};
 use idds::daemons::{AgentHost, Daemon, Pipeline};
 use idds::hpo::{payload_space, BayesOpt, Strategy};
 use idds::metrics::Registry;
@@ -133,6 +138,7 @@ fn main() -> Result<()> {
     let args = parse_args();
     match args.cmd.as_str() {
         "serve" => cmd_serve(&args),
+        "work" => cmd_work(&args),
         "carousel" => cmd_carousel(&args),
         "hpo" => cmd_hpo(&args),
         "rubin" => cmd_rubin(&args),
@@ -140,7 +146,7 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "iDDS — intelligent Data Delivery Service (reproduction)\n\
-                 usage: idds <serve|carousel|hpo|rubin|info> [flags]\n\
+                 usage: idds <serve|work|carousel|hpo|rubin|info> [flags]\n\
                  see README.md"
             );
             Ok(())
@@ -179,7 +185,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let clock = Arc::new(WallClock::new());
     let store = Store::new(clock.clone());
-    let broker = Broker::new(clock);
+    // the redelivery timeout doubles as the worker-fleet lease timeout:
+    // both are "how long may a delivery sit unacknowledged in flight"
+    let broker = Broker::new(clock.clone())
+        .with_redelivery_timeout(cfg.f64("broker.redelivery_timeout_s")?);
     let metrics = Registry::default();
 
     // durability: recover checkpoint + WAL suffix before anything else
@@ -226,10 +235,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let engine = EngineHandle::start(&default_artifacts_dir())
         .context("loading AOT artifacts (run `make artifacts`)")?;
     let rt_exec = Arc::new(RuntimeExecutor::new(engine, cfg.usize("hpo.workers")?));
-    let executors = ExecutorSet::default()
+    let mut executors = ExecutorSet::default()
         .with(WorkKind::Noop, Arc::new(NoopExecutor::default()))
         .with(WorkKind::HpoTraining, rt_exec.clone())
         .with(WorkKind::Decision, rt_exec);
+
+    // distributed workers: each kind in workers.remote_kinds trades its
+    // in-process executor for a RemoteExecutor — the Carrier's submit
+    // becomes an enqueue on the durable lease queue, and `idds work
+    // --connect` processes drain it. The registry shares this broker, so
+    // queued work rides the same WAL as everything else.
+    let remote_kinds = cfg.str("workers.remote_kinds")?;
+    let worker_registry = if remote_kinds.trim().is_empty() {
+        None
+    } else {
+        let registry = WorkerRegistry::new(broker.clone(), clock.clone(), metrics.clone());
+        let mut delegated = Vec::new();
+        for k in remote_kinds.split(',').map(str::trim).filter(|k| !k.is_empty()) {
+            let kind = WorkKind::parse(k)
+                .with_context(|| format!("workers.remote_kinds: unknown kind '{k}'"))?;
+            executors =
+                executors.with(kind, Arc::new(RemoteExecutor::new(registry.clone(), kind)));
+            delegated.push(kind.as_str());
+        }
+        println!("remote execution: kinds {delegated:?} delegated to the worker fleet");
+        Some(registry)
+    };
 
     let pipeline = Pipeline::new(store.clone(), broker.clone(), metrics.clone(), executors);
     let (clerk, marsh, tfr, carrier, conductor) = pipeline.daemons();
@@ -336,6 +367,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(p) = &persist {
         state = state.with_persist(p.clone());
     }
+    if let Some(w) = &worker_registry {
+        state = state.with_workers(w.clone());
+    }
     if let Some(r) = &replica_handle {
         state = state.with_replica(std::sync::Arc::clone(r));
     } else if let Some(c) = &primary_cluster {
@@ -409,6 +443,104 @@ fn cmd_serve(args: &Args) -> Result<()> {
         p.shutdown();
     }
     println!("bye");
+    Ok(())
+}
+
+/// `idds work --connect ADDR`: run a worker process against a head
+/// service. Executes Noop Works always; HpoTraining/Decision only when
+/// the AOT artifacts load (a worker box without artifacts is still a
+/// perfectly good Noop/orchestration worker).
+fn cmd_work(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    idds::obs::log::init(&cfg);
+    let Some(connect) = args.flag("connect") else {
+        bail!("idds work requires --connect HOST:PORT (the head service address)");
+    };
+    let addr: std::net::SocketAddr = connect
+        .parse()
+        .with_context(|| format!("--connect '{connect}' is not host:port"))?;
+    let token = cfg
+        .get("rest.auth_tokens")
+        .and_then(|j| j.as_arr())
+        .and_then(|a| a.first())
+        .and_then(|t| t.as_str())
+        .unwrap_or("dev-token")
+        .to_string();
+    // worker-side fault injection (the kill/rejoin drills arm
+    // worker.complete here); no Persist ever opens in this process, so
+    // the spec is armed directly
+    let fp = cfg.str("persist.failpoints")?;
+    if !fp.is_empty() {
+        idds::persist::failpoints::arm_from_spec(&fp).context("parsing persist.failpoints")?;
+        log::warn!("fault injection armed: {fp}");
+    }
+
+    let mut executors =
+        ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default()));
+    match EngineHandle::start(&default_artifacts_dir()) {
+        Ok(engine) => {
+            let rt = Arc::new(RuntimeExecutor::new(engine, cfg.usize("hpo.workers")?));
+            executors = executors
+                .with(WorkKind::HpoTraining, rt.clone())
+                .with(WorkKind::Decision, rt);
+        }
+        Err(e) => {
+            log::warn!("AOT artifacts unavailable ({e:#}); serving Noop work only");
+        }
+    }
+    // --kinds restricts what this worker advertises (and therefore leases)
+    if let Some(spec) = args.flag("kinds") {
+        let keep: Vec<WorkKind> = spec
+            .split(',')
+            .map(str::trim)
+            .filter(|k| !k.is_empty())
+            .map(|k| WorkKind::parse(k).with_context(|| format!("--kinds: unknown kind '{k}'")))
+            .collect::<Result<_>>()?;
+        let mut restricted = ExecutorSet::default();
+        for kind in keep {
+            let exec = executors
+                .get(kind.as_str())
+                .with_context(|| format!("--kinds: no local executor for '{}'", kind.as_str()))?;
+            restricted = restricted.with(kind, exec);
+        }
+        executors = restricted;
+    }
+
+    let opts = idds::worker::WorkerOptions {
+        name: args
+            .flag("name")
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("worker-{}", std::process::id())),
+        heartbeat_s: cfg.f64("workers.heartbeat_s")?,
+        lease_batch: cfg.usize("workers.lease_batch")?,
+        ..Default::default()
+    };
+    println!(
+        "worker '{}' connecting to {addr} (kinds {:?})",
+        opts.name,
+        executors.kinds()
+    );
+    shutdown::install();
+    // the shutdown flag doubles as the loop's stop flag: poll it into the
+    // AtomicBool the worker loop watches
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stop2 = stop.clone();
+    std::thread::Builder::new()
+        .name("idds-work-signals".into())
+        .spawn(move || loop {
+            if shutdown::requested() {
+                stop2.store(true, std::sync::atomic::Ordering::SeqCst);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        })
+        .context("spawning signal watcher")?;
+    let client = idds::rest::Client::new(addr, &token);
+    let stats = idds::worker::run(&client, &executors, &opts, &stop)?;
+    println!(
+        "worker '{}' stopping: {} leased, {} completed, {} rejected, {} faulted, {} rejoins",
+        opts.name, stats.leased, stats.completed, stats.rejected, stats.faulted, stats.reregistered
+    );
     Ok(())
 }
 

@@ -24,6 +24,10 @@
 //! | `checkpoint.corrupt`| the checkpoint publishes *successfully* but     |
 //! |                     | with a truncated body — recovery must sideline  |
 //! |                     | it as `.corrupt` and fall back                  |
+//! | `worker.complete`   | a worker process (`idds work` / `worker::run`)  |
+//! |                     | drops a finished Work instead of reporting it — |
+//! |                     | crash-in-the-gap between doing and reporting;   |
+//! |                     | the lease must expire and the Work redeliver    |
 //!
 //! The disarmed fast path is a single relaxed atomic load, so the hooks
 //! are always compiled in (no test-only cfg split to drift) and cost

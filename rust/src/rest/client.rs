@@ -15,6 +15,7 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
+use crate::broker::lease::LeaseGrant;
 use crate::store::{RequestKind, RequestStatus};
 use crate::util::json::{parse, Json};
 use crate::util::rng::Rng;
@@ -41,6 +42,15 @@ pub struct MessageDelivery {
     pub topic: String,
     pub payload: Json,
     pub redelivered: bool,
+}
+
+/// What `POST /api/workers` hands back: the identity to lease under, and
+/// the deadline contract the worker must heartbeat within.
+#[derive(Debug, Clone)]
+pub struct WorkerRegistration {
+    pub worker: u64,
+    pub epoch: u64,
+    pub lease_timeout_s: f64,
 }
 
 impl Client {
@@ -228,6 +238,99 @@ impl Client {
             Some(&Json::obj().set("sub", sub).set("msg", msg)),
         )?;
         j.get("acked").and_then(|v| v.as_bool()).context("acked")
+    }
+
+    /// Register (or rejoin) as a worker. Same name → same worker id with
+    /// a bumped epoch, which invalidates any leases the previous
+    /// incarnation still holds.
+    pub fn register_worker(&self, name: &str, kinds: &[&str]) -> Result<WorkerRegistration> {
+        let body = Json::obj().set("name", name).set(
+            "kinds",
+            Json::Arr(kinds.iter().map(|k| Json::from(*k)).collect()),
+        );
+        let j = self.expect_ok("POST", "/api/workers", Some(&body))?;
+        Ok(WorkerRegistration {
+            worker: j.get("worker").and_then(|v| v.as_u64()).context("worker")?,
+            epoch: j.get("epoch").and_then(|v| v.as_u64()).context("epoch")?,
+            lease_timeout_s: j
+                .get("lease_timeout_s")
+                .and_then(|v| v.as_f64())
+                .context("lease_timeout_s")?,
+        })
+    }
+
+    /// Claim up to `max` queued Works as leases. Empty when nothing is
+    /// queued; errors with a 404 when the head no longer knows this worker
+    /// id (head restarted — re-register and try again).
+    pub fn lease_work(&self, worker: u64, max: usize) -> Result<Vec<LeaseGrant>> {
+        let j = self.expect_ok(
+            "POST",
+            &format!("/api/workers/{worker}/lease"),
+            Some(&Json::obj().set("max", max)),
+        )?;
+        let leases = j.get("leases").and_then(|l| l.as_arr()).context("leases")?;
+        leases
+            .iter()
+            .map(|l| {
+                Ok(LeaseGrant {
+                    lease: l.get("lease").and_then(|v| v.as_u64()).context("lease")?,
+                    handle: l.get("handle").and_then(|v| v.as_u64()).context("handle")?,
+                    kind: l
+                        .get("kind")
+                        .and_then(|v| v.as_str())
+                        .context("kind")?
+                        .to_string(),
+                    work: l.get("work").cloned().unwrap_or_else(Json::obj),
+                    redelivered: l
+                        .get("redelivered")
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(false),
+                })
+            })
+            .collect()
+    }
+
+    /// Renew the deadlines of held leases. Returns how many actually
+    /// renewed — fewer than asked means some leases expired and were (or
+    /// will be) claimed by someone else: stop working on those.
+    pub fn worker_heartbeat(&self, worker: u64, leases: &[u64]) -> Result<usize> {
+        let j = self.expect_ok(
+            "POST",
+            &format!("/api/workers/{worker}/heartbeat"),
+            Some(&Json::obj().set(
+                "leases",
+                Json::Arr(leases.iter().map(|&l| Json::from(l)).collect()),
+            )),
+        )?;
+        j.get("renewed")
+            .and_then(|v| v.as_u64())
+            .map(|n| n as usize)
+            .context("renewed")
+    }
+
+    /// Report a completion. `Ok(false)` means the head rejected it as a
+    /// duplicate or stale-lease report — an idempotent no-op, not an
+    /// error: the Work is (or will be) settled by whoever holds the live
+    /// lease, so the worker just moves on.
+    pub fn complete_work(
+        &self,
+        worker: u64,
+        epoch: u64,
+        lease: u64,
+        handle: u64,
+        result: &Json,
+    ) -> Result<bool> {
+        let body = Json::obj()
+            .set("epoch", epoch)
+            .set("lease", lease)
+            .set("handle", handle)
+            .set("result", result.clone());
+        let j = self.expect_ok(
+            "POST",
+            &format!("/api/workers/{worker}/complete"),
+            Some(&body),
+        )?;
+        j.get("accepted").and_then(|v| v.as_bool()).context("accepted")
     }
 
     /// Poll until the request reaches a terminal status or the deadline

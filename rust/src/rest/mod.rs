@@ -26,6 +26,20 @@
 //! * `POST /api/admin/checkpoint`           — force a durable checkpoint
 //!   (503 when the service runs without a data dir)
 //!
+//! Worker-fleet routes (see DESIGN.md, "Distributed execution"), enabled
+//! when a [`crate::broker::lease::WorkerRegistry`] is attached:
+//! * `POST /api/workers`                    — `{name, kinds}`: register a
+//!   worker (same name → same id, epoch + 1); returns
+//!   `{worker, epoch, lease_timeout_s}`
+//! * `POST /api/workers/<id>/lease`         — `{max}`: claim up to `max`
+//!   queued Works as leases; `404` for an unknown id (re-register)
+//! * `POST /api/workers/<id>/heartbeat`     — `{leases: [ids]}`: renew
+//!   lease deadlines; returns `{renewed}` — a lease missing from the
+//!   renewed count is lost (expired and re-leased elsewhere)
+//! * `POST /api/workers/<id>/complete`      — `{epoch, lease, handle,
+//!   result}`: report a completion; `{accepted: false}` for duplicate or
+//!   stale-lease reports (idempotent no-op, safe to retry)
+//!
 //! Replication routes (see DESIGN.md, "Replication"):
 //! * `GET  /api/replication/wal?from_lsn=N` — ship durable WAL frames to a
 //!   standby (raw WAL framing, chunked by `?max_bytes=`; `410 Gone` when
@@ -52,6 +66,7 @@ pub mod http;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
+use crate::broker::lease::WorkerRegistry;
 use crate::broker::Broker;
 use crate::config::Config;
 use crate::metrics::Registry;
@@ -82,6 +97,9 @@ pub struct ServerState {
     pub cluster: Arc<ClusterState>,
     /// Present on a standby: the pull loop + promote entry point.
     replica: Option<Arc<Replica>>,
+    /// Present when this head serves a worker fleet: enables the
+    /// `/api/workers` routes and the `workers` health section.
+    workers: Option<WorkerRegistry>,
     started: std::time::Instant,
     tokens: Arc<Vec<String>>,
     /// HTTP worker-pool occupancy, shared with the pool living on the
@@ -108,6 +126,7 @@ impl ServerState {
             sync_submit,
             cluster: ClusterState::primary(None, 1),
             replica: None,
+            workers: None,
             started: std::time::Instant::now(),
             tokens: Arc::new(tokens),
             pool_stats: Arc::new(PoolStats::default()),
@@ -133,6 +152,13 @@ impl ServerState {
     pub fn with_replica(mut self, replica: Arc<Replica>) -> Self {
         self.cluster = replica.cluster();
         self.replica = Some(replica);
+        self
+    }
+
+    /// Attach the worker-fleet registry (enables the `/api/workers`
+    /// routes and the `workers` section of `/api/health`).
+    pub fn with_workers(mut self, workers: WorkerRegistry) -> Self {
+        self.workers = Some(workers);
         self
     }
 
@@ -266,6 +292,12 @@ fn route_inner(state: &ServerState, req: &Request) -> Response {
             // length, dirty-row counts per table, last checkpoint bytes
             body = body
                 .set("persist", p.stats().set("checkpoint", p.checkpoint_topology(&state.store)));
+        }
+        if let Some(w) = &state.workers {
+            // fleet state: per-worker rows (epoch, active leases, lifetime
+            // lease/completion counts, last-seen age) plus claim-queue
+            // backlogs — the operator's kill/rejoin monitor
+            body = body.set("workers", w.health_json());
         }
         return ok_json(body);
     }
@@ -529,6 +561,113 @@ fn route_inner(state: &ServerState, req: &Request) -> Response {
                 return err_json(400, "need sub and msg");
             };
             ok_json(Json::obj().set("acked", state.broker.ack(sub, msg)))
+        }
+
+        ("POST", ["api", "workers"]) => {
+            let Some(w) = &state.workers else {
+                return err_json(503, "worker registry not attached (no remote kinds configured)");
+            };
+            let body = match req.body_str().map(parse) {
+                Ok(Ok(j)) => j,
+                _ => return err_json(400, "body must be json"),
+            };
+            let Some(name) = body.get("name").and_then(|v| v.as_str()) else {
+                return err_json(400, "missing name");
+            };
+            let kinds: Vec<String> = body
+                .get("kinds")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|k| k.as_str().map(str::to_owned)).collect())
+                .unwrap_or_default();
+            if kinds.is_empty() {
+                return err_json(400, "kinds must be a non-empty array of work-kind strings");
+            }
+            let (worker, epoch) = w.register(name, &kinds);
+            state.metrics.counter("rest.workers_registered").inc();
+            ok_json(
+                Json::obj()
+                    .set("worker", worker)
+                    .set("epoch", epoch)
+                    .set("lease_timeout_s", w.lease_timeout()),
+            )
+        }
+
+        ("POST", ["api", "workers", id, "lease"]) => {
+            let Some(w) = &state.workers else {
+                return err_json(503, "worker registry not attached (no remote kinds configured)");
+            };
+            let Ok(worker) = id.parse::<u64>() else { return err_json(400, "bad id") };
+            let body = match req.body_str().map(parse) {
+                Ok(Ok(j)) => j,
+                _ => return err_json(400, "body must be json"),
+            };
+            let max = body.get("max").and_then(|v| v.as_u64()).unwrap_or(1).max(1) as usize;
+            match w.lease(worker, max) {
+                Some(grants) => ok_json(Json::obj().set(
+                    "leases",
+                    Json::Arr(
+                        grants
+                            .into_iter()
+                            .map(|g| {
+                                Json::obj()
+                                    .set("lease", g.lease)
+                                    .set("handle", g.handle)
+                                    .set("kind", g.kind.as_str())
+                                    .set("work", g.work)
+                                    .set("redelivered", g.redelivered)
+                            })
+                            .collect(),
+                    ),
+                )),
+                None => err_json(404, "unknown worker id (registry restarted? re-register)"),
+            }
+        }
+
+        ("POST", ["api", "workers", id, "heartbeat"]) => {
+            let Some(w) = &state.workers else {
+                return err_json(503, "worker registry not attached (no remote kinds configured)");
+            };
+            let Ok(worker) = id.parse::<u64>() else { return err_json(400, "bad id") };
+            let body = match req.body_str().map(parse) {
+                Ok(Ok(j)) => j,
+                _ => return err_json(400, "body must be json"),
+            };
+            let leases: Vec<u64> = body
+                .get("leases")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|l| l.as_u64()).collect())
+                .unwrap_or_default();
+            match w.heartbeat(worker, &leases) {
+                Some(renewed) => ok_json(Json::obj().set("renewed", renewed)),
+                None => err_json(404, "unknown worker id (registry restarted? re-register)"),
+            }
+        }
+
+        ("POST", ["api", "workers", id, "complete"]) => {
+            let Some(w) = &state.workers else {
+                return err_json(503, "worker registry not attached (no remote kinds configured)");
+            };
+            let Ok(worker) = id.parse::<u64>() else { return err_json(400, "bad id") };
+            let body = match req.body_str().map(parse) {
+                Ok(Ok(j)) => j,
+                _ => return err_json(400, "body must be json"),
+            };
+            let (Some(epoch), Some(lease), Some(handle)) = (
+                body.get("epoch").and_then(|v| v.as_u64()),
+                body.get("lease").and_then(|v| v.as_u64()),
+                body.get("handle").and_then(|v| v.as_u64()),
+            ) else {
+                return err_json(400, "need epoch, lease and handle");
+            };
+            let result = body.get("result").cloned().unwrap_or_else(Json::obj);
+            // accepted:false (not an error status) for duplicate or
+            // stale-lease reports: the worker treats it as settled either
+            // way, so retries after a lost response are harmless
+            let accepted = w.complete(worker, epoch, lease, handle, result);
+            if accepted {
+                state.metrics.counter("rest.completions_accepted").inc();
+            }
+            ok_json(Json::obj().set("accepted", accepted))
         }
 
         _ => err_json(404, "no such route"),
@@ -1055,5 +1194,161 @@ mod tests {
             route(&s, authed_req("GET", "/api/requests/999999", "")).status,
             404
         );
+    }
+
+    /// A state with the worker registry attached, sharing the server's
+    /// broker — the same wiring `cmd_serve` does.
+    fn worker_state() -> ServerState {
+        let clock = Arc::new(WallClock::new());
+        let broker = Broker::new(clock.clone());
+        let registry =
+            WorkerRegistry::new(broker.clone(), clock.clone(), Registry::default());
+        ServerState::new(
+            Store::new(clock.clone()),
+            broker,
+            Registry::default(),
+            &Config::defaults(),
+        )
+        .with_workers(registry)
+    }
+
+    fn json_of(resp: &Response) -> Json {
+        parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn worker_routes_unavailable_without_registry() {
+        let s = state();
+        let resp = route(&s, authed_req("POST", "/api/workers", r#"{"name": "w", "kinds": ["Noop"]}"#));
+        assert_eq!(resp.status, 503);
+    }
+
+    #[test]
+    fn worker_register_lease_complete_over_rest() {
+        let s = worker_state();
+        let resp = route(
+            &s,
+            authed_req("POST", "/api/workers", r#"{"name": "w1", "kinds": ["Noop"]}"#),
+        );
+        assert_eq!(resp.status, 200);
+        let j = json_of(&resp);
+        let worker = j.get("worker").unwrap().as_u64().unwrap();
+        let epoch = j.get("epoch").unwrap().as_u64().unwrap();
+        assert_eq!(epoch, 1);
+        assert!(j.get("lease_timeout_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+
+        // nothing queued yet: an empty lease batch, not an error
+        let resp = route(
+            &s,
+            authed_req("POST", &format!("/api/workers/{worker}/lease"), r#"{"max": 4}"#),
+        );
+        assert_eq!(resp.status, 200);
+        assert!(json_of(&resp).get("leases").unwrap().as_arr().unwrap().is_empty());
+
+        // enqueue through the registry (as a RemoteExecutor would) and lease it
+        let w = s.workers.as_ref().unwrap();
+        let handle = crate::util::next_id();
+        w.enqueue("Noop", handle, &Json::obj().set("x", 7.0));
+        let resp = route(
+            &s,
+            authed_req("POST", &format!("/api/workers/{worker}/lease"), r#"{"max": 4}"#),
+        );
+        let leases = json_of(&resp);
+        let leases = leases.get("leases").unwrap().as_arr().unwrap();
+        assert_eq!(leases.len(), 1);
+        let lease = leases[0].get("lease").unwrap().as_u64().unwrap();
+        assert_eq!(leases[0].get("handle").unwrap().as_u64(), Some(handle));
+        assert_eq!(leases[0].get("kind").unwrap().as_str(), Some("Noop"));
+        assert_eq!(leases[0].get("redelivered").unwrap().as_bool(), Some(false));
+        assert_eq!(
+            leases[0].get_path(&["work", "x"]).and_then(|v| v.as_f64()),
+            Some(7.0)
+        );
+
+        // heartbeat renews it
+        let resp = route(
+            &s,
+            authed_req(
+                "POST",
+                &format!("/api/workers/{worker}/heartbeat"),
+                &format!(r#"{{"leases": [{lease}]}}"#),
+            ),
+        );
+        assert_eq!(json_of(&resp).get("renewed").unwrap().as_u64(), Some(1));
+
+        // complete: accepted once, duplicate is an idempotent no-op
+        let body = format!(
+            r#"{{"epoch": {epoch}, "lease": {lease}, "handle": {handle}, "result": {{"ok": true}}}}"#
+        );
+        let resp = route(&s, authed_req("POST", &format!("/api/workers/{worker}/complete"), &body));
+        assert_eq!(json_of(&resp).get("accepted").unwrap().as_bool(), Some(true));
+        let resp = route(&s, authed_req("POST", &format!("/api/workers/{worker}/complete"), &body));
+        assert_eq!(json_of(&resp).get("accepted").unwrap().as_bool(), Some(false));
+
+        // the buffered result is waiting for the Carrier's poll
+        assert_eq!(
+            w.take_result(handle).unwrap().get("ok").and_then(|v| v.as_bool()),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn worker_unknown_id_is_404_and_bad_bodies_400() {
+        let s = worker_state();
+        let resp = route(&s, authed_req("POST", "/api/workers/999999/lease", r#"{"max": 1}"#));
+        assert_eq!(resp.status, 404);
+        let resp = route(&s, authed_req("POST", "/api/workers/999999/heartbeat", r#"{"leases": []}"#));
+        assert_eq!(resp.status, 404);
+        assert_eq!(route(&s, authed_req("POST", "/api/workers", "notjson")).status, 400);
+        assert_eq!(
+            route(&s, authed_req("POST", "/api/workers", r#"{"name": "w"}"#)).status,
+            400,
+            "kinds are required"
+        );
+        assert_eq!(
+            route(&s, authed_req("POST", "/api/workers/abc/lease", "{}")).status,
+            400
+        );
+        // complete with a missing tuple is a 400, not a silent reject
+        let resp = route(&s, authed_req("POST", "/api/workers/1/complete", r#"{"epoch": 1}"#));
+        assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn worker_reregister_bumps_epoch_and_health_reports_fleet() {
+        let s = worker_state();
+        let resp = route(
+            &s,
+            authed_req("POST", "/api/workers", r#"{"name": "w1", "kinds": ["Noop"]}"#),
+        );
+        let j = json_of(&resp);
+        let worker = j.get("worker").unwrap().as_u64().unwrap();
+        let resp = route(
+            &s,
+            authed_req("POST", "/api/workers", r#"{"name": "w1", "kinds": ["Noop"]}"#),
+        );
+        let j = json_of(&resp);
+        assert_eq!(j.get("worker").unwrap().as_u64(), Some(worker), "same name, same id");
+        assert_eq!(j.get("epoch").unwrap().as_u64(), Some(2), "rejoin bumps the epoch");
+
+        let mut r = authed_req("GET", "/api/health", "");
+        r.headers.clear();
+        let resp = route(&s, r);
+        let j = json_of(&resp);
+        assert_eq!(
+            j.get_path(&["workers", "registered"]).and_then(|v| v.as_u64()),
+            Some(1)
+        );
+        let fleet = j.get_path(&["workers", "workers"]).unwrap().as_arr().unwrap();
+        assert_eq!(fleet.len(), 1);
+        assert_eq!(fleet[0].get("epoch").and_then(|v| v.as_u64()), Some(2));
+    }
+
+    #[test]
+    fn worker_routes_require_auth() {
+        let s = worker_state();
+        let mut r = authed_req("POST", "/api/workers", r#"{"name": "w", "kinds": ["Noop"]}"#);
+        r.headers.clear();
+        assert_eq!(route(&s, r).status, 401);
     }
 }

@@ -1,0 +1,421 @@
+//! The `idds work` worker process: the remote half of the distributed
+//! executor protocol.
+//!
+//! A worker owns no durable state. It registers with the head service
+//! (`POST /api/workers`) advertising the Work kinds its local
+//! [`ExecutorSet`] can run, then loops: lease a batch of queued Works,
+//! execute each through the local executor, and report completions. While
+//! a Work runs, the worker heartbeats every held lease so the deadline
+//! keeps moving; the moment the process dies (kill -9 included) the
+//! heartbeats stop, the leases expire on the head, and the broker
+//! redelivers the Works to whoever leases next — that is the entire
+//! failover story, no head-side liveness detector required.
+//!
+//! Crash/restart semantics worth knowing when reading the loop:
+//!
+//! - **Head restart**: the registry is in-memory, so leasing starts
+//!   answering 404. The worker re-registers (same name → same id, epoch
+//!   bumped) and continues; the queued Works themselves are durable in
+//!   the broker and survive on the head's side.
+//! - **Worker rejoin**: the epoch bump invalidates any leases the previous
+//!   incarnation of this name still held — its late completions are
+//!   rejected as stale, so a zombie twin cannot double-complete.
+//! - **Completion retry**: `complete` is idempotent on the head
+//!   (duplicate/stale reports answer `accepted: false`), so the worker
+//!   retries a completion whose response was lost without risk.
+//!
+//! Test hooks: a Work whose params carry `delay_ms` sleeps that long
+//! before executing (holding the lease open — how the kill/rejoin
+//! harness makes a lease worth killing), and the `worker.complete`
+//! failpoint (see [`crate::persist::failpoints`]) makes the worker drop a
+//! finished Work on the floor instead of reporting it — simulating a
+//! crash in the gap between doing the work and reporting it.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::daemons::executors::ExecutorSet;
+use crate::persist::failpoints;
+use crate::rest::client::{Client, WorkerRegistration};
+use crate::util::json::Json;
+
+/// Knobs for one worker process; see `workers.*` config keys.
+pub struct WorkerOptions {
+    /// Stable identity: re-registering under the same name rejoins as the
+    /// same worker id with a bumped epoch.
+    pub name: String,
+    /// Seconds between lease renewals while Works execute.
+    pub heartbeat_s: f64,
+    /// Max leases claimed per request.
+    pub lease_batch: usize,
+    /// Idle sleep when the queue is empty.
+    pub idle_sleep_ms: u64,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions {
+            name: "worker".to_string(),
+            heartbeat_s: 1.0,
+            lease_batch: 4,
+            idle_sleep_ms: 20,
+        }
+    }
+}
+
+/// What one worker loop did, for logs and tests.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct WorkerStats {
+    pub leased: u64,
+    pub completed: u64,
+    /// Completions the head rejected as duplicate/stale — not errors.
+    pub rejected: u64,
+    /// Works dropped by the `worker.complete` failpoint.
+    pub faulted: u64,
+    /// Times the loop re-registered after the head forgot us.
+    pub reregistered: u64,
+}
+
+/// Run the worker loop until `stop` is set (or the registration can never
+/// be established). Returns the loop's lifetime stats.
+pub fn run(
+    client: &Client,
+    executors: &ExecutorSet,
+    opts: &WorkerOptions,
+    stop: &AtomicBool,
+) -> Result<WorkerStats> {
+    let kinds: Vec<&str> = executors.kinds();
+    anyhow::ensure!(!kinds.is_empty(), "worker has no executors to advertise");
+    let mut stats = WorkerStats::default();
+    let mut reg = register_until(client, &opts.name, &kinds, stop)?;
+    let Some(mut current) = reg.take() else {
+        return Ok(stats); // stopped before the head ever answered
+    };
+    log::info!(
+        "worker '{}' registered: id {} epoch {} (lease timeout {:.1}s, kinds {:?})",
+        opts.name,
+        current.worker,
+        current.epoch,
+        current.lease_timeout_s,
+        kinds
+    );
+
+    let heartbeat = Duration::from_secs_f64(opts.heartbeat_s.max(0.05));
+    while !stop.load(Ordering::SeqCst) {
+        let grants = match client.lease_work(current.worker, opts.lease_batch.max(1)) {
+            Ok(g) => g,
+            Err(e) if is_unknown_worker(&e) => {
+                // head restarted (in-memory registry wiped): rejoin under
+                // the same name and keep going — queued work survived
+                match register_until(client, &opts.name, &kinds, stop)? {
+                    Some(r) => {
+                        log::warn!(
+                            "head forgot worker '{}'; re-registered as id {} epoch {}",
+                            opts.name,
+                            r.worker,
+                            r.epoch
+                        );
+                        stats.reregistered += 1;
+                        current = r;
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            Err(e) => {
+                // transient transport trouble: back off one heartbeat and
+                // retry — the lease queue is durable, nothing is lost
+                log::warn!("lease request failed ({e:#}); retrying");
+                sleep_unless_stopped(heartbeat, stop);
+                continue;
+            }
+        };
+        if grants.is_empty() {
+            sleep_unless_stopped(Duration::from_millis(opts.idle_sleep_ms), stop);
+            continue;
+        }
+        stats.leased += grants.len() as u64;
+
+        // Execute one grant at a time, heartbeating EVERY held lease (the
+        // running one and the ones still waiting their turn) so a slow
+        // Work at the front of the batch cannot expire the ones behind it.
+        let mut held: VecDeque<_> = grants.into();
+        while let Some(grant) = held.pop_front() {
+            if stop.load(Ordering::SeqCst) {
+                return Ok(stats); // held leases expire on their own
+            }
+            let mut ids: Vec<u64> = vec![grant.lease];
+            ids.extend(held.iter().map(|g| g.lease));
+            let result = execute(client, executors, current.worker, &ids, heartbeat, &grant, stop);
+
+            if failpoints::check("worker.complete").is_err() {
+                // injected crash-before-report: the work was done but the
+                // head never hears about it; the lease expires and the
+                // Work redelivers to a healthy worker
+                log::warn!(
+                    "failpoint worker.complete: dropping finished work (lease {})",
+                    grant.lease
+                );
+                stats.faulted += 1;
+                continue;
+            }
+
+            match report(client, &current, &grant, &result, heartbeat, stop) {
+                Some(true) => stats.completed += 1,
+                Some(false) => stats.rejected += 1,
+                None => {} // gave up (stopping, or head unreachable)
+            }
+        }
+    }
+    Ok(stats)
+}
+
+/// Register, retrying on transport errors, until it works or `stop` is
+/// set. `Ok(None)` means stopped.
+fn register_until(
+    client: &Client,
+    name: &str,
+    kinds: &[&str],
+    stop: &AtomicBool,
+) -> Result<Option<WorkerRegistration>> {
+    let mut last_err = None;
+    for _ in 0..600 {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        match client.register_worker(name, kinds) {
+            Ok(r) => return Ok(Some(r)),
+            Err(e) => {
+                log::debug!("register_worker failed ({e:#}); retrying");
+                last_err = Some(e);
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+    Err(last_err.unwrap_or_else(|| anyhow::anyhow!("registration never attempted")))
+        .context("registering worker")
+}
+
+/// Run one Work through the local executor, heartbeating `ids` while it
+/// sleeps (the `delay_ms` hook) and while the executor runs. Returns the
+/// result to report; executor failures become `{"error": ...}` results,
+/// matching what the in-process Runtime path reports.
+fn execute(
+    client: &Client,
+    executors: &ExecutorSet,
+    worker: u64,
+    ids: &[u64],
+    heartbeat: Duration,
+    grant: &crate::broker::lease::LeaseGrant,
+    stop: &AtomicBool,
+) -> Json {
+    // hold the lease open for tests: sleep in heartbeat-sized slices
+    if let Some(ms) = grant.work.get_path(&["params", "delay_ms"]).and_then(|v| v.as_f64()) {
+        let until = Instant::now() + Duration::from_millis(ms.max(0.0) as u64);
+        while Instant::now() < until && !stop.load(Ordering::SeqCst) {
+            let left = until.saturating_duration_since(Instant::now());
+            std::thread::sleep(left.min(heartbeat));
+            let _ = client.worker_heartbeat(worker, ids);
+        }
+    }
+    let Some(exec) = executors.get(&grant.kind) else {
+        return Json::obj().set("error", format!("no executor for kind '{}'", grant.kind));
+    };
+    let handle = match exec.submit(&grant.work) {
+        Ok(h) => h,
+        Err(e) => return Json::obj().set("error", format!("submit failed: {e:#}")),
+    };
+    let mut last_beat = Instant::now();
+    loop {
+        match exec.poll(handle) {
+            Ok(Some(result)) => return result,
+            Ok(None) => {
+                if stop.load(Ordering::SeqCst) {
+                    // abandoned mid-run: report nothing, let the lease
+                    // expire so another worker redoes it cleanly
+                    return Json::obj().set("error", "worker stopped mid-run");
+                }
+                if last_beat.elapsed() >= heartbeat {
+                    let _ = client.worker_heartbeat(worker, ids);
+                    last_beat = Instant::now();
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Json::obj().set("error", format!("poll failed: {e:#}")),
+        }
+    }
+}
+
+/// Report one completion, retrying transport failures (safe: the head's
+/// complete is idempotent). `Some(accepted)` on an answer, `None` when
+/// stopping or the head stayed unreachable.
+fn report(
+    client: &Client,
+    reg: &WorkerRegistration,
+    grant: &crate::broker::lease::LeaseGrant,
+    result: &Json,
+    heartbeat: Duration,
+    stop: &AtomicBool,
+) -> Option<bool> {
+    for attempt in 0..5 {
+        if stop.load(Ordering::SeqCst) && attempt > 0 {
+            return None;
+        }
+        match client.complete_work(reg.worker, reg.epoch, grant.lease, grant.handle, result) {
+            Ok(accepted) => {
+                if !accepted {
+                    log::info!(
+                        "completion for lease {} rejected (duplicate or stale) — moving on",
+                        grant.lease
+                    );
+                }
+                return Some(accepted);
+            }
+            Err(e) => {
+                log::warn!("complete_work failed ({e:#}); retrying");
+                sleep_unless_stopped(heartbeat, stop);
+            }
+        }
+    }
+    None
+}
+
+/// Does this client error look like the head answering 404 on a worker
+/// route (it no longer knows our id)? The client formats non-2xx answers
+/// as `"<method> <path> -> <status>: ..."`.
+fn is_unknown_worker(e: &anyhow::Error) -> bool {
+    e.to_string().contains("-> 404")
+}
+
+fn sleep_unless_stopped(d: Duration, stop: &AtomicBool) {
+    let until = Instant::now() + d;
+    while Instant::now() < until && !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(5).min(d));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::broker::lease::WorkerRegistry;
+    use crate::broker::Broker;
+    use crate::config::Config;
+    use crate::daemons::executors::NoopExecutor;
+    use crate::metrics::Registry;
+    use crate::rest::{serve, ServerState};
+    use crate::store::Store;
+    use crate::util::clock::WallClock;
+    use crate::workflow::WorkKind;
+
+    /// Head-in-miniature over a real socket: store + broker + registry
+    /// behind the REST server, no daemons.
+    fn head() -> (crate::rest::http::HttpServer, WorkerRegistry) {
+        let clock = Arc::new(WallClock::new());
+        let broker = Broker::new(clock.clone());
+        let registry = WorkerRegistry::new(broker.clone(), clock.clone(), Registry::default());
+        let state = ServerState::new(
+            Store::new(clock.clone()),
+            broker,
+            Registry::default(),
+            &Config::defaults(),
+        )
+        .with_workers(registry.clone());
+        let server = serve(state, &Config::defaults()).unwrap();
+        (server, registry)
+    }
+
+    #[test]
+    fn worker_loop_drains_a_queue_and_stops() {
+        let (server, registry) = head();
+        let client = Client::new(server.addr, "dev-token");
+        let executors = ExecutorSet::default()
+            .with(WorkKind::Noop, Arc::new(NoopExecutor::default()));
+
+        let mut handles = Vec::new();
+        for i in 0..6 {
+            let h = crate::util::next_id();
+            handles.push(h);
+            registry.enqueue(
+                "Noop",
+                h,
+                &Json::obj().set(
+                    "params",
+                    Json::obj().set("result", Json::obj().set("i", i as f64)),
+                ),
+            );
+        }
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let stopper = stop.clone();
+        let reg2 = registry.clone();
+        let hs = handles.clone();
+        // stop the loop once every result is buffered head-side
+        let watcher = std::thread::spawn(move || {
+            let deadline = Instant::now() + Duration::from_secs(30);
+            loop {
+                let buffered = reg2
+                    .health_json()
+                    .get("buffered_results")
+                    .and_then(|v| v.as_u64())
+                    .unwrap_or(0);
+                if buffered == hs.len() as u64 {
+                    break;
+                }
+                assert!(Instant::now() < deadline, "worker never finished the queue");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            stopper.store(true, Ordering::SeqCst);
+        });
+
+        let opts = WorkerOptions {
+            name: "unit-worker".to_string(),
+            heartbeat_s: 0.1,
+            lease_batch: 3,
+            idle_sleep_ms: 5,
+        };
+        let stats = run(&client, &executors, &opts, &stop).unwrap();
+        watcher.join().unwrap();
+        assert_eq!(stats.completed, 6);
+        assert_eq!(stats.rejected, 0);
+        for (i, h) in handles.iter().enumerate() {
+            let r = registry.take_result(*h).expect("result buffered");
+            assert_eq!(r.get("i").and_then(|v| v.as_f64()), Some(i as f64));
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn worker_reports_error_result_for_unknown_kind() {
+        let (server, registry) = head();
+        let client = Client::new(server.addr, "dev-token");
+        // the worker only runs Noop, but the queue hands it a Decision
+        let executors = ExecutorSet::default()
+            .with(WorkKind::Noop, Arc::new(NoopExecutor::default()));
+        let reg = client.register_worker("unit-worker-2", &["Decision"]).unwrap();
+        let h = crate::util::next_id();
+        registry.enqueue("Decision", h, &Json::obj());
+        let grants = client.lease_work(reg.worker, 1).unwrap();
+        assert_eq!(grants.len(), 1);
+        let stop = AtomicBool::new(false);
+        let result = execute(
+            &client,
+            &executors,
+            reg.worker,
+            &[grants[0].lease],
+            Duration::from_millis(100),
+            &grants[0],
+            &stop,
+        );
+        assert!(
+            result.get("error").and_then(|v| v.as_str()).unwrap().contains("no executor"),
+            "{result:?}"
+        );
+        server.stop();
+    }
+}

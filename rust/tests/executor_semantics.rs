@@ -1,0 +1,325 @@
+//! Pre-rework executor semantics suite (ISSUE 8, satellite 1).
+//!
+//! Written against the *in-process* `ExecutorSet` before the distributed
+//! worker rework and required to pass unchanged after it: these tests pin
+//! the submit/poll/poll_many contracts every `Executor` implementation —
+//! local or remote — must keep, plus the Carrier's tick-batched use of
+//! `poll_many`. If the rework changes any observable behavior here, the
+//! rework is wrong, not the test.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use idds::broker::Broker;
+use idds::daemons::executors::{Executor, ExecutorSet, NoopExecutor, RuntimeExecutor};
+use idds::daemons::{pump, Pipeline};
+use idds::metrics::Registry;
+use idds::runtime::{default_artifacts_dir, EngineHandle};
+use idds::store::{RequestKind, RequestStatus, Store, TransformStatus};
+use idds::util::clock::WallClock;
+use idds::util::json::Json;
+use idds::workflow::{WorkKind, WorkTemplate, Workflow};
+
+fn echo_work(x: f64) -> Json {
+    Json::obj().set("params", Json::obj().set("result", Json::obj().set("x", x)))
+}
+
+// ---------------------------------------------------------------------------
+// submit / poll contracts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn noop_submit_then_poll_echoes_params_result() {
+    let e = NoopExecutor::default();
+    let h = e.submit(&echo_work(7.0)).unwrap();
+    let r = e.poll(h).unwrap().expect("noop completes by the first poll");
+    assert_eq!(r.get("x").unwrap().as_f64(), Some(7.0));
+}
+
+#[test]
+fn noop_result_defaults_to_empty_object_without_params_result() {
+    let e = NoopExecutor::default();
+    let h = e.submit(&Json::obj()).unwrap();
+    let r = e.poll(h).unwrap().unwrap();
+    assert!(matches!(r, Json::Obj(ref m) if m.is_empty()), "{r:?}");
+}
+
+#[test]
+fn poll_consumes_the_handle() {
+    // A completed handle is delivered exactly once; the second poll sees
+    // nothing. The Carrier relies on this: it transitions the processing
+    // on the delivering poll and never re-observes the result.
+    let e = NoopExecutor::default();
+    let h = e.submit(&echo_work(1.0)).unwrap();
+    assert!(e.poll(h).unwrap().is_some());
+    assert!(e.poll(h).unwrap().is_none(), "result must be consumed");
+}
+
+#[test]
+fn noop_unknown_handle_is_none_not_error() {
+    let e = NoopExecutor::default();
+    assert!(e.poll(123_456_789).unwrap().is_none());
+}
+
+#[test]
+fn distinct_submissions_get_distinct_handles() {
+    let e = NoopExecutor::default();
+    let mut handles = std::collections::HashSet::new();
+    for i in 0..100 {
+        assert!(handles.insert(e.submit(&echo_work(i as f64)).unwrap()));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// poll_many contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn poll_many_matches_per_handle_poll_order_and_results() {
+    let e = NoopExecutor::default();
+    let h1 = e.submit(&echo_work(1.0)).unwrap();
+    let h2 = e.submit(&echo_work(2.0)).unwrap();
+    let out = e.poll_many(&[h1, h2, 999]);
+    assert_eq!(out.len(), 3);
+    assert_eq!(out[0].0, h1);
+    assert_eq!(out[1].0, h2);
+    assert_eq!(out[2].0, 999);
+    assert_eq!(out[0].1.as_ref().unwrap().as_ref().unwrap().get("x").unwrap().as_f64(), Some(1.0));
+    assert_eq!(out[1].1.as_ref().unwrap().as_ref().unwrap().get("x").unwrap().as_f64(), Some(2.0));
+    assert!(out[2].1.as_ref().unwrap().is_none());
+}
+
+/// An executor using only the *default* `poll_many` (the per-handle loop)
+/// must agree with an explicit override — the Carrier treats them
+/// interchangeably.
+struct DefaultPollMany(NoopExecutor);
+
+impl Executor for DefaultPollMany {
+    fn submit(&self, work: &Json) -> anyhow::Result<u64> {
+        self.0.submit(work)
+    }
+    fn poll(&self, handle: u64) -> anyhow::Result<Option<Json>> {
+        self.0.poll(handle)
+    }
+    // poll_many: trait default
+}
+
+#[test]
+fn default_poll_many_agrees_with_override() {
+    let d = DefaultPollMany(NoopExecutor::default());
+    let h1 = d.submit(&echo_work(3.0)).unwrap();
+    let h2 = d.submit(&echo_work(4.0)).unwrap();
+    let out = d.poll_many(&[h1, h2]);
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].1.as_ref().unwrap().as_ref().unwrap().get("x").unwrap().as_f64(), Some(3.0));
+    assert_eq!(out[1].1.as_ref().unwrap().as_ref().unwrap().get("x").unwrap().as_f64(), Some(4.0));
+}
+
+// ---------------------------------------------------------------------------
+// ExecutorSet dispatch
+// ---------------------------------------------------------------------------
+
+#[test]
+fn executor_set_dispatches_by_kind_string() {
+    let set = ExecutorSet::default()
+        .with(WorkKind::Noop, Arc::new(NoopExecutor::default()))
+        .with(WorkKind::Decision, Arc::new(NoopExecutor::default()));
+    assert!(set.get("Noop").is_some());
+    assert!(set.get("Decision").is_some());
+    assert!(set.get("HpoTraining").is_none());
+    assert!(set.get("nonsense").is_none());
+}
+
+// ---------------------------------------------------------------------------
+// Runtime pool completion observed by polling
+// ---------------------------------------------------------------------------
+
+#[test]
+fn runtime_pool_completion_observed_by_polling() {
+    // Needs the AOT artifacts; skip (loudly) when they are absent so the
+    // suite still runs in artifact-less containers.
+    let engine = match EngineHandle::start(&default_artifacts_dir()) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP runtime_pool_completion_observed_by_polling: {e:#}");
+            return;
+        }
+    };
+    let exec = RuntimeExecutor::new(engine, 2);
+    let work = Json::obj().set("kind", "HpoTraining").set(
+        "params",
+        Json::obj()
+            .set("log_lr", -2.0)
+            .set("momentum", 0.9)
+            .set("log_l2", -4.0)
+            .set("log_clip", 0.0)
+            .set("seed", 42u64),
+    );
+    let h = exec.submit(&work).unwrap();
+    // Completion is only ever observed by polling — spin until the pool
+    // worker finishes.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    let result = loop {
+        match exec.poll(h).unwrap() {
+            Some(r) => break r,
+            None => {
+                assert!(std::time::Instant::now() < deadline, "training never completed");
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+    };
+    assert!(result.get("error").map(Json::is_null).unwrap_or(true), "{result:?}");
+    assert!(result.get("val_loss").and_then(Json::as_f64).is_some(), "{result:?}");
+    // consumed after delivery, and now unknown → hard error for Runtime
+    assert!(exec.poll(h).is_err(), "runtime executor forgets delivered handles");
+}
+
+#[test]
+fn runtime_rejects_unknown_kind_via_failed_result() {
+    let engine = match EngineHandle::start(&default_artifacts_dir()) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP runtime_rejects_unknown_kind_via_failed_result: {e:#}");
+            return;
+        }
+    };
+    let exec = RuntimeExecutor::new(engine, 1);
+    let h = exec.submit(&Json::obj().set("kind", "Noop")).unwrap();
+    let r = exec.poll(h).unwrap().expect("failure is reported as a result");
+    assert!(!r.get("error").map(Json::is_null).unwrap_or(true), "{r:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Carrier tick batching via poll_many
+// ---------------------------------------------------------------------------
+
+/// Counts calls into an inner executor and can hold completions back so
+/// in-flight handles pile up across Carrier ticks.
+struct CountingExecutor {
+    inner: NoopExecutor,
+    released: AtomicBool,
+    submits: AtomicUsize,
+    polls: AtomicUsize,
+    poll_manys: AtomicUsize,
+    batch_sizes: Mutex<Vec<usize>>,
+}
+
+impl CountingExecutor {
+    fn new() -> Self {
+        CountingExecutor {
+            inner: NoopExecutor::default(),
+            released: AtomicBool::new(false),
+            submits: AtomicUsize::new(0),
+            polls: AtomicUsize::new(0),
+            poll_manys: AtomicUsize::new(0),
+            batch_sizes: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl Executor for CountingExecutor {
+    fn submit(&self, work: &Json) -> anyhow::Result<u64> {
+        self.submits.fetch_add(1, Ordering::SeqCst);
+        self.inner.submit(work)
+    }
+
+    fn poll(&self, handle: u64) -> anyhow::Result<Option<Json>> {
+        self.polls.fetch_add(1, Ordering::SeqCst);
+        if !self.released.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        self.inner.poll(handle)
+    }
+
+    fn poll_many(&self, handles: &[u64]) -> Vec<(u64, anyhow::Result<Option<Json>>)> {
+        self.poll_manys.fetch_add(1, Ordering::SeqCst);
+        self.batch_sizes.lock().unwrap().push(handles.len());
+        if !self.released.load(Ordering::SeqCst) {
+            return handles.iter().map(|&h| (h, Ok(None))).collect();
+        }
+        self.inner.poll_many(handles)
+    }
+}
+
+#[test]
+fn carrier_polls_in_flight_handles_as_one_batch_per_tick() {
+    const WORKS: usize = 8;
+    let exec = Arc::new(CountingExecutor::new());
+    let clock = Arc::new(WallClock::new());
+    let p = Pipeline::new(
+        Store::new(clock.clone()),
+        Broker::new(clock),
+        Registry::default(),
+        ExecutorSet::default().with(WorkKind::Noop, exec.clone() as Arc<dyn Executor>),
+    );
+    let mut wf = Workflow::new("fan");
+    for i in 0..WORKS {
+        wf = wf.add_template(WorkTemplate::new(&format!("w{i}"))).entry(&format!("w{i}"));
+    }
+    let req = p.store.add_request("r", "u", RequestKind::Workflow, wf.to_json());
+    let (clerk, marsh, tfr, carrier, conductor) = p.daemons();
+
+    // Phase 1: completions held back. Everything gets submitted; the
+    // Carrier keeps polling but nothing finishes, so every tick sees the
+    // full in-flight set.
+    pump(&[&clerk, &marsh, &tfr, &carrier], 50);
+    assert_eq!(exec.submits.load(Ordering::SeqCst), WORKS, "all works submitted");
+    assert_eq!(exec.polls.load(Ordering::SeqCst), 0, "Carrier must never use per-handle poll");
+    let calls_held = exec.poll_manys.load(Ordering::SeqCst);
+    assert!(calls_held >= 1);
+    {
+        let sizes = exec.batch_sizes.lock().unwrap();
+        assert!(
+            sizes.iter().any(|&s| s == WORKS),
+            "a steady-state tick batches all {WORKS} in-flight handles into one poll_many: {sizes:?}"
+        );
+        // Batching invariant: one poll_many per kind per tick, never one
+        // call per handle. Total handles polled across calls must exceed
+        // the call count by the batching factor.
+        let polled: usize = sizes.iter().sum();
+        assert!(
+            polled >= sizes.len() * WORKS / 2,
+            "per-tick batches collapsed to per-handle calls: {sizes:?}"
+        );
+    }
+
+    // Phase 2: release completions and run to quiescence.
+    exec.released.store(true, Ordering::SeqCst);
+    pump(&[&clerk, &marsh, &tfr, &carrier, &conductor], 1000);
+    assert_eq!(p.store.get_request(req).unwrap().status, RequestStatus::Finished);
+    for tf in p.store.transforms_of_request(req) {
+        assert_eq!(p.store.get_transform(tf).unwrap().status, TransformStatus::Finished);
+    }
+    assert_eq!(exec.polls.load(Ordering::SeqCst), 0);
+}
+
+#[test]
+fn carrier_routes_each_kind_to_its_executor_and_finishes() {
+    // Two kinds, two executors, one workflow — results land on the right
+    // transforms and the request finishes. (Decision works are routed to a
+    // NoopExecutor here: dispatch is by kind string only.)
+    let noop = Arc::new(CountingExecutor::new());
+    noop.released.store(true, Ordering::SeqCst);
+    let dec = Arc::new(CountingExecutor::new());
+    dec.released.store(true, Ordering::SeqCst);
+    let clock = Arc::new(WallClock::new());
+    let p = Pipeline::new(
+        Store::new(clock.clone()),
+        Broker::new(clock),
+        Registry::default(),
+        ExecutorSet::default()
+            .with(WorkKind::Noop, noop.clone() as Arc<dyn Executor>)
+            .with(WorkKind::Decision, dec.clone() as Arc<dyn Executor>),
+    );
+    let wf = Workflow::new("mixed")
+        .add_template(WorkTemplate::new("n"))
+        .add_template(WorkTemplate::new("d").kind(WorkKind::Decision))
+        .entry("n")
+        .entry("d");
+    let req = p.store.add_request("r", "u", RequestKind::Workflow, wf.to_json());
+    let (clerk, marsh, tfr, carrier, conductor) = p.daemons();
+    pump(&[&clerk, &marsh, &tfr, &carrier, &conductor], 1000);
+    assert_eq!(p.store.get_request(req).unwrap().status, RequestStatus::Finished);
+    assert_eq!(noop.submits.load(Ordering::SeqCst), 1);
+    assert_eq!(dec.submits.load(Ordering::SeqCst), 1);
+}

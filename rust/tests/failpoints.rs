@@ -267,6 +267,103 @@ fn truncated_checkpoint_is_sidelined_and_recovery_falls_back() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Worker-side fault mid-lease: a worker finishes a Work but the
+/// `worker.complete` failpoint eats the report — the crash-in-the-gap
+/// between doing the work and telling the head. The lease must expire,
+/// the Work must redeliver to a healthy worker, and the head must accept
+/// exactly ONE completion for it — no duplicate transform-status
+/// transition, however many times the Work actually executed.
+#[test]
+fn worker_complete_fault_redelivers_without_duplicate_completion() {
+    let _g = serial();
+    use idds::broker::lease::WorkerRegistry;
+    use idds::daemons::executors::{ExecutorSet, NoopExecutor, RemoteExecutor};
+    use idds::daemons::{AgentHost, Daemon, Pipeline};
+    use idds::workflow::{WorkKind, WorkTemplate, Workflow};
+
+    // head: store + broker (short lease timeout so the drill runs in
+    // milliseconds) + registry + the full daemon pipeline, with Noop
+    // delegated to the remote fleet — the same wiring cmd_serve does
+    // under workers.remote_kinds=Noop
+    let clock = Arc::new(WallClock::new());
+    let s = store();
+    let broker = Broker::new(clock.clone()).with_redelivery_timeout(0.3);
+    let metrics = Registry::default();
+    let registry = WorkerRegistry::new(broker.clone(), clock, metrics.clone());
+    let executors = ExecutorSet::default().with(
+        WorkKind::Noop,
+        Arc::new(RemoteExecutor::new(registry.clone(), WorkKind::Noop)),
+    );
+    let pipeline = Pipeline::new(s.clone(), broker.clone(), metrics.clone(), executors);
+    let (clerk, marsh, tfr, carrier, conductor) = pipeline.daemons();
+    let daemons: Vec<Arc<dyn Daemon>> = vec![
+        Arc::new(clerk),
+        Arc::new(marsh),
+        Arc::new(tfr),
+        Arc::new(carrier),
+        Arc::new(conductor),
+    ];
+    let host = AgentHost::start(daemons, std::time::Duration::from_millis(2));
+    let cfg = Config::defaults();
+    let server = serve(
+        ServerState::new(s.clone(), broker, metrics.clone(), &cfg)
+            .with_workers(registry.clone()),
+        &cfg,
+    )
+    .unwrap();
+
+    // the next completion report — whichever worker thread gets there
+    // first — is dropped on the floor
+    failpoints::arm("worker.complete", Some(1));
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut workers = Vec::new();
+    for name in ["fp-worker-a", "fp-worker-b"] {
+        let stop = stop.clone();
+        let addr = server.addr;
+        workers.push(std::thread::spawn(move || {
+            let client = idds::rest::Client::new(addr, "dev-token");
+            let executors = ExecutorSet::default()
+                .with(WorkKind::Noop, Arc::new(NoopExecutor::default()));
+            let opts = idds::worker::WorkerOptions {
+                name: name.to_string(),
+                heartbeat_s: 0.05,
+                lease_batch: 2,
+                idle_sleep_ms: 5,
+            };
+            idds::worker::run(&client, &executors, &opts, &stop).unwrap()
+        }));
+    }
+
+    let client = idds::rest::Client::new(server.addr, "dev-token");
+    let wf = Workflow::new("w").add_template(WorkTemplate::new("a")).entry("a");
+    let id = client.submit("fp-remote", "u", RequestKind::Workflow, &wf).unwrap();
+    // the campaign completes despite the eaten report: the lease expired
+    // and the Work redelivered to a worker whose report got through
+    let status = client.wait_terminal(id, std::time::Duration::from_secs(30)).unwrap();
+    assert_eq!(status, idds::store::RequestStatus::Finished);
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let stats: Vec<idds::worker::WorkerStats> =
+        workers.into_iter().map(|w| w.join().unwrap()).collect();
+    let faulted: u64 = stats.iter().map(|st| st.faulted).sum();
+    let completed: u64 = stats.iter().map(|st| st.completed).sum();
+    assert_eq!(faulted, 1, "exactly one report was eaten: {stats:?}");
+    assert_eq!(completed, 1, "the redelivered Work completed exactly once: {stats:?}");
+    assert_eq!(
+        metrics.counter("workers.completions_accepted").get(),
+        1,
+        "one accepted completion → one transform-status transition"
+    );
+    assert_eq!(
+        metrics.counter("workers.completions_rejected").get(),
+        0,
+        "nobody even attempted a duplicate"
+    );
+    host.stop();
+    server.stop();
+}
+
 #[test]
 fn failpoints_armed_from_persist_options_spec() {
     let _g = serial();

@@ -1,0 +1,262 @@
+//! Flagship distributed-executor test: a head service in this process
+//! over a real socket, worker processes spawned from the `idds` binary
+//! (`idds work --connect ADDR`), and a carousel campaign that survives
+//! killing a worker mid-lease.
+//!
+//! The choreography, start to finish:
+//!
+//! 1. head starts with Noop delegated to the fleet (RemoteExecutor) and a
+//!    short lease timeout; worker A (`flagship-a`) connects;
+//! 2. a DataCarousel campaign of slow Noop Works (each holds its lease
+//!    open via `delay_ms`) is submitted; once health shows worker A
+//!    actually holding leases, A is killed — kill(9), no goodbye;
+//! 3. a healthy worker B joins, and A's name rejoins as a new process —
+//!    the head gives it the same worker id with a bumped epoch (asserted
+//!    via health), which is what invalidates the dead incarnation's leases;
+//! 4. the killed worker's leases expire (heartbeats stopped) and the
+//!    broker redelivers the Works; the campaign finishes;
+//! 5. exactly one `idds.work.finished` message exists per transform — the
+//!    at-least-once execution below collapsed to exactly-once completion.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use idds::broker::lease::WorkerRegistry;
+use idds::broker::Broker;
+use idds::config::Config;
+use idds::daemons::executors::{ExecutorSet, RemoteExecutor};
+use idds::daemons::{AgentHost, Daemon, Pipeline};
+use idds::metrics::Registry;
+use idds::rest::http::HttpServer;
+use idds::rest::{serve, Client, ServerState};
+use idds::store::{RequestKind, RequestStatus, Store};
+use idds::util::clock::WallClock;
+use idds::util::json::Json;
+use idds::workflow::{WorkKind, WorkTemplate, Workflow};
+
+const TOKEN: &str = "dev-token";
+/// Short enough that a killed worker's leases come back within the test,
+/// long enough that live workers heartbeating at 0.2s never lose one.
+const LEASE_TIMEOUT_S: f64 = 1.5;
+
+fn wait_until(what: &str, timeout: Duration, mut f: impl FnMut() -> bool) {
+    let deadline = Instant::now() + timeout;
+    while !f() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The head: store + broker + worker registry + full daemon pipeline +
+/// REST server, with Noop Works delegated to the remote fleet — the
+/// in-process equivalent of `idds serve --set workers.remote_kinds=Noop`.
+struct Head {
+    broker: Broker,
+    registry: WorkerRegistry,
+    metrics: Registry,
+    host: AgentHost,
+    server: HttpServer,
+    client: Client,
+}
+
+fn head() -> Head {
+    let clock = Arc::new(WallClock::new());
+    let store = Store::new(clock.clone());
+    let broker = Broker::new(clock.clone()).with_redelivery_timeout(LEASE_TIMEOUT_S);
+    let metrics = Registry::default();
+    let registry = WorkerRegistry::new(broker.clone(), clock, metrics.clone());
+    let executors = ExecutorSet::default().with(
+        WorkKind::Noop,
+        Arc::new(RemoteExecutor::new(registry.clone(), WorkKind::Noop)),
+    );
+    let pipeline = Pipeline::new(store.clone(), broker.clone(), metrics.clone(), executors);
+    let (c, m, t, ca, co) = pipeline.daemons();
+    let daemons: Vec<Arc<dyn Daemon>> =
+        vec![Arc::new(c), Arc::new(m), Arc::new(t), Arc::new(ca), Arc::new(co)];
+    let host = AgentHost::start(daemons, Duration::from_millis(2));
+    let cfg = Config::defaults();
+    let server = serve(
+        ServerState::new(store, broker.clone(), metrics.clone(), &cfg)
+            .with_workers(registry.clone()),
+        &cfg,
+    )
+    .unwrap();
+    let client = Client::new(server.addr, TOKEN);
+    Head { broker, registry, metrics, host, server, client }
+}
+
+impl Head {
+    /// The health row for a worker name, if it has registered.
+    fn worker_row(&self, name: &str) -> Option<Json> {
+        let fleet = self.registry.health_json();
+        fleet.get("workers")?.as_arr()?.iter().find(|w| {
+            w.get("name").and_then(|n| n.as_str()) == Some(name)
+        }).cloned()
+    }
+}
+
+/// Spawn an `idds work` process against the head. Fast heartbeats and a
+/// small batch keep the test's timings tight.
+fn spawn_worker(addr: std::net::SocketAddr, name: &str) -> std::process::Child {
+    std::process::Command::new(env!("CARGO_BIN_EXE_idds"))
+        .args([
+            "work",
+            "--connect",
+            &addr.to_string(),
+            "--name",
+            name,
+            "--set",
+            "workers.heartbeat_s=0.2",
+            "--set",
+            "workers.lease_batch=2",
+        ])
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawning idds work")
+}
+
+/// A carousel campaign of slow Noop Works: every template is an entry
+/// (all Works claimable at once) and each holds its lease open for a
+/// while via the worker's `delay_ms` hook — leases worth killing.
+fn campaign(works: usize, delay_ms: f64) -> Workflow {
+    let mut wf = Workflow::new("flagship-carousel");
+    for i in 0..works {
+        let name = format!("stage-{i}");
+        wf = wf
+            .add_template(
+                WorkTemplate::new(&name)
+                    .default("delay_ms", Json::Num(delay_ms))
+                    .default("result", Json::obj().set("stage", i as f64)),
+            )
+            .entry(&name);
+    }
+    wf
+}
+
+#[test]
+fn carousel_campaign_survives_killing_a_worker_mid_lease() {
+    const WORKS: usize = 6;
+    let head = head();
+    // subscribe before anything can finish: the broker drops publishes
+    // with no subscribers, and each carrier completion emits exactly one
+    // idds.work.finished message — our duplicate detector
+    let finished_sub = head.broker.subscribe("idds.work.finished");
+
+    let mut worker_a = spawn_worker(head.server.addr, "flagship-a");
+    let id = head
+        .client
+        .submit("flagship", "ops", RequestKind::DataCarousel, &campaign(WORKS, 800.0))
+        .unwrap();
+
+    // wait for A to actually hold work mid-flight, then kill it: no
+    // drain, no deregistration, heartbeats just stop
+    wait_until("worker A holding a lease", Duration::from_secs(30), || {
+        head.worker_row("flagship-a")
+            .and_then(|w| w.get("active_leases").and_then(|v| v.as_u64()))
+            .unwrap_or(0)
+            > 0
+    });
+    let epoch_at_kill = head
+        .worker_row("flagship-a")
+        .and_then(|w| w.get("epoch").and_then(|v| v.as_u64()))
+        .unwrap();
+    assert_eq!(epoch_at_kill, 1, "first registration is epoch 1");
+    worker_a.kill().expect("kill worker A");
+    worker_a.wait().expect("reap worker A");
+
+    // a healthy worker joins, and A's name rejoins as a fresh process
+    let mut worker_b = spawn_worker(head.server.addr, "flagship-b");
+    let mut worker_a2 = spawn_worker(head.server.addr, "flagship-a");
+    wait_until("A rejoining with a bumped epoch", Duration::from_secs(30), || {
+        head.worker_row("flagship-a")
+            .and_then(|w| w.get("epoch").and_then(|v| v.as_u64()))
+            == Some(2)
+    });
+
+    // the campaign completes: the killed worker's leases expired and the
+    // Works redelivered to the survivors
+    let status = head.client.wait_terminal(id, Duration::from_secs(120)).unwrap();
+    assert_eq!(status, RequestStatus::Finished, "campaign must finish after the kill");
+    assert!(
+        head.metrics.counter("workers.leases_redelivered").get() >= 1,
+        "the killed worker's leases must have been re-leased"
+    );
+
+    // exactly one finished message per transform, every one successful,
+    // no transform completed twice — at-least-once execution, exactly-once
+    // completion
+    // ack as we consume: an unacked delivery would itself redeliver after
+    // the broker timeout and masquerade as a duplicate completion
+    let mut finished = Vec::new();
+    let mut drain = |finished: &mut Vec<idds::broker::Delivery>| {
+        for d in head.broker.poll(finished_sub, 100) {
+            head.broker.ack(finished_sub, d.id);
+            finished.push(d);
+        }
+    };
+    wait_until("conductor delivering finished messages", Duration::from_secs(30), || {
+        drain(&mut finished);
+        finished.len() >= WORKS
+    });
+    // grace window: a duplicate would trail the real completions
+    std::thread::sleep(Duration::from_millis(300));
+    drain(&mut finished);
+    assert_eq!(finished.len(), WORKS, "one completion per Work, no duplicates");
+    let mut transforms: Vec<u64> = finished
+        .iter()
+        .map(|m| m.payload.get("transform_id").and_then(|v| v.as_u64()).unwrap())
+        .collect();
+    transforms.sort_unstable();
+    transforms.dedup();
+    assert_eq!(transforms.len(), WORKS, "every completion is a distinct transform");
+    for m in &finished {
+        assert_eq!(
+            m.payload.get("failed").and_then(|v| v.as_bool()),
+            Some(false),
+            "no Work may fail: {:?}",
+            m.payload
+        );
+        // the Noop echo made it through the remote round-trip intact
+        assert!(
+            m.payload.get_path(&["result", "stage"]).and_then(|v| v.as_f64()).is_some(),
+            "result payload survived the worker round-trip: {:?}",
+            m.payload
+        );
+    }
+
+    // fleet bookkeeping: two names, A's id reused across the rejoin
+    let fleet = head.registry.health_json();
+    assert_eq!(fleet.get("registered").and_then(|v| v.as_u64()), Some(2));
+    assert_eq!(
+        fleet.get("active_leases").and_then(|v| v.as_u64()),
+        Some(0),
+        "nothing left in flight after the campaign"
+    );
+
+    worker_b.kill().ok();
+    worker_b.wait().ok();
+    worker_a2.kill().ok();
+    worker_a2.wait().ok();
+    head.host.stop();
+    head.server.stop();
+}
+
+/// Sanity for the spawn path itself: a worker process registers, drains a
+/// quick campaign, and survives the head telling it nothing is queued.
+#[test]
+fn single_worker_process_completes_a_campaign() {
+    let head = head();
+    let mut worker = spawn_worker(head.server.addr, "solo");
+    let id = head
+        .client
+        .submit("solo-run", "ops", RequestKind::Workflow, &campaign(3, 0.0))
+        .unwrap();
+    let status = head.client.wait_terminal(id, Duration::from_secs(60)).unwrap();
+    assert_eq!(status, RequestStatus::Finished);
+    assert_eq!(head.metrics.counter("workers.completions_accepted").get(), 3);
+    worker.kill().ok();
+    worker.wait().ok();
+    head.host.stop();
+    head.server.stop();
+}

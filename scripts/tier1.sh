@@ -2,11 +2,15 @@
 # Tier-1 verify: release build + full test suite (see ROADMAP.md).
 # The crash-recovery suite additionally runs in release mode so the real
 # fsync/group-commit paths are exercised at speed, not just debug logic.
+# The multi-process worker suite (real sockets, spawned `idds work`
+# processes, kill -9 mid-lease) also runs in release so its lease/
+# heartbeat timings hold under load.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 cargo build --release
 cargo test -q
 cargo test --release -q --test persist_recovery
+cargo test --release -q --test workers
 
 # Docs gate: rustdoc warnings (dangling intra-doc links, malformed code
 # blocks, bad HTML in prose) are errors so the documentation pass cannot
