@@ -26,6 +26,12 @@ impl Config {
         c.put("rest.bind", Json::Str("127.0.0.1:0".into()));
         c.put("rest.workers", Json::Num(8.0));
         c.put("rest.auth_tokens", Json::Arr(vec![Json::Str("dev-token".into())]));
+        // connection admission + deadlines (see rest::http::ServerOptions)
+        c.put("rest.max_connections", Json::Num(10_240.0));
+        c.put("rest.max_inflight", Json::Num(512.0));
+        c.put("rest.header_timeout_s", Json::Num(10.0));
+        c.put("rest.body_timeout_s", Json::Num(30.0));
+        c.put("rest.idle_timeout_s", Json::Num(60.0));
         // daemons
         c.put("daemons.poll_interval_s", Json::Num(0.01));
         c.put("daemons.batch_size", Json::Num(256.0));

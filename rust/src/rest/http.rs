@@ -7,9 +7,11 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::metrics::Registry;
 use crate::util::pool::{PoolStats, ThreadPool};
 
 pub const MAX_BODY: usize = 64 * 1024 * 1024;
@@ -101,6 +103,7 @@ fn status_text(code: u16) -> &'static str {
         401 => "Unauthorized",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         409 => "Conflict",
         410 => "Gone",
         413 => "Payload Too Large",
@@ -143,6 +146,21 @@ fn parse_query(q: &str) -> Vec<(String, String)> {
         .collect()
 }
 
+/// Marker error for a declared `Content-Length` past [`MAX_BODY`]: the
+/// server answers 413 (not the generic 400) so clients can tell "shrink
+/// the payload" apart from "malformed request". Checked *before* the body
+/// is read, so an oversized declaration costs no bandwidth.
+#[derive(Debug, Clone, Copy)]
+struct PayloadTooLarge;
+
+impl std::fmt::Display for PayloadTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "declared body larger than {MAX_BODY} bytes")
+    }
+}
+
+impl std::error::Error for PayloadTooLarge {}
+
 /// Read one request off the stream; Ok(None) on clean EOF.
 pub fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>> {
     let mut line = String::new();
@@ -178,7 +196,7 @@ pub fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>
         }
     }
     if content_length > MAX_BODY {
-        bail!("body too large");
+        return Err(anyhow::Error::new(PayloadTooLarge));
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body)?;
@@ -221,6 +239,49 @@ pub fn write_response(
     Ok(())
 }
 
+/// Tuning knobs for [`HttpServer`]: handler pool size, admission limits,
+/// and the three connection deadlines. `rest::serve` builds this from the
+/// `rest.*` config keys; tests construct it directly.
+///
+/// The blocking server approximates all three deadlines with a single
+/// per-read socket timeout (the smallest of the three); `max_connections`
+/// / `max_inflight` admission control arrives with the nonblocking loop.
+#[derive(Clone)]
+pub struct ServerOptions {
+    /// Handler pool size (handlers block on mutexes and fsync, so they
+    /// never run on the I/O path).
+    pub workers: usize,
+    /// Open-connection ceiling; connections past it are answered with
+    /// `503` + `Retry-After` and closed instead of queueing unbounded.
+    pub max_connections: usize,
+    /// Dispatched-but-unanswered request ceiling across all connections;
+    /// requests past it get `503` + `Retry-After` on a live connection.
+    pub max_inflight: usize,
+    /// From first request byte to end of the header block.
+    pub header_timeout: Duration,
+    /// From end of headers to the last declared body byte; also bounds
+    /// how long a flushed-but-unread response may sit in the write buffer.
+    pub body_timeout: Duration,
+    /// Keep-alive connections idle longer than this are closed silently.
+    pub idle_timeout: Duration,
+    /// Destination for `rest.conn.*` counters/gauges/histograms.
+    pub metrics: Registry,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            workers: 8,
+            max_connections: 10_240,
+            max_inflight: 512,
+            header_timeout: Duration::from_secs(10),
+            body_timeout: Duration::from_secs(30),
+            idle_timeout: Duration::from_secs(60),
+            metrics: Registry::default(),
+        }
+    }
+}
+
 /// The server: accept loop on its own thread, handlers on a pool.
 pub struct HttpServer {
     pub addr: std::net::SocketAddr,
@@ -234,7 +295,11 @@ impl HttpServer {
     where
         H: Fn(Request) -> Response + Send + Sync + 'static,
     {
-        Self::serve_with_stats(bind, workers, Arc::new(PoolStats::default()), handler)
+        let opts = ServerOptions {
+            workers,
+            ..ServerOptions::default()
+        };
+        Self::serve_full(bind, opts, Arc::new(PoolStats::default()), handler)
     }
 
     /// [`serve`](Self::serve) with a caller-owned [`PoolStats`]: the
@@ -249,12 +314,46 @@ impl HttpServer {
     where
         H: Fn(Request) -> Response + Send + Sync + 'static,
     {
+        let opts = ServerOptions {
+            workers,
+            ..ServerOptions::default()
+        };
+        Self::serve_full(bind, opts, pool_stats, handler)
+    }
+
+    /// [`serve`](Self::serve) with explicit [`ServerOptions`] (timeouts,
+    /// admission limits, metrics registry) and default pool stats.
+    pub fn serve_with_options<H>(bind: &str, opts: ServerOptions, handler: H) -> Result<HttpServer>
+    where
+        H: Fn(Request) -> Response + Send + Sync + 'static,
+    {
+        Self::serve_full(bind, opts, Arc::new(PoolStats::default()), handler)
+    }
+
+    /// Fully-parameterized entry point: options plus shared pool stats.
+    pub fn serve_full<H>(
+        bind: &str,
+        opts: ServerOptions,
+        pool_stats: Arc<PoolStats>,
+        handler: H,
+    ) -> Result<HttpServer>
+    where
+        H: Fn(Request) -> Response + Send + Sync + 'static,
+    {
         let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
         let handler = Arc::new(handler);
+        let read_timeout = opts
+            .header_timeout
+            .min(opts.body_timeout)
+            .min(opts.idle_timeout)
+            .max(Duration::from_millis(1));
+        let accepted = opts.metrics.counter("rest.conn.accepted");
+        let closed = opts.metrics.counter("rest.conn.closed");
+        let workers = opts.workers;
         let accept_thread = std::thread::Builder::new()
             .name("http-accept".into())
             .spawn(move || {
@@ -262,9 +361,12 @@ impl HttpServer {
                 while !stop2.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            accepted.inc();
                             let handler = Arc::clone(&handler);
+                            let closed = Arc::clone(&closed);
                             pool.execute(move || {
-                                let _ = handle_conn(stream, handler);
+                                let _ = handle_conn(stream, read_timeout, handler);
+                                closed.inc();
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -301,10 +403,11 @@ impl Drop for HttpServer {
 
 fn handle_conn(
     stream: TcpStream,
+    read_timeout: Duration,
     handler: Arc<dyn Fn(Request) -> Response + Send + Sync>,
 ) -> Result<()> {
     stream.set_nonblocking(false)?;
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+    stream.set_read_timeout(Some(read_timeout))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
     let mut head = String::with_capacity(128);
@@ -312,13 +415,13 @@ fn handle_conn(
         let req = match read_request(&mut reader) {
             Ok(Some(r)) => r,
             Ok(None) => break,
-            Err(_) => {
-                let _ = write_response(
-                    &mut stream,
-                    &Response::text(400, "bad request"),
-                    false,
-                    &mut head,
-                );
+            Err(e) => {
+                let resp = if e.downcast_ref::<PayloadTooLarge>().is_some() {
+                    Response::text(413, "body too large")
+                } else {
+                    Response::text(400, "bad request")
+                };
+                let _ = write_response(&mut stream, &resp, false, &mut head);
                 break;
             }
         };

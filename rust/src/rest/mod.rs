@@ -80,7 +80,7 @@ use crate::util::json::{parse, Json};
 use crate::util::pool::PoolStats;
 
 pub use client::Client;
-pub use http::{HttpServer, Request, Response};
+pub use http::{HttpServer, Request, Response, ServerOptions};
 
 /// Shared state behind the REST handlers.
 #[derive(Clone)]
@@ -185,9 +185,18 @@ fn ok_json(body: Json) -> Response {
 pub fn serve(state: ServerState, config: &Config) -> anyhow::Result<HttpServer> {
     obs::configure(config);
     let bind = config.str("rest.bind")?;
-    let workers = config.usize("rest.workers")?;
+    let secs = |v: f64| std::time::Duration::from_secs_f64(v.max(0.001));
+    let opts = ServerOptions {
+        workers: config.usize("rest.workers")?,
+        max_connections: config.usize("rest.max_connections")?,
+        max_inflight: config.usize("rest.max_inflight")?,
+        header_timeout: secs(config.f64("rest.header_timeout_s")?),
+        body_timeout: secs(config.f64("rest.body_timeout_s")?),
+        idle_timeout: secs(config.f64("rest.idle_timeout_s")?),
+        metrics: state.metrics.clone(),
+    };
     let pool_stats = Arc::clone(&state.pool_stats);
-    HttpServer::serve_with_stats(&bind, workers, pool_stats, move |req| route(&state, req))
+    HttpServer::serve_full(&bind, opts, pool_stats, move |req| route(&state, req))
 }
 
 /// Metric key for a route: method plus path with id-like segments
