@@ -1,0 +1,174 @@
+//! PERF-HTTP bench: the nonblocking REST transport — keep-alive
+//! round-trip latency on one connection, aggregate req/sec as the
+//! client fleet grows past the handler-pool size, and tail latency for
+//! a busy client while hundreds of idle keep-alive connections are
+//! parked on the loop (the 10k-connection posture in miniature).
+//!
+//!     cargo bench --bench bench_http
+//!
+//! Emits `BENCH_http.json` (override the path with `BENCH_HTTP_JSON=...`;
+//! `scripts/bench.sh` points it at the repo root). The `derived` section
+//! carries req/sec per fleet size and the busy-client p50/p99 with the
+//! idle fleet held open.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use idds::rest::http::{HttpServer, Response, ServerOptions};
+use idds::util::bench::{fmt_ns, section, Bencher};
+use idds::util::json::Json;
+
+/// Minimal keep-alive client: one request on the wire at a time,
+/// responses parsed by Content-Length framing.
+struct Conn {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Conn {
+    fn connect(addr: SocketAddr) -> Conn {
+        let s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        s.set_nodelay(true).unwrap();
+        Conn {
+            r: BufReader::new(s.try_clone().unwrap()),
+            w: s,
+        }
+    }
+
+    fn roundtrip(&mut self, path: &str) -> u16 {
+        let req = format!("GET {path} HTTP/1.1\r\nHost: bench\r\nContent-Length: 0\r\n\r\n");
+        self.w.write_all(req.as_bytes()).expect("send");
+        let mut status_line = String::new();
+        assert_ne!(self.r.read_line(&mut status_line).expect("status"), 0, "server closed");
+        let status: u16 = status_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            self.r.read_line(&mut h).expect("header");
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = v.trim().parse().unwrap();
+                }
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        self.r.read_exact(&mut body).expect("body");
+        status
+    }
+}
+
+fn server(workers: usize, max_connections: usize) -> HttpServer {
+    let opts = ServerOptions {
+        workers,
+        max_connections,
+        ..ServerOptions::default()
+    };
+    HttpServer::serve_with_options("127.0.0.1:0", opts, |req| {
+        Response::json(200, Json::obj().set("path", req.path.as_str()))
+    })
+    .expect("bind bench server")
+}
+
+/// Aggregate req/sec: `conns` threads, each with one keep-alive
+/// connection, each issuing `per` sequential requests.
+fn fleet_rps(addr: SocketAddr, conns: usize, per: usize) -> f64 {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..conns)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Conn::connect(addr);
+                for i in 0..per {
+                    assert_eq!(c.roundtrip(&format!("/f/{t}/{i}")), 200);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (conns * per) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+
+    let s = server(8, 10_240);
+    let addr = s.addr;
+
+    section("single keep-alive connection round-trip");
+    let mut solo = Conn::connect(addr);
+    let rt = b.bench("http_roundtrip_1conn", || {
+        assert_eq!(solo.roundtrip("/solo"), 200)
+    });
+    println!("  {} per request", fmt_ns(rt.mean_ns));
+    drop(solo);
+
+    section("aggregate req/sec as the connection fleet grows");
+    let fleets: &[usize] = if quick { &[1, 16, 64] } else { &[1, 64, 512] };
+    let per = if quick { 50 } else { 200 };
+    let mut rps = Vec::new();
+    for &conns in fleets {
+        let v = fleet_rps(addr, conns, per);
+        println!("  {conns:4} conns x {per} reqs: {v:10.0} req/sec");
+        rps.push((conns, v));
+    }
+
+    section("busy-client tail latency behind an idle keep-alive fleet");
+    let idle_n = if quick { 64 } else { 512 };
+    let mut idle = Vec::with_capacity(idle_n);
+    for i in 0..idle_n {
+        let mut c = Conn::connect(addr);
+        assert_eq!(c.roundtrip(&format!("/idle/{i}")), 200);
+        idle.push(c); // parked: never spoken to again
+    }
+    let probes = if quick { 200 } else { 2_000 };
+    let mut lat_us: Vec<f64> = Vec::with_capacity(probes);
+    let mut busy = Conn::connect(addr);
+    for i in 0..probes {
+        let t0 = Instant::now();
+        assert_eq!(busy.roundtrip(&format!("/busy/{i}")), 200);
+        lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = lat_us[probes / 2];
+    let p99 = lat_us[(probes * 99) / 100 - 1];
+    println!("  {probes} probes behind {idle_n} idle conns: p50 {p50:.1} µs, p99 {p99:.1} µs");
+    drop(idle);
+
+    let summary = Json::obj()
+        .set("bench", "bench_http")
+        .set("quick", quick)
+        .set(
+            "results",
+            Json::Arr(b.results().iter().map(|r| r.to_json()).collect()),
+        )
+        .set(
+            "derived",
+            Json::obj()
+                .set("roundtrip_1conn_ns", rt.mean_ns)
+                .set(
+                    "fleet_rps",
+                    Json::Arr(
+                        rps.iter()
+                            .map(|(c, v)| Json::obj().set("conns", *c as u64).set("rps", *v))
+                            .collect(),
+                    ),
+                )
+                .set("idle_fleet", idle_n as u64)
+                .set("busy_p50_us_behind_idle_fleet", p50)
+                .set("busy_p99_us_behind_idle_fleet", p99),
+        );
+    let path = std::env::var("BENCH_HTTP_JSON").unwrap_or_else(|_| "BENCH_http.json".to_string());
+    match std::fs::write(&path, summary.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+    s.stop();
+}

@@ -305,6 +305,36 @@ pub fn span_with_parent(name: &str, parent: TraceCtx) -> SpanGuard {
     start_span(name, parent)
 }
 
+/// Record an already-finished span directly into the rings, bypassing
+/// the thread-local parenting machinery. For long-lived work whose guard
+/// cannot be held across other spans on the same thread — the REST event
+/// loop records connection lifecycles this way, because holding a
+/// [`SpanGuard`] per connection on the loop thread would re-parent every
+/// sibling connection's spans under the first one. Always a root span.
+/// No-op when disarmed.
+pub fn record_span(name: &str, dur: std::time::Duration, attrs: &[(&str, String)]) {
+    if !armed() {
+        return;
+    }
+    let t = tracer();
+    let span_id = next_id(t);
+    let trace_id = next_id(t);
+    let dur_us = dur.as_micros() as u64;
+    let rec = SpanRecord {
+        trace_id,
+        span_id,
+        parent_id: 0,
+        name: name.to_string(),
+        start_us: now_us().saturating_sub(dur_us),
+        dur_us,
+        attrs: attrs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+    };
+    if dur_us >= t.slow_us.load(Ordering::Relaxed) {
+        t.slow.lock().unwrap().push(rec.clone());
+    }
+    t.ring.lock().unwrap().push(rec);
+}
+
 /// Remember `ctx` under a numeric key (request id) so an asynchronous
 /// consumer can stitch its work into the originating trace. Bounded:
 /// oldest keys evicted past [`TAG_CAP`].

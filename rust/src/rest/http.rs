@@ -1,20 +1,40 @@
 //! Minimal HTTP/1.1 server + client plumbing over `std::net` (neither
-//! tokio nor hyper are available offline). Connection-per-request with
-//! keep-alive, bounded request size, a worker thread pool, and graceful
-//! shutdown.
+//! tokio nor hyper are available offline).
+//!
+//! The server is a nonblocking readiness loop: one `http-epoll` thread
+//! owns every connection (epoll on Linux, poll(2) elsewhere — see the
+//! `sys` module), parses requests incrementally off per-connection buffers,
+//! and hands complete requests to a worker pool. Handlers block on
+//! store mutexes and fsync, so they never run on the I/O thread; the
+//! loop keeps accepting, timing out, and flushing while they work.
+//! Admission control sheds connections past `max_connections` and
+//! requests past `max_inflight` with `503` + `Retry-After` instead of
+//! queueing unbounded. Deadlines (header/body/idle/write) ride a
+//! coarse timer wheel, so 10k+ idle keep-alive connections cost a few
+//! wheel entries each, not a parked thread each.
+
+#[cfg(not(unix))]
+compile_error!("the REST server is built on epoll/poll readiness polling (unix-only)");
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
-use crate::metrics::Registry;
+use crate::metrics::{Counter, Gauge, Histogram, Registry};
+use crate::util::json::Json;
 use crate::util::pool::{PoolStats, ThreadPool};
 
 pub const MAX_BODY: usize = 64 * 1024 * 1024;
+/// Header block ceiling: a connection whose headers exceed this without
+/// a terminating blank line is answered 400 and closed.
+pub const MAX_HEADER: usize = 64 * 1024;
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -146,106 +166,9 @@ fn parse_query(q: &str) -> Vec<(String, String)> {
         .collect()
 }
 
-/// Marker error for a declared `Content-Length` past [`MAX_BODY`]: the
-/// server answers 413 (not the generic 400) so clients can tell "shrink
-/// the payload" apart from "malformed request". Checked *before* the body
-/// is read, so an oversized declaration costs no bandwidth.
-#[derive(Debug, Clone, Copy)]
-struct PayloadTooLarge;
-
-impl std::fmt::Display for PayloadTooLarge {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "declared body larger than {MAX_BODY} bytes")
-    }
-}
-
-impl std::error::Error for PayloadTooLarge {}
-
-/// Read one request off the stream; Ok(None) on clean EOF.
-pub fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>> {
-    let mut line = String::new();
-    if reader.read_line(&mut line)? == 0 {
-        return Ok(None);
-    }
-    let mut parts = line.trim_end().split_whitespace();
-    let method = parts.next().context("missing method")?.to_string();
-    let target = parts.next().context("missing path")?.to_string();
-    let (path, query) = match target.split_once('?') {
-        Some((p, q)) => (p.to_string(), parse_query(q)),
-        None => (target, Vec::new()),
-    };
-
-    let mut headers = Vec::new();
-    let mut content_length = 0usize;
-    loop {
-        let mut h = String::new();
-        if reader.read_line(&mut h)? == 0 {
-            bail!("eof in headers");
-        }
-        let h = h.trim_end();
-        if h.is_empty() {
-            break;
-        }
-        if let Some((k, v)) = h.split_once(':') {
-            let k = k.trim().to_string();
-            let v = v.trim().to_string();
-            if k.eq_ignore_ascii_case("content-length") {
-                content_length = v.parse().context("bad content-length")?;
-            }
-            headers.push((k, v));
-        }
-    }
-    if content_length > MAX_BODY {
-        return Err(anyhow::Error::new(PayloadTooLarge));
-    }
-    let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body)?;
-    Ok(Some(Request {
-        method,
-        path,
-        query,
-        headers,
-        body,
-    }))
-}
-
-/// Write one response. `head` is a caller-owned scratch buffer so a
-/// keep-alive connection formats every response head into the same
-/// allocation.
-pub fn write_response(
-    stream: &mut TcpStream,
-    resp: &Response,
-    keep_alive: bool,
-    head: &mut String,
-) -> Result<()> {
-    use std::fmt::Write as _;
-    head.clear();
-    let _ = write!(
-        head,
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
-        resp.status,
-        status_text(resp.status),
-        resp.content_type,
-        resp.body.len(),
-        if keep_alive { "keep-alive" } else { "close" },
-    );
-    for (k, v) in &resp.headers {
-        let _ = write!(head, "{k}: {v}\r\n");
-    }
-    head.push_str("\r\n");
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(&resp.body)?;
-    stream.flush()?;
-    Ok(())
-}
-
 /// Tuning knobs for [`HttpServer`]: handler pool size, admission limits,
-/// and the three connection deadlines. `rest::serve` builds this from the
+/// and the connection deadlines. `rest::serve` builds this from the
 /// `rest.*` config keys; tests construct it directly.
-///
-/// The blocking server approximates all three deadlines with a single
-/// per-read socket timeout (the smallest of the three); `max_connections`
-/// / `max_inflight` admission control arrives with the nonblocking loop.
 #[derive(Clone)]
 pub struct ServerOptions {
     /// Handler pool size (handlers block on mutexes and fsync, so they
@@ -257,7 +180,8 @@ pub struct ServerOptions {
     /// Dispatched-but-unanswered request ceiling across all connections;
     /// requests past it get `503` + `Retry-After` on a live connection.
     pub max_inflight: usize,
-    /// From first request byte to end of the header block.
+    /// From first request byte to end of the header block (also covers a
+    /// fresh connection that never sends a byte).
     pub header_timeout: Duration,
     /// From end of headers to the last declared body byte; also bounds
     /// how long a flushed-but-unread response may sit in the write buffer.
@@ -282,11 +206,1228 @@ impl Default for ServerOptions {
     }
 }
 
-/// The server: accept loop on its own thread, handlers on a pool.
+/// Readiness polling behind one tiny API: epoll(7) on Linux via raw
+/// FFI (the tree is dependency-free; the `signal(2)` shim in `main.rs`
+/// is the precedent), poll(2) on other unix. Level-triggered on both:
+/// the loop toggles interest masks instead of draining speculatively,
+/// which is what gives per-connection read backpressure.
+mod sys {
+    pub struct Event {
+        pub token: u64,
+        pub readable: bool,
+        pub writable: bool,
+        pub hangup: bool,
+    }
+
+    #[cfg(target_os = "linux")]
+    mod imp {
+        use super::Event;
+        use std::io;
+        use std::os::raw::c_int;
+        use std::os::unix::io::RawFd;
+
+        const EPOLLIN: u32 = 0x001;
+        const EPOLLOUT: u32 = 0x004;
+        const EPOLLERR: u32 = 0x008;
+        const EPOLLHUP: u32 = 0x010;
+        const EPOLLRDHUP: u32 = 0x2000;
+        const EPOLL_CTL_ADD: c_int = 1;
+        const EPOLL_CTL_DEL: c_int = 2;
+        const EPOLL_CTL_MOD: c_int = 3;
+        const EPOLL_CLOEXEC: c_int = 0o2000000;
+        const MAX_EVENTS: usize = 256;
+
+        // The kernel ABI packs this struct on x86_64 (and only there);
+        // fields are always copied out by value, never referenced.
+        #[repr(C)]
+        #[cfg_attr(target_arch = "x86_64", repr(packed))]
+        #[derive(Clone, Copy)]
+        struct EpollEvent {
+            events: u32,
+            data: u64,
+        }
+
+        extern "C" {
+            fn epoll_create1(flags: c_int) -> c_int;
+            fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+            fn epoll_wait(
+                epfd: c_int,
+                events: *mut EpollEvent,
+                maxevents: c_int,
+                timeout: c_int,
+            ) -> c_int;
+            fn close(fd: c_int) -> c_int;
+        }
+
+        pub struct Poller {
+            epfd: c_int,
+        }
+
+        impl Poller {
+            pub fn new() -> io::Result<Poller> {
+                let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+                if epfd < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                Ok(Poller { epfd })
+            }
+
+            fn ctl(&mut self, op: c_int, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+                let mut bits = EPOLLRDHUP;
+                if read {
+                    bits |= EPOLLIN;
+                }
+                if write {
+                    bits |= EPOLLOUT;
+                }
+                let mut ev = EpollEvent { events: bits, data: token };
+                let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+                if rc < 0 {
+                    Err(io::Error::last_os_error())
+                } else {
+                    Ok(())
+                }
+            }
+
+            pub fn add(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+                self.ctl(EPOLL_CTL_ADD, fd, token, read, write)
+            }
+
+            pub fn modify(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+                self.ctl(EPOLL_CTL_MOD, fd, token, read, write)
+            }
+
+            pub fn remove(&mut self, fd: RawFd) -> io::Result<()> {
+                // non-null event pointer for pre-2.6.9 kernel compat
+                let mut ev = EpollEvent { events: 0, data: 0 };
+                let rc = unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) };
+                if rc < 0 {
+                    Err(io::Error::last_os_error())
+                } else {
+                    Ok(())
+                }
+            }
+
+            pub fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+                let mut buf = [EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+                let n = unsafe {
+                    epoll_wait(self.epfd, buf.as_mut_ptr(), MAX_EVENTS as c_int, timeout_ms)
+                };
+                if n < 0 {
+                    let e = io::Error::last_os_error();
+                    if e.kind() == io::ErrorKind::Interrupted {
+                        return Ok(());
+                    }
+                    return Err(e);
+                }
+                for ev in buf.iter().take(n as usize) {
+                    let bits = ev.events;
+                    let token = ev.data;
+                    out.push(Event {
+                        token,
+                        readable: bits & (EPOLLIN | EPOLLRDHUP) != 0,
+                        writable: bits & EPOLLOUT != 0,
+                        hangup: bits & (EPOLLERR | EPOLLHUP) != 0,
+                    });
+                }
+                Ok(())
+            }
+        }
+
+        impl Drop for Poller {
+            fn drop(&mut self) {
+                unsafe {
+                    close(self.epfd);
+                }
+            }
+        }
+    }
+
+    /// poll(2) fallback for non-Linux unix: interest lives in a flat
+    /// vec rebuilt into a pollfd array per wait. O(n) per call — a
+    /// portability shim, not the 10k-connection path.
+    #[cfg(all(unix, not(target_os = "linux")))]
+    mod imp {
+        use super::Event;
+        use std::io;
+        use std::os::raw::{c_int, c_short, c_uint};
+        use std::os::unix::io::RawFd;
+
+        const POLLIN: c_short = 0x001;
+        const POLLOUT: c_short = 0x004;
+        const POLLERR: c_short = 0x008;
+        const POLLHUP: c_short = 0x010;
+
+        #[repr(C)]
+        #[derive(Clone, Copy)]
+        struct PollFd {
+            fd: c_int,
+            events: c_short,
+            revents: c_short,
+        }
+
+        extern "C" {
+            fn poll(fds: *mut PollFd, nfds: c_uint, timeout: c_int) -> c_int;
+        }
+
+        pub struct Poller {
+            interest: Vec<(RawFd, u64, bool, bool)>,
+        }
+
+        impl Poller {
+            pub fn new() -> io::Result<Poller> {
+                Ok(Poller { interest: Vec::new() })
+            }
+
+            pub fn add(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+                self.interest.push((fd, token, read, write));
+                Ok(())
+            }
+
+            pub fn modify(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+                for e in self.interest.iter_mut() {
+                    if e.0 == fd {
+                        *e = (fd, token, read, write);
+                        return Ok(());
+                    }
+                }
+                Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"))
+            }
+
+            pub fn remove(&mut self, fd: RawFd) -> io::Result<()> {
+                self.interest.retain(|e| e.0 != fd);
+                Ok(())
+            }
+
+            pub fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+                let mut fds: Vec<PollFd> = self
+                    .interest
+                    .iter()
+                    .map(|&(fd, _, r, w)| PollFd {
+                        fd,
+                        events: (if r { POLLIN } else { 0 }) | (if w { POLLOUT } else { 0 }),
+                        revents: 0,
+                    })
+                    .collect();
+                let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_uint, timeout_ms) };
+                if n < 0 {
+                    let e = io::Error::last_os_error();
+                    if e.kind() == io::ErrorKind::Interrupted {
+                        return Ok(());
+                    }
+                    return Err(e);
+                }
+                for (pf, &(_, token, _, _)) in fds.iter().zip(self.interest.iter()) {
+                    if pf.revents == 0 {
+                        continue;
+                    }
+                    out.push(Event {
+                        token,
+                        readable: pf.revents & POLLIN != 0,
+                        writable: pf.revents & POLLOUT != 0,
+                        hangup: pf.revents & (POLLERR | POLLHUP) != 0,
+                    });
+                }
+                Ok(())
+            }
+        }
+    }
+
+    pub use imp::Poller;
+}
+
+/// Parsed request head (everything before the body bytes).
+struct Head {
+    method: String,
+    path: String,
+    query: Vec<(String, String)>,
+    headers: Vec<(String, String)>,
+    content_length: usize,
+    keep_alive: bool,
+}
+
+/// Parse failure → status + body for the error response. 413 for an
+/// oversized `Content-Length` declaration (caught before any body byte
+/// is read), 400 for everything else — same split the blocking server
+/// answered, pinned by `tests/http_semantics.rs`.
+struct ParseErr {
+    status: u16,
+    msg: &'static str,
+}
+
+/// Find the end of the header block (index one past the blank line), or
+/// None if it hasn't arrived yet. Tolerates bare-`\n` line endings the
+/// way the old `read_line`-based parser did. `from` is how far previous
+/// calls scanned, so a byte-dribbling client costs an O(new bytes)
+/// rescan, not O(buffer) — minus 3 bytes of overlap for a terminator
+/// split across reads.
+fn find_header_end(buf: &[u8], from: usize) -> Option<usize> {
+    let start = from.saturating_sub(3);
+    for i in start..buf.len() {
+        if buf[i] == b'\n' && i > 0 {
+            if buf[i - 1] == b'\n' {
+                return Some(i + 1); // "\n\n"
+            }
+            if buf[i - 1] == b'\r' && i >= 2 && buf[i - 2] == b'\n' {
+                return Some(i + 1); // "\r\n\r\n" or "\n\r\n"
+            }
+        }
+    }
+    None
+}
+
+/// Parse a complete header block. Semantics match the retired blocking
+/// parser exactly (the pinning suite holds both to the same contract):
+/// request line split on whitespace with the HTTP version optional and
+/// ignored, header lines without a colon skipped, `Content-Length`
+/// parse failures fatal, keep-alive unless `Connection: close`.
+fn parse_head(block: &str) -> std::result::Result<Head, ParseErr> {
+    let mut lines = block.split('\n').map(|l| l.trim_end_matches('\r'));
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let Some(method) = parts.next() else {
+        return Err(ParseErr { status: 400, msg: "missing method" });
+    };
+    let Some(target) = parts.next() else {
+        return Err(ParseErr { status: 400, msg: "missing path" });
+    };
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), parse_query(q)),
+        None => (target.to_string(), Vec::new()),
+    };
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    for h in lines {
+        let h = h.trim_end();
+        if h.is_empty() {
+            continue;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let k = k.trim().to_string();
+            let v = v.trim().to_string();
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = match v.parse() {
+                    Ok(n) => n,
+                    Err(_) => {
+                        return Err(ParseErr { status: 400, msg: "bad content-length" });
+                    }
+                };
+            }
+            headers.push((k, v));
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(ParseErr { status: 413, msg: "body too large" });
+    }
+    let keep_alive = !headers
+        .iter()
+        .any(|(k, v)| k.eq_ignore_ascii_case("connection") && v.eq_ignore_ascii_case("close"));
+    Ok(Head {
+        method: method.to_string(),
+        path,
+        query,
+        headers,
+        content_length,
+        keep_alive,
+    })
+}
+
+/// Serialize a response (head + body) into the connection's write
+/// buffer. Wire format is byte-identical to the old blocking server's
+/// `write_response`.
+fn serialize_response(out: &mut Vec<u8>, resp: &Response, keep_alive: bool) {
+    use std::fmt::Write as _;
+    let mut head = String::with_capacity(128);
+    let _ = write!(
+        head,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    for (k, v) in &resp.headers {
+        let _ = write!(head, "{k}: {v}\r\n");
+    }
+    head.push_str("\r\n");
+    out.reserve(head.len() + resp.body.len());
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(&resp.body);
+}
+
+/// The shed/overload answer: `503` with an explicit retry hint.
+fn retry_later(msg: &str) -> Response {
+    Response::json(503, Json::obj().set("error", msg)).with_header("Retry-After", 1)
+}
+
+const TOK_LISTENER: u64 = u64::MAX;
+const TOK_WAKER: u64 = u64::MAX - 1;
+const READ_CHUNK: usize = 16 * 1024;
+const WHEEL_SLOTS: usize = 512;
+const WHEEL_TICK_MS: u64 = 20;
+/// How long a closing connection drains unread inbound bytes after its
+/// final response flushes (lingering close — see [`EventLoop::start_linger`]).
+const LINGER_MS: u64 = 500;
+
+/// Slab token: generation in the high half, slot index in the low half.
+/// A freed slot bumps its generation, so events and timer entries for a
+/// previous occupant never touch the new one.
+fn token_for(idx: u32, gen: u32) -> u64 {
+    ((gen as u64) << 32) | idx as u64
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum ConnState {
+    /// Accumulating header bytes (or idle between keep-alive requests).
+    Header,
+    /// Headers parsed, accumulating `need` declared body bytes.
+    Body,
+    /// One request dispatched to the pool, or a response queued/flushing;
+    /// read interest is off — that's the pipelining backpressure.
+    InFlight,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum DeadlineKind {
+    /// No armed deadline (handler latency is the pool's business).
+    None,
+    /// Keep-alive gap: close silently when it fires.
+    Idle,
+    /// Mid-header: answer 408 and close.
+    Header,
+    /// Mid-body: answer 408 and close.
+    Body,
+    /// Response flushing: close when it fires (client isn't reading).
+    Write,
+}
+
+struct Conn {
+    stream: TcpStream,
+    state: ConnState,
+    /// Unparsed inbound bytes.
+    buf: Vec<u8>,
+    /// How far `find_header_end` scanned `buf` already.
+    scan_from: usize,
+    /// Declared body bytes still expected (valid in `Body`).
+    need: usize,
+    /// Parsed head held while the body accumulates.
+    head: Option<Head>,
+    /// Outbound bytes not yet accepted by the kernel.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// A response is queued in `out` (or just finished flushing).
+    responded: bool,
+    /// Keep the connection after the current response flushes.
+    resp_keep: bool,
+    deadline: Instant,
+    deadline_kind: DeadlineKind,
+    opened: Instant,
+    /// Responses fully flushed on this connection.
+    served: u64,
+    /// Interest currently registered with the poller.
+    reg_read: bool,
+    reg_write: bool,
+    /// Peer sent EOF (clean close or write-shutdown).
+    peer_eof: bool,
+    /// Final response flushed; draining inbound until EOF/deadline.
+    lingering: bool,
+}
+
+/// Coarse hashed timer wheel: 512 slots × 20 ms ≈ 10 s horizon, lazy
+/// deletion. Entries are (slot index, generation) candidates — the loop
+/// re-checks the connection's live deadline when one fires and
+/// reschedules if it moved (re-armed keep-alive) or lies past the
+/// horizon (60 s idle deadlines re-circulate ~6 times).
+struct Wheel {
+    slots: Vec<Vec<(u32, u32)>>,
+    cursor: usize,
+    last_tick: Instant,
+}
+
+impl Wheel {
+    fn new(now: Instant) -> Wheel {
+        Wheel {
+            slots: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            cursor: 0,
+            last_tick: now,
+        }
+    }
+
+    fn schedule(&mut self, now: Instant, deadline: Instant, idx: u32, gen: u32) {
+        let ms = deadline.saturating_duration_since(now).as_millis() as u64;
+        let ticks = ((ms / WHEEL_TICK_MS) + 1).min((WHEEL_SLOTS - 1) as u64) as usize;
+        let slot = (self.cursor + ticks) % WHEEL_SLOTS;
+        self.slots[slot].push((idx, gen));
+    }
+
+    /// Advance the cursor to `now`, appending every candidate whose slot
+    /// came due onto `expired`.
+    fn advance(&mut self, now: Instant, expired: &mut Vec<(u32, u32)>) {
+        let tick = Duration::from_millis(WHEEL_TICK_MS);
+        while now.duration_since(self.last_tick) >= tick {
+            self.last_tick += tick;
+            self.cursor = (self.cursor + 1) % WHEEL_SLOTS;
+            expired.append(&mut self.slots[self.cursor]);
+        }
+    }
+
+    /// Poll timeout that lands on the next tick boundary.
+    fn ms_to_next_tick(&self, now: Instant) -> i32 {
+        let next = self.last_tick + Duration::from_millis(WHEEL_TICK_MS);
+        let ms = next.saturating_duration_since(now).as_millis() as i64;
+        ms.clamp(1, WHEEL_TICK_MS as i64) as i32
+    }
+}
+
+/// A handler's finished work, pushed from a pool worker back to the
+/// event loop. `keep` was decided at dispatch (on the loop thread) from
+/// the request's `Connection` header; `gen` fences completions for
+/// connections that died while the handler ran.
+struct Completion {
+    idx: u32,
+    gen: u32,
+    resp: Response,
+    keep: bool,
+}
+
+/// Worker ↔ loop handoff: a completion queue plus a socketpair waker
+/// byte so a parked `epoll_wait` notices the push.
+struct Shared {
+    completions: Mutex<Vec<Completion>>,
+    waker_tx: UnixStream,
+}
+
+impl Shared {
+    fn push(&self, c: Completion) {
+        self.completions.lock().unwrap().push(c);
+        self.wake();
+    }
+
+    fn wake(&self) {
+        // nonblocking: a full pipe means a wake is already pending
+        let mut w = &self.waker_tx;
+        let _ = w.write(&[1u8]);
+    }
+}
+
+fn drain_waker(w: &UnixStream) {
+    let mut buf = [0u8; 256];
+    let mut r = w;
+    loop {
+        match r.read(&mut buf) {
+            Ok(0) => return,
+            Ok(_) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return, // WouldBlock: drained
+        }
+    }
+}
+
+/// What `pump_conn` learned after a flush attempt.
+enum AfterFlush {
+    /// Write buffer still has bytes: wait for writability.
+    Pending,
+    /// Keep pumping; `finished` marks a response that just fully flushed
+    /// on a keep-alive connection (deadline must re-arm).
+    Continue { finished: bool },
+    /// A `Connection: close` response finished flushing.
+    Close,
+}
+
+/// One `parse_step` outcome.
+enum Step {
+    /// Made progress (queued a response, changed state, dispatched).
+    Progress,
+    /// Waiting on input or on the handler.
+    Blocked,
+    /// Connection was closed.
+    Closed,
+}
+
+/// The single-threaded readiness loop: owns the poller, the connection
+/// slab, the timer wheel, and the admission counters. Everything here
+/// runs on the `http-epoll` thread; handlers run on the pool and come
+/// back through [`Shared`].
+struct EventLoop {
+    poller: sys::Poller,
+    conns: Vec<Option<Conn>>,
+    /// Per-slot generation, bumped on free (lives outside the Option so
+    /// it survives the occupant).
+    gens: Vec<u32>,
+    free: Vec<u32>,
+    wheel: Wheel,
+    open: usize,
+    inflight: usize,
+    opts: ServerOptions,
+    pool: ThreadPool,
+    handler: Arc<dyn Fn(Request) -> Response + Send + Sync>,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    m_open: Arc<Gauge>,
+    m_accepted: Arc<Counter>,
+    m_closed: Arc<Counter>,
+    m_timeouts: Arc<Counter>,
+    m_shed: Arc<Counter>,
+    m_rejected: Arc<Counter>,
+    m_parse_errors: Arc<Counter>,
+    h_lifetime: Arc<Histogram>,
+    h_requests: Arc<Histogram>,
+}
+
+impl EventLoop {
+    fn new(
+        poller: sys::Poller,
+        opts: ServerOptions,
+        pool: ThreadPool,
+        handler: Arc<dyn Fn(Request) -> Response + Send + Sync>,
+        shared: Arc<Shared>,
+        stop: Arc<AtomicBool>,
+    ) -> EventLoop {
+        let m_open = opts.metrics.gauge("rest.conn.open");
+        let m_accepted = opts.metrics.counter("rest.conn.accepted");
+        let m_closed = opts.metrics.counter("rest.conn.closed");
+        let m_timeouts = opts.metrics.counter("rest.conn.timeouts");
+        let m_shed = opts.metrics.counter("rest.conn.shed");
+        let m_rejected = opts.metrics.counter("rest.conn.rejected_inflight");
+        let m_parse_errors = opts.metrics.counter("rest.conn.parse_errors");
+        let h_lifetime = opts.metrics.histogram("rest.conn.lifetime_us");
+        let h_requests = opts.metrics.histogram("rest.conn.requests_per_conn");
+        EventLoop {
+            poller,
+            conns: Vec::new(),
+            gens: Vec::new(),
+            free: Vec::new(),
+            wheel: Wheel::new(Instant::now()),
+            open: 0,
+            inflight: 0,
+            opts,
+            pool,
+            handler,
+            shared,
+            stop,
+            m_open,
+            m_accepted,
+            m_closed,
+            m_timeouts,
+            m_shed,
+            m_rejected,
+            m_parse_errors,
+            h_lifetime,
+            h_requests,
+        }
+    }
+
+    fn run(&mut self, listener: TcpListener, waker_rx: UnixStream) {
+        if self.poller.add(listener.as_raw_fd(), TOK_LISTENER, true, false).is_err() {
+            return;
+        }
+        if self.poller.add(waker_rx.as_raw_fd(), TOK_WAKER, true, false).is_err() {
+            return;
+        }
+        let mut events: Vec<sys::Event> = Vec::with_capacity(256);
+        let mut expired: Vec<(u32, u32)> = Vec::new();
+        while !self.stop.load(Ordering::SeqCst) {
+            let now = Instant::now();
+            self.wheel.advance(now, &mut expired);
+            for (idx, gen) in expired.drain(..) {
+                self.on_timer(idx, gen, now);
+            }
+            // Idle server: park long (the waker interrupts for stop and
+            // completions). Anything open: wake per wheel tick.
+            let timeout_ms = if self.open == 0 && self.inflight == 0 {
+                250
+            } else {
+                self.wheel.ms_to_next_tick(Instant::now())
+            };
+            events.clear();
+            if self.poller.wait(&mut events, timeout_ms).is_err() {
+                break;
+            }
+            for ev in &events {
+                match ev.token {
+                    TOK_LISTENER => self.accept_ready(&listener),
+                    TOK_WAKER => drain_waker(&waker_rx),
+                    token => {
+                        let idx = (token & 0xffff_ffff) as u32;
+                        let gen = (token >> 32) as u32;
+                        if idx as usize >= self.gens.len()
+                            || self.gens[idx as usize] != gen
+                            || self.conns[idx as usize].is_none()
+                        {
+                            continue; // stale event for a recycled slot
+                        }
+                        if ev.readable || ev.hangup {
+                            // EPOLLHUP with a dispatched request means the
+                            // peer is fully gone and can't receive the
+                            // response; close now instead of level-trigger
+                            // spinning until the handler returns.
+                            let gone = ev.hangup
+                                && self.conns[idx as usize]
+                                    .as_ref()
+                                    .is_some_and(|c| c.state == ConnState::InFlight);
+                            if gone {
+                                self.close_conn(idx, "peer-hangup", true);
+                                continue;
+                            }
+                            self.read_ready(idx);
+                        }
+                        if ev.writable
+                            && self.gens[idx as usize] == gen
+                            && self.conns[idx as usize].is_some()
+                        {
+                            self.pump_conn(idx);
+                        }
+                    }
+                }
+            }
+            self.drain_completions();
+        }
+        for idx in 0..self.conns.len() {
+            if self.conns[idx].is_some() {
+                self.close_conn(idx as u32, "shutdown", false);
+            }
+        }
+    }
+
+    /// Drain the accept backlog. Past `max_connections` the connection is
+    /// still accepted — kernel backlog would just defer the pain — but
+    /// only to carry a `503` + `Retry-After` and close.
+    fn accept_ready(&mut self, listener: &TcpListener) {
+        loop {
+            let (stream, _) = match listener.accept() {
+                Ok(s) => s,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return, // listener gone: loop exits on stop flag
+            };
+            self.m_accepted.inc();
+            if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            let _ = stream.set_nodelay(true);
+            let shed = self.open >= self.opts.max_connections;
+            let idx = match self.free.pop() {
+                Some(i) => i,
+                None => {
+                    self.conns.push(None);
+                    self.gens.push(0);
+                    (self.conns.len() - 1) as u32
+                }
+            };
+            let gen = self.gens[idx as usize];
+            let fd = stream.as_raw_fd();
+            let now = Instant::now();
+            self.conns[idx as usize] = Some(Conn {
+                stream,
+                state: ConnState::Header,
+                buf: Vec::new(),
+                scan_from: 0,
+                need: 0,
+                head: None,
+                out: Vec::new(),
+                out_pos: 0,
+                responded: false,
+                resp_keep: true,
+                deadline: now,
+                deadline_kind: DeadlineKind::None,
+                opened: now,
+                served: 0,
+                reg_read: false,
+                reg_write: false,
+                peer_eof: false,
+                lingering: false,
+            });
+            self.open += 1;
+            self.m_open.add(1);
+            if self.poller.add(fd, token_for(idx, gen), false, false).is_err() {
+                self.close_conn(idx, "register-failed", true);
+                continue;
+            }
+            if shed {
+                self.m_shed.inc();
+                self.respond_queue(idx, retry_later("connection limit reached"), false);
+                self.pump_conn(idx);
+            } else {
+                self.arm_deadline(idx, DeadlineKind::Header, self.opts.header_timeout);
+                self.read_ready(idx); // bytes may already be waiting
+            }
+        }
+    }
+
+    /// Pull bytes off the socket into the connection buffer (bounded by
+    /// what the current state can use), then pump.
+    fn read_ready(&mut self, idx: u32) {
+        let mut io_error = false;
+        let mut woke_from_idle = false;
+        let (lingering, eof) = {
+            let Some(conn) = self.conns[idx as usize].as_mut() else {
+                return;
+            };
+            let mut tmp = [0u8; READ_CHUNK];
+            loop {
+                let full = if conn.lingering {
+                    false // draining: read and discard until EOF
+                } else {
+                    match conn.state {
+                        ConnState::Header => conn.buf.len() >= MAX_HEADER,
+                        ConnState::Body => conn.buf.len() >= conn.need,
+                        ConnState::InFlight => true,
+                    }
+                };
+                if full || conn.peer_eof {
+                    break;
+                }
+                match conn.stream.read(&mut tmp) {
+                    Ok(0) => conn.peer_eof = true,
+                    Ok(n) => {
+                        if conn.lingering {
+                            continue; // discard
+                        }
+                        if conn.deadline_kind == DeadlineKind::Idle {
+                            woke_from_idle = true; // first bytes of the next request
+                        }
+                        conn.buf.extend_from_slice(&tmp[..n]);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        io_error = true;
+                        break;
+                    }
+                }
+            }
+            (conn.lingering, conn.peer_eof)
+        };
+        if lingering {
+            // the final response already flushed; any way the drain ends
+            // is a normal close
+            if io_error || eof {
+                self.close_conn(idx, "served", false);
+            } else {
+                self.update_interest(idx);
+            }
+            return;
+        }
+        if io_error {
+            self.close_conn(idx, "read-error", true);
+            return;
+        }
+        if woke_from_idle {
+            self.arm_deadline(idx, DeadlineKind::Header, self.opts.header_timeout);
+        }
+        self.pump_conn(idx);
+    }
+
+    /// Drive the connection's state machine as far as it will go:
+    /// flush → finish responses → parse/dispatch → repeat. Iterative on
+    /// purpose — a buffer full of pipelined requests must not recurse.
+    fn pump_conn(&mut self, idx: u32) {
+        loop {
+            if !self.flush_bytes(idx) {
+                return; // closed on write error
+            }
+            let after = {
+                let Some(conn) = self.conns[idx as usize].as_mut() else {
+                    return;
+                };
+                if conn.out_pos < conn.out.len() {
+                    AfterFlush::Pending
+                } else if conn.responded {
+                    conn.out.clear();
+                    conn.out_pos = 0;
+                    conn.responded = false;
+                    conn.served = conn.served.saturating_add(1);
+                    if conn.resp_keep {
+                        conn.state = ConnState::Header;
+                        conn.scan_from = 0;
+                        AfterFlush::Continue { finished: true }
+                    } else {
+                        AfterFlush::Close
+                    }
+                } else {
+                    AfterFlush::Continue { finished: false }
+                }
+            };
+            match after {
+                AfterFlush::Close => {
+                    self.start_linger(idx);
+                    return;
+                }
+                AfterFlush::Pending => {
+                    self.update_interest(idx);
+                    return;
+                }
+                AfterFlush::Continue { finished } => {
+                    if finished {
+                        // keep-alive gap: idle deadline, or header deadline
+                        // when pipelined bytes are already buffered
+                        let pipelined = self.conns[idx as usize]
+                            .as_ref()
+                            .is_some_and(|c| !c.buf.is_empty());
+                        if pipelined {
+                            self.arm_deadline(idx, DeadlineKind::Header, self.opts.header_timeout);
+                        } else {
+                            self.arm_deadline(idx, DeadlineKind::Idle, self.opts.idle_timeout);
+                        }
+                    }
+                }
+            }
+            match self.parse_step(idx) {
+                Step::Progress => continue,
+                Step::Blocked => {
+                    self.update_interest(idx);
+                    return;
+                }
+                Step::Closed => return,
+            }
+        }
+    }
+
+    /// One parse action against the inbound buffer.
+    fn parse_step(&mut self, idx: u32) -> Step {
+        enum Act {
+            Blocked,
+            CloseSilent,
+            Error(u16, &'static str),
+            StartBody(Head),
+            Dispatch(Head, Vec<u8>),
+        }
+        let act = {
+            let Some(conn) = self.conns[idx as usize].as_mut() else {
+                return Step::Closed;
+            };
+            match conn.state {
+                ConnState::InFlight => Act::Blocked,
+                ConnState::Header => match find_header_end(&conn.buf, conn.scan_from) {
+                    Some(end) => {
+                        match std::str::from_utf8(&conn.buf[..end]).ok().map(parse_head) {
+                            Some(Ok(head)) => {
+                                conn.buf.drain(..end);
+                                conn.scan_from = 0;
+                                if head.content_length > 0 {
+                                    Act::StartBody(head)
+                                } else {
+                                    Act::Dispatch(head, Vec::new())
+                                }
+                            }
+                            Some(Err(pe)) => Act::Error(pe.status, pe.msg),
+                            None => Act::Error(400, "bad request"),
+                        }
+                    }
+                    None if conn.buf.len() >= MAX_HEADER => Act::Error(400, "header too large"),
+                    None if conn.peer_eof => {
+                        if conn.buf.is_empty() {
+                            Act::CloseSilent // clean EOF between requests
+                        } else {
+                            Act::Error(400, "bad request") // EOF mid-header
+                        }
+                    }
+                    None => {
+                        conn.scan_from = conn.buf.len();
+                        Act::Blocked
+                    }
+                },
+                ConnState::Body => {
+                    if conn.buf.len() >= conn.need {
+                        let body: Vec<u8> = conn.buf.drain(..conn.need).collect();
+                        let head = conn.head.take().expect("Body state without parsed head");
+                        Act::Dispatch(head, body)
+                    } else if conn.peer_eof {
+                        Act::Error(400, "bad request") // EOF mid-body (short body)
+                    } else {
+                        Act::Blocked
+                    }
+                }
+            }
+        };
+        match act {
+            Act::Blocked => Step::Blocked,
+            Act::CloseSilent => {
+                self.close_conn(idx, "eof", false);
+                Step::Closed
+            }
+            Act::Error(status, msg) => {
+                self.m_parse_errors.inc();
+                self.respond_queue(idx, Response::text(status, msg), false);
+                Step::Progress
+            }
+            Act::StartBody(head) => {
+                {
+                    let Some(conn) = self.conns[idx as usize].as_mut() else {
+                        return Step::Closed;
+                    };
+                    conn.need = head.content_length;
+                    conn.head = Some(head);
+                    conn.state = ConnState::Body;
+                }
+                self.arm_deadline(idx, DeadlineKind::Body, self.opts.body_timeout);
+                Step::Progress
+            }
+            Act::Dispatch(head, body) => {
+                self.dispatch(idx, head, body);
+                Step::Progress
+            }
+        }
+    }
+
+    /// Hand a complete request to the pool (or shed it). Exactly one
+    /// request per connection is in flight at a time; read interest
+    /// drops until the response flushes.
+    fn dispatch(&mut self, idx: u32, head: Head, body: Vec<u8>) {
+        {
+            let Some(conn) = self.conns[idx as usize].as_mut() else {
+                return;
+            };
+            conn.state = ConnState::InFlight;
+            conn.deadline_kind = DeadlineKind::None;
+        }
+        let keep = head.keep_alive;
+        if self.inflight >= self.opts.max_inflight {
+            self.m_rejected.inc();
+            // the connection survives: the client can retry on it
+            self.respond_queue(idx, retry_later("inflight limit reached"), keep);
+            return;
+        }
+        let req = Request {
+            method: head.method,
+            path: head.path,
+            query: head.query,
+            headers: head.headers,
+            body,
+        };
+        let gen = self.gens[idx as usize];
+        let shared = Arc::clone(&self.shared);
+        let handler = Arc::clone(&self.handler);
+        let ok = self.pool.try_execute(move || {
+            // a panicking handler must still complete the connection:
+            // turn it into a 500 instead of leaving the slot in flight
+            let (resp, keep) = match std::panic::catch_unwind(AssertUnwindSafe(|| handler(req))) {
+                Ok(r) => (r, keep),
+                Err(_) => (Response::text(500, "handler panicked"), false),
+            };
+            shared.push(Completion { idx, gen, resp, keep });
+        });
+        if ok {
+            self.inflight += 1;
+        } else {
+            self.respond_queue(idx, Response::text(503, "server shutting down"), false);
+        }
+    }
+
+    /// Queue a response on the connection. The caller pumps afterwards
+    /// (directly or via the enclosing `pump_conn` loop).
+    fn respond_queue(&mut self, idx: u32, resp: Response, keep: bool) {
+        {
+            let Some(conn) = self.conns[idx as usize].as_mut() else {
+                return;
+            };
+            conn.state = ConnState::InFlight;
+            conn.responded = true;
+            conn.resp_keep = keep;
+            serialize_response(&mut conn.out, &resp, keep);
+        }
+        self.arm_deadline(idx, DeadlineKind::Write, self.opts.body_timeout);
+    }
+
+    /// Write as much queued output as the kernel will take. Returns
+    /// false if the connection died (and was closed here).
+    fn flush_bytes(&mut self, idx: u32) -> bool {
+        let mut failed = false;
+        {
+            let Some(conn) = self.conns[idx as usize].as_mut() else {
+                return false;
+            };
+            while conn.out_pos < conn.out.len() {
+                match conn.stream.write(&conn.out[conn.out_pos..]) {
+                    Ok(0) => {
+                        failed = true;
+                        break;
+                    }
+                    Ok(n) => conn.out_pos += n,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        failed = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if failed {
+            self.close_conn(idx, "write-error", true);
+            return false;
+        }
+        true
+    }
+
+    /// Begin a lingering close after the final response has flushed.
+    ///
+    /// `close(2)` on a socket whose kernel receive queue still holds
+    /// unread bytes makes Linux answer with RST, and an RST can discard
+    /// the response we just sent from the *client's* receive buffer
+    /// before it reads it. That bites exactly the connections we never
+    /// read from — admission-shed sockets that got a 503 without their
+    /// request being consumed. So: half-close our write side (the FIN
+    /// tells well-behaved clients we're done), keep reading and
+    /// discarding inbound until EOF, and give up after `LINGER_MS` for
+    /// clients that never close.
+    fn start_linger(&mut self, idx: u32) {
+        let eof = {
+            let Some(conn) = self.conns[idx as usize].as_mut() else {
+                return;
+            };
+            conn.lingering = true;
+            conn.buf.clear();
+            let _ = conn.stream.shutdown(std::net::Shutdown::Write);
+            conn.peer_eof
+        };
+        if eof {
+            self.close_conn(idx, "served", false);
+        } else {
+            self.arm_deadline(idx, DeadlineKind::Write, Duration::from_millis(LINGER_MS));
+            self.update_interest(idx);
+        }
+    }
+
+    /// Reconcile desired poller interest with what's registered.
+    fn update_interest(&mut self, idx: u32) {
+        let gen = self.gens[idx as usize];
+        let Some(conn) = self.conns[idx as usize].as_mut() else {
+            return;
+        };
+        let want_write = conn.out_pos < conn.out.len();
+        let want_read = if conn.lingering {
+            !conn.peer_eof
+        } else {
+            !conn.peer_eof
+                && match conn.state {
+                    ConnState::Header => conn.buf.len() < MAX_HEADER,
+                    ConnState::Body => conn.buf.len() < conn.need,
+                    ConnState::InFlight => false,
+                }
+        };
+        if want_read != conn.reg_read || want_write != conn.reg_write {
+            conn.reg_read = want_read;
+            conn.reg_write = want_write;
+            let fd = conn.stream.as_raw_fd();
+            let _ = self.poller.modify(fd, token_for(idx, gen), want_read, want_write);
+        }
+    }
+
+    fn arm_deadline(&mut self, idx: u32, kind: DeadlineKind, dur: Duration) {
+        let now = Instant::now();
+        let deadline = now + dur;
+        let gen = self.gens[idx as usize];
+        let Some(conn) = self.conns[idx as usize].as_mut() else {
+            return;
+        };
+        conn.deadline = deadline;
+        conn.deadline_kind = kind;
+        self.wheel.schedule(now, deadline, idx, gen);
+    }
+
+    /// A wheel candidate fired: re-check against the connection's live
+    /// deadline (lazy deletion) and act only if it really expired.
+    fn on_timer(&mut self, idx: u32, gen: u32, now: Instant) {
+        if idx as usize >= self.gens.len() || self.gens[idx as usize] != gen {
+            return; // connection died; entry is stale
+        }
+        let (kind, deadline) = match self.conns[idx as usize].as_ref() {
+            Some(c) => (c.deadline_kind, c.deadline),
+            None => return,
+        };
+        if kind == DeadlineKind::None {
+            return; // deadline was disarmed (request dispatched)
+        }
+        if deadline > now {
+            self.wheel.schedule(now, deadline, idx, gen);
+            return; // re-armed since, or past the wheel horizon
+        }
+        match kind {
+            DeadlineKind::None => {}
+            DeadlineKind::Idle => self.close_conn(idx, "idle-timeout", false),
+            DeadlineKind::Header | DeadlineKind::Body => {
+                self.m_timeouts.inc();
+                self.respond_queue(idx, Response::text(408, "request timeout"), false);
+                self.pump_conn(idx);
+            }
+            DeadlineKind::Write => {
+                let lingering = self.conns[idx as usize]
+                    .as_ref()
+                    .is_some_and(|c| c.lingering);
+                if lingering {
+                    // drain window over; the response made it out, this
+                    // is a normal close, not a timeout
+                    self.close_conn(idx, "linger-done", false);
+                } else {
+                    self.m_timeouts.inc();
+                    self.close_conn(idx, "write-timeout", true);
+                }
+            }
+        }
+    }
+
+    fn drain_completions(&mut self) {
+        loop {
+            let batch: Vec<Completion> = {
+                let mut q = self.shared.completions.lock().unwrap();
+                if q.is_empty() {
+                    return;
+                }
+                std::mem::take(&mut *q)
+            };
+            for c in batch {
+                // the admission slot frees regardless of whether the
+                // connection is still around to receive the response
+                self.inflight = self.inflight.saturating_sub(1);
+                let idx = c.idx as usize;
+                if idx < self.gens.len()
+                    && self.gens[idx] == c.gen
+                    && self.conns[idx].is_some()
+                {
+                    self.respond_queue(c.idx, c.resp, c.keep);
+                    self.pump_conn(c.idx);
+                }
+            }
+        }
+    }
+
+    fn close_conn(&mut self, idx: u32, reason: &'static str, abnormal: bool) {
+        let Some(conn) = self.conns[idx as usize].take() else {
+            return;
+        };
+        let _ = self.poller.remove(conn.stream.as_raw_fd());
+        self.gens[idx as usize] = self.gens[idx as usize].wrapping_add(1);
+        self.free.push(idx);
+        self.open -= 1;
+        self.m_open.add(-1);
+        self.m_closed.inc();
+        let lifetime = conn.opened.elapsed();
+        self.h_lifetime.observe(lifetime.as_micros() as u64);
+        self.h_requests.observe(conn.served);
+        if abnormal {
+            // deferred root span: holding per-connection SpanGuards on
+            // the loop thread would re-parent sibling connections' spans
+            crate::obs::record_span(
+                "rest.conn.abort",
+                lifetime,
+                &[
+                    ("reason", reason.to_string()),
+                    ("served", conn.served.to_string()),
+                ],
+            );
+        }
+    }
+}
+
+/// The server handle: the readiness loop runs on its own thread; `stop`
+/// (or drop) flags it down, wakes it, and joins.
 pub struct HttpServer {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<Shared>,
+    loop_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl HttpServer {
@@ -303,8 +1444,9 @@ impl HttpServer {
     }
 
     /// [`serve`](Self::serve) with a caller-owned [`PoolStats`]: the
-    /// worker pool lives on the accept thread, so occupancy is handed
-    /// out through the shared stats struct (`/api/health` reads it).
+    /// worker pool lives on the event-loop thread, so occupancy is
+    /// handed out through the shared stats struct (`/api/health` reads
+    /// it).
     pub fn serve_with_stats<H>(
         bind: &str,
         workers: usize,
@@ -343,50 +1485,49 @@ impl HttpServer {
         let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        let (waker_rx, waker_tx) = UnixStream::pair().context("waker socketpair")?;
+        waker_rx.set_nonblocking(true)?;
+        waker_tx.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            completions: Mutex::new(Vec::new()),
+            waker_tx,
+        });
         let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let handler = Arc::new(handler);
-        let read_timeout = opts
-            .header_timeout
-            .min(opts.body_timeout)
-            .min(opts.idle_timeout)
-            .max(Duration::from_millis(1));
-        let accepted = opts.metrics.counter("rest.conn.accepted");
-        let closed = opts.metrics.counter("rest.conn.closed");
-        let workers = opts.workers;
-        let accept_thread = std::thread::Builder::new()
-            .name("http-accept".into())
+        let poller = sys::Poller::new().context("create poller")?;
+        let handler: Arc<dyn Fn(Request) -> Response + Send + Sync> = Arc::new(handler);
+        let pool = ThreadPool::with_stats(opts.workers.max(1), "http", pool_stats);
+        let mut ev = EventLoop::new(
+            poller,
+            opts,
+            pool,
+            handler,
+            Arc::clone(&shared),
+            Arc::clone(&stop),
+        );
+        let loop_thread = std::thread::Builder::new()
+            .name("http-epoll".into())
             .spawn(move || {
-                let pool = ThreadPool::with_stats(workers, "http", pool_stats);
-                while !stop2.load(Ordering::SeqCst) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            accepted.inc();
-                            let handler = Arc::clone(&handler);
-                            let closed = Arc::clone(&closed);
-                            pool.execute(move || {
-                                let _ = handle_conn(stream, read_timeout, handler);
-                                closed.inc();
-                            });
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(2));
-                        }
-                        Err(_) => break,
-                    }
-                }
-                pool.shutdown();
+                ev.run(listener, waker_rx);
+                // joins workers; queued handler jobs finish first (their
+                // completions land in Shared and are dropped unread)
+                ev.pool.shutdown();
             })?;
         Ok(HttpServer {
             addr,
             stop,
-            accept_thread: Some(accept_thread),
+            shared,
+            loop_thread: Some(loop_thread),
         })
     }
 
     pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(t) = self.accept_thread.take() {
+        self.shared.wake();
+        if let Some(t) = self.loop_thread.take() {
             let _ = t.join();
         }
     }
@@ -394,48 +1535,8 @@ impl HttpServer {
 
 impl Drop for HttpServer {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
+        self.shutdown();
     }
-}
-
-fn handle_conn(
-    stream: TcpStream,
-    read_timeout: Duration,
-    handler: Arc<dyn Fn(Request) -> Response + Send + Sync>,
-) -> Result<()> {
-    stream.set_nonblocking(false)?;
-    stream.set_read_timeout(Some(read_timeout))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
-    let mut head = String::with_capacity(128);
-    loop {
-        let req = match read_request(&mut reader) {
-            Ok(Some(r)) => r,
-            Ok(None) => break,
-            Err(e) => {
-                let resp = if e.downcast_ref::<PayloadTooLarge>().is_some() {
-                    Response::text(413, "body too large")
-                } else {
-                    Response::text(400, "bad request")
-                };
-                let _ = write_response(&mut stream, &resp, false, &mut head);
-                break;
-            }
-        };
-        let keep = req
-            .header("connection")
-            .map(|c| !c.eq_ignore_ascii_case("close"))
-            .unwrap_or(true);
-        let resp = handler(req);
-        write_response(&mut stream, &resp, keep, &mut head)?;
-        if !keep {
-            break;
-        }
-    }
-    Ok(())
 }
 
 /// Marker context attached to client errors that happened at the TCP
@@ -620,5 +1721,78 @@ mod tests {
         assert_eq!(percent_decode("a%20b+c"), "a b c");
         assert_eq!(percent_decode("%zz"), "%zz"); // invalid escape passes through
         assert_eq!(percent_decode("plain"), "plain");
+    }
+
+    #[test]
+    fn header_end_detection() {
+        assert_eq!(find_header_end(b"GET / HTTP/1.1\r\n\r\n", 0), Some(18));
+        assert_eq!(find_header_end(b"GET /\n\n", 0), Some(7));
+        assert_eq!(find_header_end(b"GET /\nHost: x\n\r\n", 0), Some(16));
+        assert_eq!(find_header_end(b"GET /\r\nHost: x\r\n\r", 0), None);
+        assert_eq!(find_header_end(b"", 0), None);
+        // a resumed scan never misses a terminator split across reads
+        let buf = b"GET / HTTP/1.1\r\nHost: a\r\n\r\n";
+        for from in 0..=buf.len() {
+            assert_eq!(find_header_end(buf, from), Some(buf.len()), "from={from}");
+        }
+    }
+
+    #[test]
+    fn head_parsing_matches_legacy_semantics() {
+        let h = parse_head("GET /a/b?x=1 HTTP/1.1\r\nHost: h\r\nContent-Length: 5\r\n\r\n").unwrap();
+        assert_eq!(h.method, "GET");
+        assert_eq!(h.path, "/a/b");
+        assert_eq!(h.query, vec![("x".to_string(), "1".to_string())]);
+        assert_eq!(h.content_length, 5);
+        assert!(h.keep_alive);
+        // colon-less header lines are ignored, not fatal
+        let h = parse_head("GET / HTTP/1.1\r\ngarbage line\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!h.keep_alive);
+        assert_eq!(h.headers.len(), 1);
+        // missing path → 400
+        assert_eq!(parse_head("GARBAGE\r\n\r\n").unwrap_err().status, 400);
+        // unparseable Content-Length → 400
+        assert_eq!(
+            parse_head("GET / HTTP/1.1\r\nContent-Length: banana\r\n\r\n").unwrap_err().status,
+            400
+        );
+        // oversized declaration → 413, before any body byte exists
+        let big = format!("GET / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert_eq!(parse_head(&big).unwrap_err().status, 413);
+    }
+
+    #[test]
+    fn wheel_fires_after_deadline_not_before() {
+        let t0 = Instant::now();
+        let mut w = Wheel::new(t0);
+        let mut out = Vec::new();
+        w.schedule(t0, t0 + Duration::from_millis(100), 7, 1);
+        w.advance(t0 + Duration::from_millis(60), &mut out);
+        assert!(out.is_empty());
+        w.advance(t0 + Duration::from_millis(200), &mut out);
+        assert_eq!(out, vec![(7, 1)]);
+        // far deadlines land on the horizon slot, not nowhere
+        out.clear();
+        w.schedule(
+            t0 + Duration::from_millis(200),
+            t0 + Duration::from_secs(60),
+            8,
+            2,
+        );
+        w.advance(t0 + Duration::from_millis(200 + 511 * 20 + 20), &mut out);
+        assert!(out.contains(&(8, 2)));
+    }
+
+    #[test]
+    fn serialized_response_wire_format() {
+        let mut out = Vec::new();
+        let resp = Response::text(200, "hi").with_header("Retry-After", 1);
+        serialize_response(&mut out, &resp, true);
+        let s = String::from_utf8(out).unwrap();
+        assert_eq!(
+            s,
+            "HTTP/1.1 200 OK\r\nContent-Type: text/plain\r\nContent-Length: 2\r\n\
+             Connection: keep-alive\r\nRetry-After: 1\r\n\r\nhi"
+        );
     }
 }

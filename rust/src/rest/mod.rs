@@ -275,8 +275,8 @@ fn route_inner(state: &ServerState, req: &Request) -> Response {
             // LSNs, lag_lsn, pull counters — the operator's lag monitor
             .set("replication", state.cluster.health_json())
             // head-service load: live inflight count, worker-pool
-            // occupancy, and the per-route request/error rollup — the
-            // before/after baseline for the planned epoll refactor
+            // occupancy, the per-route request/error rollup, and the
+            // event loop's connection-lifecycle counters
             .set("rest", {
                 let mut routes = Json::obj();
                 for (k, v) in state.metrics.counters_with_prefix("rest.route.") {
@@ -287,6 +287,26 @@ fn route_inner(state: &ServerState, req: &Request) -> Response {
                     .set("inflight", state.metrics.gauge("rest.inflight").get() as f64)
                     .set("requests", state.metrics.counter("rest.requests").get())
                     .set("routes", routes)
+                    // rest.conn.*: admission + deadline behavior of the
+                    // epoll loop (open is a live gauge; the rest are
+                    // process-lifetime counters)
+                    .set(
+                        "conn",
+                        Json::obj()
+                            .set("open", state.metrics.gauge("rest.conn.open").get() as f64)
+                            .set("accepted", state.metrics.counter("rest.conn.accepted").get())
+                            .set("closed", state.metrics.counter("rest.conn.closed").get())
+                            .set("timeouts", state.metrics.counter("rest.conn.timeouts").get())
+                            .set("shed", state.metrics.counter("rest.conn.shed").get())
+                            .set(
+                                "rejected_inflight",
+                                state.metrics.counter("rest.conn.rejected_inflight").get(),
+                            )
+                            .set(
+                                "parse_errors",
+                                state.metrics.counter("rest.conn.parse_errors").get(),
+                            ),
+                    )
                     .set(
                         "pool",
                         Json::obj()

@@ -102,6 +102,22 @@ impl ThreadPool {
             .expect("pool workers gone");
     }
 
+    /// Submit a job, reporting failure instead of panicking: `false`
+    /// when the pool is shut down or its workers are gone. The REST
+    /// event loop uses this — a dying pool must surface as a 503, not
+    /// take the I/O thread down with it.
+    pub fn try_execute(&self, job: impl FnOnce() + Send + 'static) -> bool {
+        let Some(tx) = self.tx.as_ref() else {
+            return false;
+        };
+        self.stats.queued.fetch_add(1, Ordering::Relaxed);
+        if tx.send(Box::new(job)).is_err() {
+            self.stats.queued.fetch_sub(1, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
     /// Number of jobs that panicked since construction.
     pub fn panic_count(&self) -> u64 {
         self.panics.load(Ordering::Relaxed)

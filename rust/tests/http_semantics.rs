@@ -440,3 +440,185 @@ fn every_route_stays_reachable_through_the_real_transport() {
 
     server.stop();
 }
+
+// ---------------------------------------------------------------------
+// stress: the nonblocking server under connection and dispatch pressure
+// (additive; everything above is the pre-rework pin)
+// ---------------------------------------------------------------------
+
+/// Soft `RLIMIT_NOFILE` via raw FFI (the tree is dependency-free, like
+/// the server's own epoll shim). Falls back to a conservative 1024 if
+/// the syscall fails.
+fn nofile_soft() -> u64 {
+    #[repr(C)]
+    struct RLimit {
+        rlim_cur: u64,
+        rlim_max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+    }
+    #[cfg(target_os = "linux")]
+    const RLIMIT_NOFILE: i32 = 7;
+    #[cfg(not(target_os = "linux"))]
+    const RLIMIT_NOFILE: i32 = 8;
+    let mut r = RLimit {
+        rlim_cur: 0,
+        rlim_max: 0,
+    };
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut r) } == 0 {
+        r.rlim_cur
+    } else {
+        1024
+    }
+}
+
+#[test]
+fn idle_keepalive_fleet_does_not_starve_busy_clients() {
+    // each RawConn costs ~3 fds (client stream + BufReader clone + the
+    // server side); leave 600 for the harness, and cap the fleet so the
+    // test stays fast on machines with huge fd limits
+    let fleet = (nofile_soft().saturating_sub(600) / 4).min(1500) as usize;
+    assert!(fleet >= 64, "fd limit too low for a meaningful fleet ({fleet})");
+
+    let metrics = Registry::default();
+    let s = echo_server(ServerOptions {
+        workers: 4,
+        max_connections: fleet + 64,
+        metrics: metrics.clone(),
+        ..ServerOptions::default()
+    });
+
+    // park `fleet` keep-alive connections, each proven live by one
+    // round-trip so the server has really accepted and served it
+    let mut parked = Vec::with_capacity(fleet);
+    for i in 0..fleet {
+        let mut c = RawConn::connect(s.addr);
+        c.send(&req_bytes("GET", &format!("/park/{i}"), &[], b""));
+        assert_eq!(c.read_response().expect("park response").status, 200);
+        parked.push(c);
+    }
+    assert!(
+        metrics.gauge("rest.conn.open").get() >= fleet as i64,
+        "open-connection gauge below fleet size"
+    );
+
+    // a busy client must see prompt service with the whole fleet parked:
+    // idle sockets cost the loop nothing until they become readable
+    let mut busy = RawConn::connect(s.addr);
+    for i in 0..50 {
+        let t0 = Instant::now();
+        let path = format!("/busy/{i}");
+        busy.send(&req_bytes("GET", &path, &[], b""));
+        let r = busy.read_response().expect("busy response");
+        assert_eq!(r.status, 200);
+        assert_eq!(echo_json(&r).get("path").unwrap().as_str(), Some(path.as_str()));
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "request {i} took {:?} behind {fleet} idle connections",
+            t0.elapsed()
+        );
+    }
+    drop(parked);
+    s.stop();
+}
+
+#[test]
+fn overload_sheds_with_503_retry_after_and_recovers() {
+    let metrics = Registry::default();
+    let s = echo_server(ServerOptions {
+        workers: 2,
+        max_connections: 32,
+        metrics: metrics.clone(),
+        ..ServerOptions::default()
+    });
+
+    // fill the table: one round-trip each guarantees all 32 are accepted
+    // before the overflow connection arrives
+    let mut held = Vec::new();
+    for _ in 0..32 {
+        let mut c = RawConn::connect(s.addr);
+        c.send(&req_bytes("GET", "/hold", &[], b""));
+        assert_eq!(c.read_response().expect("hold response").status, 200);
+        held.push(c);
+    }
+
+    // the 33rd is shed: 503 + Retry-After, then closed — never queued
+    let mut extra = RawConn::connect(s.addr);
+    extra.send(&req_bytes("GET", "/extra", &[], b""));
+    let r = extra.read_response().expect("shed response");
+    assert_eq!(r.status, 503);
+    assert_eq!(r.header("retry-after"), Some("1"), "shed 503 must carry Retry-After");
+    assert!(extra.read_response().is_none(), "shed connection is closed");
+    assert!(metrics.counter("rest.conn.shed").get() >= 1);
+
+    // release one slot and the server recovers: a fresh connection gets
+    // served as soon as the loop notices the close
+    drop(held.pop());
+    let t0 = Instant::now();
+    loop {
+        let mut c = RawConn::connect(s.addr);
+        c.send(&req_bytes("GET", "/recovered", &[], b""));
+        match c.read_response() {
+            Some(r) if r.status == 200 => break,
+            Some(r) => assert_eq!(r.status, 503, "unexpected status {}", r.status),
+            None => {}
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "server did not recover a shed slot within 5s"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    s.stop();
+}
+
+#[test]
+fn inflight_cap_rejects_excess_with_retry_after() {
+    let metrics = Registry::default();
+    let opts = ServerOptions {
+        workers: 8,
+        max_inflight: 4,
+        metrics: metrics.clone(),
+        ..ServerOptions::default()
+    };
+    // slow handler: holds a dispatch slot long enough for the barrier'd
+    // burst below to overrun the cap deterministically
+    let s = HttpServer::serve_with_options("127.0.0.1:0", opts, |req| {
+        std::thread::sleep(Duration::from_millis(400));
+        Response::json(200, Json::obj().set("path", req.path.as_str()))
+    })
+    .expect("bind slow server");
+
+    let addr = s.addr;
+    let barrier = Arc::new(std::sync::Barrier::new(8));
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut c = RawConn::connect(addr);
+                barrier.wait();
+                c.send(&req_bytes("GET", &format!("/burst/{i}"), &[], b""));
+                let r = c.read_response().expect("burst response");
+                if r.status == 503 {
+                    assert_eq!(
+                        r.header("retry-after"),
+                        Some("1"),
+                        "inflight 503 must carry Retry-After"
+                    );
+                    // the rejection keeps the connection usable
+                    assert_eq!(r.header("connection"), Some("keep-alive"));
+                }
+                r.status
+            })
+        })
+        .collect();
+    let statuses: Vec<u16> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let ok = statuses.iter().filter(|&&st| st == 200).count();
+    let shed = statuses.iter().filter(|&&st| st == 503).count();
+    assert_eq!(ok + shed, 8, "unexpected statuses: {statuses:?}");
+    assert!(ok >= 4, "cap must still admit up to max_inflight ({statuses:?})");
+    assert!(shed >= 1, "burst past the cap must see a 503 ({statuses:?})");
+    assert!(metrics.counter("rest.conn.rejected_inflight").get() >= 1);
+    s.stop();
+}

@@ -16,4 +16,5 @@ BENCH_WORKFLOW_JSON="$ROOT/BENCH_workflow.json" cargo bench --bench bench_workfl
 BENCH_REPLICATION_JSON="$ROOT/BENCH_replication.json" cargo bench --bench bench_replication
 BENCH_OBS_JSON="$ROOT/BENCH_obs.json" cargo bench --bench bench_obs
 BENCH_WORKERS_JSON="$ROOT/BENCH_workers.json" cargo bench --bench bench_workers
-echo "wrote $ROOT/BENCH_store.json, $ROOT/BENCH_wal.json, $ROOT/BENCH_checkpoint.json, $ROOT/BENCH_broker.json, $ROOT/BENCH_workflow.json, $ROOT/BENCH_replication.json, $ROOT/BENCH_obs.json and $ROOT/BENCH_workers.json"
+BENCH_HTTP_JSON="$ROOT/BENCH_http.json" cargo bench --bench bench_http
+echo "wrote $ROOT/BENCH_store.json, $ROOT/BENCH_wal.json, $ROOT/BENCH_checkpoint.json, $ROOT/BENCH_broker.json, $ROOT/BENCH_workflow.json, $ROOT/BENCH_replication.json, $ROOT/BENCH_obs.json, $ROOT/BENCH_workers.json and $ROOT/BENCH_http.json"

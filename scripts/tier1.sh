@@ -5,12 +5,16 @@
 # The multi-process worker suite (real sockets, spawned `idds work`
 # processes, kill -9 mid-lease) also runs in release so its lease/
 # heartbeat timings hold under load.
+# The HTTP semantics suite (wire-level pins + connection-fleet stress)
+# runs in release so the epoll loop's timing assertions (busy client
+# behind an idle fleet, shed-and-recover windows) hold under load.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 cargo build --release
 cargo test -q
 cargo test --release -q --test persist_recovery
 cargo test --release -q --test workers
+cargo test --release -q --test http_semantics
 
 # Docs gate: rustdoc warnings (dangling intra-doc links, malformed code
 # blocks, bad HTML in prose) are errors so the documentation pass cannot
