@@ -1,0 +1,192 @@
+//! PERF-EVENTS bench: event-bus wakeup latency vs interval polling, and
+//! publish fan-out cost as the subscriber population grows.
+//!
+//!     cargo bench --bench bench_events
+//!
+//! Emits `BENCH_events.json` (override the path with `BENCH_EVENTS_JSON=...`;
+//! `scripts/bench.sh` points it at the repo root). The `derived` section
+//! carries the signal-vs-poll latency ratio — the number that justifies
+//! replacing the daemons' fixed poll loops with bus wakeups.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use idds::metrics::Registry;
+use idds::persist::{EventBus, PersistEvent};
+use idds::store::RequestKind;
+use idds::util::bench::{section, Bencher};
+use idds::util::json::Json;
+
+fn ev(i: u64) -> PersistEvent {
+    PersistEvent::AddRequest {
+        id: i,
+        name: format!("r{i}"),
+        requester: "u".into(),
+        kind: RequestKind::Workflow,
+        workflow: Json::Null,
+        at: 0.0,
+    }
+}
+
+/// Round-trip latency from `publish` to a consumer blocked in
+/// `WakeSignal::wait_past` observing it, averaged over `rounds`.
+fn signal_latency(rounds: u32) -> Duration {
+    let bus = EventBus::new(&Registry::default());
+    let signal = bus.watch(idds::persist::bus::T_ALL);
+    let stop = Arc::new(AtomicBool::new(false));
+    let woken_at = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let consumer = {
+        let signal = Arc::clone(&signal);
+        let stop = Arc::clone(&stop);
+        let woken_at = Arc::clone(&woken_at);
+        std::thread::spawn(move || {
+            let mut seen = signal.epoch();
+            while !stop.load(Ordering::Acquire) {
+                let (now, woke) = signal.wait_past(seen, Duration::from_millis(250));
+                seen = now;
+                if woke {
+                    woken_at.store(t0.elapsed().as_nanos() as u64, Ordering::Release);
+                }
+            }
+        })
+    };
+    let mut total = Duration::ZERO;
+    for i in 0..rounds {
+        woken_at.store(0, Ordering::Release);
+        std::thread::sleep(Duration::from_millis(2)); // consumer reaches wait_past
+        let published = t0.elapsed().as_nanos() as u64;
+        bus.publish(&[(u64::from(i) + 1, ev(u64::from(i) + 1))]);
+        loop {
+            let woke = woken_at.load(Ordering::Acquire);
+            if woke > published {
+                total += Duration::from_nanos(woke - published);
+                break;
+            }
+            std::hint::spin_loop();
+        }
+    }
+    stop.store(true, Ordering::Release);
+    signal.notify();
+    consumer.join().unwrap();
+    total / rounds
+}
+
+/// The same round-trip when the consumer polls a flag on a fixed
+/// interval instead of blocking on the signal — the pre-bus daemon loop.
+fn poll_latency(rounds: u32, interval: Duration) -> Duration {
+    let flag = Arc::new(AtomicU64::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let woken_at = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let consumer = {
+        let flag = Arc::clone(&flag);
+        let stop = Arc::clone(&stop);
+        let woken_at = Arc::clone(&woken_at);
+        std::thread::spawn(move || {
+            let mut seen = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                std::thread::sleep(interval);
+                let now = flag.load(Ordering::Acquire);
+                if now > seen {
+                    seen = now;
+                    woken_at.store(t0.elapsed().as_nanos() as u64, Ordering::Release);
+                }
+            }
+        })
+    };
+    let mut total = Duration::ZERO;
+    for i in 0..rounds {
+        woken_at.store(0, Ordering::Release);
+        let published = t0.elapsed().as_nanos() as u64;
+        flag.store(u64::from(i) + 1, Ordering::Release);
+        loop {
+            let woke = woken_at.load(Ordering::Acquire);
+            if woke > published {
+                total += Duration::from_nanos(woke - published);
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+    stop.store(true, Ordering::Release);
+    consumer.join().unwrap();
+    total / rounds
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+
+    section("wakeup latency: bus signal vs 50ms interval poll");
+    let rounds: u32 = if quick { 20 } else { 100 };
+    let sig = signal_latency(rounds);
+    let poll = poll_latency(rounds, Duration::from_millis(50));
+    let ratio = poll.as_secs_f64() / sig.as_secs_f64().max(1e-9);
+    println!(
+        "signal wakeup: {:.1}us   50ms-poll wakeup: {:.1}ms   ratio: {ratio:.0}x",
+        sig.as_secs_f64() * 1e6,
+        poll.as_secs_f64() * 1e3,
+    );
+
+    section("publish fan-out (per-batch cost as subscribers grow)");
+    let batch: u64 = if quick { 64 } else { 256 };
+    let events: Vec<(u64, PersistEvent)> = (1..=batch).map(|i| (i, ev(i))).collect();
+    let mut fanout = Vec::new();
+    for subs in [1usize, 64, 512] {
+        let n = if quick { subs.min(64) } else { subs };
+        let bus = EventBus::new(&Registry::default());
+        // queues hold one full batch; each round drains them so the
+        // overflow path never skews the publish cost being measured
+        let keep: Vec<_> = (0..n)
+            .map(|_| bus.subscribe(idds::persist::bus::T_ALL, None, batch as usize * 2))
+            .collect();
+        let r = b.bench(&format!("publish+drain {batch}-event batch, {n} subscribers"), || {
+            bus.publish(&events);
+            let mut drained = 0usize;
+            for s in &keep {
+                drained += s.drain(usize::MAX).0.len();
+            }
+            drained
+        });
+        let per_event_ns = r.mean_ns / batch as f64;
+        fanout.push((n, per_event_ns));
+        drop(keep);
+    }
+    for (n, ns) in &fanout {
+        println!("{n:>4} subscribers: {ns:.0} ns/event published");
+    }
+
+    let summary = Json::obj()
+        .set("bench", "bench_events")
+        .set("quick", quick)
+        .set(
+            "results",
+            Json::Arr(b.results().iter().map(|r| r.to_json()).collect()),
+        )
+        .set(
+            "derived",
+            Json::obj()
+                .set("signal_wakeup_us", sig.as_secs_f64() * 1e6)
+                .set("poll_50ms_wakeup_ms", poll.as_secs_f64() * 1e3)
+                .set("wakeup_latency_ratio", ratio)
+                .set(
+                    "fanout_ns_per_event",
+                    Json::Arr(
+                        fanout
+                            .iter()
+                            .map(|(n, ns)| {
+                                Json::obj().set("subscribers", *n as u64).set("ns_per_event", *ns)
+                            })
+                            .collect(),
+                    ),
+                ),
+        );
+    let path =
+        std::env::var("BENCH_EVENTS_JSON").unwrap_or_else(|_| "BENCH_events.json".to_string());
+    match std::fs::write(&path, summary.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -1,0 +1,83 @@
+//! Push-based event watching demo: start an in-process head service with
+//! the event bus armed, subscribe to the SSE feed with
+//! [`idds::rest::Client::watch_events`], submit a workflow, and print every
+//! event the pipeline commits while [`idds::rest::Client::wait_request`]
+//! blocks — push-driven, no polling loop — until the request finishes.
+//!
+//!     cargo run --release --example watch
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use idds::broker::Broker;
+use idds::config::Config;
+use idds::daemons::executors::{ExecutorSet, NoopExecutor};
+use idds::daemons::{AgentHost, Daemon, Pipeline};
+use idds::metrics::Registry;
+use idds::persist::{BusPersister, EventBus};
+use idds::rest::{serve, Client, ServerState};
+use idds::store::{RequestKind, Store};
+use idds::util::clock::WallClock;
+use idds::workflow::{Condition, WorkTemplate, Workflow};
+
+fn main() -> anyhow::Result<()> {
+    // in-memory head stack with the bus published from the apply path
+    // (a durable deployment publishes from the WAL flusher instead)
+    let clock = Arc::new(WallClock::new());
+    let store = Store::new(clock.clone());
+    let broker = Broker::new(clock);
+    let metrics = Registry::default();
+    let bus = EventBus::new(&metrics);
+    store.set_persister(Arc::new(BusPersister::new(bus.clone())));
+    broker.set_persister(Arc::new(BusPersister::new(bus.clone())));
+
+    let executors =
+        ExecutorSet::default().with(idds::workflow::WorkKind::Noop, Arc::new(NoopExecutor::default()));
+    let pipeline = Pipeline::new(store.clone(), broker.clone(), metrics.clone(), executors)
+        .with_bus(bus.clone());
+    let (c, m, t, ca, co) = pipeline.daemons();
+    let daemons: Vec<Arc<dyn Daemon>> =
+        vec![Arc::new(c), Arc::new(m), Arc::new(t), Arc::new(ca), Arc::new(co)];
+    // bus-armed: daemons sleep until a table in their interest set commits
+    let host = AgentHost::start_with_bus(
+        daemons,
+        Duration::from_millis(2),
+        Duration::from_millis(500),
+        Some(&bus),
+    );
+
+    let cfg = Config::defaults();
+    let server = serve(
+        ServerState::new(store, broker, metrics, &cfg).with_bus(bus.clone()),
+        &cfg,
+    )?;
+    println!("head service on {}", server.addr);
+
+    // a second connection tails the full firehose and prints everything
+    let tail = Client::new(server.addr, "dev-token");
+    let printer = std::thread::spawn(move || {
+        let Ok(watch) = tail.watch_events(None, None) else { return };
+        for ev in watch {
+            let Ok(ev) = ev else { break };
+            println!("  [{:>4}] {:<20} {}", ev.lsn, ev.op, ev.data);
+        }
+    });
+
+    let client = Client::new(server.addr, "dev-token");
+    let wf = Workflow::new("watch-demo")
+        .add_template(WorkTemplate::new("prep"))
+        .add_template(WorkTemplate::new("main"))
+        .add_condition(Condition::always("prep", "main"))
+        .entry("prep");
+    let req = client.submit("watch-demo", "alice", RequestKind::Workflow, &wf)?;
+    println!("submitted request {req}; waiting push-driven ...");
+    let status = client.wait_request(req, Duration::from_secs(30))?;
+    println!("request {req} -> {status}");
+
+    // give the printer a beat to drain the tail of the feed, then stop
+    std::thread::sleep(Duration::from_millis(200));
+    host.stop();
+    server.stop();
+    drop(printer); // detach: the watch ends when the server closes it
+    Ok(())
+}

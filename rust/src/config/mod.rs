@@ -58,6 +58,12 @@ impl Config {
         c.put("replication.poll_interval_ms", Json::Num(50.0));
         c.put("replication.batch_bytes", Json::Num(1024.0 * 1024.0));
         c.put("replication.retry_ms", Json::Num(200.0));
+        // event bus (persist/bus + GET /api/events): per-subscriber queue
+        // bound, daemon heartbeat when bus-armed (idle safety-net poll),
+        // and the per-round byte cap for SSE catch-up reads from the WAL
+        c.put("events.queue", Json::Num(1024.0));
+        c.put("events.heartbeat_ms", Json::Num(500.0));
+        c.put("events.catchup_batch_bytes", Json::Num(1024.0 * 1024.0));
         // broker: in-flight deliveries (and therefore work leases —
         // broker::lease rides the same machinery) redeliver after this
         // many seconds without an ack or a renewal

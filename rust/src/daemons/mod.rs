@@ -22,6 +22,7 @@ use std::sync::Arc;
 
 use crate::metrics::Registry;
 use crate::obs;
+use crate::persist::bus::{EventBus, WakeSignal};
 
 pub use pipeline::{Carrier, Clerk, Conductor, Marshaller, Pipeline, Transformer};
 
@@ -31,6 +32,21 @@ pub trait Daemon: Send + Sync {
 
     /// Process up to one batch; returns how many items made progress.
     fn poll_once(&self) -> usize;
+
+    /// Event-bus tables (a bitmask over `persist::bus::T_*`) whose
+    /// mutations can unblock this daemon. The host arms one wake signal
+    /// per daemon with this mask; the default subscribes to everything,
+    /// which is always safe — just noisier.
+    fn interests(&self) -> u32 {
+        crate::persist::bus::T_ALL
+    }
+
+    /// True while the daemon must keep polling at the short interval even
+    /// without bus events — the Carrier watching executor completions,
+    /// which are not store mutations and so never reach the bus.
+    fn busy_poll(&self) -> bool {
+        false
+    }
 }
 
 /// Instrumentation shared by every daemon's `poll_once`: a
@@ -79,35 +95,88 @@ pub fn pump(daemons: &[&dyn Daemon], max_sweeps: usize) -> usize {
 /// Threaded host for service mode.
 pub struct AgentHost {
     stop: Arc<AtomicBool>,
+    signals: Vec<Arc<WakeSignal>>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl AgentHost {
-    /// Spawn one thread per daemon, polling at `interval`.
+    /// Spawn one thread per daemon, polling at `interval` with no event
+    /// bus (tests, embedded hosts). Equivalent to the event-driven form
+    /// with the heartbeat pinned to the poll interval — the signal is
+    /// still armed so [`AgentHost::stop`] interrupts an idle sleep
+    /// immediately instead of waiting it out.
     pub fn start(daemons: Vec<Arc<dyn Daemon>>, interval: std::time::Duration) -> AgentHost {
+        Self::start_with_bus(daemons, interval, interval, None)
+    }
+
+    /// Spawn one thread per daemon, woken by the bus instead of a timer.
+    ///
+    /// Each daemon idles on a [`WakeSignal`] armed with its
+    /// [`Daemon::interests`] mask: a matching publish wakes it at once
+    /// (counted in `pipeline.<name>.wakeups`); otherwise it re-polls only
+    /// every `heartbeat` — the low-frequency fallback that bounds the
+    /// damage of any missed-signal bug. A [`Daemon::busy_poll`] daemon
+    /// (the Carrier with work in flight) keeps the short `interval`
+    /// instead, since what it waits for never crosses the bus. The epoch
+    /// is snapshotted *before* `poll_once`, so a publish landing mid-poll
+    /// makes the following wait return immediately — no lost wakeups.
+    pub fn start_with_bus(
+        daemons: Vec<Arc<dyn Daemon>>,
+        interval: std::time::Duration,
+        heartbeat: std::time::Duration,
+        bus: Option<&EventBus>,
+    ) -> AgentHost {
         let stop = Arc::new(AtomicBool::new(false));
-        let threads = daemons
+        let mut signals = Vec::new();
+        let threads: Vec<std::thread::JoinHandle<()>> = daemons
             .into_iter()
             .map(|d| {
+                let signal = match bus {
+                    Some(b) => b.watch(d.interests()),
+                    None => WakeSignal::new(),
+                };
+                signals.push(Arc::clone(&signal));
+                let wakeups =
+                    bus.map(|b| b.metrics().counter(&format!("pipeline.{}.wakeups", d.name())));
                 let stop = Arc::clone(&stop);
                 std::thread::Builder::new()
                     .name(format!("idds-{}", d.name()))
                     .spawn(move || {
                         while !stop.load(Ordering::SeqCst) {
+                            let seen = signal.epoch();
                             let n = d.poll_once();
+                            if stop.load(Ordering::SeqCst) {
+                                break;
+                            }
                             if n == 0 {
-                                std::thread::sleep(interval);
+                                let timeout =
+                                    if d.busy_poll() { interval } else { heartbeat };
+                                let (_, woke) = signal.wait_past(seen, timeout);
+                                if woke && !stop.load(Ordering::SeqCst) {
+                                    if let Some(c) = &wakeups {
+                                        c.inc();
+                                    }
+                                }
                             }
                         }
                     })
                     .expect("spawn daemon")
             })
             .collect();
-        AgentHost { stop, threads }
+        AgentHost { stop, signals, threads }
     }
 
     pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        // wake every idle daemon out of its wait — shutdown latency is
+        // one in-flight poll, not a heartbeat
+        for s in &self.signals {
+            s.notify();
+        }
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -116,10 +185,7 @@ impl AgentHost {
 
 impl Drop for AgentHost {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        for t in self.threads.drain(..) {
-            let _ = t.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -160,6 +226,27 @@ mod tests {
         let d = CountDown { left: AtomicUsize::new(1000) };
         let total = pump(&[&d], 3);
         assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn agent_host_stop_interrupts_idle_sleep() {
+        // a drained daemon parked on a 30 s interval must still stop
+        // promptly: stop() notifies the wake signals instead of waiting
+        // the sleep out
+        let d = Arc::new(CountDown { left: AtomicUsize::new(0) });
+        let host = AgentHost::start(
+            vec![Arc::clone(&d) as Arc<dyn Daemon>],
+            std::time::Duration::from_secs(30),
+        );
+        // let the thread reach its idle wait
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let t0 = std::time::Instant::now();
+        host.stop();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(5),
+            "stop must not wait out the poll interval: {:?}",
+            t0.elapsed()
+        );
     }
 
     #[test]

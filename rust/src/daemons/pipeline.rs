@@ -59,6 +59,9 @@ use std::sync::{Arc, Mutex};
 
 use crate::broker::Broker;
 use crate::metrics::{Counter, Registry};
+use crate::persist::bus::{
+    EventBus, T_MESSAGES, T_PROCESSINGS, T_REQUESTS, T_TRANSFORMS,
+};
 use crate::store::{
     CollectionKind, Id, ProcessingStatus, RequestStatus, Store, TransformStatus,
 };
@@ -121,6 +124,10 @@ pub struct Pipeline {
     /// bumped whenever `marshalled` grows — the non-store signal the
     /// Clerk's change-driven gate must observe
     marshal_epoch: Arc<AtomicU64>,
+    /// event bus, when the host runs event-driven: marshal-epoch bumps
+    /// are re-broadcast as synthetic requests-table signals (the epoch is
+    /// pipeline state, so no WAL event ever carries it)
+    bus: Option<EventBus>,
     batch: usize,
 }
 
@@ -135,8 +142,16 @@ impl Pipeline {
             recovered_names: Arc::new(Mutex::new(HashMap::new())),
             marshalled: Arc::new(Mutex::new(HashSet::new())),
             marshal_epoch: Arc::new(AtomicU64::new(0)),
+            bus: None,
             batch: 256,
         }
+    }
+
+    /// Attach the event bus so the Marshaller's marshal-epoch bumps wake
+    /// the Clerk's finalization gate like any store mutation would.
+    pub fn with_bus(mut self, bus: EventBus) -> Self {
+        self.bus = Some(bus);
+        self
     }
 
     pub fn daemons(&self) -> (Clerk, Marshaller, Transformer, Carrier, Conductor) {
@@ -174,6 +189,9 @@ impl Pipeline {
     fn mark_marshalled(&self, tf_id: Id) {
         self.marshalled.lock().unwrap().insert(tf_id);
         self.marshal_epoch.fetch_add(1, Ordering::Release);
+        if let Some(bus) = &self.bus {
+            bus.signal(T_REQUESTS);
+        }
     }
 
     /// Materialize a generated Work as a transform. Idempotent by name
@@ -321,6 +339,12 @@ impl Daemon for Clerk {
 
     fn poll_once(&self) -> usize {
         super::traced_tick(&self.p.metrics, "clerk", || self.tick())
+    }
+
+    // T_REQUESTS also covers the marshal epoch: `mark_marshalled`
+    // re-broadcasts its bump as a synthetic requests signal
+    fn interests(&self) -> u32 {
+        T_REQUESTS | T_TRANSFORMS
     }
 }
 
@@ -497,6 +521,10 @@ impl Daemon for Marshaller {
     fn poll_once(&self) -> usize {
         super::traced_tick(&self.p.metrics, "marshaller", || self.tick())
     }
+
+    fn interests(&self) -> u32 {
+        T_TRANSFORMS
+    }
 }
 
 impl Marshaller {
@@ -626,6 +654,10 @@ impl Daemon for Transformer {
     fn poll_once(&self) -> usize {
         super::traced_tick(&self.p.metrics, "transformer", || self.tick())
     }
+
+    fn interests(&self) -> u32 {
+        T_TRANSFORMS
+    }
 }
 
 impl Transformer {
@@ -704,6 +736,26 @@ impl Daemon for Carrier {
 
     fn poll_once(&self) -> usize {
         super::traced_tick(&self.p.metrics, "carrier", || self.tick())
+    }
+
+    fn interests(&self) -> u32 {
+        T_PROCESSINGS
+    }
+
+    // executor completions never cross the bus: while anything is in
+    // flight the Carrier keeps the short poll interval instead of the
+    // fallback heartbeat
+    fn busy_poll(&self) -> bool {
+        !self
+            .p
+            .store
+            .processings_with_status_limit(ProcessingStatus::Submitted, 1)
+            .is_empty()
+            || !self
+                .p
+                .store
+                .processings_with_status_limit(ProcessingStatus::Running, 1)
+                .is_empty()
     }
 }
 
@@ -898,6 +950,10 @@ impl Daemon for Conductor {
 
     fn poll_once(&self) -> usize {
         super::traced_tick(&self.p.metrics, "conductor", || self.tick())
+    }
+
+    fn interests(&self) -> u32 {
+        T_MESSAGES
     }
 }
 
@@ -1291,6 +1347,95 @@ mod tests {
             .find(|c| c.kind == CollectionKind::Input)
             .unwrap();
         assert_eq!(p.store.contents_of_collection(input.id).len(), 2);
+    }
+
+    fn bus_pipeline() -> (Pipeline, crate::persist::bus::EventBus) {
+        let clock = Arc::new(WallClock::new());
+        let store = Store::new(clock.clone());
+        let metrics = Registry::default();
+        let bus = crate::persist::bus::EventBus::new(&metrics);
+        // no data dir in unit tests: the BusPersister publishes at apply
+        // time, the same hook the WAL flusher uses after group commit
+        assert!(store.set_persister(Arc::new(crate::persist::bus::BusPersister::new(bus.clone()))));
+        let p = Pipeline::new(
+            store,
+            Broker::new(clock),
+            metrics,
+            ExecutorSet::default().with(WorkKind::Noop, Arc::new(NoopExecutor::default())),
+        )
+        .with_bus(bus.clone());
+        (p, bus)
+    }
+
+    fn host_daemons(p: &Pipeline) -> Vec<Arc<dyn crate::daemons::Daemon>> {
+        let (clerk, marsh, tfr, carrier, conductor) = p.daemons();
+        vec![
+            Arc::new(clerk),
+            Arc::new(marsh),
+            Arc::new(tfr),
+            Arc::new(carrier),
+            Arc::new(conductor),
+        ]
+    }
+
+    #[test]
+    fn bus_wakeups_finish_a_request_well_before_the_heartbeat() {
+        let (p, bus) = bus_pipeline();
+        // heartbeat far beyond the assertion window: if any stage of the
+        // clerk→transformer→carrier→finalize chain had to wait for a
+        // heartbeat tick, the request could not finish in time — every
+        // hand-off must ride a bus wakeup
+        let host = crate::daemons::AgentHost::start_with_bus(
+            host_daemons(&p),
+            std::time::Duration::from_millis(5),
+            std::time::Duration::from_secs(60),
+            Some(&bus),
+        );
+        // let every daemon run its unconditional first poll and park in
+        // its wait — from here on, only signals (or the 60 s heartbeat)
+        // can make progress
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let wf = Workflow::new("one").add_template(WorkTemplate::new("a")).entry("a");
+        let req = p.store.add_request("r", "u", RequestKind::Workflow, wf.to_json());
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while std::time::Instant::now() < deadline {
+            if p.store.get_request(req).unwrap().status == RequestStatus::Finished {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        host.stop();
+        assert_eq!(p.store.get_request(req).unwrap().status, RequestStatus::Finished);
+        let wakeups: u64 = ["clerk", "marshaller", "transformer", "carrier", "conductor"]
+            .iter()
+            .map(|d| p.metrics.counter(&format!("pipeline.{d}.wakeups")).get())
+            .sum();
+        assert!(wakeups > 0, "progress must have come from bus wakeups");
+    }
+
+    #[test]
+    fn quiescent_daemons_idle_on_the_heartbeat_alone() {
+        let (p, bus) = bus_pipeline();
+        // short heartbeat, zero traffic: every tick must be a fallback
+        // heartbeat (a generation-gated skip), never a bus wakeup
+        let host = crate::daemons::AgentHost::start_with_bus(
+            host_daemons(&p),
+            std::time::Duration::from_millis(5),
+            std::time::Duration::from_millis(20),
+            Some(&bus),
+        );
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        host.stop();
+        let wakeups: u64 = ["clerk", "marshaller", "transformer", "carrier", "conductor"]
+            .iter()
+            .map(|d| p.metrics.counter(&format!("pipeline.{d}.wakeups")).get())
+            .sum();
+        assert_eq!(wakeups, 0, "no events were published, so no wakeups");
+        let skips: u64 = ["clerk", "marshaller", "transformer", "carrier", "conductor"]
+            .iter()
+            .map(|d| p.metrics.poll_skip_counter(d).get())
+            .sum();
+        assert!(skips >= 5, "the fallback heartbeat must still tick: {skips} skips");
     }
 
     #[test]

@@ -32,7 +32,9 @@ use idds::daemons::{AgentHost, Daemon, Pipeline};
 use idds::hpo::{payload_space, BayesOpt, Strategy};
 use idds::metrics::Registry;
 use idds::persist::replicate::{read_epoch, read_fenced, write_epoch};
-use idds::persist::{ClusterState, Persist, PersistOptions, Replica, ReplicationOptions};
+use idds::persist::{
+    BusPersister, ClusterState, EventBus, Persist, PersistOptions, Replica, ReplicationOptions,
+};
 use idds::rest::{serve, ServerState};
 use idds::rubin::{generate_dag, schedule, Release};
 use idds::runtime::{default_artifacts_dir, EngineHandle};
@@ -190,6 +192,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let broker = Broker::new(clock.clone())
         .with_redelivery_timeout(cfg.f64("broker.redelivery_timeout_s")?);
     let metrics = Registry::default();
+    // the event bus feeds daemon wakeups and GET /api/events push streams;
+    // its publishers attach below, durability-mode dependent
+    let bus = EventBus::new(&metrics);
 
     // durability: recover checkpoint + WAL suffix before anything else
     // touches the store or the broker, then leave the WAL attached for
@@ -232,6 +237,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(persist)
     };
 
+    // arm the bus publishers. Durable nodes (primary AND standby) publish
+    // from the WAL group-commit flusher — an event is announced only after
+    // its fsync, so subscribers can never observe state a crash would
+    // unwind. In-memory mode has no WAL: the store/broker log paths
+    // publish directly at apply time instead (same at-most-once contract,
+    // minus durability, which the mode already forfeits).
+    match &persist {
+        Some(p) => {
+            p.wal().set_bus(bus.clone());
+        }
+        None => {
+            store.set_persister(Arc::new(BusPersister::new(bus.clone())));
+            broker.set_persister(Arc::new(BusPersister::new(bus.clone())));
+        }
+    }
+
     let engine = EngineHandle::start(&default_artifacts_dir())
         .context("loading AOT artifacts (run `make artifacts`)")?;
     let rt_exec = Arc::new(RuntimeExecutor::new(engine, cfg.usize("hpo.workers")?));
@@ -262,7 +283,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(registry)
     };
 
-    let pipeline = Pipeline::new(store.clone(), broker.clone(), metrics.clone(), executors);
+    let pipeline = Pipeline::new(store.clone(), broker.clone(), metrics.clone(), executors)
+        .with_bus(bus.clone());
     let (clerk, marsh, tfr, carrier, conductor) = pipeline.daemons();
     let daemons: Vec<Arc<dyn Daemon>> = vec![
         Arc::new(clerk),
@@ -272,6 +294,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Arc::new(conductor),
     ];
     let interval = std::time::Duration::from_secs_f64(cfg.f64("daemons.poll_interval_s")?);
+    // bus-armed daemons sleep until a table in their interest set commits,
+    // with a long heartbeat as the safety net (lease expiry, clock-driven
+    // work); the poll interval only matters as the busy-backoff floor
+    let heartbeat = std::time::Duration::from_millis(cfg.u64("events.heartbeat_ms")?.max(1));
     // a standby keeps its daemons parked: they would race the primary's
     // shipped transitions; the serve loop starts them the moment promote
     // latches (the standby then IS the head and the campaign continues)
@@ -279,7 +305,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut host = if is_replica {
         None
     } else {
-        Some(AgentHost::start(pending_daemons.take().unwrap(), interval))
+        Some(AgentHost::start_with_bus(
+            pending_daemons.take().unwrap(),
+            interval,
+            heartbeat,
+            Some(&bus),
+        ))
     };
 
     // replication roles: a standby starts its pull loop here; a durable
@@ -363,7 +394,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 
     // keep a store handle for the final-checkpoint teardown below
-    let mut state = ServerState::new(store.clone(), broker, metrics, &cfg);
+    let mut state = ServerState::new(store.clone(), broker, metrics, &cfg).with_bus(bus.clone());
     if let Some(p) = &persist {
         state = state.with_persist(p.clone());
     }
@@ -401,7 +432,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                             "promoted to primary at epoch {}; starting daemons",
                             r.cluster().epoch()
                         );
-                        host = Some(AgentHost::start(d, interval));
+                        host = Some(AgentHost::start_with_bus(
+                            d,
+                            interval,
+                            heartbeat,
+                            Some(&bus),
+                        ));
                     }
                 }
             }

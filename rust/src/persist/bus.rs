@@ -1,0 +1,610 @@
+//! In-process event bus fed from the WAL group-commit path.
+//!
+//! Every durable mutation already flows through [`PersistEvent`] with a
+//! monotone LSN; the group-commit flusher publishes each batch *after*
+//! advancing the durable mark (see `Wal::flush_batch`), so subscribers
+//! never see an event a crash could revoke. Two kinds of consumers hang
+//! off the bus:
+//!
+//! * **watchers** ([`EventBus::watch`]): latched condvar wake signals
+//!   keyed by a table-interest bitmask — the daemons' event-driven
+//!   replacement for interval polling. A watcher carries no payload; the
+//!   woken daemon's own generation gates decide what the wakeup means.
+//! * **subscribers** ([`EventBus::subscribe`]): bounded per-subscriber
+//!   queues of serialized events — the feed behind `GET /api/events`
+//!   (SSE) and `Client::watch_events`. A slow subscriber overflows its
+//!   *own* queue and is marked for a terminal `overflow` drop; it never
+//!   blocks the publisher or its peers.
+//!
+//! The catch-up→live-tail seam contract (no gap, no duplicate) is:
+//! subscribe **first**, then read the WAL durable mark `T`, then replay
+//! history up to `T`, then [`Subscriber::set_floor`]`(T)`. The floor
+//! drops any queued event with `lsn <= T` (the overlap a publish racing
+//! the subscribe can enqueue), while publish-after-durable guarantees
+//! every event with `lsn > T` was published after the durable mark — and
+//! therefore after the subscribe — so it is in the queue. Same
+//! continuity rule as the replication `apply_batch` cursor; see
+//! DESIGN.md "Event bus".
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::{Counter, Gauge, Registry};
+
+use super::events::{PersistEvent, Persister};
+
+/// Table-interest bits (one per [`PersistEvent::table`] value).
+pub const T_REQUESTS: u32 = 1 << 0;
+pub const T_TRANSFORMS: u32 = 1 << 1;
+pub const T_PROCESSINGS: u32 = 1 << 2;
+pub const T_COLLECTIONS: u32 = 1 << 3;
+pub const T_CONTENTS: u32 = 1 << 4;
+pub const T_MESSAGES: u32 = 1 << 5;
+pub const T_BROKER: u32 = 1 << 6;
+pub const T_ALL: u32 = (1 << 7) - 1;
+
+/// Map a table name (the `filter=` axis of `GET /api/events`) to its
+/// interest bit.
+pub fn table_mask(table: &str) -> Option<u32> {
+    Some(match table {
+        "requests" => T_REQUESTS,
+        "transforms" => T_TRANSFORMS,
+        "processings" => T_PROCESSINGS,
+        "collections" => T_COLLECTIONS,
+        "contents" => T_CONTENTS,
+        "messages" => T_MESSAGES,
+        "broker" => T_BROKER,
+        _ => return None,
+    })
+}
+
+/// True if `op` is one of the [`PersistEvent::op`] tags — lets the REST
+/// layer 400 an unknown `filter=` instead of serving an empty stream.
+pub fn known_op(op: &str) -> bool {
+    matches!(
+        op,
+        "add_request"
+            | "request_status"
+            | "request_engine"
+            | "request_engine_delta"
+            | "add_transform"
+            | "transform_status"
+            | "transform_work"
+            | "transform_retries"
+            | "add_processing"
+            | "processing_status"
+            | "processing_wfm_task"
+            | "add_collection"
+            | "close_collection"
+            | "add_contents"
+            | "content_status"
+            | "content_ddm_file"
+            | "add_message"
+            | "message_status"
+            | "broker_subscribe"
+            | "broker_unsubscribe"
+            | "broker_publish"
+            | "broker_deliver"
+            | "broker_ack"
+    )
+}
+
+fn mask_of(ev: &PersistEvent) -> u32 {
+    table_mask(ev.table()).unwrap_or(T_ALL)
+}
+
+// ---------------------------------------------------------------------------
+// Wake signals (daemon wakeups, replication fast path)
+// ---------------------------------------------------------------------------
+
+/// A latched wakeup: [`WakeSignal::notify`] bumps an epoch and wakes
+/// waiters; [`WakeSignal::wait_past`] returns immediately when the epoch
+/// already moved past the caller's snapshot. Snapshot the epoch *before*
+/// scanning for work and a notification that lands during the scan is
+/// never lost — the next wait returns at once.
+pub struct WakeSignal {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl WakeSignal {
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new() -> Arc<WakeSignal> {
+        Arc::new(WakeSignal { epoch: Mutex::new(0), cv: Condvar::new() })
+    }
+
+    /// Current epoch — snapshot this before polling for work.
+    pub fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    pub fn notify(&self) {
+        let mut e = self.epoch.lock().unwrap();
+        *e += 1;
+        self.cv.notify_all();
+    }
+
+    /// Block until the epoch passes `seen` or `timeout` elapses. Returns
+    /// `(current_epoch, true)` on a signal, `(_, false)` on timeout.
+    pub fn wait_past(&self, seen: u64, timeout: Duration) -> (u64, bool) {
+        let deadline = Instant::now() + timeout;
+        let mut e = self.epoch.lock().unwrap();
+        while *e <= seen {
+            let now = Instant::now();
+            if now >= deadline {
+                return (*e, false);
+            }
+            e = self.cv.wait_timeout(e, deadline - now).unwrap().0;
+        }
+        (*e, true)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Queued subscribers (SSE / watch feeds)
+// ---------------------------------------------------------------------------
+
+/// One published event, serialized once on the publisher and shared by
+/// every subscriber queue it lands in.
+#[derive(Clone)]
+pub struct BusEvent {
+    pub lsn: u64,
+    pub op: &'static str,
+    pub table: &'static str,
+    pub json: Arc<str>,
+}
+
+struct SubQueue {
+    items: VecDeque<BusEvent>,
+    /// Events with `lsn <= floor` are duplicates of the catch-up replay
+    /// and are dropped at enqueue (and purged by [`Subscriber::set_floor`]).
+    floor: u64,
+    /// Last LSN actually enqueued — the resume point reported on overflow.
+    last_lsn: u64,
+    /// The queue bound was hit: no further enqueues; once the backlog is
+    /// drained the consumer sees the terminal overflow marker.
+    overflowed: bool,
+    /// Empty→nonempty (or overflow) callback — e.g. the epoll loop waker.
+    /// Called under the queue lock; must not call back into the bus.
+    notify: Option<Box<dyn Fn() + Send>>,
+}
+
+struct SubscriberInner {
+    id: u64,
+    mask: u32,
+    op_filter: Option<String>,
+    cap: usize,
+    q: Mutex<SubQueue>,
+    cv: Condvar,
+}
+
+impl SubscriberInner {
+    /// Enqueue if the queue accepts it; returns `true` exactly when this
+    /// call transitioned the queue into the overflowed state.
+    fn offer(&self, ev: &BusEvent) -> bool {
+        let mut q = self.q.lock().unwrap();
+        if q.overflowed || ev.lsn <= q.floor {
+            return false;
+        }
+        if q.items.len() >= self.cap {
+            q.overflowed = true;
+            // wake the consumer so it drains and sees the terminal marker
+            if let Some(f) = &q.notify {
+                f();
+            }
+            self.cv.notify_all();
+            return true;
+        }
+        let was_empty = q.items.is_empty();
+        q.last_lsn = ev.lsn;
+        q.items.push_back(ev.clone());
+        if was_empty {
+            if let Some(f) = &q.notify {
+                f();
+            }
+            self.cv.notify_all();
+        }
+        false
+    }
+}
+
+/// Live-tail handle returned by [`EventBus::subscribe`]; unsubscribes on
+/// drop (an SSE connection closing tears its queue down with it).
+pub struct Subscriber {
+    bus: EventBus,
+    inner: Arc<SubscriberInner>,
+}
+
+impl Subscriber {
+    /// Seam dedup: drop everything the catch-up replay already delivered
+    /// (`lsn <= floor`) — both what is queued now and what a publish
+    /// racing the subscribe enqueues later. The floor only rises.
+    pub fn set_floor(&self, floor: u64) {
+        let mut q = self.inner.q.lock().unwrap();
+        q.floor = q.floor.max(floor);
+        // queued LSNs ascend, so popping the front while it is below the
+        // floor purges exactly the overlap
+        while q.items.front().is_some_and(|e| e.lsn <= floor) {
+            q.items.pop_front();
+        }
+    }
+
+    /// Install the readiness callback, fired on empty→nonempty and on
+    /// overflow. Fires immediately when something is already pending so a
+    /// late installation cannot strand queued events.
+    pub fn set_notifier(&self, f: impl Fn() + Send + 'static) {
+        let q = self.inner.q.lock().unwrap();
+        let pending = !q.items.is_empty() || q.overflowed;
+        drop(q);
+        if pending {
+            f();
+        }
+        self.inner.q.lock().unwrap().notify = Some(Box::new(f));
+    }
+
+    /// Drain up to `max` queued events. The second value is the terminal
+    /// overflow marker: `Some(last_enqueued_lsn)` once the queue bound
+    /// was hit *and* the remaining backlog has been handed out — the LSN
+    /// a resuming client passes back as `from_lsn` (+1).
+    pub fn drain(&self, max: usize) -> (Vec<BusEvent>, Option<u64>) {
+        let mut q = self.inner.q.lock().unwrap();
+        let take = q.items.len().min(max);
+        let out: Vec<BusEvent> = q.items.drain(..take).collect();
+        let overflow = if q.overflowed && q.items.is_empty() { Some(q.last_lsn) } else { None };
+        (out, overflow)
+    }
+
+    /// Block until events (or the overflow marker) are pending.
+    pub fn wait(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut q = self.inner.q.lock().unwrap();
+        while q.items.is_empty() && !q.overflowed {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            q = self.inner.cv.wait_timeout(q, deadline - now).unwrap().0;
+        }
+        true
+    }
+
+    pub fn overflowed(&self) -> bool {
+        self.inner.q.lock().unwrap().overflowed
+    }
+}
+
+impl Drop for Subscriber {
+    fn drop(&mut self) {
+        self.bus.unsubscribe(self.inner.id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The bus
+// ---------------------------------------------------------------------------
+
+struct BusInner {
+    metrics: Registry,
+    subs: Mutex<Vec<Arc<SubscriberInner>>>,
+    watchers: Mutex<Vec<(u32, Arc<WakeSignal>)>>,
+    next_sub: AtomicU64,
+    last_lsn: AtomicU64,
+    published: Arc<Counter>,
+    overflows: Arc<Counter>,
+    subscribers: Arc<Gauge>,
+}
+
+/// Cheap-to-clone handle; one per process, wired to the WAL (durable
+/// mode) or a [`BusPersister`] (no data dir) plus the daemon host, the
+/// REST state, and — in-process — a standby's pull loop.
+#[derive(Clone)]
+pub struct EventBus {
+    inner: Arc<BusInner>,
+}
+
+impl EventBus {
+    pub fn new(metrics: &Registry) -> EventBus {
+        EventBus {
+            inner: Arc::new(BusInner {
+                metrics: metrics.clone(),
+                subs: Mutex::new(Vec::new()),
+                watchers: Mutex::new(Vec::new()),
+                next_sub: AtomicU64::new(1),
+                last_lsn: AtomicU64::new(0),
+                published: metrics.counter("events.published"),
+                overflows: metrics.counter("events.overflows"),
+                subscribers: metrics.gauge("events.subscribers"),
+            }),
+        }
+    }
+
+    /// The registry this bus reports into — daemon hosts hang their
+    /// `pipeline.<name>.wakeups` counters here so wiring stays one handle.
+    pub fn metrics(&self) -> &Registry {
+        &self.inner.metrics
+    }
+
+    /// Highest LSN ever published — the live horizon when serving without
+    /// a WAL to read history from.
+    pub fn last_lsn(&self) -> u64 {
+        self.inner.last_lsn.load(Ordering::Acquire)
+    }
+
+    /// Register a wake signal for the tables in `mask`.
+    pub fn watch(&self, mask: u32) -> Arc<WakeSignal> {
+        let s = WakeSignal::new();
+        self.inner.watchers.lock().unwrap().push((mask, Arc::clone(&s)));
+        s
+    }
+
+    /// Synthetic wakeup for non-WAL daemon inputs folded into the same
+    /// interest space (the Marshaller's marshal-epoch bump, which the
+    /// Clerk's finalization gate observes).
+    pub fn signal(&self, mask: u32) {
+        for (m, s) in self.inner.watchers.lock().unwrap().iter() {
+            if m & mask != 0 {
+                s.notify();
+            }
+        }
+    }
+
+    /// Add a bounded queue fed with events matching `mask` (and, when
+    /// set, the exact `op_filter` tag).
+    pub fn subscribe(&self, mask: u32, op_filter: Option<&str>, cap: usize) -> Subscriber {
+        let inner = Arc::new(SubscriberInner {
+            id: self.inner.next_sub.fetch_add(1, Ordering::Relaxed),
+            mask,
+            op_filter: op_filter.map(|s| s.to_string()),
+            cap: cap.max(1),
+            q: Mutex::new(SubQueue {
+                items: VecDeque::new(),
+                floor: 0,
+                last_lsn: 0,
+                overflowed: false,
+                notify: None,
+            }),
+            cv: Condvar::new(),
+        });
+        self.inner.subs.lock().unwrap().push(Arc::clone(&inner));
+        self.inner.subscribers.add(1);
+        Subscriber { bus: self.clone(), inner }
+    }
+
+    fn unsubscribe(&self, id: u64) {
+        let mut subs = self.inner.subs.lock().unwrap();
+        let before = subs.len();
+        subs.retain(|s| s.id != id);
+        if subs.len() < before {
+            self.inner.subscribers.add(-1);
+        }
+    }
+
+    /// Publish one durable batch (ascending LSNs). Called by the WAL
+    /// flusher *after* the durable mark advanced, and by [`BusPersister`]
+    /// at apply time when serving without a data dir. Never blocks on a
+    /// slow subscriber: a full queue flips to overflowed and the batch
+    /// moves on.
+    pub fn publish(&self, batch: &[(u64, PersistEvent)]) {
+        if batch.is_empty() {
+            return;
+        }
+        let mut union = 0u32;
+        for (_, ev) in batch {
+            union |= mask_of(ev);
+        }
+        let subs: Vec<Arc<SubscriberInner>> = {
+            let subs = self.inner.subs.lock().unwrap();
+            subs.iter().filter(|s| s.mask & union != 0).cloned().collect()
+        };
+        if !subs.is_empty() {
+            for (lsn, ev) in batch {
+                let mask = mask_of(ev);
+                if !subs.iter().any(|s| s.mask & mask != 0) {
+                    continue;
+                }
+                // serialize once per event, not per subscriber
+                let mut text = String::new();
+                ev.to_json().write_to(&mut text);
+                let be =
+                    BusEvent { lsn: *lsn, op: ev.op(), table: ev.table(), json: text.into() };
+                for s in &subs {
+                    if s.mask & mask == 0 {
+                        continue;
+                    }
+                    if s.op_filter.as_deref().is_some_and(|f| f != be.op) {
+                        continue;
+                    }
+                    if s.offer(&be) {
+                        self.inner.overflows.inc();
+                    }
+                }
+            }
+        }
+        self.inner.published.add(batch.len() as u64);
+        if let Some((last, _)) = batch.last() {
+            self.inner.last_lsn.fetch_max(*last, Ordering::AcqRel);
+        }
+        // watchers last: a woken daemon observes both the store mutation
+        // and anything queued above
+        self.signal(union);
+    }
+
+    /// Subscriber queues currently attached (tests / health).
+    pub fn subscriber_count(&self) -> usize {
+        self.inner.subs.lock().unwrap().len()
+    }
+}
+
+/// [`Persister`] that publishes straight to the bus — the serve path
+/// without `--data-dir`, where there is no WAL flush to hook: events
+/// become visible at apply time instead of at group commit, minted from
+/// a process-local LSN sequence. Bus locks are leaf locks (the publish
+/// path runs under store row/index locks), matching the `Persister`
+/// contract.
+pub struct BusPersister {
+    bus: EventBus,
+    next_lsn: AtomicU64,
+}
+
+impl BusPersister {
+    pub fn new(bus: EventBus) -> BusPersister {
+        BusPersister { bus, next_lsn: AtomicU64::new(1) }
+    }
+}
+
+impl Persister for BusPersister {
+    fn log(&self, ev: PersistEvent) {
+        let lsn = self.next_lsn.fetch_add(1, Ordering::Relaxed);
+        self.bus.publish(&[(lsn, ev)]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{MessageStatus, RequestKind, RequestStatus};
+    use crate::util::json::Json;
+
+    fn req_ev(i: u64) -> PersistEvent {
+        PersistEvent::AddRequest {
+            id: i,
+            name: format!("r{i}"),
+            requester: "u".into(),
+            kind: RequestKind::Workflow,
+            workflow: Json::Null,
+            at: i as f64,
+        }
+    }
+
+    fn msg_ev(i: u64) -> PersistEvent {
+        PersistEvent::MessageStatus { ids: vec![i], to: MessageStatus::Delivered }
+    }
+
+    #[test]
+    fn every_table_has_a_mask() {
+        for ev in [
+            req_ev(1),
+            PersistEvent::RequestStatus { ids: vec![1], to: RequestStatus::Finished, at: 0.0 },
+            PersistEvent::AddTransform {
+                id: 2,
+                request_id: 1,
+                name: "t".into(),
+                work: Json::Null,
+                at: 0.0,
+            },
+            PersistEvent::AddProcessing { id: 3, transform_id: 2, at: 0.0 },
+            PersistEvent::CloseCollection { id: 4 },
+            PersistEvent::AddContents { collection_id: 4, items: vec![], at: 0.0 },
+            msg_ev(5),
+            PersistEvent::BrokerAck { sub: 6, ids: vec![] },
+        ] {
+            assert!(
+                table_mask(ev.table()).is_some(),
+                "table '{}' of op '{}' must map to a mask",
+                ev.table(),
+                ev.op()
+            );
+        }
+    }
+
+    #[test]
+    fn floor_drops_catchup_overlap() {
+        let bus = EventBus::new(&Registry::default());
+        let sub = bus.subscribe(T_ALL, None, 64);
+        bus.publish(&(1..=5u64).map(|i| (i, req_ev(i))).collect::<Vec<_>>());
+        sub.set_floor(3);
+        let (evs, overflow) = sub.drain(10);
+        assert_eq!(evs.iter().map(|e| e.lsn).collect::<Vec<_>>(), vec![4, 5]);
+        assert!(overflow.is_none());
+        // late enqueues below the floor are dropped too
+        bus.publish(&[(2, req_ev(2)), (6, req_ev(6))]);
+        let (evs, _) = sub.drain(10);
+        assert_eq!(evs.iter().map(|e| e.lsn).collect::<Vec<_>>(), vec![6]);
+    }
+
+    #[test]
+    fn overflow_is_terminal_and_reports_last_enqueued_lsn() {
+        let bus = EventBus::new(&Registry::default());
+        let sub = bus.subscribe(T_ALL, None, 2);
+        bus.publish(&(1..=5u64).map(|i| (i, req_ev(i))).collect::<Vec<_>>());
+        assert!(sub.overflowed());
+        let (evs, overflow) = sub.drain(1);
+        assert_eq!(evs.len(), 1);
+        assert!(overflow.is_none(), "marker only after the backlog drains");
+        let (evs, overflow) = sub.drain(10);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(overflow, Some(2), "resume point is the last enqueued lsn");
+        // once overflowed, nothing is ever enqueued again
+        bus.publish(&[(9, req_ev(9))]);
+        let (evs, overflow) = sub.drain(10);
+        assert!(evs.is_empty());
+        assert_eq!(overflow, Some(2));
+        assert_eq!(bus.metrics().counter("events.overflows").get(), 1);
+    }
+
+    #[test]
+    fn slow_subscriber_does_not_block_publisher_or_peers() {
+        let bus = EventBus::new(&Registry::default());
+        let slow = bus.subscribe(T_ALL, None, 1);
+        let fast = bus.subscribe(T_ALL, None, 1024);
+        bus.publish(&(1..=100u64).map(|i| (i, req_ev(i))).collect::<Vec<_>>());
+        assert!(slow.overflowed());
+        let (evs, overflow) = fast.drain(1000);
+        assert_eq!(evs.len(), 100, "fast subscriber sees every event");
+        assert!(overflow.is_none());
+    }
+
+    #[test]
+    fn masks_and_op_filters_select_events() {
+        let bus = EventBus::new(&Registry::default());
+        let reqs = bus.subscribe(T_REQUESTS, None, 64);
+        let acks = bus.subscribe(T_ALL, Some("message_status"), 64);
+        bus.publish(&[(1, req_ev(1)), (2, msg_ev(2)), (3, req_ev(3))]);
+        let (evs, _) = reqs.drain(10);
+        assert_eq!(evs.iter().map(|e| e.op).collect::<Vec<_>>(), vec!["add_request"; 2]);
+        let (evs, _) = acks.drain(10);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].op, "message_status");
+    }
+
+    #[test]
+    fn watchers_wake_only_on_matching_tables() {
+        let bus = EventBus::new(&Registry::default());
+        let sig = bus.watch(T_REQUESTS);
+        let seen = sig.epoch();
+        bus.publish(&[(1, msg_ev(1))]);
+        let (_, woke) = sig.wait_past(seen, Duration::from_millis(10));
+        assert!(!woke, "a messages event must not wake a requests watcher");
+        bus.publish(&[(2, req_ev(2))]);
+        let (_, woke) = sig.wait_past(seen, Duration::from_secs(5));
+        assert!(woke);
+        // synthetic signals fold into the same space
+        let seen = sig.epoch();
+        bus.signal(T_REQUESTS);
+        assert!(sig.wait_past(seen, Duration::from_secs(5)).1);
+    }
+
+    #[test]
+    fn dropped_subscriber_detaches_from_the_bus() {
+        let bus = EventBus::new(&Registry::default());
+        let sub = bus.subscribe(T_ALL, None, 4);
+        assert_eq!(bus.subscriber_count(), 1);
+        drop(sub);
+        assert_eq!(bus.subscriber_count(), 0);
+    }
+
+    #[test]
+    fn bus_persister_mints_dense_lsns() {
+        let bus = EventBus::new(&Registry::default());
+        let sub = bus.subscribe(T_ALL, None, 64);
+        let p = BusPersister::new(bus.clone());
+        for i in 0..5u64 {
+            p.log(req_ev(i));
+        }
+        let (evs, _) = sub.drain(10);
+        assert_eq!(evs.iter().map(|e| e.lsn).collect::<Vec<_>>(), vec![1, 2, 3, 4, 5]);
+        assert_eq!(bus.last_lsn(), 5);
+    }
+}

@@ -225,6 +225,36 @@ impl PersistEvent {
         }
     }
 
+    /// Which logical table this event mutates — the event bus's filter
+    /// and daemon-interest axis (see `persist::bus::table_mask`).
+    pub fn table(&self) -> &'static str {
+        match self {
+            PersistEvent::AddRequest { .. }
+            | PersistEvent::RequestStatus { .. }
+            | PersistEvent::RequestEngine { .. }
+            | PersistEvent::RequestEngineDelta { .. } => "requests",
+            PersistEvent::AddTransform { .. }
+            | PersistEvent::TransformStatus { .. }
+            | PersistEvent::TransformWork { .. }
+            | PersistEvent::TransformRetries { .. } => "transforms",
+            PersistEvent::AddProcessing { .. }
+            | PersistEvent::ProcessingStatus { .. }
+            | PersistEvent::ProcessingWfmTask { .. } => "processings",
+            PersistEvent::AddCollection { .. } | PersistEvent::CloseCollection { .. } => {
+                "collections"
+            }
+            PersistEvent::AddContents { .. }
+            | PersistEvent::ContentStatus { .. }
+            | PersistEvent::ContentDdmFile { .. } => "contents",
+            PersistEvent::AddMessage { .. } | PersistEvent::MessageStatus { .. } => "messages",
+            PersistEvent::BrokerSubscribe { .. }
+            | PersistEvent::BrokerUnsubscribe { .. }
+            | PersistEvent::BrokerPublish { .. }
+            | PersistEvent::BrokerDeliver { .. }
+            | PersistEvent::BrokerAck { .. } => "broker",
+        }
+    }
+
     /// Whether recovery routes this event to the broker instead of the
     /// store (see `Persist::open_with_broker`).
     pub fn is_broker(&self) -> bool {

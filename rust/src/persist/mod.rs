@@ -43,6 +43,7 @@
 //! suffix converges) lives in DESIGN.md, "Durability model" and "Delta
 //! checkpoints".
 
+pub mod bus;
 pub mod events;
 pub mod failpoints;
 pub mod replicate;
@@ -64,6 +65,7 @@ use crate::store::snapshot::DecodedSnapshot;
 use crate::store::{DirtySets, Id, Store};
 use crate::util::json::{parse, Json};
 
+pub use bus::{BusPersister, EventBus, Subscriber, WakeSignal};
 pub use events::{PersistEvent, Persister};
 pub use replicate::{ClusterState, Replica, ReplicationOptions};
 pub use wal::Wal;

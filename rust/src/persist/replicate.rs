@@ -377,6 +377,12 @@ struct ReplicaShared {
     opts: ReplicationOptions,
     metrics: Registry,
     stop: AtomicBool,
+    /// When the primary runs in the same process (tests, embedded
+    /// topologies), its event bus signal turns the caught-up idle sleep
+    /// into a wakeup: new durable frames pull immediately instead of
+    /// waiting out `poll_interval_ms`. Over the network this is `None`
+    /// and the loop falls back to the plain interval poll.
+    wake: Option<Arc<super::bus::WakeSignal>>,
 }
 
 /// A running standby: the pull thread plus the promote entry point.
@@ -400,6 +406,24 @@ impl Replica {
         opts: ReplicationOptions,
         metrics: Registry,
     ) -> Result<Arc<Replica>> {
+        Self::start_with_wake(store, broker, persist, cluster, token, opts, metrics, None)
+    }
+
+    /// Like [`Replica::start`], with an optional wake signal from the
+    /// *primary's* event bus (in-process topologies only): the caught-up
+    /// idle sleep becomes signal-driven, so freshly durable frames pull
+    /// immediately instead of waiting out the poll interval.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_with_wake(
+        store: Store,
+        broker: Broker,
+        persist: Persist,
+        cluster: Arc<ClusterState>,
+        token: &str,
+        opts: ReplicationOptions,
+        metrics: Registry,
+        wake: Option<Arc<super::bus::WakeSignal>>,
+    ) -> Result<Arc<Replica>> {
         // resume where the local WAL ends: recovery replayed it into the
         // store, so the first pull asks for the next primary LSN
         let resume = persist.wal().next_lsn().saturating_sub(1);
@@ -413,6 +437,7 @@ impl Replica {
             opts,
             metrics,
             stop: AtomicBool::new(false),
+            wake,
         });
         let replica = Arc::new(Replica {
             shared: Arc::clone(&shared),
@@ -434,6 +459,9 @@ impl Replica {
     /// Stop pulling (graceful standby shutdown; promote calls this too).
     pub fn stop(&self) {
         self.shared.stop.store(true, Ordering::Release);
+        if let Some(w) = &self.shared.wake {
+            w.notify(); // interrupt a signal-driven idle wait
+        }
         if let Some(t) = self.puller.lock().unwrap().take() {
             let _ = t.join();
         }
@@ -531,13 +559,21 @@ fn pull_loop(sh: &ReplicaShared) {
             );
             break;
         }
+        // snapshot the wake epoch BEFORE pulling: frames published while
+        // the pull is in flight advance the epoch, so the wait below
+        // returns immediately instead of missing them until the next poll
+        let seen = sh.wake.as_ref().map(|w| w.epoch());
         match pull_once(sh) {
             Ok(applied) => {
                 lag_gauge.set(sh.cluster.lag_lsn() as i64);
                 if applied == 0 && !sh.stop.load(Ordering::Acquire) {
-                    std::thread::sleep(std::time::Duration::from_millis(
-                        sh.opts.poll_interval_ms,
-                    ));
+                    let idle = std::time::Duration::from_millis(sh.opts.poll_interval_ms);
+                    match (&sh.wake, seen) {
+                        (Some(w), Some(s)) => {
+                            w.wait_past(s, idle);
+                        }
+                        _ => std::thread::sleep(idle),
+                    }
                 }
             }
             Err(e) => {

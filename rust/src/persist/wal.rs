@@ -34,6 +34,7 @@ use anyhow::{Context, Result};
 use crate::metrics::{Counter, Gauge, Registry};
 use crate::util::json::parse;
 
+use super::bus::EventBus;
 use super::events::{PersistEvent, Persister};
 use super::FsyncMode;
 
@@ -310,6 +311,12 @@ struct WalInner {
     /// never wait behind the writer mutex (held across write+fsync)
     segments: AtomicUsize,
     idle_wait: std::time::Duration,
+    /// Event bus fed from the group-commit path: `flush_batch` publishes
+    /// every batch *after* advancing the durable mark, making the
+    /// subscriber-visible prefix of the log exactly the durable prefix.
+    /// Covers both append paths — primary `log()` and the standby's
+    /// `append_shipped` drain through the same flusher.
+    bus: OnceLock<EventBus>,
     m: WalMetrics,
 }
 
@@ -422,6 +429,7 @@ impl Wal {
             wal_bytes_total: AtomicU64::new(on_disk_bytes + bytes),
             segments: AtomicUsize::new(closed_count + 1),
             idle_wait: std::time::Duration::from_millis(idle_wait_ms.max(1)),
+            bus: OnceLock::new(),
             m: WalMetrics {
                 appends: metrics.counter("persist.wal.appends"),
                 flushes: metrics.counter("persist.wal.flushes"),
@@ -467,6 +475,7 @@ impl Wal {
         let mut sp = crate::obs::span("persist.wal.flush");
         sp.attr("frames", batch.len());
         let mut buf = Vec::with_capacity(batch.len() * 128);
+        let mut dropped: Vec<u64> = Vec::new();
         for (lsn, ev) in batch {
             let mut text = String::new();
             ev.to_json().write_to(&mut text);
@@ -483,6 +492,7 @@ impl Wal {
                 );
                 let mut d = inner.d.lock().unwrap();
                 d.io_error.get_or_insert_with(|| "oversized wal event dropped".to_string());
+                dropped.push(*lsn);
                 continue;
             }
             encode_frame(*lsn, &text, &mut buf);
@@ -561,6 +571,19 @@ impl Wal {
             d.lsn = d.lsn.max(last_lsn);
             inner.d_cv.notify_all();
         }
+        // publish-after-durable: the bus sees a batch only once the
+        // durable mark covers it, so nothing a crash could revoke is ever
+        // delivered to a subscriber. Oversized frames never reached the
+        // disk, so they are not published either.
+        if let Some(bus) = inner.bus.get() {
+            if dropped.is_empty() {
+                bus.publish(batch);
+            } else {
+                let kept: Vec<(u64, PersistEvent)> =
+                    batch.iter().filter(|(lsn, _)| !dropped.contains(lsn)).cloned().collect();
+                bus.publish(&kept);
+            }
+        }
         let lag = {
             let q = inner.q.lock().unwrap();
             (q.next_lsn - 1).saturating_sub(last_lsn)
@@ -571,6 +594,13 @@ impl Wal {
     /// LSN the next logged event will get.
     pub fn next_lsn(&self) -> u64 {
         self.inner.q.lock().unwrap().next_lsn
+    }
+
+    /// Attach the event bus (one-shot; returns false if already set).
+    /// From this point every flushed batch is published after its durable
+    /// mark advances.
+    pub fn set_bus(&self, bus: EventBus) -> bool {
+        self.inner.bus.set(bus).is_ok()
     }
 
     /// Standby append path: enqueue a frame shipped from the primary,
@@ -937,6 +967,35 @@ mod tests {
         wal.flush();
         assert_eq!(wal.durable_lsn(), durable, "no frame may land after the fence");
         assert!(wal.io_error().is_some(), "the drop surfaces as the sticky io_error");
+        wal.stop();
+        flusher.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn flush_publishes_to_the_bus_in_lsn_order() {
+        let dir = tmp_dir("bus");
+        let metrics = Registry::default();
+        let (wal, flusher) =
+            Wal::create(&dir, 1 << 30, FsyncMode::Never, 5, 1, 1, Vec::new(), 0, &metrics).unwrap();
+        let bus = crate::persist::bus::EventBus::new(&metrics);
+        let sub = bus.subscribe(crate::persist::bus::T_ALL, None, 1024);
+        assert!(wal.set_bus(bus));
+        for i in 1..=20u64 {
+            wal.log(ev(i));
+        }
+        wal.flush();
+        // flush() returns once the durable mark covers the batch; the
+        // publish runs right after in the same flusher call, so a short
+        // wait is enough
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let mut lsns: Vec<u64> = Vec::new();
+        while lsns.len() < 20 && std::time::Instant::now() < deadline {
+            sub.wait(std::time::Duration::from_millis(50));
+            let (evs, _) = sub.drain(100);
+            lsns.extend(evs.iter().map(|e| e.lsn));
+        }
+        assert_eq!(lsns, (1..=20u64).collect::<Vec<_>>());
         wal.stop();
         flusher.join().unwrap();
         std::fs::remove_dir_all(&dir).ok();

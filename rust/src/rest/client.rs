@@ -11,7 +11,10 @@
 //! response was read, so "never retry a non-idempotent call after a
 //! response was read" holds by construction.
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -348,6 +351,259 @@ impl Client {
             std::thread::sleep(std::time::Duration::from_millis(20));
         }
     }
+
+    /// Open the live event feed (`GET /api/events`) as a blocking
+    /// iterator of [`SseEvent`]s. `from_lsn` replays history from the WAL
+    /// first (the server answers `410 Gone` — surfaced here as an error —
+    /// when that history was pruned); `filter` is a table name or an
+    /// event op tag. The stream ends when the server closes it, including
+    /// after a terminal `overflow` event (resume with
+    /// `from_lsn = last_lsn + 1`).
+    pub fn watch_events(
+        &self,
+        from_lsn: Option<u64>,
+        filter: Option<&str>,
+    ) -> Result<WatchEvents> {
+        let mut path = String::from("/api/events");
+        let mut sep = '?';
+        if let Some(from) = from_lsn {
+            path.push(sep);
+            sep = '&';
+            path.push_str(&format!("from_lsn={from}"));
+        }
+        if let Some(f) = filter {
+            path.push(sep);
+            path.push_str(&format!("filter={f}"));
+        }
+        // hand-rolled request: http_request reads whole responses, which
+        // an open-ended stream never finishes
+        let mut stream = TcpStream::connect(self.addr)
+            .map_err(anyhow::Error::new)
+            .context(ConnectError)?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let req = format!(
+            "GET {path} HTTP/1.1\r\nHost: localhost\r\nAuthorization: Bearer {}\r\n\
+             Connection: close\r\nContent-Length: 0\r\n\r\n",
+            self.token
+        );
+        stream.write_all(req.as_bytes())?;
+        let mut buf = Vec::new();
+        let head_end = loop {
+            if let Some(end) = find_head_end(&buf) {
+                break end;
+            }
+            let mut tmp = [0u8; 4096];
+            match stream.read(&mut tmp)? {
+                0 => bail!("GET {path}: server closed before sending a response head"),
+                n => buf.extend_from_slice(&tmp[..n]),
+            }
+        };
+        let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+        buf.drain(..head_end);
+        let status: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .context("bad status line")?
+            .parse()
+            .context("bad status code")?;
+        if status != 200 {
+            // error responses are ordinary bounded bodies; we asked for
+            // Connection: close, so read-to-EOF collects it
+            let mut tmp = [0u8; 4096];
+            while buf.len() < 64 * 1024 {
+                match stream.read(&mut tmp) {
+                    Ok(0) => break,
+                    Ok(n) => buf.extend_from_slice(&tmp[..n]),
+                    Err(_) => break,
+                }
+            }
+            let msg = std::str::from_utf8(&buf)
+                .ok()
+                .and_then(|s| parse(s).ok())
+                .and_then(|j| j.get("error").and_then(|e| e.as_str()).map(str::to_string))
+                .unwrap_or_else(|| "?".to_string());
+            bail!("GET {path} -> {status}: {msg}");
+        }
+        Ok(WatchEvents { stream, buf, done: false })
+    }
+
+    /// Wait for a request to reach a terminal status, push-driven (no
+    /// polling loop): subscribe to the live `request_status` feed FIRST,
+    /// then read the current status — a transition landing between the
+    /// two shows up on the stream, one already past shows up in the read.
+    pub fn wait_request(&self, id: u64, timeout: Duration) -> Result<RequestStatus> {
+        let deadline = Instant::now() + timeout;
+        let mut watch = self.watch_events(None, Some("request_status"))?;
+        let s = self.request_status(id)?;
+        if s.is_terminal() {
+            return Ok(s);
+        }
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("request {id} not terminal after {timeout:?}");
+            }
+            match watch.next_within(deadline - now)? {
+                Some(ev) if ev.op == "overflow" => {
+                    // the feed fell behind and ended; re-arm it, checking
+                    // the status on either side of the new subscribe so
+                    // the gap cannot hide the terminal transition
+                    let s = self.request_status(id)?;
+                    if s.is_terminal() {
+                        return Ok(s);
+                    }
+                    watch = self.watch_events(None, Some("request_status"))?;
+                    let s = self.request_status(id)?;
+                    if s.is_terminal() {
+                        return Ok(s);
+                    }
+                }
+                Some(ev) => {
+                    let ours = ev
+                        .data
+                        .get("ids")
+                        .and_then(|a| a.as_arr())
+                        .is_some_and(|a| a.iter().any(|v| v.as_u64() == Some(id)));
+                    if !ours {
+                        continue;
+                    }
+                    if let Some(st) = ev
+                        .data
+                        .get("to")
+                        .and_then(|v| v.as_str())
+                        .and_then(RequestStatus::parse)
+                    {
+                        if st.is_terminal() {
+                            return Ok(st);
+                        }
+                    }
+                }
+                None => {
+                    if watch.ended() {
+                        bail!("event stream closed while waiting for request {id}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One event off the SSE feed: the WAL position, the op tag (or
+/// `overflow` for the terminal queue-bound frame), and the event's JSON.
+#[derive(Debug, Clone)]
+pub struct SseEvent {
+    pub lsn: u64,
+    pub op: String,
+    pub data: Json,
+}
+
+/// A live `GET /api/events` connection: iterate it for events, or use
+/// [`WatchEvents::next_within`] for deadline-bounded steps. The iterator
+/// ends when the server closes the stream.
+pub struct WatchEvents {
+    stream: TcpStream,
+    /// Raw received-but-unparsed bytes (a frame can split across reads).
+    buf: Vec<u8>,
+    done: bool,
+}
+
+/// Index one past the `\r\n\r\n` head terminator.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4)
+}
+
+/// Index one past the `\n\n` frame terminator.
+fn find_frame_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(2).position(|w| w == b"\n\n").map(|i| i + 2)
+}
+
+/// Parse one SSE frame block. `None` for comment/heartbeat frames (no
+/// `event:` field).
+fn parse_sse_frame(text: &str) -> Option<SseEvent> {
+    let mut lsn = 0u64;
+    let mut op = String::new();
+    let mut data = Json::Null;
+    for line in text.split('\n') {
+        if let Some(v) = line.strip_prefix("id: ") {
+            lsn = v.trim().parse().unwrap_or(0);
+        } else if let Some(v) = line.strip_prefix("event: ") {
+            op = v.trim().to_string();
+        } else if let Some(v) = line.strip_prefix("data: ") {
+            data = parse(v).unwrap_or(Json::Null);
+        }
+    }
+    if op.is_empty() {
+        None
+    } else {
+        Some(SseEvent { lsn, op, data })
+    }
+}
+
+impl WatchEvents {
+    /// True once the server has closed the stream (clean end, overflow
+    /// already delivered, or error).
+    pub fn ended(&self) -> bool {
+        self.done
+    }
+
+    /// Block up to `timeout` for the next event. `Ok(None)` means the
+    /// deadline passed — or the stream ended; disambiguate with
+    /// [`WatchEvents::ended`].
+    pub fn next_within(&mut self, timeout: Duration) -> Result<Option<SseEvent>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(end) = find_frame_end(&self.buf) {
+                let frame: Vec<u8> = self.buf.drain(..end).collect();
+                let text = String::from_utf8_lossy(&frame).into_owned();
+                match parse_sse_frame(&text) {
+                    Some(ev) => return Ok(Some(ev)),
+                    None => continue, // comment frame: skip
+                }
+            }
+            if self.done {
+                return Ok(None);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            self.stream.set_read_timeout(Some(deadline - now))?;
+            let mut tmp = [0u8; 4096];
+            match self.stream.read(&mut tmp) {
+                Ok(0) => self.done = true,
+                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Ok(None);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    self.done = true;
+                    return Err(e.into());
+                }
+            }
+        }
+    }
+}
+
+impl Iterator for WatchEvents {
+    type Item = Result<SseEvent>;
+
+    fn next(&mut self) -> Option<Result<SseEvent>> {
+        loop {
+            if self.done && find_frame_end(&self.buf).is_none() {
+                return None;
+            }
+            match self.next_within(Duration::from_secs(3600)) {
+                Ok(Some(ev)) => return Some(Ok(ev)),
+                Ok(None) => {} // idle hour (or just ended): re-check
+                Err(e) => return Some(Err(e)),
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -407,6 +663,81 @@ mod tests {
         // give an (incorrect) retry time to show up before counting
         std::thread::sleep(std::time::Duration::from_millis(100));
         assert_eq!(conns.load(Ordering::SeqCst), 1, "non-idempotent calls go once");
+    }
+
+    /// A listener that answers its first connection with `head` and then
+    /// each element of `frames` (flushed separately), then closes.
+    fn canned_stream_listener(
+        head: &'static [u8],
+        frames: &'static [&'static [u8]],
+    ) -> std::net::SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let Ok((mut sock, _)) = listener.accept() else { return };
+            let mut buf = [0u8; 4096];
+            let _ = sock.read(&mut buf); // absorb the request head
+            let _ = sock.write_all(head);
+            for f in frames {
+                let _ = sock.write_all(f);
+                let _ = sock.flush();
+            }
+            // closing the socket ends the stream
+        });
+        addr
+    }
+
+    #[test]
+    fn watch_events_reports_non_200_as_error() {
+        let addr = canned_stream_listener(
+            b"HTTP/1.1 410 Gone\r\nContent-Type: application/json\r\nContent-Length: 16\r\n\
+              Connection: close\r\n\r\n{\"error\":\"gone\"}",
+            &[],
+        );
+        let client = Client::new(addr, "t").with_retries(0, 1);
+        let err = client.watch_events(Some(1), None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("410"), "error names the status: {msg}");
+        assert!(msg.contains("gone"), "error carries the server message: {msg}");
+    }
+
+    #[test]
+    fn watch_events_iterates_frames_and_ends_on_close() {
+        let addr = canned_stream_listener(
+            b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nConnection: close\r\n\r\n",
+            &[
+                b"id: 1\nevent: add_request\ndata: {\"id\":7}\n\n",
+                b"id: 3\nevent: overflow\ndata: {\"last_lsn\":3}\n\n",
+            ],
+        );
+        let client = Client::new(addr, "t").with_retries(0, 1);
+        let mut watch = client.watch_events(None, Some("requests")).unwrap();
+
+        let ev = watch.next_within(Duration::from_secs(5)).unwrap().expect("first frame");
+        assert_eq!(ev.lsn, 1);
+        assert_eq!(ev.op, "add_request");
+        assert_eq!(ev.data.get("id").and_then(|v| v.as_u64()), Some(7));
+
+        let ev = watch.next_within(Duration::from_secs(5)).unwrap().expect("second frame");
+        assert_eq!(ev.lsn, 3);
+        assert_eq!(ev.op, "overflow");
+        assert_eq!(ev.data.get("last_lsn").and_then(|v| v.as_u64()), Some(3));
+
+        // the peer closed after the terminal frame: the stream is over
+        let end = watch.next_within(Duration::from_secs(5)).unwrap();
+        assert!(end.is_none());
+        assert!(watch.ended());
+    }
+
+    #[test]
+    fn sse_frame_parsing_handles_splits_and_comments() {
+        assert_eq!(find_head_end(b"HTTP/1.1 200 OK\r\nA: b\r\n\r\nrest"), Some(25));
+        assert_eq!(find_head_end(b"HTTP/1.1 200 OK\r\n"), None);
+        assert_eq!(find_frame_end(b"id: 1\nevent: x\n\ntail"), Some(16));
+        assert_eq!(find_frame_end(b"id: 1\nevent: x\n"), None);
+        let ev = parse_sse_frame("id: 9\nevent: add_request\ndata: {\"a\":1}\n").unwrap();
+        assert_eq!((ev.lsn, ev.op.as_str()), (9, "add_request"));
+        assert!(parse_sse_frame(": keepalive comment\n").is_none());
     }
 
     #[test]

@@ -65,7 +65,29 @@ impl Request {
     }
 }
 
-#[derive(Debug, Clone)]
+/// What a [`StreamSource::pull`] produced.
+pub enum StreamPull {
+    /// No bytes right now; the connection parks (no deadline) until the
+    /// source fires its notifier.
+    Idle,
+    /// `out` was filled; flush it and pull again.
+    Data,
+    /// Source exhausted (any terminal frame was already pulled); the
+    /// connection closes once the buffer drains.
+    Done,
+}
+
+/// A push source behind a streamed (`Content-Length`-less) response —
+/// the SSE feed. The event loop pulls a chunk whenever the connection's
+/// write buffer drains; between chunks the connection parks. New data
+/// re-schedules it through the notifier, which the loop installs once
+/// (before the first pull) and which must be callable from any thread.
+pub trait StreamSource: Send + Sync {
+    fn set_notifier(&self, notify: Box<dyn Fn() + Send>);
+    fn pull(&self, out: &mut Vec<u8>) -> StreamPull;
+}
+
+#[derive(Clone)]
 pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
@@ -73,6 +95,23 @@ pub struct Response {
     /// LSN watermarks here so binary bodies stay pure frame bytes).
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    /// When set, `body` is only the first flush: the connection stays
+    /// open and refills from the source until it reports
+    /// [`StreamPull::Done`]. Streamed responses carry no
+    /// `Content-Length` and always `Connection: close`.
+    pub stream: Option<Arc<dyn StreamSource>>,
+}
+
+impl std::fmt::Debug for Response {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Response")
+            .field("status", &self.status)
+            .field("content_type", &self.content_type)
+            .field("headers", &self.headers)
+            .field("body_len", &self.body.len())
+            .field("stream", &self.stream.is_some())
+            .finish()
+    }
 }
 
 impl Response {
@@ -86,6 +125,7 @@ impl Response {
             content_type: "application/json",
             headers: Vec::new(),
             body: buf.into_bytes(),
+            stream: None,
         }
     }
 
@@ -95,6 +135,7 @@ impl Response {
             content_type: "text/plain",
             headers: Vec::new(),
             body: body.as_bytes().to_vec(),
+            stream: None,
         }
     }
 
@@ -105,6 +146,23 @@ impl Response {
             content_type: "application/octet-stream",
             headers: Vec::new(),
             body,
+            stream: None,
+        }
+    }
+
+    /// A streamed response: `body` (the catch-up payload) flushes with
+    /// the head, then the connection refills from `src`.
+    pub fn streaming(
+        content_type: &'static str,
+        body: Vec<u8>,
+        src: Arc<dyn StreamSource>,
+    ) -> Response {
+        Response {
+            status: 200,
+            content_type,
+            headers: Vec::new(),
+            body,
+            stream: Some(src),
         }
     }
 
@@ -556,6 +614,28 @@ fn serialize_response(out: &mut Vec<u8>, resp: &Response, keep_alive: bool) {
     out.extend_from_slice(&resp.body);
 }
 
+/// Head for a streamed response: no `Content-Length` (the total length
+/// is unknowable) and always `Connection: close` — the stream's own
+/// framing is the only delimiter, so keep-alive is off the table.
+fn serialize_stream_head(out: &mut Vec<u8>, resp: &Response) {
+    use std::fmt::Write as _;
+    let mut head = String::with_capacity(128);
+    let _ = write!(
+        head,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nConnection: close\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+    );
+    for (k, v) in &resp.headers {
+        let _ = write!(head, "{k}: {v}\r\n");
+    }
+    head.push_str("\r\n");
+    out.reserve(head.len() + resp.body.len());
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(&resp.body);
+}
+
 /// The shed/overload answer: `503` with an explicit retry hint.
 fn retry_later(msg: &str) -> Response {
     Response::json(503, Json::obj().set("error", msg)).with_header("Retry-After", 1)
@@ -632,6 +712,10 @@ struct Conn {
     peer_eof: bool,
     /// Final response flushed; draining inbound until EOF/deadline.
     lingering: bool,
+    /// Streamed response in progress: refill `out` from here when it
+    /// drains. Dropping the connection drops the source, which is what
+    /// detaches an SSE subscriber from the bus.
+    feed: Option<Arc<dyn StreamSource>>,
 }
 
 /// Coarse hashed timer wheel: 512 slots × 20 ms ≈ 10 s horizon, lazy
@@ -695,12 +779,20 @@ struct Completion {
 /// byte so a parked `epoll_wait` notices the push.
 struct Shared {
     completions: Mutex<Vec<Completion>>,
+    /// Tokens of streaming connections whose source has fresh data —
+    /// pushed from stream notifiers (any thread), drained on the loop.
+    stream_ready: Mutex<Vec<u64>>,
     waker_tx: UnixStream,
 }
 
 impl Shared {
     fn push(&self, c: Completion) {
         self.completions.lock().unwrap().push(c);
+        self.wake();
+    }
+
+    fn push_stream_ready(&self, token: u64) {
+        self.stream_ready.lock().unwrap().push(token);
         self.wake();
     }
 
@@ -882,6 +974,7 @@ impl EventLoop {
                 }
             }
             self.drain_completions();
+            self.drain_stream_ready();
         }
         for idx in 0..self.conns.len() {
             if self.conns[idx].is_some() {
@@ -937,6 +1030,7 @@ impl EventLoop {
                 reg_write: false,
                 peer_eof: false,
                 lingering: false,
+                feed: None,
             });
             self.open += 1;
             self.m_open.add(1);
@@ -960,13 +1054,14 @@ impl EventLoop {
     fn read_ready(&mut self, idx: u32) {
         let mut io_error = false;
         let mut woke_from_idle = false;
-        let (lingering, eof) = {
+        let (lingering, streaming, eof) = {
             let Some(conn) = self.conns[idx as usize].as_mut() else {
                 return;
             };
+            let streaming = conn.feed.is_some();
             let mut tmp = [0u8; READ_CHUNK];
             loop {
-                let full = if conn.lingering {
+                let full = if conn.lingering || streaming {
                     false // draining: read and discard until EOF
                 } else {
                     match conn.state {
@@ -981,7 +1076,7 @@ impl EventLoop {
                 match conn.stream.read(&mut tmp) {
                     Ok(0) => conn.peer_eof = true,
                     Ok(n) => {
-                        if conn.lingering {
+                        if conn.lingering || streaming {
                             continue; // discard
                         }
                         if conn.deadline_kind == DeadlineKind::Idle {
@@ -997,13 +1092,23 @@ impl EventLoop {
                     }
                 }
             }
-            (conn.lingering, conn.peer_eof)
+            (conn.lingering, streaming, conn.peer_eof)
         };
         if lingering {
             // the final response already flushed; any way the drain ends
             // is a normal close
             if io_error || eof {
                 self.close_conn(idx, "served", false);
+            } else {
+                self.update_interest(idx);
+            }
+            return;
+        }
+        if streaming {
+            // a subscriber hanging up is how SSE streams normally end;
+            // inbound bytes on one are noise to discard
+            if io_error || eof {
+                self.close_conn(idx, "stream-client-gone", false);
             } else {
                 self.update_interest(idx);
             }
@@ -1026,6 +1131,48 @@ impl EventLoop {
         loop {
             if !self.flush_bytes(idx) {
                 return; // closed on write error
+            }
+            // streaming connection with a drained buffer: refill from the
+            // source (off the conns borrow — pull takes the bus lock)
+            let refill = {
+                let Some(conn) = self.conns[idx as usize].as_mut() else {
+                    return;
+                };
+                if conn.feed.is_some() && conn.out_pos >= conn.out.len() {
+                    conn.out.clear();
+                    conn.out_pos = 0;
+                    conn.feed.clone()
+                } else {
+                    None
+                }
+            };
+            if let Some(src) = refill {
+                let mut chunk = Vec::new();
+                let pulled = src.pull(&mut chunk);
+                let Some(conn) = self.conns[idx as usize].as_mut() else {
+                    return;
+                };
+                conn.out = chunk;
+                match pulled {
+                    StreamPull::Data => {
+                        // fresh bytes: the client must drain them within
+                        // the write window, same as any response flush
+                        self.arm_deadline(idx, DeadlineKind::Write, self.opts.body_timeout);
+                        continue;
+                    }
+                    StreamPull::Idle => {
+                        // parked on the source: no deadline — an idle
+                        // subscriber may sit for hours legitimately
+                        conn.deadline_kind = DeadlineKind::None;
+                        self.update_interest(idx);
+                        return;
+                    }
+                    StreamPull::Done => {
+                        conn.feed = None;
+                        self.start_linger(idx);
+                        return;
+                    }
+                }
             }
             let after = {
                 let Some(conn) = self.conns[idx as usize].as_mut() else {
@@ -1218,16 +1365,36 @@ impl EventLoop {
     /// Queue a response on the connection. The caller pumps afterwards
     /// (directly or via the enclosing `pump_conn` loop).
     fn respond_queue(&mut self, idx: u32, resp: Response, keep: bool) {
-        {
+        let src = {
             let Some(conn) = self.conns[idx as usize].as_mut() else {
                 return;
             };
             conn.state = ConnState::InFlight;
-            conn.responded = true;
-            conn.resp_keep = keep;
-            serialize_response(&mut conn.out, &resp, keep);
-        }
+            if let Some(src) = resp.stream.clone() {
+                // streamed: head (no Content-Length) + catch-up body now,
+                // refills from the source after that; never keep-alive
+                serialize_stream_head(&mut conn.out, &resp);
+                conn.responded = false;
+                conn.resp_keep = false;
+                conn.feed = Some(Arc::clone(&src));
+                Some(src)
+            } else {
+                conn.responded = true;
+                conn.resp_keep = keep;
+                serialize_response(&mut conn.out, &resp, keep);
+                None
+            }
+        };
         self.arm_deadline(idx, DeadlineKind::Write, self.opts.body_timeout);
+        if let Some(src) = src {
+            // arm the source → loop wakeup path before the first idle
+            // park; the token fences notifies against slot reuse
+            let token = token_for(idx, self.gens[idx as usize]);
+            let shared = Arc::clone(&self.shared);
+            src.set_notifier(Box::new(move || {
+                shared.push_stream_ready(token);
+            }));
+        }
     }
 
     /// Write as much queued output as the kernel will take. Returns
@@ -1297,7 +1464,7 @@ impl EventLoop {
             return;
         };
         let want_write = conn.out_pos < conn.out.len();
-        let want_read = if conn.lingering {
+        let want_read = if conn.lingering || conn.feed.is_some() {
             !conn.peer_eof
         } else {
             !conn.peer_eof
@@ -1388,6 +1555,29 @@ impl EventLoop {
                 {
                     self.respond_queue(c.idx, c.resp, c.keep);
                     self.pump_conn(c.idx);
+                }
+            }
+        }
+    }
+
+    /// Pump every streaming connection whose source reported fresh data.
+    fn drain_stream_ready(&mut self) {
+        loop {
+            let tokens: Vec<u64> = {
+                let mut q = self.shared.stream_ready.lock().unwrap();
+                if q.is_empty() {
+                    return;
+                }
+                std::mem::take(&mut *q)
+            };
+            for token in tokens {
+                let idx = (token & 0xffff_ffff) as u32;
+                let gen = (token >> 32) as u32;
+                if (idx as usize) < self.gens.len()
+                    && self.gens[idx as usize] == gen
+                    && self.conns[idx as usize].is_some()
+                {
+                    self.pump_conn(idx);
                 }
             }
         }
@@ -1490,6 +1680,7 @@ impl HttpServer {
         waker_tx.set_nonblocking(true)?;
         let shared = Arc::new(Shared {
             completions: Mutex::new(Vec::new()),
+            stream_ready: Mutex::new(Vec::new()),
             waker_tx,
         });
         let stop = Arc::new(AtomicBool::new(false));
@@ -1781,6 +1972,71 @@ mod tests {
         );
         w.advance(t0 + Duration::from_millis(200 + 511 * 20 + 20), &mut out);
         assert!(out.contains(&(8, 2)));
+    }
+
+    /// Scripted stream source: pops pre-loaded chunks; an empty chunk is
+    /// the end-of-stream marker.
+    struct ScriptedStream {
+        chunks: Mutex<std::collections::VecDeque<Vec<u8>>>,
+        notify: Mutex<Option<Box<dyn Fn() + Send>>>,
+    }
+
+    impl StreamSource for ScriptedStream {
+        fn set_notifier(&self, notify: Box<dyn Fn() + Send>) {
+            *self.notify.lock().unwrap() = Some(notify);
+        }
+
+        fn pull(&self, out: &mut Vec<u8>) -> StreamPull {
+            match self.chunks.lock().unwrap().pop_front() {
+                Some(c) if c.is_empty() => StreamPull::Done,
+                Some(c) => {
+                    out.extend_from_slice(&c);
+                    StreamPull::Data
+                }
+                None => StreamPull::Idle,
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_response_flushes_pushed_chunks_then_closes() {
+        let src = Arc::new(ScriptedStream {
+            chunks: Mutex::new(std::collections::VecDeque::new()),
+            notify: Mutex::new(None),
+        });
+        let handler_src = Arc::clone(&src);
+        let s = HttpServer::serve("127.0.0.1:0", 2, move |_req| {
+            Response::streaming(
+                "text/plain",
+                b"first\n".to_vec(),
+                Arc::clone(&handler_src) as Arc<dyn StreamSource>,
+            )
+        })
+        .unwrap();
+        let mut conn = TcpStream::connect(s.addr).unwrap();
+        conn.write_all(b"GET /stream HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        // the loop installs the notifier when it queues the head; wait
+        // for that, then push two live chunks and the end marker
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while src.notify.lock().unwrap().is_none() {
+            assert!(Instant::now() < deadline, "notifier never installed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        {
+            let mut q = src.chunks.lock().unwrap();
+            q.push_back(b"second\n".to_vec());
+            q.push_back(b"third\n".to_vec());
+            q.push_back(Vec::new());
+        }
+        (src.notify.lock().unwrap().as_ref().unwrap())();
+        let mut raw = Vec::new();
+        conn.read_to_end(&mut raw).unwrap();
+        let text = String::from_utf8(raw).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(!text.to_ascii_lowercase().contains("content-length"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(text.ends_with("first\nsecond\nthird\n"), "{text}");
+        s.stop();
     }
 
     #[test]

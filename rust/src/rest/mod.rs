@@ -25,7 +25,12 @@
 //! * `POST /api/messages/ack`               — ack a delivery
 //! * `POST /api/admin/checkpoint`           — force a durable checkpoint
 //!   (503 when the service runs without a data dir)
+//! * `GET  /api/events?from_lsn=N&filter=f` — Server-Sent-Events stream of
+//!   store/broker mutations (see DESIGN.md, "Event bus"): catch-up replay
+//!   from the WAL when `from_lsn` is given (`410 Gone` past the prune
+//!   horizon), then live tail; `filter` is a table name or an event op tag
 //!
+
 //! Worker-fleet routes (see DESIGN.md, "Distributed execution"), enabled
 //! when a [`crate::broker::lease::WorkerRegistry`] is attached:
 //! * `POST /api/workers`                    — `{name, kinds}`: register a
@@ -63,7 +68,7 @@
 pub mod client;
 pub mod http;
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::broker::lease::WorkerRegistry;
@@ -71,16 +76,18 @@ use crate::broker::Broker;
 use crate::config::Config;
 use crate::metrics::Registry;
 use crate::obs;
+use crate::persist::bus::{known_op, table_mask, EventBus, Subscriber, T_ALL};
 use crate::persist::replicate::{
     fence_node, ship_frames, ShipReply, H_DURABLE_LSN, H_EPOCH, H_OLDEST_LSN, H_PEER_EPOCH,
 };
+use crate::persist::wal::decode_frames;
 use crate::persist::{ClusterState, Persist, Replica};
 use crate::store::{RequestKind, RequestStatus, Store};
 use crate::util::json::{parse, Json};
 use crate::util::pool::PoolStats;
 
-pub use client::Client;
-pub use http::{HttpServer, Request, Response, ServerOptions};
+pub use client::{Client, SseEvent, WatchEvents};
+pub use http::{HttpServer, Request, Response, ServerOptions, StreamPull, StreamSource};
 
 /// Shared state behind the REST handlers.
 #[derive(Clone)]
@@ -100,6 +107,15 @@ pub struct ServerState {
     /// Present when this head serves a worker fleet: enables the
     /// `/api/workers` routes and the `workers` health section.
     workers: Option<WorkerRegistry>,
+    /// Present when the head runs with an event bus: enables the SSE
+    /// feed at `GET /api/events`.
+    pub bus: Option<EventBus>,
+    /// `events.queue`: per-subscriber queue bound; a stream that falls
+    /// this far behind is terminated with an `overflow` event.
+    events_queue: usize,
+    /// `events.catchup_batch_bytes`: WAL-scan chunk size for the
+    /// catch-up phase of `GET /api/events?from_lsn=`.
+    events_catchup_bytes: usize,
     started: std::time::Instant,
     tokens: Arc<Vec<String>>,
     /// HTTP worker-pool occupancy, shared with the pool living on the
@@ -118,6 +134,16 @@ impl ServerState {
             .get("persist.sync_submit")
             .and_then(|j| j.as_bool())
             .unwrap_or(false);
+        let events_queue = config
+            .get("events.queue")
+            .and_then(|j| j.as_u64())
+            .unwrap_or(1024)
+            .max(1) as usize;
+        let events_catchup_bytes = config
+            .get("events.catchup_batch_bytes")
+            .and_then(|j| j.as_u64())
+            .unwrap_or(1 << 20)
+            .clamp(4096, 64 << 20) as usize;
         ServerState {
             store,
             broker,
@@ -127,6 +153,9 @@ impl ServerState {
             cluster: ClusterState::primary(None, 1),
             replica: None,
             workers: None,
+            bus: None,
+            events_queue,
+            events_catchup_bytes,
             started: std::time::Instant::now(),
             tokens: Arc::new(tokens),
             pool_stats: Arc::new(PoolStats::default()),
@@ -159,6 +188,12 @@ impl ServerState {
     /// routes and the `workers` section of `/api/health`).
     pub fn with_workers(mut self, workers: WorkerRegistry) -> Self {
         self.workers = Some(workers);
+        self
+    }
+
+    /// Attach the event bus (enables the SSE feed at `GET /api/events`).
+    pub fn with_bus(mut self, bus: EventBus) -> Self {
+        self.bus = Some(bus);
         self
     }
 
@@ -362,6 +397,8 @@ fn route_inner(state: &ServerState, req: &Request) -> Response {
     }
 
     match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["api", "events"]) => handle_events(state, req),
+
         ("GET", ["api", "replication", "wal"]) => handle_ship(state, req),
 
         ("GET", ["api", "replication", "snapshot"]) => match &state.persist {
@@ -424,6 +461,7 @@ fn route_inner(state: &ServerState, req: &Request) -> Response {
                     content_type: "text/plain; version=0.0.4",
                     headers: Vec::new(),
                     body: state.metrics.render_prometheus().into_bytes(),
+                    stream: None,
                 }
             } else {
                 ok_json(state.metrics.snapshot())
@@ -701,6 +739,155 @@ fn route_inner(state: &ServerState, req: &Request) -> Response {
 
         _ => err_json(404, "no such route"),
     }
+}
+
+/// Queued live events drained per [`StreamSource::pull`] — bounds how
+/// long the loop thread holds the subscriber's queue lock.
+const SSE_PULL_BATCH: usize = 256;
+
+/// One SSE frame: `id:` carries the LSN, `event:` the op tag, `data:`
+/// the event's JSON (single-line by construction, so no continuation
+/// `data:` lines are ever needed).
+fn write_sse_frame(out: &mut Vec<u8>, lsn: u64, op: &str, data: &str) {
+    use std::io::Write as _;
+    let _ = write!(out, "id: {lsn}\nevent: {op}\ndata: {data}\n\n");
+}
+
+/// Bus subscriber behind a live SSE connection. Each pull drains up to a
+/// batch of queued events into SSE frames; hitting the queue bound is
+/// terminal — the stream emits one `overflow` frame carrying the last
+/// delivered LSN (resume with `from_lsn = last_lsn + 1`) and ends, so a
+/// slow consumer costs a bounded queue, never a stalled bus.
+struct SseStream {
+    sub: Subscriber,
+    finished: AtomicBool,
+}
+
+impl StreamSource for SseStream {
+    fn set_notifier(&self, notify: Box<dyn Fn() + Send>) {
+        self.sub.set_notifier(notify);
+    }
+
+    fn pull(&self, out: &mut Vec<u8>) -> StreamPull {
+        if self.finished.load(Ordering::SeqCst) {
+            return StreamPull::Done;
+        }
+        let (events, overflow) = self.sub.drain(SSE_PULL_BATCH);
+        for ev in &events {
+            write_sse_frame(out, ev.lsn, ev.op, &ev.json);
+        }
+        if let Some(last) = overflow {
+            let mut data = String::new();
+            Json::obj().set("last_lsn", last).write_to(&mut data);
+            write_sse_frame(out, last, "overflow", &data);
+            self.finished.store(true, Ordering::SeqCst);
+            return StreamPull::Data; // the terminal frame; Done follows
+        }
+        if out.is_empty() {
+            StreamPull::Idle
+        } else {
+            StreamPull::Data
+        }
+    }
+}
+
+/// `GET /api/events?from_lsn=N&filter=<table|op>` — the SSE feed.
+///
+/// The no-gap/no-duplicate seam: subscribe to the bus FIRST, read the
+/// durable mark AFTER. Publication happens after the durable mark
+/// advances (same thread), so every event past the mark we read was
+/// published after our subscribe and sits in the queue; everything up to
+/// the mark is replayed from the WAL here, and `set_floor` drops the
+/// overlap from the queue. Same continuity rule the replication pull
+/// loop relies on.
+fn handle_events(state: &ServerState, req: &Request) -> Response {
+    let Some(bus) = &state.bus else {
+        return err_json(503, "event bus not attached (server started without one)");
+    };
+    // filter axis: a table name selects every op on that table; an op
+    // tag selects that one op across all tables
+    let (mask, op_filter) = match req.query_param("filter") {
+        None => (T_ALL, None),
+        Some(f) => match table_mask(f) {
+            Some(m) => (m, None),
+            None if known_op(f) => (T_ALL, Some(f)),
+            None => {
+                return err_json(400, &format!("unknown filter {f:?}: not a table or an op tag"));
+            }
+        },
+    };
+    let from_lsn = match req.query_param("from_lsn") {
+        None => None,
+        Some(v) => match v.parse::<u64>() {
+            Ok(n) => Some(n.max(1)),
+            Err(_) => return err_json(400, "invalid ?from_lsn="),
+        },
+    };
+    let sub = bus.subscribe(mask, op_filter, state.events_queue);
+    let mut catchup: Vec<u8> = Vec::new();
+    let floor = match (&state.persist, from_lsn) {
+        (Some(p), Some(from)) => {
+            let durable = p.wal().durable_lsn();
+            let mut pos = from;
+            while pos <= durable {
+                match ship_frames(p.wal(), pos, state.events_catchup_bytes) {
+                    Ok(ShipReply::Batch { frames, count, last_lsn, .. }) => {
+                        if count == 0 {
+                            break;
+                        }
+                        let decoded = match decode_frames(&frames) {
+                            Ok(d) => d,
+                            Err(e) => return err_json(500, &format!("wal decode failed: {e}")),
+                        };
+                        for (lsn, ev) in decoded {
+                            if lsn > durable {
+                                break; // past our mark: the queue has it
+                            }
+                            if mask & table_mask(ev.table()).unwrap_or(0) == 0 {
+                                continue;
+                            }
+                            if op_filter.is_some_and(|f| f != ev.op()) {
+                                continue;
+                            }
+                            let mut data = String::new();
+                            ev.to_json().write_to(&mut data);
+                            write_sse_frame(&mut catchup, lsn, ev.op(), &data);
+                        }
+                        pos = last_lsn + 1;
+                    }
+                    Ok(ShipReply::Gone { oldest_lsn, durable_lsn }) => {
+                        state.metrics.counter("events.catchup_gone").inc();
+                        return err_json(
+                            410,
+                            "requested event history was pruned; re-read current state and \
+                             resume from the oldest retained lsn",
+                        )
+                        .with_header(H_OLDEST_LSN, oldest_lsn)
+                        .with_header(H_DURABLE_LSN, durable_lsn);
+                    }
+                    Err(e) => return err_json(500, &format!("catch-up scan failed: {e}")),
+                }
+            }
+            durable.max(from - 1)
+        }
+        (None, Some(from)) => {
+            // no WAL: history before the subscribe is not replayable
+            if from <= bus.last_lsn() {
+                return err_json(
+                    410,
+                    "no wal to replay from; subscribe without from_lsn for live events only",
+                );
+            }
+            from - 1
+        }
+        (Some(p), None) => p.wal().durable_lsn(),
+        (None, None) => bus.last_lsn(),
+    };
+    sub.set_floor(floor);
+    state.metrics.counter("events.streams_started").inc();
+    let src = SseStream { sub, finished: AtomicBool::new(false) };
+    Response::streaming("text/event-stream", catchup, Arc::new(src))
+        .with_header("Cache-Control", "no-cache")
 }
 
 /// `GET /api/replication/wal?from_lsn=N[&max_bytes=M]` — the ship side.
@@ -1379,5 +1566,97 @@ mod tests {
         let mut r = authed_req("POST", "/api/workers", r#"{"name": "w", "kinds": ["Noop"]}"#);
         r.headers.clear();
         assert_eq!(route(&s, r).status, 401);
+    }
+
+    /// A state with an event bus attached, non-durable (no WAL) — the
+    /// live-tail-only shape of the SSE feed.
+    fn bus_state(cfg: &Config) -> (ServerState, EventBus) {
+        let clock = Arc::new(WallClock::new());
+        let bus = EventBus::new(&Registry::default());
+        let s = ServerState::new(Store::new(clock.clone()), Broker::new(clock), Registry::default(), cfg)
+            .with_bus(bus.clone());
+        (s, bus)
+    }
+
+    fn sample_event(i: u64) -> crate::persist::PersistEvent {
+        crate::persist::PersistEvent::AddRequest {
+            id: i,
+            name: format!("r{i}"),
+            requester: "u".into(),
+            kind: RequestKind::Workflow,
+            workflow: Json::obj(),
+            at: 0.0,
+        }
+    }
+
+    #[test]
+    fn events_route_gates_and_validates() {
+        // no bus attached → 503
+        let s = state();
+        assert_eq!(route(&s, authed_req("GET", "/api/events", "")).status, 503);
+        let (s, bus) = bus_state(&Config::defaults());
+        // unknown filter → 400
+        let mut r = authed_req("GET", "/api/events", "");
+        r.query = vec![("filter".into(), "bogus".into())];
+        assert_eq!(route(&s, r).status, 400);
+        // table and op filters are both accepted
+        for f in ["requests", "request_status"] {
+            let mut r = authed_req("GET", "/api/events", "");
+            r.query = vec![("filter".into(), f.into())];
+            assert_eq!(route(&s, r).status, 200, "filter {f}");
+        }
+        // from_lsn in already-published history with no WAL → 410
+        bus.publish(&[(1, sample_event(1))]);
+        let mut r = authed_req("GET", "/api/events", "");
+        r.query = vec![("from_lsn".into(), "1".into())];
+        assert_eq!(route(&s, r).status, 410);
+        // and it is authenticated like everything else
+        let mut r = authed_req("GET", "/api/events", "");
+        r.headers.clear();
+        assert_eq!(route(&s, r).status, 401);
+    }
+
+    #[test]
+    fn events_stream_delivers_live_events_in_process() {
+        let (s, bus) = bus_state(&Config::defaults());
+        let resp = route(&s, authed_req("GET", "/api/events", ""));
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.content_type, "text/event-stream");
+        let src = resp.stream.clone().expect("events response must stream");
+        let mut out = Vec::new();
+        assert!(matches!(src.pull(&mut out), StreamPull::Idle), "nothing published yet");
+        bus.publish(&[(1, sample_event(1))]);
+        let mut out = Vec::new();
+        assert!(matches!(src.pull(&mut out), StreamPull::Data));
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("id: 1\nevent: add_request\ndata: {"), "{text}");
+        assert!(text.ends_with("\n\n"), "{text}");
+    }
+
+    #[test]
+    fn events_stream_overflow_is_terminal_with_resume_lsn() {
+        let mut cfg = Config::defaults();
+        cfg.apply_override("events.queue=4").unwrap();
+        let (s, bus) = bus_state(&cfg);
+        let resp = route(&s, authed_req("GET", "/api/events", ""));
+        let src = resp.stream.clone().unwrap();
+        let batch: Vec<(u64, crate::persist::PersistEvent)> =
+            (1..=10).map(|i| (i, sample_event(i))).collect();
+        bus.publish(&batch);
+        // drain to the end: the queued prefix, then the terminal overflow
+        // frame naming the last delivered lsn, then Done
+        let mut all = Vec::new();
+        loop {
+            let mut out = Vec::new();
+            match src.pull(&mut out) {
+                StreamPull::Data => all.extend_from_slice(&out),
+                StreamPull::Done => break,
+                StreamPull::Idle => panic!("an overflowed stream must terminate, not idle"),
+            }
+        }
+        let text = String::from_utf8(all).unwrap();
+        assert!(text.contains("id: 4\nevent: add_request"), "{text}");
+        assert!(!text.contains("id: 5\n"), "dropped events must not appear: {text}");
+        assert!(text.contains("event: overflow\ndata: {\"last_lsn\":4}"), "{text}");
     }
 }

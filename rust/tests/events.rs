@@ -1,0 +1,369 @@
+//! Event bus + SSE push delivery integration tests, over real sockets:
+//!
+//! * the catch-up → live-tail seam: a watcher arriving mid-write-storm
+//!   sees every LSN exactly once — no gap, no duplicate — even though its
+//!   history comes from WAL segments and its tail from the in-memory bus;
+//! * bounded subscriber queues: a reader that falls too far behind is cut
+//!   off with a terminal `overflow` event carrying the last delivered
+//!   LSN, and resuming from `last_lsn + 1` restores a dense stream;
+//! * a slow (unread) subscriber never stalls a fast one — publishers
+//!   drop, they do not block;
+//! * filter correctness: a table filter selects every op on that table
+//!   and nothing else; an op filter selects exactly that op;
+//! * pruned history answers `410 Gone`, and a fresh live tail still works.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use idds::broker::Broker;
+use idds::config::Config;
+use idds::metrics::Registry;
+use idds::persist::{BusPersister, EventBus, FsyncMode, Persist, PersistOptions};
+use idds::rest::{serve, Client, ServerState};
+use idds::store::{RequestKind, Store};
+use idds::util::clock::WallClock;
+use idds::util::json::Json;
+use idds::workflow::{WorkTemplate, Workflow};
+
+const TOKEN: &str = "dev-token";
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "idds-events-{tag}-{}-{}",
+        std::process::id(),
+        idds::util::next_id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn one_step() -> Workflow {
+    Workflow::new("w").add_template(WorkTemplate::new("a")).entry("a")
+}
+
+/// A head stack with the event bus armed and the daemons parked, so the
+/// only WAL traffic is what each test writes — LSNs are predictable.
+struct Stack {
+    client: Client,
+    persist: Option<Persist>,
+    store: Store,
+    _server: idds::rest::HttpServer,
+    dir: Option<PathBuf>,
+}
+
+impl Drop for Stack {
+    fn drop(&mut self) {
+        self._server.stop();
+        if let Some(p) = &self.persist {
+            p.shutdown();
+        }
+        if let Some(d) = &self.dir {
+            std::fs::remove_dir_all(d).ok();
+        }
+    }
+}
+
+/// Durable stack: events publish from the WAL group-commit flusher, and
+/// `GET /api/events?from_lsn=` catch-up reads real segments.
+fn durable_stack(dir: &Path, queue: usize, segment_bytes: u64) -> Stack {
+    let clock = Arc::new(WallClock::new());
+    let store = Store::new(clock.clone());
+    let broker = Broker::new(clock);
+    let metrics = Registry::default();
+    let bus = EventBus::new(&metrics);
+    let popts = PersistOptions {
+        segment_bytes,
+        fsync: FsyncMode::Never,
+        flush_idle_ms: 2,
+        ..PersistOptions::default()
+    };
+    let (persist, _) =
+        Persist::open_with_broker(dir, popts, &store, Some(&broker), metrics.clone()).unwrap();
+    persist.wal().set_bus(bus.clone());
+    let mut cfg = Config::defaults();
+    cfg.put("events.queue", Json::Num(queue as f64));
+    let server = serve(
+        ServerState::new(store.clone(), broker, metrics, &cfg)
+            .with_persist(persist.clone())
+            .with_bus(bus),
+        &cfg,
+    )
+    .unwrap();
+    let client = Client::new(server.addr, TOKEN);
+    Stack { client, persist: Some(persist), store, _server: server, dir: Some(dir.to_path_buf()) }
+}
+
+/// In-memory stack: the store/broker apply paths publish directly.
+fn memory_stack(queue: usize) -> Stack {
+    let clock = Arc::new(WallClock::new());
+    let store = Store::new(clock.clone());
+    let broker = Broker::new(clock);
+    let metrics = Registry::default();
+    let bus = EventBus::new(&metrics);
+    store.set_persister(Arc::new(BusPersister::new(bus.clone())));
+    broker.set_persister(Arc::new(BusPersister::new(bus.clone())));
+    let mut cfg = Config::defaults();
+    cfg.put("events.queue", Json::Num(queue as f64));
+    let server = serve(
+        ServerState::new(store.clone(), broker, metrics, &cfg).with_bus(bus),
+        &cfg,
+    )
+    .unwrap();
+    let client = Client::new(server.addr, TOKEN);
+    Stack { client, persist: None, store, _server: server, dir: None }
+}
+
+/// Collect events until `done` says stop (or the deadline passes; the
+/// assertion then happens at the caller on whatever was collected).
+fn collect_until(
+    watch: &mut idds::rest::WatchEvents,
+    timeout: Duration,
+    mut done: impl FnMut(&[idds::rest::SseEvent]) -> bool,
+) -> Vec<idds::rest::SseEvent> {
+    let deadline = Instant::now() + timeout;
+    let mut got = Vec::new();
+    while !done(&got) {
+        let now = Instant::now();
+        if now >= deadline || watch.ended() {
+            break;
+        }
+        if let Some(ev) = watch.next_within(deadline - now).unwrap() {
+            got.push(ev);
+        }
+    }
+    got
+}
+
+#[test]
+fn seam_has_no_gap_and_no_duplicate_under_concurrent_writers() {
+    let dir = tmp_dir("seam");
+    let s = durable_stack(&dir, 1024, 1 << 20);
+    const WRITERS: u64 = 4;
+    const PER: u64 = 25;
+    const TOTAL: u64 = WRITERS * PER;
+
+    // half the storm lands before the watch opens (exercises WAL
+    // catch-up), the other half races the live tail
+    let addr = s._server.addr;
+    let mut handles = Vec::new();
+    for w in 0..WRITERS / 2 {
+        handles.push(std::thread::spawn(move || {
+            let c = Client::new(addr, TOKEN);
+            for i in 0..PER {
+                c.submit(&format!("a{w}-{i}"), "u", RequestKind::Workflow, &one_step()).unwrap();
+            }
+        }));
+    }
+    for h in handles.drain(..) {
+        h.join().unwrap();
+    }
+
+    let mut watch = s.client.watch_events(Some(1), None).unwrap();
+    for w in 0..WRITERS / 2 {
+        handles.push(std::thread::spawn(move || {
+            let c = Client::new(addr, TOKEN);
+            for i in 0..PER {
+                c.submit(&format!("b{w}-{i}"), "u", RequestKind::Workflow, &one_step()).unwrap();
+            }
+        }));
+    }
+    let got = collect_until(&mut watch, Duration::from_secs(30), |g| g.len() as u64 >= TOTAL);
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let lsns: Vec<u64> = got.iter().map(|e| e.lsn).collect();
+    let expect: Vec<u64> = (1..=TOTAL).collect();
+    assert_eq!(
+        lsns, expect,
+        "the catch-up → live seam must deliver every LSN exactly once, in order"
+    );
+    assert!(got.iter().all(|e| e.op == "add_request"));
+}
+
+#[test]
+fn overflow_is_terminal_and_resume_restores_a_dense_stream() {
+    let dir = tmp_dir("overflow");
+    let s = durable_stack(&dir, 4, 1 << 20);
+    const TOTAL: u64 = 60;
+
+    let mut watch = s.client.watch_events(None, None).unwrap();
+    // one primer event proves the subscription is live before the flood
+    s.client.submit("primer", "u", RequestKind::Workflow, &one_step()).unwrap();
+    let first = collect_until(&mut watch, Duration::from_secs(10), |g| !g.is_empty());
+    assert_eq!(first.len(), 1);
+    assert_eq!(first[0].lsn, 1);
+
+    // flood without reading: the 4-slot queue must overflow
+    for i in 1..TOTAL {
+        s.client.submit(&format!("f{i}"), "u", RequestKind::Workflow, &one_step()).unwrap();
+    }
+    let mut pre: Vec<u64> = vec![1];
+    let mut resume_from = 0u64;
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        assert!(Instant::now() < deadline, "terminal overflow event never arrived");
+        let Some(ev) = watch.next_within(Duration::from_secs(5)).unwrap() else {
+            assert!(!watch.ended(), "stream closed without a terminal overflow event");
+            continue;
+        };
+        if ev.op == "overflow" {
+            resume_from = ev.data.get("last_lsn").and_then(|v| v.as_u64()).unwrap() + 1;
+            break;
+        }
+        pre.push(ev.lsn);
+    }
+    // the frames delivered before the cut are exactly 1..resume_from
+    assert_eq!(pre, (1..resume_from).collect::<Vec<u64>>());
+    assert!(resume_from <= TOTAL, "overflow must have dropped something");
+    // after the terminal event the server closes the stream
+    let tail = watch.next_within(Duration::from_secs(5)).unwrap();
+    assert!(tail.is_none() && watch.ended(), "overflow is terminal");
+
+    // resuming at last_lsn + 1 replays the dropped suffix from the WAL
+    let mut resumed = s.client.watch_events(Some(resume_from), None).unwrap();
+    let rest = collect_until(&mut resumed, Duration::from_secs(20), |g| {
+        g.last().is_some_and(|e| e.lsn >= TOTAL)
+    });
+    let all: BTreeSet<u64> = pre.iter().copied().chain(rest.iter().map(|e| e.lsn)).collect();
+    assert_eq!(
+        all,
+        (1..=TOTAL).collect::<BTreeSet<u64>>(),
+        "pre-overflow + resumed events must cover every LSN exactly once"
+    );
+}
+
+#[test]
+fn slow_subscriber_does_not_stall_a_fast_one() {
+    let dir = tmp_dir("slowfast");
+    let s = durable_stack(&dir, 1024, 1 << 20);
+    const TOTAL: u64 = 40;
+
+    // the slow watcher connects and then never reads its socket
+    let mut slow = s.client.watch_events(None, None).unwrap();
+    let mut fast = s.client.watch_events(None, None).unwrap();
+    for i in 0..TOTAL {
+        s.client.submit(&format!("s{i}"), "u", RequestKind::Workflow, &one_step()).unwrap();
+    }
+    let got = collect_until(&mut fast, Duration::from_secs(20), |g| g.len() as u64 >= TOTAL);
+    assert_eq!(
+        got.iter().map(|e| e.lsn).collect::<Vec<u64>>(),
+        (1..=TOTAL).collect::<Vec<u64>>(),
+        "the fast subscriber's feed is complete while the slow one sits unread"
+    );
+    // the slow one lost nothing either — it was merely buffered (socket +
+    // queue), not dropped, because it stayed within its queue bound
+    let lag = collect_until(&mut slow, Duration::from_secs(20), |g| g.len() as u64 >= TOTAL);
+    assert_eq!(lag.len() as u64, TOTAL);
+}
+
+#[test]
+fn filters_select_by_table_and_by_op() {
+    let s = memory_stack(1024);
+
+    // op filter: exactly the request_status transitions, nothing else
+    let mut by_op = s.client.watch_events(None, Some("request_status")).unwrap();
+    // table filter: every op touching the requests table, nothing else
+    let mut by_table = s.client.watch_events(None, Some("requests")).unwrap();
+
+    let ids: Vec<u64> = (0..3)
+        .map(|i| {
+            s.client.submit(&format!("r{i}"), "u", RequestKind::Workflow, &one_step()).unwrap()
+        })
+        .collect();
+    s.client.cancel(ids[0]).unwrap();
+    s.client.cancel(ids[1]).unwrap();
+    // broker traffic must be invisible to both watchers
+    s.client.subscribe("idds.some.topic").unwrap();
+
+    let ops = collect_until(&mut by_op, Duration::from_secs(10), |g| g.len() >= 2);
+    assert_eq!(ops.len(), 2);
+    assert!(ops.iter().all(|e| e.op == "request_status"));
+
+    let table = collect_until(&mut by_table, Duration::from_secs(10), |g| g.len() >= 5);
+    assert_eq!(table.len(), 5, "3 submits + 2 cancels all touch the requests table");
+    assert_eq!(table.iter().filter(|e| e.op == "add_request").count(), 3);
+    assert_eq!(table.iter().filter(|e| e.op == "request_status").count(), 2);
+    // a short grace: the broker_subscribe event must never arrive
+    assert!(by_table.next_within(Duration::from_millis(200)).unwrap().is_none());
+    assert!(by_op.next_within(Duration::from_millis(200)).unwrap().is_none());
+
+    // bogus filters are rejected up front
+    let err = s.client.watch_events(None, Some("nonsense")).unwrap_err();
+    assert!(format!("{err:#}").contains("400"), "unknown filter is a 400: {err:#}");
+}
+
+#[test]
+fn pruned_history_is_410_and_a_fresh_tail_still_works() {
+    let dir = tmp_dir("prune");
+    // tiny segments so checkpoints actually delete history
+    let s = durable_stack(&dir, 1024, 2048);
+    for i in 0..120 {
+        s.client.submit(&format!("p{i}"), "u", RequestKind::Workflow, &one_step()).unwrap();
+    }
+    let p = s.persist.as_ref().unwrap();
+    p.flush();
+    let report = p.checkpoint(&s.store).unwrap();
+    assert!(
+        report.segments_deleted > 0,
+        "checkpoint must prune closed segments for this test to mean anything"
+    );
+
+    let err = s.client.watch_events(Some(1), None).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("410"),
+        "asking for pruned history answers 410 Gone: {err:#}"
+    );
+
+    // a live tail (no from_lsn) is unaffected by pruning
+    let mut watch = s.client.watch_events(None, None).unwrap();
+    s.client.submit("after-prune", "u", RequestKind::Workflow, &one_step()).unwrap();
+    let got = collect_until(&mut watch, Duration::from_secs(10), |g| !g.is_empty());
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].op, "add_request");
+    assert_eq!(got[0].data.get("name").and_then(|v| v.as_str()), Some("after-prune"));
+}
+
+#[test]
+fn wait_request_is_push_driven_end_to_end() {
+    // full stack WITH daemons: submit → pipeline completes → wait_request
+    // returns on the pushed request_status event, not a poll tick
+    use idds::daemons::executors::{ExecutorSet, NoopExecutor};
+    use idds::daemons::{AgentHost, Daemon, Pipeline};
+    let clock = Arc::new(WallClock::new());
+    let store = Store::new(clock.clone());
+    let broker = Broker::new(clock);
+    let metrics = Registry::default();
+    let bus = EventBus::new(&metrics);
+    store.set_persister(Arc::new(BusPersister::new(bus.clone())));
+    broker.set_persister(Arc::new(BusPersister::new(bus.clone())));
+    let executors = ExecutorSet::default()
+        .with(idds::workflow::WorkKind::Noop, Arc::new(NoopExecutor::default()));
+    let pipeline = Pipeline::new(store.clone(), broker.clone(), metrics.clone(), executors)
+        .with_bus(bus.clone());
+    let (c, m, t, ca, co) = pipeline.daemons();
+    let daemons: Vec<Arc<dyn Daemon>> =
+        vec![Arc::new(c), Arc::new(m), Arc::new(t), Arc::new(ca), Arc::new(co)];
+    let host = AgentHost::start_with_bus(
+        daemons,
+        Duration::from_millis(2),
+        Duration::from_millis(200),
+        Some(&bus),
+    );
+    let cfg = Config::defaults();
+    let server = serve(
+        ServerState::new(store, broker, metrics, &cfg).with_bus(bus),
+        &cfg,
+    )
+    .unwrap();
+    let client = Client::new(server.addr, TOKEN);
+
+    let req = client.submit("push", "u", RequestKind::Workflow, &one_step()).unwrap();
+    let status = client.wait_request(req, Duration::from_secs(30)).unwrap();
+    assert!(status.is_terminal());
+
+    host.stop();
+    server.stop();
+}

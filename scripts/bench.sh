@@ -17,4 +17,5 @@ BENCH_REPLICATION_JSON="$ROOT/BENCH_replication.json" cargo bench --bench bench_
 BENCH_OBS_JSON="$ROOT/BENCH_obs.json" cargo bench --bench bench_obs
 BENCH_WORKERS_JSON="$ROOT/BENCH_workers.json" cargo bench --bench bench_workers
 BENCH_HTTP_JSON="$ROOT/BENCH_http.json" cargo bench --bench bench_http
-echo "wrote $ROOT/BENCH_store.json, $ROOT/BENCH_wal.json, $ROOT/BENCH_checkpoint.json, $ROOT/BENCH_broker.json, $ROOT/BENCH_workflow.json, $ROOT/BENCH_replication.json, $ROOT/BENCH_obs.json, $ROOT/BENCH_workers.json and $ROOT/BENCH_http.json"
+BENCH_EVENTS_JSON="$ROOT/BENCH_events.json" cargo bench --bench bench_events
+echo "wrote $ROOT/BENCH_store.json, $ROOT/BENCH_wal.json, $ROOT/BENCH_checkpoint.json, $ROOT/BENCH_broker.json, $ROOT/BENCH_workflow.json, $ROOT/BENCH_replication.json, $ROOT/BENCH_obs.json, $ROOT/BENCH_workers.json, $ROOT/BENCH_http.json and $ROOT/BENCH_events.json"

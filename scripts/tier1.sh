@@ -15,6 +15,7 @@ cargo test -q
 cargo test --release -q --test persist_recovery
 cargo test --release -q --test workers
 cargo test --release -q --test http_semantics
+cargo test --release -q --test events
 
 # Docs gate: rustdoc warnings (dangling intra-doc links, malformed code
 # blocks, bad HTML in prose) are errors so the documentation pass cannot
